@@ -1,0 +1,65 @@
+//! Quickstart: build an H² approximation of a covariance kernel matrix,
+//! multiply it by vectors, and recompress it to a target accuracy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::compression::compress_full;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::Prng;
+
+fn main() {
+    // 1. A point set and a kernel: 64x64 grid, exponential covariance
+    //    (the paper's 2D spatial-statistics test problem, §6.1).
+    let points = PointSet::grid_2d(64, 1.0); // N = 4096
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+
+    // 2. Construction parameters: leaf size m, admissibility η, Chebyshev
+    //    grid g (rank k = g² in 2D).
+    let cfg = H2Config { leaf_size: 64, eta: 0.9, cheb_grid: 6 };
+    let mut a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    println!(
+        "built H² matrix: N = {n}, depth = {}, rank = {}, memory = {:.1}% of dense",
+        a.depth(),
+        a.rank(a.depth()),
+        100.0 * a.memory_words() as f64 / (n * n) as f64
+    );
+
+    // 3. Matrix-vector multiplication (HGEMV).
+    let backend = NativeBackend;
+    let nv = 4;
+    let mut rng = Prng::new(7);
+    let x = rng.normal_vec(n * nv);
+    let mut y = vec![0.0; n * nv];
+    let plan = HgemvPlan::new(&a, nv);
+    let mut ws = HgemvWorkspace::new(&a, nv);
+    let mut metrics = Metrics::new();
+    hgemv(&a, &backend, &plan, &x, &mut y, &mut ws, &mut metrics);
+    println!("hgemv with {nv} vectors: {} flops in {} batched launches",
+        metrics.flops, metrics.batch_launches);
+
+    // 4. Algebraic recompression: the Chebyshev ranks are not optimal;
+    //    compress to 1e-4 (orthogonalize + truncate + project, §5).
+    let (compressed, stats) = compress_full(&mut a, 1e-4, &backend, &mut metrics);
+    println!(
+        "compressed: ranks {:?} -> {:?}, low-rank memory x{:.2} smaller",
+        stats.old_ranks,
+        stats.new_ranks,
+        stats.ratio()
+    );
+
+    // 5. The compressed operator still multiplies correctly.
+    let plan_c = HgemvPlan::new(&compressed, nv);
+    let mut ws_c = HgemvWorkspace::new(&compressed, nv);
+    let mut y2 = vec![0.0; n * nv];
+    hgemv(&compressed, &backend, &plan_c, &x, &mut y2, &mut ws_c, &mut metrics);
+    let err = h2opus::util::testing::rel_err(&y2, &y);
+    println!("matvec agreement after compression: rel err = {err:.2e}");
+    assert!(err < 1e-2);
+    println!("quickstart OK");
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: the shape catalog -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The catalog covers every shape bucket the Rust XlaBackend pads into
+(rust/src/runtime/): the backend rounds (m, k, n) up to catalog buckets
+and chunks/pads the batch dimension, which is exact for zero padding
+(GEMM: zero blocks contribute zero; QR/SVD: zero rows/cols leave R and the
+leading singular triplets unchanged — properties covered by unit tests on
+both sides).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --- catalog buckets -------------------------------------------------------
+# GEMM: all phases of HGEMV and compression at the default CPU-testbed
+# configuration (m_pad <= 32, rank <= 32) plus one size up for headroom.
+GEMM_DIMS = [8, 16, 32]
+GEMM_NVS = [1, 4, 8, 16, 32, 64]
+GEMM_OPS = ["nn", "tn", "nt"]
+GEMM_NB = 64
+# QR: leaf/stack QRs are (m_pad, k) and (2k, k); the compression weight
+# QRs stack up to C_sp+1 blocks of k rows.
+QR_ROWS = [16, 32, 64, 128, 256, 512]
+QR_COLS = [8, 16, 32]
+QR_NB = 16
+# SVD: reweighed leaf bases (m_pad, k) and stacked transfers (2k', k).
+SVD_ROWS = [16, 32, 64]
+SVD_COLS = [8, 16, 32]
+SVD_NB = 16
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm(op: str, m: int, k: int, n: int, nb: int) -> str:
+    a_shape = (nb, k, m) if op == "tn" else (nb, m, k)
+    b_shape = (nb, n, k) if op == "nt" else (nb, k, n)
+    fn = lambda a, b: model.gemm(a, b, op=op, m=m, k=k, n=n)  # noqa: E731
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(a_shape, F64), jax.ShapeDtypeStruct(b_shape, F64)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_qr(rows: int, cols: int, nb: int) -> str:
+    fn = lambda a: model.qr(a, rows=rows, cols=cols)  # noqa: E731
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((nb, rows, cols), F64))
+    return to_hlo_text(lowered)
+
+
+def lower_svd(rows: int, cols: int, nb: int) -> str:
+    fn = lambda a: model.svd(a, rows=rows, cols=cols)  # noqa: E731
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((nb, rows, cols), F64))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="only the shapes the test suite uses")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []  # lines: kind op nb rows(m) cols(k) n file
+
+    def emit(name: str, text: str, line: str):
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(line + " " + name)
+
+    gemm_dims = GEMM_DIMS if not args.quick else [16, 32]
+    gemm_nvs = GEMM_NVS if not args.quick else [1, 16]
+    count = 0
+    for op in GEMM_OPS:
+        for m in gemm_dims:
+            for k in gemm_dims:
+                for n in gemm_nvs:
+                    name = f"gemm_{op}_m{m}_k{k}_n{n}_b{GEMM_NB}.hlo.txt"
+                    emit(name, lower_gemm(op, m, k, n, GEMM_NB), f"gemm {op} {GEMM_NB} {m} {k} {n}")
+                    count += 1
+    qr_rows = QR_ROWS if not args.quick else [32, 64]
+    qr_cols = QR_COLS if not args.quick else [16]
+    for rows in qr_rows:
+        for cols in qr_cols:
+            if rows < cols:
+                continue
+            name = f"qr_r{rows}_c{cols}_b{QR_NB}.hlo.txt"
+            emit(name, lower_qr(rows, cols, QR_NB), f"qr - {QR_NB} {rows} {cols} 0")
+            count += 1
+    svd_rows = SVD_ROWS if not args.quick else [32]
+    svd_cols = SVD_COLS if not args.quick else [16]
+    for rows in svd_rows:
+        for cols in svd_cols:
+            if rows < cols:
+                continue
+            name = f"svd_r{rows}_c{cols}_b{SVD_NB}.hlo.txt"
+            emit(name, lower_svd(rows, cols, SVD_NB), f"svd - {SVD_NB} {rows} {cols} 0")
+            count += 1
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {count} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: batched small-matrix GEMM — the hot spot of every
+HGEMV phase and of the compression projections (the role MAGMA's batched
+GEMM plays in the paper).
+
+TPU adaptation of the paper's CUDA batching (DESIGN.md §Hardware-Adaptation):
+the batch index is the Pallas *grid* dimension; each grid step owns one
+(m×k)·(k×n) tile resident in VMEM via BlockSpec — the HBM↔VMEM schedule the
+paper expressed with threadblocks and shared memory. Shapes are static
+(fixed rank per level, §2.1) which is exactly what AOT compilation needs.
+
+interpret=True is mandatory here: the artifacts must execute on the PJRT
+CPU client (real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot run). In interpret mode the kernel lowers to plain HLO, so the AOT
+artifact is portable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_nn(a_ref, b_ref, o_ref):
+    # one (m,k) x (k,n) tile per grid step, all in VMEM
+    o_ref[0] = a_ref[0] @ b_ref[0]
+
+
+def _kernel_tn(a_ref, b_ref, o_ref):
+    o_ref[0] = a_ref[0].T @ b_ref[0]
+
+
+def _kernel_nt(a_ref, b_ref, o_ref):
+    o_ref[0] = a_ref[0] @ b_ref[0].T
+
+
+_KERNELS = {"nn": _kernel_nn, "tn": _kernel_tn, "nt": _kernel_nt}
+
+
+@functools.partial(jax.jit, static_argnames=("op", "m", "k", "n"))
+def batched_gemm(a, b, *, op: str, m: int, k: int, n: int):
+    """C[i] = op_a(A[i]) @ op_b(B[i]) for i in range(nb).
+
+    a: (nb, m, k) for 'nn'/'nt', (nb, k, m) for 'tn'
+    b: (nb, k, n) for 'nn'/'tn', (nb, n, k) for 'nt'
+    returns (nb, m, n)
+    """
+    nb = a.shape[0]
+    a_shape = (k, m) if op == "tn" else (m, k)
+    b_shape = (n, k) if op == "nt" else (k, n)
+    assert a.shape == (nb, *a_shape), (a.shape, op)
+    assert b.shape == (nb, *b_shape), (b.shape, op)
+    return pl.pallas_call(
+        _KERNELS[op],
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, *a_shape), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, *b_shape), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), a.dtype),
+        interpret=True,  # CPU-PJRT portability; see module docstring
+    )(a, b)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, itemsize: int = 8) -> int:
+    """Estimated VMEM residency of one grid step (A, B and C tiles).
+
+    Used by DESIGN.md/EXPERIMENTS.md to check all catalog shapes fit VMEM
+    (~16 MiB on a TPU core) with generous headroom for double buffering.
+    """
+    return (m * k + k * n + m * n) * itemsize
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, mxu: int = 128) -> float:
+    """Fraction of MXU systolic-array lanes a (m,k)x(k,n) tile keeps busy.
+
+    The MXU multiplies 128x128 tiles; smaller operands pad. This is the
+    structural efficiency estimate used in EXPERIMENTS.md §Perf (interpret
+    mode gives no meaningful wallclock for TPU projection).
+    """
+    eff_m = min(m, mxu) / mxu
+    eff_k = min(k, mxu) / mxu
+    eff_n = min(n, mxu) / mxu
+    return eff_m * eff_k * eff_n

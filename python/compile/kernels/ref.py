@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the L1/L2 batched operations.
+
+Used only by pytest (never lowered to artifacts): jnp.linalg.* lowers to
+LAPACK custom-calls the PJRT CPU client of xla_extension 0.5.1 cannot
+execute, which is fine at test time under normal jax but forbidden in the
+AOT path — see model.py for the custom-call-free implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, *, op: str):
+    """Reference batched GEMM."""
+    if op == "tn":
+        a = jnp.swapaxes(a, -1, -2)
+    if op == "nt":
+        b = jnp.swapaxes(b, -1, -2)
+    return jnp.matmul(a, b)
+
+
+def qr_ref(a):
+    """Reference thin QR over the batch dimension."""
+    return jnp.linalg.qr(a, mode="reduced")
+
+
+def svd_ref(a):
+    """Reference thin SVD over the batch dimension: (u, s, v) with columns
+    of v (not rows): a = u @ diag(s) @ v.T"""
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u, s, jnp.swapaxes(vt, -1, -2)

@@ -1,0 +1,153 @@
+"""L2 JAX compute graphs: the batched operations the Rust coordinator
+invokes through AOT artifacts.
+
+- batched GEMM variants delegate to the L1 Pallas kernel (kernels/gemm.py),
+- batched Householder QR and one-sided Jacobi SVD are written with plain
+  jnp/lax ops only (no jnp.linalg.*): LAPACK custom-calls cannot execute on
+  the PJRT CPU client of xla_extension 0.5.1, so the algorithms are
+  implemented directly — mirroring the paper's KBLAS batched QR/SVD, which
+  are likewise hand-built batched kernels rather than LAPACK calls.
+
+All shapes are static; every (op, shape) pair becomes one HLO artifact
+(aot.py). f64 throughout (the paper's experiments are double precision).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import batched_gemm
+
+
+# ---------------------------------------------------------------------------
+# GEMM (thin wrapper: the Pallas kernel is the implementation)
+# ---------------------------------------------------------------------------
+
+def gemm(a, b, *, op: str, m: int, k: int, n: int):
+    return (batched_gemm(a, b, op=op, m=m, k=k, n=n),)
+
+
+# ---------------------------------------------------------------------------
+# Batched Householder QR (custom-call-free)
+# ---------------------------------------------------------------------------
+
+def _house_qr_single(a, *, want_q: bool):
+    """Thin QR of one (rows, cols) matrix, rows >= cols, via Householder
+    reflections. The column loop is a static python loop (cols is small and
+    fixed), each step fully vectorized — batching comes from vmap."""
+    rows, cols = a.shape
+    dtype = a.dtype
+    r = a
+    vs = []
+    taus = []
+    row_idx = jnp.arange(rows)
+    for j in range(cols):
+        x = jnp.where(row_idx >= j, r[:, j], 0.0)
+        normx = jnp.sqrt(jnp.sum(x * x))
+        alpha = r[j, j]
+        sign = jnp.where(alpha >= 0.0, 1.0, -1.0)
+        beta = -sign * normx
+        denom = alpha - beta
+        safe = jnp.abs(denom) > 0.0
+        inv = jnp.where(safe, 1.0 / jnp.where(safe, denom, 1.0), 0.0)
+        # v has implicit v[j] = 1; entries above j are zero.
+        v = jnp.where(row_idx > j, x * inv, 0.0)
+        v = v.at[j].set(jnp.where(safe, 1.0, 0.0))
+        tau = jnp.where(
+            jnp.abs(beta) > 0.0, (beta - alpha) / jnp.where(jnp.abs(beta) > 0.0, beta, 1.0), 0.0
+        )
+        # R := (I - tau v vᵀ) R
+        w = tau * (v @ r)
+        r = r - jnp.outer(v, w)
+        # exact zeros below the diagonal of column j
+        r = r.at[:, j].set(jnp.where(row_idx > j, jnp.zeros((), dtype), r[:, j]))
+        vs.append(v)
+        taus.append(tau)
+    r_small = r[:cols, :]
+    if not want_q:
+        return r_small
+    # Accumulate thin Q by applying reflectors to I in reverse.
+    q = jnp.zeros((rows, cols), dtype).at[jnp.arange(cols), jnp.arange(cols)].set(1.0)
+    for j in reversed(range(cols)):
+        w = taus[j] * (vs[j] @ q)
+        q = q - jnp.outer(vs[j], w)
+    return q, r_small
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols"))
+def qr(a, *, rows: int, cols: int):
+    """Batched thin QR: a (nb, rows, cols) -> (q (nb, rows, cols),
+    r (nb, cols, cols))."""
+    assert a.shape[1:] == (rows, cols)
+    q, r = jax.vmap(lambda x: _house_qr_single(x, want_q=True))(a)
+    return (q, r)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols"))
+def qr_r(a, *, rows: int, cols: int):
+    """Batched R-only QR: a (nb, rows, cols) -> (r (nb, cols, cols),)."""
+    assert a.shape[1:] == (rows, cols)
+    r = jax.vmap(lambda x: _house_qr_single(x, want_q=False))(a)
+    return (r,)
+
+
+# ---------------------------------------------------------------------------
+# Batched one-sided Jacobi SVD (custom-call-free)
+# ---------------------------------------------------------------------------
+
+def _jacobi_svd_single(a, *, sweeps: int):
+    """Thin SVD of one (rows, cols) matrix (rows >= cols) by one-sided
+    Jacobi: rotate column pairs of A (accumulating V) until the columns are
+    orthogonal, then normalize. The pair loop is static; the sweep loop is
+    a lax.fori_loop."""
+    rows, cols = a.shape
+    dtype = a.dtype
+
+    def sweep(_, carry):
+        u, v = carry
+        for p in range(cols):
+            for q in range(p + 1, cols):
+                cp = u[:, p]
+                cq = u[:, q]
+                app = cp @ cp
+                aqq = cq @ cq
+                apq = cp @ cq
+                # rotation angle (guarded against zero columns)
+                denom = 2.0 * apq
+                safe = jnp.abs(apq) > 1e-300
+                zeta = jnp.where(safe, (aqq - app) / jnp.where(safe, denom, 1.0), 0.0)
+                t = jnp.where(
+                    safe,
+                    jnp.sign(zeta) / (jnp.abs(zeta) + jnp.sqrt(1.0 + zeta * zeta)),
+                    0.0,
+                )
+                c = 1.0 / jnp.sqrt(1.0 + t * t)
+                s = c * t
+                new_up = c * cp - s * cq
+                new_uq = s * cp + c * cq
+                u = u.at[:, p].set(new_up).at[:, q].set(new_uq)
+                vp = v[:, p]
+                vq = v[:, q]
+                v = v.at[:, p].set(c * vp - s * vq).at[:, q].set(s * vp + c * vq)
+        return u, v
+
+    v0 = jnp.zeros((cols, cols), dtype).at[jnp.arange(cols), jnp.arange(cols)].set(1.0)
+    u, v = jax.lax.fori_loop(0, sweeps, sweep, (a, v0))
+    norms = jnp.sqrt(jnp.sum(u * u, axis=0))
+    order = jnp.argsort(-norms)
+    s = norms[order]
+    u = u[:, order]
+    v = v[:, order]
+    inv = jnp.where(s > 0.0, 1.0 / jnp.where(s > 0.0, s, 1.0), 0.0)
+    u = u * inv[None, :]
+    return u, s, v
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "sweeps"))
+def svd(a, *, rows: int, cols: int, sweeps: int = 14):
+    """Batched thin SVD: a (nb, rows, cols) -> (u (nb, rows, cols),
+    s (nb, cols) descending, v (nb, cols, cols))."""
+    assert a.shape[1:] == (rows, cols)
+    u, s, v = jax.vmap(lambda x: _jacobi_svd_single(x, sweeps=sweeps))(a)
+    return (u, s, v)

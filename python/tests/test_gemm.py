@@ -1,0 +1,76 @@
+"""L1 Pallas batched-GEMM kernel vs the pure-jnp oracle: hypothesis sweeps
+over shapes, ops and dtypes (the core kernel-correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import batched_gemm, mxu_utilization_estimate, vmem_footprint_bytes
+from compile.kernels.ref import gemm_ref
+
+jax.config.update("jax_enable_x64", True)
+
+dims = st.sampled_from([1, 2, 3, 5, 8, 16, 32])
+ops = st.sampled_from(["nn", "tn", "nt"])
+
+
+def make_inputs(rng, nb, m, k, n, op, dtype):
+    a_shape = (nb, k, m) if op == "tn" else (nb, m, k)
+    b_shape = (nb, n, k) if op == "nt" else (nb, k, n)
+    a = jnp.asarray(rng.standard_normal(a_shape), dtype)
+    b = jnp.asarray(rng.standard_normal(b_shape), dtype)
+    return a, b
+
+
+@settings(max_examples=8, deadline=None)
+@given(nb=st.sampled_from([1, 2, 7, 16]), m=dims, k=dims, n=dims, op=ops,
+       seed=st.integers(0, 2**31 - 1))
+def test_gemm_matches_ref_f64(nb, m, k, n, op, seed):
+    rng = np.random.default_rng(seed)
+    a, b = make_inputs(rng, nb, m, k, n, op, jnp.float64)
+    got = batched_gemm(a, b, op=op, m=m, k=k, n=n)
+    want = gemm_ref(a, b, op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=4, deadline=None)
+@given(m=dims, k=dims, n=dims, op=ops, seed=st.integers(0, 2**31 - 1))
+def test_gemm_f32(m, k, n, op, seed):
+    rng = np.random.default_rng(seed)
+    a, b = make_inputs(rng, 4, m, k, n, op, jnp.float32)
+    got = batched_gemm(a, b, op=op, m=m, k=k, n=n)
+    want = gemm_ref(a, b, op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_zero_padding_is_exact():
+    # the backend's bucket padding: zero blocks must contribute exactly zero
+    rng = np.random.default_rng(0)
+    a, b = make_inputs(rng, 3, 4, 5, 6, "nn", jnp.float64)
+    a_pad = jnp.zeros((8, 8, 8), jnp.float64).at[:3, :4, :5].set(a)
+    b_pad = jnp.zeros((8, 8, 8), jnp.float64).at[:3, :5, :6].set(b)
+    got = batched_gemm(a_pad, b_pad, op="nn", m=8, k=8, n=8)
+    want = gemm_ref(a, b, op="nn")
+    np.testing.assert_allclose(np.asarray(got)[:3, :4, :6], np.asarray(want), rtol=1e-13, atol=0)
+    np.testing.assert_array_equal(np.asarray(got)[3:], 0.0)
+
+
+def test_vmem_footprint_within_budget():
+    # every catalog shape must fit VMEM with headroom (DESIGN.md §Perf)
+    worst = vmem_footprint_bytes(32, 32, 64)
+    assert worst < 1 << 20  # << 16 MiB
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(32, 16, 64) < mxu_utilization_estimate(64, 32, 64)
+
+
+@pytest.mark.parametrize("op", ["nn", "tn", "nt"])
+def test_single_element_batch(op):
+    rng = np.random.default_rng(1)
+    a, b = make_inputs(rng, 1, 1, 1, 1, op, jnp.float64)
+    got = batched_gemm(a, b, op=op, m=1, k=1, n=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(gemm_ref(a, b, op=op)))

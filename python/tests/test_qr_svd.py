@@ -1,0 +1,102 @@
+"""L2 custom-call-free batched QR/SVD vs jnp.linalg oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import qr_ref, svd_ref
+
+jax.config.update("jax_enable_x64", True)
+
+shapes = st.sampled_from([(4, 4), (8, 3), (16, 16), (32, 16), (17, 5), (64, 32)])
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=shapes, nb=st.sampled_from([1, 3, 8]), seed=st.integers(0, 2**31 - 1))
+def test_qr_reconstructs_and_is_orthogonal(shape, nb, seed):
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((nb, rows, cols)))
+    q, r = model.qr(a, rows=rows, cols=cols)
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, np.asarray(a), rtol=1e-10, atol=1e-10)
+    eye = np.eye(cols)
+    for i in range(nb):
+        np.testing.assert_allclose(q[i].T @ q[i], eye, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(r[i], np.triu(r[i]), atol=1e-12)
+
+
+@settings(max_examples=4, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_qr_r_matches_full_qr(shape, seed):
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((2, rows, cols)))
+    (_, r_full) = model.qr(a, rows=rows, cols=cols)
+    (r_only,) = model.qr_r(a, rows=rows, cols=cols)
+    np.testing.assert_allclose(np.asarray(r_only), np.asarray(r_full), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=4, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_qr_r_magnitudes_match_lapack(shape, seed):
+    # R is unique up to row signs.
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((1, rows, cols)))
+    (r,) = model.qr_r(a, rows=rows, cols=cols)
+    _, r_ref = qr_ref(a)
+    np.testing.assert_allclose(
+        np.abs(np.asarray(r)), np.abs(np.asarray(r_ref)), rtol=1e-9, atol=1e-9
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(shape=shapes, nb=st.sampled_from([1, 4]), seed=st.integers(0, 2**31 - 1))
+def test_svd_reconstructs(shape, nb, seed):
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((nb, rows, cols)))
+    u, s, v = model.svd(a, rows=rows, cols=cols)
+    u, s, v = np.asarray(u), np.asarray(s), np.asarray(v)
+    for i in range(nb):
+        rec = u[i] @ np.diag(s[i]) @ v[i].T
+        np.testing.assert_allclose(rec, np.asarray(a)[i], rtol=1e-9, atol=1e-9)
+        assert np.all(np.diff(s[i]) <= 1e-12)  # descending
+
+
+@settings(max_examples=4, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_svd_singular_values_match_lapack(shape, seed):
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((1, rows, cols)))
+    _, s, _ = model.svd(a, rows=rows, cols=cols)
+    _, s_ref, _ = svd_ref(a)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-9, atol=1e-9)
+
+
+def test_svd_rank_deficient():
+    # outer product: exactly one nonzero singular value
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((10, 1))
+    y = rng.standard_normal((1, 6))
+    a = jnp.asarray((x @ y)[None])
+    _, s, _ = model.svd(a, rows=10, cols=6)
+    s = np.asarray(s)[0]
+    assert s[0] > 1e-8
+    assert np.all(s[1:] < 1e-10 * s[0])
+
+
+def test_svd_zero_padding_is_exact():
+    # backend padding property: zero rows/cols leave leading triplets alone
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((2, 9, 4))
+    a_pad = np.zeros((2, 16, 8))
+    a_pad[:, :9, :4] = a
+    _, s_pad, _ = model.svd(jnp.asarray(a_pad), rows=16, cols=8)
+    _, s_ref, _ = svd_ref(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(s_pad)[:, :4], np.asarray(s_ref), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(s_pad)[:, 4:], 0.0, atol=1e-12)

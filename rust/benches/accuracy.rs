@@ -1,0 +1,88 @@
+//! E7 (§6.1 text): sampled relative accuracy of the H² approximation and
+//! the sparsity constants, as a function of the interpolation order g.
+//! The paper reports 1e-7 at k=64 (2D, C_sp=17) and 1e-3 (3D, C_sp=30);
+//! the trend here must show the same exponential accuracy improvement
+//! with k and O(1) sparsity constants.
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, dense_kernel_matrix, ExponentialKernel};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::testing::rel_err;
+use h2opus::util::Prng;
+
+fn sampled_accuracy(a: &h2opus::tree::H2Matrix, kernel: &ExponentialKernel, samples: usize) -> f64 {
+    let n = a.n();
+    let dense = dense_kernel_matrix(&a.tree, kernel);
+    let mut rng = Prng::new(77);
+    let plan = HgemvPlan::new(a, 1);
+    let mut ws = HgemvWorkspace::new(a, 1);
+    let mut mt = Metrics::new();
+    let mut worst = 0.0_f64;
+    for _ in 0..samples {
+        let x = rng.normal_vec(n);
+        let mut y_dense = vec![0.0; n];
+        h2opus::linalg::gemm_nn(n, n, 1, &dense.data, &x, &mut y_dense, false);
+        let mut y = vec![0.0; n];
+        hgemv(a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+        worst = worst.max(rel_err(&y, &y_dense));
+    }
+    worst
+}
+
+fn main() {
+    println!("E7 / §6.1 — sampled accuracy ||Ax - A_H2 x||/||Ax|| and sparsity constants");
+    println!("\n== 2D exponential kernel (corr 0.1a, eta 0.9), N = 1024 ==");
+    println!("{:>3} {:>5} {:>12} {:>6} {:>14}", "g", "k", "accuracy", "C_sp", "mem (% dense)");
+    for g in [2usize, 3, 4, 5] {
+        let points = PointSet::grid_2d(32, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: g };
+        let a = build_h2(points, &kernel, &cfg);
+        let acc = sampled_accuracy(&a, &kernel, 5);
+        println!(
+            "{:>3} {:>5} {:>12.3e} {:>6} {:>14.1}",
+            g,
+            g * g,
+            acc,
+            a.sparsity_constant(),
+            100.0 * a.memory_words() as f64 / (a.n() as f64 * a.n() as f64)
+        );
+    }
+
+    println!("\n== 3D exponential kernel (corr 0.2a, eta 0.95), N = 512 ==");
+    println!("{:>3} {:>5} {:>12} {:>6} {:>14}", "g", "k", "accuracy", "C_sp", "mem (% dense)");
+    for g in [2usize, 3] {
+        let points = PointSet::grid_3d(8, 1.0);
+        let kernel = ExponentialKernel { dim: 3, corr_len: 0.2 };
+        let cfg = H2Config { leaf_size: 32, eta: 0.95, cheb_grid: g };
+        let a = build_h2(points, &kernel, &cfg);
+        let acc = sampled_accuracy(&a, &kernel, 5);
+        println!(
+            "{:>3} {:>5} {:>12.3e} {:>6} {:>14.1}",
+            g,
+            g * g * g,
+            acc,
+            a.sparsity_constant(),
+            100.0 * a.memory_words() as f64 / (a.n() as f64 * a.n() as f64)
+        );
+    }
+
+    // O(N) memory growth (Fig. 11 right panel's "ideal growth" line)
+    println!("\n== memory growth, 2D g=4 ==");
+    println!("{:>8} {:>14} {:>16}", "N", "mem (KW)", "words/point");
+    for side in [16usize, 32, 64, 128] {
+        let points = PointSet::grid_2d(side, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 };
+        let a = build_h2(points, &kernel, &cfg);
+        println!(
+            "{:>8} {:>14.1} {:>16.1}",
+            a.n(),
+            a.memory_words() as f64 / 1e3,
+            a.memory_words() as f64 / a.n() as f64
+        );
+    }
+}

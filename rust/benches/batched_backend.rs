@@ -1,0 +1,109 @@
+//! E9 (§6.1): sustained batched-kernel rates — the efficiency denominator
+//! the paper measures with MAGMA's batched GEMM on 64×64 blocks. Compares
+//! the native backend against the XLA/PJRT AOT path (JAX/Pallas
+//! artifacts) for GEMM, QR and SVD at the library's bucket shapes.
+
+use std::path::Path;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::backend::{contiguous_offsets, BatchRef, ComputeBackend, GemmDims};
+use h2opus::metrics::Metrics;
+use h2opus::runtime::XlaBackend;
+use h2opus::util::timer::trimmed_mean_time;
+use h2opus::util::Prng;
+
+fn gemm_rate(be: &dyn ComputeBackend, nb: usize, m: usize, k: usize, n: usize) -> f64 {
+    let mut rng = Prng::new(5);
+    let a = rng.normal_vec(nb * m * k);
+    let b = rng.normal_vec(nb * k * n);
+    let mut c = vec![0.0; nb * m * n];
+    let dims = GemmDims { nb, m, k, n, trans_a: false, trans_b: false, accumulate: false };
+    let ao = contiguous_offsets(nb, m * k);
+    let bo = contiguous_offsets(nb, k * n);
+    let co = contiguous_offsets(nb, m * n);
+    let t = trimmed_mean_time(5, || {
+        let mut mt = Metrics::new();
+        be.batched_gemm(dims, BatchRef { data: &a, offsets: &ao }, BatchRef { data: &b, offsets: &bo }, &mut c, &co, &mut mt);
+    });
+    2.0 * (nb * m * k * n) as f64 / t / 1e9
+}
+
+fn qr_rate(be: &dyn ComputeBackend, nb: usize, rows: usize, cols: usize) -> f64 {
+    let mut rng = Prng::new(6);
+    let a = rng.normal_vec(nb * rows * cols);
+    let mut q = vec![0.0; nb * rows * cols];
+    let mut r = vec![0.0; nb * cols * cols];
+    let t = trimmed_mean_time(5, || {
+        let mut mt = Metrics::new();
+        be.batched_qr(nb, rows, cols, &a, &mut q, &mut r, &mut mt);
+    });
+    let flops_per = 2 * rows * cols * cols;
+    (nb * flops_per) as f64 / t / 1e9
+}
+
+fn svd_rate(be: &dyn ComputeBackend, nb: usize, rows: usize, cols: usize) -> f64 {
+    let mut rng = Prng::new(7);
+    let a = rng.normal_vec(nb * rows * cols);
+    let mut u = vec![0.0; nb * rows * cols];
+    let mut s = vec![0.0; nb * cols];
+    let mut v = vec![0.0; nb * cols * cols];
+    let t = trimmed_mean_time(3, || {
+        let mut mt = Metrics::new();
+        be.batched_svd(nb, rows, cols, &a, &mut u, &mut s, &mut v, &mut mt);
+    });
+    (nb * 14 * rows * cols * cols) as f64 / t / 1e9
+}
+
+fn main() {
+    println!("E9 / §6.1 — batched-kernel sustained rates (Gflop/s), native vs XLA AOT");
+    let xla = if Path::new("artifacts/manifest.txt").exists() {
+        Some(XlaBackend::new(Path::new("artifacts")).expect("loading artifacts"))
+    } else {
+        println!("(artifacts missing — run `make artifacts` to include the XLA column)");
+        None
+    };
+
+    println!("\n-- batched GEMM --");
+    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
+    for &(nb, m, k, n) in &[(256usize, 32usize, 32usize, 32usize), (1024, 16, 16, 16), (256, 32, 16, 64)] {
+        let nat = gemm_rate(&NativeBackend, nb, m, k, n);
+        let x = xla.as_ref().map(|b| gemm_rate(b, nb, m, k, n));
+        println!(
+            "{:>6} {:>12} {:>12.3} {:>12}",
+            nb,
+            format!("{m}x{k}x{n}"),
+            nat,
+            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
+        );
+    }
+
+    println!("\n-- batched QR (rows x cols) --");
+    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
+    for &(nb, rows, cols) in &[(256usize, 32usize, 16usize), (64, 128, 16)] {
+        let nat = qr_rate(&NativeBackend, nb, rows, cols);
+        let x = xla.as_ref().map(|b| qr_rate(b, nb, rows, cols));
+        println!(
+            "{:>6} {:>12} {:>12.3} {:>12}",
+            nb,
+            format!("{rows}x{cols}"),
+            nat,
+            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
+        );
+    }
+
+    println!("\n-- batched SVD (rows x cols) --");
+    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
+    for &(nb, rows, cols) in &[(64usize, 16usize, 8usize)] {
+        let nat = svd_rate(&NativeBackend, nb, rows, cols);
+        let x = xla.as_ref().map(|b| svd_rate(b, nb, rows, cols));
+        println!(
+            "{:>6} {:>12} {:>12.3} {:>12}",
+            nb,
+            format!("{rows}x{cols}"),
+            nat,
+            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    println!("\n(The 32x16 SVD artifact is excluded: its unrolled Jacobi graph compiles");
+    println!(" for minutes under XLA CPU — see EXPERIMENTS.md §Perf for the analysis.)");
+}

@@ -1,0 +1,51 @@
+//! E4 (Fig. 12): strong scalability of algebraic compression — fixed N,
+//! growing P. Expect efficiency to fall once the per-rank share of each
+//! level is too small (paper: ~50% at pN = 2^17 in 2D, limit by 32 GPUs).
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::{H2Config, NetworkModel};
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::compress::dist_compress;
+use h2opus::geometry::PointSet;
+use h2opus::util::timer::trimmed_mean;
+
+fn bench_set(dim: usize, n_target: usize, cfg: H2Config) {
+    let (points, corr) = if dim == 2 {
+        let side = (n_target as f64).sqrt().ceil() as usize;
+        (PointSet::grid_2d(side, 1.0), 0.1)
+    } else {
+        let side = (n_target as f64).cbrt().ceil() as usize;
+        (PointSet::grid_3d(side, 1.0), 0.2)
+    };
+    let kernel = ExponentialKernel { dim, corr_len: corr };
+    let a = build_h2(points, &kernel, &cfg);
+    println!("\n== {dim}D compression strong scaling, N = {} ==", a.n());
+    println!("{:>4} {:>12} {:>11} {:>13}", "P", "total (ms)", "speedup", "eff (%)");
+    let mut t1 = None;
+    for &p in &[1usize, 2, 4, 8, 16] {
+        if a.depth() < p.trailing_zeros() as usize {
+            continue;
+        }
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let mut b = a.clone();
+            let (_, rep) = dist_compress(&mut b, p, 1e-3, &NativeBackend, NetworkModel::default());
+            times.push(rep.orthogonalization_time + rep.compression_time);
+        }
+        let t = trimmed_mean(&times);
+        let base = *t1.get_or_insert(t);
+        println!(
+            "{:>4} {:>12.2} {:>11.2} {:>13.1}",
+            p,
+            t * 1e3,
+            base / t,
+            100.0 * base / t / p as f64
+        );
+    }
+}
+
+fn main() {
+    println!("E4 / Fig. 12 — compression strong scalability (virtual time)");
+    bench_set(2, 1 << 14, H2Config { leaf_size: 64, eta: 0.9, cheb_grid: 6 });
+    bench_set(3, 1 << 13, H2Config { leaf_size: 64, eta: 0.95, cheb_grid: 3 });
+}

@@ -1,0 +1,67 @@
+//! E3 + E8 (Fig. 11): weak scalability and effectiveness of algebraic
+//! compression. Reports orthogonalization and compression virtual times
+//! separately (as the paper does), pre/post low-rank memory and the
+//! reduction factor, for the 2D (Chebyshev 6×6 seed, k=36) and 3D
+//! (g=3 seed) test sets at τ = 1e-3.
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::{H2Config, NetworkModel};
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::compress::dist_compress;
+use h2opus::geometry::PointSet;
+use h2opus::util::timer::trimmed_mean;
+
+fn bench_set(dim: usize, local_n: usize, ps: &[usize], cfg: H2Config) {
+    println!(
+        "\n== {dim}D compression weak scaling, pN = {local_n}/rank, k_seed = {} , tau = 1e-3 ==",
+        cfg.rank(dim)
+    );
+    println!(
+        "{:>4} {:>9} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "P", "N", "orth (ms)", "compr (ms)", "pre (KW)", "post (KW)", "ratio"
+    );
+    for &p in ps {
+        let n_target = local_n * p;
+        let (points, corr) = if dim == 2 {
+            let side = (n_target as f64).sqrt().ceil() as usize;
+            (PointSet::grid_2d(side, 1.0), 0.1)
+        } else {
+            let side = (n_target as f64).cbrt().ceil() as usize;
+            (PointSet::grid_3d(side, 1.0), 0.2)
+        };
+        let kernel = ExponentialKernel { dim, corr_len: corr };
+        let a = build_h2(points, &kernel, &cfg);
+        if a.depth() < p.trailing_zeros() as usize {
+            continue;
+        }
+        let mut orth_times = Vec::new();
+        let mut comp_times = Vec::new();
+        let mut stats = None;
+        for _ in 0..3 {
+            let mut b = a.clone();
+            let (_, rep) = dist_compress(&mut b, p, 1e-3, &NativeBackend, NetworkModel::default());
+            orth_times.push(rep.orthogonalization_time);
+            comp_times.push(rep.compression_time);
+            stats = Some(rep.stats);
+        }
+        let st = stats.unwrap();
+        println!(
+            "{:>4} {:>9} {:>12.2} {:>12.2} {:>12.1} {:>12.1} {:>8.2}",
+            p,
+            a.n(),
+            trimmed_mean(&orth_times) * 1e3,
+            trimmed_mean(&comp_times) * 1e3,
+            st.pre_words as f64 / 1e3,
+            st.post_words as f64 / 1e3,
+            st.ratio()
+        );
+    }
+}
+
+fn main() {
+    println!("E3+E8 / Fig. 11 — compression weak scalability & memory reduction (virtual time)");
+    // paper 2D: m=64, 6x6 Chebyshev seed (k=36), tau=1e-3
+    bench_set(2, 2048, &[1, 4, 16], H2Config { leaf_size: 64, eta: 0.9, cheb_grid: 6 });
+    // paper 3D: tri-cubic seed; scaled here to g=3 (k=27), m=32
+    bench_set(3, 1024, &[1, 4, 8], H2Config { leaf_size: 64, eta: 0.95, cheb_grid: 3 });
+}

@@ -1,0 +1,59 @@
+//! E2 (Fig. 10): strong scalability of distributed HGEMV — fixed N,
+//! growing P, for 2D and 3D test sets and several nv. Expect good scaling
+//! until the local problem becomes too small to hide communication
+//! (paper: limit around 32 GPUs at pN = 2^14).
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::geometry::PointSet;
+use h2opus::util::timer::trimmed_mean;
+use h2opus::util::Prng;
+
+fn bench_set(dim: usize, n_target: usize) {
+    let (points, corr, cfg) = if dim == 2 {
+        let side = (n_target as f64).sqrt().ceil() as usize;
+        (PointSet::grid_2d(side, 1.0), 0.1, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 })
+    } else {
+        let side = (n_target as f64).cbrt().ceil() as usize;
+        (PointSet::grid_3d(side, 1.0), 0.2, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 })
+    };
+    let kernel = ExponentialKernel { dim, corr_len: corr };
+    let a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    println!("\n== {dim}D test set, strong scaling, N = {n} ==");
+    println!("{:>4} {:>4} {:>13} {:>11} {:>13}", "P", "nv", "time (ms)", "speedup", "eff (%)");
+    let mut rng = Prng::new(43);
+    for &nv in &[1usize, 16, 64] {
+        let x = rng.normal_vec(n * nv);
+        let mut y = vec![0.0; n * nv];
+        let mut t1 = None;
+        for &p in &[1usize, 2, 4, 8, 16, 32] {
+            if a.depth() < p.trailing_zeros() as usize {
+                continue;
+            }
+            let mut times = Vec::new();
+            for _ in 0..5 {
+                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &DistOptions::default());
+                times.push(rep.time);
+            }
+            let t = trimmed_mean(&times);
+            let base = *t1.get_or_insert(t);
+            println!(
+                "{:>4} {:>4} {:>13.3} {:>11.2} {:>13.1}",
+                p,
+                nv,
+                t * 1e3,
+                base / t,
+                100.0 * base / t / p as f64
+            );
+        }
+    }
+}
+
+fn main() {
+    println!("E2 / Fig. 10 — HGEMV strong scalability (virtual time)");
+    bench_set(2, 1 << 14);
+    bench_set(3, 1 << 14);
+}

@@ -1,0 +1,79 @@
+//! E1 (Fig. 9): weak scalability of distributed HGEMV.
+//!
+//! Per-rank problem size is held fixed while P grows; reports virtual
+//! time, Gflop/s/rank and relative efficiency (G_P/G_P0)/(P/P0) for the 2D
+//! and 3D kernel test sets and nv ∈ {1, 16, 64} — the paper's Fig. 9 rows.
+//! Protocol: trimmed mean over repeated runs (§6.1).
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::geometry::PointSet;
+use h2opus::util::timer::trimmed_mean;
+use h2opus::util::Prng;
+
+fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
+    println!("\n== {dim}D exponential kernel, weak scaling, pN = {local_n}/rank ==");
+    println!(
+        "{:>4} {:>9} {:>4} {:>13} {:>14} {:>11} {:>12}",
+        "P", "N", "nv", "time (ms)", "Gflop/s/rank", "eff (%)", "comm (KiB)"
+    );
+    let mut base_rate: Vec<Option<f64>> = vec![None; nvs.len()];
+    for &p in ps {
+        let n_target = local_n * p;
+        let (points, corr, cfg) = if dim == 2 {
+            let side = (n_target as f64).sqrt().ceil() as usize;
+            (PointSet::grid_2d(side, 1.0), 0.1, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 })
+        } else {
+            let side = (n_target as f64).cbrt().ceil() as usize;
+            (PointSet::grid_3d(side, 1.0), 0.2, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 })
+        };
+        let kernel = ExponentialKernel { dim, corr_len: corr };
+        let a = build_h2(points, &kernel, &cfg);
+        if a.depth() < p.trailing_zeros() as usize {
+            continue;
+        }
+        let n = a.n();
+        let mut rng = Prng::new(42);
+        for (nvi, &nv) in nvs.iter().enumerate() {
+            let x = rng.normal_vec(n * nv);
+            let mut y = vec![0.0; n * nv];
+            let opts = DistOptions::default();
+            let mut times = Vec::new();
+            let mut flops = 0u64;
+            let mut comm = 0usize;
+            for _ in 0..5 {
+                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &opts);
+                times.push(rep.time);
+                flops = rep.metrics.flops;
+                comm = rep.recv_bytes;
+            }
+            let t = trimmed_mean(&times);
+            let rate = flops as f64 / t / 1e9 / p as f64;
+            let eff = match base_rate[nvi] {
+                None => {
+                    base_rate[nvi] = Some(rate);
+                    100.0
+                }
+                Some(r0) => 100.0 * rate / r0,
+            };
+            println!(
+                "{:>4} {:>9} {:>4} {:>13.3} {:>14.3} {:>11.1} {:>12.1}",
+                p,
+                n,
+                nv,
+                t * 1e3,
+                rate,
+                eff,
+                comm as f64 / 1024.0
+            );
+        }
+    }
+}
+
+fn main() {
+    println!("E1 / Fig. 9 — HGEMV weak scalability (virtual time, see DESIGN.md)");
+    bench_set(2, 4096, &[1, 2, 4, 8, 16], &[1, 16, 64]);
+    bench_set(3, 4096, &[1, 2, 4, 8], &[1, 16, 64]);
+}

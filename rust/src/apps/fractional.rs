@@ -1,0 +1,358 @@
+//! 2D variable-diffusivity integral fractional diffusion (§6.4).
+//!
+//! Discretizes  h²(D + K + C) u = b  (Eq. 9) on a cell-centered n×n grid
+//! over Ω = [-1,1]², with volume constraints u = 0 on Ω₀ = [-3,3]²∖Ω:
+//!
+//! - K — the formally dense fractional kernel matrix (Eq. 11), built and
+//!   *algebraically compressed* as an H² matrix; applied by the
+//!   distributed HGEMV.
+//! - D — diagonal (Eq. 10), computed as the paper does: assemble K̂ over
+//!   the enlarged region Ω ∪ Ω₀ as an H² matrix, multiply by the ones
+//!   vector (one distributed matvec), take the rows of Ω, negate. K̂ is
+//!   then discarded.
+//! - C — the sparse regularization operator. The paper derives its exact
+//!   entries from the singularity-removing correction of [8]; we
+//!   substitute a variable-coefficient 5-point operator with the same
+//!   sparsity, symmetry, h-scaling and role (see DESIGN.md
+//!   "Substitutions"), scaled like the fractional diagonal so that the
+//!   D+K+C balance matches Eq. 8's structure.
+//!
+//! Solver: CG on h²(D+K+C) preconditioned by a geometric-multigrid V-cycle
+//! on C (the paper: PETSc CG + smoothed-aggregation AMG on C).
+
+use crate::backend::ComputeBackend;
+use crate::compression::compress_full;
+use crate::config::{H2Config, NetworkModel};
+use crate::construct::builder::build_h2;
+use crate::construct::kernels::FractionalKernel;
+use crate::dist::hgemv::{DistHgemv, DistOptions};
+use crate::geometry::{PointSet, MAX_DIM};
+use crate::matvec::HgemvWorkspace;
+use crate::metrics::Metrics;
+use crate::solver::cg::{pcg, CgResult, LinOp};
+use crate::solver::multigrid::{five_point_operator, Multigrid};
+use crate::solver::Csr;
+use crate::tree::H2Matrix;
+use crate::util::Timer;
+
+/// The paper's bump diffusivity field (Eqs. 6–7):
+/// κ(x) = 1 + f(x₁; 0, 1.5)·f(x₂; 0, 2.0).
+pub fn kappa(x: f64, y: f64) -> f64 {
+    1.0 + bump(x, 0.0, 1.5) * bump(y, 0.0, 2.0)
+}
+
+fn bump(x: f64, c: f64, ell: f64) -> f64 {
+    let r = (x - c) / (ell / 2.0);
+    if r.abs() < 1.0 {
+        (-1.0 / (1.0 - r * r)).exp()
+    } else {
+        0.0
+    }
+}
+
+/// Problem configuration.
+#[derive(Clone, Debug)]
+pub struct FractionalProblem {
+    /// Grid cells per side over Ω = [-1,1]² (N = n²).
+    pub n_side: usize,
+    /// Fractional order β ∈ (0.5, 1); the paper uses 0.75.
+    pub beta: f64,
+    /// H² construction parameters.
+    pub h2: H2Config,
+    /// Compression accuracy for K (paper: 1e-6).
+    pub tau: f64,
+    /// Simulated ranks for the distributed matvec.
+    pub ranks: usize,
+}
+
+impl FractionalProblem {
+    pub fn paper_defaults(n_side: usize, ranks: usize) -> Self {
+        FractionalProblem {
+            n_side,
+            beta: 0.75,
+            h2: H2Config { leaf_size: 64, eta: 0.9, cheb_grid: 6 },
+            tau: 1e-6,
+            ranks,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n_side * self.n_side
+    }
+
+    pub fn h(&self) -> f64 {
+        2.0 / self.n_side as f64
+    }
+}
+
+/// Assembled operator + preconditioner + setup timings.
+pub struct FractionalSystem {
+    pub problem: FractionalProblem,
+    /// Compressed H² representation of K over Ω.
+    pub k: H2Matrix,
+    /// Diagonal D (Eq. 10).
+    pub d: Vec<f64>,
+    /// Sparse regularization operator C.
+    pub c: Csr,
+    /// Right-hand side b (in the H² permuted ordering).
+    pub b: Vec<f64>,
+    /// MG hierarchy on C.
+    pub mg: Multigrid,
+    /// Setup phase timings (seconds): K build+compress, D via K̂·1,
+    /// C + preconditioner setup.
+    pub setup_k: f64,
+    pub setup_d: f64,
+    pub setup_c: f64,
+    /// Grid-point permutation used by the H² clustering (original -> perm
+    /// position handled through `k.tree`).
+    pub dist: DistHgemv,
+}
+
+/// Cell-centered grid over [lo,hi]² with n cells per side.
+fn cell_grid(n: usize, lo: f64, hi: f64) -> PointSet {
+    let h = (hi - lo) / n as f64;
+    let mut ps = PointSet::new(2);
+    for j in 0..n {
+        for i in 0..n {
+            ps.push(&[lo + (i as f64 + 0.5) * h, lo + (j as f64 + 0.5) * h]);
+        }
+    }
+    ps
+}
+
+/// Assemble the full system (the paper's "setup" phase, Fig. 13 left).
+pub fn setup(problem: FractionalProblem, backend: &dyn ComputeBackend) -> FractionalSystem {
+    let n_side = problem.n_side;
+    let n = problem.n();
+    let beta = problem.beta;
+    let kap = |p: &[f64; MAX_DIM]| kappa(p[0], p[1]);
+
+    // ---- K over Ω, Chebyshev construction + algebraic compression ----
+    let t = Timer::start();
+    let points = cell_grid(n_side, -1.0, 1.0);
+    let kernel = FractionalKernel { dim: 2, beta, kappa: kap };
+    let mut k_raw = build_h2(points, &kernel, &problem.h2);
+    let mut metrics = Metrics::new();
+    let (k, _stats) = compress_full(&mut k_raw, problem.tau, backend, &mut metrics);
+    drop(k_raw);
+    let setup_k = t.elapsed();
+
+    // ---- D via K̂·1 over Ω ∪ Ω₀ = [-3,3]² (3n per side), distributed ----
+    let t = Timer::start();
+    let big = cell_grid(3 * n_side, -3.0, 3.0);
+    // Note: 3n is not a power of two in general; the cluster tree handles
+    // any size. K̂ is built at construction accuracy (no compression — it
+    // is used for one product and discarded, as in the paper).
+    let khat = build_h2(big, &kernel, &problem.h2);
+    let nbig = khat.n();
+    let ones = vec![1.0; nbig];
+    let mut khat_ones_perm = vec![0.0; nbig];
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false };
+    crate::dist::hgemv::dist_hgemv(
+        &khat,
+        backend,
+        problem.ranks,
+        1,
+        &ones,
+        &mut khat_ones_perm,
+        &opts,
+    );
+    // map back to original ordering of the big grid, then pick Ω rows
+    let mut khat_ones = vec![0.0; nbig];
+    for pos in 0..nbig {
+        khat_ones[khat.tree.perm[pos]] = khat_ones_perm[pos];
+    }
+    // Ω points are the cells of the middle third of the 3n×3n grid.
+    let mut d = vec![0.0; n];
+    for j in 0..n_side {
+        for i in 0..n_side {
+            let bi = i + n_side;
+            let bj = j + n_side;
+            let big_idx = bj * 3 * n_side + bi;
+            // D_ii = sum_j -K̂_ij  (K̂ entries are negative; diagonal is 0)
+            d[j * n_side + i] = -khat_ones[big_idx];
+        }
+    }
+    drop(khat);
+    let setup_d = t.elapsed();
+
+    // ---- C + multigrid hierarchy ----
+    let t = Timer::start();
+    // Scaling: the regularization operator acts like a local diffusion
+    // correction with strength ~ h^(2-2β) relative to the grid Laplacian
+    // (so that h²·C has the same h^{-2β} scaling as D and K row sums).
+    let h = problem.h();
+    let scale = h.powf(2.0 - 2.0 * beta);
+    let c = five_point_operator(n_side, -1.0, 1.0, scale, 0.0, &kappa);
+    let mut ops = Vec::new();
+    let mut sides = Vec::new();
+    let mut m = n_side;
+    while m >= 8 && m % 2 == 0 {
+        ops.push(five_point_operator(m, -1.0, 1.0, scale, 0.0, &kappa));
+        sides.push(m);
+        m /= 2;
+    }
+    if ops.is_empty() {
+        ops.push(c.clone());
+        sides.push(n_side);
+    }
+    let mg = Multigrid::new(ops, sides);
+    let setup_c = t.elapsed();
+
+    // rhs b = 1 on Ω, permuted into the H² ordering of K's tree
+    let mut b = vec![0.0; n];
+    for pos in 0..n {
+        let _orig = k.tree.perm[pos];
+        b[pos] = 1.0; // b(x) = 1 everywhere (permutation of a constant)
+    }
+
+    let dist = DistHgemv::new(&k, problem.ranks, 1);
+    FractionalSystem { problem, k, d, c, b, mg, setup_k, setup_d, setup_c, dist }
+}
+
+/// Solve outcome.
+pub struct FractionalSolve {
+    pub result: CgResult,
+    /// Solution in the original grid ordering.
+    pub u: Vec<f64>,
+    pub solve_time: f64,
+    pub time_per_iteration: f64,
+}
+
+/// Run the preconditioned Krylov solve (Fig. 13 right).
+pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64) -> FractionalSolve {
+    let n = sys.problem.n();
+    let h2half = sys.problem.h() * sys.problem.h(); // the h² of Eq. 9
+
+    // Permutation helpers: CG runs in the permuted (cluster) ordering so
+    // the H² product needs no per-iteration permutation; D and C live in
+    // the original ordering.
+    let perm = sys.k.tree.perm.clone();
+    let mut ws = HgemvWorkspace::new(&sys.k, 1);
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false };
+
+    let mut x_orig = vec![0.0; n];
+    let mut cx_orig = vec![0.0; n];
+    let mut kx_perm = vec![0.0; n];
+
+    let t = Timer::start();
+    let dist = &sys.dist;
+    let k = &sys.k;
+    let d = &sys.d;
+    let c = &sys.c;
+    let mut apply = |x_perm: &[f64], y_perm: &mut [f64]| {
+        // y = h² (D + K + C) x
+        dist.run(k, backend, x_perm, &mut kx_perm, &mut ws, &opts);
+        for pos in 0..n {
+            x_orig[perm[pos]] = x_perm[pos];
+        }
+        c.spmv(&x_orig, &mut cx_orig);
+        for pos in 0..n {
+            let orig = perm[pos];
+            y_perm[pos] = h2half * (d[orig] * x_perm[pos] + kx_perm[pos] + cx_orig[orig]);
+        }
+    };
+    let mut op = (n, &mut apply as &mut dyn FnMut(&[f64], &mut [f64]));
+    struct OpWrap<'a>(usize, &'a mut dyn FnMut(&[f64], &mut [f64]));
+    impl LinOp for OpWrap<'_> {
+        fn n(&self) -> usize {
+            self.0
+        }
+        fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+            (self.1)(x, y)
+        }
+    }
+    let _ = &mut op;
+    let mut opw = OpWrap(n, &mut apply);
+
+    // Preconditioner: V-cycle on C (permute in/out of the grid ordering).
+    let mg = &mut sys.mg;
+    let perm2 = perm.clone();
+    let mut pin = vec![0.0; n];
+    let mut pout = vec![0.0; n];
+    let mut pre = move |r_perm: &[f64], z_perm: &mut [f64]| {
+        for pos in 0..n {
+            pin[perm2[pos]] = r_perm[pos];
+        }
+        mg.apply_vcycle(&pin, &mut pout);
+        for pos in 0..n {
+            z_perm[pos] = pout[perm2[pos]];
+        }
+    };
+    let mut prew = OpWrap(n, &mut pre);
+
+    let mut u_perm = vec![0.0; n];
+    let result = pcg(&mut opw, &mut prew, &sys.b, &mut u_perm, rtol, 500);
+    let solve_time = t.elapsed();
+
+    let mut u = vec![0.0; n];
+    for pos in 0..n {
+        u[perm[pos]] = u_perm[pos];
+    }
+    let tpi = solve_time / result.iterations.max(1) as f64;
+    FractionalSolve { result, u, solve_time, time_per_iteration: tpi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+
+    #[test]
+    fn kappa_field_shape() {
+        // bump is active near the origin, 1.0 far away
+        assert!(kappa(0.0, 0.0) > 1.0);
+        assert_eq!(kappa(0.9, 0.0), 1.0); // outside the x-bump support (|r|>=1 at 0.75)
+        assert_eq!(kappa(-3.0, -3.0), 1.0);
+        assert!(kappa(0.2, 0.3) >= 1.0);
+    }
+
+    fn small_problem(n_side: usize) -> FractionalProblem {
+        FractionalProblem {
+            n_side,
+            beta: 0.75,
+            h2: H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 4 },
+            tau: 1e-6,
+            ranks: 2,
+        }
+    }
+
+    #[test]
+    fn setup_produces_spd_parts() {
+        let sys = setup(small_problem(16), &NativeBackend);
+        // D strictly positive (sum of positive kernel magnitudes)
+        assert!(sys.d.iter().all(|&v| v > 0.0), "D not positive");
+        // C symmetric
+        assert!(sys.c.is_symmetric(1e-10));
+    }
+
+    #[test]
+    fn solver_converges_and_solution_positive_inside() {
+        let mut sys = setup(small_problem(16), &NativeBackend);
+        let sol = solve(&mut sys, &NativeBackend, 1e-6);
+        assert!(sol.result.converged, "CG did not converge: {:?}", sol.result.iterations);
+        // -L u = 1 with zero volume constraints: u > 0 in the interior
+        let n_side = sys.problem.n_side;
+        let center = (n_side / 2) * n_side + n_side / 2;
+        assert!(sol.u[center] > 0.0, "u(center) = {}", sol.u[center]);
+        // boundary cells smaller than center
+        assert!(sol.u[0] < sol.u[center]);
+    }
+
+    #[test]
+    fn iterations_roughly_mesh_independent() {
+        let mut its = Vec::new();
+        for n_side in [8usize, 16] {
+            let mut sys = setup(small_problem(n_side), &NativeBackend);
+            let sol = solve(&mut sys, &NativeBackend, 1e-6);
+            assert!(sol.result.converged);
+            its.push(sol.result.iterations);
+        }
+        // the paper sees 24 -> 32 over a 64x mesh refinement; allow a
+        // similar mild growth over one refinement step
+        assert!(
+            its[1] <= its[0] * 2 + 8,
+            "iterations grew too fast: {its:?}"
+        );
+    }
+}

@@ -1,0 +1,3 @@
+//! End-to-end applications built on the library.
+
+pub mod fractional;

@@ -1,0 +1,116 @@
+//! Batched dense-linear-algebra backends.
+//!
+//! The paper's single-GPU performance comes from marshaling tree levels
+//! into batches of small fixed-size dense operations executed by MAGMA
+//! (GEMM) and KBLAS (QR/SVD). Here the same role is played by a
+//! [`ComputeBackend`] trait with two implementations:
+//!
+//! - [`native::NativeBackend`] — pure Rust; the correctness oracle and the
+//!   performance baseline,
+//! - [`crate::runtime::XlaBackend`] — AOT-compiled JAX/Pallas HLO artifacts
+//!   executed through the PJRT CPU client, mirroring the paper's
+//!   batched-GPU-kernel architecture.
+//!
+//! The batched-GEMM entry point takes *offset arrays* instead of contiguous
+//! buffers: this is exactly the paper's marshaling output (Alg. 3) — a
+//! gather of per-block pointers into the flattened tree storage with no
+//! data movement. The conflict-free batch ordering of §3.2 guarantees
+//! output offsets are distinct within a call.
+
+pub mod native;
+
+use crate::metrics::Metrics;
+
+/// Dimensions of one batched GEMM: nb blocks of op(A)·B with
+/// op(A): m × k, B: k × n, C: m × n.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmDims {
+    pub nb: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// When true, A blocks are stored k × m and used transposed.
+    pub trans_a: bool,
+    /// When true, B blocks are stored n × k and used transposed.
+    pub trans_b: bool,
+    /// When true, C += op(A)·op(B); otherwise C = op(A)·op(B).
+    pub accumulate: bool,
+}
+
+/// A batched-GEMM argument: flat storage plus one offset per block.
+pub struct BatchRef<'a> {
+    pub data: &'a [f64],
+    pub offsets: &'a [usize],
+}
+
+/// Batched dense linear algebra over f64.
+pub trait ComputeBackend {
+    fn name(&self) -> &str;
+
+    /// Batched GEMM over gathered offsets:
+    /// `C[c_off[i]..] (=|+=) op(A[a_off[i]..]) · op(B[b_off[i]..])`.
+    fn batched_gemm(
+        &self,
+        dims: GemmDims,
+        a: BatchRef<'_>,
+        b: BatchRef<'_>,
+        c_data: &mut [f64],
+        c_offsets: &[usize],
+        metrics: &mut Metrics,
+    );
+
+    /// Batched thin QR of nb contiguous (rows × cols) blocks (rows >= cols):
+    /// writes Q (nb × rows × cols) and R (nb × cols × cols).
+    fn batched_qr(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        q: &mut [f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    );
+
+    /// Batched R-only QR (the compression downsweep never needs Q).
+    fn batched_qr_r(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    );
+
+    /// Batched thin SVD of nb contiguous (rows × cols) blocks (rows >= cols):
+    /// writes U (nb × rows × cols), singular values (nb × cols, descending)
+    /// and V (nb × cols × cols).
+    fn batched_svd(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        u: &mut [f64],
+        s: &mut [f64],
+        v: &mut [f64],
+        metrics: &mut Metrics,
+    );
+}
+
+/// Convenience: contiguous offsets 0, stride, 2·stride, ...
+pub fn contiguous_offsets(nb: usize, stride: usize) -> Vec<usize> {
+    (0..nb).map(|i| i * stride).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_offsets_stride() {
+        assert_eq!(contiguous_offsets(3, 10), vec![0, 10, 20]);
+        assert!(contiguous_offsets(0, 5).is_empty());
+    }
+}

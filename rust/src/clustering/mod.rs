@@ -1,0 +1,253 @@
+//! K-d tree hierarchical clustering of point sets (the paper's T_I).
+//!
+//! The cluster tree is a *perfect* binary tree: every internal node has two
+//! children and all leaves sit at the same depth. Median splits along the
+//! longest bounding-box axis keep sibling sizes within one point of each
+//! other, so level `l` always has exactly `2^l` nodes — the property that
+//! makes per-level flattened storage and fixed-size batching possible
+//! (§2.1), and that lets the distributed decomposition split clean branches
+//! at the C-level (§2.2).
+
+use crate::geometry::{BBox, PointSet};
+
+/// One node of the cluster tree: a contiguous range [start, end) of the
+/// permuted point ordering, plus its bounding box.
+#[derive(Clone, Debug)]
+pub struct ClusterNode {
+    pub start: usize,
+    pub end: usize,
+    pub bbox: BBox,
+}
+
+impl ClusterNode {
+    pub fn size(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// A perfect binary cluster tree over a point set.
+///
+/// Nodes are stored in heap order: level `l` occupies indices
+/// `[2^l - 1, 2^(l+1) - 1)`, so each level is a contiguous slice; the
+/// children of node `i` are `2i+1` and `2i+2`.
+#[derive(Clone, Debug)]
+pub struct ClusterTree {
+    /// The clustered points (owned).
+    pub points: PointSet,
+    /// `perm[pos]` = original index of the point at permuted position `pos`.
+    pub perm: Vec<usize>,
+    /// Inverse permutation: `iperm[orig] = pos`.
+    pub iperm: Vec<usize>,
+    /// Depth of the tree; leaves live at level `depth` (root = level 0).
+    pub depth: usize,
+    /// Heap-ordered nodes; length `2^(depth+1) - 1`.
+    pub nodes: Vec<ClusterNode>,
+}
+
+impl ClusterTree {
+    /// Build a cluster tree with leaf sizes `<= leaf_size` (and as close to
+    /// it as a perfect tree allows).
+    pub fn build(points: PointSet, leaf_size: usize) -> Self {
+        Self::build_with_min_leaf(points, leaf_size, 1)
+    }
+
+    /// Build with leaf sizes in `[min_leaf, leaf_size]` where possible:
+    /// the depth is reduced if median splitting would produce leaves
+    /// smaller than `min_leaf` (needed when the basis rank k requires
+    /// m_pad >= k, e.g. for orthogonalization/compression).
+    pub fn build_with_min_leaf(points: PointSet, leaf_size: usize, min_leaf: usize) -> Self {
+        assert!(leaf_size >= 1);
+        let n = points.len();
+        assert!(n >= 1, "cannot cluster an empty point set");
+        // Smallest depth such that ceil(n / 2^depth) <= leaf_size...
+        let mut depth = 0usize;
+        while n.div_ceil(1 << depth) > leaf_size {
+            depth += 1;
+        }
+        // ...then back off while the smallest leaf (floor) would be below
+        // min_leaf (balanced splits keep all leaves within 1 of n/2^depth).
+        while depth > 0 && (n >> depth) < min_leaf {
+            depth -= 1;
+        }
+        let mut perm: Vec<usize> = (0..n).collect();
+        let node_count = (1usize << (depth + 1)) - 1;
+        // Temporary ranges; bboxes filled after splitting.
+        let mut ranges = vec![(0usize, 0usize); node_count];
+        ranges[0] = (0, n);
+
+        // Split level by level: sort the node's index range along the
+        // longest bbox axis and cut at the midpoint (left gets the ceil).
+        for l in 0..depth {
+            for j in 0..(1usize << l) {
+                let id = level_offset(l) + j;
+                let (start, end) = ranges[id];
+                let idx = &mut perm[start..end];
+                let bbox = BBox::of(&points, idx);
+                let axis = bbox.longest_axis();
+                idx.sort_by(|&a, &b| {
+                    points.coords[axis][a]
+                        .partial_cmp(&points.coords[axis][b])
+                        .unwrap()
+                });
+                let mid = start + (end - start).div_ceil(2);
+                ranges[2 * id + 1] = (start, mid);
+                ranges[2 * id + 2] = (mid, end);
+            }
+        }
+
+        let mut nodes = Vec::with_capacity(node_count);
+        for (id, &(start, end)) in ranges.iter().enumerate() {
+            assert!(end > start, "empty cluster node {id}: leaf_size too small for a perfect tree");
+            let bbox = BBox::of(&points, &perm[start..end]);
+            nodes.push(ClusterNode { start, end, bbox });
+        }
+        let mut iperm = vec![0usize; n];
+        for (pos, &orig) in perm.iter().enumerate() {
+            iperm[orig] = pos;
+        }
+        ClusterTree { points, perm, iperm, depth, nodes }
+    }
+
+    /// Number of levels (= depth + 1).
+    pub fn num_levels(&self) -> usize {
+        self.depth + 1
+    }
+
+    /// Number of nodes at level `l`.
+    pub fn nodes_at(&self, l: usize) -> usize {
+        1usize << l
+    }
+
+    /// The nodes of level `l` as a contiguous slice.
+    pub fn level(&self, l: usize) -> &[ClusterNode] {
+        let off = level_offset(l);
+        &self.nodes[off..off + (1 << l)]
+    }
+
+    /// Node `j` of level `l`.
+    pub fn node(&self, l: usize, j: usize) -> &ClusterNode {
+        &self.nodes[level_offset(l) + j]
+    }
+
+    /// Leaf nodes (level `depth`).
+    pub fn leaves(&self) -> &[ClusterNode] {
+        self.level(self.depth)
+    }
+
+    /// Maximum leaf size (the padded leaf dimension m_pad used for batching).
+    pub fn max_leaf_size(&self) -> usize {
+        self.leaves().iter().map(|n| n.size()).max().unwrap()
+    }
+
+    /// Total number of points.
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Original point indices of node (l, j).
+    pub fn node_indices(&self, l: usize, j: usize) -> &[usize] {
+        let n = self.node(l, j);
+        &self.perm[n.start..n.end]
+    }
+}
+
+/// First heap index of level `l`.
+#[inline]
+pub fn level_offset(l: usize) -> usize {
+    (1usize << l) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PointSet;
+
+    #[test]
+    fn perfect_tree_shape() {
+        let ps = PointSet::grid_2d(8, 1.0); // 64 points
+        let t = ClusterTree::build(ps, 8);
+        assert_eq!(t.depth, 3); // 64/8 = 8 leaves
+        assert_eq!(t.level(3).len(), 8);
+        assert_eq!(t.nodes.len(), 15);
+        for leaf in t.leaves() {
+            assert_eq!(leaf.size(), 8);
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_sizes_balanced() {
+        let mut ps = PointSet::new(2);
+        for i in 0..37 {
+            ps.push(&[i as f64, (i * 7 % 11) as f64]);
+        }
+        let t = ClusterTree::build(ps, 5);
+        // depth: ceil(37/2^d) <= 5 -> d = 3 (37/8 = 4.6)
+        assert_eq!(t.depth, 3);
+        let sizes: Vec<usize> = t.leaves().iter().map(|n| n.size()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 37);
+        assert!(sizes.iter().all(|&s| (4..=5).contains(&s)), "{sizes:?}");
+    }
+
+    #[test]
+    fn children_partition_parent() {
+        let ps = PointSet::grid_2d(8, 1.0);
+        let t = ClusterTree::build(ps, 8);
+        for l in 0..t.depth {
+            for j in 0..t.nodes_at(l) {
+                let p = t.node(l, j);
+                let c1 = t.node(l + 1, 2 * j);
+                let c2 = t.node(l + 1, 2 * j + 1);
+                assert_eq!(p.start, c1.start);
+                assert_eq!(c1.end, c2.start);
+                assert_eq!(c2.end, p.end);
+            }
+        }
+    }
+
+    #[test]
+    fn perm_is_permutation() {
+        let ps = PointSet::grid_2d(5, 1.0); // 25 points
+        let t = ClusterTree::build(ps, 4);
+        let mut seen = vec![false; 25];
+        for &p in &t.perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        for (orig, &pos) in t.iperm.iter().enumerate() {
+            assert_eq!(t.perm[pos], orig);
+        }
+    }
+
+    #[test]
+    fn clusters_are_spatially_tight() {
+        // After median splits, sibling boxes should not overlap much along
+        // the split axis: check the root split separates x or y cleanly.
+        let ps = PointSet::grid_2d(16, 1.0);
+        let t = ClusterTree::build(ps, 32);
+        let c1 = t.node(1, 0);
+        let c2 = t.node(1, 1);
+        let axis = t.node(0, 0).bbox.longest_axis();
+        assert!(c1.bbox.hi[axis] <= c2.bbox.lo[axis] + 1e-12);
+    }
+
+    #[test]
+    fn single_node_tree() {
+        let ps = PointSet::grid_2d(2, 1.0); // 4 points
+        let t = ClusterTree::build(ps, 8);
+        assert_eq!(t.depth, 0);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.node(0, 0).size(), 4);
+    }
+
+    #[test]
+    fn max_leaf_size_bound() {
+        for n in [10usize, 33, 64, 100] {
+            let mut ps = PointSet::new(1);
+            for i in 0..n {
+                ps.push(&[i as f64]);
+            }
+            let t = ClusterTree::build(ps, 7);
+            assert!(t.max_leaf_size() <= 7);
+        }
+    }
+}

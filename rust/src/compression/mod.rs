@@ -1,0 +1,44 @@
+//! Algebraic H^2 matrix compression (§5).
+//!
+//! Pipeline (exactly the paper's):
+//! 1. [`orthogonalize`] — upsweep QR pass making both basis trees
+//!    orthonormal (exact; coupling blocks absorb the R factors).
+//! 2. [`compress`] —
+//!    a. *downsweep* building, per node, the R factor Z of the weight
+//!       matrix B (Eqs. 1–4): QR of small stacks of coupling/transfer
+//!       blocks, seeded by the parent's Z;
+//!    b. *truncation upsweep*: SVD of the reweighed bases (leaf: U·Zᵀ,
+//!       inner: stacked projected transfers), keeping singular values above
+//!       τ·σ_ref and producing the new nested basis and the projection
+//!       maps P = U'ᵀU;
+//!    c. *projection*: S' = P_t S P_sᵀ (batched GEMMs).
+//!
+//! All stages are batched per level, mirroring the paper's use of KBLAS
+//! batched QR/SVD and MAGMA batched GEMM.
+
+pub mod orthogonalize;
+pub mod truncate;
+
+pub use orthogonalize::{orthogonalize, orthogonalize_logged, tree_is_orthogonal};
+pub use truncate::{compress, compress_full, compress_full_logged, compress_logged, CompressionStats};
+
+/// Per-level wall-time log of the compression pipeline's phases. The
+/// distributed scheduler ([`crate::dist::compress`]) replays this log in
+/// virtual time: levels at or below the C-level execute concurrently on all
+/// ranks (cost / P each), levels above it serialize on the master.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseLog {
+    /// (phase name, tree level, seconds)
+    pub entries: Vec<(&'static str, usize, f64)>,
+}
+
+impl PhaseLog {
+    pub fn push(&mut self, phase: &'static str, level: usize, secs: f64) {
+        self.entries.push((phase, level, secs));
+    }
+
+    /// Total seconds across phases matching `pred`.
+    pub fn total<F: Fn(&str) -> bool>(&self, pred: F) -> f64 {
+        self.entries.iter().filter(|(n, _, _)| pred(n)).map(|(_, _, t)| t).sum()
+    }
+}

@@ -1,0 +1,238 @@
+//! Basis orthogonalization (§5.2 end): an upsweep QR pass through each
+//! basis tree. Leaf bases are QR-factorized; at inner levels the stacked
+//! child products [R_c1·E_c1; R_c2·E_c2] are QR-factorized, their Q halves
+//! become the new transfer matrices and R propagates up. Coupling blocks
+//! absorb the R factors (S ← R_t^U · S · R_s^Vᵀ), so the matrix is
+//! unchanged to machine precision.
+
+use super::PhaseLog;
+use crate::backend::{contiguous_offsets, BatchRef, ComputeBackend, GemmDims};
+use crate::metrics::Metrics;
+use crate::tree::{BasisTree, H2Matrix};
+use crate::util::Timer;
+
+/// R factors produced per level: `r[l]` holds 2^l blocks of k_l × k_l.
+pub type LevelR = Vec<Vec<f64>>;
+
+/// Orthogonalize one basis tree in place; returns the per-level R factors.
+pub fn orthogonalize_tree(
+    tree: &mut BasisTree,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> LevelR {
+    orthogonalize_tree_logged(tree, backend, metrics, &mut PhaseLog::default())
+}
+
+/// [`orthogonalize_tree`] with per-level phase timing.
+pub fn orthogonalize_tree_logged(
+    tree: &mut BasisTree,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> LevelR {
+    let depth = tree.depth;
+    let mut r: LevelR = vec![Vec::new(); depth + 1];
+
+    // Leaf QR.
+    let k_leaf = tree.ranks[depth];
+    let m_pad = tree.leaf_dim;
+    assert!(
+        m_pad >= k_leaf,
+        "orthogonalization requires leaf_size >= rank (got m_pad={m_pad} < k={k_leaf})"
+    );
+    let leaves = tree.num_leaves();
+    let t = Timer::start();
+    let mut q = vec![0.0; leaves * m_pad * k_leaf];
+    let mut r_leaf = vec![0.0; leaves * k_leaf * k_leaf];
+    backend.batched_qr(leaves, m_pad, k_leaf, &tree.leaf_bases, &mut q, &mut r_leaf, metrics);
+    tree.leaf_bases.copy_from_slice(&q);
+    r[depth] = r_leaf;
+    log.push("orth_leaf_qr", depth, t.elapsed());
+
+    // Inner levels, children l+1 -> parents l.
+    for l in (0..depth).rev() {
+        let t = Timer::start();
+        let k_c = tree.ranks[l + 1];
+        let k_l = tree.ranks[l];
+        assert!(2 * k_c >= k_l, "stacked transfer QR needs 2*k_child >= k_parent");
+        let nb_parent = 1usize << l;
+        let nb_child = 1usize << (l + 1);
+        // stack[i] = [R_{2i} E_{2i}; R_{2i+1} E_{2i+1}]  (2k_c × k_l)
+        let mut stack = vec![0.0; nb_parent * 2 * k_c * k_l];
+        let r_child = &r[l + 1];
+        let a_off = contiguous_offsets(nb_child, k_c * k_c);
+        let b_off = contiguous_offsets(nb_child, k_c * k_l);
+        let c_off: Vec<usize> =
+            (0..nb_child).map(|c| (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l).collect();
+        backend.batched_gemm(
+            GemmDims { nb: nb_child, m: k_c, k: k_c, n: k_l, trans_a: false, trans_b: false, accumulate: false },
+            BatchRef { data: r_child, offsets: &a_off },
+            BatchRef { data: &tree.transfers[l + 1], offsets: &b_off },
+            &mut stack,
+            &c_off,
+            metrics,
+        );
+        let mut qs = vec![0.0; nb_parent * 2 * k_c * k_l];
+        let mut rs = vec![0.0; nb_parent * k_l * k_l];
+        backend.batched_qr(nb_parent, 2 * k_c, k_l, &stack, &mut qs, &mut rs, metrics);
+        // New transfers = Q halves.
+        for c in 0..nb_child {
+            let src = (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l;
+            tree.transfers[l + 1][c * k_c * k_l..(c + 1) * k_c * k_l]
+                .copy_from_slice(&qs[src..src + k_c * k_l]);
+        }
+        r[l] = rs;
+        log.push("orth_stack", l, t.elapsed());
+    }
+    r
+}
+
+/// Orthogonalize both bases of `a` and absorb the R factors into the
+/// coupling blocks. The represented matrix is unchanged.
+pub fn orthogonalize(a: &mut H2Matrix, backend: &dyn ComputeBackend, metrics: &mut Metrics) {
+    orthogonalize_logged(a, backend, metrics, &mut PhaseLog::default())
+}
+
+/// [`orthogonalize`] with per-level phase timing.
+pub fn orthogonalize_logged(
+    a: &mut H2Matrix,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) {
+    let r_u = orthogonalize_tree_logged(&mut a.u, backend, metrics, log);
+    let r_v = orthogonalize_tree_logged(&mut a.v, backend, metrics, log);
+
+    // S_ts <- R^U_t · S_ts · (R^V_s)^T, level by level.
+    for l in 0..a.coupling.len() {
+        let t = Timer::start();
+        let nb = a.coupling[l].num_blocks();
+        if nb == 0 {
+            continue;
+        }
+        let k = a.rank(l);
+        let pairs = a.coupling[l].pairs.clone();
+        let t_off: Vec<usize> = pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
+        let s_off: Vec<usize> = pairs.iter().map(|&(_, s)| s as usize * k * k).collect();
+        let blk_off = contiguous_offsets(nb, k * k);
+        let mut tmp = vec![0.0; nb * k * k];
+        backend.batched_gemm(
+            GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: false, accumulate: false },
+            BatchRef { data: &r_u[l], offsets: &t_off },
+            BatchRef { data: &a.coupling[l].data, offsets: &blk_off },
+            &mut tmp,
+            &blk_off,
+            metrics,
+        );
+        backend.batched_gemm(
+            GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: true, accumulate: false },
+            BatchRef { data: &tmp, offsets: &blk_off },
+            BatchRef { data: &r_v[l], offsets: &s_off },
+            &mut a.coupling[l].data,
+            &blk_off,
+            metrics,
+        );
+        log.push("orth_project", l, t.elapsed());
+    }
+}
+
+/// Test helper: check every explicit basis of the tree has orthonormal
+/// columns (leaf level and all inner levels), to tolerance `tol`.
+/// All-zero columns are accepted: rank unification after compression pads
+/// the narrower of U/V with zero columns (see `truncate::pad_basis`).
+pub fn tree_is_orthogonal(tree: &BasisTree, tol: f64) -> bool {
+    for l in (0..=tree.depth).rev() {
+        let k = tree.ranks[l];
+        for j in 0..(1usize << l) {
+            let basis = tree.explicit_basis(l, j);
+            for p in 0..k {
+                for q in 0..k {
+                    let dot: f64 = basis.iter().map(|row| row[p] * row[q]).sum();
+                    let want = if p == q { 1.0 } else { 0.0 };
+                    let zero_col = p == q && dot.abs() <= tol; // padded column
+                    if (dot - want).abs() > tol && !zero_col {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, ExponentialKernel};
+    use crate::geometry::PointSet;
+    use crate::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+    use crate::util::testing::rel_err;
+    use crate::util::Prng;
+
+    fn sample_h2() -> H2Matrix {
+        let points = PointSet::grid_2d(16, 1.0); // N = 256
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 }; // k=9 <= m=16
+        build_h2(points, &kernel, &cfg)
+    }
+
+    fn matvec_of(a: &H2Matrix, x: &[f64]) -> Vec<f64> {
+        let plan = HgemvPlan::new(a, 1);
+        let mut ws = HgemvWorkspace::new(a, 1);
+        let mut y = vec![0.0; a.n()];
+        let mut mt = Metrics::new();
+        hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut mt);
+        y
+    }
+
+    #[test]
+    fn bases_become_orthonormal() {
+        let mut a = sample_h2();
+        assert!(!tree_is_orthogonal(&a.u, 1e-8), "Chebyshev basis should not start orthogonal");
+        let mut mt = Metrics::new();
+        orthogonalize(&mut a, &NativeBackend, &mut mt);
+        assert!(tree_is_orthogonal(&a.u, 1e-8));
+        assert!(tree_is_orthogonal(&a.v, 1e-8));
+    }
+
+    #[test]
+    fn matvec_invariant_under_orthogonalization() {
+        let mut a = sample_h2();
+        let n = a.n();
+        let mut rng = Prng::new(50);
+        let x = rng.normal_vec(n);
+        let y_before = matvec_of(&a, &x);
+        let mut mt = Metrics::new();
+        orthogonalize(&mut a, &NativeBackend, &mut mt);
+        let y_after = matvec_of(&a, &x);
+        let err = rel_err(&y_after, &y_before);
+        assert!(err < 1e-11, "orthogonalization changed the matrix: {err}");
+    }
+
+    #[test]
+    fn orthogonalization_idempotent_in_effect() {
+        // A second orthogonalization must keep the matrix unchanged and the
+        // bases orthonormal (R factors ≈ identity up to signs).
+        let mut a = sample_h2();
+        let mut mt = Metrics::new();
+        orthogonalize(&mut a, &NativeBackend, &mut mt);
+        let mut rng = Prng::new(51);
+        let x = rng.normal_vec(a.n());
+        let y1 = matvec_of(&a, &x);
+        orthogonalize(&mut a, &NativeBackend, &mut mt);
+        let y2 = matvec_of(&a, &x);
+        assert!(rel_err(&y2, &y1) < 1e-11);
+        assert!(tree_is_orthogonal(&a.u, 1e-8));
+    }
+
+    #[test]
+    fn memory_unchanged_by_orthogonalization() {
+        let mut a = sample_h2();
+        let before = a.memory_words();
+        let mut mt = Metrics::new();
+        orthogonalize(&mut a, &NativeBackend, &mut mt);
+        assert_eq!(a.memory_words(), before);
+    }
+}

@@ -1,0 +1,562 @@
+//! Basis-generation downsweep + truncation upsweep + coupling projection
+//! (§5.1, §5.2). Precondition: both basis trees orthonormal (run
+//! [`super::orthogonalize`] first; [`compress_full`] does both).
+
+use crate::backend::{contiguous_offsets, BatchRef, ComputeBackend, GemmDims};
+use super::PhaseLog;
+use crate::metrics::Metrics;
+use crate::tree::{BasisTree, H2Matrix};
+use crate::util::Timer;
+
+/// Outcome of a compression: rank and memory before/after.
+#[derive(Clone, Debug)]
+pub struct CompressionStats {
+    pub old_ranks: Vec<usize>,
+    pub new_ranks: Vec<usize>,
+    /// Low-rank memory (f64 words) before/after.
+    pub pre_words: usize,
+    pub post_words: usize,
+    /// Reference singular value used for the relative threshold.
+    pub sigma_ref: f64,
+}
+
+impl CompressionStats {
+    /// The paper's Fig. 11 memory-reduction factor.
+    pub fn ratio(&self) -> f64 {
+        self.pre_words as f64 / self.post_words.max(1) as f64
+    }
+}
+
+/// Per-level per-node square factors (Z of the weight QR, or projection P).
+type LevelBlocks = Vec<Vec<f64>>;
+
+/// Downsweep of §5.1: compute, for every node of the row (or column) basis
+/// tree, the R factor `Z_t` of the weight matrix B_t, by QR of the stack
+/// [Z_parent·Eᵀ ; S blocks of the node's row/column] (Eq. 4).
+fn weight_downsweep(
+    a: &H2Matrix,
+    for_rows: bool,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> LevelBlocks {
+    let depth = a.depth();
+    let tree = if for_rows { &a.u } else { &a.v };
+    let mut z: LevelBlocks = vec![Vec::new(); depth + 1];
+
+    for l in 0..=depth {
+        let timer = Timer::start();
+        let k_l = a.rank(l);
+        let nodes = 1usize << l;
+        let k_par = if l > 0 { a.rank(l - 1) } else { 0 };
+        // Blocks per node in this level's block row/column.
+        let cl = &a.coupling[l];
+        let mut counts = vec![0usize; nodes];
+        for &(t, s) in &cl.pairs {
+            let owner = if for_rows { t } else { s } as usize;
+            counts[owner] += 1;
+        }
+        let max_b = counts.iter().copied().max().unwrap_or(0);
+        let parent_rows = if l > 0 { k_par } else { 0 };
+        let stack_rows = parent_rows + max_b * k_l;
+        if stack_rows == 0 {
+            // No blocks anywhere at the root level: zero weight.
+            z[l] = vec![0.0; nodes * k_l * k_l];
+            continue;
+        }
+        // QR needs rows >= cols: pad with zero rows if needed.
+        let stack_rows = stack_rows.max(k_l);
+        let mut stack = vec![0.0; nodes * stack_rows * k_l];
+
+        // Parent contribution: Z_par[t/2] · E_tᵀ into the first k_par rows.
+        if l > 0 {
+            let a_off: Vec<usize> = (0..nodes).map(|t| (t / 2) * k_par * k_par).collect();
+            let b_off = contiguous_offsets(nodes, k_l * k_par);
+            let c_off: Vec<usize> = (0..nodes).map(|t| t * stack_rows * k_l).collect();
+            backend.batched_gemm(
+                GemmDims { nb: nodes, m: k_par, k: k_par, n: k_l, trans_a: false, trans_b: true, accumulate: false },
+                BatchRef { data: &z[l - 1], offsets: &a_off },
+                BatchRef { data: &tree.transfers[l], offsets: &b_off },
+                &mut stack,
+                &c_off,
+                metrics,
+            );
+        }
+
+        // Coupling contributions (marshaled copies; S transposed for the
+        // row tree — Eq. 4 stacks S_ijᵀ — and direct for the column tree).
+        let mut cursor = vec![0usize; nodes];
+        for (p, &(t, s)) in cl.pairs.iter().enumerate() {
+            let owner = if for_rows { t } else { s } as usize;
+            let row0 = parent_rows + cursor[owner] * k_l;
+            cursor[owner] += 1;
+            let blk = cl.block(p, k_l);
+            let dst = &mut stack[owner * stack_rows * k_l + row0 * k_l..];
+            if for_rows {
+                for i in 0..k_l {
+                    for j in 0..k_l {
+                        dst[i * k_l + j] = blk[j * k_l + i];
+                    }
+                }
+            } else {
+                dst[..k_l * k_l].copy_from_slice(blk);
+            }
+        }
+
+        let mut r = vec![0.0; nodes * k_l * k_l];
+        backend.batched_qr_r(nodes, stack_rows, k_l, &stack, &mut r, metrics);
+        z[l] = r;
+        log.push("weight_qr", l, timer.elapsed());
+    }
+    z
+}
+
+/// Result of truncating one basis tree.
+struct TruncatedTree {
+    basis: BasisTree,
+    /// Projection maps P_t = U'ᵀU per level (k'_l × k_l per node).
+    p: LevelBlocks,
+    new_ranks: Vec<usize>,
+}
+
+/// Truncation upsweep of §5.2: SVD the reweighed bases level by level,
+/// keep singular values > τ·σ_ref, build the new nested basis and P maps.
+fn truncate_tree(
+    a: &H2Matrix,
+    for_rows: bool,
+    z: &LevelBlocks,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> TruncatedTree {
+    let timer = Timer::start();
+    let depth = a.depth();
+    let tree = if for_rows { &a.u } else { &a.v };
+    let m_pad = tree.leaf_dim;
+    let leaves = tree.num_leaves();
+    let k_leaf = tree.ranks[depth];
+
+    // --- Leaf level: M_t = U_t · Z_tᵀ, SVD, pick rank. ---
+    let mut m_buf = vec![0.0; leaves * m_pad * k_leaf];
+    {
+        let a_off = contiguous_offsets(leaves, m_pad * k_leaf);
+        let z_off = contiguous_offsets(leaves, k_leaf * k_leaf);
+        backend.batched_gemm(
+            GemmDims { nb: leaves, m: m_pad, k: k_leaf, n: k_leaf, trans_a: false, trans_b: true, accumulate: false },
+            BatchRef { data: &tree.leaf_bases, offsets: &a_off },
+            BatchRef { data: &z[depth], offsets: &z_off },
+            &mut m_buf,
+            &a_off,
+            metrics,
+        );
+    }
+    let mut u_svd = vec![0.0; leaves * m_pad * k_leaf];
+    let mut s_svd = vec![0.0; leaves * k_leaf];
+    let mut v_svd = vec![0.0; leaves * k_leaf * k_leaf];
+    backend.batched_svd(leaves, m_pad, k_leaf, &m_buf, &mut u_svd, &mut s_svd, &mut v_svd, metrics);
+
+    let sigma_ref = s_svd.iter().cloned().fold(0.0_f64, f64::max).max(f64::MIN_POSITIVE);
+    let abs_tol = tau * sigma_ref;
+    let rank_of = |s: &[f64]| s.iter().take_while(|&&x| x > abs_tol).count();
+    let k_new_leaf = (0..leaves)
+        .map(|i| rank_of(&s_svd[i * k_leaf..(i + 1) * k_leaf]))
+        .max()
+        .unwrap()
+        .max(1);
+
+    let mut new_ranks = vec![0usize; depth + 1];
+    new_ranks[depth] = k_new_leaf;
+
+    // New leaf bases (first k' columns of each SVD U) and P = U'ᵀ U.
+    let leaf_sizes = tree.leaf_sizes.clone();
+    let mut p: LevelBlocks = vec![Vec::new(); depth + 1];
+    let mut new_leaf_bases = vec![0.0; leaves * m_pad * k_new_leaf];
+    for j in 0..leaves {
+        for i in 0..m_pad {
+            for c in 0..k_new_leaf {
+                new_leaf_bases[j * m_pad * k_new_leaf + i * k_new_leaf + c] =
+                    u_svd[j * m_pad * k_leaf + i * k_leaf + c];
+            }
+        }
+    }
+    log.push("trunc_svd", depth, timer.elapsed());
+    let timer = Timer::start();
+    {
+        let mut pl = vec![0.0; leaves * k_new_leaf * k_leaf];
+        let a_off = contiguous_offsets(leaves, m_pad * k_new_leaf);
+        let b_off = contiguous_offsets(leaves, m_pad * k_leaf);
+        let c_off = contiguous_offsets(leaves, k_new_leaf * k_leaf);
+        backend.batched_gemm(
+            GemmDims { nb: leaves, m: k_new_leaf, k: m_pad, n: k_leaf, trans_a: true, trans_b: false, accumulate: false },
+            BatchRef { data: &new_leaf_bases, offsets: &a_off },
+            BatchRef { data: &tree.leaf_bases, offsets: &b_off },
+            &mut pl,
+            &c_off,
+            metrics,
+        );
+        p[depth] = pl;
+    }
+    log.push("trunc_p", depth, timer.elapsed());
+
+    // --- Inner levels (children l -> parents l-1). ---
+    // Stage per level: tmp1 = E_c · Z_pᵀ, tmp2 = P_c · tmp1, SVD of the
+    // stacked tmp2 pair, split E', accumulate P_p = Σ E'ᵀ (P_c E_c).
+    let mut new_transfers: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    for l in (1..=depth).rev() {
+        let timer = Timer::start();
+        let k_l = tree.ranks[l];
+        let k_par = tree.ranks[l - 1];
+        let k_new_c = new_ranks[l];
+        let nodes_c = 1usize << l;
+        let nodes_p = 1usize << (l - 1);
+
+        // tmp1_c = E_c · Z_parᵀ  (k_l × k_par)
+        let mut tmp1 = vec![0.0; nodes_c * k_l * k_par];
+        let e_off = contiguous_offsets(nodes_c, k_l * k_par);
+        let zoff: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_par * k_par).collect();
+        backend.batched_gemm(
+            GemmDims { nb: nodes_c, m: k_l, k: k_par, n: k_par, trans_a: false, trans_b: true, accumulate: false },
+            BatchRef { data: &tree.transfers[l], offsets: &e_off },
+            BatchRef { data: &z[l - 1], offsets: &zoff },
+            &mut tmp1,
+            &e_off,
+            metrics,
+        );
+        // tmp2_c = P_c · tmp1_c  (k'_l × k_par), written into SVD stacks.
+        let stack_rows = (2 * k_new_c).max(k_par); // zero row padding for wide stacks
+        let mut stack = vec![0.0; nodes_p * stack_rows * k_par];
+        let p_off = contiguous_offsets(nodes_c, k_new_c * k_l);
+        let stack_off: Vec<usize> = (0..nodes_c)
+            .map(|c| (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par)
+            .collect();
+        backend.batched_gemm(
+            GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
+            BatchRef { data: &p[l], offsets: &p_off },
+            BatchRef { data: &tmp1, offsets: &e_off },
+            &mut stack,
+            &stack_off,
+            metrics,
+        );
+
+        let mut us = vec![0.0; nodes_p * stack_rows * k_par];
+        let mut ss = vec![0.0; nodes_p * k_par];
+        let mut vs = vec![0.0; nodes_p * k_par * k_par];
+        backend.batched_svd(nodes_p, stack_rows, k_par, &stack, &mut us, &mut ss, &mut vs, metrics);
+        let k_new_p = (0..nodes_p)
+            .map(|i| rank_of(&ss[i * k_par..(i + 1) * k_par]))
+            .max()
+            .unwrap()
+            .max(1)
+            .min(2 * k_new_c); // cannot exceed the stack's actual row count
+        new_ranks[l - 1] = k_new_p;
+
+        // New transfers E'_c: rows of the left factor halves.
+        let mut etr = vec![0.0; nodes_c * k_new_c * k_new_p];
+        for c in 0..nodes_c {
+            let base = (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par;
+            for i in 0..k_new_c {
+                for q in 0..k_new_p {
+                    etr[c * k_new_c * k_new_p + i * k_new_p + q] = us[base + i * k_par + q];
+                }
+            }
+        }
+        new_transfers[l] = etr;
+
+        // P_p = Σ_c E'_cᵀ · (P_c · E_c)
+        let mut pce = vec![0.0; nodes_c * k_new_c * k_par];
+        backend.batched_gemm(
+            GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
+            BatchRef { data: &p[l], offsets: &p_off },
+            BatchRef { data: &tree.transfers[l], offsets: &e_off },
+            &mut pce,
+            &contiguous_offsets(nodes_c, k_new_c * k_par),
+            metrics,
+        );
+        let mut pp = vec![0.0; nodes_p * k_new_p * k_par];
+        let ep_off = contiguous_offsets(nodes_c, k_new_c * k_new_p);
+        let pp_off: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_new_p * k_par).collect();
+        backend.batched_gemm(
+            GemmDims { nb: nodes_c, m: k_new_p, k: k_new_c, n: k_par, trans_a: true, trans_b: false, accumulate: true },
+            BatchRef { data: &new_transfers[l], offsets: &ep_off },
+            BatchRef { data: &pce, offsets: &contiguous_offsets(nodes_c, k_new_c * k_par) },
+            &mut pp,
+            &pp_off,
+            metrics,
+        );
+        p[l - 1] = pp;
+        log.push("trunc_svd", l - 1, timer.elapsed());
+    }
+
+    // Assemble the new basis tree.
+    let mut basis = BasisTree::zeros(depth, new_ranks.clone(), m_pad, leaf_sizes);
+    basis.leaf_bases = new_leaf_bases;
+    for l in 1..=depth {
+        basis.transfers[l] = std::mem::take(&mut new_transfers[l]);
+    }
+    TruncatedTree { basis, p, new_ranks }
+}
+
+/// Compress `a` (orthogonal bases required) to relative accuracy τ.
+/// Returns the compressed matrix and stats; `a` is unchanged.
+pub fn compress(
+    a: &H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (H2Matrix, CompressionStats) {
+    compress_logged(a, tau, backend, metrics, &mut PhaseLog::default())
+}
+
+/// [`compress`] with per-level phase timing.
+pub fn compress_logged(
+    a: &H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> (H2Matrix, CompressionStats) {
+    let depth = a.depth();
+    let z_u = weight_downsweep(a, true, backend, metrics, log);
+    let z_v = weight_downsweep(a, false, backend, metrics, log);
+    let tu = truncate_tree(a, true, &z_u, tau, backend, metrics, log);
+    let tv = truncate_tree(a, false, &z_v, tau, backend, metrics, log);
+
+    // Project couplings: S' = P^U_t · S · (P^V_s)ᵀ.
+    let mut coupling = Vec::with_capacity(a.coupling.len());
+    for (l, cl) in a.coupling.iter().enumerate() {
+        let timer = Timer::start();
+        let k = a.rank(l);
+        let (ku, kv) = (tu.new_ranks[l], tv.new_ranks[l]);
+        // Uniform new rank per level is required by the fixed-shape batch
+        // design; use max(ku, kv) for both sides, zero-padding P maps.
+        let k_new = ku.max(kv);
+        let nb = cl.num_blocks();
+        let mut ncl =
+            crate::tree::CouplingLevel::from_pairs(cl.pairs.clone(), 1 << l, k_new);
+        if nb > 0 {
+            let pu = pad_p(&tu.p[l], 1 << l, ku, k_new, k);
+            let pv = pad_p(&tv.p[l], 1 << l, kv, k_new, k);
+            let t_off: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
+            let s_off: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize * k_new * k).collect();
+            let blk_off = contiguous_offsets(nb, k * k);
+            let mut tmp = vec![0.0; nb * k_new * k];
+            backend.batched_gemm(
+                GemmDims { nb, m: k_new, k, n: k, trans_a: false, trans_b: false, accumulate: false },
+                BatchRef { data: &pu, offsets: &t_off },
+                BatchRef { data: &cl.data, offsets: &blk_off },
+                &mut tmp,
+                &contiguous_offsets(nb, k_new * k),
+                metrics,
+            );
+            backend.batched_gemm(
+                GemmDims { nb, m: k_new, k, n: k_new, trans_a: false, trans_b: true, accumulate: false },
+                BatchRef { data: &tmp, offsets: &contiguous_offsets(nb, k_new * k) },
+                BatchRef { data: &pv, offsets: &s_off },
+                &mut ncl.data,
+                &contiguous_offsets(nb, k_new * k_new),
+                metrics,
+            );
+        }
+        coupling.push(ncl);
+        log.push("project", l, timer.elapsed());
+    }
+
+    // Unify U/V ranks per level (pad the narrower basis with zero columns).
+    let new_ranks: Vec<usize> =
+        (0..=depth).map(|l| tu.new_ranks[l].max(tv.new_ranks[l])).collect();
+    let u = pad_basis(&tu.basis, &new_ranks);
+    let v = pad_basis(&tv.basis, &new_ranks);
+
+    let result = H2Matrix { tree: a.tree.clone(), u, v, coupling, dense: a.dense.clone() };
+    let stats = CompressionStats {
+        old_ranks: a.u.ranks.clone(),
+        new_ranks,
+        pre_words: a.low_rank_memory_words(),
+        post_words: result.low_rank_memory_words(),
+        sigma_ref: 0.0,
+    };
+    (result, stats)
+}
+
+/// Orthogonalize + compress in one call (the full §6.3 pipeline). Returns
+/// the compressed matrix and stats; `a` is left orthogonalized.
+pub fn compress_full(
+    a: &mut H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (H2Matrix, CompressionStats) {
+    super::orthogonalize(a, backend, metrics);
+    compress(a, tau, backend, metrics)
+}
+
+/// [`compress_full`] with per-level phase timing for both stages.
+pub fn compress_full_logged(
+    a: &mut H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> (H2Matrix, CompressionStats) {
+    super::orthogonalize::orthogonalize_logged(a, backend, metrics, log);
+    compress_logged(a, tau, backend, metrics, log)
+}
+
+/// Zero-pad per-node P maps from k_old_rows rows to k_new rows.
+fn pad_p(p: &[f64], nodes: usize, k_rows: usize, k_new: usize, k_cols: usize) -> Vec<f64> {
+    if k_rows == k_new {
+        return p.to_vec();
+    }
+    let mut out = vec![0.0; nodes * k_new * k_cols];
+    for j in 0..nodes {
+        for i in 0..k_rows {
+            out[j * k_new * k_cols + i * k_cols..j * k_new * k_cols + (i + 1) * k_cols]
+                .copy_from_slice(&p[j * k_rows * k_cols + i * k_cols..j * k_rows * k_cols + (i + 1) * k_cols]);
+        }
+    }
+    out
+}
+
+/// Zero-pad a basis tree's per-level ranks up to `ranks` (columns of leaf
+/// bases, rows+cols of transfers).
+fn pad_basis(tree: &BasisTree, ranks: &[usize]) -> BasisTree {
+    if tree.ranks == ranks {
+        return tree.clone();
+    }
+    let depth = tree.depth;
+    let mut out = BasisTree::zeros(depth, ranks.to_vec(), tree.leaf_dim, tree.leaf_sizes.clone());
+    // leaves: copy first old-k columns
+    let (ko, kn) = (tree.ranks[depth], ranks[depth]);
+    for j in 0..tree.num_leaves() {
+        for i in 0..tree.leaf_dim {
+            for c in 0..ko {
+                out.leaf_bases[j * tree.leaf_dim * kn + i * kn + c] =
+                    tree.leaf_bases[j * tree.leaf_dim * ko + i * ko + c];
+            }
+        }
+    }
+    for l in 1..=depth {
+        let (ro, co) = (tree.ranks[l], tree.ranks[l - 1]);
+        let (rn, cn) = (ranks[l], ranks[l - 1]);
+        for j in 0..(1usize << l) {
+            for i in 0..ro {
+                for c in 0..co {
+                    out.transfers[l][j * rn * cn + i * cn + c] =
+                        tree.transfers[l][j * ro * co + i * co + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::compression::orthogonalize::tree_is_orthogonal;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, dense_kernel_matrix, ExponentialKernel};
+    use crate::geometry::PointSet;
+    use crate::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+    use crate::util::testing::rel_err;
+    use crate::util::Prng;
+
+    fn sample_h2(g: usize) -> H2Matrix {
+        let points = PointSet::grid_2d(16, 1.0); // N = 256
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: g };
+        build_h2(points, &kernel, &cfg)
+    }
+
+    fn matvec_of(a: &H2Matrix, x: &[f64]) -> Vec<f64> {
+        let plan = HgemvPlan::new(a, 1);
+        let mut ws = HgemvWorkspace::new(a, 1);
+        let mut y = vec![0.0; a.n()];
+        let mut mt = Metrics::new();
+        hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut mt);
+        y
+    }
+
+    #[test]
+    fn compression_preserves_matvec_to_tau() {
+        let mut a = sample_h2(4); // k = 16 = m
+        let mut mt = Metrics::new();
+        let mut rng = Prng::new(60);
+        let x = rng.normal_vec(a.n());
+        let y_ref = matvec_of(&a, &x);
+        for tau in [1e-3, 1e-6] {
+            let mut b = a.clone();
+            let (c, stats) = compress_full(&mut b, tau, &NativeBackend, &mut mt);
+            let y = matvec_of(&c, &x);
+            let err = rel_err(&y, &y_ref);
+            // truncation error accumulates over ~depth levels
+            let budget = tau * 100.0;
+            assert!(err < budget, "tau={tau}: err={err} ratio={}", stats.ratio());
+        }
+        let _ = &mut a;
+    }
+
+    #[test]
+    fn compression_reduces_memory() {
+        let mut a = sample_h2(4);
+        let mut mt = Metrics::new();
+        let (c, stats) = compress_full(&mut a, 1e-3, &NativeBackend, &mut mt);
+        assert!(stats.post_words < stats.pre_words, "{stats:?}");
+        assert!(stats.ratio() > 1.3, "ratio {}", stats.ratio());
+        for l in 0..=c.depth() {
+            assert!(c.rank(l) <= a.rank(l));
+        }
+    }
+
+    #[test]
+    fn compressed_basis_is_orthogonal() {
+        let mut a = sample_h2(4);
+        let mut mt = Metrics::new();
+        let (c, _) = compress_full(&mut a, 1e-4, &NativeBackend, &mut mt);
+        assert!(tree_is_orthogonal(&c.u, 1e-8));
+        assert!(tree_is_orthogonal(&c.v, 1e-8));
+    }
+
+    #[test]
+    fn tighter_tau_keeps_more_rank() {
+        let mut a1 = sample_h2(4);
+        let mut a2 = a1.clone();
+        let mut mt = Metrics::new();
+        let (_, loose) = compress_full(&mut a1, 1e-2, &NativeBackend, &mut mt);
+        let (_, tight) = compress_full(&mut a2, 1e-8, &NativeBackend, &mut mt);
+        assert!(
+            loose.post_words <= tight.post_words,
+            "loose {} > tight {}",
+            loose.post_words,
+            tight.post_words
+        );
+    }
+
+    #[test]
+    fn compress_approximates_kernel_matrix() {
+        // End-to-end §6.3 workflow: Chebyshev build -> orthogonalize ->
+        // compress -> compare against the dense kernel matrix.
+        // g=5 -> k=25 requires leaf_size >= 25.
+        let points = PointSet::grid_2d(16, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 5 };
+        let mut a = build_h2(points, &kernel, &cfg);
+        let dense = dense_kernel_matrix(&a.tree, &ExponentialKernel { dim: 2, corr_len: 0.1 });
+        let mut mt = Metrics::new();
+        let (c, _) = compress_full(&mut a, 1e-6, &NativeBackend, &mut mt);
+        let err = rel_err(&c.to_dense_permuted().data, &dense.data);
+        // construction error (g=5) dominates the 1e-6 truncation
+        assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn dense_blocks_untouched() {
+        let mut a = sample_h2(4);
+        let before = a.dense.data.clone();
+        let mut mt = Metrics::new();
+        let (c, _) = compress_full(&mut a, 1e-3, &NativeBackend, &mut mt);
+        assert_eq!(c.dense.data, before);
+    }
+}

@@ -1,0 +1,85 @@
+//! Run configuration for H^2 construction and the distributed runtime.
+
+/// Parameters controlling H^2 construction (§2, §6.1).
+#[derive(Clone, Debug)]
+pub struct H2Config {
+    /// Target leaf (dense block) size m; the paper uses 64, we default to 32
+    /// on the CPU testbed.
+    pub leaf_size: usize,
+    /// Admissibility parameter η (paper: 0.9 in 2D, 0.95 in 3D).
+    pub eta: f64,
+    /// Chebyshev grid points per dimension g; rank k = g^dim.
+    pub cheb_grid: usize,
+}
+
+impl H2Config {
+    /// Paper-style 2D configuration scaled to the CPU testbed:
+    /// m=32, η=0.9, g=4 → k=16.
+    pub fn default_2d() -> Self {
+        H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 }
+    }
+
+    /// Paper-style 3D configuration: m=32, η=0.95, g=2 → k=8.
+    pub fn default_3d() -> Self {
+        H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 }
+    }
+
+    /// Rank produced by Chebyshev interpolation in `dim` dimensions.
+    pub fn rank(&self, dim: usize) -> usize {
+        self.cheb_grid.pow(dim as u32)
+    }
+}
+
+/// α-β network model for the simulated interconnect (see DESIGN.md
+/// "Substitutions"). Defaults approximate a per-GPU share of Summit's
+/// fat-tree: 5 µs latency, 25 GB/s bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency α in seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time β in seconds (1 / bandwidth).
+    pub beta: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel { alpha: 5e-6, beta: 1.0 / 25e9 }
+    }
+}
+
+impl NetworkModel {
+    /// Transfer time for a message of `bytes` bytes.
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+
+    /// An instantaneous network (for tests that want pure-compute virtual
+    /// time).
+    pub fn instant() -> Self {
+        NetworkModel { alpha: 0.0, beta: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_is_g_pow_dim() {
+        let c = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 };
+        assert_eq!(c.rank(2), 16);
+        assert_eq!(c.rank(3), 64);
+    }
+
+    #[test]
+    fn network_time_monotone_in_bytes() {
+        let n = NetworkModel::default();
+        assert!(n.time(1000) < n.time(10_000));
+        assert!(n.time(0) >= n.alpha);
+    }
+
+    #[test]
+    fn instant_network_is_free() {
+        assert_eq!(NetworkModel::instant().time(1 << 20), 0.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Chebyshev tensor-grid interpolation on cluster bounding boxes.
+//!
+//! Low-rank blocks are seeded as A_ts ≈ U_t S_ts V_sᵀ where U_t holds the
+//! tensor Lagrange-Chebyshev basis polynomials of cluster t's bounding box
+//! evaluated at t's points, and S_ts is the kernel evaluated on the two
+//! clusters' Chebyshev grids. Because degree-(g−1) polynomials are
+//! reproduced exactly by interpolation on g Chebyshev nodes, the transfer
+//! matrices (parent basis evaluated at child grid points) make the basis
+//! *exactly* nested — the property the upsweep/downsweep algorithms rely on.
+
+use crate::geometry::{BBox, MAX_DIM};
+
+/// Minimum half-width used when a bounding box degenerates along an axis
+/// (e.g. a grid line): keeps Lagrange denominators nonzero.
+const MIN_HALF_WIDTH: f64 = 1e-12;
+
+/// 1D Chebyshev nodes of the first kind on [-1, 1], g points.
+pub fn cheb_nodes_unit(g: usize) -> Vec<f64> {
+    (0..g)
+        .map(|i| ((2 * i + 1) as f64 * std::f64::consts::PI / (2 * g) as f64).cos())
+        .collect()
+}
+
+/// The tensor Chebyshev grid of a bounding box: g^dim points, stored as
+/// full MAX_DIM coordinates. Point index α enumerates dimension 0 fastest.
+pub fn cheb_grid(bbox: &BBox, g: usize) -> Vec<[f64; MAX_DIM]> {
+    let dim = bbox.dim;
+    let unit = cheb_nodes_unit(g);
+    // per-dimension mapped nodes
+    let mut nodes = vec![vec![0.0; g]; dim];
+    for d in 0..dim {
+        let c = 0.5 * (bbox.lo[d] + bbox.hi[d]);
+        let h = (0.5 * (bbox.hi[d] - bbox.lo[d])).max(MIN_HALF_WIDTH);
+        for (i, &u) in unit.iter().enumerate() {
+            nodes[d][i] = c + h * u;
+        }
+    }
+    let k = g.pow(dim as u32);
+    let mut grid = Vec::with_capacity(k);
+    for alpha in 0..k {
+        let mut p = [0.0; MAX_DIM];
+        let mut rem = alpha;
+        for d in 0..dim {
+            p[d] = nodes[d][rem % g];
+            rem /= g;
+        }
+        grid.push(p);
+    }
+    grid
+}
+
+/// Evaluator for the tensor Lagrange basis of a box's Chebyshev grid.
+pub struct ChebBasis {
+    dim: usize,
+    g: usize,
+    /// per-dimension node positions
+    nodes: Vec<Vec<f64>>,
+    /// per-dimension barycentric-style denominators: denom[d][j] =
+    /// prod_{i != j} (nodes[d][j] - nodes[d][i])
+    denom: Vec<Vec<f64>>,
+}
+
+impl ChebBasis {
+    pub fn new(bbox: &BBox, g: usize) -> Self {
+        let dim = bbox.dim;
+        let unit = cheb_nodes_unit(g);
+        let mut nodes = vec![vec![0.0; g]; dim];
+        for d in 0..dim {
+            let c = 0.5 * (bbox.lo[d] + bbox.hi[d]);
+            let h = (0.5 * (bbox.hi[d] - bbox.lo[d])).max(MIN_HALF_WIDTH);
+            for (i, &u) in unit.iter().enumerate() {
+                nodes[d][i] = c + h * u;
+            }
+        }
+        let mut denom = vec![vec![1.0; g]; dim];
+        for d in 0..dim {
+            for j in 0..g {
+                for i in 0..g {
+                    if i != j {
+                        denom[d][j] *= nodes[d][j] - nodes[d][i];
+                    }
+                }
+            }
+        }
+        ChebBasis { dim, g, nodes, denom }
+    }
+
+    /// Rank k = g^dim.
+    pub fn rank(&self) -> usize {
+        self.g.pow(self.dim as u32)
+    }
+
+    /// Evaluate all k tensor Lagrange polynomials at point x, writing into
+    /// `out` (len k, same α ordering as [`cheb_grid`]).
+    pub fn eval_all(&self, x: &[f64; MAX_DIM], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rank());
+        // 1D Lagrange values per dimension.
+        let g = self.g;
+        let mut l1 = vec![0.0; self.dim * g];
+        for d in 0..self.dim {
+            // full products (g is small: <= 8)
+            for j in 0..g {
+                let mut num = 1.0;
+                for i in 0..g {
+                    if i != j {
+                        num *= x[d] - self.nodes[d][i];
+                    }
+                }
+                l1[d * g + j] = num / self.denom[d][j];
+            }
+        }
+        for (alpha, o) in out.iter_mut().enumerate() {
+            let mut v = 1.0;
+            let mut rem = alpha;
+            for d in 0..self.dim {
+                v *= l1[d * g + rem % g];
+                rem /= g;
+            }
+            *o = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PointSet;
+
+    fn unit_box_2d() -> BBox {
+        let ps = PointSet::grid_2d(2, 1.0);
+        BBox::of(&ps, &[0, 1, 2, 3])
+    }
+
+    #[test]
+    fn nodes_in_interval_and_distinct() {
+        let nodes = cheb_nodes_unit(5);
+        for w in nodes.windows(2) {
+            assert!(w[0] > w[1]); // strictly decreasing
+        }
+        assert!(nodes.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn grid_size_is_g_pow_dim() {
+        let bb = unit_box_2d();
+        assert_eq!(cheb_grid(&bb, 3).len(), 9);
+        assert_eq!(ChebBasis::new(&bb, 3).rank(), 9);
+    }
+
+    #[test]
+    fn lagrange_cardinal_property() {
+        // L_alpha(grid point beta) = delta_{alpha beta}
+        let bb = unit_box_2d();
+        let g = 3;
+        let grid = cheb_grid(&bb, g);
+        let basis = ChebBasis::new(&bb, g);
+        let k = basis.rank();
+        let mut vals = vec![0.0; k];
+        for (beta, p) in grid.iter().enumerate() {
+            basis.eval_all(p, &mut vals);
+            for (alpha, &v) in vals.iter().enumerate() {
+                let want = if alpha == beta { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-10, "L_{alpha}(x_{beta}) = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_of_unity() {
+        // sum_alpha L_alpha(x) = 1 for any x (interpolation of constant 1).
+        let bb = unit_box_2d();
+        let basis = ChebBasis::new(&bb, 4);
+        let mut vals = vec![0.0; basis.rank()];
+        for &x in &[[0.3, 0.7, 0.0], [0.0, 0.0, 0.0], [0.95, 0.1, 0.0]] {
+            basis.eval_all(&x, &mut vals);
+            let s: f64 = vals.iter().sum();
+            assert!((s - 1.0).abs() < 1e-10, "sum = {s}");
+        }
+    }
+
+    #[test]
+    fn interpolation_reproduces_polynomials() {
+        // interpolating x^2*y on a g=3 grid must be exact (degree 2 < 3).
+        let bb = unit_box_2d();
+        let g = 3;
+        let grid = cheb_grid(&bb, g);
+        let basis = ChebBasis::new(&bb, g);
+        let f = |p: &[f64; 3]| p[0] * p[0] * p[1];
+        let coeffs: Vec<f64> = grid.iter().map(f).collect();
+        let mut vals = vec![0.0; basis.rank()];
+        let x = [0.37, 0.81, 0.0];
+        basis.eval_all(&x, &mut vals);
+        let approx: f64 = vals.iter().zip(&coeffs).map(|(l, c)| l * c).sum();
+        assert!((approx - f(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_box_does_not_blow_up() {
+        // all points on a line x=0.5: zero extent in dim 0.
+        let mut ps = PointSet::new(2);
+        ps.push(&[0.5, 0.0]);
+        ps.push(&[0.5, 1.0]);
+        let bb = BBox::of(&ps, &[0, 1]);
+        let basis = ChebBasis::new(&bb, 3);
+        let mut vals = vec![0.0; basis.rank()];
+        basis.eval_all(&[0.5, 0.25, 0.0], &mut vals);
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn interpolation_error_decreases_with_g() {
+        // exp(-r/l) on well-separated boxes: error should drop fast with g.
+        let ps_t = PointSet::grid_2d(8, 1.0);
+        let idx: Vec<usize> = (0..64).collect();
+        let bb_t = BBox::of(&ps_t, &idx);
+        let errs: Vec<f64> = [2usize, 4, 6]
+            .iter()
+            .map(|&g| {
+                let basis = ChebBasis::new(&bb_t, g);
+                let grid = cheb_grid(&bb_t, g);
+                // target kernel against a far point y0
+                let y0 = [5.0, 5.0, 0.0];
+                let f = |p: &[f64; 3]| {
+                    let dx = p[0] - y0[0];
+                    let dy = p[1] - y0[1];
+                    (-(dx * dx + dy * dy).sqrt() / 1.0).exp()
+                };
+                let coeffs: Vec<f64> = grid.iter().map(f).collect();
+                let mut vals = vec![0.0; basis.rank()];
+                let mut err = 0.0_f64;
+                for i in 0..64 {
+                    let x = ps_t.get(i);
+                    basis.eval_all(&x, &mut vals);
+                    let approx: f64 = vals.iter().zip(&coeffs).map(|(l, c)| l * c).sum();
+                    err = err.max((approx - f(&x)).abs());
+                }
+                err
+            })
+            .collect();
+        assert!(errs[1] < errs[0] * 0.5, "{errs:?}");
+        assert!(errs[2] < errs[1] * 0.5, "{errs:?}");
+    }
+}

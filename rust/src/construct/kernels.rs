@@ -1,0 +1,146 @@
+//! Kernel functions for the paper's test problems.
+
+use crate::geometry::MAX_DIM;
+
+/// A (symmetric or not) kernel function κ(x, y).
+pub trait Kernel {
+    /// Spatial dimension the kernel expects.
+    fn dim(&self) -> usize;
+    /// Evaluate κ(x, y). Coordinates beyond `dim()` are zero.
+    fn eval(&self, x: &[f64; MAX_DIM], y: &[f64; MAX_DIM]) -> f64;
+}
+
+/// The exponential covariance kernel exp(−r/ℓ) used by both §6.1 test sets
+/// (2D spatial statistics with ℓ = 0.1a, 3D Gaussian process with ℓ = 0.2a).
+#[derive(Clone, Copy, Debug)]
+pub struct ExponentialKernel {
+    pub dim: usize,
+    /// Correlation length ℓ.
+    pub corr_len: f64,
+}
+
+impl Kernel for ExponentialKernel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64; MAX_DIM], y: &[f64; MAX_DIM]) -> f64 {
+        let mut r2 = 0.0;
+        for d in 0..self.dim {
+            let diff = x[d] - y[d];
+            r2 += diff * diff;
+        }
+        (-r2.sqrt() / self.corr_len).exp()
+    }
+}
+
+/// Gaussian (squared-exponential) kernel exp(−r²/(2ℓ²)) — a second smooth
+/// kernel useful for exercising rank behaviour in tests and examples.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianKernel {
+    pub dim: usize,
+    pub corr_len: f64,
+}
+
+impl Kernel for GaussianKernel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64; MAX_DIM], y: &[f64; MAX_DIM]) -> f64 {
+        let mut r2 = 0.0;
+        for d in 0..self.dim {
+            let diff = x[d] - y[d];
+            r2 += diff * diff;
+        }
+        (-r2 / (2.0 * self.corr_len * self.corr_len)).exp()
+    }
+}
+
+/// The singular fractional-diffusion kernel
+/// K(x, y) = −2 a(x,y) / |y − x|^{2 + 2β} with a(x,y) = √κ(x)√κ(y)
+/// (§6.4, Eq. 11). The diagonal (x = y) is zero by construction of K.
+/// Diffusivity κ is supplied as a closure over coordinates.
+pub struct FractionalKernel<F: Fn(&[f64; MAX_DIM]) -> f64> {
+    pub dim: usize,
+    /// Fractional order β ∈ (0.5, 1).
+    pub beta: f64,
+    /// Pointwise diffusivity κ(x).
+    pub kappa: F,
+}
+
+impl<F: Fn(&[f64; MAX_DIM]) -> f64> Kernel for FractionalKernel<F> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64; MAX_DIM], y: &[f64; MAX_DIM]) -> f64 {
+        let mut r2 = 0.0;
+        for d in 0..self.dim {
+            let diff = x[d] - y[d];
+            r2 += diff * diff;
+        }
+        if r2 == 0.0 {
+            return 0.0; // K has zero diagonal (§6.4)
+        }
+        let a = ((self.kappa)(x) * (self.kappa)(y)).sqrt();
+        let exponent = 0.5 * (self.dim as f64 + 2.0 * self.beta);
+        -2.0 * a / r2.powf(exponent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_at_zero_distance_is_one() {
+        let k = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let p = [0.3, 0.4, 0.0];
+        assert_eq!(k.eval(&p, &p), 1.0);
+    }
+
+    #[test]
+    fn exponential_decays() {
+        let k = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let a = [0.0; 3];
+        let near = [0.05, 0.0, 0.0];
+        let far = [0.5, 0.0, 0.0];
+        assert!(k.eval(&a, &near) > k.eval(&a, &far));
+        assert!((k.eval(&a, &near) - (-0.5f64).exp()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn kernels_symmetric() {
+        let k = ExponentialKernel { dim: 3, corr_len: 0.2 };
+        let g = GaussianKernel { dim: 3, corr_len: 0.2 };
+        let a = [0.1, 0.2, 0.3];
+        let b = [0.9, 0.5, 0.1];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+        assert_eq!(g.eval(&a, &b), g.eval(&b, &a));
+    }
+
+    #[test]
+    fn fractional_zero_diagonal_and_sign() {
+        let k = FractionalKernel { dim: 2, beta: 0.75, kappa: |_: &[f64; 3]| 1.0 };
+        let a = [0.0; 3];
+        let b = [0.25, 0.0, 0.0];
+        assert_eq!(k.eval(&a, &a), 0.0);
+        assert!(k.eval(&a, &b) < 0.0);
+        // |y-x|^{-(2+2beta)} with r=0.25, beta=0.75: r^{-3.5}
+        let want = -2.0 * 0.25f64.powf(-3.5);
+        assert!((k.eval(&a, &b) - want).abs() < 1e-9 * want.abs());
+    }
+
+    #[test]
+    fn fractional_uses_kappa_geometric_mean() {
+        let k = FractionalKernel { dim: 2, beta: 0.75, kappa: |p: &[f64; 3]| 1.0 + p[0] };
+        let a = [0.0, 0.0, 0.0]; // kappa = 1
+        let b = [3.0, 0.0, 0.0]; // kappa = 4
+        let plain = FractionalKernel { dim: 2, beta: 0.75, kappa: |_: &[f64; 3]| 1.0 };
+        assert!((k.eval(&a, &b) / plain.eval(&a, &b) - 2.0).abs() < 1e-12);
+    }
+}

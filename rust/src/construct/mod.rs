@@ -1,0 +1,15 @@
+//! Construction of H^2 matrices from a kernel function + admissibility
+//! condition using Chebyshev interpolation (§5 intro, §6.1): low-rank
+//! blocks are seeded by polynomial interpolation of the kernel on cluster
+//! bounding boxes; dense blocks evaluate the kernel directly. The
+//! interpolation ranks are deliberately non-optimal — algebraic
+//! recompression ([`crate::compression`]) then produces the storage-optimal
+//! representation, exactly the workflow the paper's compression experiments
+//! exercise (§6.3).
+
+pub mod builder;
+pub mod chebyshev;
+pub mod kernels;
+
+pub use builder::{build_h2, dense_kernel_matrix};
+pub use kernels::{ExponentialKernel, Kernel};

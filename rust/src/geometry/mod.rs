@@ -1,0 +1,233 @@
+//! Point sets, bounding boxes and the regular-grid generators used by the
+//! paper's test problems (§6.1: 2D/3D grids with exponential kernels; §6.4:
+//! the fractional-diffusion grid over Ω ∪ Ω₀).
+
+/// Maximum spatial dimension supported (the paper evaluates 2D and 3D).
+pub const MAX_DIM: usize = 3;
+
+/// A set of points in `dim`-dimensional space, stored as a structure of
+/// arrays: coordinate `d` of point `i` is `coords[d][i]`.
+#[derive(Clone, Debug)]
+pub struct PointSet {
+    pub dim: usize,
+    pub coords: Vec<Vec<f64>>,
+}
+
+impl PointSet {
+    pub fn new(dim: usize) -> Self {
+        assert!((1..=MAX_DIM).contains(&dim));
+        PointSet { dim, coords: vec![Vec::new(); dim] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.dim);
+        for (d, &v) in p.iter().enumerate() {
+            self.coords[d].push(v);
+        }
+    }
+
+    /// Coordinates of point `i` (up to MAX_DIM, zero-extended).
+    #[inline]
+    pub fn get(&self, i: usize) -> [f64; MAX_DIM] {
+        let mut p = [0.0; MAX_DIM];
+        for d in 0..self.dim {
+            p[d] = self.coords[d][i];
+        }
+        p
+    }
+
+    /// Squared Euclidean distance between points i and j.
+    #[inline]
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        let mut s = 0.0;
+        for d in 0..self.dim {
+            let diff = self.coords[d][i] - self.coords[d][j];
+            s += diff * diff;
+        }
+        s
+    }
+
+    /// Regular 2D grid of `n x n` points filling [0, a]².
+    /// This is the paper's 2D spatial-statistics point set (§6.1).
+    pub fn grid_2d(n: usize, a: f64) -> Self {
+        let mut ps = PointSet::new(2);
+        let h = if n > 1 { a / (n - 1) as f64 } else { 0.0 };
+        for j in 0..n {
+            for i in 0..n {
+                ps.push(&[i as f64 * h, j as f64 * h]);
+            }
+        }
+        ps
+    }
+
+    /// Regular 3D grid of `n x n x n` points filling [0, a]³ (§6.1, 3D
+    /// Gaussian-process set).
+    pub fn grid_3d(n: usize, a: f64) -> Self {
+        let mut ps = PointSet::new(3);
+        let h = if n > 1 { a / (n - 1) as f64 } else { 0.0 };
+        for k in 0..n {
+            for j in 0..n {
+                for i in 0..n {
+                    ps.push(&[i as f64 * h, j as f64 * h, k as f64 * h]);
+                }
+            }
+        }
+        ps
+    }
+
+    /// 2D grid of points with spacing `h` covering the box
+    /// [lo, hi]² (inclusive of both ends when (hi-lo)/h is integral).
+    /// Used for the fractional-diffusion domains Ω and Ω ∪ Ω₀ (§6.4).
+    pub fn grid_2d_box(lo: f64, hi: f64, h: f64) -> Self {
+        let n = ((hi - lo) / h).round() as usize + 1;
+        let mut ps = PointSet::new(2);
+        for j in 0..n {
+            for i in 0..n {
+                ps.push(&[lo + i as f64 * h, lo + j as f64 * h]);
+            }
+        }
+        ps
+    }
+}
+
+/// Axis-aligned bounding box.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BBox {
+    pub dim: usize,
+    pub lo: [f64; MAX_DIM],
+    pub hi: [f64; MAX_DIM],
+}
+
+impl BBox {
+    /// Bounding box of a subset of points given by `idx`.
+    pub fn of(points: &PointSet, idx: &[usize]) -> Self {
+        assert!(!idx.is_empty());
+        let mut lo = [f64::INFINITY; MAX_DIM];
+        let mut hi = [f64::NEG_INFINITY; MAX_DIM];
+        for d in 0..points.dim {
+            for &i in idx {
+                let v = points.coords[d][i];
+                lo[d] = lo[d].min(v);
+                hi[d] = hi[d].max(v);
+            }
+        }
+        for d in points.dim..MAX_DIM {
+            lo[d] = 0.0;
+            hi[d] = 0.0;
+        }
+        BBox { dim: points.dim, lo, hi }
+    }
+
+    /// Center of the box.
+    pub fn center(&self) -> [f64; MAX_DIM] {
+        let mut c = [0.0; MAX_DIM];
+        for d in 0..self.dim {
+            c[d] = 0.5 * (self.lo[d] + self.hi[d]);
+        }
+        c
+    }
+
+    /// Length of the box diagonal (the paper's D_t).
+    pub fn diameter(&self) -> f64 {
+        let mut s = 0.0;
+        for d in 0..self.dim {
+            let e = self.hi[d] - self.lo[d];
+            s += e * e;
+        }
+        s.sqrt()
+    }
+
+    /// Euclidean distance between the centers of two boxes (the paper's
+    /// ||C_t - C_s||).
+    pub fn center_dist(&self, other: &BBox) -> f64 {
+        let (a, b) = (self.center(), other.center());
+        let mut s = 0.0;
+        for d in 0..self.dim.max(other.dim) {
+            let diff = a[d] - b[d];
+            s += diff * diff;
+        }
+        s.sqrt()
+    }
+
+    /// Extent along dimension d.
+    pub fn extent(&self, d: usize) -> f64 {
+        self.hi[d] - self.lo[d]
+    }
+
+    /// Dimension with the largest extent (k-d tree split axis).
+    pub fn longest_axis(&self) -> usize {
+        (0..self.dim)
+            .max_by(|&a, &b| self.extent(a).partial_cmp(&self.extent(b)).unwrap())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_2d_count_and_extent() {
+        let g = PointSet::grid_2d(4, 3.0);
+        assert_eq!(g.len(), 16);
+        let idx: Vec<usize> = (0..16).collect();
+        let bb = BBox::of(&g, &idx);
+        assert_eq!(bb.lo[0], 0.0);
+        assert_eq!(bb.hi[0], 3.0);
+        assert_eq!(bb.hi[1], 3.0);
+    }
+
+    #[test]
+    fn grid_3d_count() {
+        let g = PointSet::grid_3d(3, 1.0);
+        assert_eq!(g.len(), 27);
+        assert_eq!(g.dim, 3);
+    }
+
+    #[test]
+    fn grid_2d_box_spacing() {
+        let g = PointSet::grid_2d_box(-1.0, 1.0, 0.5);
+        assert_eq!(g.len(), 25); // 5x5
+        assert_eq!(g.coords[0][0], -1.0);
+    }
+
+    #[test]
+    fn dist2_symmetric() {
+        let g = PointSet::grid_2d(3, 1.0);
+        assert_eq!(g.dist2(0, 5), g.dist2(5, 0));
+        assert_eq!(g.dist2(2, 2), 0.0);
+    }
+
+    #[test]
+    fn bbox_diameter_unit_square() {
+        let g = PointSet::grid_2d(2, 1.0);
+        let bb = BBox::of(&g, &[0, 1, 2, 3]);
+        assert!((bb.diameter() - 2f64.sqrt()).abs() < 1e-14);
+        assert_eq!(bb.center()[0], 0.5);
+    }
+
+    #[test]
+    fn bbox_center_dist() {
+        let g = PointSet::grid_2d(2, 1.0);
+        let left = BBox::of(&g, &[0, 2]); // x = 0 column
+        let right = BBox::of(&g, &[1, 3]); // x = 1 column
+        assert!((left.center_dist(&right) - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn longest_axis_picks_max_extent() {
+        let mut ps = PointSet::new(2);
+        ps.push(&[0.0, 0.0]);
+        ps.push(&[10.0, 1.0]);
+        let bb = BBox::of(&ps, &[0, 1]);
+        assert_eq!(bb.longest_axis(), 0);
+    }
+}

@@ -1,0 +1,51 @@
+//! # h2opus-rs
+//!
+//! A Rust + JAX/Pallas reproduction of **H2Opus**, the distributed-memory
+//! multi-GPU package for hierarchical (`H^2`) matrix operations
+//! (Zampini, Boukaram, Turkiyyah, Knio, Keyes — 2021).
+//!
+//! `H^2` matrices are O(N) representations of the dense matrices arising
+//! from non-local operators (kernel covariance matrices, integral
+//! equations, fractional diffusion). This crate implements:
+//!
+//! - construction of `H^2` matrices from a kernel + geometric admissibility
+//!   condition via Chebyshev interpolation ([`construct`]),
+//! - matrix-(multi)vector multiplication, `HGEMV` ([`matvec`]),
+//! - algebraic recompression to a target accuracy ([`compression`]),
+//! - a distributed-memory runtime with communication-volume optimization
+//!   and communication/computation overlap ([`dist`]),
+//! - batched dense linear-algebra backends: a pure-Rust reference and an
+//!   AOT-compiled JAX/Pallas path executed through PJRT ([`backend`],
+//!   [`runtime`]),
+//! - an end-to-end application: a 2D variable-diffusivity integral
+//!   fractional diffusion solver with CG + multigrid preconditioning
+//!   ([`apps`], [`solver`]).
+//!
+//! The layering mirrors the paper: tree-structured data is *marshaled* per
+//! level into large batches of small fixed-size dense operations, which are
+//! then executed by a batched backend (the paper used MAGMA/KBLAS on V100
+//! GPUs; here a Pallas batched-GEMM kernel AOT-lowered to HLO, plus pure-jnp
+//! batched QR/SVD, executed by the PJRT CPU client — and a native Rust
+//! backend used as oracle and baseline).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for measured reproductions of the paper's figures.
+
+pub mod admissibility;
+pub mod apps;
+pub mod backend;
+pub mod clustering;
+pub mod compression;
+pub mod config;
+pub mod construct;
+pub mod dist;
+pub mod geometry;
+pub mod linalg;
+pub mod matvec;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod tree;
+pub mod util;
+
+pub use config::H2Config;

@@ -1,0 +1,263 @@
+//! Row-major dense matrix helpers and GEMM variants.
+
+/// A small owned row-major matrix. Used for host-side logic and tests; the
+/// hot paths operate on flat slices directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut c = Mat::zeros(self.rows, other.cols);
+        gemm_nn(self.rows, self.cols, other.cols, &self.data, &other.data, &mut c.data, false);
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// C = A·B (or C += A·B when `acc`): A is m×k, B is k×n, C is m×n, all
+/// row-major. i-k-j order streams rows of B/C; output rows are processed
+/// four at a time so every loaded B row feeds four accumulating C rows
+/// (register blocking — see EXPERIMENTS.md §Perf: +25–45% on the batched
+/// shapes, 2.8× on the n = 1 bandwidth-bound case via the 2-row path).
+#[inline]
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    if !acc {
+        c[..m * n].fill(0.0);
+    }
+    if n == 1 {
+        // bandwidth-bound gemv: 2-row blocking wins here
+        let m2 = m / 2 * 2;
+        let mut i = 0;
+        while i < m2 {
+            let (mut s0, mut s1) = (0.0, 0.0);
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            for p in 0..k {
+                s0 += a0[p] * b[p];
+                s1 += a1[p] * b[p];
+            }
+            c[i] += s0;
+            c[i + 1] += s1;
+            i += 2;
+        }
+        if i < m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut s = 0.0;
+            for p in 0..k {
+                s += arow[p] * b[p];
+            }
+            c[i] += s;
+        }
+        return;
+    }
+    let m4 = m / 4 * 4;
+    let mut i = 0;
+    while i < m4 {
+        let (c01, c23) = c[i * n..(i + 4) * n].split_at_mut(2 * n);
+        let (c0, c1) = c01.split_at_mut(n);
+        let (c2, c3) = c23.split_at_mut(n);
+        for p in 0..k {
+            let x0 = a[i * k + p];
+            let x1 = a[(i + 1) * k + p];
+            let x2 = a[(i + 2) * k + p];
+            let x3 = a[(i + 3) * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (j, &bv) in brow.iter().enumerate() {
+                c0[j] += x0 * bv;
+                c1[j] += x1 * bv;
+                c2[j] += x2 * bv;
+                c3[j] += x3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aip * bj;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// C = Aᵀ·B (or +=): A is k×m (so Aᵀ is m×k), B is k×n, C is m×n.
+#[inline]
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
+    debug_assert!(a.len() >= k * m && b.len() >= k * n && c.len() >= m * n);
+    if !acc {
+        c[..m * n].fill(0.0);
+    }
+    // p is the contraction index over rows of A and B.
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &api) in arow.iter().enumerate() {
+            if api == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += api * bj;
+            }
+        }
+    }
+}
+
+/// C = A·Bᵀ (or +=): A is m×k, B is n×k, C is m×n.
+#[inline]
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
+    debug_assert!(a.len() >= m * k && b.len() >= n * k && c.len() >= m * n);
+    if !acc {
+        c[..m * n].fill(0.0);
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for (x, y) in arow.iter().zip(brow.iter()) {
+                s += x * y;
+            }
+            c[i * n + j] += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_allclose;
+    use crate::util::Prng;
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let mut rng = Prng::new(3);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (7, 2, 9)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let mut c = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c, false);
+            assert_allclose(&c, &naive_nn(m, k, n, &a, &b), 1e-13, 1e-13, "nn");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose() {
+        let mut rng = Prng::new(4);
+        let (m, k, n) = (5, 7, 3);
+        let at = rng.normal_vec(k * m); // A is k x m
+        let b = rng.normal_vec(k * n);
+        let mut c = vec![0.0; m * n];
+        gemm_tn(m, k, n, &at, &b, &mut c, false);
+        // reference: transpose A then nn
+        let a = Mat { rows: k, cols: m, data: at.clone() }.transpose();
+        assert_allclose(&c, &naive_nn(m, k, n, &a.data, &b), 1e-13, 1e-13, "tn");
+    }
+
+    #[test]
+    fn gemm_nt_matches_transpose() {
+        let mut rng = Prng::new(5);
+        let (m, k, n) = (4, 6, 5);
+        let a = rng.normal_vec(m * k);
+        let bt = rng.normal_vec(n * k); // B is n x k
+        let mut c = vec![0.0; m * n];
+        gemm_nt(m, k, n, &a, &bt, &mut c, false);
+        let b = Mat { rows: n, cols: k, data: bt.clone() }.transpose();
+        assert_allclose(&c, &naive_nn(m, k, n, &a, &b.data), 1e-13, 1e-13, "nt");
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let (m, k, n) = (2, 2, 2);
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let mut c = vec![10.0; 4];
+        gemm_nn(m, k, n, &a, &b, &mut c, true);
+        assert_allclose(&c, &[11.0, 12.0, 13.0, 14.0], 1e-14, 0.0, "acc");
+    }
+
+    #[test]
+    fn mat_eye_matmul_identity() {
+        let mut rng = Prng::new(6);
+        let a = Mat { rows: 4, cols: 4, data: rng.normal_vec(16) };
+        let i = Mat::eye(4);
+        assert_allclose(&a.matmul(&i).data, &a.data, 1e-14, 0.0, "a*i");
+        assert_allclose(&i.matmul(&a).data, &a.data, 1e-14, 0.0, "i*a");
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Prng::new(8);
+        let a = Mat { rows: 3, cols: 5, data: rng.normal_vec(15) };
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

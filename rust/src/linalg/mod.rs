@@ -1,0 +1,16 @@
+//! Dense linear algebra on row-major `f64` buffers.
+//!
+//! These are the scalar building blocks mirrored by the batched compute
+//! backends ([`crate::backend`]): GEMM, Householder QR and one-sided Jacobi
+//! SVD — the same kernel set the paper obtains from MAGMA (GEMM) and KBLAS
+//! (batched QR/SVD). Everything is written against plain slices so the
+//! batched native backend can run them over flat per-level arrays without
+//! copies.
+
+pub mod dense;
+pub mod qr;
+pub mod svd;
+
+pub use dense::{gemm_nn, gemm_nt, gemm_tn, Mat};
+pub use qr::{householder_qr, qr_r_only};
+pub use svd::jacobi_svd;

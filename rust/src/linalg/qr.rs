@@ -1,0 +1,224 @@
+//! Householder QR factorization of tall matrices (rows >= cols), producing
+//! the thin Q (rows×cols) and upper-triangular R (cols×cols).
+//!
+//! This mirrors the KBLAS batched-QR building block the paper uses for
+//! compression (§5): the stacks of coupling/transfer blocks assembled in the
+//! basis-generation downsweep are QR-factorized level by level.
+
+/// Thin QR: `a` is rows×cols row-major with rows >= cols.
+/// Returns (q, r) with q rows×cols having orthonormal columns, r cols×cols
+/// upper triangular, and a ≈ q·r.
+pub fn householder_qr(rows: usize, cols: usize, a: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    assert!(rows >= cols, "householder_qr requires rows >= cols, got {rows}x{cols}");
+    assert!(a.len() >= rows * cols);
+    // Working copy that becomes R in its upper triangle, with Householder
+    // vectors stored below the diagonal.
+    let mut w = a[..rows * cols].to_vec();
+    let mut tau = vec![0.0; cols];
+
+    for j in 0..cols {
+        // Compute Householder reflector for column j, rows j..rows.
+        let mut normx = 0.0;
+        for i in j..rows {
+            let v = w[i * cols + j];
+            normx += v * v;
+        }
+        normx = normx.sqrt();
+        if normx == 0.0 {
+            tau[j] = 0.0;
+            continue;
+        }
+        let alpha = w[j * cols + j];
+        let beta = -alpha.signum() * normx;
+        let v0 = alpha - beta;
+        // Normalize so the reflector has v[j] = 1 implicitly.
+        for i in (j + 1)..rows {
+            w[i * cols + j] /= v0;
+        }
+        tau[j] = (beta - alpha) / beta; // = -v0/beta, the standard tau
+        w[j * cols + j] = beta;
+
+        // Apply reflector to the trailing columns: A := (I - tau v v^T) A
+        for c in (j + 1)..cols {
+            let mut dot = w[j * cols + c]; // v[j] = 1
+            for i in (j + 1)..rows {
+                dot += w[i * cols + j] * w[i * cols + c];
+            }
+            dot *= tau[j];
+            w[j * cols + c] -= dot;
+            for i in (j + 1)..rows {
+                let vij = w[i * cols + j];
+                w[i * cols + c] -= dot * vij;
+            }
+        }
+    }
+
+    // Extract R (upper triangle).
+    let mut r = vec![0.0; cols * cols];
+    for i in 0..cols {
+        for j in i..cols {
+            r[i * cols + j] = w[i * cols + j];
+        }
+    }
+
+    // Form thin Q by applying reflectors to the first `cols` columns of I,
+    // in reverse order.
+    let mut q = vec![0.0; rows * cols];
+    for j in 0..cols {
+        q[j * cols + j] = 1.0;
+    }
+    for j in (0..cols).rev() {
+        if tau[j] == 0.0 {
+            continue;
+        }
+        for c in 0..cols {
+            let mut dot = q[j * cols + c];
+            for i in (j + 1)..rows {
+                dot += w[i * cols + j] * q[i * cols + c];
+            }
+            dot *= tau[j];
+            q[j * cols + c] -= dot;
+            for i in (j + 1)..rows {
+                let vij = w[i * cols + j];
+                q[i * cols + c] -= dot * vij;
+            }
+        }
+    }
+    (q, r)
+}
+
+/// R-only QR (used by the compression downsweep where Q is never needed).
+pub fn qr_r_only(rows: usize, cols: usize, a: &[f64]) -> Vec<f64> {
+    // For the small block sizes used here the savings of skipping Q
+    // accumulation inside the factorization are what matter; reuse the
+    // factorization and drop Q's back-accumulation.
+    assert!(rows >= cols);
+    let mut w = a[..rows * cols].to_vec();
+    for j in 0..cols {
+        let mut normx = 0.0;
+        for i in j..rows {
+            let v = w[i * cols + j];
+            normx += v * v;
+        }
+        normx = normx.sqrt();
+        if normx == 0.0 {
+            continue;
+        }
+        let alpha = w[j * cols + j];
+        let beta = -alpha.signum() * normx;
+        let v0 = alpha - beta;
+        for i in (j + 1)..rows {
+            w[i * cols + j] /= v0;
+        }
+        let tau = (beta - alpha) / beta;
+        w[j * cols + j] = beta;
+        for c in (j + 1)..cols {
+            let mut dot = w[j * cols + c];
+            for i in (j + 1)..rows {
+                dot += w[i * cols + j] * w[i * cols + c];
+            }
+            dot *= tau;
+            w[j * cols + c] -= dot;
+            for i in (j + 1)..rows {
+                let vij = w[i * cols + j];
+                w[i * cols + c] -= dot * vij;
+            }
+        }
+    }
+    let mut r = vec![0.0; cols * cols];
+    for i in 0..cols {
+        for j in i..cols {
+            r[i * cols + j] = w[i * cols + j];
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{gemm_nn, gemm_tn, Mat};
+    use crate::util::testing::assert_allclose;
+    use crate::util::Prng;
+
+    fn check_qr(rows: usize, cols: usize, a: &[f64]) {
+        let (q, r) = householder_qr(rows, cols, a);
+        // Q^T Q = I
+        let mut qtq = vec![0.0; cols * cols];
+        gemm_tn(cols, rows, cols, &q, &q, &mut qtq, false);
+        assert_allclose(&qtq, &Mat::eye(cols).data, 1e-10, 1e-10, "QtQ");
+        // QR = A
+        let mut qr = vec![0.0; rows * cols];
+        gemm_nn(rows, cols, cols, &q, &r, &mut qr, false);
+        assert_allclose(&qr, a, 1e-10, 1e-10, "QR=A");
+        // R upper triangular
+        for i in 0..cols {
+            for j in 0..i {
+                assert_eq!(r[i * cols + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_random_shapes() {
+        let mut rng = Prng::new(10);
+        for &(rows, cols) in &[(1, 1), (4, 4), (8, 3), (32, 16), (17, 5)] {
+            let a = rng.normal_vec(rows * cols);
+            check_qr(rows, cols, &a);
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // Column 1 = 2 * column 0 -> rank 1; QR must still satisfy A = QR.
+        let rows = 6;
+        let mut rng = Prng::new(11);
+        let col: Vec<f64> = rng.normal_vec(rows);
+        let mut a = vec![0.0; rows * 2];
+        for i in 0..rows {
+            a[i * 2] = col[i];
+            a[i * 2 + 1] = 2.0 * col[i];
+        }
+        let (q, r) = householder_qr(rows, 2, &a);
+        let mut qr = vec![0.0; rows * 2];
+        gemm_nn(rows, 2, 2, &q, &r, &mut qr, false);
+        assert_allclose(&qr, &a, 1e-10, 1e-12, "QR=A rank-deficient");
+        // R(1,1) should be ~0
+        assert!(r[3].abs() < 1e-10);
+    }
+
+    #[test]
+    fn qr_zero_matrix() {
+        let a = vec![0.0; 5 * 3];
+        let (q, r) = householder_qr(5, 3, &a);
+        assert!(r.iter().all(|&x| x == 0.0));
+        // Q columns of the zero matrix stay as the identity seed.
+        let mut qr = vec![0.0; 15];
+        gemm_nn(5, 3, 3, &q, &r, &mut qr, false);
+        assert_allclose(&qr, &a, 0.0, 1e-14, "QR=0");
+    }
+
+    #[test]
+    fn r_only_matches_full_up_to_sign() {
+        let mut rng = Prng::new(12);
+        let (rows, cols) = (20, 6);
+        let a = rng.normal_vec(rows * cols);
+        let (_, r_full) = householder_qr(rows, cols, &a);
+        let r_only = qr_r_only(rows, cols, &a);
+        assert_allclose(&r_only, &r_full, 1e-12, 1e-12, "R-only");
+    }
+
+    #[test]
+    fn zero_padded_rows_give_same_r() {
+        // QR of [A; 0] has the same R as QR of A — the property the XLA
+        // backend's bucket padding relies on.
+        let mut rng = Prng::new(13);
+        let (rows, cols, pad) = (10, 4, 6);
+        let a = rng.normal_vec(rows * cols);
+        let mut padded = a.clone();
+        padded.extend(std::iter::repeat(0.0).take(pad * cols));
+        let r1 = qr_r_only(rows, cols, &a);
+        let r2 = qr_r_only(rows + pad, cols, &padded);
+        assert_allclose(&r2, &r1, 1e-12, 1e-12, "padded R");
+    }
+}

@@ -1,0 +1,222 @@
+//! One-sided Jacobi SVD for small tall matrices (rows >= cols).
+//!
+//! The paper's truncation upsweep (§5.2) relies on batched SVDs of leaf
+//! bases (m×k) and stacked transfer blocks (2k×k); KBLAS implements these
+//! with batched one-sided Jacobi on the GPU, and we mirror the same
+//! algorithm here (and in the L2 JAX graph) because it uses only
+//! rotations/GEMV-like operations — no LAPACK bidiagonalization.
+
+/// Thin SVD via one-sided Jacobi: a (rows×cols, rows >= cols) ≈ u·diag(s)·vᵀ
+/// with u rows×cols (orthonormal columns where s > 0), s descending, v
+/// cols×cols orthogonal.
+pub fn jacobi_svd(rows: usize, cols: usize, a: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    assert!(rows >= cols, "jacobi_svd requires rows >= cols, got {rows}x{cols}");
+    assert!(a.len() >= rows * cols);
+    // Work in column-major panels for cache-friendly column rotations.
+    let mut u: Vec<f64> = vec![0.0; rows * cols]; // column j at u[j*rows..]
+    for i in 0..rows {
+        for j in 0..cols {
+            u[j * rows + i] = a[i * cols + j];
+        }
+    }
+    let mut v = vec![0.0; cols * cols]; // column-major as well
+    for j in 0..cols {
+        v[j * cols + j] = 1.0;
+    }
+
+    // Relative convergence criterion: rotate while
+    // |a_pq| > eps * sqrt(a_pp * a_qq). An absolute criterion would leave
+    // small-norm columns correlated after normalization, breaking U's
+    // orthogonality at ~sqrt(eps) level.
+    let eps = 1e-15;
+    let max_sweeps = 30;
+
+    for _sweep in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                // Gram entries for the (p,q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                let (cp, cq) = (&u[p * rows..(p + 1) * rows], &u[q * rows..(q + 1) * rows]);
+                for i in 0..rows {
+                    app += cp[i] * cp[i];
+                    aqq += cq[i] * cq[i];
+                    apq += cp[i] * cq[i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || app == 0.0 || aqq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate columns p,q of U and V.
+                rotate_cols(&mut u, rows, p, q, c, s);
+                rotate_cols(&mut v, cols, p, q, c, s);
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Singular values = column norms; normalize U columns.
+    let mut sv: Vec<(f64, usize)> = (0..cols)
+        .map(|j| {
+            let n: f64 = u[j * rows..(j + 1) * rows].iter().map(|x| x * x).sum::<f64>().sqrt();
+            (n, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u_out = vec![0.0; rows * cols]; // row-major
+    let mut v_out = vec![0.0; cols * cols]; // row-major
+    let mut s_out = vec![0.0; cols];
+    for (new_j, &(norm, old_j)) in sv.iter().enumerate() {
+        s_out[new_j] = norm;
+        let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        for i in 0..rows {
+            u_out[i * cols + new_j] = u[old_j * rows + i] * inv;
+        }
+        for i in 0..cols {
+            v_out[i * cols + new_j] = v[old_j * cols + i];
+        }
+    }
+    (u_out, s_out, v_out)
+}
+
+#[inline]
+fn rotate_cols(m: &mut [f64], nrows: usize, p: usize, q: usize, c: f64, s: f64) {
+    // Split borrows of the two columns.
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let (head, tail) = m.split_at_mut(hi * nrows);
+    let col_lo = &mut head[lo * nrows..(lo + 1) * nrows];
+    let col_hi = &mut tail[..nrows];
+    // p<q always here; map back.
+    debug_assert!(p < q);
+    for i in 0..nrows {
+        let vp = col_lo[i];
+        let vq = col_hi[i];
+        col_lo[i] = c * vp - s * vq;
+        col_hi[i] = s * vp + c * vq;
+    }
+}
+
+/// Number of singular values needed to approximate to *relative* tolerance
+/// `tau`: the count of s[i] > tau * s[0] (at least 1 when s[0] > 0).
+pub fn svd_rank(s: &[f64], tau: f64) -> usize {
+    if s.is_empty() || s[0] <= 0.0 {
+        return 0;
+    }
+    s.iter().take_while(|&&x| x > tau * s[0]).count().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{gemm_nn, gemm_tn, Mat};
+    use crate::util::testing::assert_allclose;
+    use crate::util::Prng;
+
+    fn reconstruct(rows: usize, cols: usize, u: &[f64], s: &[f64], v: &[f64]) -> Vec<f64> {
+        // U * diag(s) * V^T
+        let mut us = u.to_vec();
+        for i in 0..rows {
+            for j in 0..cols {
+                us[i * cols + j] *= s[j];
+            }
+        }
+        let vt = Mat { rows: cols, cols, data: v.to_vec() }.transpose();
+        let mut out = vec![0.0; rows * cols];
+        gemm_nn(rows, cols, cols, &us, &vt.data, &mut out, false);
+        out
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Prng::new(20);
+        for &(rows, cols) in &[(1, 1), (4, 4), (8, 3), (32, 16), (13, 7)] {
+            let a = rng.normal_vec(rows * cols);
+            let (u, s, v) = jacobi_svd(rows, cols, &a);
+            let rec = reconstruct(rows, cols, &u, &s, &v);
+            assert_allclose(&rec, &a, 1e-9, 1e-9, &format!("svd {rows}x{cols}"));
+            // descending
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_orthogonality() {
+        let mut rng = Prng::new(21);
+        let (rows, cols) = (24, 8);
+        let a = rng.normal_vec(rows * cols);
+        let (u, _s, v) = jacobi_svd(rows, cols, &a);
+        let mut utu = vec![0.0; cols * cols];
+        gemm_tn(cols, rows, cols, &u, &u, &mut utu, false);
+        assert_allclose(&utu, &Mat::eye(cols).data, 1e-9, 1e-9, "UtU");
+        let mut vtv = vec![0.0; cols * cols];
+        gemm_tn(cols, cols, cols, &v, &v, &mut vtv, false);
+        assert_allclose(&vtv, &Mat::eye(cols).data, 1e-9, 1e-9, "VtV");
+    }
+
+    #[test]
+    fn svd_known_diagonal() {
+        // A = diag(3, 2) embedded in 3x2.
+        let a = vec![3.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let (_u, s, _v) = jacobi_svd(3, 2, &a);
+        assert_allclose(&s, &[3.0, 2.0], 1e-12, 1e-12, "diag svd");
+    }
+
+    #[test]
+    fn svd_low_rank_detects_rank() {
+        // Rank-1 matrix: outer product.
+        let mut rng = Prng::new(22);
+        let (rows, cols) = (10, 6);
+        let x = rng.normal_vec(rows);
+        let y = rng.normal_vec(cols);
+        let mut a = vec![0.0; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                a[i * cols + j] = x[i] * y[j];
+            }
+        }
+        let (_u, s, _v) = jacobi_svd(rows, cols, &a);
+        assert!(s[0] > 1e-8);
+        for &x in &s[1..] {
+            assert!(x < 1e-10 * s[0], "trailing sv not negligible: {x}");
+        }
+        assert_eq!(svd_rank(&s, 1e-9), 1);
+    }
+
+    #[test]
+    fn svd_zero_matrix() {
+        let a = vec![0.0; 4 * 3];
+        let (_u, s, _v) = jacobi_svd(4, 3, &a);
+        assert!(s.iter().all(|&x| x == 0.0));
+        assert_eq!(svd_rank(&s, 1e-9), 0);
+    }
+
+    #[test]
+    fn svd_rank_thresholding() {
+        let s = [1.0, 0.5, 1e-4, 1e-9];
+        assert_eq!(svd_rank(&s, 1e-3), 2);
+        assert_eq!(svd_rank(&s, 1e-6), 3);
+        assert_eq!(svd_rank(&s, 1e-12), 4);
+    }
+
+    #[test]
+    fn zero_padded_rows_same_singular_values() {
+        let mut rng = Prng::new(23);
+        let (rows, cols, pad) = (9, 4, 7);
+        let a = rng.normal_vec(rows * cols);
+        let mut padded = a.clone();
+        padded.extend(std::iter::repeat(0.0).take(pad * cols));
+        let (_u1, s1, _v1) = jacobi_svd(rows, cols, &a);
+        let (_u2, s2, _v2) = jacobi_svd(rows + pad, cols, &padded);
+        assert_allclose(&s2, &s1, 1e-10, 1e-12, "padded svd");
+    }
+}

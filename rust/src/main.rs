@@ -1,0 +1,211 @@
+//! h2opus launcher: build, multiply, compress and solve from the command
+//! line. (Hand-rolled CLI: the offline image carries no clap.)
+//!
+//! ```text
+//! h2opus matvec   [--n-side 32] [--dim 2] [--ranks 4] [--nv 1] [--backend native|xla] [--no-overlap] [--trace out.json]
+//! h2opus compress [--n-side 32] [--dim 2] [--ranks 4] [--tau 1e-3] [--backend native|xla]
+//! h2opus solve    [--n-side 32] [--ranks 4] [--beta 0.75] [--rtol 1e-6] [--backend native|xla]
+//! h2opus accuracy [--n-side 32] [--dim 2] [--g 4]
+//! h2opus info     [--n-side 32] [--dim 2]
+//! ```
+
+use std::collections::HashMap;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::backend::ComputeBackend;
+use h2opus::compression::compress_full;
+use h2opus::config::{H2Config, NetworkModel};
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::geometry::PointSet;
+use h2opus::metrics::Metrics;
+use h2opus::runtime::XlaBackend;
+use h2opus::util::Prng;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn backend_from(flags: &HashMap<String, String>) -> Box<dyn ComputeBackend> {
+    match flags.get("backend").map(String::as_str) {
+        Some("xla") => match XlaBackend::from_env() {
+            Ok(b) => Box::new(b),
+            Err(e) => {
+                eprintln!("failed to initialize XLA backend ({e:#}); falling back to native");
+                Box::new(NativeBackend)
+            }
+        },
+        _ => Box::new(NativeBackend),
+    }
+}
+
+fn build_test_matrix(flags: &HashMap<String, String>) -> h2opus::tree::H2Matrix {
+    let dim: usize = get(flags, "dim", 2);
+    let n_side: usize = get(flags, "n-side", 32);
+    let g: usize = get(flags, "g", if dim == 2 { 4 } else { 2 });
+    let cfg = H2Config {
+        leaf_size: get(flags, "leaf-size", 32),
+        eta: get(flags, "eta", if dim == 2 { 0.9 } else { 0.95 }),
+        cheb_grid: g,
+    };
+    let (points, corr) = if dim == 2 {
+        (PointSet::grid_2d(n_side, 1.0), 0.1)
+    } else {
+        (PointSet::grid_3d(n_side, 1.0), 0.2)
+    };
+    let kernel = ExponentialKernel { dim, corr_len: corr };
+    build_h2(points, &kernel, &cfg)
+}
+
+fn cmd_matvec(flags: &HashMap<String, String>) {
+    let a = build_test_matrix(flags);
+    let backend = backend_from(flags);
+    let ranks: usize = get(flags, "ranks", 4);
+    let nv: usize = get(flags, "nv", 1);
+    let n = a.n();
+    let mut rng = Prng::new(1234);
+    let x = rng.normal_vec(n * nv);
+    let mut y = vec![0.0; n * nv];
+    let opts = DistOptions {
+        net: NetworkModel::default(),
+        overlap: !flags.contains_key("no-overlap"),
+        trace: flags.contains_key("trace"),
+    };
+    let rep = dist_hgemv(&a, backend.as_ref(), ranks, nv, &x, &mut y, &opts);
+    let gflops = rep.metrics.flops as f64 / rep.time / 1e9;
+    println!("N = {n}, P = {ranks}, nv = {nv}, backend = {}", backend.name());
+    println!("virtual time      {:>12.3} ms", rep.time * 1e3);
+    println!("flops             {:>12}", rep.metrics.flops);
+    println!("aggregate rate    {:>12.2} Gflop/s ({:.2} Gflop/s/rank)", gflops, gflops / ranks as f64);
+    println!("comm volume       {:>12} B", rep.recv_bytes);
+    if let (Some(path), Some(json)) = (flags.get("trace"), rep.trace_json) {
+        std::fs::write(path, json).expect("writing trace");
+        println!("trace written to {path}");
+    }
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) {
+    let mut a = build_test_matrix(flags);
+    let backend = backend_from(flags);
+    let tau: f64 = get(flags, "tau", 1e-3);
+    let ranks: usize = get(flags, "ranks", 4);
+    let pre = a.low_rank_memory_words();
+    if ranks > 1 {
+        let (c, rep) = h2opus::dist::compress::dist_compress(
+            &mut a,
+            ranks,
+            tau,
+            backend.as_ref(),
+            NetworkModel::default(),
+        );
+        println!("N = {}, P = {ranks}, tau = {tau:e}", c.n());
+        println!("orthogonalization {:>12.3} ms", rep.orthogonalization_time * 1e3);
+        println!("compression       {:>12.3} ms", rep.compression_time * 1e3);
+        println!("memory            {pre} -> {} words ({:.2}x)", rep.stats.post_words, rep.stats.ratio());
+        println!("ranks             {:?} -> {:?}", rep.stats.old_ranks, rep.stats.new_ranks);
+    } else {
+        let mut mt = Metrics::new();
+        let (c, stats) = compress_full(&mut a, tau, backend.as_ref(), &mut mt);
+        println!("N = {}, tau = {tau:e}", c.n());
+        println!("memory {pre} -> {} words ({:.2}x)", stats.post_words, stats.ratio());
+        println!("ranks  {:?} -> {:?}", stats.old_ranks, stats.new_ranks);
+    }
+}
+
+fn cmd_solve(flags: &HashMap<String, String>) {
+    use h2opus::apps::fractional::{setup, solve, FractionalProblem};
+    let n_side: usize = get(flags, "n-side", 32);
+    let ranks: usize = get(flags, "ranks", 4);
+    let rtol: f64 = get(flags, "rtol", 1e-6);
+    let backend = backend_from(flags);
+    let mut problem = FractionalProblem::paper_defaults(n_side, ranks);
+    problem.beta = get(flags, "beta", 0.75);
+    println!("fractional diffusion: {n_side}x{n_side} grid, beta = {}, P = {ranks}", problem.beta);
+    let mut sys = setup(problem, backend.as_ref());
+    println!("setup: K {:.3} s, D {:.3} s, C+MG {:.3} s", sys.setup_k, sys.setup_d, sys.setup_c);
+    let sol = solve(&mut sys, backend.as_ref(), rtol);
+    println!(
+        "solve: {} iterations, {:.3} s total, {:.3} ms/iteration, converged = {}",
+        sol.result.iterations,
+        sol.solve_time,
+        sol.time_per_iteration * 1e3,
+        sol.result.converged
+    );
+}
+
+fn cmd_accuracy(flags: &HashMap<String, String>) {
+    use h2opus::construct::dense_kernel_matrix;
+    let a = build_test_matrix(flags);
+    let dim: usize = get(flags, "dim", 2);
+    let corr = if dim == 2 { 0.1 } else { 0.2 };
+    let kernel = ExponentialKernel { dim, corr_len: corr };
+    let n = a.n();
+    // paper §6.1: sampled accuracy with random vectors
+    let mut rng = Prng::new(99);
+    let x = rng.normal_vec(n);
+    let dense = dense_kernel_matrix(&a.tree, &kernel);
+    let mut y_dense = vec![0.0; n];
+    h2opus::linalg::gemm_nn(n, n, 1, &dense.data, &x, &mut y_dense, false);
+    let y_h2 = {
+        let plan = h2opus::matvec::HgemvPlan::new(&a, 1);
+        let mut ws = h2opus::matvec::HgemvWorkspace::new(&a, 1);
+        let mut y = vec![0.0; n];
+        let mut mt = Metrics::new();
+        h2opus::matvec::hgemv(&a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+        y
+    };
+    let err = h2opus::util::testing::rel_err(&y_h2, &y_dense);
+    println!("N = {n}, dim = {dim}, rank = {}", a.rank(a.depth()));
+    println!("sampled relative accuracy ||Ax - A_H2 x||/||Ax|| = {err:.3e}");
+    println!("sparsity constant C_sp = {}", a.sparsity_constant());
+    println!("H2 memory {} words (dense would be {})", a.memory_words(), n * n);
+}
+
+fn cmd_info(flags: &HashMap<String, String>) {
+    let a = build_test_matrix(flags);
+    println!("N           {}", a.n());
+    println!("depth       {}", a.depth());
+    println!("ranks/level {:?}", a.u.ranks);
+    println!("C_sp        {}", a.sparsity_constant());
+    println!("coupling    {:?}", a.coupling.iter().map(|c| c.num_blocks()).collect::<Vec<_>>());
+    println!("dense       {}", a.dense.pairs.len());
+    println!("memory      {} words ({:.1}% of dense)", a.memory_words(),
+        100.0 * a.memory_words() as f64 / (a.n() as f64 * a.n() as f64));
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "matvec" => cmd_matvec(&flags),
+        "compress" => cmd_compress(&flags),
+        "solve" => cmd_solve(&flags),
+        "accuracy" => cmd_accuracy(&flags),
+        "info" => cmd_info(&flags),
+        _ => {
+            println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
+            println!("commands: matvec | compress | solve | accuracy | info");
+            println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! H^2 matrix-(multi)vector multiplication, `HGEMV` (§3):
+//!
+//! ```text
+//!   y = A_de x  +  U ( S ( V^T x ) )
+//!        dense      downsweep  tree  upsweep
+//! ```
+//!
+//! Phase structure (Algs. 1–7): an *upsweep* through the V tree forms the
+//! multilevel coefficients x̂ = Vᵀx; a per-level block-sparse *tree
+//! multiplication* forms ŷ = S x̂; a *downsweep* through the U tree
+//! accumulates ŷ into the output. Every level is executed as one or a few
+//! batched GEMMs over offsets precomputed at plan-construction time — the
+//! marshaling step of the paper (Alg. 3), hoisted out of the hot path.
+
+pub mod plan;
+
+pub use plan::HgemvPlan;
+
+use crate::backend::{BatchRef, ComputeBackend, GemmDims};
+use crate::metrics::Metrics;
+use crate::tree::{H2Matrix, VectorTree};
+
+/// Reusable buffers for HGEMV (allocation-free hot path).
+#[derive(Clone, Debug)]
+pub struct HgemvWorkspace {
+    pub nv: usize,
+    /// x̂ = Vᵀ x coefficients.
+    pub xhat: VectorTree,
+    /// ŷ = S x̂ coefficients.
+    pub yhat: VectorTree,
+    /// Zero-padded per-leaf input: [num_leaves][m_pad][nv].
+    pub x_pad: Vec<f64>,
+    /// Zero-padded per-leaf output.
+    pub y_pad: Vec<f64>,
+}
+
+impl HgemvWorkspace {
+    pub fn new(a: &H2Matrix, nv: usize) -> Self {
+        let depth = a.depth();
+        let leaves = 1usize << depth;
+        let m_pad = a.u.leaf_dim;
+        HgemvWorkspace {
+            nv,
+            xhat: VectorTree::zeros(depth, &a.v.ranks, nv),
+            yhat: VectorTree::zeros(depth, &a.u.ranks, nv),
+            x_pad: vec![0.0; leaves * m_pad * nv],
+            y_pad: vec![0.0; leaves * m_pad * nv],
+        }
+    }
+}
+
+/// y = A·x for `nv` vectors at once. `x`/`y` are row-major N × nv in the
+/// *permuted* (cluster tree) ordering; see [`apply_original_order`] for the
+/// user-facing ordering.
+pub fn hgemv(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    x: &[f64],
+    y: &mut [f64],
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+) {
+    let nv = ws.nv;
+    assert_eq!(plan.nv, nv, "plan built for different nv");
+    let n = a.n();
+    assert_eq!(x.len(), n * nv);
+    assert_eq!(y.len(), n * nv);
+
+    pad_leaf_input(a, x, &mut ws.x_pad, nv);
+    ws.xhat.clear();
+    ws.yhat.clear();
+    ws.y_pad.fill(0.0);
+
+    upsweep(a, backend, plan, ws, metrics);
+    tree_multiply(a, backend, plan, ws, metrics);
+    dense_multiply(a, backend, plan, ws, metrics);
+    downsweep(a, backend, plan, ws, metrics);
+
+    unpad_leaf_output(a, &ws.y_pad, y, nv);
+}
+
+/// Copy the permuted N×nv input into the zero-padded per-leaf buffer.
+pub fn pad_leaf_input(a: &H2Matrix, x: &[f64], x_pad: &mut [f64], nv: usize) {
+    let depth = a.depth();
+    let m_pad = a.u.leaf_dim;
+    x_pad.fill(0.0);
+    for (j, node) in a.tree.level(depth).iter().enumerate() {
+        let rows = node.size();
+        let src = &x[node.start * nv..(node.start + rows) * nv];
+        let dst = &mut x_pad[j * m_pad * nv..j * m_pad * nv + rows * nv];
+        dst.copy_from_slice(src);
+    }
+}
+
+/// Scatter the padded per-leaf output back to the permuted N×nv vector.
+pub fn unpad_leaf_output(a: &H2Matrix, y_pad: &[f64], y: &mut [f64], nv: usize) {
+    let depth = a.depth();
+    let m_pad = a.u.leaf_dim;
+    for (j, node) in a.tree.level(depth).iter().enumerate() {
+        let rows = node.size();
+        let src = &y_pad[j * m_pad * nv..j * m_pad * nv + rows * nv];
+        y[node.start * nv..(node.start + rows) * nv].copy_from_slice(src);
+    }
+}
+
+/// Upsweep (Alg. 1): x̂^leaf = Vᵀ x, then x̂^{l-1}_parent = Σ F_childᵀ x̂^l_child.
+pub fn upsweep(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+) {
+    let nv = ws.nv;
+    let depth = a.depth();
+    let m_pad = a.v.leaf_dim;
+    let k_leaf = a.v.ranks[depth];
+    let leaves = 1usize << depth;
+    // Leaf: x̂ = Vᵀ x (batched, trans_a).
+    backend.batched_gemm(
+        GemmDims { nb: leaves, m: k_leaf, k: m_pad, n: nv, trans_a: true, trans_b: false, accumulate: false },
+        BatchRef { data: &a.v.leaf_bases, offsets: &plan.leaf_basis_off },
+        BatchRef { data: &ws.x_pad, offsets: &plan.leaf_vec_off },
+        &mut ws.xhat.levels[depth],
+        &plan.leaf_coeff_off,
+        metrics,
+    );
+    // Transfers: level depth -> 1, two conflict-free parity batches.
+    for l in (1..=depth).rev() {
+        let (k_l, k_par) = (a.v.ranks[l], a.v.ranks[l - 1]);
+        let (lo, hi) = ws.xhat.levels.split_at_mut(l);
+        let xhat_parent = &mut lo[l - 1];
+        let xhat_child = &hi[0];
+        for parity in 0..2 {
+            let po = &plan.up[l].parity[parity];
+            backend.batched_gemm(
+                GemmDims { nb: po.nb, m: k_par, k: k_l, n: nv, trans_a: true, trans_b: false, accumulate: true },
+                BatchRef { data: &a.v.transfers[l], offsets: &po.transfer_off },
+                BatchRef { data: xhat_child, offsets: &po.child_off },
+                xhat_parent,
+                &po.parent_off,
+                metrics,
+            );
+        }
+    }
+}
+
+/// Tree multiplication (Alg. 4): ŷ^l_t += Σ_s S^l_ts x̂^l_s, one batched GEMM
+/// per conflict-free batch (§3.2).
+pub fn tree_multiply(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+) {
+    let nv = ws.nv;
+    for (l, cl) in a.coupling.iter().enumerate() {
+        if cl.pairs.is_empty() {
+            continue;
+        }
+        let k = a.rank(l);
+        for (b, _) in cl.batches.iter().enumerate() {
+            let bo = &plan.mult[l].batches[b];
+            backend.batched_gemm(
+                GemmDims { nb: bo.nb, m: k, k, n: nv, trans_a: false, trans_b: false, accumulate: true },
+                BatchRef { data: &cl.data, offsets: &bo.block_off },
+                BatchRef { data: &ws.xhat.levels[l], offsets: &bo.src_off },
+                &mut ws.yhat.levels[l],
+                &bo.dst_off,
+                metrics,
+            );
+        }
+    }
+}
+
+/// Dense phase: y_pad += A_de x_pad over the inadmissible leaf blocks.
+pub fn dense_multiply(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+) {
+    let nv = ws.nv;
+    let m_pad = a.dense.m_pad;
+    for (b, _) in a.dense.batches.iter().enumerate() {
+        let bo = &plan.dense.batches[b];
+        backend.batched_gemm(
+            GemmDims { nb: bo.nb, m: m_pad, k: m_pad, n: nv, trans_a: false, trans_b: false, accumulate: true },
+            BatchRef { data: &a.dense.data, offsets: &bo.block_off },
+            BatchRef { data: &ws.x_pad, offsets: &bo.src_off },
+            &mut ws.y_pad,
+            &bo.dst_off,
+            metrics,
+        );
+    }
+}
+
+/// Downsweep (Alg. 6): ŷ^l_child += E_child ŷ^{l-1}_parent down the tree,
+/// then y_pad += U_leaf ŷ^leaf.
+pub fn downsweep(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+) {
+    let nv = ws.nv;
+    let depth = a.depth();
+    for l in 1..=depth {
+        let (k_l, k_par) = (a.u.ranks[l], a.u.ranks[l - 1]);
+        let (lo, hi) = ws.yhat.levels.split_at_mut(l);
+        let yhat_parent = &lo[l - 1];
+        let yhat_child = &mut hi[0];
+        for parity in 0..2 {
+            let po = &plan.up[l].parity[parity];
+            backend.batched_gemm(
+                GemmDims { nb: po.nb, m: k_l, k: k_par, n: nv, trans_a: false, trans_b: false, accumulate: true },
+                BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off },
+                BatchRef { data: yhat_parent, offsets: &po.parent_off },
+                yhat_child,
+                &po.child_off,
+                metrics,
+            );
+        }
+    }
+    // Leaf expansion: y_pad += U ŷ^leaf.
+    let m_pad = a.u.leaf_dim;
+    let k_leaf = a.u.ranks[depth];
+    let leaves = 1usize << depth;
+    backend.batched_gemm(
+        GemmDims { nb: leaves, m: m_pad, k: k_leaf, n: nv, trans_a: false, trans_b: false, accumulate: true },
+        BatchRef { data: &a.u.leaf_bases, offsets: &plan.leaf_basis_off },
+        BatchRef { data: &ws.yhat.levels[depth], offsets: &plan.leaf_coeff_off },
+        &mut ws.y_pad,
+        &plan.leaf_vec_off,
+        metrics,
+    );
+}
+
+/// Convenience wrapper in the caller's original point ordering: permutes
+/// in, multiplies, permutes out. For repeated products prefer permuting
+/// once and calling [`hgemv`] directly.
+pub fn apply_original_order(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    x_orig: &[f64],
+    nv: usize,
+) -> Vec<f64> {
+    let n = a.n();
+    let mut x = vec![0.0; n * nv];
+    for pos in 0..n {
+        let orig = a.tree.perm[pos];
+        x[pos * nv..(pos + 1) * nv].copy_from_slice(&x_orig[orig * nv..(orig + 1) * nv]);
+    }
+    let plan = HgemvPlan::new(a, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    let mut y = vec![0.0; n * nv];
+    let mut metrics = Metrics::new();
+    hgemv(a, backend, &plan, &x, &mut y, &mut ws, &mut metrics);
+    let mut y_orig = vec![0.0; n * nv];
+    for pos in 0..n {
+        let orig = a.tree.perm[pos];
+        y_orig[orig * nv..(orig + 1) * nv].copy_from_slice(&y[pos * nv..(pos + 1) * nv]);
+    }
+    y_orig
+}
+
+/// Model flop count of one HGEMV with `nv` vectors (used for Gflop/s
+/// reporting in the benches, mirroring the paper's §6.2 methodology).
+pub fn hgemv_flops(a: &H2Matrix, nv: usize) -> u64 {
+    let mut f: u64 = 0;
+    let depth = a.depth();
+    let m_pad = a.u.leaf_dim;
+    let leaves = 1u64 << depth;
+    let k_leaf = a.rank(depth) as u64;
+    // leaf up + leaf down
+    f += 2 * 2 * leaves * (m_pad as u64) * k_leaf * nv as u64;
+    for l in 1..=depth {
+        let (k_l, k_par) = (a.rank(l) as u64, a.rank(l - 1) as u64);
+        // up + down transfers
+        f += 2 * 2 * (1u64 << l) * k_l * k_par * nv as u64;
+    }
+    for (l, cl) in a.coupling.iter().enumerate() {
+        let k = a.rank(l) as u64;
+        f += 2 * cl.num_blocks() as u64 * k * k * nv as u64;
+    }
+    f += 2 * a.dense.pairs.len() as u64 * (m_pad as u64) * (m_pad as u64) * nv as u64;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, dense_kernel_matrix, ExponentialKernel};
+    use crate::geometry::PointSet;
+    use crate::util::testing::rel_err;
+    use crate::util::Prng;
+
+    fn setup_2d(n_side: usize, g: usize) -> (H2Matrix, crate::linalg::Mat) {
+        let points = PointSet::grid_2d(n_side, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: g };
+        let h2 = build_h2(points, &kernel, &cfg);
+        let dense = dense_kernel_matrix(&h2.tree, &kernel);
+        (h2, dense)
+    }
+
+    fn dense_matvec(a: &crate::linalg::Mat, x: &[f64], nv: usize) -> Vec<f64> {
+        let n = a.rows;
+        let mut y = vec![0.0; n * nv];
+        crate::linalg::gemm_nn(n, n, nv, &a.data, x, &mut y, false);
+        y
+    }
+
+    #[test]
+    fn hgemv_matches_h2_reconstruction() {
+        // hgemv must match a dense matvec with the *reconstructed* H2
+        // matrix to machine precision (same algebra, different order).
+        let (h2, _) = setup_2d(16, 4);
+        let rec = h2.to_dense_permuted();
+        let n = h2.n();
+        let mut rng = Prng::new(40);
+        for nv in [1usize, 3] {
+            let x = rng.normal_vec(n * nv);
+            let plan = HgemvPlan::new(&h2, nv);
+            let mut ws = HgemvWorkspace::new(&h2, nv);
+            let mut y = vec![0.0; n * nv];
+            let mut mt = Metrics::new();
+            hgemv(&h2, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+            let want = dense_matvec(&rec, &x, nv);
+            let err = rel_err(&y, &want);
+            assert!(err < 1e-12, "nv={nv} err={err}");
+            assert!(mt.flops > 0);
+        }
+    }
+
+    #[test]
+    fn hgemv_approximates_kernel_matvec() {
+        let (h2, dense) = setup_2d(16, 5);
+        let n = h2.n();
+        let mut rng = Prng::new(41);
+        let x = rng.normal_vec(n);
+        let plan = HgemvPlan::new(&h2, 1);
+        let mut ws = HgemvWorkspace::new(&h2, 1);
+        let mut y = vec![0.0; n];
+        let mut mt = Metrics::new();
+        hgemv(&h2, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+        let want = dense_matvec(&dense, &x, 1);
+        let err = rel_err(&y, &want);
+        assert!(err < 1e-2, "err={err}");
+    }
+
+    #[test]
+    fn multivector_consistent_with_single() {
+        let (h2, _) = setup_2d(8, 3);
+        let n = h2.n();
+        let mut rng = Prng::new(42);
+        let nv = 4;
+        let x = rng.normal_vec(n * nv);
+        let plan_m = HgemvPlan::new(&h2, nv);
+        let mut ws_m = HgemvWorkspace::new(&h2, nv);
+        let mut y_m = vec![0.0; n * nv];
+        let mut mt = Metrics::new();
+        hgemv(&h2, &NativeBackend, &plan_m, &x, &mut y_m, &mut ws_m, &mut mt);
+        // columns one at a time
+        let plan_1 = HgemvPlan::new(&h2, 1);
+        let mut ws_1 = HgemvWorkspace::new(&h2, 1);
+        for c in 0..nv {
+            let xc: Vec<f64> = (0..n).map(|i| x[i * nv + c]).collect();
+            let mut yc = vec![0.0; n];
+            hgemv(&h2, &NativeBackend, &plan_1, &xc, &mut yc, &mut ws_1, &mut mt);
+            let got: Vec<f64> = (0..n).map(|i| y_m[i * nv + c]).collect();
+            let err = rel_err(&got, &yc);
+            assert!(err < 1e-12, "column {c}: {err}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let (h2, _) = setup_2d(8, 3);
+        let n = h2.n();
+        let mut rng = Prng::new(43);
+        let x1 = rng.normal_vec(n);
+        let x2 = rng.normal_vec(n);
+        let plan = HgemvPlan::new(&h2, 1);
+        let mut ws = HgemvWorkspace::new(&h2, 1);
+        let mut mt = Metrics::new();
+        let mut y1 = vec![0.0; n];
+        let mut y2 = vec![0.0; n];
+        let mut y12 = vec![0.0; n];
+        hgemv(&h2, &NativeBackend, &plan, &x1, &mut y1, &mut ws, &mut mt);
+        hgemv(&h2, &NativeBackend, &plan, &x2, &mut y2, &mut ws, &mut mt);
+        let x12: Vec<f64> = x1.iter().zip(&x2).map(|(a, b)| 2.0 * a - 3.0 * b).collect();
+        hgemv(&h2, &NativeBackend, &plan, &x12, &mut y12, &mut ws, &mut mt);
+        let want: Vec<f64> = y1.iter().zip(&y2).map(|(a, b)| 2.0 * a - 3.0 * b).collect();
+        assert!(rel_err(&y12, &want) < 1e-11);
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean() {
+        // Two consecutive products with the same workspace must agree.
+        let (h2, _) = setup_2d(8, 3);
+        let n = h2.n();
+        let mut rng = Prng::new(44);
+        let x = rng.normal_vec(n);
+        let plan = HgemvPlan::new(&h2, 1);
+        let mut ws = HgemvWorkspace::new(&h2, 1);
+        let mut mt = Metrics::new();
+        let mut y1 = vec![0.0; n];
+        hgemv(&h2, &NativeBackend, &plan, &x, &mut y1, &mut ws, &mut mt);
+        let mut y2 = vec![1e9; n]; // poisoned output
+        hgemv(&h2, &NativeBackend, &plan, &x, &mut y2, &mut ws, &mut mt);
+        assert!(rel_err(&y2, &y1) < 1e-15);
+    }
+
+    #[test]
+    fn original_order_wrapper_consistent() {
+        let (h2, dense) = setup_2d(8, 4);
+        let n = h2.n();
+        let mut rng = Prng::new(45);
+        let x_orig = rng.normal_vec(n);
+        let y_orig = apply_original_order(&h2, &NativeBackend, &x_orig, 1);
+        // dense oracle in permuted order
+        let x_perm: Vec<f64> = (0..n).map(|p| x_orig[h2.tree.perm[p]]).collect();
+        let want_perm = dense_matvec(&dense, &x_perm, 1);
+        let want_orig: Vec<f64> = {
+            let mut w = vec![0.0; n];
+            for p in 0..n {
+                w[h2.tree.perm[p]] = want_perm[p];
+            }
+            w
+        };
+        assert!(rel_err(&y_orig, &want_orig) < 5e-2);
+    }
+
+    #[test]
+    fn flop_model_counts_match_metrics() {
+        let (h2, _) = setup_2d(16, 4);
+        let n = h2.n();
+        let nv = 2;
+        let x = vec![1.0; n * nv];
+        let plan = HgemvPlan::new(&h2, nv);
+        let mut ws = HgemvWorkspace::new(&h2, nv);
+        let mut y = vec![0.0; n * nv];
+        let mut mt = Metrics::new();
+        hgemv(&h2, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+        assert_eq!(mt.flops, hgemv_flops(&h2, nv));
+    }
+}

@@ -1,0 +1,192 @@
+//! HGEMV marshaling plans: the offset arrays that gather tree-level data
+//! for batched execution (the paper's Alg. 3 marshaling kernel). Built once
+//! per (matrix, nv) and reused for every product — marshaling involves no
+//! data movement, only index arithmetic.
+
+use crate::tree::H2Matrix;
+
+/// Offsets for one parity batch of an interlevel transfer GEMM.
+#[derive(Clone, Debug, Default)]
+pub struct ParityOffsets {
+    pub nb: usize,
+    /// into `transfers[l]` (one per child node of this parity)
+    pub transfer_off: Vec<usize>,
+    /// into the child-level coefficient buffer
+    pub child_off: Vec<usize>,
+    /// into the parent-level coefficient buffer
+    pub parent_off: Vec<usize>,
+}
+
+/// Per-level transfer offsets (two conflict-free parity batches: even
+/// children then odd children, so parent outputs never collide within a
+/// batch... they do collide *across* parities, which is why the two
+/// batches are separate GEMM calls with accumulate).
+#[derive(Clone, Debug, Default)]
+pub struct LevelTransferPlan {
+    pub parity: [ParityOffsets; 2],
+}
+
+/// Offsets for one conflict-free coupling batch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchOffsets {
+    pub nb: usize,
+    pub block_off: Vec<usize>,
+    pub src_off: Vec<usize>,
+    pub dst_off: Vec<usize>,
+}
+
+/// All batches of one coupling level (or of the dense level).
+#[derive(Clone, Debug, Default)]
+pub struct LevelMultPlan {
+    pub batches: Vec<BatchOffsets>,
+}
+
+/// The complete marshaling plan for HGEMV at a given nv.
+#[derive(Clone, Debug)]
+pub struct HgemvPlan {
+    pub nv: usize,
+    /// Leaf-level batched-GEMM offsets (shared by upsweep leaf, downsweep
+    /// leaf expansion).
+    pub leaf_basis_off: Vec<usize>,
+    pub leaf_vec_off: Vec<usize>,
+    pub leaf_coeff_off: Vec<usize>,
+    /// `up[l]` for l in 1..=depth (index 0 unused).
+    pub up: Vec<LevelTransferPlan>,
+    /// `mult[l]` for l in 0..=depth.
+    pub mult: Vec<LevelMultPlan>,
+    pub dense: LevelMultPlan,
+}
+
+impl HgemvPlan {
+    pub fn new(a: &H2Matrix, nv: usize) -> Self {
+        let depth = a.depth();
+        let m_pad = a.u.leaf_dim;
+        let leaves = 1usize << depth;
+        let k_leaf = a.rank(depth);
+
+        let leaf_basis_off = (0..leaves).map(|j| j * m_pad * k_leaf).collect();
+        let leaf_vec_off = (0..leaves).map(|j| j * m_pad * nv).collect();
+        let leaf_coeff_off = (0..leaves).map(|j| j * k_leaf * nv).collect();
+
+        let mut up = vec![LevelTransferPlan::default()];
+        for l in 1..=depth {
+            let (k_l, k_par) = (a.rank(l), a.rank(l - 1));
+            let mut plan = LevelTransferPlan::default();
+            for parity in 0..2 {
+                let nb = 1usize << (l - 1);
+                let po = &mut plan.parity[parity];
+                po.nb = nb;
+                for i in 0..nb {
+                    let child = 2 * i + parity;
+                    po.transfer_off.push(child * k_l * k_par);
+                    po.child_off.push(child * k_l * nv);
+                    po.parent_off.push(i * k_par * nv);
+                }
+            }
+            up.push(plan);
+        }
+
+        let mut mult = Vec::with_capacity(depth + 1);
+        for (l, cl) in a.coupling.iter().enumerate() {
+            let k = a.rank(l);
+            let mut lp = LevelMultPlan::default();
+            for batch in &cl.batches {
+                let mut bo = BatchOffsets { nb: batch.len(), ..Default::default() };
+                for &p in batch {
+                    let (t, s) = cl.pairs[p as usize];
+                    bo.block_off.push(p as usize * k * k);
+                    bo.src_off.push(s as usize * k * nv);
+                    bo.dst_off.push(t as usize * k * nv);
+                }
+                lp.batches.push(bo);
+            }
+            mult.push(lp);
+        }
+
+        let mut dense = LevelMultPlan::default();
+        for batch in &a.dense.batches {
+            let mut bo = BatchOffsets { nb: batch.len(), ..Default::default() };
+            for &p in batch {
+                let (t, s) = a.dense.pairs[p as usize];
+                bo.block_off.push(p as usize * m_pad * m_pad);
+                bo.src_off.push(s as usize * m_pad * nv);
+                bo.dst_off.push(t as usize * m_pad * nv);
+            }
+            dense.batches.push(bo);
+        }
+
+        HgemvPlan { nv, leaf_basis_off, leaf_vec_off, leaf_coeff_off, up, mult, dense }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, ExponentialKernel};
+    use crate::geometry::PointSet;
+
+    fn plan_for(n_side: usize, nv: usize) -> (H2Matrix, HgemvPlan) {
+        let points = PointSet::grid_2d(n_side, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        let h2 = build_h2(points, &kernel, &cfg);
+        let plan = HgemvPlan::new(&h2, nv);
+        (h2, plan)
+    }
+
+    #[test]
+    fn leaf_offsets_counts() {
+        let (h2, plan) = plan_for(16, 2);
+        let leaves = 1 << h2.depth();
+        assert_eq!(plan.leaf_basis_off.len(), leaves);
+        assert_eq!(plan.leaf_vec_off.len(), leaves);
+        assert_eq!(plan.leaf_coeff_off.len(), leaves);
+    }
+
+    #[test]
+    fn parity_batches_cover_all_children() {
+        let (h2, plan) = plan_for(16, 1);
+        for l in 1..=h2.depth() {
+            let total: usize = plan.up[l].parity.iter().map(|p| p.nb).sum();
+            assert_eq!(total, 1 << l);
+            // parent offsets within one parity are distinct
+            for p in &plan.up[l].parity {
+                let mut off = p.parent_off.clone();
+                off.sort_unstable();
+                off.dedup();
+                assert_eq!(off.len(), p.nb, "parent collision within parity batch");
+            }
+        }
+    }
+
+    #[test]
+    fn mult_batches_conflict_free() {
+        let (h2, plan) = plan_for(16, 1);
+        for (l, lp) in plan.mult.iter().enumerate() {
+            let blocks: usize = lp.batches.iter().map(|b| b.nb).sum();
+            assert_eq!(blocks, h2.coupling[l].num_blocks());
+            for b in &lp.batches {
+                let mut dst = b.dst_off.clone();
+                dst.sort_unstable();
+                dst.dedup();
+                assert_eq!(dst.len(), b.nb, "dst collision in coupling batch");
+            }
+        }
+        for b in &plan.dense.batches {
+            let mut dst = b.dst_off.clone();
+            dst.sort_unstable();
+            dst.dedup();
+            assert_eq!(dst.len(), b.nb, "dst collision in dense batch");
+        }
+    }
+
+    #[test]
+    fn nv_scales_vector_offsets() {
+        let (_, p1) = plan_for(8, 1);
+        let (_, p3) = plan_for(8, 3);
+        for (a, b) in p1.leaf_vec_off.iter().zip(&p3.leaf_vec_off) {
+            assert_eq!(*b, a * 3);
+        }
+    }
+}

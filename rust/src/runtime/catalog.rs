@@ -1,0 +1,139 @@
+//! Artifact catalog: parses `artifacts/manifest.txt` (written by aot.py)
+//! and resolves shape requests to the smallest covering bucket.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One GEMM artifact entry.
+#[derive(Clone, Debug)]
+pub struct GemmEntry {
+    pub nb: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub path: PathBuf,
+}
+
+/// One QR or SVD artifact entry.
+#[derive(Clone, Debug)]
+pub struct FactorEntry {
+    pub nb: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    /// op ("nn"/"tn"/"nt") -> entries
+    pub gemm: HashMap<String, Vec<GemmEntry>>,
+    pub qr: Vec<FactorEntry>,
+    pub svd: Vec<FactorEntry>,
+}
+
+impl Catalog {
+    /// Load `manifest.txt` from the artifacts directory. Lines:
+    /// `kind op nb m k n file` (op/n are placeholders for qr/svd).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let mut cat = Catalog::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 7 {
+                bail!("manifest line {}: expected 7 fields, got {}", lineno + 1, f.len());
+            }
+            let nb: usize = f[2].parse()?;
+            let (a, b, c): (usize, usize, usize) = (f[3].parse()?, f[4].parse()?, f[5].parse()?);
+            let path = dir.join(f[6]);
+            match f[0] {
+                "gemm" => cat
+                    .gemm
+                    .entry(f[1].to_string())
+                    .or_default()
+                    .push(GemmEntry { nb, m: a, k: b, n: c, path }),
+                "qr" => cat.qr.push(FactorEntry { nb, rows: a, cols: b, path }),
+                "svd" => cat.svd.push(FactorEntry { nb, rows: a, cols: b, path }),
+                other => bail!("manifest line {}: unknown kind {other}", lineno + 1),
+            }
+        }
+        // smallest-first so find() picks the tightest bucket
+        for v in cat.gemm.values_mut() {
+            v.sort_by_key(|e| e.m * e.k * e.n);
+        }
+        cat.qr.sort_by_key(|e| e.rows * e.cols);
+        cat.svd.sort_by_key(|e| e.rows * e.cols);
+        Ok(cat)
+    }
+
+    /// Smallest GEMM bucket covering (m, k, n) for `op`, if any.
+    pub fn find_gemm(&self, op: &str, m: usize, k: usize, n: usize) -> Option<&GemmEntry> {
+        self.gemm.get(op)?.iter().find(|e| e.m >= m && e.k >= k && e.n >= n)
+    }
+
+    /// Smallest QR bucket covering (rows, cols).
+    pub fn find_qr(&self, rows: usize, cols: usize) -> Option<&FactorEntry> {
+        self.qr.iter().find(|e| e.rows >= rows && e.cols >= cols)
+    }
+
+    /// Smallest SVD bucket covering (rows, cols).
+    pub fn find_svd(&self, rows: usize, cols: usize) -> Option<&FactorEntry> {
+        self.svd.iter().find(|e| e.rows >= rows && e.cols >= cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, content: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+    }
+
+    #[test]
+    fn parse_and_bucket_selection() {
+        let dir = std::env::temp_dir().join("h2opus_cat_test1");
+        write_manifest(
+            &dir,
+            "gemm nn 64 16 16 4 a.hlo.txt\n\
+             gemm nn 64 32 32 4 b.hlo.txt\n\
+             qr - 16 32 16 0 q.hlo.txt\n\
+             svd - 16 32 16 0 s.hlo.txt\n",
+        );
+        let cat = Catalog::load(&dir).unwrap();
+        // exact fit
+        assert_eq!(cat.find_gemm("nn", 16, 16, 4).unwrap().m, 16);
+        // rounds up to the smallest covering bucket
+        assert_eq!(cat.find_gemm("nn", 17, 9, 2).unwrap().m, 32);
+        // no bucket large enough
+        assert!(cat.find_gemm("nn", 64, 16, 4).is_none());
+        assert!(cat.find_gemm("tn", 16, 16, 4).is_none());
+        assert_eq!(cat.find_qr(20, 10).unwrap().rows, 32);
+        assert!(cat.find_svd(64, 16).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = std::env::temp_dir().join("h2opus_cat_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Catalog::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join("h2opus_cat_bad");
+        write_manifest(&dir, "gemm nn 64 16\n");
+        assert!(Catalog::load(&dir).is_err());
+    }
+}

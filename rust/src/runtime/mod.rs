@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them lazily on the PJRT CPU client,
+//! and exposes them as a [`crate::backend::ComputeBackend`].
+//!
+//! The backend pads every request into the catalog's shape buckets
+//! (rounding (m, k, n) up and chunking/padding the batch dimension), which
+//! is numerically exact for zero padding — the property both the Python
+//! and Rust test suites verify. Shapes outside the catalog fall back to
+//! the native backend (counted, so benches can report the fallback rate).
+//! Python never runs here: the Rust binary is self-contained once
+//! `make artifacts` has produced the catalog.
+
+pub mod catalog;
+pub mod xla_backend;
+
+pub use catalog::Catalog;
+pub use xla_backend::XlaBackend;

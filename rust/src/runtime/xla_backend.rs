@@ -1,0 +1,297 @@
+//! The XLA/PJRT compute backend: executes the AOT JAX/Pallas artifacts.
+//!
+//! Requests are padded into catalog buckets: blocks are gathered from their
+//! offsets into zero-padded contiguous batch buffers (the host-side analog
+//! of the paper's device marshaling + transfer), executed through PJRT, and
+//! scattered back. Chunking over the fixed artifact batch size bounds the
+//! number of compiled executables; lazy compilation caches one executable
+//! per (artifact) file.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::catalog::Catalog;
+use crate::backend::native::NativeBackend;
+use crate::backend::{BatchRef, ComputeBackend, GemmDims};
+use crate::metrics::Metrics;
+
+/// Execution statistics of the XLA backend (padding waste, fallbacks).
+#[derive(Clone, Debug, Default)]
+pub struct XlaStats {
+    pub launches: u64,
+    pub fallbacks: u64,
+    /// elements transferred host->device and back
+    pub elements_moved: u64,
+}
+
+/// PJRT-backed [`ComputeBackend`].
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    catalog: Catalog,
+    cache: RefCell<HashMap<PathBuf, xla::PjRtLoadedExecutable>>,
+    fallback: NativeBackend,
+    pub stats: RefCell<XlaStats>,
+}
+
+impl XlaBackend {
+    /// Create from an artifacts directory (must contain manifest.txt).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let catalog = Catalog::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend {
+            client,
+            catalog,
+            cache: RefCell::new(HashMap::new()),
+            fallback: NativeBackend,
+            stats: RefCell::new(XlaStats::default()),
+        })
+    }
+
+    /// Default artifacts location (repo-root/artifacts), overridable with
+    /// H2OPUS_ARTIFACTS.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("H2OPUS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::new(Path::new(&dir))
+    }
+
+    fn executable(&self, path: &Path) -> Result<()> {
+        if self.cache.borrow().contains_key(path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe);
+        Ok(())
+    }
+
+    fn run(&self, path: &Path, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.executable(path)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(path).unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        self.stats.borrow_mut().launches += 1;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Gather blocks (rows x cols each) from `data`+`offsets` into a zero-padded
+/// (nb_pad, rows_pad, cols_pad) buffer, for the chunk `items`.
+fn gather_padded(
+    data: &[f64],
+    offsets: &[usize],
+    items: std::ops::Range<usize>,
+    rows: usize,
+    cols: usize,
+    nb_pad: usize,
+    rows_pad: usize,
+    cols_pad: usize,
+) -> Vec<f64> {
+    let mut buf = vec![0.0; nb_pad * rows_pad * cols_pad];
+    for (slot, item) in items.enumerate() {
+        let src = &data[offsets[item]..offsets[item] + rows * cols];
+        let dst = &mut buf[slot * rows_pad * cols_pad..];
+        for r in 0..rows {
+            dst[r * cols_pad..r * cols_pad + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+        }
+    }
+    buf
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &str {
+        "xla-pjrt"
+    }
+
+    fn batched_gemm(
+        &self,
+        dims: GemmDims,
+        a: BatchRef<'_>,
+        b: BatchRef<'_>,
+        c_data: &mut [f64],
+        c_offsets: &[usize],
+        metrics: &mut Metrics,
+    ) {
+        let GemmDims { nb, m, k, n, trans_a, trans_b, accumulate } = dims;
+        if nb == 0 {
+            return;
+        }
+        let op = match (trans_a, trans_b) {
+            (false, false) => "nn",
+            (true, false) => "tn",
+            (false, true) => "nt",
+            (true, true) => {
+                // never emitted by the phases; keep native
+                self.stats.borrow_mut().fallbacks += 1;
+                return self.fallback.batched_gemm(dims, a, b, c_data, c_offsets, metrics);
+            }
+        };
+        let Some(entry) = self.catalog.find_gemm(op, m, k, n) else {
+            self.stats.borrow_mut().fallbacks += 1;
+            return self.fallback.batched_gemm(dims, a, b, c_data, c_offsets, metrics);
+        };
+        let (mp, kp, np_, nbp) = (entry.m, entry.k, entry.n, entry.nb);
+        // block storage shapes (rows, cols) as laid out in memory
+        let (a_rows, a_cols, a_rp, a_cp) =
+            if trans_a { (k, m, kp, mp) } else { (m, k, mp, kp) };
+        let (b_rows, b_cols, b_rp, b_cp) =
+            if trans_b { (n, k, np_, kp) } else { (k, n, kp, np_) };
+
+        let mut chunk_start = 0;
+        while chunk_start < nb {
+            let chunk = (nb - chunk_start).min(nbp);
+            let items = chunk_start..chunk_start + chunk;
+            let a_buf =
+                gather_padded(a.data, a.offsets, items.clone(), a_rows, a_cols, nbp, a_rp, a_cp);
+            let b_buf =
+                gather_padded(b.data, b.offsets, items.clone(), b_rows, b_cols, nbp, b_rp, b_cp);
+            let a_lit = xla::Literal::vec1(&a_buf)
+                .reshape(&[nbp as i64, a_rp as i64, a_cp as i64])
+                .expect("reshape a");
+            let b_lit = xla::Literal::vec1(&b_buf)
+                .reshape(&[nbp as i64, b_rp as i64, b_cp as i64])
+                .expect("reshape b");
+            let out = self.run(&entry.path, &[a_lit, b_lit]).expect("gemm artifact execution");
+            let c_full: Vec<f64> = out[0].to_vec().expect("gemm output");
+            {
+                let mut st = self.stats.borrow_mut();
+                st.elements_moved += (a_buf.len() + b_buf.len() + c_full.len()) as u64;
+            }
+            // scatter (unpad) into destinations
+            for (slot, item) in items.enumerate() {
+                let src = &c_full[slot * mp * np_..];
+                let dst = &mut c_data[c_offsets[item]..c_offsets[item] + m * n];
+                for r in 0..m {
+                    for cix in 0..n {
+                        let v = src[r * np_ + cix];
+                        if accumulate {
+                            dst[r * n + cix] += v;
+                        } else {
+                            dst[r * n + cix] = v;
+                        }
+                    }
+                }
+            }
+            chunk_start += chunk;
+        }
+        metrics.gemm(nb, m, k, n);
+        metrics.pad_waste += ((mp * kp * np_) as u64).saturating_sub((m * k * n) as u64) * nb as u64;
+    }
+
+    fn batched_qr(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        q: &mut [f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        if nb == 0 {
+            return;
+        }
+        let Some(entry) = self.catalog.find_qr(rows, cols) else {
+            self.stats.borrow_mut().fallbacks += 1;
+            return self.fallback.batched_qr(nb, rows, cols, a, q, r, metrics);
+        };
+        let (rp, cp, nbp) = (entry.rows, entry.cols, entry.nb);
+        let offsets: Vec<usize> = (0..nb).map(|i| i * rows * cols).collect();
+        let mut chunk_start = 0;
+        while chunk_start < nb {
+            let chunk = (nb - chunk_start).min(nbp);
+            let items = chunk_start..chunk_start + chunk;
+            let buf = gather_padded(a, &offsets, items.clone(), rows, cols, nbp, rp, cp);
+            let lit = xla::Literal::vec1(&buf)
+                .reshape(&[nbp as i64, rp as i64, cp as i64])
+                .expect("reshape qr input");
+            let out = self.run(&entry.path, &[lit]).expect("qr artifact execution");
+            let qf: Vec<f64> = out[0].to_vec().expect("q output");
+            let rf: Vec<f64> = out[1].to_vec().expect("r output");
+            for (slot, item) in items.enumerate() {
+                for i in 0..rows {
+                    for j in 0..cols {
+                        q[item * rows * cols + i * cols + j] = qf[slot * rp * cp + i * cp + j];
+                    }
+                }
+                for i in 0..cols {
+                    for j in 0..cols {
+                        r[item * cols * cols + i * cols + j] = rf[slot * cp * cp + i * cp + j];
+                    }
+                }
+            }
+            chunk_start += chunk;
+        }
+        metrics.qr(nb, rows, cols);
+    }
+
+    fn batched_qr_r(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        // reuse the full-QR artifact, discard Q
+        let mut q = vec![0.0; nb * rows * cols];
+        self.batched_qr(nb, rows, cols, a, &mut q, r, metrics);
+    }
+
+    fn batched_svd(
+        &self,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        u: &mut [f64],
+        s: &mut [f64],
+        v: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        if nb == 0 {
+            return;
+        }
+        let Some(entry) = self.catalog.find_svd(rows, cols) else {
+            self.stats.borrow_mut().fallbacks += 1;
+            return self.fallback.batched_svd(nb, rows, cols, a, u, s, v, metrics);
+        };
+        let (rp, cp, nbp) = (entry.rows, entry.cols, entry.nb);
+        let offsets: Vec<usize> = (0..nb).map(|i| i * rows * cols).collect();
+        let mut chunk_start = 0;
+        while chunk_start < nb {
+            let chunk = (nb - chunk_start).min(nbp);
+            let items = chunk_start..chunk_start + chunk;
+            let buf = gather_padded(a, &offsets, items.clone(), rows, cols, nbp, rp, cp);
+            let lit = xla::Literal::vec1(&buf)
+                .reshape(&[nbp as i64, rp as i64, cp as i64])
+                .expect("reshape svd input");
+            let out = self.run(&entry.path, &[lit]).expect("svd artifact execution");
+            let uf: Vec<f64> = out[0].to_vec().expect("u output");
+            let sf: Vec<f64> = out[1].to_vec().expect("s output");
+            let vf: Vec<f64> = out[2].to_vec().expect("v output");
+            // Padded zero columns produce zero singular values sorted last,
+            // so the leading `cols` triplets are exactly the unpadded SVD.
+            for (slot, item) in items.enumerate() {
+                for i in 0..rows {
+                    for j in 0..cols {
+                        u[item * rows * cols + i * cols + j] = uf[slot * rp * cp + i * cp + j];
+                    }
+                }
+                s[item * cols..(item + 1) * cols].copy_from_slice(&sf[slot * cp..slot * cp + cols]);
+                for i in 0..cols {
+                    for j in 0..cols {
+                        v[item * cols * cols + i * cols + j] = vf[slot * cp * cp + i * cp + j];
+                    }
+                }
+            }
+            chunk_start += chunk;
+        }
+        metrics.svd(nb, rows, cols);
+    }
+}

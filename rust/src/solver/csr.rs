@@ -1,0 +1,143 @@
+//! Compressed-sparse-row matrices (the distributed sparse substrate for
+//! the regularization operator C and the multigrid hierarchy).
+
+/// A square CSR matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from triplets (duplicates summed, rows sorted).
+    pub fn from_triplets(n: usize, triplets: &mut Vec<(u32, u32, f64)>) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut cols = Vec::with_capacity(triplets.len());
+        let mut vals: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(u32, u32)> = None;
+        for &(r, c, v) in triplets.iter() {
+            if last == Some((r, c)) {
+                *vals.last_mut().unwrap() += v;
+                continue;
+            }
+            last = Some((r, c));
+            cols.push(c);
+            vals.push(v);
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr { n, row_ptr, cols, vals }
+    }
+
+    /// y = A x.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for i in 0..self.n {
+            let mut s = 0.0;
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                s += self.vals[idx] * x[self.cols[idx] as usize];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// y += alpha * A x.
+    pub fn spmv_acc(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.n {
+            let mut s = 0.0;
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                s += self.vals[idx] * x[self.cols[idx] as usize];
+            }
+            y[i] += alpha * s;
+        }
+    }
+
+    /// Main diagonal.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.n];
+        for i in 0..self.n {
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                if self.cols[idx] as usize == i {
+                    d[i] = self.vals[idx];
+                }
+            }
+        }
+        d
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Symmetry check (structure + values), O(nnz log nnz). Test helper.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        use std::collections::HashMap;
+        let mut map = HashMap::new();
+        for i in 0..self.n {
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                map.insert((i as u32, self.cols[idx]), self.vals[idx]);
+            }
+        }
+        map.iter().all(|(&(r, c), &v)| {
+            map.get(&(c, r)).map(|&w| (v - w).abs() <= tol).unwrap_or(false)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laplace_1d(n: usize) -> Csr {
+        let mut t = Vec::new();
+        for i in 0..n as u32 {
+            t.push((i, i, 2.0));
+            if i > 0 {
+                t.push((i, i - 1, -1.0));
+            }
+            if (i as usize) < n - 1 {
+                t.push((i, i + 1, -1.0));
+            }
+        }
+        Csr::from_triplets(n, &mut t)
+    }
+
+    #[test]
+    fn spmv_laplacian() {
+        let a = laplace_1d(5);
+        let x = vec![1.0; 5];
+        let mut y = vec![0.0; 5];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, vec![1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut t = vec![(0u32, 0u32, 1.0), (0, 0, 2.0), (1, 1, 5.0)];
+        let a = Csr::from_triplets(2, &mut t);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.diagonal(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn symmetric_check() {
+        assert!(laplace_1d(8).is_symmetric(0.0));
+        let mut t = vec![(0u32, 1u32, 1.0)];
+        assert!(!Csr::from_triplets(2, &mut t).is_symmetric(0.0));
+    }
+
+    #[test]
+    fn spmv_acc_accumulates() {
+        let a = laplace_1d(3);
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0; 3];
+        a.spmv_acc(2.0, &x, &mut y);
+        // A x = [0, 0, 4]... check: row0: 2*1-2= 0; row1: -1+4-3=0; row2: -2+6=4
+        assert_eq!(y, vec![10.0, 10.0, 18.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Krylov + multigrid solver substrate for the integral fractional
+//! diffusion application (§6.4). The paper drives this through PETSc
+//! (CG + smoothed-aggregation AMG); here the same roles are filled by an
+//! in-tree preconditioned CG and a geometric multigrid V-cycle — the
+//! natural equivalent for the regular-grid, 5-point-footprint
+//! regularization operator C (see DESIGN.md "Substitutions").
+
+pub mod cg;
+pub mod csr;
+pub mod multigrid;
+
+pub use cg::{pcg, CgResult, LinOp};
+pub use csr::Csr;
+pub use multigrid::Multigrid;

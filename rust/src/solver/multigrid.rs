@@ -1,0 +1,298 @@
+//! Geometric multigrid V-cycle on cell-centered 2D grids — the
+//! preconditioner for the regularization operator C (§6.4; the paper uses
+//! PETSc smoothed-aggregation AMG, see DESIGN.md "Substitutions").
+//!
+//! Coarsening is 2×2 cell agglomeration (restriction = 4-cell average,
+//! prolongation = piecewise-constant injection, so P = 4·Rᵀ); the operator
+//! hierarchy is supplied by the application (rediscretization, the
+//! standard geometric choice). Smoother: damped Jacobi, symmetric pre/post
+//! so the V-cycle is SPD and usable inside CG.
+
+use crate::solver::cg::LinOp;
+use crate::solver::Csr;
+
+/// One level of the hierarchy.
+pub struct MgLevel {
+    pub a: Csr,
+    pub n_side: usize,
+    pub diag_inv: Vec<f64>,
+}
+
+/// Geometric multigrid preconditioner.
+pub struct Multigrid {
+    /// levels[0] = finest.
+    pub levels: Vec<MgLevel>,
+    /// damped-Jacobi weight
+    pub omega: f64,
+    /// pre/post smoothing steps
+    pub nu: usize,
+    /// Coarse-grid-correction damping (1.0 with the bilinear transfers;
+    /// kept configurable for experiments).
+    pub correction_weight: f64,
+    // workspaces per level
+    r: Vec<Vec<f64>>,
+    x: Vec<Vec<f64>>,
+    b: Vec<Vec<f64>>,
+    t: Vec<Vec<f64>>,
+}
+
+impl Multigrid {
+    /// Build from per-level operators (finest first); `n_sides[i]` is the
+    /// grid side of level i, halving each level.
+    pub fn new(ops: Vec<Csr>, n_sides: Vec<usize>) -> Self {
+        assert_eq!(ops.len(), n_sides.len());
+        assert!(!ops.is_empty());
+        for (i, w) in n_sides.windows(2).enumerate() {
+            assert_eq!(w[0], 2 * w[1], "level {i} sides must halve: {:?}", n_sides);
+        }
+        let levels: Vec<MgLevel> = ops
+            .into_iter()
+            .zip(&n_sides)
+            .map(|(a, &n_side)| {
+                assert_eq!(a.n, n_side * n_side);
+                let diag_inv = a.diagonal().iter().map(|&d| 1.0 / d).collect();
+                MgLevel { a, n_side, diag_inv }
+            })
+            .collect();
+        let sizes: Vec<usize> = levels.iter().map(|l| l.a.n).collect();
+        Multigrid {
+            levels,
+            omega: 0.8,
+            nu: 2,
+            correction_weight: 1.0,
+            r: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            x: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            b: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            t: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        }
+    }
+
+    fn smooth(&mut self, lvl: usize, steps: usize) {
+        for _ in 0..steps {
+            let level = &self.levels[lvl];
+            level.a.spmv(&self.x[lvl], &mut self.t[lvl]);
+            let (x, t, b) = (&mut self.x[lvl], &self.t[lvl], &self.b[lvl]);
+            for i in 0..level.a.n {
+                x[i] += self.omega * level.diag_inv[i] * (b[i] - t[i]);
+            }
+        }
+    }
+
+    /// Per-dimension bilinear stencil of a fine cell-center between its
+    /// two nearest coarse cell-centers: (base index, neighbor index,
+    /// base weight, neighbor weight). Clamped one-sided at boundaries.
+    #[inline]
+    fn stencil_1d(fi: usize, nc: usize) -> (usize, usize, f64, f64) {
+        let base = fi / 2;
+        let nb = if fi % 2 == 0 { base.wrapping_sub(1) } else { base + 1 };
+        if nb >= nc {
+            (base, base, 1.0, 0.0)
+        } else {
+            (base, nb, 0.75, 0.25)
+        }
+    }
+
+    /// Restrict fine residual to the coarse rhs: R = ¼·Pᵀ of the bilinear
+    /// prolongation (exact transpose so the V-cycle stays symmetric).
+    fn restrict(&mut self, lvl: usize) {
+        let nf = self.levels[lvl].n_side;
+        let nc = self.levels[lvl + 1].n_side;
+        let (fine, rest) = self.r.split_at_mut(lvl + 1);
+        let _ = rest;
+        let fine = &fine[lvl];
+        let coarse = &mut self.b[lvl + 1];
+        coarse.fill(0.0);
+        for fj in 0..nf {
+            let (bj, nj, wj, vj) = Self::stencil_1d(fj, nc);
+            for fi in 0..nf {
+                let (bi, ni, wi, vi) = Self::stencil_1d(fi, nc);
+                let r = 0.25 * fine[fj * nf + fi];
+                coarse[bj * nc + bi] += wj * wi * r;
+                coarse[bj * nc + ni] += wj * vi * r;
+                coarse[nj * nc + bi] += vj * wi * r;
+                coarse[nj * nc + ni] += vj * vi * r;
+            }
+        }
+    }
+
+    /// Prolongate the coarse correction back (bilinear) and add.
+    fn prolongate(&mut self, lvl: usize) {
+        let nf = self.levels[lvl].n_side;
+        let nc = self.levels[lvl + 1].n_side;
+        let (head, tail) = self.x.split_at_mut(lvl + 1);
+        let fine = &mut head[lvl];
+        let coarse = &tail[0];
+        let w = self.correction_weight;
+        for fj in 0..nf {
+            let (bj, nj, wj, vj) = Self::stencil_1d(fj, nc);
+            for fi in 0..nf {
+                let (bi, ni, wi, vi) = Self::stencil_1d(fi, nc);
+                let v = wj * wi * coarse[bj * nc + bi]
+                    + wj * vi * coarse[bj * nc + ni]
+                    + vj * wi * coarse[nj * nc + bi]
+                    + vj * vi * coarse[nj * nc + ni];
+                fine[fj * nf + fi] += w * v;
+            }
+        }
+    }
+
+    fn vcycle(&mut self, lvl: usize) {
+        if lvl + 1 == self.levels.len() {
+            // coarse solve: many Jacobi sweeps (grids are tiny)
+            self.smooth(lvl, 50);
+            return;
+        }
+        self.smooth(lvl, self.nu);
+        // r = b - A x
+        self.levels[lvl].a.spmv(&self.x[lvl], &mut self.t[lvl]);
+        for i in 0..self.levels[lvl].a.n {
+            self.r[lvl][i] = self.b[lvl][i] - self.t[lvl][i];
+        }
+        self.restrict(lvl);
+        self.x[lvl + 1].fill(0.0);
+        self.vcycle(lvl + 1);
+        self.prolongate(lvl);
+        self.smooth(lvl, self.nu);
+    }
+
+    /// One V-cycle as a preconditioner application: x = M⁻¹ b.
+    pub fn apply_vcycle(&mut self, b: &[f64], x: &mut [f64]) {
+        self.b[0].copy_from_slice(b);
+        self.x[0].fill(0.0);
+        self.vcycle(0);
+        x.copy_from_slice(&self.x[0]);
+    }
+}
+
+impl LinOp for Multigrid {
+    fn n(&self) -> usize {
+        self.levels[0].a.n
+    }
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        self.apply_vcycle(x, y);
+    }
+}
+
+/// Build the variable-coefficient 5-point operator
+/// (−div(κ∇) + shift·I, Dirichlet-by-truncation) on an n×n cell-centered
+/// grid over [lo, hi]², scaled by `scale`. Shared by the fractional app's
+/// C matrix and the multigrid hierarchy.
+pub fn five_point_operator(
+    n: usize,
+    lo: f64,
+    hi: f64,
+    scale: f64,
+    shift: f64,
+    kappa: &dyn Fn(f64, f64) -> f64,
+) -> Csr {
+    let h = (hi - lo) / n as f64;
+    let pos = |i: usize| lo + (i as f64 + 0.5) * h;
+    let idx = |i: usize, j: usize| (j * n + i) as u32;
+    let mut t: Vec<(u32, u32, f64)> = Vec::with_capacity(5 * n * n);
+    for j in 0..n {
+        for i in 0..n {
+            let (x, y) = (pos(i), pos(j));
+            let kc = kappa(x, y);
+            let mut diag = shift;
+            let neighbor = |ii: i64, jj: i64, t: &mut Vec<(u32, u32, f64)>| {
+                if ii < 0 || jj < 0 || ii >= n as i64 || jj >= n as i64 {
+                    // Dirichlet (u = 0 outside): face conductance still
+                    // contributes to the diagonal
+                    let ke = kc; // one-sided
+                    return ke / (h * h);
+                }
+                let (xn, yn) = (pos(ii as usize), pos(jj as usize));
+                let ke = (kc * kappa(xn, yn)).sqrt(); // geometric mean (paper's a(x,y))
+                t.push((idx(i, j), idx(ii as usize, jj as usize), -scale * ke / (h * h)));
+                ke / (h * h)
+            };
+            diag += neighbor(i as i64 - 1, j as i64, &mut t);
+            diag += neighbor(i as i64 + 1, j as i64, &mut t);
+            diag += neighbor(i as i64, j as i64 - 1, &mut t);
+            diag += neighbor(i as i64, j as i64 + 1, &mut t);
+            t.push((idx(i, j), idx(i, j), scale * diag));
+        }
+    }
+    Csr::from_triplets(n * n, &mut t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::cg::{pcg, Identity};
+    use crate::util::Prng;
+
+    fn hierarchy(n0: usize) -> Multigrid {
+        let mut ops = Vec::new();
+        let mut sides = Vec::new();
+        let mut n = n0;
+        while n >= 4 {
+            ops.push(five_point_operator(n, -1.0, 1.0, 1.0, 0.0, &|_, _| 1.0));
+            sides.push(n);
+            n /= 2;
+        }
+        Multigrid::new(ops, sides)
+    }
+
+    #[test]
+    fn operator_is_symmetric() {
+        let a = five_point_operator(8, -1.0, 1.0, 1.0, 0.0, &|x, y| 1.0 + x * x + y * y);
+        assert!(a.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn vcycle_reduces_residual() {
+        let mut mg = hierarchy(32);
+        let n = 32 * 32;
+        let mut rng = Prng::new(90);
+        let b = rng.normal_vec(n);
+        let mut x = vec![0.0; n];
+        mg.apply_vcycle(&b, &mut x);
+        // residual after one V-cycle must be much smaller than ||b||
+        let mut r = vec![0.0; n];
+        mg.levels[0].a.spmv(&x, &mut r);
+        let rnorm: f64 =
+            b.iter().zip(&r).map(|(bi, ri)| (bi - ri) * (bi - ri)).sum::<f64>().sqrt();
+        let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(rnorm < 0.6 * bnorm, "V-cycle contraction too weak: {}", rnorm / bnorm);
+    }
+
+    #[test]
+    fn mg_preconditioned_cg_is_h_independent_ish() {
+        // iteration counts should stay nearly flat as the grid refines
+        let mut iters = Vec::new();
+        for n0 in [16usize, 32, 64] {
+            let n = n0 * n0;
+            let a = five_point_operator(n0, -1.0, 1.0, 1.0, 0.0, &|_, _| 1.0);
+            let mut mg = hierarchy(n0);
+            let b = vec![1.0; n];
+            let mut x = vec![0.0; n];
+            let mut op = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+            let res = pcg(&mut op, &mut mg, &b, &mut x, 1e-8, 200);
+            assert!(res.converged);
+            iters.push(res.iterations);
+        }
+        assert!(
+            iters[2] <= iters[0] + 6,
+            "MG-CG iterations grew with refinement: {iters:?}"
+        );
+    }
+
+    #[test]
+    fn mg_beats_unpreconditioned() {
+        let n0 = 64;
+        let n = n0 * n0;
+        let a = five_point_operator(n0, -1.0, 1.0, 1.0, 0.0, &|_, _| 1.0);
+        let b = vec![1.0; n];
+
+        let mut x1 = vec![0.0; n];
+        let mut op1 = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+        let plain = pcg(&mut op1, &mut Identity(n), &b, &mut x1, 1e-8, 2000);
+
+        let mut x2 = vec![0.0; n];
+        let mut mg = hierarchy(n0);
+        let mut op2 = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+        let pre = pcg(&mut op2, &mut mg, &b, &mut x2, 1e-8, 2000);
+        assert!(pre.iterations * 3 < plain.iterations, "{} vs {}", pre.iterations, plain.iterations);
+    }
+}

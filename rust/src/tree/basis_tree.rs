@@ -1,0 +1,182 @@
+//! Nested basis trees (the paper's U and V, Fig. 3).
+//!
+//! Explicit bases are stored only at the leaves (m_pad × k per node,
+//! zero-padded to the maximum leaf size so one batched kernel covers the
+//! level); inner nodes are reached through interlevel transfer matrices
+//! E (k_l × k_{l-1} per node of level l). Storage is flattened per level —
+//! the layout the marshaling kernels (Alg. 3) index into.
+
+/// A nested basis tree over a perfect binary cluster tree of given depth.
+#[derive(Clone, Debug)]
+pub struct BasisTree {
+    /// Depth of the tree (leaves at level `depth`).
+    pub depth: usize,
+    /// `ranks[l]` = basis rank at level l (uniform per level, §2.1).
+    /// `ranks[0]` is the rank of the root node's (implicit) basis.
+    pub ranks: Vec<usize>,
+    /// Padded leaf dimension m_pad (max leaf size).
+    pub leaf_dim: usize,
+    /// Actual row count of each leaf node (<= leaf_dim).
+    pub leaf_sizes: Vec<usize>,
+    /// Explicit leaf bases: node j occupies
+    /// `leaf_bases[j*leaf_dim*k .. (j+1)*leaf_dim*k]`, row-major
+    /// (leaf_dim × k), rows past `leaf_sizes[j]` zero.
+    pub leaf_bases: Vec<f64>,
+    /// `transfers[l]` for l in 1..=depth: node j of level l stores its
+    /// E_j (k_l × k_{l-1}) at `transfers[l][j*k_l*k_par ..]`. `transfers[0]`
+    /// is empty.
+    pub transfers: Vec<Vec<f64>>,
+}
+
+impl BasisTree {
+    /// An all-zero basis tree with the given per-level ranks.
+    pub fn zeros(depth: usize, ranks: Vec<usize>, leaf_dim: usize, leaf_sizes: Vec<usize>) -> Self {
+        assert_eq!(ranks.len(), depth + 1);
+        assert_eq!(leaf_sizes.len(), 1 << depth);
+        let num_leaves = 1usize << depth;
+        let leaf_bases = vec![0.0; num_leaves * leaf_dim * ranks[depth]];
+        let mut transfers = vec![Vec::new()];
+        for l in 1..=depth {
+            transfers.push(vec![0.0; (1 << l) * ranks[l] * ranks[l - 1]]);
+        }
+        BasisTree { depth, ranks, leaf_dim, leaf_sizes, leaf_bases, transfers }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        1usize << self.depth
+    }
+
+    /// Leaf basis of node j as a (leaf_dim × k) slice.
+    pub fn leaf(&self, j: usize) -> &[f64] {
+        let k = self.ranks[self.depth];
+        &self.leaf_bases[j * self.leaf_dim * k..(j + 1) * self.leaf_dim * k]
+    }
+
+    pub fn leaf_mut(&mut self, j: usize) -> &mut [f64] {
+        let k = self.ranks[self.depth];
+        &mut self.leaf_bases[j * self.leaf_dim * k..(j + 1) * self.leaf_dim * k]
+    }
+
+    /// Transfer matrix E_j of node j at level l (k_l × k_{l-1}).
+    pub fn transfer(&self, l: usize, j: usize) -> &[f64] {
+        let sz = self.ranks[l] * self.ranks[l - 1];
+        &self.transfers[l][j * sz..(j + 1) * sz]
+    }
+
+    pub fn transfer_mut(&mut self, l: usize, j: usize) -> &mut [f64] {
+        let sz = self.ranks[l] * self.ranks[l - 1];
+        &mut self.transfers[l][j * sz..(j + 1) * sz]
+    }
+
+    /// Memory footprint of the basis tree in f64 words (leaf bases use the
+    /// *actual* leaf sizes — padding is an execution detail, not storage).
+    pub fn memory_words(&self) -> usize {
+        let k_leaf = self.ranks[self.depth];
+        let leaves: usize = self.leaf_sizes.iter().map(|&s| s * k_leaf).sum();
+        let transfers: usize =
+            (1..=self.depth).map(|l| (1usize << l) * self.ranks[l] * self.ranks[l - 1]).sum();
+        leaves + transfers
+    }
+
+    /// Materialize the *explicit* basis of node j at level l
+    /// (rows(node) × k_l) by expanding transfers down to the leaves.
+    /// O(size of subtree); used by tests and small-problem oracles only.
+    pub fn explicit_basis(&self, l: usize, j: usize) -> Vec<Vec<f64>> {
+        let k = self.ranks[l];
+        if l == self.depth {
+            let rows = self.leaf_sizes[j];
+            let lb = self.leaf(j);
+            return (0..rows).map(|i| lb[i * k..(i + 1) * k].to_vec()).collect();
+        }
+        // rows of child blocks stacked: child basis * E_child
+        let mut rows = Vec::new();
+        for c in [2 * j, 2 * j + 1] {
+            let child = self.explicit_basis(l + 1, c);
+            let e = self.transfer(l + 1, c); // k_child x k
+            let k_child = self.ranks[l + 1];
+            for crow in child {
+                let mut row = vec![0.0; k];
+                for (p, &cv) in crow.iter().enumerate().take(k_child) {
+                    if cv == 0.0 {
+                        continue;
+                    }
+                    for q in 0..k {
+                        row[q] += cv * e[p * k + q];
+                    }
+                }
+                rows.push(row);
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_tree(depth: usize, k: usize, m: usize, seed: u64) -> BasisTree {
+        let mut rng = Prng::new(seed);
+        let leaves = 1usize << depth;
+        let mut t = BasisTree::zeros(depth, vec![k; depth + 1], m, vec![m; leaves]);
+        let n = t.leaf_bases.len();
+        t.leaf_bases = rng.normal_vec(n);
+        for l in 1..=depth {
+            let n = t.transfers[l].len();
+            t.transfers[l] = rng.normal_vec(n);
+        }
+        t
+    }
+
+    #[test]
+    fn shapes_and_slices() {
+        let t = random_tree(3, 4, 8, 1);
+        assert_eq!(t.num_leaves(), 8);
+        assert_eq!(t.leaf(3).len(), 8 * 4);
+        assert_eq!(t.transfer(2, 1).len(), 16);
+    }
+
+    #[test]
+    fn explicit_basis_leaf_is_leaf() {
+        let t = random_tree(2, 3, 5, 2);
+        let e = t.explicit_basis(2, 1);
+        assert_eq!(e.len(), 5);
+        for (i, row) in e.iter().enumerate() {
+            assert_eq!(row.as_slice(), &t.leaf(1)[i * 3..(i + 1) * 3]);
+        }
+    }
+
+    #[test]
+    fn explicit_basis_nestedness() {
+        // U_parent rows = [U_c1 E_c1; U_c2 E_c2] — check row counts and one
+        // algebraic identity: parent row i (from child 1) equals
+        // child1_row_i . E_c1.
+        let t = random_tree(2, 3, 4, 3);
+        let parent = t.explicit_basis(1, 0);
+        let child = t.explicit_basis(2, 0);
+        assert_eq!(parent.len(), 8);
+        let e = t.transfer(2, 0);
+        for (i, crow) in child.iter().enumerate() {
+            for q in 0..3 {
+                let want: f64 = (0..3).map(|p| crow[p] * e[p * 3 + q]).sum();
+                assert!((parent[i][q] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_counts_actual_sizes() {
+        let mut t = random_tree(1, 2, 4, 4);
+        t.leaf_sizes = vec![3, 4];
+        // leaves: (3+4)*2 = 14; transfers level1: 2 nodes * 2*2 = 8
+        assert_eq!(t.memory_words(), 22);
+    }
+
+    #[test]
+    fn zeros_is_zero() {
+        let t = BasisTree::zeros(2, vec![2, 2, 2], 4, vec![4; 4]);
+        assert!(t.leaf_bases.iter().all(|&x| x == 0.0));
+        assert!(t.transfers[1].iter().all(|&x| x == 0.0));
+    }
+}

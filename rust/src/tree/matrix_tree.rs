@@ -1,0 +1,308 @@
+//! The matrix tree: per-level block-sparse coupling matrices S plus the
+//! dense leaf blocks A_de, and the [`H2Matrix`] container tying them to the
+//! cluster and basis trees (§2.1).
+//!
+//! Each level is stored CSR-style over block rows together with the
+//! *conflict-free batch ordering* of §3.2: batch b contains, for every
+//! block row, its b-th block — so within a batch all output rows are
+//! distinct and a batched accumulate-GEMM has no write conflicts. The
+//! bounded sparsity constant C_sp bounds the number of batches.
+
+use crate::admissibility::MatrixStructure;
+use crate::clustering::ClusterTree;
+use crate::tree::BasisTree;
+
+/// One level of the coupling-matrix tree: a block-sparse matrix whose
+/// blocks are k_l × k_l coupling matrices.
+#[derive(Clone, Debug, Default)]
+pub struct CouplingLevel {
+    /// (row, col) node pairs, sorted by (row, col).
+    pub pairs: Vec<(u32, u32)>,
+    /// CSR row pointer over the 2^l block rows (len 2^l + 1).
+    pub row_ptr: Vec<usize>,
+    /// Block data: pair p occupies `data[p*k*k .. (p+1)*k*k]` (row-major).
+    pub data: Vec<f64>,
+    /// Conflict-free batches: `batches[b]` lists pair indices that are the
+    /// b-th block of their row (all rows distinct within a batch).
+    pub batches: Vec<Vec<u32>>,
+}
+
+impl CouplingLevel {
+    /// Assemble structure (no data) from a sorted pair list.
+    pub fn from_pairs(pairs: Vec<(u32, u32)>, nrows: usize, k: usize) -> Self {
+        let mut row_ptr = vec![0usize; nrows + 1];
+        for &(t, _) in &pairs {
+            row_ptr[t as usize + 1] += 1;
+        }
+        for i in 0..nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let max_per_row = (0..nrows).map(|i| row_ptr[i + 1] - row_ptr[i]).max().unwrap_or(0);
+        let mut batches = vec![Vec::new(); max_per_row];
+        for i in 0..nrows {
+            for (b, p) in (row_ptr[i]..row_ptr[i + 1]).enumerate() {
+                batches[b].push(p as u32);
+            }
+        }
+        let data = vec![0.0; pairs.len() * k * k];
+        CouplingLevel { pairs, row_ptr, data, batches }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Block p as a k×k slice.
+    pub fn block(&self, p: usize, k: usize) -> &[f64] {
+        &self.data[p * k * k..(p + 1) * k * k]
+    }
+
+    pub fn block_mut(&mut self, p: usize, k: usize) -> &mut [f64] {
+        &mut self.data[p * k * k..(p + 1) * k * k]
+    }
+
+    /// Column indices of the blocks in block row t.
+    pub fn row_cols(&self, t: usize) -> impl Iterator<Item = u32> + '_ {
+        self.pairs[self.row_ptr[t]..self.row_ptr[t + 1]].iter().map(|&(_, s)| s)
+    }
+}
+
+/// Dense (inadmissible) leaf blocks, zero-padded to m_pad × m_pad so one
+/// batched GEMM covers them all.
+#[derive(Clone, Debug, Default)]
+pub struct DenseBlocks {
+    pub pairs: Vec<(u32, u32)>,
+    pub row_ptr: Vec<usize>,
+    /// Padded block dimension.
+    pub m_pad: usize,
+    /// Block p at `data[p*m_pad*m_pad ..]`, rows/cols past the actual
+    /// cluster sizes are zero.
+    pub data: Vec<f64>,
+    pub batches: Vec<Vec<u32>>,
+}
+
+impl DenseBlocks {
+    pub fn from_pairs(pairs: Vec<(u32, u32)>, nrows: usize, m_pad: usize) -> Self {
+        let cl = CouplingLevel::from_pairs(pairs, nrows, 0);
+        DenseBlocks {
+            pairs: cl.pairs,
+            row_ptr: cl.row_ptr,
+            m_pad,
+            data: vec![0.0; 0],
+            batches: cl.batches,
+        }
+        .with_alloc()
+    }
+
+    fn with_alloc(mut self) -> Self {
+        self.data = vec![0.0; self.pairs.len() * self.m_pad * self.m_pad];
+        self
+    }
+
+    pub fn block(&self, p: usize) -> &[f64] {
+        let sz = self.m_pad * self.m_pad;
+        &self.data[p * sz..(p + 1) * sz]
+    }
+
+    pub fn block_mut(&mut self, p: usize) -> &mut [f64] {
+        let sz = self.m_pad * self.m_pad;
+        &mut self.data[p * sz..(p + 1) * sz]
+    }
+}
+
+/// A complete H^2 matrix: A = A_de + ⟨U, S, Vᵀ⟩ (§2.1).
+///
+/// The same cluster tree serves rows and columns (square kernel matrices);
+/// U and V are stored separately (they coincide numerically for symmetric
+/// kernels but the algorithms never rely on that).
+#[derive(Clone, Debug)]
+pub struct H2Matrix {
+    pub tree: ClusterTree,
+    pub u: BasisTree,
+    pub v: BasisTree,
+    /// coupling[l] = level-l block-sparse coupling matrix (empty levels
+    /// have no pairs).
+    pub coupling: Vec<CouplingLevel>,
+    pub dense: DenseBlocks,
+}
+
+impl H2Matrix {
+    /// Matrix dimension N.
+    pub fn n(&self) -> usize {
+        self.tree.num_points()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.tree.depth
+    }
+
+    /// Rank at level l.
+    pub fn rank(&self, l: usize) -> usize {
+        self.u.ranks[l]
+    }
+
+    /// Build the structure-only container from a [`MatrixStructure`].
+    pub fn from_structure(
+        tree: ClusterTree,
+        structure: &MatrixStructure,
+        ranks: &[usize],
+        m_pad: usize,
+    ) -> Self {
+        let depth = tree.depth;
+        assert_eq!(ranks.len(), depth + 1);
+        let leaf_sizes: Vec<usize> = tree.leaves().iter().map(|n| n.size()).collect();
+        let u = BasisTree::zeros(depth, ranks.to_vec(), m_pad, leaf_sizes.clone());
+        let v = BasisTree::zeros(depth, ranks.to_vec(), m_pad, leaf_sizes);
+        let coupling: Vec<CouplingLevel> = structure
+            .coupling
+            .iter()
+            .enumerate()
+            .map(|(l, pairs)| CouplingLevel::from_pairs(pairs.clone(), 1 << l, ranks[l]))
+            .collect();
+        let dense = DenseBlocks::from_pairs(structure.dense.clone(), 1 << depth, m_pad);
+        H2Matrix { tree, u, v, coupling, dense }
+    }
+
+    /// Low-rank memory in f64 words: bases + transfers + coupling blocks
+    /// (the quantity compressed in Fig. 11's right column).
+    pub fn low_rank_memory_words(&self) -> usize {
+        let bases = self.u.memory_words() + self.v.memory_words();
+        let coupling: usize = self
+            .coupling
+            .iter()
+            .enumerate()
+            .map(|(l, cl)| cl.num_blocks() * self.rank(l) * self.rank(l))
+            .sum();
+        bases + coupling
+    }
+
+    /// Dense-block memory in f64 words (actual, unpadded).
+    pub fn dense_memory_words(&self) -> usize {
+        let leaf = self.depth();
+        self.dense
+            .pairs
+            .iter()
+            .map(|&(t, s)| {
+                self.tree.node(leaf, t as usize).size() * self.tree.node(leaf, s as usize).size()
+            })
+            .sum()
+    }
+
+    /// Total H^2 memory in f64 words.
+    pub fn memory_words(&self) -> usize {
+        self.low_rank_memory_words() + self.dense_memory_words()
+    }
+
+    /// The sparsity constant of the assembled matrix.
+    pub fn sparsity_constant(&self) -> usize {
+        let mut best = 0;
+        for cl in &self.coupling {
+            best = best.max(cl.batches.len());
+        }
+        best.max(self.dense.batches.len())
+    }
+
+    /// Reconstruct the full dense matrix (permuted ordering). O(N^2) — test
+    /// and small-problem oracle only.
+    pub fn to_dense_permuted(&self) -> crate::linalg::Mat {
+        use crate::linalg::Mat;
+        let n = self.n();
+        let mut a = Mat::zeros(n, n);
+        let leaf = self.depth();
+        // dense blocks
+        for (p, &(t, s)) in self.dense.pairs.iter().enumerate() {
+            let nt = self.tree.node(leaf, t as usize);
+            let ns = self.tree.node(leaf, s as usize);
+            let blk = self.dense.block(p);
+            for i in 0..nt.size() {
+                for j in 0..ns.size() {
+                    a.data[(nt.start + i) * n + (ns.start + j)] = blk[i * self.dense.m_pad + j];
+                }
+            }
+        }
+        // low-rank blocks: U_t S_ts V_s^T via explicit bases
+        for (l, cl) in self.coupling.iter().enumerate() {
+            let k = self.rank(l);
+            for (p, &(t, s)) in cl.pairs.iter().enumerate() {
+                let ut = self.u.explicit_basis(l, t as usize);
+                let vs = self.v.explicit_basis(l, s as usize);
+                let blk = cl.block(p, k);
+                let nt = self.tree.node(l, t as usize);
+                let ns = self.tree.node(l, s as usize);
+                for (i, urow) in ut.iter().enumerate() {
+                    // tmp = urow * S  (1 x k)
+                    let mut tmp = vec![0.0; k];
+                    for (q, tq) in tmp.iter_mut().enumerate() {
+                        for (pp, &u_pp) in urow.iter().enumerate() {
+                            *tq += u_pp * blk[pp * k + q];
+                        }
+                    }
+                    for (j, vrow) in vs.iter().enumerate() {
+                        let mut v_acc = 0.0;
+                        for q in 0..k {
+                            v_acc += tmp[q] * vrow[q];
+                        }
+                        a.data[(nt.start + i) * n + (ns.start + j)] = v_acc;
+                    }
+                }
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_and_batches() {
+        // rows: 0 -> [1], 1 -> [0, 2], 2 -> [1]
+        let pairs = vec![(0u32, 1u32), (1, 0), (1, 2), (2, 1)];
+        let cl = CouplingLevel::from_pairs(pairs, 3, 2);
+        assert_eq!(cl.row_ptr, vec![0, 1, 3, 4]);
+        assert_eq!(cl.batches.len(), 2);
+        assert_eq!(cl.batches[0], vec![0, 1, 3]);
+        assert_eq!(cl.batches[1], vec![2]);
+        assert_eq!(cl.data.len(), 4 * 4);
+    }
+
+    #[test]
+    fn batches_have_unique_rows() {
+        let pairs: Vec<(u32, u32)> =
+            vec![(0, 1), (0, 2), (0, 3), (1, 0), (1, 3), (2, 0), (3, 0), (3, 1)];
+        let cl = CouplingLevel::from_pairs(pairs, 4, 1);
+        for batch in &cl.batches {
+            let mut rows: Vec<u32> = batch.iter().map(|&p| cl.pairs[p as usize].0).collect();
+            rows.sort_unstable();
+            rows.dedup();
+            assert_eq!(rows.len(), batch.len(), "conflict within batch");
+        }
+        // every pair appears in exactly one batch
+        let total: usize = cl.batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, cl.pairs.len());
+    }
+
+    #[test]
+    fn empty_level() {
+        let cl = CouplingLevel::from_pairs(Vec::new(), 4, 3);
+        assert_eq!(cl.num_blocks(), 0);
+        assert!(cl.batches.is_empty());
+        assert_eq!(cl.row_ptr, vec![0; 5]);
+    }
+
+    #[test]
+    fn row_cols_iterates_row() {
+        let pairs = vec![(0u32, 1u32), (1, 0), (1, 2)];
+        let cl = CouplingLevel::from_pairs(pairs, 2, 1);
+        let cols: Vec<u32> = cl.row_cols(1).collect();
+        assert_eq!(cols, vec![0, 2]);
+    }
+
+    #[test]
+    fn dense_blocks_alloc() {
+        let db = DenseBlocks::from_pairs(vec![(0, 0), (1, 1)], 2, 4);
+        assert_eq!(db.data.len(), 2 * 16);
+        assert_eq!(db.block(1).len(), 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! The H^2 matrix representation: nested basis trees, the level-wise
+//! block-sparse matrix tree of coupling blocks, dense leaf blocks, and the
+//! multilevel vector trees x̂/ŷ used by the matvec phases (§2.1, §3).
+
+pub mod basis_tree;
+pub mod matrix_tree;
+pub mod vector_tree;
+
+pub use basis_tree::BasisTree;
+pub use matrix_tree::{CouplingLevel, DenseBlocks, H2Matrix};
+pub use vector_tree::VectorTree;

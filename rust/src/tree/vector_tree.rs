@@ -1,0 +1,75 @@
+//! Multilevel vector trees (the paper's x̂ and ŷ, §3): at every level l,
+//! one (k_l × nv) coefficient block per cluster node, stored flattened so a
+//! whole level feeds a single batched kernel.
+
+/// A vector tree: per-level flattened coefficient blocks.
+#[derive(Clone, Debug)]
+pub struct VectorTree {
+    pub depth: usize,
+    /// ranks[l] = k_l (matches the basis tree it pairs with).
+    pub ranks: Vec<usize>,
+    /// Number of vectors processed concurrently.
+    pub nv: usize,
+    /// levels[l] has 2^l nodes, node j at
+    /// `levels[l][j*k_l*nv .. (j+1)*k_l*nv]` (row-major k_l × nv).
+    pub levels: Vec<Vec<f64>>,
+}
+
+impl VectorTree {
+    pub fn zeros(depth: usize, ranks: &[usize], nv: usize) -> Self {
+        assert_eq!(ranks.len(), depth + 1);
+        let levels = (0..=depth).map(|l| vec![0.0; (1 << l) * ranks[l] * nv]).collect();
+        VectorTree { depth, ranks: ranks.to_vec(), nv, levels }
+    }
+
+    /// Coefficient block of node j at level l.
+    pub fn node(&self, l: usize, j: usize) -> &[f64] {
+        let sz = self.ranks[l] * self.nv;
+        &self.levels[l][j * sz..(j + 1) * sz]
+    }
+
+    pub fn node_mut(&mut self, l: usize, j: usize) -> &mut [f64] {
+        let sz = self.ranks[l] * self.nv;
+        &mut self.levels[l][j * sz..(j + 1) * sz]
+    }
+
+    /// Zero all levels (reuse between matvecs without reallocating).
+    pub fn clear(&mut self) {
+        for l in &mut self.levels {
+            l.fill(0.0);
+        }
+    }
+
+    /// Total stored f64 words.
+    pub fn memory_words(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let v = VectorTree::zeros(3, &[2, 2, 4, 4], 3);
+        assert_eq!(v.levels[0].len(), 2 * 3);
+        assert_eq!(v.levels[3].len(), 8 * 4 * 3);
+        assert_eq!(v.node(3, 7).len(), 12);
+    }
+
+    #[test]
+    fn node_mut_writes_right_place() {
+        let mut v = VectorTree::zeros(2, &[2, 2, 2], 1);
+        v.node_mut(2, 1)[0] = 5.0;
+        assert_eq!(v.levels[2][2], 5.0);
+        v.clear();
+        assert!(v.levels[2].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn memory_counts() {
+        let v = VectorTree::zeros(1, &[2, 3], 2);
+        assert_eq!(v.memory_words(), 2 * 2 + 2 * 3 * 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, timers, chrome-trace emission and a
+//! mini property-testing harness (the offline build image has no
+//! `rand`/`criterion`/`proptest`; see DESIGN.md "Substitutions").
+
+pub mod prng;
+pub mod testing;
+pub mod timer;
+pub mod trace;
+
+pub use prng::Prng;
+pub use timer::Timer;

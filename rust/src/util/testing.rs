@@ -1,0 +1,93 @@
+//! Mini property-testing harness (the offline image has no `proptest`).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs drawn
+//! from a caller-provided generator; on failure it reports the seed and the
+//! case index so the exact failing input can be re-generated
+//! deterministically (`Prng::new(seed)` + case index replay).
+
+use super::prng::Prng;
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` on `cases` inputs produced by `gen` from a seeded PRNG.
+/// Panics with seed + case index on the first failure.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Prng) -> T,
+    P: FnMut(&T) -> CaseResult,
+    T: std::fmt::Debug,
+{
+    let mut rng = Prng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are elementwise close in a mixed absolute/relative
+/// sense: |a-b| <= atol + rtol*max(|a|,|b|).
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: element {i} differs: {x} vs {y} (|diff|={}, tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Relative l2 error ||a-b|| / ||b|| (0 if both are zero).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    let den: f64 = b.iter().map(|y| y * y).sum::<f64>().sqrt();
+    if den == 0.0 {
+        if num == 0.0 { 0.0 } else { f64::INFINITY }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 1, 50, |r| r.uniform(), |&u| {
+            if (0.0..1.0).contains(&u) { Ok(()) } else { Err(format!("out of range: {u}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 2, 10, |r| r.uniform(), |&u| {
+            if u < 0.5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        assert_eq!(rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn rel_err_scale() {
+        let e = rel_err(&[1.1], &[1.0]);
+        assert!((e - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_detects_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, 1e-9, "t");
+    }
+}

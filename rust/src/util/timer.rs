@@ -1,0 +1,72 @@
+//! Wall-clock timing helpers and the paper's measurement protocol:
+//! "every point in every plot has been generated as the average of 10 runs
+//! after discarding the fastest and slowest timings" (§6.1).
+
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Run `f` once for warmup, then `runs` times; return the trimmed mean of
+/// the measured times (drop the single fastest and single slowest run), in
+/// seconds. This is the paper's §6.1 protocol.
+pub fn trimmed_mean_time<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    assert!(runs >= 3, "need >=3 runs to trim");
+    f(); // warmup
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed());
+    }
+    trimmed_mean(&times)
+}
+
+/// Trimmed mean of a set of samples: drop min and max, average the rest.
+pub fn trimmed_mean(samples: &[f64]) -> f64 {
+    assert!(samples.len() >= 3);
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let inner = &s[1..s.len() - 1];
+    inner.iter().sum::<f64>() / inner.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let samples = [100.0, 1.0, 2.0, 3.0, 0.0];
+        assert!((trimmed_mean(&samples) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn trimmed_mean_time_runs() {
+        let mut count = 0;
+        let t = trimmed_mean_time(3, || count += 1);
+        assert_eq!(count, 4); // warmup + 3
+        assert!(t >= 0.0);
+    }
+}

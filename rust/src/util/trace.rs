@@ -1,0 +1,135 @@
+//! Chrome-trace (about:tracing / Perfetto) event emission, used to
+//! regenerate the paper's Fig. 8 execution timeline: per-rank streams with
+//! compute kernels, transfer phases and MPI gaps in *virtual time*.
+
+use std::fmt::Write as _;
+
+/// One complete ("X") trace event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event name, e.g. "upsweep L3" or "MPI exchange".
+    pub name: String,
+    /// Category: "compute", "comm", "transfer", "lowprio".
+    pub cat: String,
+    /// Process id: we map rank -> pid.
+    pub pid: usize,
+    /// Thread id: we map stream (0 main, 1 comm, 2 low-priority) -> tid.
+    pub tid: usize,
+    /// Start, microseconds (virtual time).
+    pub ts_us: f64,
+    /// Duration, microseconds.
+    pub dur_us: f64,
+}
+
+/// Collects events and serializes them to the Chrome trace JSON format.
+/// (Hand-rolled writer: no serde in the offline image.)
+#[derive(Default, Debug)]
+pub struct TraceCollector {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, cat: &str, pid: usize, tid: usize, ts_s: f64, dur_s: f64) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us: ts_s * 1e6,
+            dur_us: dur_s * 1e6,
+        });
+    }
+
+    /// Serialize to Chrome trace JSON (array-of-events form).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, e) in self.events.iter().enumerate() {
+            let comma = if i + 1 == self.events.len() { "" } else { "," };
+            // names are internal identifiers (no quoting hazards), but escape
+            // quotes/backslashes defensively.
+            let name = e.name.replace('\\', "\\\\").replace('"', "\\\"");
+            writeln!(
+                out,
+                "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}{}",
+                name, e.cat, e.pid, e.tid, e.ts_us, e.dur_us, comma
+            )
+            .unwrap();
+        }
+        out.push(']');
+        out
+    }
+
+    /// Render an ASCII timeline (one row per (pid,tid)), for quick terminal
+    /// inspection of overlap behaviour; `width` columns cover [0, t_max].
+    pub fn ascii_timeline(&self, width: usize) -> String {
+        if self.events.is_empty() {
+            return String::new();
+        }
+        let t_max = self
+            .events
+            .iter()
+            .map(|e| e.ts_us + e.dur_us)
+            .fold(0.0_f64, f64::max);
+        let mut keys: Vec<(usize, usize)> = self.events.iter().map(|e| (e.pid, e.tid)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let mut out = String::new();
+        for (pid, tid) in keys {
+            let mut row = vec![' '; width];
+            for e in self.events.iter().filter(|e| e.pid == pid && e.tid == tid) {
+                let a = ((e.ts_us / t_max) * width as f64) as usize;
+                let b = (((e.ts_us + e.dur_us) / t_max) * width as f64).ceil() as usize;
+                let ch = match e.cat.as_str() {
+                    "compute" => '#',
+                    "comm" => '~',
+                    "transfer" => '=',
+                    "lowprio" => '.',
+                    _ => '?',
+                };
+                for c in row.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                    *c = ch;
+                }
+            }
+            writeln!(out, "r{pid}/s{tid} |{}|", row.iter().collect::<String>()).unwrap();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let mut t = TraceCollector::new();
+        t.add("gemm", "compute", 0, 0, 0.0, 1e-3);
+        t.add("mpi", "comm", 0, 1, 1e-3, 2e-3);
+        let j = t.to_json();
+        assert!(j.starts_with('['));
+        assert!(j.ends_with(']'));
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"dur\": 1000.000"));
+    }
+
+    #[test]
+    fn ascii_has_rows_per_stream() {
+        let mut t = TraceCollector::new();
+        t.add("a", "compute", 0, 0, 0.0, 1.0);
+        t.add("b", "comm", 1, 0, 0.5, 0.5);
+        let a = t.ascii_timeline(40);
+        assert_eq!(a.lines().count(), 2);
+        assert!(a.contains('#'));
+        assert!(a.contains('~'));
+    }
+
+    #[test]
+    fn empty_timeline_is_empty() {
+        let t = TraceCollector::new();
+        assert!(t.ascii_timeline(10).is_empty());
+    }
+}

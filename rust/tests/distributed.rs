@@ -1,0 +1,151 @@
+//! Distributed-runtime integration: virtual-time behaviour (weak/strong
+//! scaling trends, overlap gains, comm-volume optimization) on mid-size
+//! problems — the qualitative shape of Figs. 8–12 as assertions.
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::{H2Config, NetworkModel};
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::compress::dist_compress;
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::geometry::PointSet;
+use h2opus::util::Prng;
+
+fn build_2d(n_side: usize) -> h2opus::tree::H2Matrix {
+    let points = PointSet::grid_2d(n_side, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    build_h2(points, &kernel, &cfg)
+}
+
+/// Strong scaling: fixed N, growing P → virtual time must drop
+/// substantially from P=1 to P=8 (Fig. 10's regime before the limit).
+#[test]
+fn strong_scaling_shape() {
+    let a = build_2d(64); // N = 4096
+    let n = a.n();
+    let mut rng = Prng::new(400);
+    let x = rng.normal_vec(n);
+    let mut times = Vec::new();
+    for p in [1usize, 8] {
+        let mut y = vec![0.0; n];
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let rep = dist_hgemv(&a, &NativeBackend, p, 1, &x, &mut y, &DistOptions::default());
+            best = best.min(rep.time);
+        }
+        times.push(best);
+    }
+    assert!(
+        times[1] < times[0] * 0.45,
+        "P=8 speedup too small: {times:?}"
+    );
+}
+
+/// The comm-volume optimization (§4.1): optimized volume must be well
+/// below the naive allgather volume on a refined matrix.
+#[test]
+fn comm_volume_optimized() {
+    let a = build_2d(64);
+    let d = h2opus::dist::Decomposition::new(8, a.depth());
+    let plan = h2opus::dist::ExchangePlan::build(&a, d);
+    for p in 0..8 {
+        let opt = plan.bytes_into(&a, p, 1);
+        let naive = plan.naive_bytes_into(&a, p, 1);
+        assert!(
+            (opt as f64) < 0.7 * naive as f64,
+            "rank {p}: {opt} vs naive {naive}"
+        );
+    }
+}
+
+/// Overlap (§4.2): with a slow network, overlapping reduces virtual time;
+/// the trace shows comm gaps shrinking (Fig. 8's effect).
+#[test]
+fn overlap_gains_on_slow_network() {
+    let a = build_2d(64);
+    let n = a.n();
+    let mut rng = Prng::new(401);
+    let nv = 8;
+    let x = rng.normal_vec(n * nv);
+    let slow = NetworkModel { alpha: 5e-4, beta: 1e-7 };
+    let mut y = vec![0.0; n * nv];
+    let run = |overlap: bool, y: &mut Vec<f64>| {
+        let opts = DistOptions { net: slow, overlap, trace: false };
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(dist_hgemv(&a, &NativeBackend, 8, nv, &x, y, &opts).time);
+        }
+        best
+    };
+    let with = run(true, &mut y);
+    let without = run(false, &mut y);
+    assert!(with < without, "overlap {with} !< serial {without}");
+}
+
+/// Weak-scaling shape for compression (Fig. 11): virtual time per fixed
+/// local size stays roughly flat when N and P grow together.
+#[test]
+fn compression_weak_scaling_shape() {
+    // local size fixed at 1024 points/rank
+    let cases = [(32usize, 1usize), (64, 4)];
+    let mut times = Vec::new();
+    for &(n_side, p) in &cases {
+        let mut a = build_2d(n_side);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let mut b = a.clone();
+            let (_, rep) = dist_compress(&mut b, p, 1e-3, &NativeBackend, NetworkModel::default());
+            best = best.min(rep.orthogonalization_time + rep.compression_time);
+        }
+        times.push(best);
+        let _ = &mut a;
+    }
+    // allow generous slack (timing noise on 1 core), but reject gross
+    // departures from weak scalability
+    assert!(
+        times[1] < times[0] * 3.0,
+        "weak scaling broken: {times:?}"
+    );
+}
+
+/// The trace output contains the three streams of Fig. 8 and valid JSON
+/// bracketing.
+#[test]
+fn trace_has_fig8_structure() {
+    let a = build_2d(32);
+    let n = a.n();
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: true };
+    let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+    let json = rep.trace_json.unwrap();
+    assert!(json.contains("\"cat\": \"compute\""));
+    assert!(json.contains("\"cat\": \"comm\""));
+    assert!(json.contains("\"cat\": \"lowprio\""));
+    assert!(json.trim_start().starts_with('[') && json.trim_end().ends_with(']'));
+}
+
+/// Multi-vector products must get *more* aggregate flops per virtual
+/// second than single-vector ones (the paper's arithmetic-intensity
+/// argument, Fig. 9 nv sweep).
+#[test]
+fn multivector_improves_throughput() {
+    let a = build_2d(64);
+    let n = a.n();
+    let mut rng = Prng::new(402);
+    let mut rate = |nv: usize| {
+        let x = rng.normal_vec(n * nv);
+        let mut y = vec![0.0; n * nv];
+        let mut best = f64::INFINITY;
+        let mut flops = 0;
+        for _ in 0..3 {
+            let rep = dist_hgemv(&a, &NativeBackend, 4, nv, &x, &mut y, &DistOptions::default());
+            best = best.min(rep.time);
+            flops = rep.metrics.flops;
+        }
+        flops as f64 / best
+    };
+    let r1 = rate(1);
+    let r16 = rate(16);
+    assert!(r16 > 1.5 * r1, "nv=16 rate {r16:.3e} vs nv=1 {r1:.3e}");
+}

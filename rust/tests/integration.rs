@@ -1,0 +1,176 @@
+//! Cross-module integration tests: the full §6 workflows on small
+//! problems, plus failure-injection checks on the public API.
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::compression::{compress_full, orthogonalize, tree_is_orthogonal};
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, dense_kernel_matrix, ExponentialKernel};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{apply_original_order, hgemv, hgemv_flops, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::testing::rel_err;
+use h2opus::util::Prng;
+
+fn build_2d(n_side: usize, m: usize, g: usize) -> h2opus::tree::H2Matrix {
+    let points = PointSet::grid_2d(n_side, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: m, eta: 0.9, cheb_grid: g };
+    build_h2(points, &kernel, &cfg)
+}
+
+/// §6.1 workflow: construct, measure sampled accuracy, check C_sp bounded.
+#[test]
+fn covariance_pipeline_2d() {
+    let a = build_2d(32, 32, 5); // N = 1024, k = 25
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let n = a.n();
+    let dense = dense_kernel_matrix(&a.tree, &kernel);
+    let mut rng = Prng::new(300);
+    let x = rng.normal_vec(n);
+    let mut y_dense = vec![0.0; n];
+    h2opus::linalg::gemm_nn(n, n, 1, &dense.data, &x, &mut y_dense, false);
+
+    let plan = HgemvPlan::new(&a, 1);
+    let mut ws = HgemvWorkspace::new(&a, 1);
+    let mut y = vec![0.0; n];
+    let mut mt = Metrics::new();
+    hgemv(&a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+    let err = rel_err(&y, &y_dense);
+    assert!(err < 5e-3, "sampled accuracy {err}");
+    assert!(a.sparsity_constant() <= 40);
+    // at N = 1024 with k = 25 the asymptotic O(N) regime is only starting;
+    // require a 2x saving here (the accuracy bench shows the O(N) trend)
+    assert!(a.memory_words() * 2 < n * n);
+}
+
+/// §6.3 workflow: Chebyshev seed -> orthogonalize -> compress at 1e-3,
+/// validating accuracy against the *dense* matrix and memory reduction.
+#[test]
+fn compression_pipeline_2d() {
+    let mut a = build_2d(32, 64, 6); // uniform rank 36 (needs m >= 36), the paper's 2D seed
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let dense = dense_kernel_matrix(&a.tree, &kernel);
+    let n = a.n();
+    let pre = a.low_rank_memory_words();
+
+    let mut mt = Metrics::new();
+    let (c, stats) = compress_full(&mut a, 1e-3, &NativeBackend, &mut mt);
+    assert!(stats.post_words < pre, "no memory reduction");
+    // paper sees ~6x on its 2D set; at this tiny N the tree is shallow, so
+    // accept anything >= 1.5x while requiring accuracy to hold
+    assert!(stats.ratio() > 1.5, "ratio {}", stats.ratio());
+
+    let mut rng = Prng::new(301);
+    let x = rng.normal_vec(n);
+    let mut y_dense = vec![0.0; n];
+    h2opus::linalg::gemm_nn(n, n, 1, &dense.data, &x, &mut y_dense, false);
+    let plan = HgemvPlan::new(&c, 1);
+    let mut ws = HgemvWorkspace::new(&c, 1);
+    let mut y = vec![0.0; n];
+    hgemv(&c, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+    let err = rel_err(&y, &y_dense);
+    assert!(err < 5e-2, "compressed accuracy {err}");
+}
+
+/// 3D Gaussian-process set (§6.1): build + matvec + compress.
+#[test]
+fn gaussian_process_pipeline_3d() {
+    let points = PointSet::grid_3d(8, 1.0); // 512 points
+    let kernel = ExponentialKernel { dim: 3, corr_len: 0.2 };
+    let cfg = H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 3 }; // k = 27
+    let mut a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    let dense = dense_kernel_matrix(&a.tree, &kernel);
+    let mut rng = Prng::new(302);
+    let x = rng.normal_vec(n);
+    let mut y_dense = vec![0.0; n];
+    h2opus::linalg::gemm_nn(n, n, 1, &dense.data, &x, &mut y_dense, false);
+    let y = apply_original_order(&a, &NativeBackend, &{
+        // convert x (permuted oracle) to original order for the wrapper
+        let mut xo = vec![0.0; n];
+        for pos in 0..n {
+            xo[a.tree.perm[pos]] = x[pos];
+        }
+        xo
+    }, 1);
+    let y_perm: Vec<f64> = (0..n).map(|pos| y[a.tree.perm[pos]]).collect();
+    let err = rel_err(&y_perm, &y_dense);
+    assert!(err < 5e-2, "3D accuracy {err}");
+
+    let mut mt = Metrics::new();
+    let (_c, stats) = compress_full(&mut a, 1e-3, &NativeBackend, &mut mt);
+    assert!(stats.ratio() >= 1.0);
+    assert!(tree_is_orthogonal(&a.u, 1e-8)); // orthogonalized in place
+}
+
+/// Orthogonalization alone must be exactly memory-neutral and invariant.
+#[test]
+fn orthogonalize_is_exact() {
+    let mut a = build_2d(16, 16, 4);
+    let n = a.n();
+    let mut rng = Prng::new(303);
+    let x = rng.normal_vec(n);
+    let before = apply_original_order(&a, &NativeBackend, &x, 1);
+    let mut mt = Metrics::new();
+    orthogonalize(&mut a, &NativeBackend, &mut mt);
+    let after = apply_original_order(&a, &NativeBackend, &x, 1);
+    assert!(rel_err(&after, &before) < 1e-11);
+}
+
+/// hgemv flop model sanity across configurations.
+#[test]
+fn flops_scale_linearly_with_nv() {
+    let a = build_2d(16, 16, 3);
+    let f1 = hgemv_flops(&a, 1);
+    let f8 = hgemv_flops(&a, 8);
+    assert_eq!(f8, 8 * f1);
+}
+
+/// Failure injection: plan/workspace mismatches must panic, not corrupt.
+#[test]
+#[should_panic(expected = "plan built for different nv")]
+fn plan_nv_mismatch_panics() {
+    let a = build_2d(8, 16, 3);
+    let plan = HgemvPlan::new(&a, 2);
+    let mut ws = HgemvWorkspace::new(&a, 1);
+    let x = vec![0.0; a.n()];
+    let mut y = vec![0.0; a.n()];
+    let mut mt = Metrics::new();
+    hgemv(&a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+}
+
+#[test]
+#[should_panic]
+fn wrong_vector_length_panics() {
+    let a = build_2d(8, 16, 3);
+    let plan = HgemvPlan::new(&a, 1);
+    let mut ws = HgemvWorkspace::new(&a, 1);
+    let x = vec![0.0; a.n() - 1];
+    let mut y = vec![0.0; a.n()];
+    let mut mt = Metrics::new();
+    hgemv(&a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+}
+
+/// Non-power-of-two N: padding paths throughout.
+#[test]
+fn irregular_point_count() {
+    let mut ps = PointSet::new(2);
+    let mut rng = Prng::new(304);
+    for _ in 0..777 {
+        ps.push(&[rng.uniform(), rng.uniform()]);
+    }
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 24, eta: 0.9, cheb_grid: 4 };
+    let a = build_h2(ps, &kernel, &cfg);
+    assert_eq!(a.n(), 777);
+    let dense = dense_kernel_matrix(&a.tree, &kernel);
+    let x = rng.normal_vec(777);
+    let mut y_dense = vec![0.0; 777];
+    h2opus::linalg::gemm_nn(777, 777, 1, &dense.data, &x, &mut y_dense, false);
+    let plan = HgemvPlan::new(&a, 1);
+    let mut ws = HgemvWorkspace::new(&a, 1);
+    let mut y = vec![0.0; 777];
+    let mut mt = Metrics::new();
+    hgemv(&a, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+    assert!(rel_err(&y, &y_dense) < 5e-2);
+}

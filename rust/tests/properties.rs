@@ -1,0 +1,243 @@
+//! Property-based tests (in-tree mini-harness, see util::testing):
+//! randomized structural invariants of the coordinator layers — cluster
+//! trees, admissibility structures, exchange plans, marshaling batches —
+//! and algebraic invariants of the H^2 operations over random geometries.
+
+use h2opus::admissibility::MatrixStructure;
+use h2opus::backend::native::NativeBackend;
+use h2opus::clustering::ClusterTree;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::plan::ExchangePlan;
+use h2opus::dist::Decomposition;
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::testing::{check, rel_err};
+use h2opus::util::Prng;
+
+fn random_points(rng: &mut Prng, min_n: usize, max_n: usize, dim: usize) -> PointSet {
+    let n = min_n + rng.below(max_n - min_n);
+    let mut ps = PointSet::new(dim);
+    for _ in 0..n {
+        let p: Vec<f64> = (0..dim).map(|_| rng.uniform()).collect();
+        ps.push(&p);
+    }
+    ps
+}
+
+#[test]
+fn prop_cluster_tree_partitions_points() {
+    check("cluster-tree-partition", 0xC0FFEE, 25, |rng| {
+        let dim = 1 + rng.below(3);
+        (random_points(rng, 10, 400, dim), 4 + rng.below(29))
+    }, |(ps, leaf)| {
+        let n = ps.len();
+        let t = ClusterTree::build(ps.clone(), *leaf);
+        // perm is a permutation
+        let mut seen = vec![false; n];
+        for &p in &t.perm {
+            if seen[p] {
+                return Err(format!("duplicate perm entry {p}"));
+            }
+            seen[p] = true;
+        }
+        // every level's nodes partition [0, n)
+        for l in 0..=t.depth {
+            let mut covered = 0;
+            for j in 0..t.nodes_at(l) {
+                let node = t.node(l, j);
+                if node.start != covered {
+                    return Err(format!("gap at level {l} node {j}"));
+                }
+                covered = node.end;
+            }
+            if covered != n {
+                return Err(format!("level {l} covers {covered} != {n}"));
+            }
+        }
+        // leaf size bound
+        if t.max_leaf_size() > *leaf {
+            return Err(format!("leaf size {} > {}", t.max_leaf_size(), leaf));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_structure_partitions_and_csp_bounded() {
+    check("structure-partition", 0xBEEF, 15, |rng| {
+        let ps = random_points(rng, 64, 300, 2);
+        let eta = rng.range(0.4, 1.5);
+        (ps, eta)
+    }, |(ps, eta)| {
+        let t = ClusterTree::build(ps.clone(), 16);
+        let s = MatrixStructure::build(&t, &t, *eta);
+        s.validate_partition(&t, &t)?;
+        if s.sparsity_constant() > 200 {
+            return Err(format!("C_sp exploded: {}", s.sparsity_constant()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_plans_complete_and_minimal() {
+    check("exchange-plan", 0xD15C0, 10, |rng| {
+        let ps = random_points(rng, 256, 700, 2);
+        let p = 1usize << (1 + rng.below(3)); // 2, 4, 8
+        (ps, p)
+    }, |(ps, p)| {
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 2 };
+        let a = build_h2(ps.clone(), &kernel, &cfg);
+        if a.depth() < p.trailing_zeros() as usize {
+            return Ok(()); // tree too shallow for this P
+        }
+        let d = Decomposition::new(*p, a.depth());
+        let plan = ExchangePlan::build(&a, d);
+        // completeness: every off-diagonal block's column node is receivable
+        for (l, cl) in a.coupling.iter().enumerate() {
+            if l < d.c_level {
+                continue;
+            }
+            for &(t, s) in &cl.pairs {
+                let (pt, ps_) = (d.owner(l, t as usize), d.owner(l, s as usize));
+                if pt != ps_ {
+                    let ok = plan.levels[l].recv[pt]
+                        .iter()
+                        .any(|(src, nodes)| *src == ps_ && nodes.contains(&s));
+                    if !ok {
+                        return Err(format!("missing ({t},{s})@{l}"));
+                    }
+                }
+            }
+        }
+        // minimality: nothing in a recv list that no block needs
+        for (l, le) in plan.levels.iter().enumerate() {
+            for (pt, lists) in le.recv.iter().enumerate() {
+                for (_, nodes) in lists {
+                    for s in nodes {
+                        let needed = a.coupling[l].pairs.iter().any(|&(t, ss)| {
+                            ss == *s && d.owner(l, t as usize) == pt
+                        });
+                        if !needed {
+                            return Err(format!("unneeded node {s}@{l} for rank {pt}"));
+                        }
+                    }
+                }
+            }
+        }
+        // volume below naive for P > 1
+        if *p > 1 {
+            for r in 0..*p {
+                if plan.bytes_into(&a, r, 1) > plan.naive_bytes_into(&a, r, 1) {
+                    return Err("optimized volume above naive".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hgemv_transpose_symmetry() {
+    // For our symmetric kernels, A = Aᵀ, so xᵀ(Ay) == yᵀ(Ax) must hold to
+    // rounding for arbitrary x, y — a strong end-to-end algebraic check on
+    // all phases (upsweep/coupling/downsweep consistency between U and V).
+    check("hgemv-symmetry", 0xFACE, 8, |rng| {
+        let ps = random_points(rng, 100, 400, 2);
+        let seed = rng.next_u64();
+        (ps, seed)
+    }, |(ps, seed)| {
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.2 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        let a = build_h2(ps.clone(), &kernel, &cfg);
+        let n = a.n();
+        let mut rng = Prng::new(*seed);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let plan = HgemvPlan::new(&a, 1);
+        let mut ws = HgemvWorkspace::new(&a, 1);
+        let mut mt = Metrics::new();
+        let mut ax = vec![0.0; n];
+        let mut ay = vec![0.0; n];
+        h2opus::matvec::hgemv(&a, &NativeBackend, &plan, &x, &mut ax, &mut ws, &mut mt);
+        h2opus::matvec::hgemv(&a, &NativeBackend, &plan, &y, &mut ay, &mut ws, &mut mt);
+        let xt_ay: f64 = x.iter().zip(&ay).map(|(a, b)| a * b).sum();
+        let yt_ax: f64 = y.iter().zip(&ax).map(|(a, b)| a * b).sum();
+        let scale = xt_ay.abs().max(yt_ax.abs()).max(1e-300);
+        if ((xt_ay - yt_ax) / scale).abs() > 1e-10 {
+            return Err(format!("symmetry violated: {xt_ay} vs {yt_ax}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distributed_equals_single_rank() {
+    check("dist-vs-single", 0xABCD, 6, |rng| {
+        let ps = random_points(rng, 300, 600, 2);
+        let p = 1usize << (1 + rng.below(3));
+        let seed = rng.next_u64();
+        (ps, p, seed)
+    }, |(ps, p, seed)| {
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        let a = build_h2(ps.clone(), &kernel, &cfg);
+        if a.depth() < p.trailing_zeros() as usize {
+            return Ok(());
+        }
+        let n = a.n();
+        let mut rng = Prng::new(*seed);
+        let x = rng.normal_vec(n);
+        let plan = HgemvPlan::new(&a, 1);
+        let mut ws = HgemvWorkspace::new(&a, 1);
+        let mut mt = Metrics::new();
+        let mut y1 = vec![0.0; n];
+        h2opus::matvec::hgemv(&a, &NativeBackend, &plan, &x, &mut y1, &mut ws, &mut mt);
+        let mut yp = vec![0.0; n];
+        let opts = h2opus::dist::hgemv::DistOptions::default();
+        h2opus::dist::hgemv::dist_hgemv(&a, &NativeBackend, *p, 1, &x, &mut yp, &opts);
+        let err = rel_err(&yp, &y1);
+        if err > 1e-11 {
+            return Err(format!("P={p}: dist vs single err {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_error_bounded_by_tau() {
+    check("compress-error", 0x7A0, 5, |rng| {
+        let ps = random_points(rng, 200, 400, 2);
+        let tau_exp = 3 + rng.below(4) as i32; // 1e-3 .. 1e-6
+        let seed = rng.next_u64();
+        (ps, tau_exp, seed)
+    }, |(ps, tau_exp, seed)| {
+        let tau = 10f64.powi(-*tau_exp);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        // leaf_size must cover the rank (g=4 -> k=16) even for the padded
+        // leaves of irregular point counts, so use 24 > 16
+        let cfg = H2Config { leaf_size: 24, eta: 0.9, cheb_grid: 4 };
+        let mut a = build_h2(ps.clone(), &kernel, &cfg);
+        if a.tree.max_leaf_size() < cfg.rank(2) {
+            return Ok(()); // degenerate tiny tree
+        }
+        let n = a.n();
+        let mut rng = Prng::new(*seed);
+        let x = rng.normal_vec(n);
+        let before = h2opus::matvec::apply_original_order(&a, &NativeBackend, &x, 1);
+        let mut mt = Metrics::new();
+        let (c, stats) = h2opus::compression::compress_full(&mut a, tau, &NativeBackend, &mut mt);
+        let after = h2opus::matvec::apply_original_order(&c, &NativeBackend, &x, 1);
+        let err = rel_err(&after, &before);
+        if err > tau * 500.0 {
+            return Err(format!("tau={tau:e}: err {err} (ratio {})", stats.ratio()));
+        }
+        if stats.post_words > stats.pre_words {
+            return Err("compression grew memory".into());
+        }
+        Ok(())
+    });
+}

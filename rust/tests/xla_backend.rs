@@ -1,0 +1,188 @@
+//! XLA/PJRT backend integration: the AOT JAX/Pallas artifacts must
+//! reproduce the native backend bit-for-bit-ish on every operation class,
+//! and the full HGEMV/compression pipelines must run end-to-end on the XLA
+//! backend. Skipped (with a notice) when `make artifacts` has not run.
+
+use std::path::Path;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::backend::{contiguous_offsets, BatchRef, ComputeBackend, GemmDims};
+use h2opus::compression::compress_full;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::runtime::XlaBackend;
+use h2opus::util::testing::{assert_allclose, rel_err};
+use h2opus::util::Prng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("H2OPUS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let p = Path::new(&dir).to_path_buf();
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts at {p:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn gemm_matches_native_exact_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(&dir).unwrap();
+    let mut rng = Prng::new(200);
+    // exact catalog shape (16,16,4) and padded shape (5,9,3)
+    for (m, k, n) in [(16usize, 16usize, 4usize), (5, 9, 3), (32, 16, 1), (17, 31, 33)] {
+        for op in [(false, false), (true, false), (false, true)] {
+            let nb = 7;
+            let (ta, tb) = op;
+            let a_sz = m * k;
+            let b_sz = k * n;
+            let a = rng.normal_vec(nb * a_sz);
+            let b = rng.normal_vec(nb * b_sz);
+            let dims = GemmDims { nb, m, k, n, trans_a: ta, trans_b: tb, accumulate: false };
+            let mut mt = Metrics::new();
+            let mut c_xla = vec![0.0; nb * m * n];
+            xla.batched_gemm(
+                dims,
+                BatchRef { data: &a, offsets: &contiguous_offsets(nb, a_sz) },
+                BatchRef { data: &b, offsets: &contiguous_offsets(nb, b_sz) },
+                &mut c_xla,
+                &contiguous_offsets(nb, m * n),
+                &mut mt,
+            );
+            let mut c_nat = vec![0.0; nb * m * n];
+            NativeBackend.batched_gemm(
+                dims,
+                BatchRef { data: &a, offsets: &contiguous_offsets(nb, a_sz) },
+                BatchRef { data: &b, offsets: &contiguous_offsets(nb, b_sz) },
+                &mut c_nat,
+                &contiguous_offsets(nb, m * n),
+                &mut mt,
+            );
+            assert_allclose(&c_xla, &c_nat, 1e-12, 1e-12, &format!("gemm {m}x{k}x{n} ta={ta} tb={tb}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_accumulate_and_large_batch_chunking() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(&dir).unwrap();
+    let mut rng = Prng::new(201);
+    let (nb, m, k, n) = (150usize, 8usize, 8usize, 4usize); // chunks over b64
+    let a = rng.normal_vec(nb * m * k);
+    let b = rng.normal_vec(nb * k * n);
+    let dims = GemmDims { nb, m, k, n, trans_a: false, trans_b: false, accumulate: true };
+    let mut mt = Metrics::new();
+    let mut c_xla = rng.normal_vec(nb * m * n);
+    let mut c_nat = c_xla.clone();
+    xla.batched_gemm(
+        dims,
+        BatchRef { data: &a, offsets: &contiguous_offsets(nb, m * k) },
+        BatchRef { data: &b, offsets: &contiguous_offsets(nb, k * n) },
+        &mut c_xla,
+        &contiguous_offsets(nb, m * n),
+        &mut mt,
+    );
+    NativeBackend.batched_gemm(
+        dims,
+        BatchRef { data: &a, offsets: &contiguous_offsets(nb, m * k) },
+        BatchRef { data: &b, offsets: &contiguous_offsets(nb, k * n) },
+        &mut c_nat,
+        &contiguous_offsets(nb, m * n),
+        &mut mt,
+    );
+    assert_allclose(&c_xla, &c_nat, 1e-12, 1e-12, "chunked accumulate gemm");
+    assert!(xla.stats.borrow().launches >= 3, "expected chunked launches");
+}
+
+#[test]
+fn qr_and_svd_match_native_semantics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(&dir).unwrap();
+    let mut rng = Prng::new(202);
+    let (nb, rows, cols) = (5usize, 24usize, 10usize); // padded into (32,16)
+    let a = rng.normal_vec(nb * rows * cols);
+    let mut mt = Metrics::new();
+
+    let mut q = vec![0.0; nb * rows * cols];
+    let mut r = vec![0.0; nb * cols * cols];
+    xla.batched_qr(nb, rows, cols, &a, &mut q, &mut r, &mut mt);
+    // QR reconstructs
+    for i in 0..nb {
+        let mut qr = vec![0.0; rows * cols];
+        h2opus::linalg::gemm_nn(rows, cols, cols, &q[i * rows * cols..], &r[i * cols * cols..], &mut qr, false);
+        assert_allclose(&qr, &a[i * rows * cols..(i + 1) * rows * cols], 1e-9, 1e-9, "xla qr");
+    }
+
+    let mut u = vec![0.0; nb * rows * cols];
+    let mut s = vec![0.0; nb * cols];
+    let mut v = vec![0.0; nb * cols * cols];
+    xla.batched_svd(nb, rows, cols, &a, &mut u, &mut s, &mut v, &mut mt);
+    // singular values match native
+    let mut un = vec![0.0; nb * rows * cols];
+    let mut sn = vec![0.0; nb * cols];
+    let mut vn = vec![0.0; nb * cols * cols];
+    NativeBackend.batched_svd(nb, rows, cols, &a, &mut un, &mut sn, &mut vn, &mut mt);
+    assert_allclose(&s, &sn, 1e-8, 1e-10, "xla svd singular values");
+}
+
+#[test]
+fn full_hgemv_on_xla_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(&dir).unwrap();
+    let points = PointSet::grid_2d(16, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 4 };
+    let a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    let mut rng = Prng::new(203);
+    for nv in [1usize, 3] {
+        let x = rng.normal_vec(n * nv);
+        let plan = HgemvPlan::new(&a, nv);
+        let mut ws = HgemvWorkspace::new(&a, nv);
+        let mut mt = Metrics::new();
+        let mut y_xla = vec![0.0; n * nv];
+        hgemv(&a, &xla, &plan, &x, &mut y_xla, &mut ws, &mut mt);
+        let mut y_nat = vec![0.0; n * nv];
+        hgemv(&a, &NativeBackend, &plan, &x, &mut y_nat, &mut ws, &mut mt);
+        let err = rel_err(&y_xla, &y_nat);
+        assert!(err < 1e-11, "nv={nv}: XLA vs native hgemv err {err}");
+    }
+    assert_eq!(xla.stats.borrow().fallbacks, 0, "hgemv should never fall back");
+}
+
+#[test]
+fn full_compression_on_xla_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::new(&dir).unwrap();
+    let points = PointSet::grid_2d(16, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 4 };
+    let base = build_h2(points, &kernel, &cfg);
+    let mut mt = Metrics::new();
+
+    let mut a_xla = base.clone();
+    let (c_xla, stats_xla) = compress_full(&mut a_xla, 1e-3, &xla, &mut mt);
+    let mut a_nat = base.clone();
+    let (c_nat, stats_nat) = compress_full(&mut a_nat, 1e-3, &NativeBackend, &mut mt);
+
+    assert_eq!(stats_xla.new_ranks, stats_nat.new_ranks, "rank selection must agree");
+    // compare the compressed operators through a matvec
+    let n = base.n();
+    let mut rng = Prng::new(204);
+    let x = rng.normal_vec(n);
+    let apply = |m: &h2opus::tree::H2Matrix| {
+        let plan = HgemvPlan::new(m, 1);
+        let mut ws = HgemvWorkspace::new(m, 1);
+        let mut y = vec![0.0; n];
+        let mut mt = Metrics::new();
+        hgemv(m, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+        y
+    };
+    let err = rel_err(&apply(&c_xla), &apply(&c_nat));
+    assert!(err < 1e-6, "XLA vs native compressed operators differ: {err}");
+}
