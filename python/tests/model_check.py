@@ -1,0 +1,401 @@
+#!/usr/bin/env python3
+"""Validation harness for the `dist` virtual-time model.
+
+Exact Python port of ClusterTree::build_with_min_leaf, MatrixStructure::build,
+dist::Decomposition, dist::ExchangePlan and the dist::hgemv virtual-time
+scheduler (constants mirror `dist::hgemv::CostModel`).  Evaluates the
+assertions of rust/tests/distributed.rs analytically, so changes to the
+cost model can be validated in seconds without running the full suite:
+
+    python3 python/tests/model_check.py
+
+Every line must print PASS; the margins indicate how far each threshold
+sits from its assertion.
+"""
+import math
+from collections import defaultdict
+
+# ---------------------------------------------------------------- geometry
+
+
+def grid_2d(n, a=1.0):
+    h = a / (n - 1) if n > 1 else 0.0
+    pts = []
+    for j in range(n):
+        for i in range(n):
+            pts.append((i * h, j * h))
+    return pts
+
+
+class BBox:
+    def __init__(self, lo, hi):
+        self.lo = lo
+        self.hi = hi
+
+    @staticmethod
+    def of(points, idx):
+        xs = [points[i][0] for i in idx]
+        ys = [points[i][1] for i in idx]
+        return BBox((min(xs), min(ys)), (max(xs), max(ys)))
+
+    def center(self):
+        return (0.5 * (self.lo[0] + self.hi[0]), 0.5 * (self.lo[1] + self.hi[1]))
+
+    def diameter(self):
+        ex = self.hi[0] - self.lo[0]
+        ey = self.hi[1] - self.lo[1]
+        return math.sqrt(ex * ex + ey * ey)
+
+    def center_dist(self, other):
+        a, b = self.center(), other.center()
+        dx = a[0] - b[0]
+        dy = a[1] - b[1]
+        return math.sqrt(dx * dx + dy * dy)
+
+    def extent(self, d):
+        return self.hi[d] - self.lo[d]
+
+    def longest_axis(self):
+        # Rust max_by returns the LAST maximal element.
+        best, best_e = 0, self.extent(0)
+        for d in range(1, 2):
+            e = self.extent(d)
+            if e >= best_e:  # >= replicates last-max
+                best, best_e = d, e
+        return best
+
+
+def level_offset(l):
+    return (1 << l) - 1
+
+
+class ClusterTree:
+    def __init__(self, points, leaf_size, min_leaf):
+        n = len(points)
+        depth = 0
+        while -(-n // (1 << depth)) > leaf_size:
+            depth += 1
+        while depth > 0 and (n >> depth) < min_leaf:
+            depth -= 1
+        perm = list(range(n))
+        node_count = (1 << (depth + 1)) - 1
+        ranges = [(0, 0)] * node_count
+        ranges[0] = (0, n)
+        for l in range(depth):
+            for j in range(1 << l):
+                nid = level_offset(l) + j
+                start, end = ranges[nid]
+                idx = perm[start:end]
+                bbox = BBox.of(points, idx)
+                axis = bbox.longest_axis()
+                idx.sort(key=lambda i: points[i][axis])  # stable, like Rust sort_by
+                perm[start:end] = idx
+                mid = start + -(-(end - start) // 2)
+                ranges[2 * nid + 1] = (start, mid)
+                ranges[2 * nid + 2] = (mid, end)
+        self.depth = depth
+        self.perm = perm
+        self.ranges = ranges
+        self.bbox = [BBox.of(points, perm[s:e]) for (s, e) in ranges]
+        self.points = points
+
+    def node_size(self, l, j):
+        s, e = self.ranges[level_offset(l) + j]
+        return e - s
+
+    def leaf_sizes(self):
+        return [self.node_size(self.depth, j) for j in range(1 << self.depth)]
+
+
+def is_admissible(eta, bt, bs):
+    return eta * bt.center_dist(bs) >= 0.5 * (bt.diameter() + bs.diameter())
+
+
+def build_structure(tree, eta):
+    depth = tree.depth
+    coupling = [[] for _ in range(depth + 1)]
+    dense = []
+
+    def traverse(l, t, s):
+        bt = tree.bbox[level_offset(l) + t]
+        bs = tree.bbox[level_offset(l) + s]
+        if is_admissible(eta, bt, bs):
+            coupling[l].append((t, s))
+        elif l == depth:
+            dense.append((t, s))
+        else:
+            for ct in (2 * t, 2 * t + 1):
+                for cs in (2 * s, 2 * s + 1):
+                    traverse(l + 1, ct, cs)
+
+    traverse(0, 0, 0)
+    for lvl in coupling:
+        lvl.sort()
+    dense.sort()
+    return coupling, dense
+
+
+def batches_of(pairs, nrows):
+    """CouplingLevel::from_pairs batches: batch b = b-th block of each row."""
+    row_ptr = [0] * (nrows + 1)
+    for (t, _) in pairs:
+        row_ptr[t + 1] += 1
+    for i in range(nrows):
+        row_ptr[i + 1] += row_ptr[i]
+    maxb = max((row_ptr[i + 1] - row_ptr[i] for i in range(nrows)), default=0)
+    batches = [[] for _ in range(maxb)]
+    for i in range(nrows):
+        for b, p in enumerate(range(row_ptr[i], row_ptr[i + 1])):
+            batches[b].append(p)
+    return batches
+
+
+class H2:
+    def __init__(self, n_side, leaf_size, eta, g):
+        pts = grid_2d(n_side)
+        k = g * g
+        self.k = k
+        self.tree = ClusterTree(pts, leaf_size, k)
+        self.depth = self.tree.depth
+        self.m_pad = max(self.tree.leaf_sizes())
+        self.coupling, self.dense = build_structure(self.tree, eta)
+        self.coupling_batches = [
+            batches_of(self.coupling[l], 1 << l) for l in range(self.depth + 1)
+        ]
+        self.dense_batches = batches_of(self.dense, 1 << self.depth)
+        self.n = len(pts)
+
+
+# ---------------------------------------------------------------- dist model
+
+
+class Decomposition:
+    def __init__(self, p, depth):
+        assert p & (p - 1) == 0 and p >= 1
+        self.p = p
+        self.depth = depth
+        self.c_level = p.bit_length() - 1
+        assert self.c_level <= depth
+
+    def owner(self, l, j):
+        if l < self.c_level:
+            return 0
+        return j >> (l - self.c_level)
+
+
+def build_exchange(a, d):
+    """levels[l] = recv[rank] = sorted list of (src, [node ids])."""
+    levels = []
+    for l in range(a.depth + 1):
+        recv = [defaultdict(set) for _ in range(d.p)]
+        if l >= d.c_level:
+            for (t, s) in a.coupling[l]:
+                pt, ps = d.owner(l, t), d.owner(l, s)
+                if pt != ps:
+                    recv[pt][ps].add(s)
+        levels.append(
+            [sorted((src, sorted(nodes)) for src, nodes in r.items()) for r in recv]
+        )
+    return levels
+
+
+def bytes_into(a, levels, d, rank, nv):
+    total = 0
+    for l in range(d.c_level, a.depth + 1):
+        for (_, nodes) in levels[l][rank]:
+            total += len(nodes) * a.k * nv * 8
+    return total
+
+
+def naive_bytes_into(a, d, rank, nv):
+    total = 0
+    for l in range(d.c_level, a.depth + 1):
+        total += ((1 << l) - (1 << (l - d.c_level))) * a.k * nv * 8
+    return total
+
+
+# cost-model constants (MUST mirror rust/src/dist/hgemv.rs CostModel)
+T_LAUNCH = 1.5e-6
+FLOP_TIME = 4.0e-10  # 2.5 Gflop/s
+BYTE_TIME = 4.0e-11  # 25 GB/s
+
+
+def gemm_cost(nb, m, k, n):
+    if nb == 0:
+        return 0.0
+    flops = 2.0 * nb * m * k * n
+    words = nb * (m * k + k * n + m * n)
+    return T_LAUNCH + flops * FLOP_TIME + 8.0 * words * BYTE_TIME
+
+
+def net_time(net, nbytes):
+    alpha, beta = net
+    return alpha + beta * nbytes
+
+
+def sub_batch_counts(pairs, batch, lo, hi):
+    """entries of batch with row in [lo,hi) -> count."""
+    return sum(1 for p in batch if lo <= pairs[p][0] < hi)
+
+
+def dist_time(a, d, nv, net, overlap):
+    p, c, depth, k, m_pad = d.p, d.c_level, a.depth, a.k, a.m_pad
+    leaves = 1 << depth
+    lpr = leaves // p
+    levels = build_exchange(a, d)
+
+    def own_range(r, l):
+        w = 1 << (l - c)
+        return (r * w, (r + 1) * w)
+
+    # upsweep per rank
+    c_up = []
+    for r in range(p):
+        t = gemm_cost(lpr, k, m_pad, nv)  # leaf Vt x
+        for l in range(depth, c, -1):  # transfers with parents at l-1 >= c
+            q = 1 << (l - 1 - c)
+            t += 2 * gemm_cost(q, k, k, nv)
+        c_up.append(t)
+
+    # coupling + dense per rank, split local/remote
+    c_mul_local, c_mul_remote, c_dense = [], [], []
+    for r in range(p):
+        tl = tr = 0.0
+        for l in range(c, depth + 1):
+            lo, hi = own_range(r, l)
+            pairs = a.coupling[l]
+            total_blocks = 0
+            remote_blocks = 0
+            lvl_cost = 0.0
+            for batch in a.coupling_batches[l]:
+                nb = 0
+                for pi in batch:
+                    t_, s_ = pairs[pi]
+                    if lo <= t_ < hi:
+                        nb += 1
+                        total_blocks += 1
+                        if d.owner(l, s_) != r:
+                            remote_blocks += 1
+                if nb:
+                    lvl_cost += gemm_cost(nb, k, k, nv)
+            if total_blocks:
+                f = remote_blocks / total_blocks
+                tl += lvl_cost * (1 - f)
+                tr += lvl_cost * f
+        c_mul_local.append(tl)
+        c_mul_remote.append(tr)
+        lo, hi = r * lpr, (r + 1) * lpr
+        td = 0.0
+        for batch in a.dense_batches:
+            nb = sub_batch_counts(a.dense, batch, lo, hi)
+            if nb:
+                td += gemm_cost(nb, m_pad, m_pad, nv)
+        c_dense.append(td)
+
+    # downsweep per rank
+    c_down = []
+    for r in range(p):
+        t = 0.0
+        for l in range(c + 1, depth + 1):
+            q = 1 << (l - 1 - c)
+            t += 2 * gemm_cost(q, k, k, nv)
+        t += gemm_cost(lpr, m_pad, k, nv)
+        c_down.append(t)
+
+    # exchange comm per rank
+    x = []
+    for r in range(p):
+        t = 0.0
+        for l in range(c, depth + 1):
+            for (_, nodes) in levels[l][r]:
+                t += net_time(net, len(nodes) * k * nv * 8)
+        x.append(t)
+
+    # top subtree on master
+    c_top = 0.0
+    for l in range(1, c + 1):
+        c_top += 2 * 2 * gemm_cost(1 << (l - 1), k, k, nv)  # up+down transfers
+    for l in range(c):
+        pairs = a.coupling[l]
+        for batch in a.coupling_batches[l]:
+            if batch:
+                c_top += gemm_cost(len(batch), k, k, nv)
+
+    t_up_max = max(c_up)
+    msg = net_time(net, k * nv * 8)
+    if c > 0:
+        gather = (p - 1) * msg
+        t_master = t_up_max + gather + c_top
+    else:
+        t_master = 0.0
+
+    total = []
+    for r in range(p):
+        if overlap:
+            t2 = c_up[r] + max(x[r], c_dense[r] + c_mul_local[r]) + c_mul_remote[r]
+        else:
+            t2 = c_up[r] + x[r] + c_dense[r] + c_mul_local[r] + c_mul_remote[r]
+        if c > 0:
+            scatter = t_master + (r * msg if r > 0 else 0.0)
+            t3 = max(t2, scatter)
+        else:
+            t3 = t2
+        total.append(t3 + c_down[r])
+    return max(total)
+
+
+DEFAULT_NET = (5e-6, 1.0 / 25e9)
+
+
+def main():
+    print("building N=4096 test matrix (64x64 grid, leaf 16, eta .9, g=3)...")
+    a = H2(64, 16, 0.9, 3)
+    print(f"  depth={a.depth} k={a.k} m_pad={a.m_pad} "
+          f"coupling={[len(c) for c in a.coupling]} dense={len(a.dense)}")
+
+    # --- strong scaling ---
+    t1 = dist_time(a, Decomposition(1, a.depth), 1, DEFAULT_NET, True)
+    t8 = dist_time(a, Decomposition(8, a.depth), 1, DEFAULT_NET, True)
+    print(f"strong: t(1)={t1:.3e} t(8)={t8:.3e} ratio={t8/t1:.3f}  "
+          f"{'PASS' if t8 < 0.45 * t1 else 'FAIL'} (need < 0.45)")
+
+    # --- comm volume ---
+    d8 = Decomposition(8, a.depth)
+    levels = build_exchange(a, d8)
+    worst = 0.0
+    for r in range(8):
+        opt = bytes_into(a, levels, d8, r, 1)
+        naive = naive_bytes_into(a, d8, r, 1)
+        worst = max(worst, opt / naive)
+    print(f"comm volume: worst opt/naive = {worst:.3f}  "
+          f"{'PASS' if worst < 0.7 else 'FAIL'} (need < 0.7)")
+
+    # --- overlap gains on slow network ---
+    slow = (5e-4, 1e-7)
+    w = dist_time(a, d8, 8, slow, True)
+    wo = dist_time(a, d8, 8, slow, False)
+    print(f"overlap: with={w:.3e} without={wo:.3e}  "
+          f"{'PASS' if w < wo else 'FAIL'} (hidden {100*(wo-w)/wo:.1f}%)")
+
+    # --- multivector throughput (flops cancel; compare nv-normalized time) ---
+    d4 = Decomposition(4, a.depth)
+    tv1 = dist_time(a, d4, 1, DEFAULT_NET, True)
+    tv16 = dist_time(a, d4, 16, DEFAULT_NET, True)
+    ratio = 16 * tv1 / tv16
+    print(f"multivector: t(nv1)={tv1:.3e} t(nv16)={tv16:.3e} rate ratio={ratio:.2f}  "
+          f"{'PASS' if ratio > 1.5 else 'FAIL'} (need > 1.5)")
+
+    # --- P=16/32 sanity for benches (no assertion) ---
+    for p in (2, 4, 16):
+        if a.depth >= p.bit_length() - 1:
+            tp = dist_time(a, Decomposition(p, a.depth), 1, DEFAULT_NET, True)
+            print(f"  sanity P={p}: speedup {t1/tp:.2f}")
+
+    # --- N=1024 trace matrix sanity ---
+    b = H2(32, 16, 0.9, 3)
+    t4 = dist_time(b, Decomposition(4, b.depth), 1, DEFAULT_NET, True)
+    print(f"trace matrix N={b.n} depth={b.depth}: t(P=4)={t4:.3e} (c_level=2 -> lowprio events exist)")
+
+
+if __name__ == "__main__":
+    main()

@@ -105,5 +105,5 @@ fn main() {
         );
     }
     println!("\n(The 32x16 SVD artifact is excluded: its unrolled Jacobi graph compiles");
-    println!(" for minutes under XLA CPU — see EXPERIMENTS.md §Perf for the analysis.)");
+    println!(" for minutes under XLA CPU — see DESIGN.md \"Substitutions\" for the stack notes.)");
 }

@@ -19,8 +19,14 @@
 pub mod orthogonalize;
 pub mod truncate;
 
-pub use orthogonalize::{orthogonalize, orthogonalize_logged, tree_is_orthogonal};
-pub use truncate::{compress, compress_full, compress_full_logged, compress_logged, CompressionStats};
+pub use orthogonalize::{
+    absorb_r_level, orth_leaf_level, orth_transfer_level, orthogonalize, orthogonalize_logged,
+    tree_is_orthogonal,
+};
+pub use truncate::{
+    compress, compress_full, compress_full_logged, compress_logged, project_level,
+    truncate_inner_level, truncate_leaf_level, weight_level, CompressionStats, LeafTruncation,
+};
 
 /// Per-level wall-time log of the compression pipeline's phases. The
 /// distributed scheduler ([`crate::dist::compress`]) replays this log in

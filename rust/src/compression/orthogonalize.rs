@@ -33,7 +33,27 @@ pub fn orthogonalize_tree_logged(
     let depth = tree.depth;
     let mut r: LevelR = vec![Vec::new(); depth + 1];
 
-    // Leaf QR.
+    let t = Timer::start();
+    r[depth] = orth_leaf_level(tree, backend, metrics);
+    log.push("orth_leaf_qr", depth, t.elapsed());
+
+    // Inner levels, children l+1 -> parents l.
+    for l in (0..depth).rev() {
+        let t = Timer::start();
+        r[l] = orth_transfer_level(tree, backend, metrics, l, &r[l + 1]);
+        log.push("orth_stack", l, t.elapsed());
+    }
+    r
+}
+
+/// Leaf stage of the orthogonalization upsweep: batched QR of the leaf
+/// bases; leaves become their Q factors, the R factors are returned.
+pub fn orth_leaf_level(
+    tree: &mut BasisTree,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> Vec<f64> {
+    let depth = tree.depth;
     let k_leaf = tree.ranks[depth];
     let m_pad = tree.leaf_dim;
     assert!(
@@ -41,50 +61,52 @@ pub fn orthogonalize_tree_logged(
         "orthogonalization requires leaf_size >= rank (got m_pad={m_pad} < k={k_leaf})"
     );
     let leaves = tree.num_leaves();
-    let t = Timer::start();
     let mut q = vec![0.0; leaves * m_pad * k_leaf];
     let mut r_leaf = vec![0.0; leaves * k_leaf * k_leaf];
     backend.batched_qr(leaves, m_pad, k_leaf, &tree.leaf_bases, &mut q, &mut r_leaf, metrics);
     tree.leaf_bases.copy_from_slice(&q);
-    r[depth] = r_leaf;
-    log.push("orth_leaf_qr", depth, t.elapsed());
+    r_leaf
+}
 
-    // Inner levels, children l+1 -> parents l.
-    for l in (0..depth).rev() {
-        let t = Timer::start();
-        let k_c = tree.ranks[l + 1];
-        let k_l = tree.ranks[l];
-        assert!(2 * k_c >= k_l, "stacked transfer QR needs 2*k_child >= k_parent");
-        let nb_parent = 1usize << l;
-        let nb_child = 1usize << (l + 1);
-        // stack[i] = [R_{2i} E_{2i}; R_{2i+1} E_{2i+1}]  (2k_c × k_l)
-        let mut stack = vec![0.0; nb_parent * 2 * k_c * k_l];
-        let r_child = &r[l + 1];
-        let a_off = contiguous_offsets(nb_child, k_c * k_c);
-        let b_off = contiguous_offsets(nb_child, k_c * k_l);
-        let c_off: Vec<usize> =
-            (0..nb_child).map(|c| (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l).collect();
-        backend.batched_gemm(
-            GemmDims { nb: nb_child, m: k_c, k: k_c, n: k_l, trans_a: false, trans_b: false, accumulate: false },
-            BatchRef { data: r_child, offsets: &a_off },
-            BatchRef { data: &tree.transfers[l + 1], offsets: &b_off },
-            &mut stack,
-            &c_off,
-            metrics,
-        );
-        let mut qs = vec![0.0; nb_parent * 2 * k_c * k_l];
-        let mut rs = vec![0.0; nb_parent * k_l * k_l];
-        backend.batched_qr(nb_parent, 2 * k_c, k_l, &stack, &mut qs, &mut rs, metrics);
-        // New transfers = Q halves.
-        for c in 0..nb_child {
-            let src = (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l;
-            tree.transfers[l + 1][c * k_c * k_l..(c + 1) * k_c * k_l]
-                .copy_from_slice(&qs[src..src + k_c * k_l]);
-        }
-        r[l] = rs;
-        log.push("orth_stack", l, t.elapsed());
+/// One inner level of the orthogonalization upsweep (children l+1 ->
+/// parents l): QR of the stacked [R_c1·E_c1; R_c2·E_c2] pairs. The level-l+1
+/// transfers become the Q halves; the parents' R factors are returned.
+pub fn orth_transfer_level(
+    tree: &mut BasisTree,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    l: usize,
+    r_child: &[f64],
+) -> Vec<f64> {
+    let k_c = tree.ranks[l + 1];
+    let k_l = tree.ranks[l];
+    assert!(2 * k_c >= k_l, "stacked transfer QR needs 2*k_child >= k_parent");
+    let nb_parent = 1usize << l;
+    let nb_child = 1usize << (l + 1);
+    // stack[i] = [R_{2i} E_{2i}; R_{2i+1} E_{2i+1}]  (2k_c × k_l)
+    let mut stack = vec![0.0; nb_parent * 2 * k_c * k_l];
+    let a_off = contiguous_offsets(nb_child, k_c * k_c);
+    let b_off = contiguous_offsets(nb_child, k_c * k_l);
+    let c_off: Vec<usize> =
+        (0..nb_child).map(|c| (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l).collect();
+    backend.batched_gemm(
+        GemmDims { nb: nb_child, m: k_c, k: k_c, n: k_l, trans_a: false, trans_b: false, accumulate: false },
+        BatchRef { data: r_child, offsets: &a_off },
+        BatchRef { data: &tree.transfers[l + 1], offsets: &b_off },
+        &mut stack,
+        &c_off,
+        metrics,
+    );
+    let mut qs = vec![0.0; nb_parent * 2 * k_c * k_l];
+    let mut rs = vec![0.0; nb_parent * k_l * k_l];
+    backend.batched_qr(nb_parent, 2 * k_c, k_l, &stack, &mut qs, &mut rs, metrics);
+    // New transfers = Q halves.
+    for c in 0..nb_child {
+        let src = (c / 2) * 2 * k_c * k_l + (c % 2) * k_c * k_l;
+        tree.transfers[l + 1][c * k_c * k_l..(c + 1) * k_c * k_l]
+            .copy_from_slice(&qs[src..src + k_c * k_l]);
     }
-    r
+    rs
 }
 
 /// Orthogonalize both bases of `a` and absorb the R factors into the
@@ -106,34 +128,50 @@ pub fn orthogonalize_logged(
     // S_ts <- R^U_t · S_ts · (R^V_s)^T, level by level.
     for l in 0..a.coupling.len() {
         let t = Timer::start();
-        let nb = a.coupling[l].num_blocks();
-        if nb == 0 {
+        if a.coupling[l].num_blocks() == 0 {
             continue;
         }
-        let k = a.rank(l);
-        let pairs = a.coupling[l].pairs.clone();
-        let t_off: Vec<usize> = pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
-        let s_off: Vec<usize> = pairs.iter().map(|&(_, s)| s as usize * k * k).collect();
-        let blk_off = contiguous_offsets(nb, k * k);
-        let mut tmp = vec![0.0; nb * k * k];
-        backend.batched_gemm(
-            GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: false, accumulate: false },
-            BatchRef { data: &r_u[l], offsets: &t_off },
-            BatchRef { data: &a.coupling[l].data, offsets: &blk_off },
-            &mut tmp,
-            &blk_off,
-            metrics,
-        );
-        backend.batched_gemm(
-            GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: true, accumulate: false },
-            BatchRef { data: &tmp, offsets: &blk_off },
-            BatchRef { data: &r_v[l], offsets: &s_off },
-            &mut a.coupling[l].data,
-            &blk_off,
-            metrics,
-        );
+        absorb_r_level(a, backend, metrics, l, &r_u[l], &r_v[l]);
         log.push("orth_project", l, t.elapsed());
     }
+}
+
+/// Absorb the level-l R factors into the level-l coupling blocks:
+/// S_ts <- R^U_t · S_ts · (R^V_s)ᵀ.
+pub fn absorb_r_level(
+    a: &mut H2Matrix,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    l: usize,
+    r_u: &[f64],
+    r_v: &[f64],
+) {
+    let nb = a.coupling[l].num_blocks();
+    if nb == 0 {
+        return;
+    }
+    let k = a.rank(l);
+    let pairs = a.coupling[l].pairs.clone();
+    let t_off: Vec<usize> = pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
+    let s_off: Vec<usize> = pairs.iter().map(|&(_, s)| s as usize * k * k).collect();
+    let blk_off = contiguous_offsets(nb, k * k);
+    let mut tmp = vec![0.0; nb * k * k];
+    backend.batched_gemm(
+        GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: false, accumulate: false },
+        BatchRef { data: r_u, offsets: &t_off },
+        BatchRef { data: &a.coupling[l].data, offsets: &blk_off },
+        &mut tmp,
+        &blk_off,
+        metrics,
+    );
+    backend.batched_gemm(
+        GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: true, accumulate: false },
+        BatchRef { data: &tmp, offsets: &blk_off },
+        BatchRef { data: r_v, offsets: &s_off },
+        &mut a.coupling[l].data,
+        &blk_off,
+        metrics,
+    );
 }
 
 /// Test helper: check every explicit basis of the tree has orthonormal

@@ -16,7 +16,9 @@ pub struct CompressionStats {
     /// Low-rank memory (f64 words) before/after.
     pub pre_words: usize,
     pub post_words: usize,
-    /// Reference singular value used for the relative threshold.
+    /// Reference singular value of the *row (U) tree's* leaf SVDs — the
+    /// column tree is truncated against its own reference, which is not
+    /// reported here.
     pub sigma_ref: f64,
 }
 
@@ -41,74 +43,89 @@ fn weight_downsweep(
     log: &mut PhaseLog,
 ) -> LevelBlocks {
     let depth = a.depth();
-    let tree = if for_rows { &a.u } else { &a.v };
     let mut z: LevelBlocks = vec![Vec::new(); depth + 1];
-
     for l in 0..=depth {
         let timer = Timer::start();
-        let k_l = a.rank(l);
-        let nodes = 1usize << l;
-        let k_par = if l > 0 { a.rank(l - 1) } else { 0 };
-        // Blocks per node in this level's block row/column.
-        let cl = &a.coupling[l];
-        let mut counts = vec![0usize; nodes];
-        for &(t, s) in &cl.pairs {
-            let owner = if for_rows { t } else { s } as usize;
-            counts[owner] += 1;
-        }
-        let max_b = counts.iter().copied().max().unwrap_or(0);
-        let parent_rows = if l > 0 { k_par } else { 0 };
-        let stack_rows = parent_rows + max_b * k_l;
-        if stack_rows == 0 {
-            // No blocks anywhere at the root level: zero weight.
-            z[l] = vec![0.0; nodes * k_l * k_l];
-            continue;
-        }
-        // QR needs rows >= cols: pad with zero rows if needed.
-        let stack_rows = stack_rows.max(k_l);
-        let mut stack = vec![0.0; nodes * stack_rows * k_l];
-
-        // Parent contribution: Z_par[t/2] · E_tᵀ into the first k_par rows.
-        if l > 0 {
-            let a_off: Vec<usize> = (0..nodes).map(|t| (t / 2) * k_par * k_par).collect();
-            let b_off = contiguous_offsets(nodes, k_l * k_par);
-            let c_off: Vec<usize> = (0..nodes).map(|t| t * stack_rows * k_l).collect();
-            backend.batched_gemm(
-                GemmDims { nb: nodes, m: k_par, k: k_par, n: k_l, trans_a: false, trans_b: true, accumulate: false },
-                BatchRef { data: &z[l - 1], offsets: &a_off },
-                BatchRef { data: &tree.transfers[l], offsets: &b_off },
-                &mut stack,
-                &c_off,
-                metrics,
-            );
-        }
-
-        // Coupling contributions (marshaled copies; S transposed for the
-        // row tree — Eq. 4 stacks S_ijᵀ — and direct for the column tree).
-        let mut cursor = vec![0usize; nodes];
-        for (p, &(t, s)) in cl.pairs.iter().enumerate() {
-            let owner = if for_rows { t } else { s } as usize;
-            let row0 = parent_rows + cursor[owner] * k_l;
-            cursor[owner] += 1;
-            let blk = cl.block(p, k_l);
-            let dst = &mut stack[owner * stack_rows * k_l + row0 * k_l..];
-            if for_rows {
-                for i in 0..k_l {
-                    for j in 0..k_l {
-                        dst[i * k_l + j] = blk[j * k_l + i];
-                    }
-                }
-            } else {
-                dst[..k_l * k_l].copy_from_slice(blk);
-            }
-        }
-
-        let mut r = vec![0.0; nodes * k_l * k_l];
-        backend.batched_qr_r(nodes, stack_rows, k_l, &stack, &mut r, metrics);
+        let z_parent = if l > 0 { Some(z[l - 1].as_slice()) } else { None };
+        let r = weight_level(a, for_rows, l, z_parent, backend, metrics);
         z[l] = r;
         log.push("weight_qr", l, timer.elapsed());
     }
     z
+}
+
+/// One level of the weight downsweep: per node of level l, the R factor of
+/// the stacked weight matrix [Z_parent·Eᵀ ; level-l coupling blocks of the
+/// node's block row/column] (Eq. 4). `z_parent` holds the level-(l-1)
+/// factors (None at the root).
+pub fn weight_level(
+    a: &H2Matrix,
+    for_rows: bool,
+    l: usize,
+    z_parent: Option<&[f64]>,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> Vec<f64> {
+    let tree = if for_rows { &a.u } else { &a.v };
+    let k_l = a.rank(l);
+    let nodes = 1usize << l;
+    let k_par = if l > 0 { a.rank(l - 1) } else { 0 };
+    // Blocks per node in this level's block row/column.
+    let cl = &a.coupling[l];
+    let mut counts = vec![0usize; nodes];
+    for &(t, s) in &cl.pairs {
+        let owner = if for_rows { t } else { s } as usize;
+        counts[owner] += 1;
+    }
+    let max_b = counts.iter().copied().max().unwrap_or(0);
+    let parent_rows = if l > 0 { k_par } else { 0 };
+    let stack_rows = parent_rows + max_b * k_l;
+    if stack_rows == 0 {
+        // No blocks anywhere at the root level: zero weight.
+        return vec![0.0; nodes * k_l * k_l];
+    }
+    // QR needs rows >= cols: pad with zero rows if needed.
+    let stack_rows = stack_rows.max(k_l);
+    let mut stack = vec![0.0; nodes * stack_rows * k_l];
+
+    // Parent contribution: Z_par[t/2] · E_tᵀ into the first k_par rows.
+    if l > 0 {
+        let a_off: Vec<usize> = (0..nodes).map(|t| (t / 2) * k_par * k_par).collect();
+        let b_off = contiguous_offsets(nodes, k_l * k_par);
+        let c_off: Vec<usize> = (0..nodes).map(|t| t * stack_rows * k_l).collect();
+        backend.batched_gemm(
+            GemmDims { nb: nodes, m: k_par, k: k_par, n: k_l, trans_a: false, trans_b: true, accumulate: false },
+            BatchRef { data: z_parent.expect("inner level needs parent Z"), offsets: &a_off },
+            BatchRef { data: &tree.transfers[l], offsets: &b_off },
+            &mut stack,
+            &c_off,
+            metrics,
+        );
+    }
+
+    // Coupling contributions (marshaled copies; S transposed for the
+    // row tree — Eq. 4 stacks S_ijᵀ — and direct for the column tree).
+    let mut cursor = vec![0usize; nodes];
+    for (p, &(t, s)) in cl.pairs.iter().enumerate() {
+        let owner = if for_rows { t } else { s } as usize;
+        let row0 = parent_rows + cursor[owner] * k_l;
+        cursor[owner] += 1;
+        let blk = cl.block(p, k_l);
+        let dst = &mut stack[owner * stack_rows * k_l + row0 * k_l..];
+        if for_rows {
+            for i in 0..k_l {
+                for j in 0..k_l {
+                    dst[i * k_l + j] = blk[j * k_l + i];
+                }
+            }
+        } else {
+            dst[..k_l * k_l].copy_from_slice(blk);
+        }
+    }
+
+    let mut r = vec![0.0; nodes * k_l * k_l];
+    backend.batched_qr_r(nodes, stack_rows, k_l, &stack, &mut r, metrics);
+    r
 }
 
 /// Result of truncating one basis tree.
@@ -117,6 +134,8 @@ struct TruncatedTree {
     /// Projection maps P_t = U'ᵀU per level (k'_l × k_l per node).
     p: LevelBlocks,
     new_ranks: Vec<usize>,
+    /// Reference singular value of the leaf SVDs.
+    sigma_ref: f64,
 }
 
 /// Truncation upsweep of §5.2: SVD the reweighed bases level by level,
@@ -130,6 +149,73 @@ fn truncate_tree(
     metrics: &mut Metrics,
     log: &mut PhaseLog,
 ) -> TruncatedTree {
+    let depth = a.depth();
+    let tree = if for_rows { &a.u } else { &a.v };
+    let m_pad = tree.leaf_dim;
+    let leaf_sizes = tree.leaf_sizes.clone();
+
+    let leaf = truncate_leaf_level(a, for_rows, &z[depth], tau, backend, metrics, log);
+    let mut new_ranks = vec![0usize; depth + 1];
+    new_ranks[depth] = leaf.k_new;
+    let mut p: LevelBlocks = vec![Vec::new(); depth + 1];
+    p[depth] = leaf.p_leaf;
+
+    // --- Inner levels (children l -> parents l-1). ---
+    let mut new_transfers: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    for l in (1..=depth).rev() {
+        let timer = Timer::start();
+        let (etr, pp, k_new_p) = truncate_inner_level(
+            a,
+            for_rows,
+            l,
+            &z[l - 1],
+            new_ranks[l],
+            &p[l],
+            leaf.abs_tol,
+            backend,
+            metrics,
+        );
+        new_ranks[l - 1] = k_new_p;
+        new_transfers[l] = etr;
+        p[l - 1] = pp;
+        log.push("trunc_svd", l - 1, timer.elapsed());
+    }
+
+    // Assemble the new basis tree.
+    let mut basis = BasisTree::zeros(depth, new_ranks.clone(), m_pad, leaf_sizes);
+    basis.leaf_bases = leaf.new_leaf_bases;
+    for l in 1..=depth {
+        basis.transfers[l] = std::mem::take(&mut new_transfers[l]);
+    }
+    TruncatedTree { basis, p, new_ranks, sigma_ref: leaf.sigma_ref }
+}
+
+/// Outcome of the leaf stage of the truncation upsweep.
+pub struct LeafTruncation {
+    /// New leaf bases (m_pad × k_new per node).
+    pub new_leaf_bases: Vec<f64>,
+    /// Leaf projection maps P = U'ᵀU (k_new × k_old per node).
+    pub p_leaf: Vec<f64>,
+    /// New (uniform) leaf rank.
+    pub k_new: usize,
+    /// Absolute singular-value threshold τ·σ_ref used for every level.
+    pub abs_tol: f64,
+    /// Reference singular value σ_ref (largest leaf singular value).
+    pub sigma_ref: f64,
+}
+
+/// Leaf stage of the truncation upsweep: M_t = U_t·Z_tᵀ, batched SVD, rank
+/// selection against τ·σ_ref, new leaf bases and leaf P maps.
+#[allow(clippy::too_many_arguments)]
+pub fn truncate_leaf_level(
+    a: &H2Matrix,
+    for_rows: bool,
+    z_leaf: &[f64],
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+) -> LeafTruncation {
     let timer = Timer::start();
     let depth = a.depth();
     let tree = if for_rows { &a.u } else { &a.v };
@@ -137,7 +223,7 @@ fn truncate_tree(
     let leaves = tree.num_leaves();
     let k_leaf = tree.ranks[depth];
 
-    // --- Leaf level: M_t = U_t · Z_tᵀ, SVD, pick rank. ---
+    // M_t = U_t · Z_tᵀ, SVD, pick rank.
     let mut m_buf = vec![0.0; leaves * m_pad * k_leaf];
     {
         let a_off = contiguous_offsets(leaves, m_pad * k_leaf);
@@ -145,7 +231,7 @@ fn truncate_tree(
         backend.batched_gemm(
             GemmDims { nb: leaves, m: m_pad, k: k_leaf, n: k_leaf, trans_a: false, trans_b: true, accumulate: false },
             BatchRef { data: &tree.leaf_bases, offsets: &a_off },
-            BatchRef { data: &z[depth], offsets: &z_off },
+            BatchRef { data: z_leaf, offsets: &z_off },
             &mut m_buf,
             &a_off,
             metrics,
@@ -159,142 +245,138 @@ fn truncate_tree(
     let sigma_ref = s_svd.iter().cloned().fold(0.0_f64, f64::max).max(f64::MIN_POSITIVE);
     let abs_tol = tau * sigma_ref;
     let rank_of = |s: &[f64]| s.iter().take_while(|&&x| x > abs_tol).count();
-    let k_new_leaf = (0..leaves)
+    let k_new = (0..leaves)
         .map(|i| rank_of(&s_svd[i * k_leaf..(i + 1) * k_leaf]))
         .max()
         .unwrap()
         .max(1);
 
-    let mut new_ranks = vec![0usize; depth + 1];
-    new_ranks[depth] = k_new_leaf;
-
     // New leaf bases (first k' columns of each SVD U) and P = U'ᵀ U.
-    let leaf_sizes = tree.leaf_sizes.clone();
-    let mut p: LevelBlocks = vec![Vec::new(); depth + 1];
-    let mut new_leaf_bases = vec![0.0; leaves * m_pad * k_new_leaf];
+    let mut new_leaf_bases = vec![0.0; leaves * m_pad * k_new];
     for j in 0..leaves {
         for i in 0..m_pad {
-            for c in 0..k_new_leaf {
-                new_leaf_bases[j * m_pad * k_new_leaf + i * k_new_leaf + c] =
+            for c in 0..k_new {
+                new_leaf_bases[j * m_pad * k_new + i * k_new + c] =
                     u_svd[j * m_pad * k_leaf + i * k_leaf + c];
             }
         }
     }
     log.push("trunc_svd", depth, timer.elapsed());
     let timer = Timer::start();
+    let mut p_leaf = vec![0.0; leaves * k_new * k_leaf];
     {
-        let mut pl = vec![0.0; leaves * k_new_leaf * k_leaf];
-        let a_off = contiguous_offsets(leaves, m_pad * k_new_leaf);
+        let a_off = contiguous_offsets(leaves, m_pad * k_new);
         let b_off = contiguous_offsets(leaves, m_pad * k_leaf);
-        let c_off = contiguous_offsets(leaves, k_new_leaf * k_leaf);
+        let c_off = contiguous_offsets(leaves, k_new * k_leaf);
         backend.batched_gemm(
-            GemmDims { nb: leaves, m: k_new_leaf, k: m_pad, n: k_leaf, trans_a: true, trans_b: false, accumulate: false },
+            GemmDims { nb: leaves, m: k_new, k: m_pad, n: k_leaf, trans_a: true, trans_b: false, accumulate: false },
             BatchRef { data: &new_leaf_bases, offsets: &a_off },
             BatchRef { data: &tree.leaf_bases, offsets: &b_off },
-            &mut pl,
+            &mut p_leaf,
             &c_off,
             metrics,
         );
-        p[depth] = pl;
     }
     log.push("trunc_p", depth, timer.elapsed());
+    LeafTruncation { new_leaf_bases, p_leaf, k_new, abs_tol, sigma_ref }
+}
 
-    // --- Inner levels (children l -> parents l-1). ---
-    // Stage per level: tmp1 = E_c · Z_pᵀ, tmp2 = P_c · tmp1, SVD of the
-    // stacked tmp2 pair, split E', accumulate P_p = Σ E'ᵀ (P_c E_c).
-    let mut new_transfers: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
-    for l in (1..=depth).rev() {
-        let timer = Timer::start();
-        let k_l = tree.ranks[l];
-        let k_par = tree.ranks[l - 1];
-        let k_new_c = new_ranks[l];
-        let nodes_c = 1usize << l;
-        let nodes_p = 1usize << (l - 1);
+/// One inner level of the truncation upsweep (children l -> parents l-1):
+/// tmp1 = E_c·Z_pᵀ, tmp2 = P_c·tmp1, SVD of the stacked sibling pair, new
+/// transfers E' from the left-factor halves, and the parents' projection
+/// maps P_p = Σ_c E'_cᵀ(P_c·E_c). Returns (new transfers at level l,
+/// parent P maps, new parent rank).
+#[allow(clippy::too_many_arguments)]
+pub fn truncate_inner_level(
+    a: &H2Matrix,
+    for_rows: bool,
+    l: usize,
+    z_parent: &[f64],
+    k_new_c: usize,
+    p_c: &[f64],
+    abs_tol: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (Vec<f64>, Vec<f64>, usize) {
+    let tree = if for_rows { &a.u } else { &a.v };
+    let k_l = tree.ranks[l];
+    let k_par = tree.ranks[l - 1];
+    let nodes_c = 1usize << l;
+    let nodes_p = 1usize << (l - 1);
+    let rank_of = |s: &[f64]| s.iter().take_while(|&&x| x > abs_tol).count();
 
-        // tmp1_c = E_c · Z_parᵀ  (k_l × k_par)
-        let mut tmp1 = vec![0.0; nodes_c * k_l * k_par];
-        let e_off = contiguous_offsets(nodes_c, k_l * k_par);
-        let zoff: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_par * k_par).collect();
-        backend.batched_gemm(
-            GemmDims { nb: nodes_c, m: k_l, k: k_par, n: k_par, trans_a: false, trans_b: true, accumulate: false },
-            BatchRef { data: &tree.transfers[l], offsets: &e_off },
-            BatchRef { data: &z[l - 1], offsets: &zoff },
-            &mut tmp1,
-            &e_off,
-            metrics,
-        );
-        // tmp2_c = P_c · tmp1_c  (k'_l × k_par), written into SVD stacks.
-        let stack_rows = (2 * k_new_c).max(k_par); // zero row padding for wide stacks
-        let mut stack = vec![0.0; nodes_p * stack_rows * k_par];
-        let p_off = contiguous_offsets(nodes_c, k_new_c * k_l);
-        let stack_off: Vec<usize> = (0..nodes_c)
-            .map(|c| (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par)
-            .collect();
-        backend.batched_gemm(
-            GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
-            BatchRef { data: &p[l], offsets: &p_off },
-            BatchRef { data: &tmp1, offsets: &e_off },
-            &mut stack,
-            &stack_off,
-            metrics,
-        );
+    // tmp1_c = E_c · Z_parᵀ  (k_l × k_par)
+    let mut tmp1 = vec![0.0; nodes_c * k_l * k_par];
+    let e_off = contiguous_offsets(nodes_c, k_l * k_par);
+    let zoff: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_par * k_par).collect();
+    backend.batched_gemm(
+        GemmDims { nb: nodes_c, m: k_l, k: k_par, n: k_par, trans_a: false, trans_b: true, accumulate: false },
+        BatchRef { data: &tree.transfers[l], offsets: &e_off },
+        BatchRef { data: z_parent, offsets: &zoff },
+        &mut tmp1,
+        &e_off,
+        metrics,
+    );
+    // tmp2_c = P_c · tmp1_c  (k'_l × k_par), written into SVD stacks.
+    let stack_rows = (2 * k_new_c).max(k_par); // zero row padding for wide stacks
+    let mut stack = vec![0.0; nodes_p * stack_rows * k_par];
+    let p_off = contiguous_offsets(nodes_c, k_new_c * k_l);
+    let stack_off: Vec<usize> = (0..nodes_c)
+        .map(|c| (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par)
+        .collect();
+    backend.batched_gemm(
+        GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
+        BatchRef { data: p_c, offsets: &p_off },
+        BatchRef { data: &tmp1, offsets: &e_off },
+        &mut stack,
+        &stack_off,
+        metrics,
+    );
 
-        let mut us = vec![0.0; nodes_p * stack_rows * k_par];
-        let mut ss = vec![0.0; nodes_p * k_par];
-        let mut vs = vec![0.0; nodes_p * k_par * k_par];
-        backend.batched_svd(nodes_p, stack_rows, k_par, &stack, &mut us, &mut ss, &mut vs, metrics);
-        let k_new_p = (0..nodes_p)
-            .map(|i| rank_of(&ss[i * k_par..(i + 1) * k_par]))
-            .max()
-            .unwrap()
-            .max(1)
-            .min(2 * k_new_c); // cannot exceed the stack's actual row count
-        new_ranks[l - 1] = k_new_p;
+    let mut us = vec![0.0; nodes_p * stack_rows * k_par];
+    let mut ss = vec![0.0; nodes_p * k_par];
+    let mut vs = vec![0.0; nodes_p * k_par * k_par];
+    backend.batched_svd(nodes_p, stack_rows, k_par, &stack, &mut us, &mut ss, &mut vs, metrics);
+    let k_new_p = (0..nodes_p)
+        .map(|i| rank_of(&ss[i * k_par..(i + 1) * k_par]))
+        .max()
+        .unwrap()
+        .max(1)
+        .min(2 * k_new_c); // cannot exceed the stack's actual row count
 
-        // New transfers E'_c: rows of the left factor halves.
-        let mut etr = vec![0.0; nodes_c * k_new_c * k_new_p];
-        for c in 0..nodes_c {
-            let base = (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par;
-            for i in 0..k_new_c {
-                for q in 0..k_new_p {
-                    etr[c * k_new_c * k_new_p + i * k_new_p + q] = us[base + i * k_par + q];
-                }
+    // New transfers E'_c: rows of the left factor halves.
+    let mut etr = vec![0.0; nodes_c * k_new_c * k_new_p];
+    for c in 0..nodes_c {
+        let base = (c / 2) * stack_rows * k_par + (c % 2) * k_new_c * k_par;
+        for i in 0..k_new_c {
+            for q in 0..k_new_p {
+                etr[c * k_new_c * k_new_p + i * k_new_p + q] = us[base + i * k_par + q];
             }
         }
-        new_transfers[l] = etr;
-
-        // P_p = Σ_c E'_cᵀ · (P_c · E_c)
-        let mut pce = vec![0.0; nodes_c * k_new_c * k_par];
-        backend.batched_gemm(
-            GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
-            BatchRef { data: &p[l], offsets: &p_off },
-            BatchRef { data: &tree.transfers[l], offsets: &e_off },
-            &mut pce,
-            &contiguous_offsets(nodes_c, k_new_c * k_par),
-            metrics,
-        );
-        let mut pp = vec![0.0; nodes_p * k_new_p * k_par];
-        let ep_off = contiguous_offsets(nodes_c, k_new_c * k_new_p);
-        let pp_off: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_new_p * k_par).collect();
-        backend.batched_gemm(
-            GemmDims { nb: nodes_c, m: k_new_p, k: k_new_c, n: k_par, trans_a: true, trans_b: false, accumulate: true },
-            BatchRef { data: &new_transfers[l], offsets: &ep_off },
-            BatchRef { data: &pce, offsets: &contiguous_offsets(nodes_c, k_new_c * k_par) },
-            &mut pp,
-            &pp_off,
-            metrics,
-        );
-        p[l - 1] = pp;
-        log.push("trunc_svd", l - 1, timer.elapsed());
     }
 
-    // Assemble the new basis tree.
-    let mut basis = BasisTree::zeros(depth, new_ranks.clone(), m_pad, leaf_sizes);
-    basis.leaf_bases = new_leaf_bases;
-    for l in 1..=depth {
-        basis.transfers[l] = std::mem::take(&mut new_transfers[l]);
-    }
-    TruncatedTree { basis, p, new_ranks }
+    // P_p = Σ_c E'_cᵀ · (P_c · E_c)
+    let mut pce = vec![0.0; nodes_c * k_new_c * k_par];
+    backend.batched_gemm(
+        GemmDims { nb: nodes_c, m: k_new_c, k: k_l, n: k_par, trans_a: false, trans_b: false, accumulate: false },
+        BatchRef { data: p_c, offsets: &p_off },
+        BatchRef { data: &tree.transfers[l], offsets: &e_off },
+        &mut pce,
+        &contiguous_offsets(nodes_c, k_new_c * k_par),
+        metrics,
+    );
+    let mut pp = vec![0.0; nodes_p * k_new_p * k_par];
+    let ep_off = contiguous_offsets(nodes_c, k_new_c * k_new_p);
+    let pp_off: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_new_p * k_par).collect();
+    backend.batched_gemm(
+        GemmDims { nb: nodes_c, m: k_new_p, k: k_new_c, n: k_par, trans_a: true, trans_b: false, accumulate: true },
+        BatchRef { data: &etr, offsets: &ep_off },
+        BatchRef { data: &pce, offsets: &contiguous_offsets(nodes_c, k_new_c * k_par) },
+        &mut pp,
+        &pp_off,
+        metrics,
+    );
+    (etr, pp, k_new_p)
 }
 
 /// Compress `a` (orthogonal bases required) to relative accuracy τ.
@@ -324,40 +406,18 @@ pub fn compress_logged(
 
     // Project couplings: S' = P^U_t · S · (P^V_s)ᵀ.
     let mut coupling = Vec::with_capacity(a.coupling.len());
-    for (l, cl) in a.coupling.iter().enumerate() {
+    for l in 0..a.coupling.len() {
         let timer = Timer::start();
-        let k = a.rank(l);
-        let (ku, kv) = (tu.new_ranks[l], tv.new_ranks[l]);
-        // Uniform new rank per level is required by the fixed-shape batch
-        // design; use max(ku, kv) for both sides, zero-padding P maps.
-        let k_new = ku.max(kv);
-        let nb = cl.num_blocks();
-        let mut ncl =
-            crate::tree::CouplingLevel::from_pairs(cl.pairs.clone(), 1 << l, k_new);
-        if nb > 0 {
-            let pu = pad_p(&tu.p[l], 1 << l, ku, k_new, k);
-            let pv = pad_p(&tv.p[l], 1 << l, kv, k_new, k);
-            let t_off: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
-            let s_off: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize * k_new * k).collect();
-            let blk_off = contiguous_offsets(nb, k * k);
-            let mut tmp = vec![0.0; nb * k_new * k];
-            backend.batched_gemm(
-                GemmDims { nb, m: k_new, k, n: k, trans_a: false, trans_b: false, accumulate: false },
-                BatchRef { data: &pu, offsets: &t_off },
-                BatchRef { data: &cl.data, offsets: &blk_off },
-                &mut tmp,
-                &contiguous_offsets(nb, k_new * k),
-                metrics,
-            );
-            backend.batched_gemm(
-                GemmDims { nb, m: k_new, k, n: k_new, trans_a: false, trans_b: true, accumulate: false },
-                BatchRef { data: &tmp, offsets: &contiguous_offsets(nb, k_new * k) },
-                BatchRef { data: &pv, offsets: &s_off },
-                &mut ncl.data,
-                &contiguous_offsets(nb, k_new * k_new),
-                metrics,
-            );
-        }
+        let ncl = project_level(
+            a,
+            l,
+            &tu.p[l],
+            tu.new_ranks[l],
+            &tv.p[l],
+            tv.new_ranks[l],
+            backend,
+            metrics,
+        );
         coupling.push(ncl);
         log.push("project", l, timer.elapsed());
     }
@@ -374,9 +434,57 @@ pub fn compress_logged(
         new_ranks,
         pre_words: a.low_rank_memory_words(),
         post_words: result.low_rank_memory_words(),
-        sigma_ref: 0.0,
+        sigma_ref: tu.sigma_ref,
     };
     (result, stats)
+}
+
+/// Project one coupling level onto the truncated bases:
+/// S' = P^U_t · S · (P^V_s)ᵀ. `pu`/`pv` are the level-l projection maps of
+/// the row/column trees with `ku`/`kv` rows per node; the new level uses
+/// the unified rank max(ku, kv) (zero-padding the narrower map), as the
+/// fixed-shape batch design requires.
+#[allow(clippy::too_many_arguments)]
+pub fn project_level(
+    a: &H2Matrix,
+    l: usize,
+    pu: &[f64],
+    ku: usize,
+    pv: &[f64],
+    kv: usize,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> crate::tree::CouplingLevel {
+    let cl = &a.coupling[l];
+    let k = a.rank(l);
+    let k_new = ku.max(kv);
+    let nb = cl.num_blocks();
+    let mut ncl = crate::tree::CouplingLevel::from_pairs(cl.pairs.clone(), 1 << l, k_new);
+    if nb > 0 {
+        let pu = pad_p(pu, 1 << l, ku, k_new, k);
+        let pv = pad_p(pv, 1 << l, kv, k_new, k);
+        let t_off: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
+        let s_off: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize * k_new * k).collect();
+        let blk_off = contiguous_offsets(nb, k * k);
+        let mut tmp = vec![0.0; nb * k_new * k];
+        backend.batched_gemm(
+            GemmDims { nb, m: k_new, k, n: k, trans_a: false, trans_b: false, accumulate: false },
+            BatchRef { data: &pu, offsets: &t_off },
+            BatchRef { data: &cl.data, offsets: &blk_off },
+            &mut tmp,
+            &contiguous_offsets(nb, k_new * k),
+            metrics,
+        );
+        backend.batched_gemm(
+            GemmDims { nb, m: k_new, k, n: k_new, trans_a: false, trans_b: true, accumulate: false },
+            BatchRef { data: &tmp, offsets: &contiguous_offsets(nb, k_new * k) },
+            BatchRef { data: &pv, offsets: &s_off },
+            &mut ncl.data,
+            &contiguous_offsets(nb, k_new * k_new),
+            metrics,
+        );
+    }
+    ncl
 }
 
 /// Orthogonalize + compress in one call (the full §6.3 pipeline). Returns

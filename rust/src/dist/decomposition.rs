@@ -1,0 +1,122 @@
+//! Branch decomposition of the H² tree over P virtual ranks (§2.2).
+//!
+//! With P a power of two and C = log₂P the *C-level*, rank r owns the
+//! branch rooted at node r of level C: at every level l ≥ C it owns the
+//! contiguous node range `[r·2^(l-C), (r+1)·2^(l-C))`. The subtree above
+//! the C-level (levels 0..C) is replicated conceptually but *processed* on
+//! the master rank 0, as low-priority work overlapped with the branches'
+//! local phases (§4.2).
+
+use std::ops::Range;
+
+/// Assignment of tree branches to P virtual ranks at the split level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decomposition {
+    /// Number of virtual ranks (power of two).
+    pub p: usize,
+    /// Depth of the decomposed tree (leaves at this level).
+    pub depth: usize,
+    /// The split level C = log₂P; each rank owns one level-C node's branch.
+    pub c_level: usize,
+}
+
+impl Decomposition {
+    /// Decompose a depth-`depth` tree over `p` ranks.
+    ///
+    /// Panics unless `p` is a power of two with log₂p ≤ depth (a rank must
+    /// own at least one complete branch).
+    pub fn new(p: usize, depth: usize) -> Self {
+        assert!(p >= 1 && p.is_power_of_two(), "rank count must be a power of two, got {p}");
+        let c_level = p.trailing_zeros() as usize;
+        assert!(
+            c_level <= depth,
+            "P = {p} ranks need a tree of depth >= {c_level}, got depth {depth}"
+        );
+        Decomposition { p, depth, c_level }
+    }
+
+    /// Owning rank of node `j` at level `l`. Nodes above the C-level belong
+    /// to the master's replicated top subtree and report rank 0.
+    pub fn owner(&self, l: usize, j: usize) -> usize {
+        debug_assert!(l <= self.depth && j < (1 << l));
+        if l < self.c_level {
+            0
+        } else {
+            j >> (l - self.c_level)
+        }
+    }
+
+    /// The contiguous node range rank `rank` owns at level `l` (requires
+    /// l ≥ C: above the C-level no rank owns nodes).
+    pub fn own_range(&self, rank: usize, l: usize) -> Range<usize> {
+        debug_assert!(rank < self.p);
+        assert!(l >= self.c_level, "level {l} is above the C-level {}", self.c_level);
+        let width = 1usize << (l - self.c_level);
+        rank * width..(rank + 1) * width
+    }
+
+    /// Leaves per rank.
+    pub fn leaves_per_rank(&self) -> usize {
+        1usize << (self.depth - self.c_level)
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ownership_partitions_every_level() {
+        // Every node at or below the C-level is owned exactly once, and
+        // own_range agrees with owner.
+        for p in [1usize, 2, 4, 8] {
+            let d = Decomposition::new(p, 5);
+            for l in d.c_level..=d.depth {
+                let mut owned = vec![0usize; 1 << l];
+                for r in 0..p {
+                    for j in d.own_range(r, l) {
+                        owned[j] += 1;
+                        assert_eq!(d.owner(l, j), r, "P={p} l={l} j={j}");
+                    }
+                }
+                assert!(owned.iter().all(|&c| c == 1), "P={p} level {l}: {owned:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_subtree_reports_master() {
+        let d = Decomposition::new(8, 6);
+        assert_eq!(d.c_level, 3);
+        for l in 0..3 {
+            for j in 0..(1 << l) {
+                assert_eq!(d.owner(l, j), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let d = Decomposition::new(1, 4);
+        assert_eq!(d.c_level, 0);
+        assert_eq!(d.leaves_per_rank(), 16);
+        assert_eq!(d.own_range(0, 4), 0..16);
+        assert_eq!(d.owner(2, 3), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        Decomposition::new(3, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth")]
+    fn rejects_too_shallow_tree() {
+        Decomposition::new(8, 2);
+    }
+}

@@ -1,0 +1,191 @@
+//! Communication-volume-optimized exchange plans (§4.1).
+//!
+//! During the distributed HGEMV upsweep each rank computes the x̂
+//! coefficients of its own branch; the per-level tree multiplication then
+//! needs, for every coupling block (t, s) whose row t it owns, the column
+//! coefficients x̂_s — which live on owner(s). A naive implementation
+//! allgathers every level's coefficients; the optimized plan precomputes,
+//! per (level, destination rank, source rank), exactly the set of column
+//! nodes some owned block references, and ships only those. The per-rank
+//! byte counters feed `Metrics::bytes_sent`/`messages` and the Fig. 8
+//! comm streams.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::dist::Decomposition;
+use crate::tree::H2Matrix;
+
+/// The exchange sets of one tree level.
+#[derive(Clone, Debug, Default)]
+pub struct LevelExchange {
+    /// `recv[rank]` = (source rank, column nodes to receive), sorted by
+    /// source; node lists sorted and deduplicated.
+    pub recv: Vec<Vec<(usize, Vec<u32>)>>,
+    /// `send[rank]` = (destination rank, column nodes to send) — the
+    /// transpose of `recv`.
+    pub send: Vec<Vec<(usize, Vec<u32>)>>,
+}
+
+/// Per-level send/recv sets of basis coefficients for one decomposition.
+#[derive(Clone, Debug)]
+pub struct ExchangePlan {
+    pub decomp: Decomposition,
+    /// `levels[l]` for l in 0..=depth; levels above the C-level are empty
+    /// (the top subtree is handled by the master gather/scatter).
+    pub levels: Vec<LevelExchange>,
+}
+
+impl ExchangePlan {
+    /// Precompute the exchange sets of `a` under decomposition `d`.
+    pub fn build(a: &H2Matrix, d: Decomposition) -> Self {
+        assert_eq!(d.depth, a.depth(), "decomposition built for a different tree");
+        let mut levels = Vec::with_capacity(a.depth() + 1);
+        for l in 0..=a.depth() {
+            let mut need: Vec<BTreeMap<usize, BTreeSet<u32>>> = vec![BTreeMap::new(); d.p];
+            if l >= d.c_level {
+                for &(t, s) in &a.coupling[l].pairs {
+                    let pt = d.owner(l, t as usize);
+                    let ps = d.owner(l, s as usize);
+                    if pt != ps {
+                        need[pt].entry(ps).or_default().insert(s);
+                    }
+                }
+            }
+            let recv: Vec<Vec<(usize, Vec<u32>)>> = need
+                .iter()
+                .map(|m| {
+                    m.iter().map(|(&src, nodes)| (src, nodes.iter().copied().collect())).collect()
+                })
+                .collect();
+            let mut send_map: Vec<BTreeMap<usize, Vec<u32>>> = vec![BTreeMap::new(); d.p];
+            for (dst, lists) in recv.iter().enumerate() {
+                for (src, nodes) in lists {
+                    send_map[*src].insert(dst, nodes.clone());
+                }
+            }
+            let send = send_map.into_iter().map(|m| m.into_iter().collect()).collect();
+            levels.push(LevelExchange { recv, send });
+        }
+        ExchangePlan { decomp: d, levels }
+    }
+
+    /// Optimized bytes received by `rank` for one `nv`-vector product:
+    /// only the column nodes its coupling rows reference, f64 coefficients
+    /// of k_l values per node per vector.
+    pub fn bytes_into(&self, a: &H2Matrix, rank: usize, nv: usize) -> usize {
+        let mut total = 0;
+        for l in self.decomp.c_level..=a.depth() {
+            let k = a.rank(l);
+            for (_, nodes) in &self.levels[l].recv[rank] {
+                total += nodes.len() * k * nv * 8;
+            }
+        }
+        total
+    }
+
+    /// Naive allgather bytes received by `rank`: every other rank's
+    /// complete coefficient set at every distributed level.
+    pub fn naive_bytes_into(&self, a: &H2Matrix, rank: usize, nv: usize) -> usize {
+        debug_assert!(rank < self.decomp.p);
+        let c = self.decomp.c_level;
+        let mut total = 0;
+        for l in c..=a.depth() {
+            let others = (1usize << l) - (1usize << (l - c));
+            total += others * a.rank(l) * nv * 8;
+        }
+        total
+    }
+
+    /// Number of point-to-point messages `rank` receives in one exchange.
+    pub fn messages_into(&self, rank: usize) -> usize {
+        self.levels.iter().map(|le| le.recv[rank].len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admissibility::MatrixStructure;
+    use crate::clustering::ClusterTree;
+    use crate::geometry::PointSet;
+    use crate::tree::H2Matrix;
+
+    /// A hand-built depth-2 tree over 16 1D-ish points: 4 leaves of 4
+    /// points, rank 2 at every level, with a synthetic coupling structure.
+    fn hand_tree() -> H2Matrix {
+        let mut ps = PointSet::new(1);
+        for i in 0..16 {
+            ps.push(&[i as f64]);
+        }
+        let tree = ClusterTree::build(ps, 4);
+        assert_eq!(tree.depth, 2);
+        let structure = MatrixStructure {
+            // level 2: the two middle leaves talk across the branch cut,
+            // and the outer leaves talk to each other.
+            coupling: vec![Vec::new(), Vec::new(), vec![(0, 3), (1, 2), (2, 1), (3, 0)]],
+            dense: vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 2), (2, 3), (3, 2), (3, 3)],
+        };
+        H2Matrix::from_structure(tree, &structure, &[2, 2, 2], 4)
+    }
+
+    #[test]
+    fn bytes_match_hand_count() {
+        let a = hand_tree();
+        let d = Decomposition::new(2, 2);
+        let plan = ExchangePlan::build(&a, d);
+        // Rank 0 owns leaves {0, 1}; its rows reference columns {3, 2} on
+        // rank 1: 2 nodes x k=2 x 8 bytes = 32 bytes, one message.
+        assert_eq!(plan.bytes_into(&a, 0, 1), 32);
+        assert_eq!(plan.bytes_into(&a, 1, 1), 32);
+        assert_eq!(plan.messages_into(0), 1);
+        // nv scales linearly.
+        assert_eq!(plan.bytes_into(&a, 0, 4), 128);
+        // Naive allgather: level 1 one foreign node + level 2 two foreign
+        // nodes, k=2 -> (1 + 2) * 2 * 8 = 48 bytes.
+        assert_eq!(plan.naive_bytes_into(&a, 0, 1), 48);
+    }
+
+    #[test]
+    fn recv_and_send_are_transposes() {
+        let a = hand_tree();
+        let plan = ExchangePlan::build(&a, Decomposition::new(2, 2));
+        for le in &plan.levels {
+            for (dst, lists) in le.recv.iter().enumerate() {
+                for (src, nodes) in lists {
+                    let sent = le.send[*src]
+                        .iter()
+                        .find(|(d2, _)| *d2 == dst)
+                        .map(|(_, n)| n.clone())
+                        .unwrap_or_default();
+                    assert_eq!(&sent, nodes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_never_exceeds_naive() {
+        let points = PointSet::grid_2d(16, 1.0);
+        let kernel = crate::construct::ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = crate::config::H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        let a = crate::construct::build_h2(points, &kernel, &cfg);
+        for p in [2usize, 4] {
+            if a.depth() < p.trailing_zeros() as usize {
+                continue;
+            }
+            let plan = ExchangePlan::build(&a, Decomposition::new(p, a.depth()));
+            for r in 0..p {
+                assert!(plan.bytes_into(&a, r, 3) <= plan.naive_bytes_into(&a, r, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_plan_is_empty() {
+        let a = hand_tree();
+        let plan = ExchangePlan::build(&a, Decomposition::new(1, 2));
+        assert_eq!(plan.bytes_into(&a, 0, 1), 0);
+        assert_eq!(plan.naive_bytes_into(&a, 0, 1), 0);
+        assert_eq!(plan.messages_into(0), 0);
+    }
+}

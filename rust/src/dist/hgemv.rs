@@ -1,0 +1,490 @@
+//! Distributed HGEMV over simulated MPI ranks in virtual time (§4).
+//!
+//! Numerically, [`dist_hgemv`] executes the *same* level/range-scoped phase
+//! functions as the serial [`crate::matvec::hgemv`], sliced per branch —
+//! so its output is bitwise identical to the serial product for every P.
+//! What is distributed is the *schedule*: each virtual rank's phase costs
+//! are priced by an analytic [`CostModel`] (batched-kernel launch latency,
+//! flop rate, memory bandwidth), the coefficient exchanges of the
+//! [`ExchangePlan`] are priced by the α-β [`NetworkModel`], and the
+//! timeline composes them per §4.2:
+//!
+//! - local branch upsweep on every rank,
+//! - x̂ exchange, overlapped (when [`DistOptions::overlap`]) with the
+//!   dense/diagonal block multiplication that needs no remote data,
+//! - top-subtree work serialized on the master as a low-priority stream,
+//! - branch downsweep after the master's ŷ scatter arrives.
+//!
+//! With `trace`, the three Fig. 8 streams (compute / comm / lowprio) are
+//! emitted through [`TraceCollector`] as Chrome-trace JSON.
+
+use std::ops::Range;
+
+use crate::backend::ComputeBackend;
+use crate::config::NetworkModel;
+use crate::dist::{Decomposition, ExchangePlan};
+use crate::matvec::{
+    dense_multiply_range, downsweep_leaf_range, downsweep_transfer_level, hgemv_prologue,
+    tree_multiply_level, unpad_leaf_output, upsweep_leaf_range, upsweep_transfer_level, HgemvPlan,
+    HgemvWorkspace,
+};
+use crate::metrics::Metrics;
+use crate::tree::H2Matrix;
+use crate::util::trace::TraceCollector;
+
+/// Options of one distributed product.
+#[derive(Clone, Copy, Debug)]
+pub struct DistOptions {
+    /// The simulated interconnect.
+    pub net: NetworkModel,
+    /// Overlap the coefficient exchange with local (diagonal) compute.
+    pub overlap: bool,
+    /// Collect a Chrome-trace timeline ([`DistReport::trace_json`]).
+    pub trace: bool,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions { net: NetworkModel::default(), overlap: true, trace: false }
+    }
+}
+
+/// Analytic per-kernel cost model for virtual compute time: a batched
+/// launch pays a fixed latency, the flops run at a sustained rate, and
+/// every operand/result word crosses the memory bus once. The constants
+/// approximate a per-GPU share of the paper's V100 node on *small-block*
+/// batched kernels (launch-bound at nv = 1 — which is exactly the paper's
+/// arithmetic-intensity argument for multi-vector products, Fig. 9).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Batched-kernel launch latency (s).
+    pub t_launch: f64,
+    /// Seconds per flop (1 / sustained rate).
+    pub flop_time: f64,
+    /// Seconds per byte of operand/result traffic.
+    pub byte_time: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { t_launch: 1.5e-6, flop_time: 4.0e-10, byte_time: 4.0e-11 }
+    }
+}
+
+impl CostModel {
+    /// Virtual time of one batched GEMM of nb (m × k)·(k × n) blocks.
+    pub fn gemm(&self, nb: usize, m: usize, k: usize, n: usize) -> f64 {
+        if nb == 0 {
+            return 0.0;
+        }
+        let flops = 2.0 * (nb * m * k * n) as f64;
+        let words = (nb * (m * k + k * n + m * n)) as f64;
+        self.t_launch + flops * self.flop_time + 8.0 * words * self.byte_time
+    }
+}
+
+/// Outcome of one distributed product.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    /// Virtual time of the product (max over ranks).
+    pub time: f64,
+    /// Per-rank virtual completion times.
+    pub per_rank: Vec<f64>,
+    /// Executed-work counters plus the simulated comm volume/messages.
+    pub metrics: Metrics,
+    /// Total bytes received across ranks (exchange + gather/scatter).
+    pub recv_bytes: usize,
+    /// Chrome-trace JSON of the Fig. 8 streams (when `opts.trace`).
+    pub trace_json: Option<String>,
+}
+
+/// A reusable distributed-HGEMV operator: decomposition, marshaling plan
+/// and exchange plan built once for a given (matrix, P, nv).
+#[derive(Clone, Debug)]
+pub struct DistHgemv {
+    pub decomp: Decomposition,
+    pub plan: HgemvPlan,
+    pub exchange: ExchangePlan,
+}
+
+impl DistHgemv {
+    pub fn new(a: &H2Matrix, p: usize, nv: usize) -> Self {
+        let decomp = Decomposition::new(p, a.depth());
+        let plan = HgemvPlan::new(a, nv);
+        let exchange = ExchangePlan::build(a, decomp);
+        DistHgemv { decomp, plan, exchange }
+    }
+
+    /// y = A·x across the virtual ranks. `x`/`y` are N × nv in the permuted
+    /// ordering, as in [`crate::matvec::hgemv`]; `ws` must match `nv`.
+    pub fn run(
+        &self,
+        a: &H2Matrix,
+        backend: &dyn ComputeBackend,
+        x: &[f64],
+        y: &mut [f64],
+        ws: &mut HgemvWorkspace,
+        opts: &DistOptions,
+    ) -> DistReport {
+        let nv = self.plan.nv;
+        assert_eq!(ws.nv, nv, "workspace built for different nv");
+        let n = a.n();
+        assert_eq!(x.len(), n * nv);
+        assert_eq!(y.len(), n * nv);
+        let d = self.decomp;
+        assert_eq!(d.depth, a.depth(), "decomposition built for a different tree");
+        let (p, c, depth) = (d.p, d.c_level, d.depth);
+        let plan = &self.plan;
+        let mut metrics = Metrics::new();
+
+        // ---- numerical execution: the serial phases, sliced per branch ----
+        hgemv_prologue(a, x, ws);
+        // Branch upsweeps: leaves, then transfer levels whose parents the
+        // ranks own (l-1 >= C).
+        for r in 0..p {
+            upsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+        }
+        for l in ((c + 1)..=depth).rev() {
+            for r in 0..p {
+                upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
+            }
+        }
+        // Top-subtree upsweep (master).
+        for l in (1..=c).rev() {
+            upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+        }
+        // Coupling: top levels on the master, distributed levels per rank.
+        for l in 0..c {
+            tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
+        }
+        for l in c..=depth {
+            for r in 0..p {
+                tree_multiply_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l));
+            }
+        }
+        for r in 0..p {
+            dense_multiply_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+        }
+        // Top-subtree downsweep, then branch downsweeps.
+        for l in 1..=c {
+            downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+        }
+        for l in (c + 1)..=depth {
+            for r in 0..p {
+                downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
+            }
+        }
+        for r in 0..p {
+            downsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+        }
+        unpad_leaf_output(a, &ws.y_pad, y, nv);
+
+        // Padding waste of the batched execution: leaf vector padding (in
+        // and out) plus the zero-padded dense blocks.
+        metrics.pad_waste += padding_waste(a, nv);
+
+        // ---- virtual-time schedule ----
+        self.schedule(a, nv, opts, &mut metrics)
+    }
+
+    /// Price the executed product in virtual time (see module docs). Fills
+    /// the comm counters of `metrics` and moves it into the report.
+    fn schedule(
+        &self,
+        a: &H2Matrix,
+        nv: usize,
+        opts: &DistOptions,
+        metrics: &mut Metrics,
+    ) -> DistReport {
+        let model = CostModel::default();
+        let net = &opts.net;
+        let d = self.decomp;
+        let (p, c, depth) = (d.p, d.c_level, d.depth);
+        let m_pad = a.u.leaf_dim;
+        let lpr = d.leaves_per_rank();
+
+        // Per-rank upsweep compute (branches are same-shaped: one cost).
+        let mut up_cost = model.gemm(lpr, a.rank(depth), m_pad, nv);
+        for l in (c + 1)..=depth {
+            let (k_l, k_par) = (a.rank(l), a.rank(l - 1));
+            // two parity batches of the rank's 2^(l-1-C) parents
+            up_cost += 2.0 * model.gemm(1usize << (l - 1 - c), k_par, k_l, nv);
+        }
+        let c_up: Vec<f64> = vec![up_cost; p];
+
+        // Per-rank coupling (split into local/remote sources) and dense.
+        let mut c_mul_local = vec![0.0; p];
+        let mut c_mul_remote = vec![0.0; p];
+        let mut c_dense = vec![0.0; p];
+        for r in 0..p {
+            for l in c..=depth {
+                let k = a.rank(l);
+                let rows = d.own_range(r, l);
+                let (mut total, mut remote) = (0usize, 0usize);
+                let mut lvl_cost = 0.0;
+                for batch in &a.coupling[l].batches {
+                    let nb = count_rows(&a.coupling[l].pairs, batch, &rows);
+                    if nb > 0 {
+                        lvl_cost += model.gemm(nb, k, k, nv);
+                        total += nb;
+                        remote += batch
+                            .iter()
+                            .filter(|&&pi| {
+                                let (t, s) = a.coupling[l].pairs[pi as usize];
+                                rows.contains(&(t as usize)) && d.owner(l, s as usize) != r
+                            })
+                            .count();
+                    }
+                }
+                if total > 0 {
+                    let f = remote as f64 / total as f64;
+                    c_mul_local[r] += lvl_cost * (1.0 - f);
+                    c_mul_remote[r] += lvl_cost * f;
+                }
+            }
+            let rows = d.own_range(r, depth);
+            for batch in &a.dense.batches {
+                let nb = count_rows(&a.dense.pairs, batch, &rows);
+                if nb > 0 {
+                    c_dense[r] += model.gemm(nb, m_pad, m_pad, nv);
+                }
+            }
+        }
+
+        // Per-rank downsweep compute.
+        let c_down: Vec<f64> = (0..p)
+            .map(|_| {
+                let mut t = 0.0;
+                for l in (c + 1)..=depth {
+                    let (k_l, k_par) = (a.rank(l), a.rank(l - 1));
+                    t += 2.0 * model.gemm(1usize << (l - 1 - c), k_l, k_par, nv);
+                }
+                t + model.gemm(lpr, m_pad, a.rank(depth), nv)
+            })
+            .collect();
+
+        // Exchange comm per rank (§4.1 volumes; one message per source per
+        // level), wired into the metrics counters.
+        let mut x_comm = vec![0.0; p];
+        let mut recv_bytes = 0usize;
+        for r in 0..p {
+            for l in c..=depth {
+                let k = a.rank(l);
+                for (_, nodes) in &self.exchange.levels[l].recv[r] {
+                    let bytes = nodes.len() * k * nv * 8;
+                    x_comm[r] += net.time(bytes);
+                    metrics.send(bytes);
+                    recv_bytes += bytes;
+                }
+            }
+        }
+
+        // Top subtree: master gathers the level-C x̂, runs the replicated
+        // top (low priority), scatters the level-C ŷ.
+        let mut c_top = 0.0;
+        for l in 1..=c {
+            let (k_l, k_par) = (a.rank(l), a.rank(l - 1));
+            c_top += 2.0 * model.gemm(1usize << (l - 1), k_par, k_l, nv); // up
+            c_top += 2.0 * model.gemm(1usize << (l - 1), k_l, k_par, nv); // down
+        }
+        for l in 0..c {
+            let k = a.rank(l);
+            for batch in &a.coupling[l].batches {
+                if !batch.is_empty() {
+                    c_top += model.gemm(batch.len(), k, k, nv);
+                }
+            }
+        }
+        let t_up_max = c_up.iter().cloned().fold(0.0_f64, f64::max);
+        let msg_bytes = a.rank(c) * nv * 8;
+        let msg = net.time(msg_bytes);
+        let t_master = if c > 0 {
+            for _ in 1..p {
+                metrics.send(msg_bytes); // gather
+                metrics.send(msg_bytes); // scatter
+                recv_bytes += 2 * msg_bytes;
+            }
+            t_up_max + (p - 1) as f64 * msg + c_top
+        } else {
+            0.0
+        };
+
+        // Compose the per-rank timelines.
+        let mut trace = opts.trace.then(TraceCollector::new);
+        let mut per_rank = vec![0.0; p];
+        for r in 0..p {
+            let local = c_dense[r] + c_mul_local[r];
+            let t1 = c_up[r];
+            let t2 = if opts.overlap {
+                t1 + x_comm[r].max(local) + c_mul_remote[r]
+            } else {
+                t1 + x_comm[r] + local + c_mul_remote[r]
+            };
+            let t3 = if c > 0 { t2.max(t_master + r as f64 * msg) } else { t2 };
+            per_rank[r] = t3 + c_down[r];
+            if let Some(tc) = trace.as_mut() {
+                tc.add("upsweep", "compute", r, 0, 0.0, t1);
+                if x_comm[r] > 0.0 {
+                    tc.add("xhat exchange", "comm", r, 1, t1, x_comm[r]);
+                }
+                let local_start = if opts.overlap { t1 } else { t1 + x_comm[r] };
+                if local > 0.0 {
+                    tc.add("dense + diagonal mult", "compute", r, 0, local_start, local);
+                }
+                if c_mul_remote[r] > 0.0 {
+                    tc.add("off-rank mult", "compute", r, 0, t2 - c_mul_remote[r], c_mul_remote[r]);
+                }
+                tc.add("downsweep", "compute", r, 0, t3, c_down[r]);
+            }
+        }
+        if let Some(tc) = trace.as_mut() {
+            if c > 0 {
+                let gather = (p - 1) as f64 * msg;
+                tc.add("xhat gather", "comm", 0, 1, t_up_max, gather);
+                tc.add("top subtree", "lowprio", 0, 2, t_up_max + gather, c_top);
+                for r in 1..p {
+                    tc.add("yhat scatter", "comm", r, 1, t_master + (r - 1) as f64 * msg, msg);
+                }
+            }
+        }
+
+        let time = per_rank.iter().cloned().fold(0.0_f64, f64::max);
+        DistReport {
+            time,
+            per_rank,
+            metrics: std::mem::take(metrics),
+            recv_bytes,
+            trace_json: trace.map(|tc| tc.to_json()),
+        }
+    }
+}
+
+/// Count the entries of a conflict-free batch whose block row lies in `rows`.
+fn count_rows(pairs: &[(u32, u32)], batch: &[u32], rows: &Range<usize>) -> usize {
+    batch.iter().filter(|&&pi| rows.contains(&(pairs[pi as usize].0 as usize))).count()
+}
+
+/// Zero-padding waste of one product: leaf vector padding for x and y plus
+/// the padded rows/cols of the dense blocks.
+fn padding_waste(a: &H2Matrix, nv: usize) -> u64 {
+    let m_pad = a.u.leaf_dim;
+    let leaf_pad: usize =
+        a.u.leaf_sizes.iter().map(|&sz| (m_pad - sz) * nv).sum::<usize>() * 2;
+    let leaf = a.depth();
+    let dense_pad: usize = a
+        .dense
+        .pairs
+        .iter()
+        .map(|&(t, s)| {
+            let rows = a.tree.node(leaf, t as usize).size();
+            let cols = a.tree.node(leaf, s as usize).size();
+            m_pad * m_pad - rows * cols
+        })
+        .sum();
+    (leaf_pad + dense_pad) as u64
+}
+
+/// One-shot distributed product: builds the plans, runs, reports.
+pub fn dist_hgemv(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    p: usize,
+    nv: usize,
+    x: &[f64],
+    y: &mut [f64],
+    opts: &DistOptions,
+) -> DistReport {
+    let op = DistHgemv::new(a, p, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    op.run(a, backend, x, y, &mut ws, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, ExponentialKernel};
+    use crate::geometry::PointSet;
+    use crate::matvec::hgemv;
+    use crate::util::Prng;
+
+    fn sample(n_side: usize) -> H2Matrix {
+        let points = PointSet::grid_2d(n_side, 1.0);
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        build_h2(points, &kernel, &cfg)
+    }
+
+    #[test]
+    fn bitwise_equal_to_serial_for_all_p() {
+        // The distributed path runs the same phase functions over branch
+        // slices: outputs must be *identical*, not merely close.
+        let a = sample(16); // N = 256
+        let n = a.n();
+        let mut rng = Prng::new(700);
+        for nv in [1usize, 3] {
+            let x = rng.normal_vec(n * nv);
+            let plan = HgemvPlan::new(&a, nv);
+            let mut ws = HgemvWorkspace::new(&a, nv);
+            let mut metrics = Metrics::new();
+            let mut y_serial = vec![0.0; n * nv];
+            hgemv(&a, &NativeBackend, &plan, &x, &mut y_serial, &mut ws, &mut metrics);
+            for p in [1usize, 2, 4] {
+                let mut y_dist = vec![0.0; n * nv];
+                dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y_dist, &DistOptions::default());
+                assert_eq!(y_dist, y_serial, "P={p} nv={nv} not bitwise equal");
+            }
+        }
+    }
+
+    #[test]
+    fn flops_match_serial_and_comm_counters_live() {
+        let a = sample(16);
+        let n = a.n();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &DistOptions::default());
+        assert_eq!(rep.metrics.flops, crate::matvec::hgemv_flops(&a, 1));
+        assert!(rep.metrics.bytes_sent > 0, "exchange must be accounted");
+        assert!(rep.metrics.messages > 0);
+        assert_eq!(rep.per_rank.len(), 4);
+        assert!(rep.time > 0.0);
+    }
+
+    #[test]
+    fn padding_waste_accounted_on_irregular_leaves() {
+        // 17x17 grid -> 289 points over 32 leaves of 9-10 points: both the
+        // leaf vectors and the dense blocks carry zero padding.
+        let a = sample(17);
+        let n = a.n();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &DistOptions::default());
+        assert!(rep.metrics.pad_waste > 0, "padding must be accounted");
+    }
+
+    #[test]
+    fn more_ranks_is_faster_on_this_problem() {
+        let a = sample(32); // N = 1024
+        let n = a.n();
+        let x = vec![0.5; n];
+        let mut y = vec![0.0; n];
+        let t1 = dist_hgemv(&a, &NativeBackend, 1, 1, &x, &mut y, &DistOptions::default()).time;
+        let t4 = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &DistOptions::default()).time;
+        assert!(t4 < t1, "P=4 {t4} !< P=1 {t1}");
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let a = sample(16);
+        let n = a.n();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        let opts = DistOptions::default();
+        let r1 = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+        let r2 = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+        assert_eq!(r1.time, r2.time);
+        assert_eq!(r1.recv_bytes, r2.recv_bytes);
+    }
+}

@@ -1,0 +1,69 @@
+//! The distributed-memory runtime layer (§2.2, §4): simulated MPI over an
+//! α-β network model, in *virtual time*.
+//!
+//! The paper distributes an H² matrix over P processes by assigning each
+//! one a branch of the tree below the C-level (log₂P) plus a replicated
+//! top subtree. This layer reproduces that architecture with virtual
+//! ranks on one address space:
+//!
+//! - [`Decomposition`] — branch ownership: rank r owns the contiguous node
+//!   range `[r·2^(l-C), (r+1)·2^(l-C))` at every level l ≥ C;
+//! - [`ExchangePlan`] (also reachable as `dist::plan`) — the §4.1
+//!   communication-volume optimization: per (level, rank, source) sets of
+//!   basis-coefficient nodes actually referenced by owned coupling rows,
+//!   with [`ExchangePlan::bytes_into`] / [`ExchangePlan::naive_bytes_into`]
+//!   accounting against the naive allgather;
+//! - [`hgemv`] — the distributed matrix-(multi)vector product: executes
+//!   the exact serial phase functions of [`crate::matvec`] sliced per
+//!   branch (bitwise-identical results), and prices the schedule with an
+//!   analytic compute cost model plus the network model, overlapping
+//!   communication with diagonal-block compute (§4.2) and emitting Fig. 8
+//!   style compute/comm/lowprio traces;
+//! - [`compress`] — distributed algebraic recompression: the serial
+//!   per-level compression phases replayed in virtual time (levels at or
+//!   below the C-level run concurrently at cost/P, levels above serialize
+//!   on the master).
+//!
+//! # Example
+//!
+//! ```
+//! use h2opus::backend::native::NativeBackend;
+//! use h2opus::config::H2Config;
+//! use h2opus::construct::{build_h2, ExponentialKernel};
+//! use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+//! use h2opus::geometry::PointSet;
+//!
+//! let a = build_h2(
+//!     PointSet::grid_2d(16, 1.0), // N = 256
+//!     &ExponentialKernel { dim: 2, corr_len: 0.1 },
+//!     &H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 },
+//! );
+//! let n = a.n();
+//! let x = vec![1.0; n];
+//! let mut y = vec![0.0; n];
+//! // P = 4 virtual ranks, one right-hand side.
+//! let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &DistOptions::default());
+//! assert!(rep.time > 0.0);
+//! assert!(rep.metrics.bytes_sent > 0); // §4.1 comm volume is accounted
+//!
+//! // The §4.1 plan itself:
+//! let d = h2opus::dist::Decomposition::new(4, a.depth());
+//! let plan = h2opus::dist::ExchangePlan::build(&a, d);
+//! for r in 0..4 {
+//!     assert!(plan.bytes_into(&a, r, 1) <= plan.naive_bytes_into(&a, r, 1));
+//! }
+//! ```
+
+pub mod compress;
+pub mod decomposition;
+pub mod exchange;
+pub mod hgemv;
+
+/// Legacy path: the exchange plan has historically been imported through
+/// `dist::plan` (e.g. by the property tests).
+pub use self::exchange as plan;
+
+pub use self::compress::{dist_compress, DistCompressReport};
+pub use self::decomposition::Decomposition;
+pub use self::exchange::{ExchangePlan, LevelExchange};
+pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};

@@ -12,8 +12,11 @@
 //!   condition via Chebyshev interpolation ([`construct`]),
 //! - matrix-(multi)vector multiplication, `HGEMV` ([`matvec`]),
 //! - algebraic recompression to a target accuracy ([`compression`]),
-//! - a distributed-memory runtime with communication-volume optimization
-//!   and communication/computation overlap ([`dist`]),
+//! - a distributed-memory runtime over simulated MPI ranks in virtual time,
+//!   with the §4.1 communication-volume optimization
+//!   ([`dist::ExchangePlan`]) and §4.2 communication/computation overlap
+//!   ([`dist::hgemv`], [`dist::compress`]) — see the [`dist`] module docs
+//!   for a runnable example,
 //! - batched dense linear-algebra backends: a pure-Rust reference and an
 //!   AOT-compiled JAX/Pallas path executed through PJRT ([`backend`],
 //!   [`runtime`]),
@@ -28,8 +31,12 @@
 //! batched QR/SVD, executed by the PJRT CPU client — and a native Rust
 //! backend used as oracle and baseline).
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for measured reproductions of the paper's figures.
+//! See `DESIGN.md` (repo root) for the full system inventory, the
+//! "Substitutions" table describing how the paper's stack (MPI, MAGMA,
+//! PETSc/AMG) maps onto this offline build, and the E1–E9 experiment
+//! index; the qualitative shapes of the paper's Figs. 8–12 are asserted in
+//! `rust/tests/distributed.rs`, and the figure-style reporters live in
+//! `rust/benches/`.
 
 pub mod admissibility;
 pub mod apps;

@@ -69,8 +69,9 @@ impl Mat {
 /// C = A·B (or C += A·B when `acc`): A is m×k, B is k×n, C is m×n, all
 /// row-major. i-k-j order streams rows of B/C; output rows are processed
 /// four at a time so every loaded B row feeds four accumulating C rows
-/// (register blocking — see EXPERIMENTS.md §Perf: +25–45% on the batched
-/// shapes, 2.8× on the n = 1 bandwidth-bound case via the 2-row path).
+/// (register blocking — measured via `benches/batched_backend.rs` (E9):
+/// +25–45% on the batched shapes, 2.8× on the n = 1 bandwidth-bound case
+/// via the 2-row path).
 #[inline]
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);

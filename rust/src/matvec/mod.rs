@@ -11,10 +11,26 @@
 //! accumulates ŷ into the output. Every level is executed as one or a few
 //! batched GEMMs over offsets precomputed at plan-construction time — the
 //! marshaling step of the paper (Alg. 3), hoisted out of the hot path.
+//!
+//! Every phase is exposed at two granularities:
+//!
+//! - whole-tree wrappers ([`upsweep`], [`tree_multiply`], [`dense_multiply`],
+//!   [`downsweep`]) used by the serial [`hgemv`], and
+//! - *level/range-scoped* functions ([`upsweep_leaf_range`],
+//!   [`upsweep_transfer_level`], [`tree_multiply_level`],
+//!   [`dense_multiply_range`], [`downsweep_transfer_level`],
+//!   [`downsweep_leaf_range`]) operating on a contiguous node range of one
+//!   level — the branch slices the distributed runtime
+//!   ([`crate::dist::hgemv`]) schedules per virtual rank.
+//!
+//! Both paths execute the same per-block GEMMs in the same per-destination
+//! order, so serial and distributed products agree bitwise.
 
 pub mod plan;
 
 pub use plan::HgemvPlan;
+
+use std::ops::Range;
 
 use crate::backend::{BatchRef, ComputeBackend, GemmDims};
 use crate::metrics::Metrics;
@@ -67,10 +83,7 @@ pub fn hgemv(
     assert_eq!(x.len(), n * nv);
     assert_eq!(y.len(), n * nv);
 
-    pad_leaf_input(a, x, &mut ws.x_pad, nv);
-    ws.xhat.clear();
-    ws.yhat.clear();
-    ws.y_pad.fill(0.0);
+    hgemv_prologue(a, x, ws);
 
     upsweep(a, backend, plan, ws, metrics);
     tree_multiply(a, backend, plan, ws, metrics);
@@ -78,6 +91,15 @@ pub fn hgemv(
     downsweep(a, backend, plan, ws, metrics);
 
     unpad_leaf_output(a, &ws.y_pad, y, nv);
+}
+
+/// Shared entry bookkeeping: gather the input into the padded leaf buffer
+/// and zero the coefficient trees and padded output.
+pub fn hgemv_prologue(a: &H2Matrix, x: &[f64], ws: &mut HgemvWorkspace) {
+    pad_leaf_input(a, x, &mut ws.x_pad, ws.nv);
+    ws.xhat.clear();
+    ws.yhat.clear();
+    ws.y_pad.fill(0.0);
 }
 
 /// Copy the permuted N×nv input into the zero-padded per-leaf buffer.
@@ -112,37 +134,72 @@ pub fn upsweep(
     ws: &mut HgemvWorkspace,
     metrics: &mut Metrics,
 ) {
+    let depth = a.depth();
+    upsweep_leaf_range(a, backend, plan, ws, metrics, 0..1usize << depth);
+    // Transfers: level depth -> 1, two conflict-free parity batches.
+    for l in (1..=depth).rev() {
+        upsweep_transfer_level(a, backend, plan, ws, metrics, l, 0..1usize << (l - 1));
+    }
+}
+
+/// Upsweep leaf stage over the contiguous leaf range: x̂_j = V_jᵀ x_j for
+/// j in `leaves` (batched, trans_a).
+pub fn upsweep_leaf_range(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    leaves: Range<usize>,
+) {
+    if leaves.is_empty() {
+        return;
+    }
     let nv = ws.nv;
     let depth = a.depth();
     let m_pad = a.v.leaf_dim;
     let k_leaf = a.v.ranks[depth];
-    let leaves = 1usize << depth;
-    // Leaf: x̂ = Vᵀ x (batched, trans_a).
     backend.batched_gemm(
-        GemmDims { nb: leaves, m: k_leaf, k: m_pad, n: nv, trans_a: true, trans_b: false, accumulate: false },
-        BatchRef { data: &a.v.leaf_bases, offsets: &plan.leaf_basis_off },
-        BatchRef { data: &ws.x_pad, offsets: &plan.leaf_vec_off },
+        GemmDims { nb: leaves.len(), m: k_leaf, k: m_pad, n: nv, trans_a: true, trans_b: false, accumulate: false },
+        BatchRef { data: &a.v.leaf_bases, offsets: &plan.leaf_basis_off[leaves.clone()] },
+        BatchRef { data: &ws.x_pad, offsets: &plan.leaf_vec_off[leaves.clone()] },
         &mut ws.xhat.levels[depth],
-        &plan.leaf_coeff_off,
+        &plan.leaf_coeff_off[leaves],
         metrics,
     );
-    // Transfers: level depth -> 1, two conflict-free parity batches.
-    for l in (1..=depth).rev() {
-        let (k_l, k_par) = (a.v.ranks[l], a.v.ranks[l - 1]);
-        let (lo, hi) = ws.xhat.levels.split_at_mut(l);
-        let xhat_parent = &mut lo[l - 1];
-        let xhat_child = &hi[0];
-        for parity in 0..2 {
-            let po = &plan.up[l].parity[parity];
-            backend.batched_gemm(
-                GemmDims { nb: po.nb, m: k_par, k: k_l, n: nv, trans_a: true, trans_b: false, accumulate: true },
-                BatchRef { data: &a.v.transfers[l], offsets: &po.transfer_off },
-                BatchRef { data: xhat_child, offsets: &po.child_off },
-                xhat_parent,
-                &po.parent_off,
-                metrics,
-            );
-        }
+}
+
+/// One upsweep transfer level (children l -> parents l-1), restricted to
+/// the contiguous `parents` range of level l-1. Runs the two parity
+/// batches in order, so each parent accumulates its children exactly as
+/// the whole-tree sweep does.
+pub fn upsweep_transfer_level(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+    parents: Range<usize>,
+) {
+    if parents.is_empty() {
+        return;
+    }
+    let nv = ws.nv;
+    let (k_l, k_par) = (a.v.ranks[l], a.v.ranks[l - 1]);
+    let (lo, hi) = ws.xhat.levels.split_at_mut(l);
+    let xhat_parent = &mut lo[l - 1];
+    let xhat_child = &hi[0];
+    for parity in 0..2 {
+        let po = &plan.up[l].parity[parity];
+        backend.batched_gemm(
+            GemmDims { nb: parents.len(), m: k_par, k: k_l, n: nv, trans_a: true, trans_b: false, accumulate: true },
+            BatchRef { data: &a.v.transfers[l], offsets: &po.transfer_off[parents.clone()] },
+            BatchRef { data: xhat_child, offsets: &po.child_off[parents.clone()] },
+            xhat_parent,
+            &po.parent_off[parents.clone()],
+            metrics,
+        );
     }
 }
 
@@ -155,23 +212,45 @@ pub fn tree_multiply(
     ws: &mut HgemvWorkspace,
     metrics: &mut Metrics,
 ) {
+    for l in 0..=a.depth() {
+        tree_multiply_level(a, backend, plan, ws, metrics, l, 0..1usize << l);
+    }
+}
+
+/// Tree multiplication of level l restricted to block rows in `rows`.
+/// Batch entries are ascending in row, so each sub-batch is a contiguous
+/// slice located by binary search; per-row accumulation order (batch 0, 1,
+/// ...) is identical to the whole-level call.
+pub fn tree_multiply_level(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+    rows: Range<usize>,
+) {
+    let cl = &a.coupling[l];
+    if cl.pairs.is_empty() || rows.is_empty() {
+        return;
+    }
     let nv = ws.nv;
-    for (l, cl) in a.coupling.iter().enumerate() {
-        if cl.pairs.is_empty() {
+    let k = a.rank(l);
+    for bo in &plan.mult[l].batches {
+        // dst_off = row * k * nv, ascending within a batch.
+        let lo = bo.dst_off.partition_point(|&d| d < rows.start * k * nv);
+        let hi = bo.dst_off.partition_point(|&d| d < rows.end * k * nv);
+        if lo == hi {
             continue;
         }
-        let k = a.rank(l);
-        for (b, _) in cl.batches.iter().enumerate() {
-            let bo = &plan.mult[l].batches[b];
-            backend.batched_gemm(
-                GemmDims { nb: bo.nb, m: k, k, n: nv, trans_a: false, trans_b: false, accumulate: true },
-                BatchRef { data: &cl.data, offsets: &bo.block_off },
-                BatchRef { data: &ws.xhat.levels[l], offsets: &bo.src_off },
-                &mut ws.yhat.levels[l],
-                &bo.dst_off,
-                metrics,
-            );
-        }
+        backend.batched_gemm(
+            GemmDims { nb: hi - lo, m: k, k, n: nv, trans_a: false, trans_b: false, accumulate: true },
+            BatchRef { data: &cl.data, offsets: &bo.block_off[lo..hi] },
+            BatchRef { data: &ws.xhat.levels[l], offsets: &bo.src_off[lo..hi] },
+            &mut ws.yhat.levels[l],
+            &bo.dst_off[lo..hi],
+            metrics,
+        );
     }
 }
 
@@ -183,16 +262,36 @@ pub fn dense_multiply(
     ws: &mut HgemvWorkspace,
     metrics: &mut Metrics,
 ) {
+    dense_multiply_range(a, backend, plan, ws, metrics, 0..1usize << a.depth());
+}
+
+/// Dense phase restricted to block rows in `rows` (same sub-batch slicing
+/// as [`tree_multiply_level`]).
+pub fn dense_multiply_range(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    rows: Range<usize>,
+) {
+    if rows.is_empty() {
+        return;
+    }
     let nv = ws.nv;
     let m_pad = a.dense.m_pad;
-    for (b, _) in a.dense.batches.iter().enumerate() {
-        let bo = &plan.dense.batches[b];
+    for bo in &plan.dense.batches {
+        let lo = bo.dst_off.partition_point(|&d| d < rows.start * m_pad * nv);
+        let hi = bo.dst_off.partition_point(|&d| d < rows.end * m_pad * nv);
+        if lo == hi {
+            continue;
+        }
         backend.batched_gemm(
-            GemmDims { nb: bo.nb, m: m_pad, k: m_pad, n: nv, trans_a: false, trans_b: false, accumulate: true },
-            BatchRef { data: &a.dense.data, offsets: &bo.block_off },
-            BatchRef { data: &ws.x_pad, offsets: &bo.src_off },
+            GemmDims { nb: hi - lo, m: m_pad, k: m_pad, n: nv, trans_a: false, trans_b: false, accumulate: true },
+            BatchRef { data: &a.dense.data, offsets: &bo.block_off[lo..hi] },
+            BatchRef { data: &ws.x_pad, offsets: &bo.src_off[lo..hi] },
             &mut ws.y_pad,
-            &bo.dst_off,
+            &bo.dst_off[lo..hi],
             metrics,
         );
     }
@@ -207,35 +306,68 @@ pub fn downsweep(
     ws: &mut HgemvWorkspace,
     metrics: &mut Metrics,
 ) {
-    let nv = ws.nv;
     let depth = a.depth();
     for l in 1..=depth {
-        let (k_l, k_par) = (a.u.ranks[l], a.u.ranks[l - 1]);
-        let (lo, hi) = ws.yhat.levels.split_at_mut(l);
-        let yhat_parent = &lo[l - 1];
-        let yhat_child = &mut hi[0];
-        for parity in 0..2 {
-            let po = &plan.up[l].parity[parity];
-            backend.batched_gemm(
-                GemmDims { nb: po.nb, m: k_l, k: k_par, n: nv, trans_a: false, trans_b: false, accumulate: true },
-                BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off },
-                BatchRef { data: yhat_parent, offsets: &po.parent_off },
-                yhat_child,
-                &po.child_off,
-                metrics,
-            );
-        }
+        downsweep_transfer_level(a, backend, plan, ws, metrics, l, 0..1usize << (l - 1));
     }
-    // Leaf expansion: y_pad += U ŷ^leaf.
+    downsweep_leaf_range(a, backend, plan, ws, metrics, 0..1usize << depth);
+}
+
+/// One downsweep transfer level (parents l-1 -> children l), restricted to
+/// the contiguous `parents` range of level l-1.
+pub fn downsweep_transfer_level(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+    parents: Range<usize>,
+) {
+    if parents.is_empty() {
+        return;
+    }
+    let nv = ws.nv;
+    let (k_l, k_par) = (a.u.ranks[l], a.u.ranks[l - 1]);
+    let (lo, hi) = ws.yhat.levels.split_at_mut(l);
+    let yhat_parent = &lo[l - 1];
+    let yhat_child = &mut hi[0];
+    for parity in 0..2 {
+        let po = &plan.up[l].parity[parity];
+        backend.batched_gemm(
+            GemmDims { nb: parents.len(), m: k_l, k: k_par, n: nv, trans_a: false, trans_b: false, accumulate: true },
+            BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off[parents.clone()] },
+            BatchRef { data: yhat_parent, offsets: &po.parent_off[parents.clone()] },
+            yhat_child,
+            &po.child_off[parents.clone()],
+            metrics,
+        );
+    }
+}
+
+/// Downsweep leaf expansion over the contiguous leaf range:
+/// y_j += U_j ŷ_j for j in `leaves`.
+pub fn downsweep_leaf_range(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    leaves: Range<usize>,
+) {
+    if leaves.is_empty() {
+        return;
+    }
+    let nv = ws.nv;
+    let depth = a.depth();
     let m_pad = a.u.leaf_dim;
     let k_leaf = a.u.ranks[depth];
-    let leaves = 1usize << depth;
     backend.batched_gemm(
-        GemmDims { nb: leaves, m: m_pad, k: k_leaf, n: nv, trans_a: false, trans_b: false, accumulate: true },
-        BatchRef { data: &a.u.leaf_bases, offsets: &plan.leaf_basis_off },
-        BatchRef { data: &ws.yhat.levels[depth], offsets: &plan.leaf_coeff_off },
+        GemmDims { nb: leaves.len(), m: m_pad, k: k_leaf, n: nv, trans_a: false, trans_b: false, accumulate: true },
+        BatchRef { data: &a.u.leaf_bases, offsets: &plan.leaf_basis_off[leaves.clone()] },
+        BatchRef { data: &ws.yhat.levels[depth], offsets: &plan.leaf_coeff_off[leaves.clone()] },
         &mut ws.y_pad,
-        &plan.leaf_vec_off,
+        &plan.leaf_vec_off[leaves],
         metrics,
     );
 }

@@ -1,0 +1,128 @@
+//! Minimal offline stand-in for the `anyhow` crate: the build image has no
+//! crates.io access (see DESIGN.md "Substitutions"), so this vendored shim
+//! provides the small API surface the crate actually uses — [`Error`],
+//! [`Result`], the [`Context`] extension trait and the [`bail!`]/[`anyhow!`]
+//! macros — with anyhow's context-chain semantics:
+//!
+//! - `Display` shows the outermost context message,
+//! - alternate `Display` (`{:#}`) shows the whole chain `outer: ...: root`.
+
+use std::fmt;
+
+/// An error carrying a chain of context messages (outermost first).
+pub struct Error {
+    /// msgs[0] is the outermost context, msgs.last() the root cause.
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.msgs.insert(0, c.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: full chain, most recent context first.
+        write!(f, "{}", self.msgs.join(": "))
+    }
+}
+
+// Note: Error deliberately does NOT implement std::error::Error, so the
+// blanket From below cannot overlap with the reflexive From<Error>.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("parsing an int")?;
+        if v < 0 {
+            bail!("negative value {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_context_chain() {
+        let e = parse("abc").unwrap_err();
+        assert_eq!(e.to_string(), "parsing an int");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("parsing an int: "), "{alt}");
+        assert!(alt.contains("invalid digit"), "{alt}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative value -3");
+        assert_eq!(e.root_cause(), "negative value -3");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| format!("opening {}", "x.txt")).unwrap_err();
+        assert_eq!(e.to_string(), "opening x.txt");
+        assert!(format!("{e:#}").contains("gone"));
+    }
+}
