@@ -6,6 +6,7 @@ use h2opus::backend::native::NativeBackend;
 use h2opus::config::{H2Config, NetworkModel};
 use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::compress::dist_compress;
+use h2opus::dist::ExecMode;
 use h2opus::geometry::PointSet;
 use h2opus::util::timer::trimmed_mean;
 
@@ -29,7 +30,7 @@ fn bench_set(dim: usize, n_target: usize, cfg: H2Config) {
         let mut times = Vec::new();
         for _ in 0..3 {
             let mut b = a.clone();
-            let (_, rep) = dist_compress(&mut b, p, 1e-3, &NativeBackend, NetworkModel::default());
+            let (_, rep) = dist_compress(&mut b, p, 1e-3, &NativeBackend, NetworkModel::default(), ExecMode::Virtual);
             times.push(rep.orthogonalization_time + rep.compression_time);
         }
         let t = trimmed_mean(&times);

@@ -1,17 +1,24 @@
 //! E2 (Fig. 10): strong scalability of distributed HGEMV — fixed N,
 //! growing P, for 2D and 3D test sets and several nv. Expect good scaling
 //! until the local problem becomes too small to hide communication
-//! (paper: limit around 32 GPUs at pN = 2^14).
+//! (paper: limit around 32 GPUs at pN = 2^14). Reports the virtual-time
+//! speedup next to the *measured* wall-clock speedup of the threaded
+//! executor, so the CostModel can be checked against reality. Set
+//! H2OPUS_BENCH_TINY=1 for the CI smoke configuration.
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
-use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::geometry::PointSet;
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
-fn bench_set(dim: usize, n_target: usize) {
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
+fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize]) {
     let (points, corr, cfg) = if dim == 2 {
         let side = (n_target as f64).sqrt().ceil() as usize;
         (PointSet::grid_2d(side, 1.0), 0.1, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 })
@@ -22,30 +29,45 @@ fn bench_set(dim: usize, n_target: usize) {
     let kernel = ExponentialKernel { dim, corr_len: corr };
     let a = build_h2(points, &kernel, &cfg);
     let n = a.n();
+    let runs = if tiny() { 3 } else { 5 };
     println!("\n== {dim}D test set, strong scaling, N = {n} ==");
-    println!("{:>4} {:>4} {:>13} {:>11} {:>13}", "P", "nv", "time (ms)", "speedup", "eff (%)");
+    println!(
+        "{:>4} {:>4} {:>13} {:>9} {:>13} {:>9} {:>9}",
+        "P", "nv", "virt (ms)", "virt spd", "meas (ms)", "meas spd", "eff (%)"
+    );
     let mut rng = Prng::new(43);
-    for &nv in &[1usize, 16, 64] {
+    for &nv in nvs {
         let x = rng.normal_vec(n * nv);
         let mut y = vec![0.0; n * nv];
         let mut t1 = None;
-        for &p in &[1usize, 2, 4, 8, 16, 32] {
+        let mut m1 = None;
+        for &p in ps {
             if a.depth() < p.trailing_zeros() as usize {
                 continue;
             }
             let mut times = Vec::new();
-            for _ in 0..5 {
+            for _ in 0..runs {
                 let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &DistOptions::default());
                 times.push(rep.time);
             }
             let t = trimmed_mean(&times);
+            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+            let mut measured = Vec::new();
+            for _ in 0..runs {
+                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts);
+                measured.push(rep.measured.unwrap());
+            }
+            let tm = trimmed_mean(&measured);
             let base = *t1.get_or_insert(t);
+            let mbase = *m1.get_or_insert(tm);
             println!(
-                "{:>4} {:>4} {:>13.3} {:>11.2} {:>13.1}",
+                "{:>4} {:>4} {:>13.3} {:>9.2} {:>13.3} {:>9.2} {:>9.1}",
                 p,
                 nv,
                 t * 1e3,
                 base / t,
+                tm * 1e3,
+                mbase / tm,
                 100.0 * base / t / p as f64
             );
         }
@@ -53,7 +75,11 @@ fn bench_set(dim: usize, n_target: usize) {
 }
 
 fn main() {
-    println!("E2 / Fig. 10 — HGEMV strong scalability (virtual time)");
-    bench_set(2, 1 << 14);
-    bench_set(3, 1 << 14);
+    println!("E2 / Fig. 10 — HGEMV strong scalability (virtual + measured wall-clock)");
+    if tiny() {
+        bench_set(2, 1 << 10, &[1, 2, 4], &[1, 8]);
+    } else {
+        bench_set(2, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64]);
+        bench_set(3, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64]);
+    }
 }

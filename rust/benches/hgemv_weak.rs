@@ -1,24 +1,31 @@
 //! E1 (Fig. 9): weak scalability of distributed HGEMV.
 //!
 //! Per-rank problem size is held fixed while P grows; reports virtual
-//! time, Gflop/s/rank and relative efficiency (G_P/G_P0)/(P/P0) for the 2D
-//! and 3D kernel test sets and nv ∈ {1, 16, 64} — the paper's Fig. 9 rows.
-//! Protocol: trimmed mean over repeated runs (§6.1).
+//! time, *measured* wall-clock of the threaded executor, Gflop/s/rank and
+//! relative efficiency (G_P/G_P0)/(P/P0) for the 2D and 3D kernel test
+//! sets and nv ∈ {1, 16, 64} — the paper's Fig. 9 rows. Protocol: trimmed
+//! mean over repeated runs (§6.1). Set H2OPUS_BENCH_TINY=1 for the CI
+//! smoke configuration (small sizes, fewer repetitions).
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
-use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::geometry::PointSet;
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
 fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
     println!("\n== {dim}D exponential kernel, weak scaling, pN = {local_n}/rank ==");
     println!(
-        "{:>4} {:>9} {:>4} {:>13} {:>14} {:>11} {:>12}",
-        "P", "N", "nv", "time (ms)", "Gflop/s/rank", "eff (%)", "comm (KiB)"
+        "{:>4} {:>9} {:>4} {:>13} {:>13} {:>14} {:>11} {:>12}",
+        "P", "N", "nv", "virt (ms)", "meas (ms)", "Gflop/s/rank", "eff (%)", "comm (KiB)"
     );
+    let runs = if tiny() { 3 } else { 5 };
     let mut base_rate: Vec<Option<f64>> = vec![None; nvs.len()];
     for &p in ps {
         let n_target = local_n * p;
@@ -43,13 +50,22 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
             let mut times = Vec::new();
             let mut flops = 0u64;
             let mut comm = 0usize;
-            for _ in 0..5 {
+            for _ in 0..runs {
                 let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &opts);
                 times.push(rep.time);
                 flops = rep.metrics.flops;
                 comm = rep.recv_bytes;
             }
             let t = trimmed_mean(&times);
+            // Measured wall-clock of the real OS-thread executor on the
+            // same (matrix, P, nv) — the reality the virtual time models.
+            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+            let mut measured = Vec::new();
+            for _ in 0..runs {
+                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts);
+                measured.push(rep.measured.unwrap());
+            }
+            let tm = trimmed_mean(&measured);
             let rate = flops as f64 / t / 1e9 / p as f64;
             let eff = match base_rate[nvi] {
                 None => {
@@ -59,11 +75,12 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
                 Some(r0) => 100.0 * rate / r0,
             };
             println!(
-                "{:>4} {:>9} {:>4} {:>13.3} {:>14.3} {:>11.1} {:>12.1}",
+                "{:>4} {:>9} {:>4} {:>13.3} {:>13.3} {:>14.3} {:>11.1} {:>12.1}",
                 p,
                 n,
                 nv,
                 t * 1e3,
+                tm * 1e3,
                 rate,
                 eff,
                 comm as f64 / 1024.0
@@ -73,7 +90,12 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
 }
 
 fn main() {
-    println!("E1 / Fig. 9 — HGEMV weak scalability (virtual time, see DESIGN.md)");
-    bench_set(2, 4096, &[1, 2, 4, 8, 16], &[1, 16, 64]);
-    bench_set(3, 4096, &[1, 2, 4, 8], &[1, 16, 64]);
+    println!("E1 / Fig. 9 — HGEMV weak scalability (virtual + measured, see DESIGN.md)");
+    if tiny() {
+        bench_set(2, 512, &[1, 2, 4], &[1, 8]);
+        bench_set(3, 512, &[1, 2], &[1]);
+    } else {
+        bench_set(2, 4096, &[1, 2, 4, 8, 16], &[1, 16, 64]);
+        bench_set(3, 4096, &[1, 2, 4, 8], &[1, 16, 64]);
+    }
 }

@@ -5,28 +5,34 @@
 //! traces (`target/trace_overlap_{on,off}.json` — open in Perfetto to see
 //! Fig. 8's timelines), and reports the virtual time difference under the
 //! default and a slow network. Also reports the §4.1 communication-volume
-//! optimization (compressed vs naive volume) and the batched-execution
-//! padding waste, both printed and recorded in
-//! `target/overlap_summary.json`.
+//! optimization (compressed vs naive volume), the batched-execution
+//! padding waste, and the *measured vs virtual* times of the threaded
+//! executor (P = 8 and P = 1), all recorded in
+//! `target/overlap_summary.json` for the model-check harness. Set
+//! H2OPUS_BENCH_TINY=1 for the CI smoke configuration.
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::{H2Config, NetworkModel};
 use h2opus::construct::{build_h2, ExponentialKernel};
-use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::dist::{Decomposition, ExchangePlan};
 use h2opus::geometry::PointSet;
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
 fn main() {
     println!("E5 / Fig. 8 — overlap of communication and computation (P = 8)");
-    let points = PointSet::grid_2d(128, 1.0); // N = 16384
+    let (side, nv, runs) = if tiny() { (32usize, 4usize, 3usize) } else { (128, 16, 5) };
+    let points = PointSet::grid_2d(side, 1.0); // N = side^2
     let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
     let cfg = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 };
     let a = build_h2(points, &kernel, &cfg);
     let n = a.n();
     let mut rng = Prng::new(8);
-    let nv = 16;
     let x = rng.normal_vec(n * nv);
     let mut y = vec![0.0; n * nv];
 
@@ -37,10 +43,10 @@ fn main() {
         println!("\n-- {label}, nv = {nv} --");
         let mut results = Vec::new();
         for overlap in [false, true] {
-            let opts = DistOptions { net, overlap, trace: true };
+            let opts = DistOptions { net, overlap, trace: true, mode: ExecMode::Virtual };
             let mut times = Vec::new();
             let mut trace = None;
-            for _ in 0..5 {
+            for _ in 0..runs {
                 let rep = dist_hgemv(&a, &NativeBackend, 8, nv, &x, &mut y, &opts);
                 times.push(rep.time);
                 trace = rep.trace_json;
@@ -58,13 +64,41 @@ fn main() {
 
     // One overlapped run on a slow network for the counters used by the
     // JSON summary below.
-    let opts = DistOptions { net: NetworkModel { alpha: 5e-4, beta: 4e-11 }, overlap: true, trace: false };
+    let opts = DistOptions {
+        net: NetworkModel { alpha: 5e-4, beta: 4e-11 },
+        overlap: true,
+        trace: false,
+        mode: ExecMode::Virtual,
+    };
     let rep = dist_hgemv(&a, &NativeBackend, 8, nv, &x, &mut y, &opts);
     println!("\n(Perfetto traces contain the full Fig. 8-style timelines.)");
 
+    // Measured wall-clock of the real OS-thread executor, P = 8 vs P = 1,
+    // next to the virtual prediction — the CostModel reality check.
+    println!("\n-- measured vs virtual (threaded executor, default network) --");
+    let mut measured_of = |p: usize| {
+        let vopts = DistOptions::default();
+        let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+        let (mut virts, mut meas) = (Vec::new(), Vec::new());
+        for _ in 0..runs {
+            virts.push(dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &vopts).time);
+            meas.push(dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts).measured.unwrap());
+        }
+        (trimmed_mean(&virts), trimmed_mean(&meas))
+    };
+    let (virt1, meas1) = measured_of(1);
+    let (virt8, meas8) = measured_of(8);
+    println!("  P=1: virtual {:.3} ms, measured {:.3} ms", virt1 * 1e3, meas1 * 1e3);
+    println!("  P=8: virtual {:.3} ms, measured {:.3} ms", virt8 * 1e3, meas8 * 1e3);
+    println!(
+        "  speedup P=1 -> P=8: virtual {:.2}x, measured {:.2}x (machine-limited)",
+        virt1 / virt8,
+        meas1 / meas8
+    );
+
     // §4.1 volume optimization
     println!("\n-- communication volume (nv = {nv}) --");
-    let d = Decomposition::new(8, a.depth());
+    let d = Decomposition::new(8, a.depth()).unwrap();
     let plan = ExchangePlan::build(&a, d);
     let mut opt_total = 0usize;
     let mut naive_total = 0usize;
@@ -83,10 +117,12 @@ fn main() {
         rep.metrics.pad_waste, rep.metrics.batch_launches
     );
 
-    // Machine-readable summary: comm volume *and* padding waste, so the
-    // comm benches record both (hand-rolled JSON — no serde offline).
+    // Machine-readable summary: comm volume, padding waste and the
+    // measured-vs-virtual columns, so the comm benches and the Python
+    // model-check harness record both (hand-rolled JSON — no serde
+    // offline).
     let summary = format!(
-        "{{\n  \"n\": {},\n  \"ranks\": 8,\n  \"nv\": {},\n  \"opt_bytes\": {},\n  \"naive_bytes\": {},\n  \"bytes_sent\": {},\n  \"messages\": {},\n  \"pad_waste_elems\": {},\n  \"batch_launches\": {},\n  \"virtual_time_s\": {:.9}\n}}\n",
+        "{{\n  \"n\": {},\n  \"ranks\": 8,\n  \"nv\": {},\n  \"opt_bytes\": {},\n  \"naive_bytes\": {},\n  \"bytes_sent\": {},\n  \"messages\": {},\n  \"pad_waste_elems\": {},\n  \"batch_launches\": {},\n  \"virtual_time_s\": {:.9},\n  \"virtual_p1_s\": {:.9},\n  \"virtual_p8_s\": {:.9},\n  \"measured_p1_s\": {:.9},\n  \"measured_p8_s\": {:.9}\n}}\n",
         n,
         nv,
         opt_total,
@@ -95,7 +131,11 @@ fn main() {
         rep.metrics.messages,
         rep.metrics.pad_waste,
         rep.metrics.batch_launches,
-        rep.time
+        rep.time,
+        virt1,
+        virt8,
+        meas1,
+        meas8
     );
     std::fs::write("target/overlap_summary.json", &summary).unwrap();
     println!("  summary written: target/overlap_summary.json");

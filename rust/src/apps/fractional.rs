@@ -25,7 +25,7 @@ use crate::compression::compress_full;
 use crate::config::{H2Config, NetworkModel};
 use crate::construct::builder::build_h2;
 use crate::construct::kernels::FractionalKernel;
-use crate::dist::hgemv::{DistHgemv, DistOptions};
+use crate::dist::hgemv::{DistHgemv, DistOptions, ExecMode};
 use crate::geometry::{PointSet, MAX_DIM};
 use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
@@ -147,7 +147,7 @@ pub fn setup(problem: FractionalProblem, backend: &dyn ComputeBackend) -> Fracti
     let nbig = khat.n();
     let ones = vec![1.0; nbig];
     let mut khat_ones_perm = vec![0.0; nbig];
-    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false };
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual };
     crate::dist::hgemv::dist_hgemv(
         &khat,
         backend,
@@ -229,7 +229,7 @@ pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64
     // the original ordering.
     let perm = sys.k.tree.perm.clone();
     let mut ws = HgemvWorkspace::new(&sys.k, 1);
-    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false };
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual };
 
     let mut x_orig = vec![0.0; n];
     let mut cx_orig = vec![0.0; n];

@@ -44,7 +44,13 @@ pub struct BatchRef<'a> {
 }
 
 /// Batched dense linear algebra over f64.
-pub trait ComputeBackend {
+///
+/// `Sync` is a supertrait: the threaded distributed executor
+/// ([`crate::dist::threaded`]) shares one backend immutably across its
+/// per-rank OS threads, so every implementation must be safe to call
+/// concurrently through `&self` (interior mutability must be locked, as
+/// in `runtime::XlaBackend`).
+pub trait ComputeBackend: Sync {
     fn name(&self) -> &str;
 
     /// Batched GEMM over gathered offsets:

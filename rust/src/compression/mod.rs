@@ -21,11 +21,12 @@ pub mod truncate;
 
 pub use orthogonalize::{
     absorb_r_level, orth_leaf_level, orth_transfer_level, orthogonalize, orthogonalize_logged,
-    tree_is_orthogonal,
+    orthogonalize_logged_with, tree_is_orthogonal,
 };
 pub use truncate::{
-    compress, compress_full, compress_full_logged, compress_logged, project_level,
-    truncate_inner_level, truncate_leaf_level, weight_level, CompressionStats, LeafTruncation,
+    compress, compress_full, compress_full_logged, compress_full_logged_with, compress_logged,
+    compress_logged_with, project_level, truncate_inner_level, truncate_leaf_level, weight_level,
+    CompressionStats, LeafTruncation,
 };
 
 /// Per-level wall-time log of the compression pipeline's phases. The

@@ -122,8 +122,44 @@ pub fn orthogonalize_logged(
     metrics: &mut Metrics,
     log: &mut PhaseLog,
 ) {
-    let r_u = orthogonalize_tree_logged(&mut a.u, backend, metrics, log);
-    let r_v = orthogonalize_tree_logged(&mut a.v, backend, metrics, log);
+    orthogonalize_logged_with(a, backend, metrics, log, false)
+}
+
+/// [`orthogonalize_logged`] with optional row/column-tree task
+/// parallelism: when `parallel`, the U- and V-tree QR upsweeps run on two
+/// OS threads — they mutate disjoint state (`a.u` vs `a.v`), so this is
+/// `Send`-safe by construction and every floating-point result, metric
+/// total and log entry order is identical to the serial path. The R
+/// absorption into the coupling blocks stays serial (it needs both trees).
+pub fn orthogonalize_logged_with(
+    a: &mut H2Matrix,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+    parallel: bool,
+) {
+    let (r_u, r_v) = if parallel {
+        let (u_tree, v_tree) = (&mut a.u, &mut a.v);
+        let mut mt_u = Metrics::new();
+        let mut log_u = PhaseLog::default();
+        let mut mt_v = Metrics::new();
+        let mut log_v = PhaseLog::default();
+        let (r_u, r_v) = std::thread::scope(|scope| {
+            let (mtu, lgu) = (&mut mt_u, &mut log_u);
+            let hu = scope.spawn(move || orthogonalize_tree_logged(u_tree, backend, mtu, lgu));
+            let r_v = orthogonalize_tree_logged(v_tree, backend, &mut mt_v, &mut log_v);
+            (hu.join().expect("U-tree orthogonalization thread panicked"), r_v)
+        });
+        metrics.merge(&mt_u);
+        metrics.merge(&mt_v);
+        log.entries.extend(log_u.entries);
+        log.entries.extend(log_v.entries);
+        (r_u, r_v)
+    } else {
+        let r_u = orthogonalize_tree_logged(&mut a.u, backend, metrics, log);
+        let r_v = orthogonalize_tree_logged(&mut a.v, backend, metrics, log);
+        (r_u, r_v)
+    };
 
     // S_ts <- R^U_t · S_ts · (R^V_s)^T, level by level.
     for l in 0..a.coupling.len() {

@@ -398,11 +398,52 @@ pub fn compress_logged(
     metrics: &mut Metrics,
     log: &mut PhaseLog,
 ) -> (H2Matrix, CompressionStats) {
+    compress_logged_with(a, tau, backend, metrics, log, false)
+}
+
+/// [`compress_logged`] with optional row/column-tree task parallelism:
+/// when `parallel`, the row-tree side (weight downsweep + truncation
+/// upsweep of U) runs on its own OS thread while the column-tree side (V)
+/// runs on the caller's — both sides only *read* `a` and build private
+/// factors, so this is `Send`-safe and every floating-point result is
+/// identical to the serial path. The coupling projection (which needs both
+/// sides' P maps) stays serial.
+pub fn compress_logged_with(
+    a: &H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+    parallel: bool,
+) -> (H2Matrix, CompressionStats) {
     let depth = a.depth();
-    let z_u = weight_downsweep(a, true, backend, metrics, log);
-    let z_v = weight_downsweep(a, false, backend, metrics, log);
-    let tu = truncate_tree(a, true, &z_u, tau, backend, metrics, log);
-    let tv = truncate_tree(a, false, &z_v, tau, backend, metrics, log);
+    let (tu, tv) = if parallel {
+        let mut mt_u = Metrics::new();
+        let mut log_u = PhaseLog::default();
+        let mut mt_v = Metrics::new();
+        let mut log_v = PhaseLog::default();
+        let (tu, tv) = std::thread::scope(|scope| {
+            let (mtu, lgu) = (&mut mt_u, &mut log_u);
+            let hu = scope.spawn(move || {
+                let z_u = weight_downsweep(a, true, backend, mtu, lgu);
+                truncate_tree(a, true, &z_u, tau, backend, mtu, lgu)
+            });
+            let z_v = weight_downsweep(a, false, backend, &mut mt_v, &mut log_v);
+            let tv = truncate_tree(a, false, &z_v, tau, backend, &mut mt_v, &mut log_v);
+            (hu.join().expect("row-tree compression thread panicked"), tv)
+        });
+        metrics.merge(&mt_u);
+        metrics.merge(&mt_v);
+        log.entries.extend(log_u.entries);
+        log.entries.extend(log_v.entries);
+        (tu, tv)
+    } else {
+        let z_u = weight_downsweep(a, true, backend, metrics, log);
+        let z_v = weight_downsweep(a, false, backend, metrics, log);
+        let tu = truncate_tree(a, true, &z_u, tau, backend, metrics, log);
+        let tv = truncate_tree(a, false, &z_v, tau, backend, metrics, log);
+        (tu, tv)
+    };
 
     // Project couplings: S' = P^U_t · S · (P^V_s)ᵀ.
     let mut coupling = Vec::with_capacity(a.coupling.len());
@@ -507,8 +548,23 @@ pub fn compress_full_logged(
     metrics: &mut Metrics,
     log: &mut PhaseLog,
 ) -> (H2Matrix, CompressionStats) {
-    super::orthogonalize::orthogonalize_logged(a, backend, metrics, log);
-    compress_logged(a, tau, backend, metrics, log)
+    compress_full_logged_with(a, tau, backend, metrics, log, false)
+}
+
+/// [`compress_full_logged`] with the row/column-tree task parallelism of
+/// [`orthogonalize_logged_with`](super::orthogonalize::orthogonalize_logged_with)
+/// and [`compress_logged_with`] when `parallel`. Bitwise-identical results
+/// in both modes.
+pub fn compress_full_logged_with(
+    a: &mut H2Matrix,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+    log: &mut PhaseLog,
+    parallel: bool,
+) -> (H2Matrix, CompressionStats) {
+    super::orthogonalize::orthogonalize_logged_with(a, backend, metrics, log, parallel);
+    compress_logged_with(a, tau, backend, metrics, log, parallel)
 }
 
 /// Zero-pad per-node P maps from k_old_rows rows to k_new rows.

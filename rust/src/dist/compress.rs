@@ -10,10 +10,23 @@
 //! above it serializes on the master; the branch/master boundary crossings
 //! pay the α-β network model for the level-C factor gather/scatter of each
 //! stage.
+//!
+//! With [`ExecMode::Threaded`] the pipeline actually executes with the
+//! row/column-tree task parallelism of
+//! [`crate::compression::compress_full_logged_with`] (the U and V sides
+//! mutate disjoint state, so each runs on its own OS thread; results stay
+//! bitwise identical) and the report carries measured wall-clock alongside
+//! the virtual times. Branch-sliced level parallelism is an open item: the
+//! truncation upsweep accumulates sibling contributions into one parent
+//! block inside a single batched GEMM, which a node-range split would
+//! break (see ROADMAP).
+
+use std::time::Instant;
 
 use crate::backend::ComputeBackend;
-use crate::compression::{compress_full_logged, CompressionStats, PhaseLog};
+use crate::compression::{compress_full_logged_with, CompressionStats, PhaseLog};
 use crate::config::NetworkModel;
+use crate::dist::threaded::ExecMode;
 use crate::dist::Decomposition;
 use crate::metrics::Metrics;
 use crate::tree::H2Matrix;
@@ -29,23 +42,32 @@ pub struct DistCompressReport {
     pub stats: CompressionStats,
     /// Executed-work counters plus simulated comm volume.
     pub metrics: Metrics,
+    /// Measured wall-clock seconds of the whole pipeline
+    /// ([`ExecMode::Threaded`] only).
+    pub measured: Option<f64>,
 }
 
 /// Orthogonalize + compress `a` to relative accuracy `tau` across `p`
 /// virtual ranks over network `net`. Returns the compressed matrix and the
 /// virtual-time report; `a` is left orthogonalized. The numerical result
-/// is identical to the serial [`crate::compression::compress_full`].
+/// is identical to the serial [`crate::compression::compress_full`] in
+/// both execution modes.
 pub fn dist_compress(
     a: &mut H2Matrix,
     p: usize,
     tau: f64,
     backend: &dyn ComputeBackend,
     net: NetworkModel,
+    mode: ExecMode,
 ) -> (H2Matrix, DistCompressReport) {
-    let d = Decomposition::new(p, a.depth());
+    let d = Decomposition::new(p, a.depth()).unwrap_or_else(|e| panic!("{e}"));
     let mut metrics = Metrics::new();
     let mut log = PhaseLog::default();
-    let (compressed, stats) = compress_full_logged(a, tau, backend, &mut metrics, &mut log);
+    let parallel = mode == ExecMode::Threaded;
+    let t0 = Instant::now();
+    let (compressed, stats) =
+        compress_full_logged_with(a, tau, backend, &mut metrics, &mut log, parallel);
+    let measured = parallel.then(|| t0.elapsed().as_secs_f64());
 
     // Replay the per-level phase log in virtual time.
     let mut orthogonalization_time = 0.0;
@@ -74,8 +96,13 @@ pub fn dist_compress(
         compression_time += round;
     }
 
-    let report =
-        DistCompressReport { orthogonalization_time, compression_time, stats, metrics };
+    let report = DistCompressReport {
+        orthogonalization_time,
+        compression_time,
+        stats,
+        metrics,
+        measured,
+    };
     (compressed, report)
 }
 
@@ -101,19 +128,62 @@ mod tests {
         let mut a_serial = base.clone();
         let mut mt = Metrics::new();
         let (c_serial, stats_serial) = compress_full(&mut a_serial, 1e-3, &NativeBackend, &mut mt);
-        let mut a_dist = base.clone();
-        let (c_dist, rep) =
-            dist_compress(&mut a_dist, 4, 1e-3, &NativeBackend, NetworkModel::default());
-        assert_eq!(rep.stats.new_ranks, stats_serial.new_ranks);
-        assert_eq!(rep.stats.post_words, stats_serial.post_words);
-        assert_eq!(c_dist.u.leaf_bases, c_serial.u.leaf_bases, "not the same computation");
-        assert_eq!(c_dist.coupling[c_dist.depth()].data, c_serial.coupling[c_serial.depth()].data);
+        for mode in [ExecMode::Virtual, ExecMode::Threaded] {
+            let mut a_dist = base.clone();
+            let (c_dist, rep) = dist_compress(
+                &mut a_dist,
+                4,
+                1e-3,
+                &NativeBackend,
+                NetworkModel::default(),
+                mode,
+            );
+            assert_eq!(rep.stats.new_ranks, stats_serial.new_ranks, "{mode:?}");
+            assert_eq!(rep.stats.post_words, stats_serial.post_words, "{mode:?}");
+            assert_eq!(
+                c_dist.u.leaf_bases, c_serial.u.leaf_bases,
+                "{mode:?}: not the same computation"
+            );
+            assert_eq!(
+                c_dist.coupling[c_dist.depth()].data,
+                c_serial.coupling[c_serial.depth()].data,
+                "{mode:?}"
+            );
+            assert_eq!(rep.measured.is_some(), mode == ExecMode::Threaded);
+        }
+    }
+
+    #[test]
+    fn threaded_counts_same_work_as_virtual() {
+        let base = sample();
+        let mut a1 = base.clone();
+        let (_, rep_v) =
+            dist_compress(&mut a1, 2, 1e-3, &NativeBackend, NetworkModel::default(), ExecMode::Virtual);
+        let mut a2 = base.clone();
+        let (_, rep_t) = dist_compress(
+            &mut a2,
+            2,
+            1e-3,
+            &NativeBackend,
+            NetworkModel::default(),
+            ExecMode::Threaded,
+        );
+        assert_eq!(rep_v.metrics.flops, rep_t.metrics.flops);
+        assert_eq!(rep_v.metrics.batch_launches, rep_t.metrics.batch_launches);
+        assert!(rep_t.measured.unwrap() > 0.0);
     }
 
     #[test]
     fn report_times_positive_and_comm_accounted() {
         let mut a = sample();
-        let (_, rep) = dist_compress(&mut a, 2, 1e-3, &NativeBackend, NetworkModel::default());
+        let (_, rep) = dist_compress(
+            &mut a,
+            2,
+            1e-3,
+            &NativeBackend,
+            NetworkModel::default(),
+            ExecMode::Virtual,
+        );
         assert!(rep.orthogonalization_time > 0.0);
         assert!(rep.compression_time > 0.0);
         assert_eq!(rep.metrics.messages, 4); // 4 * (p - 1) with p = 2
@@ -123,7 +193,14 @@ mod tests {
     #[test]
     fn single_rank_has_no_comm() {
         let mut a = sample();
-        let (_, rep) = dist_compress(&mut a, 1, 1e-3, &NativeBackend, NetworkModel::default());
+        let (_, rep) = dist_compress(
+            &mut a,
+            1,
+            1e-3,
+            &NativeBackend,
+            NetworkModel::default(),
+            ExecMode::Virtual,
+        );
         assert_eq!(rep.metrics.messages, 0);
         assert_eq!(rep.metrics.bytes_sent, 0);
     }

@@ -7,7 +7,38 @@
 //! the master rank 0, as low-priority work overlapped with the branches'
 //! local phases (§4.2).
 
+use std::fmt;
 use std::ops::Range;
+
+/// Why a (P, depth) pair cannot be decomposed into branches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecompositionError {
+    /// P is zero or not a power of two, so the tree's sibling pairs cannot
+    /// be split into equal branches.
+    NotPowerOfTwo { p: usize },
+    /// log₂P exceeds the tree depth: a rank must own at least one complete
+    /// branch (one level-C node).
+    TooShallow { p: usize, c_level: usize, depth: usize },
+}
+
+impl fmt::Display for DecompositionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DecompositionError::NotPowerOfTwo { p } => write!(
+                f,
+                "rank count must be a nonzero power of two (each rank owns one complete \
+                 level-C branch of the binary cluster tree), got P = {p}"
+            ),
+            DecompositionError::TooShallow { p, c_level, depth } => write!(
+                f,
+                "P = {p} ranks require a cluster tree of depth >= {c_level} (the C-level \
+                 log2 P) so every rank owns a complete branch, got depth {depth}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecompositionError {}
 
 /// Assignment of tree branches to P virtual ranks at the split level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,16 +54,18 @@ pub struct Decomposition {
 impl Decomposition {
     /// Decompose a depth-`depth` tree over `p` ranks.
     ///
-    /// Panics unless `p` is a power of two with log₂p ≤ depth (a rank must
-    /// own at least one complete branch).
-    pub fn new(p: usize, depth: usize) -> Self {
-        assert!(p >= 1 && p.is_power_of_two(), "rank count must be a power of two, got {p}");
+    /// Errors unless `p` is a power of two with log₂p ≤ depth (a rank must
+    /// own at least one complete branch); the error message names the
+    /// offending parameter.
+    pub fn new(p: usize, depth: usize) -> Result<Self, DecompositionError> {
+        if p == 0 || !p.is_power_of_two() {
+            return Err(DecompositionError::NotPowerOfTwo { p });
+        }
         let c_level = p.trailing_zeros() as usize;
-        assert!(
-            c_level <= depth,
-            "P = {p} ranks need a tree of depth >= {c_level}, got depth {depth}"
-        );
-        Decomposition { p, depth, c_level }
+        if c_level > depth {
+            return Err(DecompositionError::TooShallow { p, c_level, depth });
+        }
+        Ok(Decomposition { p, depth, c_level })
     }
 
     /// Owning rank of node `j` at level `l`. Nodes above the C-level belong
@@ -74,7 +107,7 @@ mod tests {
         // Every node at or below the C-level is owned exactly once, and
         // own_range agrees with owner.
         for p in [1usize, 2, 4, 8] {
-            let d = Decomposition::new(p, 5);
+            let d = Decomposition::new(p, 5).unwrap();
             for l in d.c_level..=d.depth {
                 let mut owned = vec![0usize; 1 << l];
                 for r in 0..p {
@@ -90,7 +123,7 @@ mod tests {
 
     #[test]
     fn top_subtree_reports_master() {
-        let d = Decomposition::new(8, 6);
+        let d = Decomposition::new(8, 6).unwrap();
         assert_eq!(d.c_level, 3);
         for l in 0..3 {
             for j in 0..(1 << l) {
@@ -101,7 +134,7 @@ mod tests {
 
     #[test]
     fn single_rank_owns_everything() {
-        let d = Decomposition::new(1, 4);
+        let d = Decomposition::new(1, 4).unwrap();
         assert_eq!(d.c_level, 0);
         assert_eq!(d.leaves_per_rank(), 16);
         assert_eq!(d.own_range(0, 4), 0..16);
@@ -109,14 +142,26 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "power of two")]
-    fn rejects_non_power_of_two() {
-        Decomposition::new(3, 5);
+    fn rejects_non_power_of_two_with_descriptive_message() {
+        for p in [0usize, 3, 6, 12] {
+            let err = Decomposition::new(p, 5).unwrap_err();
+            assert_eq!(err, DecompositionError::NotPowerOfTwo { p });
+            let msg = err.to_string();
+            assert!(msg.contains("power of two"), "message must name the constraint: {msg}");
+            assert!(msg.contains(&format!("P = {p}")), "message must name the value: {msg}");
+        }
+        // Powers of two are accepted.
+        assert!(Decomposition::new(4, 5).is_ok());
     }
 
     #[test]
-    #[should_panic(expected = "depth")]
-    fn rejects_too_shallow_tree() {
-        Decomposition::new(8, 2);
+    fn rejects_too_shallow_tree_with_descriptive_message() {
+        let err = Decomposition::new(8, 2).unwrap_err();
+        assert_eq!(err, DecompositionError::TooShallow { p: 8, c_level: 3, depth: 2 });
+        let msg = err.to_string();
+        assert!(msg.contains("depth >= 3"), "message must give the required depth: {msg}");
+        assert!(msg.contains("got depth 2"), "message must give the actual depth: {msg}");
+        // The boundary case P = 2^depth is a valid one-leaf-per-rank split.
+        assert!(Decomposition::new(4, 2).is_ok());
     }
 }

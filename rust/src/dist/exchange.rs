@@ -75,7 +75,8 @@ impl ExchangePlan {
     pub fn bytes_into(&self, a: &H2Matrix, rank: usize, nv: usize) -> usize {
         let mut total = 0;
         for l in self.decomp.c_level..=a.depth() {
-            let k = a.rank(l);
+            // x̂ coefficients live in the V (column) tree.
+            let k = a.v.ranks[l];
             for (_, nodes) in &self.levels[l].recv[rank] {
                 total += nodes.len() * k * nv * 8;
             }
@@ -91,7 +92,7 @@ impl ExchangePlan {
         let mut total = 0;
         for l in c..=a.depth() {
             let others = (1usize << l) - (1usize << (l - c));
-            total += others * a.rank(l) * nv * 8;
+            total += others * a.v.ranks[l] * nv * 8;
         }
         total
     }
@@ -131,7 +132,7 @@ mod tests {
     #[test]
     fn bytes_match_hand_count() {
         let a = hand_tree();
-        let d = Decomposition::new(2, 2);
+        let d = Decomposition::new(2, 2).unwrap();
         let plan = ExchangePlan::build(&a, d);
         // Rank 0 owns leaves {0, 1}; its rows reference columns {3, 2} on
         // rank 1: 2 nodes x k=2 x 8 bytes = 32 bytes, one message.
@@ -148,7 +149,7 @@ mod tests {
     #[test]
     fn recv_and_send_are_transposes() {
         let a = hand_tree();
-        let plan = ExchangePlan::build(&a, Decomposition::new(2, 2));
+        let plan = ExchangePlan::build(&a, Decomposition::new(2, 2).unwrap());
         for le in &plan.levels {
             for (dst, lists) in le.recv.iter().enumerate() {
                 for (src, nodes) in lists {
@@ -173,7 +174,7 @@ mod tests {
             if a.depth() < p.trailing_zeros() as usize {
                 continue;
             }
-            let plan = ExchangePlan::build(&a, Decomposition::new(p, a.depth()));
+            let plan = ExchangePlan::build(&a, Decomposition::new(p, a.depth()).unwrap());
             for r in 0..p {
                 assert!(plan.bytes_into(&a, r, 3) <= plan.naive_bytes_into(&a, r, 3));
             }
@@ -183,7 +184,7 @@ mod tests {
     #[test]
     fn single_rank_plan_is_empty() {
         let a = hand_tree();
-        let plan = ExchangePlan::build(&a, Decomposition::new(1, 2));
+        let plan = ExchangePlan::build(&a, Decomposition::new(1, 2).unwrap());
         assert_eq!(plan.bytes_into(&a, 0, 1), 0);
         assert_eq!(plan.naive_bytes_into(&a, 0, 1), 0);
         assert_eq!(plan.messages_into(0), 0);

@@ -17,11 +17,19 @@
 //!
 //! With `trace`, the three Fig. 8 streams (compute / comm / lowprio) are
 //! emitted through [`TraceCollector`] as Chrome-trace JSON.
+//!
+//! With [`DistOptions::mode`] set to [`ExecMode::Threaded`] the same
+//! branch slices execute concurrently on real OS threads (see
+//! [`crate::dist::threaded`]): the report then carries measured wall-clock
+//! ([`DistReport::measured`]) alongside the virtual `time`, so the
+//! CostModel constants can be cross-checked against reality.
 
 use std::ops::Range;
 
 use crate::backend::ComputeBackend;
 use crate::config::NetworkModel;
+use crate::dist::threaded::run_threaded;
+pub use crate::dist::threaded::ExecMode;
 use crate::dist::{Decomposition, ExchangePlan};
 use crate::matvec::{
     dense_multiply_range, downsweep_leaf_range, downsweep_transfer_level, hgemv_prologue,
@@ -41,11 +49,19 @@ pub struct DistOptions {
     pub overlap: bool,
     /// Collect a Chrome-trace timeline ([`DistReport::trace_json`]).
     pub trace: bool,
+    /// Execute on real OS threads ([`ExecMode::Threaded`]) or replay the
+    /// virtual-time simulation ([`ExecMode::Virtual`], the default).
+    pub mode: ExecMode,
 }
 
 impl Default for DistOptions {
     fn default() -> Self {
-        DistOptions { net: NetworkModel::default(), overlap: true, trace: false }
+        DistOptions {
+            net: NetworkModel::default(),
+            overlap: true,
+            trace: false,
+            mode: ExecMode::Virtual,
+        }
     }
 }
 
@@ -90,12 +106,21 @@ pub struct DistReport {
     pub time: f64,
     /// Per-rank virtual completion times.
     pub per_rank: Vec<f64>,
-    /// Executed-work counters plus the simulated comm volume/messages.
+    /// Executed-work counters plus the comm volume/messages: modeled in
+    /// [`ExecMode::Virtual`], actual channel traffic in
+    /// [`ExecMode::Threaded`].
     pub metrics: Metrics,
-    /// Total bytes received across ranks (exchange + gather/scatter).
+    /// Total bytes received across ranks (exchange + gather/scatter), as
+    /// priced by the virtual model in both modes.
     pub recv_bytes: usize,
     /// Chrome-trace JSON of the Fig. 8 streams (when `opts.trace`).
     pub trace_json: Option<String>,
+    /// Measured wall-clock seconds of the parallel section
+    /// ([`ExecMode::Threaded`] only) — the reality the virtual `time`
+    /// models.
+    pub measured: Option<f64>,
+    /// Per-rank measured completion offsets ([`ExecMode::Threaded`] only).
+    pub measured_per_rank: Option<Vec<f64>>,
 }
 
 /// A reusable distributed-HGEMV operator: decomposition, marshaling plan
@@ -109,14 +134,16 @@ pub struct DistHgemv {
 
 impl DistHgemv {
     pub fn new(a: &H2Matrix, p: usize, nv: usize) -> Self {
-        let decomp = Decomposition::new(p, a.depth());
+        let decomp = Decomposition::new(p, a.depth()).unwrap_or_else(|e| panic!("{e}"));
         let plan = HgemvPlan::new(a, nv);
         let exchange = ExchangePlan::build(a, decomp);
         DistHgemv { decomp, plan, exchange }
     }
 
     /// y = A·x across the virtual ranks. `x`/`y` are N × nv in the permuted
-    /// ordering, as in [`crate::matvec::hgemv`]; `ws` must match `nv`.
+    /// ordering, as in [`crate::matvec::hgemv`]; `ws` must match `nv` (in
+    /// [`ExecMode::Threaded`] each rank thread uses its own workspace and
+    /// `ws` is left untouched).
     pub fn run(
         &self,
         a: &H2Matrix,
@@ -136,65 +163,104 @@ impl DistHgemv {
         let (p, c, depth) = (d.p, d.c_level, d.depth);
         let plan = &self.plan;
         let mut metrics = Metrics::new();
+        let mut measured = None;
+        let mut measured_per_rank = None;
 
-        // ---- numerical execution: the serial phases, sliced per branch ----
-        hgemv_prologue(a, x, ws);
-        // Branch upsweeps: leaves, then transfer levels whose parents the
-        // ranks own (l-1 >= C).
-        for r in 0..p {
-            upsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-        }
-        for l in ((c + 1)..=depth).rev() {
-            for r in 0..p {
-                upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
+        match opts.mode {
+            ExecMode::Threaded => {
+                // ---- real execution: one OS thread per rank ----
+                let out = run_threaded(self, a, backend, x, y);
+                metrics = out.metrics;
+                measured = Some(out.measured);
+                measured_per_rank = Some(out.per_rank);
+            }
+            ExecMode::Virtual => {
+                // ---- numerical execution: the serial phases, sliced per
+                // branch on one thread ----
+                hgemv_prologue(a, x, ws);
+                // Branch upsweeps: leaves, then transfer levels whose
+                // parents the ranks own (l-1 >= C).
+                for r in 0..p {
+                    upsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+                }
+                for l in ((c + 1)..=depth).rev() {
+                    for r in 0..p {
+                        upsweep_transfer_level(
+                            a,
+                            backend,
+                            plan,
+                            ws,
+                            &mut metrics,
+                            l,
+                            d.own_range(r, l - 1),
+                        );
+                    }
+                }
+                // Top-subtree upsweep (master).
+                for l in (1..=c).rev() {
+                    upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+                }
+                // Coupling: top levels on the master, distributed levels per rank.
+                for l in 0..c {
+                    tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
+                }
+                for l in c..=depth {
+                    for r in 0..p {
+                        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l));
+                    }
+                }
+                for r in 0..p {
+                    dense_multiply_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+                }
+                // Top-subtree downsweep, then branch downsweeps.
+                for l in 1..=c {
+                    downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+                }
+                for l in (c + 1)..=depth {
+                    for r in 0..p {
+                        downsweep_transfer_level(
+                            a,
+                            backend,
+                            plan,
+                            ws,
+                            &mut metrics,
+                            l,
+                            d.own_range(r, l - 1),
+                        );
+                    }
+                }
+                for r in 0..p {
+                    downsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+                }
+                unpad_leaf_output(a, &ws.y_pad, y, nv);
             }
         }
-        // Top-subtree upsweep (master).
-        for l in (1..=c).rev() {
-            upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
-        }
-        // Coupling: top levels on the master, distributed levels per rank.
-        for l in 0..c {
-            tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
-        }
-        for l in c..=depth {
-            for r in 0..p {
-                tree_multiply_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l));
-            }
-        }
-        for r in 0..p {
-            dense_multiply_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-        }
-        // Top-subtree downsweep, then branch downsweeps.
-        for l in 1..=c {
-            downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
-        }
-        for l in (c + 1)..=depth {
-            for r in 0..p {
-                downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
-            }
-        }
-        for r in 0..p {
-            downsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-        }
-        unpad_leaf_output(a, &ws.y_pad, y, nv);
 
         // Padding waste of the batched execution: leaf vector padding (in
         // and out) plus the zero-padded dense blocks.
         metrics.pad_waste += padding_waste(a, nv);
 
-        // ---- virtual-time schedule ----
-        self.schedule(a, nv, opts, &mut metrics)
+        // ---- virtual-time schedule (in Threaded mode the actual channel
+        // traffic is already in `metrics`; the schedule only prices) ----
+        let account_comm = opts.mode == ExecMode::Virtual;
+        let mut rep = self.schedule(a, nv, opts, &mut metrics, account_comm);
+        rep.measured = measured;
+        rep.measured_per_rank = measured_per_rank;
+        rep
     }
 
-    /// Price the executed product in virtual time (see module docs). Fills
-    /// the comm counters of `metrics` and moves it into the report.
+    /// Price the executed product in virtual time (see module docs). When
+    /// `account_comm`, fills the comm counters of `metrics` with the
+    /// modeled exchange/gather/scatter volumes (the threaded executor has
+    /// already counted its real channel traffic); always moves `metrics`
+    /// into the report.
     fn schedule(
         &self,
         a: &H2Matrix,
         nv: usize,
         opts: &DistOptions,
         metrics: &mut Metrics,
+        account_comm: bool,
     ) -> DistReport {
         let model = CostModel::default();
         let net = &opts.net;
@@ -269,11 +335,15 @@ impl DistHgemv {
         let mut recv_bytes = 0usize;
         for r in 0..p {
             for l in c..=depth {
-                let k = a.rank(l);
+                // x̂ is a V-tree quantity: price the bytes the threaded
+                // executor actually ships (U and V ranks can differ).
+                let k = a.v.ranks[l];
                 for (_, nodes) in &self.exchange.levels[l].recv[r] {
                     let bytes = nodes.len() * k * nv * 8;
                     x_comm[r] += net.time(bytes);
-                    metrics.send(bytes);
+                    if account_comm {
+                        metrics.send(bytes);
+                    }
                     recv_bytes += bytes;
                 }
             }
@@ -300,8 +370,10 @@ impl DistHgemv {
         let msg = net.time(msg_bytes);
         let t_master = if c > 0 {
             for _ in 1..p {
-                metrics.send(msg_bytes); // gather
-                metrics.send(msg_bytes); // scatter
+                if account_comm {
+                    metrics.send(msg_bytes); // gather
+                    metrics.send(msg_bytes); // scatter
+                }
                 recv_bytes += 2 * msg_bytes;
             }
             t_up_max + (p - 1) as f64 * msg + c_top
@@ -355,6 +427,8 @@ impl DistHgemv {
             metrics: std::mem::take(metrics),
             recv_bytes,
             trace_json: trace.map(|tc| tc.to_json()),
+            measured: None,
+            measured_per_rank: None,
         }
     }
 }
@@ -473,6 +547,48 @@ mod tests {
         let t1 = dist_hgemv(&a, &NativeBackend, 1, 1, &x, &mut y, &DistOptions::default()).time;
         let t4 = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &DistOptions::default()).time;
         assert!(t4 < t1, "P=4 {t4} !< P=1 {t1}");
+    }
+
+    #[test]
+    fn threaded_bitwise_equal_to_serial_for_all_p() {
+        // The real executor runs the same phase functions per branch
+        // thread: outputs must be *identical* to the serial product.
+        let a = sample(16); // N = 256, depth 4
+        let n = a.n();
+        let mut rng = Prng::new(701);
+        for nv in [1usize, 3] {
+            let x = rng.normal_vec(n * nv);
+            let plan = HgemvPlan::new(&a, nv);
+            let mut ws = HgemvWorkspace::new(&a, nv);
+            let mut metrics = Metrics::new();
+            let mut y_serial = vec![0.0; n * nv];
+            hgemv(&a, &NativeBackend, &plan, &x, &mut y_serial, &mut ws, &mut metrics);
+            let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+            for p in [1usize, 2, 4, 8] {
+                let mut y_thr = vec![0.0; n * nv];
+                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y_thr, &opts);
+                assert_eq!(y_thr, y_serial, "P={p} nv={nv} not bitwise equal");
+                assert!(rep.measured.unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_counters_match_model_and_channels_live() {
+        let a = sample(16);
+        let n = a.n();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+        let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+        // Same GEMMs as the serial sweep, just on different threads.
+        assert_eq!(rep.metrics.flops, crate::matvec::hgemv_flops(&a, 1));
+        // Real channel traffic: the plan exchanges plus gather + scatter.
+        assert!(rep.metrics.bytes_sent > 0, "channel traffic must be counted");
+        assert!(rep.metrics.messages > 0);
+        assert_eq!(rep.measured_per_rank.as_ref().unwrap().len(), 4);
+        // The virtual schedule is still priced alongside.
+        assert!(rep.time > 0.0);
     }
 
     #[test]

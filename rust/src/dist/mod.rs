@@ -22,7 +22,12 @@
 //! - [`compress`] — distributed algebraic recompression: the serial
 //!   per-level compression phases replayed in virtual time (levels at or
 //!   below the C-level run concurrently at cost/P, levels above serialize
-//!   on the master).
+//!   on the master);
+//! - [`threaded`] — the *real* executor: [`ExecMode::Threaded`] runs each
+//!   rank's branch slice on its own OS thread, exchanging level-C
+//!   coefficients through typed channels driven by the same
+//!   [`ExchangePlan`], bitwise identical to the serial product, and
+//!   reports measured wall-clock alongside the virtual time.
 //!
 //! # Example
 //!
@@ -47,7 +52,7 @@
 //! assert!(rep.metrics.bytes_sent > 0); // §4.1 comm volume is accounted
 //!
 //! // The §4.1 plan itself:
-//! let d = h2opus::dist::Decomposition::new(4, a.depth());
+//! let d = h2opus::dist::Decomposition::new(4, a.depth()).unwrap();
 //! let plan = h2opus::dist::ExchangePlan::build(&a, d);
 //! for r in 0..4 {
 //!     assert!(plan.bytes_into(&a, r, 1) <= plan.naive_bytes_into(&a, r, 1));
@@ -58,12 +63,14 @@ pub mod compress;
 pub mod decomposition;
 pub mod exchange;
 pub mod hgemv;
+pub mod threaded;
 
 /// Legacy path: the exchange plan has historically been imported through
 /// `dist::plan` (e.g. by the property tests).
 pub use self::exchange as plan;
 
 pub use self::compress::{dist_compress, DistCompressReport};
-pub use self::decomposition::Decomposition;
+pub use self::decomposition::{Decomposition, DecompositionError};
 pub use self::exchange::{ExchangePlan, LevelExchange};
 pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};
+pub use self::threaded::ExecMode;

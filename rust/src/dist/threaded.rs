@@ -1,0 +1,387 @@
+//! Real thread-parallel distributed HGEMV executor.
+//!
+//! Where [`crate::dist::hgemv`] *simulates* the paper's §4 runtime (one
+//! loop over virtual ranks, speedups priced by the analytic
+//! [`crate::dist::hgemv::CostModel`]), this module actually executes it:
+//! every virtual rank runs its branch slice of the level/range-scoped
+//! phase functions of [`crate::matvec`] on its own OS thread, and the
+//! level-C basis-coefficient exchanges travel through typed in-process
+//! channels driven by the same [`crate::dist::ExchangePlan`] that prices
+//! the virtual schedule. The wall-clock this measures is what the
+//! CostModel only estimates — `DistReport::measured` vs `DistReport::time`
+//! is the model-vs-reality cross-check (see `python/tests/model_check.py`).
+//!
+//! # Execution plan (per product)
+//!
+//! With P ranks and C = log₂P, P branch threads plus (when C > 0) one
+//! master thread are spawned. Each branch rank r:
+//!
+//! 1. upsweeps its own leaf range and transfer levels down to the C-level
+//!    (all state private to its branch),
+//! 2. sends the x̂ node blocks other ranks' coupling rows reference
+//!    ([`crate::dist::ExchangePlan::build`]'s send sets) and its level-C x̂ block to the
+//!    master (the gather),
+//! 3. runs its dense/diagonal blocks — which need no remote data — while
+//!    the exchange is in flight (§4.2's overlap, for real),
+//! 4. receives its exchange set, multiplies its coupling rows level by
+//!    level, merges the master's level-(C-1) ŷ parent and applies its own
+//!    parity transfer across the C-level boundary,
+//! 5. downsweeps its branch and scatters its disjoint slice of the output.
+//!
+//! The master thread gathers the level-C x̂, processes the replicated top
+//! subtree (upsweep above C, top coupling levels, downsweep above C) — the
+//! low-priority stream of Fig. 8 — and scatters each rank's ŷ parent.
+//!
+//! # Thread-safety / bitwise-identity argument
+//!
+//! - Every thread owns a private [`HgemvWorkspace`]; the matrix, plans and
+//!   input vector are shared immutably (`ComputeBackend: Sync` makes the
+//!   backend shareable too). No mutable state is shared: remote
+//!   coefficients arrive as owned `Vec<f64>` messages, and the output is
+//!   pre-split into per-rank disjoint `&mut` chunks (branch leaf ranges
+//!   are contiguous in the permuted ordering).
+//! - Each rank executes the *same* phase functions over the *same* branch
+//!   slices in the *same* per-destination order as the serial sweep, on
+//!   bitwise-identical inputs (messages are pure copies). The only
+//!   cross-thread accumulation — the C-level downsweep transfer — is
+//!   applied by the *receiving* rank on top of its own coupling sums via
+//!   [`crate::matvec::downsweep_transfer_parity`], reproducing the serial
+//!   in-place accumulation order exactly. Hence `y` is bitwise identical
+//!   to the serial product for every P.
+//! - Per-rank [`Metrics`] are merged after join in rank order
+//!   ([`Metrics::merge_all`]), so the counters are race-free and
+//!   deterministic.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use crate::backend::ComputeBackend;
+use crate::dist::hgemv::DistHgemv;
+use crate::matvec::{
+    dense_multiply_range, downsweep_leaf_range, downsweep_transfer_level,
+    downsweep_transfer_parity, pad_leaf_input, tree_multiply_level, unpad_leaf_range,
+    upsweep_leaf_range, upsweep_transfer_level, HgemvWorkspace,
+};
+use crate::metrics::Metrics;
+use crate::tree::H2Matrix;
+
+/// How the distributed operations execute their numerical work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Single-threaded replay of the per-branch phases, priced in virtual
+    /// time by the analytic cost model (the simulator).
+    #[default]
+    Virtual,
+    /// One OS thread per virtual rank exchanging level-C coefficients
+    /// through typed channels; reports measured wall-clock alongside the
+    /// virtual schedule.
+    Threaded,
+}
+
+/// The typed messages of the in-process interconnect.
+enum Msg {
+    /// Plan-driven x̂ exchange: the node blocks of `level` that `src` owns
+    /// and the receiver's coupling rows reference, concatenated in the
+    /// plan's (sorted) node order.
+    Xhat { level: usize, src: usize, data: Vec<f64> },
+    /// A rank's level-C x̂ block, gathered to the master.
+    Gather { src: usize, data: Vec<f64> },
+    /// The master's level-(C-1) ŷ block for the receiving rank's parent.
+    Parent { data: Vec<f64> },
+}
+
+/// What the threaded execution hands back to the virtual-time scheduler.
+pub(crate) struct ThreadedOutcome {
+    /// Wall-clock seconds of the parallel section (spawn to join).
+    pub measured: f64,
+    /// Per-rank wall-clock completion offsets.
+    pub per_rank: Vec<f64>,
+    /// Executed-work counters plus actual channel traffic, merged in rank
+    /// order (master last).
+    pub metrics: Metrics,
+}
+
+/// One thread's private context.
+struct Seat<'s> {
+    idx: usize,
+    ws: &'s mut HgemvWorkspace,
+    rx: Receiver<Msg>,
+    tx: Vec<Sender<Msg>>,
+    /// Branch ranks carry their disjoint output chunk and its base row.
+    y: Option<(&'s mut [f64], usize)>,
+}
+
+/// Execute `y = A·x` across real OS threads. `x`/`y` are N × nv in the
+/// permuted ordering, exactly as in the virtual path; the result is
+/// bitwise identical to the serial [`crate::matvec::hgemv`].
+pub(crate) fn run_threaded(
+    op: &DistHgemv,
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    x: &[f64],
+    y: &mut [f64],
+) -> ThreadedOutcome {
+    let d = op.decomp;
+    let (p, c, depth) = (d.p, d.c_level, d.depth);
+    let nv = op.plan.nv;
+    let has_master = c > 0;
+    let n_threads = p + usize::from(has_master);
+
+    // One channel endpoint per thread: ranks 0..P, master at index P.
+    let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(n_threads);
+    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(n_threads);
+    for _ in 0..n_threads {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    // Disjoint per-rank output chunks: branch leaf ranges are contiguous
+    // point ranges in the permuted ordering, so `y` splits cleanly.
+    let lpr = d.leaves_per_rank();
+    let leaves = 1usize << depth;
+    let row_of =
+        |leaf: usize| if leaf == leaves { a.n() } else { a.tree.node(depth, leaf).start };
+    let mut y_chunks: Vec<(&mut [f64], usize)> = Vec::with_capacity(p);
+    {
+        let mut rest: &mut [f64] = y;
+        let mut row = 0usize;
+        for r in 0..p {
+            let end = row_of((r + 1) * lpr);
+            let (head, tail) = rest.split_at_mut((end - row) * nv);
+            y_chunks.push((head, row));
+            rest = tail;
+            row = end;
+        }
+        debug_assert!(rest.is_empty(), "leaf ranges must cover the output");
+    }
+
+    // Workspaces are allocated outside the timed region: the measurement
+    // is of execution, not of one-time buffer setup (the virtual path
+    // likewise reuses workspaces across products). The threads below rely
+    // on these being freshly zeroed — they skip the serial prologue's
+    // redundant clears. (Branch-local, reusable workspaces are a ROADMAP
+    // open item; plan offsets are absolute, so slicing needs plan work.)
+    let mut workspaces: Vec<HgemvWorkspace> =
+        (0..n_threads).map(|_| HgemvWorkspace::new(a, nv)).collect();
+
+    let mut seats: Vec<Seat<'_>> = Vec::with_capacity(n_threads);
+    {
+        let mut y_it = y_chunks.into_iter();
+        let mut rx_it = rxs.into_iter();
+        for (idx, ws) in workspaces.iter_mut().enumerate() {
+            let rx = rx_it.next().expect("one receiver per seat");
+            let y = if idx < p { y_it.next() } else { None };
+            seats.push(Seat { idx, ws, rx, tx: txs.clone(), y });
+        }
+    }
+    drop(txs);
+
+    let t0 = Instant::now();
+    let results: Vec<(Metrics, f64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = seats
+            .into_iter()
+            .map(|seat| {
+                scope.spawn(move || {
+                    if seat.idx < p {
+                        run_rank(op, a, backend, x, t0, seat)
+                    } else {
+                        run_master(op, a, backend, t0, seat)
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("executor thread panicked")).collect()
+    });
+    let measured = t0.elapsed().as_secs_f64();
+
+    let metrics = Metrics::merge_all(results.iter().map(|(m, _)| m));
+    let per_rank: Vec<f64> = results.iter().take(p).map(|&(_, t)| t).collect();
+    ThreadedOutcome { measured, per_rank, metrics }
+}
+
+/// One branch rank's slice of the product (steps 1–5 of the module docs).
+fn run_rank(
+    op: &DistHgemv,
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    x: &[f64],
+    t0: Instant,
+    seat: Seat<'_>,
+) -> (Metrics, f64) {
+    let d = op.decomp;
+    let (p, c, depth) = (d.p, d.c_level, d.depth);
+    let plan = &op.plan;
+    let nv = plan.nv;
+    let r = seat.idx;
+    let ws = seat.ws;
+    let mut metrics = Metrics::new();
+
+    // Local branch upsweep (private state only). The full x_pad gather is
+    // needed (dense rows read cross-branch source leaves), but the
+    // coefficient trees and y_pad of this freshly allocated workspace are
+    // already zero — the serial prologue's clears would be redundant
+    // O(N·nv) passes on every rank.
+    pad_leaf_input(a, x, &mut ws.x_pad, nv);
+    upsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+    for l in ((c + 1)..=depth).rev() {
+        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
+    }
+
+    // Plan-driven x̂ sends, then the level-C gather to the master.
+    for l in c..=depth {
+        let k = a.v.ranks[l];
+        for (dst, nodes) in &op.exchange.levels[l].send[r] {
+            let mut data = Vec::with_capacity(nodes.len() * k * nv);
+            for &s in nodes {
+                let s = s as usize;
+                data.extend_from_slice(&ws.xhat.levels[l][s * k * nv..(s + 1) * k * nv]);
+            }
+            metrics.send(data.len() * 8);
+            seat.tx[*dst].send(Msg::Xhat { level: l, src: r, data }).expect("xhat send");
+        }
+    }
+    if c > 0 {
+        let k_c = a.v.ranks[c];
+        let data = ws.xhat.levels[c][r * k_c * nv..(r + 1) * k_c * nv].to_vec();
+        metrics.send(data.len() * 8);
+        seat.tx[p].send(Msg::Gather { src: r, data }).expect("gather send");
+    }
+
+    // Dense/diagonal blocks need no remote data: execute them while the
+    // exchange is in flight. (They write y_pad, disjoint from the ŷ tree,
+    // so reordering them before the coupling phase keeps every memory
+    // location's accumulation order — and hence the result — bitwise equal
+    // to the serial sweep.)
+    dense_multiply_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+
+    // Receive the exchange set (the master's scatter may arrive early —
+    // stash it; channel order across senders is not load-bearing).
+    let expected = op.exchange.messages_into(r);
+    let mut received = 0usize;
+    let mut parent: Option<Vec<f64>> = None;
+    while received < expected {
+        match seat.rx.recv().expect("exchange recv") {
+            Msg::Xhat { level, src, data } => {
+                scatter_xhat(op, a, ws, r, level, src, &data);
+                received += 1;
+            }
+            Msg::Parent { data } => parent = Some(data),
+            Msg::Gather { .. } => unreachable!("gather messages address the master"),
+        }
+    }
+
+    // Coupling rows, level by level in serial order.
+    for l in c..=depth {
+        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l));
+    }
+
+    // C-level boundary: copy the master's ŷ parent into the private tree,
+    // then apply this rank's parity transfer on top of its own coupling
+    // sums — the same in-place accumulation the serial downsweep performs.
+    if c > 0 {
+        let data = parent.unwrap_or_else(|| loop {
+            match seat.rx.recv().expect("parent recv") {
+                Msg::Parent { data } => break data,
+                _ => unreachable!("only the master's scatter is outstanding"),
+            }
+        });
+        let k_par = a.u.ranks[c - 1];
+        let par = r >> 1;
+        ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].copy_from_slice(&data);
+        downsweep_transfer_parity(a, backend, plan, ws, &mut metrics, c, par..par + 1, r & 1);
+    }
+
+    // Branch downsweep and disjoint output scatter.
+    for l in (c + 1)..=depth {
+        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
+    }
+    downsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
+    let (y_chunk, base_row) = seat.y.expect("rank seat carries an output chunk");
+    unpad_leaf_range(a, &ws.y_pad, y_chunk, nv, d.own_range(r, depth), base_row);
+
+    (metrics, t0.elapsed().as_secs_f64())
+}
+
+/// The master thread: level-C gather, replicated top subtree, ŷ scatter.
+fn run_master(
+    op: &DistHgemv,
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    t0: Instant,
+    seat: Seat<'_>,
+) -> (Metrics, f64) {
+    let d = op.decomp;
+    let (p, c) = (d.p, d.c_level);
+    debug_assert!(c > 0, "the master thread only exists when the top subtree does");
+    let plan = &op.plan;
+    let nv = plan.nv;
+    // The master's workspace is freshly allocated (zeroed) by
+    // `run_threaded`; only the gathered level-C blocks are written below.
+    let ws = seat.ws;
+    let mut metrics = Metrics::new();
+
+    // Gather the level-C x̂ block of every branch rank.
+    let k_c = a.v.ranks[c];
+    let mut received = 0usize;
+    while received < p {
+        match seat.rx.recv().expect("gather recv") {
+            Msg::Gather { src, data } => {
+                ws.xhat.levels[c][src * k_c * nv..(src + 1) * k_c * nv].copy_from_slice(&data);
+                received += 1;
+            }
+            _ => unreachable!("branch ranks only send gathers to the master"),
+        }
+    }
+
+    // Replicated top subtree (the Fig. 8 low-priority stream): upsweep
+    // above the C-level, top coupling levels, downsweep above the C-level.
+    for l in (1..=c).rev() {
+        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+    }
+    for l in 0..c {
+        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
+    }
+    for l in 1..c {
+        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+    }
+
+    // Scatter each rank's level-(C-1) ŷ parent. The rank applies the
+    // C-level transfer itself (its parity only), so the boundary node's
+    // accumulation order matches the serial sweep bitwise.
+    let k_par = a.u.ranks[c - 1];
+    for r in 0..p {
+        let par = r >> 1;
+        let data = ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].to_vec();
+        metrics.send(data.len() * 8);
+        seat.tx[r].send(Msg::Parent { data }).expect("parent send");
+    }
+
+    (metrics, t0.elapsed().as_secs_f64())
+}
+
+/// Place a received exchange payload into the private x̂ tree at the node
+/// positions the plan promised (sorted node order, pure copy).
+fn scatter_xhat(
+    op: &DistHgemv,
+    a: &H2Matrix,
+    ws: &mut HgemvWorkspace,
+    r: usize,
+    level: usize,
+    src: usize,
+    data: &[f64],
+) {
+    let k = a.v.ranks[level];
+    let nv = ws.nv;
+    let nodes = op.exchange.levels[level].recv[r]
+        .iter()
+        .find(|(s, _)| *s == src)
+        .map(|(_, nodes)| nodes)
+        .expect("message from a source outside the exchange plan");
+    debug_assert_eq!(data.len(), nodes.len() * k * nv, "payload must match the plan");
+    for (i, &node) in nodes.iter().enumerate() {
+        let node = node as usize;
+        ws.xhat.levels[level][node * k * nv..(node + 1) * k * nv]
+            .copy_from_slice(&data[i * k * nv..(i + 1) * k * nv]);
+    }
+}

@@ -2,8 +2,8 @@
 //! line. (Hand-rolled CLI: the offline image carries no clap.)
 //!
 //! ```text
-//! h2opus matvec   [--n-side 32] [--dim 2] [--ranks 4] [--nv 1] [--backend native|xla] [--no-overlap] [--trace out.json]
-//! h2opus compress [--n-side 32] [--dim 2] [--ranks 4] [--tau 1e-3] [--backend native|xla]
+//! h2opus matvec   [--n-side 32] [--dim 2] [--ranks 4] [--nv 1] [--backend native|xla] [--no-overlap] [--threaded] [--trace out.json]
+//! h2opus compress [--n-side 32] [--dim 2] [--ranks 4] [--tau 1e-3] [--backend native|xla] [--threaded]
 //! h2opus solve    [--n-side 32] [--ranks 4] [--beta 0.75] [--rtol 1e-6] [--backend native|xla]
 //! h2opus accuracy [--n-side 32] [--dim 2] [--g 4]
 //! h2opus info     [--n-side 32] [--dim 2]
@@ -16,7 +16,7 @@ use h2opus::backend::ComputeBackend;
 use h2opus::compression::compress_full;
 use h2opus::config::{H2Config, NetworkModel};
 use h2opus::construct::{build_h2, ExponentialKernel};
-use h2opus::dist::hgemv::{dist_hgemv, DistOptions};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::geometry::PointSet;
 use h2opus::metrics::Metrics;
 use h2opus::runtime::XlaBackend;
@@ -89,11 +89,15 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
         net: NetworkModel::default(),
         overlap: !flags.contains_key("no-overlap"),
         trace: flags.contains_key("trace"),
+        mode: if flags.contains_key("threaded") { ExecMode::Threaded } else { ExecMode::Virtual },
     };
     let rep = dist_hgemv(&a, backend.as_ref(), ranks, nv, &x, &mut y, &opts);
     let gflops = rep.metrics.flops as f64 / rep.time / 1e9;
     println!("N = {n}, P = {ranks}, nv = {nv}, backend = {}", backend.name());
     println!("virtual time      {:>12.3} ms", rep.time * 1e3);
+    if let Some(m) = rep.measured {
+        println!("measured time     {:>12.3} ms (threaded executor)", m * 1e3);
+    }
     println!("flops             {:>12}", rep.metrics.flops);
     println!("aggregate rate    {:>12.2} Gflop/s ({:.2} Gflop/s/rank)", gflops, gflops / ranks as f64);
     println!("comm volume       {:>12} B", rep.recv_bytes);
@@ -110,16 +114,22 @@ fn cmd_compress(flags: &HashMap<String, String>) {
     let ranks: usize = get(flags, "ranks", 4);
     let pre = a.low_rank_memory_words();
     if ranks > 1 {
+        let mode =
+            if flags.contains_key("threaded") { ExecMode::Threaded } else { ExecMode::Virtual };
         let (c, rep) = h2opus::dist::compress::dist_compress(
             &mut a,
             ranks,
             tau,
             backend.as_ref(),
             NetworkModel::default(),
+            mode,
         );
         println!("N = {}, P = {ranks}, tau = {tau:e}", c.n());
         println!("orthogonalization {:>12.3} ms", rep.orthogonalization_time * 1e3);
         println!("compression       {:>12.3} ms", rep.compression_time * 1e3);
+        if let Some(m) = rep.measured {
+            println!("measured          {:>12.3} ms (threaded executor)", m * 1e3);
+        }
         println!("memory            {pre} -> {} words ({:.2}x)", rep.stats.post_words, rep.stats.ratio());
         println!("ranks             {:?} -> {:?}", rep.stats.old_ranks, rep.stats.new_ranks);
     } else {

@@ -19,9 +19,11 @@
 //! - *level/range-scoped* functions ([`upsweep_leaf_range`],
 //!   [`upsweep_transfer_level`], [`tree_multiply_level`],
 //!   [`dense_multiply_range`], [`downsweep_transfer_level`],
-//!   [`downsweep_leaf_range`]) operating on a contiguous node range of one
+//!   [`downsweep_transfer_parity`], [`downsweep_leaf_range`],
+//!   [`unpad_leaf_range`]) operating on a contiguous node range of one
 //!   level — the branch slices the distributed runtime
-//!   ([`crate::dist::hgemv`]) schedules per virtual rank.
+//!   ([`crate::dist::hgemv`]) schedules per virtual rank and the threaded
+//!   executor ([`crate::dist::threaded`]) runs on per-rank OS threads.
 //!
 //! Both paths execute the same per-block GEMMs in the same per-destination
 //! order, so serial and distributed products agree bitwise.
@@ -117,12 +119,30 @@ pub fn pad_leaf_input(a: &H2Matrix, x: &[f64], x_pad: &mut [f64], nv: usize) {
 
 /// Scatter the padded per-leaf output back to the permuted N×nv vector.
 pub fn unpad_leaf_output(a: &H2Matrix, y_pad: &[f64], y: &mut [f64], nv: usize) {
+    unpad_leaf_range(a, y_pad, y, nv, 0..1usize << a.depth(), 0);
+}
+
+/// Scatter the padded output of the contiguous leaf range into `y_chunk`,
+/// a slice of the permuted output starting at point row `base_row` (the
+/// first row owned by the range). The threaded executor hands each rank a
+/// disjoint `y_chunk` via `split_at_mut`, so branch output writes are
+/// `Send`-safe without sharing the full vector.
+pub fn unpad_leaf_range(
+    a: &H2Matrix,
+    y_pad: &[f64],
+    y_chunk: &mut [f64],
+    nv: usize,
+    leaves: Range<usize>,
+    base_row: usize,
+) {
     let depth = a.depth();
     let m_pad = a.u.leaf_dim;
-    for (j, node) in a.tree.level(depth).iter().enumerate() {
+    for j in leaves {
+        let node = a.tree.node(depth, j);
         let rows = node.size();
         let src = &y_pad[j * m_pad * nv..j * m_pad * nv + rows * nv];
-        y[node.start * nv..(node.start + rows) * nv].copy_from_slice(src);
+        let r0 = node.start - base_row;
+        y_chunk[r0 * nv..(r0 + rows) * nv].copy_from_slice(src);
     }
 }
 
@@ -324,6 +344,28 @@ pub fn downsweep_transfer_level(
     l: usize,
     parents: Range<usize>,
 ) {
+    for parity in 0..2 {
+        downsweep_transfer_parity(a, backend, plan, ws, metrics, l, parents.clone(), parity);
+    }
+}
+
+/// One parity batch of a downsweep transfer level: ŷ^l_child += E ŷ^{l-1}
+/// for the parity-`parity` child of every parent in `parents`. Each child
+/// belongs to exactly one parity batch, so a rank at the C-level boundary
+/// can accumulate *its* node without touching its sibling on another rank
+/// — and since the per-child GEMM arithmetic is independent of the rest of
+/// the batch, the result is bitwise identical to the whole-level call.
+#[allow(clippy::too_many_arguments)]
+pub fn downsweep_transfer_parity(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+    parents: Range<usize>,
+    parity: usize,
+) {
     if parents.is_empty() {
         return;
     }
@@ -332,17 +374,15 @@ pub fn downsweep_transfer_level(
     let (lo, hi) = ws.yhat.levels.split_at_mut(l);
     let yhat_parent = &lo[l - 1];
     let yhat_child = &mut hi[0];
-    for parity in 0..2 {
-        let po = &plan.up[l].parity[parity];
-        backend.batched_gemm(
-            GemmDims { nb: parents.len(), m: k_l, k: k_par, n: nv, trans_a: false, trans_b: false, accumulate: true },
-            BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off[parents.clone()] },
-            BatchRef { data: yhat_parent, offsets: &po.parent_off[parents.clone()] },
-            yhat_child,
-            &po.child_off[parents.clone()],
-            metrics,
-        );
-    }
+    let po = &plan.up[l].parity[parity];
+    backend.batched_gemm(
+        GemmDims { nb: parents.len(), m: k_l, k: k_par, n: nv, trans_a: false, trans_b: false, accumulate: true },
+        BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off[parents.clone()] },
+        BatchRef { data: yhat_parent, offsets: &po.parent_off[parents.clone()] },
+        yhat_child,
+        &po.child_off[parents],
+        metrics,
+    );
 }
 
 /// Downsweep leaf expansion over the contiguous leaf range:

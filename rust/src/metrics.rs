@@ -55,6 +55,18 @@ impl Metrics {
         self.batch_launches += other.batch_launches;
         self.pad_waste += other.pad_waste;
     }
+
+    /// Aggregate per-rank counters without data races: each thread of the
+    /// threaded executor records into its own `Metrics`, and the joined
+    /// results are folded here in rank order — so equal per-rank inputs
+    /// give identical totals regardless of thread completion order.
+    pub fn merge_all<'a>(parts: impl IntoIterator<Item = &'a Metrics>) -> Metrics {
+        let mut total = Metrics::new();
+        for part in parts {
+            total.merge(part);
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -67,6 +79,20 @@ mod tests {
         m.gemm(10, 4, 5, 6);
         assert_eq!(m.flops, 2 * 10 * 4 * 5 * 6);
         assert_eq!(m.batch_launches, 1);
+    }
+
+    #[test]
+    fn merge_all_is_order_independent_on_totals() {
+        let mut a = Metrics::new();
+        a.gemm(2, 3, 3, 1);
+        a.send(64);
+        let mut b = Metrics::new();
+        b.gemm(5, 2, 2, 2);
+        let fwd = Metrics::merge_all([&a, &b]);
+        let rev = Metrics::merge_all([&b, &a]);
+        assert_eq!(fwd.flops, rev.flops);
+        assert_eq!(fwd.bytes_sent, 64);
+        assert_eq!(fwd.batch_launches, 2);
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //! number of compiled executables; lazy compilation caches one executable
 //! per (artifact) file.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -28,12 +28,16 @@ pub struct XlaStats {
 }
 
 /// PJRT-backed [`ComputeBackend`].
+///
+/// Interior mutability (executable cache, stats) is behind `Mutex`es so
+/// the backend satisfies the `ComputeBackend: Sync` bound and can be
+/// shared across the threaded executor's rank threads.
 pub struct XlaBackend {
     client: xla::PjRtClient,
     catalog: Catalog,
-    cache: RefCell<HashMap<PathBuf, xla::PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
     fallback: NativeBackend,
-    pub stats: RefCell<XlaStats>,
+    pub stats: Mutex<XlaStats>,
 }
 
 impl XlaBackend {
@@ -44,9 +48,9 @@ impl XlaBackend {
         Ok(XlaBackend {
             client,
             catalog,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
             fallback: NativeBackend,
-            stats: RefCell::new(XlaStats::default()),
+            stats: Mutex::new(XlaStats::default()),
         })
     }
 
@@ -57,24 +61,31 @@ impl XlaBackend {
         Self::new(Path::new(&dir))
     }
 
-    fn executable(&self, path: &Path) -> Result<()> {
-        if self.cache.borrow().contains_key(path) {
-            return Ok(());
+    /// Fetch (lazily compiling) the executable for `path`. Returns a
+    /// cloned handle so the cache lock is *not* held across device
+    /// execution — rank threads of the threaded executor would otherwise
+    /// serialize on it.
+    fn executable(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(Arc::clone(exe));
         }
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
-        self.cache.borrow_mut().insert(path.to_path_buf(), exe);
-        Ok(())
+        let exe = Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?,
+        );
+        // A racing thread may have compiled concurrently; keep whichever
+        // entry wins, the handles are equivalent.
+        Ok(Arc::clone(
+            self.cache.lock().unwrap().entry(path.to_path_buf()).or_insert(exe),
+        ))
     }
 
     fn run(&self, path: &Path, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.executable(path)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(path).unwrap();
+        let exe = self.executable(path)?;
         let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        self.stats.borrow_mut().launches += 1;
+        self.stats.lock().unwrap().launches += 1;
         Ok(result.to_tuple()?)
     }
 }
@@ -126,12 +137,12 @@ impl ComputeBackend for XlaBackend {
             (false, true) => "nt",
             (true, true) => {
                 // never emitted by the phases; keep native
-                self.stats.borrow_mut().fallbacks += 1;
+                self.stats.lock().unwrap().fallbacks += 1;
                 return self.fallback.batched_gemm(dims, a, b, c_data, c_offsets, metrics);
             }
         };
         let Some(entry) = self.catalog.find_gemm(op, m, k, n) else {
-            self.stats.borrow_mut().fallbacks += 1;
+            self.stats.lock().unwrap().fallbacks += 1;
             return self.fallback.batched_gemm(dims, a, b, c_data, c_offsets, metrics);
         };
         let (mp, kp, np_, nbp) = (entry.m, entry.k, entry.n, entry.nb);
@@ -158,7 +169,7 @@ impl ComputeBackend for XlaBackend {
             let out = self.run(&entry.path, &[a_lit, b_lit]).expect("gemm artifact execution");
             let c_full: Vec<f64> = out[0].to_vec().expect("gemm output");
             {
-                let mut st = self.stats.borrow_mut();
+                let mut st = self.stats.lock().unwrap();
                 st.elements_moved += (a_buf.len() + b_buf.len() + c_full.len()) as u64;
             }
             // scatter (unpad) into destinations
@@ -196,7 +207,7 @@ impl ComputeBackend for XlaBackend {
             return;
         }
         let Some(entry) = self.catalog.find_qr(rows, cols) else {
-            self.stats.borrow_mut().fallbacks += 1;
+            self.stats.lock().unwrap().fallbacks += 1;
             return self.fallback.batched_qr(nb, rows, cols, a, q, r, metrics);
         };
         let (rp, cp, nbp) = (entry.rows, entry.cols, entry.nb);
@@ -258,7 +269,7 @@ impl ComputeBackend for XlaBackend {
             return;
         }
         let Some(entry) = self.catalog.find_svd(rows, cols) else {
-            self.stats.borrow_mut().fallbacks += 1;
+            self.stats.lock().unwrap().fallbacks += 1;
             return self.fallback.batched_svd(nb, rows, cols, a, u, s, v, metrics);
         };
         let (rp, cp, nbp) = (entry.rows, entry.cols, entry.nb);

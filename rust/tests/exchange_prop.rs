@@ -1,0 +1,182 @@
+//! Property/fuzz tests for the §4.1 communication-volume-optimized
+//! [`ExchangePlan`]: over randomized geometries, leaf sizes, admissibility
+//! parameters and rank counts, the plan must (a) never exceed the naive
+//! allgather volume, (b) be a perfect send/recv transpose per (level,
+//! rank), and (c) cover every remote source node any owned coupling row
+//! references — the exact guarantee the threaded executor relies on when
+//! it ships x̂ blocks through channels.
+
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::{Decomposition, ExchangePlan};
+use h2opus::geometry::PointSet;
+use h2opus::tree::H2Matrix;
+use h2opus::util::Prng;
+
+/// A randomized point cloud in the unit box.
+fn random_points(rng: &mut Prng, dim: usize, n: usize) -> PointSet {
+    let mut ps = PointSet::new(dim);
+    for _ in 0..n {
+        let mut p = [0.0f64; 3];
+        for coord in p.iter_mut().take(dim) {
+            *coord = rng.uniform();
+        }
+        ps.push(&p[..dim]);
+    }
+    ps
+}
+
+/// One randomized (matrix, decomposition) instance.
+fn random_case(rng: &mut Prng, trial: usize) -> H2Matrix {
+    let dim = if trial % 2 == 0 { 2 } else { 3 };
+    let n = 80 + rng.below(320);
+    let leaf_size = [8usize, 16, 32][rng.below(3)];
+    let eta = rng.range(0.55, 1.4);
+    let corr_len = rng.range(0.05, 0.3);
+    let cfg = H2Config { leaf_size, eta, cheb_grid: 2 };
+    let kernel = ExponentialKernel { dim, corr_len };
+    let points = random_points(rng, dim, n);
+    build_h2(points, &kernel, &cfg)
+}
+
+fn plans_of(a: &H2Matrix) -> Vec<(usize, ExchangePlan)> {
+    [1usize, 2, 4, 8]
+        .into_iter()
+        .filter_map(|p| {
+            let d = Decomposition::new(p, a.depth()).ok()?;
+            Some((p, ExchangePlan::build(a, d)))
+        })
+        .collect()
+}
+
+#[test]
+fn optimized_volume_never_exceeds_naive() {
+    let mut rng = Prng::new(5150);
+    for trial in 0..10 {
+        let a = random_case(&mut rng, trial);
+        for (p, plan) in plans_of(&a) {
+            for r in 0..p {
+                for nv in [1usize, 4] {
+                    let opt = plan.bytes_into(&a, r, nv);
+                    let naive = plan.naive_bytes_into(&a, r, nv);
+                    assert!(
+                        opt <= naive,
+                        "trial {trial} P={p} rank {r} nv={nv}: opt {opt} > naive {naive}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn send_and_recv_are_exact_transposes_per_level_and_rank() {
+    let mut rng = Prng::new(5151);
+    for trial in 0..10 {
+        let a = random_case(&mut rng, trial);
+        for (p, plan) in plans_of(&a) {
+            for (l, le) in plan.levels.iter().enumerate() {
+                assert_eq!(le.recv.len(), p);
+                assert_eq!(le.send.len(), p);
+                // recv -> send direction.
+                for (dst, lists) in le.recv.iter().enumerate() {
+                    for (src, nodes) in lists {
+                        let sent = le.send[*src]
+                            .iter()
+                            .find(|(d2, _)| *d2 == dst)
+                            .map(|(_, n)| n.as_slice());
+                        assert_eq!(
+                            sent,
+                            Some(nodes.as_slice()),
+                            "trial {trial} P={p} level {l}: recv[{dst}] from {src} unmatched"
+                        );
+                    }
+                }
+                // send -> recv direction (no phantom sends), plus volume
+                // symmetry: total nodes shipped equals total received.
+                let mut sent_total = 0usize;
+                let mut recv_total = 0usize;
+                for (src, lists) in le.send.iter().enumerate() {
+                    for (dst, nodes) in lists {
+                        sent_total += nodes.len();
+                        let got = le.recv[*dst]
+                            .iter()
+                            .find(|(s2, _)| *s2 == src)
+                            .map(|(_, n)| n.as_slice());
+                        assert_eq!(
+                            got,
+                            Some(nodes.as_slice()),
+                            "trial {trial} P={p} level {l}: send[{src}] to {dst} unmatched"
+                        );
+                    }
+                }
+                for lists in &le.recv {
+                    recv_total += lists.iter().map(|(_, n)| n.len()).sum::<usize>();
+                }
+                assert_eq!(sent_total, recv_total, "trial {trial} P={p} level {l}");
+            }
+            // messages_into agrees with the per-level recv sets.
+            for r in 0..p {
+                let count: usize = plan.levels.iter().map(|le| le.recv[r].len()).sum();
+                assert_eq!(plan.messages_into(r), count);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_remote_coupling_source_is_covered() {
+    let mut rng = Prng::new(5152);
+    for trial in 0..10 {
+        let a = random_case(&mut rng, trial);
+        for (p, plan) in plans_of(&a) {
+            let d = plan.decomp;
+            for l in 0..=a.depth() {
+                if l < d.c_level {
+                    // Top levels are the master's replicated subtree: the
+                    // plan must not schedule point-to-point traffic there.
+                    for r in 0..p {
+                        assert!(
+                            plan.levels[l].recv[r].is_empty(),
+                            "trial {trial} P={p}: traffic above the C-level"
+                        );
+                    }
+                    continue;
+                }
+                for &(t, s) in &a.coupling[l].pairs {
+                    let pt = d.owner(l, t as usize);
+                    let ps = d.owner(l, s as usize);
+                    if pt == ps {
+                        continue;
+                    }
+                    let covered = plan.levels[l].recv[pt]
+                        .iter()
+                        .any(|(src, nodes)| *src == ps && nodes.binary_search(&s).is_ok());
+                    assert!(
+                        covered,
+                        "trial {trial} P={p} level {l}: row {t} needs node {s} \
+                         from rank {ps}, absent from rank {pt}'s recv set"
+                    );
+                }
+                // And nothing superfluous: every shipped node is actually
+                // referenced by some owned coupling row of the receiver.
+                for r in 0..p {
+                    for (src, nodes) in &plan.levels[l].recv[r] {
+                        for &node in nodes {
+                            let referenced = a.coupling[l].pairs.iter().any(|&(t, s)| {
+                                d.owner(l, t as usize) == r
+                                    && s == node
+                                    && d.owner(l, s as usize) == *src
+                            });
+                            assert!(
+                                referenced,
+                                "trial {trial} P={p} level {l}: rank {r} receives \
+                                 unreferenced node {node} from {src}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

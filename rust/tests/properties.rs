@@ -94,7 +94,7 @@ fn prop_exchange_plans_complete_and_minimal() {
         if a.depth() < p.trailing_zeros() as usize {
             return Ok(()); // tree too shallow for this P
         }
-        let d = Decomposition::new(*p, a.depth());
+        let d = Decomposition::new(*p, a.depth()).unwrap();
         let plan = ExchangePlan::build(&a, d);
         // completeness: every off-diagonal block's column node is receivable
         for (l, cl) in a.coupling.iter().enumerate() {

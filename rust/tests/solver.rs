@@ -1,0 +1,137 @@
+//! Solver-substrate coverage: the Fig. 13 prerequisite that V-cycle
+//! preconditioned CG converges in a mesh-independent number of iterations
+//! as the grid refines (the property that makes the fractional-diffusion
+//! solve O(N) per digit), plus CG behaviour guarantees the app relies on.
+
+use h2opus::solver::cg::{pcg, Identity};
+use h2opus::solver::multigrid::{five_point_operator, Multigrid};
+use h2opus::solver::Csr;
+use h2opus::util::Prng;
+
+fn hierarchy(n0: usize, kappa: &dyn Fn(f64, f64) -> f64, shift: f64) -> Multigrid {
+    let mut ops = Vec::new();
+    let mut sides = Vec::new();
+    let mut n = n0;
+    while n >= 4 {
+        ops.push(five_point_operator(n, -1.0, 1.0, 1.0, shift, kappa));
+        sides.push(n);
+        n /= 2;
+    }
+    Multigrid::new(ops, sides)
+}
+
+fn mg_cg_iterations(n0: usize, kappa: &dyn Fn(f64, f64) -> f64, shift: f64) -> usize {
+    let n = n0 * n0;
+    let a = five_point_operator(n0, -1.0, 1.0, 1.0, shift, kappa);
+    let mut mg = hierarchy(n0, kappa, shift);
+    let mut rng = Prng::new(1300 + n0 as u64);
+    let b = rng.normal_vec(n);
+    let mut x = vec![0.0; n];
+    let mut op = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+    let res = pcg(&mut op, &mut mg, &b, &mut x, 1e-8, 300);
+    assert!(res.converged, "MG-CG must converge on the {n0}x{n0} grid: {res:?}");
+    res.iterations
+}
+
+/// Constant-coefficient Poisson: iteration counts across three grid sizes
+/// must stay flat — the defining property of an optimal preconditioner.
+#[test]
+fn vcycle_cg_iterations_mesh_independent_constant_coefficient() {
+    let kappa = |_: f64, _: f64| 1.0;
+    let iters: Vec<usize> = [16usize, 32, 64].iter().map(|&n0| mg_cg_iterations(n0, &kappa, 0.0)).collect();
+    // Mesh independence: the finest grid may cost at most a small additive
+    // slack over the coarsest, and never more than a fixed constant.
+    assert!(
+        iters[2] <= iters[0] + 5,
+        "iterations grew with refinement: {iters:?}"
+    );
+    assert!(iters.iter().all(|&it| it <= 40), "iteration counts not bounded: {iters:?}");
+}
+
+/// Variable (smooth) coefficients — the regularization operator of the
+/// fractional application has a(x, y) varying over the domain; the V-cycle
+/// must stay mesh independent there too.
+#[test]
+fn vcycle_cg_iterations_mesh_independent_variable_coefficient() {
+    let kappa = |x: f64, y: f64| 1.0 + 0.5 * (x * x + y * y);
+    let iters: Vec<usize> = [16usize, 32, 64].iter().map(|&n0| mg_cg_iterations(n0, &kappa, 0.0)).collect();
+    assert!(
+        iters[2] <= iters[0] + 6,
+        "variable-coefficient iterations grew with refinement: {iters:?}"
+    );
+    assert!(iters.iter().all(|&it| it <= 45), "iteration counts not bounded: {iters:?}");
+}
+
+/// A zeroth-order (shift) term — present in the paper's shifted
+/// regularization operator — only helps conditioning; counts stay flat.
+#[test]
+fn vcycle_cg_iterations_mesh_independent_with_shift() {
+    let kappa = |_: f64, _: f64| 1.0;
+    let iters: Vec<usize> = [16usize, 32, 64].iter().map(|&n0| mg_cg_iterations(n0, &kappa, 1.0)).collect();
+    assert!(iters[2] <= iters[0] + 5, "shifted iterations grew: {iters:?}");
+}
+
+/// The preconditioner must actually pay for itself: on the finest test
+/// grid, MG-CG needs far fewer iterations than unpreconditioned CG, and
+/// both reach the same solution.
+#[test]
+fn vcycle_preconditioner_beats_identity_and_agrees() {
+    let n0 = 64usize;
+    let n = n0 * n0;
+    let kappa = |_: f64, _: f64| 1.0;
+    let a = five_point_operator(n0, -1.0, 1.0, 1.0, 0.0, &kappa);
+    let mut rng = Prng::new(1301);
+    let b = rng.normal_vec(n);
+
+    let mut x_plain = vec![0.0; n];
+    let mut op1 = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+    let plain = pcg(&mut op1, &mut Identity(n), &b, &mut x_plain, 1e-8, 4000);
+
+    let mut x_mg = vec![0.0; n];
+    let mut mg = hierarchy(n0, &kappa, 0.0);
+    let mut op2 = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+    let pre = pcg(&mut op2, &mut mg, &b, &mut x_mg, 1e-8, 4000);
+
+    assert!(plain.converged && pre.converged);
+    assert!(
+        pre.iterations * 4 < plain.iterations,
+        "MG ({}) must beat identity ({}) by >= 4x",
+        pre.iterations,
+        plain.iterations
+    );
+    let diff: f64 = x_plain
+        .iter()
+        .zip(&x_mg)
+        .map(|(p, m)| (p - m) * (p - m))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = x_mg.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(diff / norm < 1e-5, "solutions disagree: rel {}", diff / norm);
+}
+
+/// CG on an SPD system tracks its own residual history faithfully: the
+/// reported final relative residual matches a recomputed one.
+#[test]
+fn cg_residual_history_is_faithful() {
+    let n0 = 32usize;
+    let n = n0 * n0;
+    let a: Csr = five_point_operator(n0, -1.0, 1.0, 1.0, 0.0, &|_, _| 1.0);
+    let mut rng = Prng::new(1302);
+    let b = rng.normal_vec(n);
+    let mut x = vec![0.0; n];
+    let mut op = (n, |v: &[f64], y: &mut [f64]| a.spmv(v, y));
+    let res = pcg(&mut op, &mut Identity(n), &b, &mut x, 1e-9, 4000);
+    assert!(res.converged);
+    let mut ax = vec![0.0; n];
+    a.spmv(&x, &mut ax);
+    let rnorm: f64 =
+        b.iter().zip(&ax).map(|(bi, ai)| (bi - ai) * (bi - ai)).sum::<f64>().sqrt();
+    let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let reported = *res.residuals.last().unwrap();
+    let actual = rnorm / bnorm;
+    assert!(
+        (actual - reported).abs() <= 1e-6 + 0.5 * reported.max(actual),
+        "reported {reported:e} vs recomputed {actual:e}"
+    );
+    assert!(actual <= 1e-8, "recomputed residual too large: {actual:e}");
+}

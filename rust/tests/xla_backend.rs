@@ -96,7 +96,7 @@ fn gemm_accumulate_and_large_batch_chunking() {
         &mut mt,
     );
     assert_allclose(&c_xla, &c_nat, 1e-12, 1e-12, "chunked accumulate gemm");
-    assert!(xla.stats.borrow().launches >= 3, "expected chunked launches");
+    assert!(xla.stats.lock().unwrap().launches >= 3, "expected chunked launches");
 }
 
 #[test]
@@ -152,7 +152,7 @@ fn full_hgemv_on_xla_backend() {
         let err = rel_err(&y_xla, &y_nat);
         assert!(err < 1e-11, "nv={nv}: XLA vs native hgemv err {err}");
     }
-    assert_eq!(xla.stats.borrow().fallbacks, 0, "hgemv should never fall back");
+    assert_eq!(xla.stats.lock().unwrap().fallbacks, 0, "hgemv should never fall back");
 }
 
 #[test]
