@@ -2,15 +2,24 @@
 //! growing P, for 2D and 3D test sets and several nv. Expect good scaling
 //! until the local problem becomes too small to hide communication
 //! (paper: limit around 32 GPUs at pN = 2^14). Reports the virtual-time
-//! speedup next to the *measured* wall-clock speedup of the threaded
-//! executor, so the CostModel can be checked against reality. Set
-//! H2OPUS_BENCH_TINY=1 for the CI smoke configuration.
+//! speedup next to the *measured* wall-clock speedup of the real
+//! executor, so the CostModel can be checked against reality.
+//!
+//! Axes: set H2OPUS_BENCH_TINY=1 for the CI smoke configuration; pass
+//! `--transport inproc|socket` to choose the measured executor (`socket`
+//! spawns real `h2opus worker` subprocesses, each holding only its O(N/P)
+//! branch workspace).
+//!
+//! Measured rows (flops, launches, GEMM words) append to
+//! `target/hgemv_strong_rows.json` for `model_check.py --fit`.
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+use h2opus::dist::transport::MatrixJob;
 use h2opus::geometry::PointSet;
+use h2opus::metrics::Metrics;
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
@@ -18,19 +27,86 @@ fn tiny() -> bool {
     std::env::var("H2OPUS_BENCH_TINY").is_ok()
 }
 
-fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize]) {
-    let (points, corr, cfg) = if dim == 2 {
+fn transport() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--transport")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "inproc".into())
+}
+
+fn measure(
+    transport: &str,
+    a: &h2opus::tree::H2Matrix,
+    job: &MatrixJob,
+    p: usize,
+    nv: usize,
+    x: &[f64],
+    y: &mut [f64],
+    runs: usize,
+) -> (f64, Metrics) {
+    match transport {
+        #[cfg(unix)]
+        "socket" => {
+            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+            let opts = SocketOptions {
+                worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+                ..SocketOptions::default()
+            };
+            let mut times = Vec::new();
+            let mut metrics = Metrics::new();
+            for _ in 0..runs {
+                let rep = socket_hgemv(job, p, nv, x, y, &opts).expect("socket transport run");
+                times.push(rep.measured);
+                metrics = rep.metrics;
+            }
+            (trimmed_mean(&times), metrics)
+        }
+        _ => {
+            let _ = job;
+            assert!(
+                transport != "socket",
+                "--transport socket requires Unix domain sockets on this platform"
+            );
+            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+            let mut times = Vec::new();
+            let mut metrics = Metrics::new();
+            for _ in 0..runs {
+                let rep = dist_hgemv(a, &NativeBackend, p, nv, x, y, &topts);
+                times.push(rep.measured.unwrap());
+                metrics = rep.metrics;
+            }
+            (trimmed_mean(&times), metrics)
+        }
+    }
+}
+
+fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mut Vec<String>) {
+    let transport = transport();
+    let (side, cfg, corr) = if dim == 2 {
         let side = (n_target as f64).sqrt().ceil() as usize;
-        (PointSet::grid_2d(side, 1.0), 0.1, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 })
+        (side, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 }, 0.1)
     } else {
         let side = (n_target as f64).cbrt().ceil() as usize;
-        (PointSet::grid_3d(side, 1.0), 0.2, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 })
+        (side, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 }, 0.2)
     };
+    let job = MatrixJob {
+        dim,
+        n_side: side,
+        leaf_size: cfg.leaf_size,
+        eta: cfg.eta,
+        cheb_grid: cfg.cheb_grid,
+        corr_len: corr,
+    };
+    let points =
+        if dim == 2 { PointSet::grid_2d(side, 1.0) } else { PointSet::grid_3d(side, 1.0) };
     let kernel = ExponentialKernel { dim, corr_len: corr };
     let a = build_h2(points, &kernel, &cfg);
     let n = a.n();
     let runs = if tiny() { 3 } else { 5 };
-    println!("\n== {dim}D test set, strong scaling, N = {n} ==");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\n== {dim}D test set, strong scaling, N = {n}, transport = {transport} ==");
     println!(
         "{:>4} {:>4} {:>13} {:>9} {:>13} {:>9} {:>9}",
         "P", "nv", "virt (ms)", "virt spd", "meas (ms)", "meas spd", "eff (%)"
@@ -51,13 +127,7 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize]) {
                 times.push(rep.time);
             }
             let t = trimmed_mean(&times);
-            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
-            let mut measured = Vec::new();
-            for _ in 0..runs {
-                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts);
-                measured.push(rep.measured.unwrap());
-            }
-            let tm = trimmed_mean(&measured);
+            let (tm, mm) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
             let base = *t1.get_or_insert(t);
             let mbase = *m1.get_or_insert(tm);
             println!(
@@ -70,16 +140,26 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize]) {
                 mbase / tm,
                 100.0 * base / t / p as f64
             );
+            rows.push(format!(
+                "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
+                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}}}",
+                mm.flops, mm.batch_launches, mm.gemm_words
+            ));
         }
     }
 }
 
 fn main() {
     println!("E2 / Fig. 10 — HGEMV strong scalability (virtual + measured wall-clock)");
+    let mut rows = Vec::new();
     if tiny() {
-        bench_set(2, 1 << 10, &[1, 2, 4], &[1, 8]);
+        bench_set(2, 1 << 10, &[1, 2, 4], &[1, 8], &mut rows);
     } else {
-        bench_set(2, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64]);
-        bench_set(3, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64]);
+        bench_set(2, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64], &mut rows);
+        bench_set(3, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64], &mut rows);
     }
+    std::fs::create_dir_all("target").ok();
+    let path = "target/hgemv_strong_rows.json";
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing rows");
+    println!("\ncalibration rows written: {path} (fit with python/tests/model_check.py --fit)");
 }

@@ -1,17 +1,28 @@
 //! E1 (Fig. 9): weak scalability of distributed HGEMV.
 //!
 //! Per-rank problem size is held fixed while P grows; reports virtual
-//! time, *measured* wall-clock of the threaded executor, Gflop/s/rank and
+//! time, *measured* wall-clock of the real executor, Gflop/s/rank and
 //! relative efficiency (G_P/G_P0)/(P/P0) for the 2D and 3D kernel test
 //! sets and nv ∈ {1, 16, 64} — the paper's Fig. 9 rows. Protocol: trimmed
-//! mean over repeated runs (§6.1). Set H2OPUS_BENCH_TINY=1 for the CI
-//! smoke configuration (small sizes, fewer repetitions).
+//! mean over repeated runs (§6.1).
+//!
+//! Axes: set H2OPUS_BENCH_TINY=1 for the CI smoke configuration; pass
+//! `--transport inproc|socket` (after `--` under `cargo bench`) to choose
+//! the measured executor — `inproc` runs pooled rank threads, `socket`
+//! spawns real `h2opus worker` subprocesses with O(N/P) memory each.
+//!
+//! Every measured row (with its executed flops, batch launches and GEMM
+//! word traffic) is appended to `target/hgemv_weak_rows.json`, which
+//! `python/tests/model_check.py --fit` uses to calibrate the CostModel
+//! constants for this machine.
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+use h2opus::dist::transport::MatrixJob;
 use h2opus::geometry::PointSet;
+use h2opus::metrics::Metrics;
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
@@ -19,23 +30,92 @@ fn tiny() -> bool {
     std::env::var("H2OPUS_BENCH_TINY").is_ok()
 }
 
-fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
-    println!("\n== {dim}D exponential kernel, weak scaling, pN = {local_n}/rank ==");
+fn transport() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--transport")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "inproc".into())
+}
+
+/// Measured wall-clock (trimmed mean) + executed counters on the chosen
+/// transport.
+fn measure(
+    transport: &str,
+    a: &h2opus::tree::H2Matrix,
+    job: &MatrixJob,
+    p: usize,
+    nv: usize,
+    x: &[f64],
+    y: &mut [f64],
+    runs: usize,
+) -> (f64, Metrics) {
+    match transport {
+        #[cfg(unix)]
+        "socket" => {
+            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+            let opts = SocketOptions {
+                worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+                ..SocketOptions::default()
+            };
+            let mut times = Vec::new();
+            let mut metrics = Metrics::new();
+            for _ in 0..runs {
+                let rep = socket_hgemv(job, p, nv, x, y, &opts).expect("socket transport run");
+                times.push(rep.measured);
+                metrics = rep.metrics;
+            }
+            (trimmed_mean(&times), metrics)
+        }
+        _ => {
+            let _ = job;
+            assert!(
+                transport != "socket",
+                "--transport socket requires Unix domain sockets on this platform"
+            );
+            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+            let mut times = Vec::new();
+            let mut metrics = Metrics::new();
+            for _ in 0..runs {
+                let rep = dist_hgemv(a, &NativeBackend, p, nv, x, y, &topts);
+                times.push(rep.measured.unwrap());
+                metrics = rep.metrics;
+            }
+            (trimmed_mean(&times), metrics)
+        }
+    }
+}
+
+fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut Vec<String>) {
+    let transport = transport();
+    println!("\n== {dim}D exponential kernel, weak scaling, pN = {local_n}/rank, transport = {transport} ==");
     println!(
         "{:>4} {:>9} {:>4} {:>13} {:>13} {:>14} {:>11} {:>12}",
         "P", "N", "nv", "virt (ms)", "meas (ms)", "Gflop/s/rank", "eff (%)", "comm (KiB)"
     );
     let runs = if tiny() { 3 } else { 5 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut base_rate: Vec<Option<f64>> = vec![None; nvs.len()];
     for &p in ps {
         let n_target = local_n * p;
-        let (points, corr, cfg) = if dim == 2 {
+        let (side, cfg, corr) = if dim == 2 {
             let side = (n_target as f64).sqrt().ceil() as usize;
-            (PointSet::grid_2d(side, 1.0), 0.1, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 })
+            (side, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 }, 0.1)
         } else {
             let side = (n_target as f64).cbrt().ceil() as usize;
-            (PointSet::grid_3d(side, 1.0), 0.2, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 })
+            (side, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 }, 0.2)
         };
+        let job = MatrixJob {
+            dim,
+            n_side: side,
+            leaf_size: cfg.leaf_size,
+            eta: cfg.eta,
+            cheb_grid: cfg.cheb_grid,
+            corr_len: corr,
+        };
+        let points =
+            if dim == 2 { PointSet::grid_2d(side, 1.0) } else { PointSet::grid_3d(side, 1.0) };
         let kernel = ExponentialKernel { dim, corr_len: corr };
         let a = build_h2(points, &kernel, &cfg);
         if a.depth() < p.trailing_zeros() as usize {
@@ -57,15 +137,9 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
                 comm = rep.recv_bytes;
             }
             let t = trimmed_mean(&times);
-            // Measured wall-clock of the real OS-thread executor on the
-            // same (matrix, P, nv) — the reality the virtual time models.
-            let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
-            let mut measured = Vec::new();
-            for _ in 0..runs {
-                let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts);
-                measured.push(rep.measured.unwrap());
-            }
-            let tm = trimmed_mean(&measured);
+            // Measured wall-clock of the real executor on the same
+            // (matrix, P, nv) — the reality the virtual time models.
+            let (tm, mm) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
             let rate = flops as f64 / t / 1e9 / p as f64;
             let eff = match base_rate[nvi] {
                 None => {
@@ -85,17 +159,27 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize]) {
                 eff,
                 comm as f64 / 1024.0
             );
+            rows.push(format!(
+                "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
+                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}}}",
+                mm.flops, mm.batch_launches, mm.gemm_words
+            ));
         }
     }
 }
 
 fn main() {
     println!("E1 / Fig. 9 — HGEMV weak scalability (virtual + measured, see DESIGN.md)");
+    let mut rows = Vec::new();
     if tiny() {
-        bench_set(2, 512, &[1, 2, 4], &[1, 8]);
-        bench_set(3, 512, &[1, 2], &[1]);
+        bench_set(2, 512, &[1, 2, 4], &[1, 8], &mut rows);
+        bench_set(3, 512, &[1, 2], &[1], &mut rows);
     } else {
-        bench_set(2, 4096, &[1, 2, 4, 8, 16], &[1, 16, 64]);
-        bench_set(3, 4096, &[1, 2, 4, 8], &[1, 16, 64]);
+        bench_set(2, 4096, &[1, 2, 4, 8, 16], &[1, 16, 64], &mut rows);
+        bench_set(3, 4096, &[1, 2, 4, 8], &[1, 16, 64], &mut rows);
     }
+    std::fs::create_dir_all("target").ok();
+    let path = "target/hgemv_weak_rows.json";
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing rows");
+    println!("\ncalibration rows written: {path} (fit with python/tests/model_check.py --fit)");
 }

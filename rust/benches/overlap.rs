@@ -8,8 +8,12 @@
 //! optimization (compressed vs naive volume), the batched-execution
 //! padding waste, and the *measured vs virtual* times of the threaded
 //! executor (P = 8 and P = 1), all recorded in
-//! `target/overlap_summary.json` for the model-check harness. Set
-//! H2OPUS_BENCH_TINY=1 for the CI smoke configuration.
+//! `target/overlap_summary.json` for the model-check harness. A *measured*
+//! Chrome trace — per-phase `Instant` stamps inside the rank workers plus
+//! the recording transport's per-message stamps — is written to
+//! `target/trace_measured.json` next to the two virtual-schedule traces.
+//! Set H2OPUS_BENCH_TINY=1 for the CI smoke configuration; pass
+//! `--transport inproc|socket` to pick the measured executor.
 
 use h2opus::backend::native::NativeBackend;
 use h2opus::config::{H2Config, NetworkModel};
@@ -43,7 +47,13 @@ fn main() {
         println!("\n-- {label}, nv = {nv} --");
         let mut results = Vec::new();
         for overlap in [false, true] {
-            let opts = DistOptions { net, overlap, trace: true, mode: ExecMode::Virtual };
+            let opts = DistOptions {
+                net,
+                overlap,
+                trace: true,
+                mode: ExecMode::Virtual,
+                ..DistOptions::default()
+            };
             let mut times = Vec::new();
             let mut trace = None;
             for _ in 0..runs {
@@ -69,25 +79,88 @@ fn main() {
         overlap: true,
         trace: false,
         mode: ExecMode::Virtual,
+        ..DistOptions::default()
     };
     let rep = dist_hgemv(&a, &NativeBackend, 8, nv, &x, &mut y, &opts);
     println!("\n(Perfetto traces contain the full Fig. 8-style timelines.)");
 
-    // Measured wall-clock of the real OS-thread executor, P = 8 vs P = 1,
-    // next to the virtual prediction — the CostModel reality check.
-    println!("\n-- measured vs virtual (threaded executor, default network) --");
+    // Measured wall-clock of the real executor, P = 8 vs P = 1, next to
+    // the virtual prediction — the CostModel reality check.
+    let transport = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter()
+            .position(|arg| arg == "--transport")
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| "inproc".into())
+    };
+    println!(
+        "\n-- measured vs virtual (real executor, transport = {transport}, default network) --"
+    );
+    let job = h2opus::dist::transport::MatrixJob {
+        dim: 2,
+        n_side: side,
+        leaf_size: 32,
+        eta: 0.9,
+        cheb_grid: 4,
+        corr_len: 0.1,
+    };
     let mut measured_of = |p: usize| {
         let vopts = DistOptions::default();
-        let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
-        let (mut virts, mut meas) = (Vec::new(), Vec::new());
+        let mut virts = Vec::new();
         for _ in 0..runs {
             virts.push(dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &vopts).time);
-            meas.push(dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts).measured.unwrap());
+        }
+        let mut meas = Vec::new();
+        let _ = &job; // used only by the unix socket arm
+        match transport.as_str() {
+            #[cfg(unix)]
+            "socket" => {
+                use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+                let sopts = SocketOptions {
+                    worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+                    ..SocketOptions::default()
+                };
+                for _ in 0..runs {
+                    let rep =
+                        socket_hgemv(&job, p, nv, &x, &mut y, &sopts).expect("socket transport");
+                    meas.push(rep.measured);
+                }
+            }
+            _ => {
+                assert!(
+                    transport != "socket",
+                    "--transport socket requires Unix domain sockets on this platform"
+                );
+                let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+                for _ in 0..runs {
+                    meas.push(
+                        dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts)
+                            .measured
+                            .unwrap(),
+                    );
+                }
+            }
         }
         (trimmed_mean(&virts), trimmed_mean(&meas))
     };
     let (virt1, meas1) = measured_of(1);
     let (virt8, meas8) = measured_of(8);
+
+    // The measured Chrome trace (Fig. 8 from reality): per-phase stamps
+    // inside the rank workers + the recording transport's message events.
+    {
+        let topts = DistOptions {
+            mode: ExecMode::Threaded,
+            measured_trace: true,
+            ..DistOptions::default()
+        };
+        let rep = dist_hgemv(&a, &NativeBackend, 8, nv, &x, &mut y, &topts);
+        let path = "target/trace_measured.json";
+        std::fs::create_dir_all("target").ok();
+        std::fs::write(path, rep.measured_trace_json.expect("measured trace requested")).unwrap();
+        println!("  measured trace written: {path}");
+    }
     println!("  P=1: virtual {:.3} ms, measured {:.3} ms", virt1 * 1e3, meas1 * 1e3);
     println!("  P=8: virtual {:.3} ms, measured {:.3} ms", virt8 * 1e3, meas8 * 1e3);
     println!(

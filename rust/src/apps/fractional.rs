@@ -147,7 +147,7 @@ pub fn setup(problem: FractionalProblem, backend: &dyn ComputeBackend) -> Fracti
     let nbig = khat.n();
     let ones = vec![1.0; nbig];
     let mut khat_ones_perm = vec![0.0; nbig];
-    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual };
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual, ..DistOptions::default() };
     crate::dist::hgemv::dist_hgemv(
         &khat,
         backend,
@@ -229,7 +229,7 @@ pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64
     // the original ordering.
     let perm = sys.k.tree.perm.clone();
     let mut ws = HgemvWorkspace::new(&sys.k, 1);
-    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual };
+    let opts = DistOptions { net: NetworkModel::default(), overlap: true, trace: false, mode: ExecMode::Virtual, ..DistOptions::default() };
 
     let mut x_orig = vec![0.0; n];
     let mut cx_orig = vec![0.0; n];

@@ -144,12 +144,20 @@ pub fn orthogonalize_logged_with(
         let mut log_u = PhaseLog::default();
         let mut mt_v = Metrics::new();
         let mut log_v = PhaseLog::default();
-        let (r_u, r_v) = std::thread::scope(|scope| {
+        // Both trees orthogonalize on persistent pool threads (no spawn
+        // cost per product — dist::pool); results return in job order.
+        let (r_u, r_v) = {
             let (mtu, lgu) = (&mut mt_u, &mut log_u);
-            let hu = scope.spawn(move || orthogonalize_tree_logged(u_tree, backend, mtu, lgu));
-            let r_v = orthogonalize_tree_logged(v_tree, backend, &mut mt_v, &mut log_v);
-            (hu.join().expect("U-tree orthogonalization thread panicked"), r_v)
-        });
+            let (mtv, lgv) = (&mut mt_v, &mut log_v);
+            let jobs: Vec<Box<dyn FnOnce() -> LevelR + Send + '_>> = vec![
+                Box::new(move || orthogonalize_tree_logged(u_tree, backend, mtu, lgu)),
+                Box::new(move || orthogonalize_tree_logged(v_tree, backend, mtv, lgv)),
+            ];
+            let mut results = crate::dist::pool::RankPool::global().scoped(jobs);
+            let r_v = results.pop().expect("V-tree R factors");
+            let r_u = results.pop().expect("U-tree R factors");
+            (r_u, r_v)
+        };
         metrics.merge(&mt_u);
         metrics.merge(&mt_v);
         log.entries.extend(log_u.entries);

@@ -422,16 +422,27 @@ pub fn compress_logged_with(
         let mut log_u = PhaseLog::default();
         let mut mt_v = Metrics::new();
         let mut log_v = PhaseLog::default();
-        let (tu, tv) = std::thread::scope(|scope| {
+        // Both sides run on persistent pool threads (no spawn cost per
+        // product — dist::pool), U first, V second; results return in job
+        // order.
+        let (tu, tv) = {
             let (mtu, lgu) = (&mut mt_u, &mut log_u);
-            let hu = scope.spawn(move || {
-                let z_u = weight_downsweep(a, true, backend, mtu, lgu);
-                truncate_tree(a, true, &z_u, tau, backend, mtu, lgu)
-            });
-            let z_v = weight_downsweep(a, false, backend, &mut mt_v, &mut log_v);
-            let tv = truncate_tree(a, false, &z_v, tau, backend, &mut mt_v, &mut log_v);
-            (hu.join().expect("row-tree compression thread panicked"), tv)
-        });
+            let (mtv, lgv) = (&mut mt_v, &mut log_v);
+            let jobs: Vec<Box<dyn FnOnce() -> TruncatedTree + Send + '_>> = vec![
+                Box::new(move || {
+                    let z_u = weight_downsweep(a, true, backend, mtu, lgu);
+                    truncate_tree(a, true, &z_u, tau, backend, mtu, lgu)
+                }),
+                Box::new(move || {
+                    let z_v = weight_downsweep(a, false, backend, mtv, lgv);
+                    truncate_tree(a, false, &z_v, tau, backend, mtv, lgv)
+                }),
+            ];
+            let mut results = crate::dist::pool::RankPool::global().scoped(jobs);
+            let tv = results.pop().expect("column-tree truncation result");
+            let tu = results.pop().expect("row-tree truncation result");
+            (tu, tv)
+        };
         metrics.merge(&mt_u);
         metrics.merge(&mt_v);
         log.entries.extend(log_u.entries);

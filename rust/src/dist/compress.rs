@@ -14,12 +14,13 @@
 //! With [`ExecMode::Threaded`] the pipeline actually executes with the
 //! row/column-tree task parallelism of
 //! [`crate::compression::compress_full_logged_with`] (the U and V sides
-//! mutate disjoint state, so each runs on its own OS thread; results stay
-//! bitwise identical) and the report carries measured wall-clock alongside
-//! the virtual times. Branch-sliced level parallelism is an open item: the
-//! truncation upsweep accumulates sibling contributions into one parent
-//! block inside a single batched GEMM, which a node-range split would
-//! break (see ROADMAP).
+//! mutate disjoint state, so each runs on its own thread — drawn from the
+//! persistent [`crate::dist::pool::RankPool`], so chained products pay no
+//! spawn cost; results stay bitwise identical) and the report carries
+//! measured wall-clock alongside the virtual times. Branch-sliced level
+//! parallelism is an open item: the truncation upsweep accumulates
+//! sibling contributions into one parent block inside a single batched
+//! GEMM, which a node-range split would break (see ROADMAP).
 
 use std::time::Instant;
 

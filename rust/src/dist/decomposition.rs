@@ -93,6 +93,21 @@ impl Decomposition {
         1usize << (self.depth - self.c_level)
     }
 
+    /// Nodes of level l one rank's branch owns: 2^(l-C) (requires l ≥ C).
+    pub fn branch_width(&self, l: usize) -> usize {
+        assert!(l >= self.c_level, "level {l} is above the C-level {}", self.c_level);
+        1usize << (l - self.c_level)
+    }
+
+    /// Branch-local index of node `j` at level l within its owner's
+    /// contiguous range — the rebasing the branch-local marshaling plans
+    /// ([`crate::dist::branch::BranchPlan`]) apply to own-node offsets.
+    pub fn local_index(&self, rank: usize, l: usize, j: usize) -> usize {
+        let own = self.own_range(rank, l);
+        debug_assert!(own.contains(&j), "node {j} at level {l} is not owned by rank {rank}");
+        j - own.start
+    }
+
     pub fn num_ranks(&self) -> usize {
         self.p
     }
@@ -128,6 +143,20 @@ mod tests {
         for l in 0..3 {
             for j in 0..(1 << l) {
                 assert_eq!(d.owner(l, j), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn branch_width_and_local_index_agree_with_own_range() {
+        let d = Decomposition::new(4, 5).unwrap();
+        for l in d.c_level..=d.depth {
+            for r in 0..4 {
+                let own = d.own_range(r, l);
+                assert_eq!(own.len(), d.branch_width(l));
+                for (i, j) in own.enumerate() {
+                    assert_eq!(d.local_index(r, l, j), i);
+                }
             }
         }
     }

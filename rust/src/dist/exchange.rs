@@ -101,6 +101,20 @@ impl ExchangePlan {
     pub fn messages_into(&self, rank: usize) -> usize {
         self.levels.iter().map(|le| le.recv[rank].len()).sum()
     }
+
+    /// The merged, sorted set of remote column nodes `rank` receives at
+    /// `level` — the x̂ halo of its branch-local workspace
+    /// ([`crate::dist::branch::BranchWorkspace`]). Receive sets are
+    /// disjoint across sources (every node has exactly one owner), so the
+    /// concatenation is duplicate-free.
+    pub fn halo_nodes(&self, level: usize, rank: usize) -> Vec<u32> {
+        let mut nodes: Vec<u32> = self.levels[level].recv[rank]
+            .iter()
+            .flat_map(|(_, ns)| ns.iter().copied())
+            .collect();
+        nodes.sort_unstable();
+        nodes
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +191,28 @@ mod tests {
             let plan = ExchangePlan::build(&a, Decomposition::new(p, a.depth()).unwrap());
             for r in 0..p {
                 assert!(plan.bytes_into(&a, r, 3) <= plan.naive_bytes_into(&a, r, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn halo_nodes_are_sorted_disjoint_union_of_recv_sets() {
+        let a = hand_tree();
+        let plan = ExchangePlan::build(&a, Decomposition::new(2, 2).unwrap());
+        for rank in 0..2 {
+            for l in 1..=2 {
+                let halo = plan.halo_nodes(l, rank);
+                let mut expect: Vec<u32> = plan.levels[l].recv[rank]
+                    .iter()
+                    .flat_map(|(_, ns)| ns.iter().copied())
+                    .collect();
+                expect.sort_unstable();
+                expect.dedup();
+                assert_eq!(halo, expect, "rank {rank} level {l}");
+                // Halo nodes are never owned by the receiver.
+                for &n in &halo {
+                    assert_ne!(plan.decomp.owner(l, n as usize), rank);
+                }
             }
         }
     }

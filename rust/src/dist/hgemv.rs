@@ -47,8 +47,14 @@ pub struct DistOptions {
     pub net: NetworkModel,
     /// Overlap the coefficient exchange with local (diagonal) compute.
     pub overlap: bool,
-    /// Collect a Chrome-trace timeline ([`DistReport::trace_json`]).
+    /// Collect a Chrome-trace timeline of the *virtual* schedule
+    /// ([`DistReport::trace_json`]).
     pub trace: bool,
+    /// In [`ExecMode::Threaded`], also collect a *measured* Chrome trace
+    /// from per-phase `Instant` stamps inside the rank workers and the
+    /// recording transport's per-message stamps
+    /// ([`DistReport::measured_trace_json`]).
+    pub measured_trace: bool,
     /// Execute on real OS threads ([`ExecMode::Threaded`]) or replay the
     /// virtual-time simulation ([`ExecMode::Virtual`], the default).
     pub mode: ExecMode,
@@ -60,6 +66,7 @@ impl Default for DistOptions {
             net: NetworkModel::default(),
             overlap: true,
             trace: false,
+            measured_trace: false,
             mode: ExecMode::Virtual,
         }
     }
@@ -121,6 +128,11 @@ pub struct DistReport {
     pub measured: Option<f64>,
     /// Per-rank measured completion offsets ([`ExecMode::Threaded`] only).
     pub measured_per_rank: Option<Vec<f64>>,
+    /// Chrome-trace JSON of the *measured* execution: per-phase spans
+    /// stamped inside the rank workers plus the recording transport's
+    /// per-message events ([`ExecMode::Threaded`] with
+    /// [`DistOptions::measured_trace`]).
+    pub measured_trace_json: Option<String>,
 }
 
 /// A reusable distributed-HGEMV operator: decomposition, marshaling plan
@@ -165,14 +177,17 @@ impl DistHgemv {
         let mut metrics = Metrics::new();
         let mut measured = None;
         let mut measured_per_rank = None;
+        let mut measured_trace_json = None;
 
         match opts.mode {
             ExecMode::Threaded => {
-                // ---- real execution: one OS thread per rank ----
-                let out = run_threaded(self, a, backend, x, y);
+                // ---- real execution: one pooled OS thread per rank over
+                // the in-process transport, branch-local workspaces ----
+                let out = run_threaded(self, a, backend, x, y, opts.measured_trace);
                 metrics = out.metrics;
                 measured = Some(out.measured);
                 measured_per_rank = Some(out.per_rank);
+                measured_trace_json = out.trace_json;
             }
             ExecMode::Virtual => {
                 // ---- numerical execution: the serial phases, sliced per
@@ -246,6 +261,7 @@ impl DistHgemv {
         let mut rep = self.schedule(a, nv, opts, &mut metrics, account_comm);
         rep.measured = measured;
         rep.measured_per_rank = measured_per_rank;
+        rep.measured_trace_json = measured_trace_json;
         rep
     }
 
@@ -429,6 +445,7 @@ impl DistHgemv {
             trace_json: trace.map(|tc| tc.to_json()),
             measured: None,
             measured_per_rank: None,
+            measured_trace_json: None,
         }
     }
 }

@@ -24,10 +24,20 @@
 //!   below the C-level run concurrently at cost/P, levels above serialize
 //!   on the master);
 //! - [`threaded`] — the *real* executor: [`ExecMode::Threaded`] runs each
-//!   rank's branch slice on its own OS thread, exchanging level-C
-//!   coefficients through typed channels driven by the same
-//!   [`ExchangePlan`], bitwise identical to the serial product, and
-//!   reports measured wall-clock alongside the virtual time.
+//!   rank's branch slice on its own pooled OS thread ([`pool`]),
+//!   exchanging level-C coefficients through a pluggable [`transport`]
+//!   driven by the same [`ExchangePlan`], bitwise identical to the serial
+//!   product, and reports measured wall-clock (optionally a measured
+//!   Chrome trace) alongside the virtual time;
+//! - [`branch`] — branch-local marshaling plans and O(N/P) workspaces
+//!   (own nodes + level-C halo), so per-rank memory shrinks with P as the
+//!   paper's distributed format promises;
+//! - [`transport`] — the interconnects: in-process channels
+//!   ([`transport::inproc`]), real worker *subprocesses* over Unix domain
+//!   sockets ([`transport::socket`] — `h2opus worker` ranks with true
+//!   per-process O(N/P) memory), and a recording wrapper
+//!   ([`transport::recording`]) stamping per-message `Instant`s for the
+//!   measured traces.
 //!
 //! # Example
 //!
@@ -59,18 +69,23 @@
 //! }
 //! ```
 
+pub mod branch;
 pub mod compress;
 pub mod decomposition;
 pub mod exchange;
 pub mod hgemv;
+pub mod pool;
 pub mod threaded;
+pub mod transport;
 
 /// Legacy path: the exchange plan has historically been imported through
 /// `dist::plan` (e.g. by the property tests).
 pub use self::exchange as plan;
 
+pub use self::branch::{BranchPlan, BranchWorkspace};
 pub use self::compress::{dist_compress, DistCompressReport};
 pub use self::decomposition::{Decomposition, DecompositionError};
 pub use self::exchange::{ExchangePlan, LevelExchange};
 pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};
+pub use self::pool::RankPool;
 pub use self::threaded::ExecMode;

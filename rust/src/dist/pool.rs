@@ -1,0 +1,226 @@
+//! Persistent rank thread pool.
+//!
+//! The PR-2 executor spawned its rank threads with `std::thread::scope`
+//! *per product*, so a chained workload (CG with the H² operator: one
+//! HGEMV per iteration) paid thread spawn/join latency every iteration.
+//! This pool keeps the rank threads parked between products and replays
+//! the scoped-execution contract on top of them: [`RankPool::scoped`]
+//! blocks until every submitted job has completed, so jobs may borrow
+//! from the caller's stack exactly as `thread::scope` allows.
+//!
+//! One global pool serves the process ([`RankPool::global`]); it grows to
+//! the largest rank count ever requested and never shrinks. `scoped`
+//! holds the pool lock for the duration of a batch, so concurrent
+//! distributed products serialize on the pool (matching the one-
+//! interconnect-per-process reality) — jobs themselves never touch the
+//! pool, so this cannot deadlock.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
+
+/// A type-erased job as stored by the worker channels.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Worker {
+    /// (job, job index, completion signal). The worker drops the job —
+    /// and with it every borrow it captured — *before* signalling, so a
+    /// completed batch holds no references into the caller's stack.
+    tx: Sender<(Job, usize, Sender<usize>)>,
+}
+
+/// A grow-only pool of parked rank threads with scoped (borrow-friendly)
+/// batch execution.
+pub struct RankPool {
+    workers: Mutex<Vec<Worker>>,
+}
+
+static GLOBAL: OnceLock<RankPool> = OnceLock::new();
+
+impl Default for RankPool {
+    fn default() -> Self {
+        RankPool::new()
+    }
+}
+
+impl RankPool {
+    /// An empty pool (grows on first use). Prefer [`RankPool::global`];
+    /// private pools exist for tests and embedders that want isolation.
+    pub fn new() -> RankPool {
+        RankPool { workers: Mutex::new(Vec::new()) }
+    }
+
+    /// The process-wide pool.
+    pub fn global() -> &'static RankPool {
+        GLOBAL.get_or_init(RankPool::new)
+    }
+
+    /// Current number of parked worker threads (observability/tests).
+    pub fn size(&self) -> usize {
+        self.workers.lock().expect("pool lock").len()
+    }
+
+    /// Run every job on its own pool thread (job i on worker i) and block
+    /// until all have finished; results come back in job order. Panics in
+    /// a job are caught on the worker — the worker survives for the next
+    /// product — and re-raised here after the whole batch has completed.
+    ///
+    /// Jobs may borrow non-`'static` data: the borrow cannot outlive this
+    /// call, which only returns once every job has run to completion (the
+    /// same guarantee `std::thread::scope` gives). If a worker dies
+    /// without completing its job the process aborts — continuing would
+    /// leave a live borrow with no owner to wait on.
+    pub fn scoped<'scope, R: Send + 'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> R + Send + 'scope>>,
+    ) -> Vec<R> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let results: Vec<Mutex<Option<std::thread::Result<R>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let (done_tx, done_rx) = channel::<usize>();
+
+        {
+            // Grow to the requested width (never shrink); hold the lock
+            // for the whole batch.
+            let mut workers = self.workers.lock().expect("pool lock");
+            while workers.len() < n {
+                workers.push(spawn_worker(workers.len()));
+            }
+            for (i, job) in jobs.into_iter().enumerate() {
+                let slot = &results[i];
+                // The wrapper catches panics itself, so the worker thread
+                // survives and `f()` never unwinds across the channel loop.
+                let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let outcome = catch_unwind(AssertUnwindSafe(job));
+                    *slot.lock().expect("result slot") = Some(outcome);
+                });
+                // SAFETY: the loop below blocks until every job has
+                // signalled completion (aborting the process if a worker
+                // dies first), and a worker signals only *after* dropping
+                // the job — so every borrow captured by `wrapped` strictly
+                // outlives its use; the closure never escapes this call's
+                // dynamic extent. The transmute only erases the lifetime
+                // so the job fits the worker channel's `'static` item
+                // type.
+                let wrapped: Job = unsafe { std::mem::transmute(wrapped) };
+                if workers[i].tx.send((wrapped, i, done_tx.clone())).is_err() {
+                    // The worker thread is gone and the job it should have
+                    // run was dropped unexecuted — its `done` signal will
+                    // never come; waiting would hang and returning would
+                    // dangle the remaining in-flight borrows.
+                    eprintln!("h2opus rank pool: worker {i} died; aborting");
+                    std::process::abort();
+                }
+            }
+            drop(done_tx);
+            let mut completed = 0usize;
+            while completed < n {
+                match done_rx.recv() {
+                    Ok(_) => completed += 1,
+                    Err(_) => {
+                        eprintln!("h2opus rank pool: worker died mid-batch; aborting");
+                        std::process::abort();
+                    }
+                }
+            }
+            // `workers` (the lock guard) drops here, after the batch.
+        }
+
+        results
+            .into_iter()
+            .map(|slot| {
+                let outcome = slot
+                    .into_inner()
+                    .expect("result slot lock")
+                    .expect("every job completed before the batch returned");
+                match outcome {
+                    Ok(r) => r,
+                    Err(payload) => resume_unwind(payload),
+                }
+            })
+            .collect()
+    }
+}
+
+fn spawn_worker(idx: usize) -> Worker {
+    let (tx, rx) = channel::<(Job, usize, Sender<usize>)>();
+    std::thread::Builder::new()
+        .name(format!("h2opus-rank-{idx}"))
+        .spawn(move || {
+            while let Ok((job, i, done)) = rx.recv() {
+                job();
+                // The job (and every borrow it captured) is dropped before
+                // the completion signal — see `RankPool::scoped`'s SAFETY.
+                let _ = done.send(i);
+            }
+        })
+        .expect("spawning pool worker thread");
+    Worker { tx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scoped_returns_results_in_job_order() {
+        let pool = RankPool::global();
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..6).map(|i| Box::new(move || i * 10) as Box<dyn FnOnce() -> usize + Send>).collect();
+        let out = pool.scoped(jobs);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn scoped_jobs_may_borrow_the_stack() {
+        let data = vec![1.0f64; 128];
+        let sum = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let data = &data;
+                let sum = &sum;
+                Box::new(move || {
+                    sum.fetch_add(data.len(), Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        RankPool::global().scoped(jobs);
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * 128);
+    }
+
+    #[test]
+    fn pool_threads_are_reused_across_batches() {
+        // A private pool: the global one is shared with concurrently
+        // running tests, so its size is not observable race-free.
+        let pool = RankPool::new();
+        let jobs = |n: usize| -> Vec<Box<dyn FnOnce() -> usize + Send>> {
+            (0..n).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect()
+        };
+        pool.scoped(jobs(3));
+        assert_eq!(pool.size(), 3);
+        pool.scoped(jobs(3));
+        assert_eq!(pool.size(), 3, "second batch must reuse parked threads");
+        pool.scoped(jobs(5));
+        assert_eq!(pool.size(), 5, "pool must grow on demand");
+    }
+
+    #[test]
+    fn job_panic_propagates_after_batch() {
+        let result = std::panic::catch_unwind(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("rank job failed")),
+            ];
+            RankPool::global().scoped(jobs);
+        });
+        assert!(result.is_err(), "panic in a job must reach the caller");
+        // The pool survives the panic.
+        let out = RankPool::global()
+            .scoped(vec![Box::new(|| 7usize) as Box<dyn FnOnce() -> usize + Send>]);
+        assert_eq!(out, vec![7]);
+    }
+}

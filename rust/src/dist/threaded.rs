@@ -1,69 +1,83 @@
-//! Real thread-parallel distributed HGEMV executor.
+//! The real distributed HGEMV executor, generic over the transport.
 //!
 //! Where [`crate::dist::hgemv`] *simulates* the paper's §4 runtime (one
 //! loop over virtual ranks, speedups priced by the analytic
 //! [`crate::dist::hgemv::CostModel`]), this module actually executes it:
-//! every virtual rank runs its branch slice of the level/range-scoped
-//! phase functions of [`crate::matvec`] on its own OS thread, and the
-//! level-C basis-coefficient exchanges travel through typed in-process
-//! channels driven by the same [`crate::dist::ExchangePlan`] that prices
-//! the virtual schedule. The wall-clock this measures is what the
-//! CostModel only estimates — `DistReport::measured` vs `DistReport::time`
-//! is the model-vs-reality cross-check (see `python/tests/model_check.py`).
+//! every rank runs its branch slice of the phase functions over a
+//! branch-local O(N/P) workspace ([`crate::dist::branch`]), exchanging
+//! level-C basis coefficients through a pluggable
+//! [`crate::dist::transport::Endpoint`] driven by the same
+//! [`crate::dist::ExchangePlan`] that prices the virtual schedule.
 //!
-//! # Execution plan (per product)
+//! [`run_branch`] / [`run_top_master`] are the transport-generic rank
+//! bodies; [`run_threaded`] instantiates them over the in-process
+//! transport ([`crate::dist::transport::inproc`]) with one pooled OS
+//! thread per rank ([`crate::dist::pool::RankPool`] — threads are parked
+//! between products, so chained products pay no spawn cost), and the
+//! socket transport ([`crate::dist::transport::socket`]) instantiates the
+//! *same* bodies in real worker subprocesses.
 //!
-//! With P ranks and C = log₂P, P branch threads plus (when C > 0) one
-//! master thread are spawned. Each branch rank r:
+//! # Execution plan (per rank r)
 //!
-//! 1. upsweeps its own leaf range and transfer levels down to the C-level
-//!    (all state private to its branch),
-//! 2. sends the x̂ node blocks other ranks' coupling rows reference
-//!    ([`crate::dist::ExchangePlan::build`]'s send sets) and its level-C x̂ block to the
-//!    master (the gather),
-//! 3. runs its dense/diagonal blocks — which need no remote data — while
-//!    the exchange is in flight (§4.2's overlap, for real),
-//! 4. receives its exchange set, multiplies its coupling rows level by
-//!    level, merges the master's level-(C-1) ŷ parent and applies its own
-//!    parity transfer across the C-level boundary,
-//! 5. downsweeps its branch and scatters its disjoint slice of the output.
+//! 1. gather its own + dense-halo input rows (O(N/P));
+//! 2. upsweep its branch with *pipelined sends*: each level's x̂ exchange
+//!    set ships as soon as that level's upsweep transfer finishes (leaf
+//!    level first), not after the whole branch upsweep — deepening the
+//!    §4.2 comm/compute overlap at large P; the level-C block then
+//!    gathers to the master;
+//! 3. run its dense/diagonal blocks — which need no remote coefficients —
+//!    while the exchange is in flight;
+//! 4. receive its exchange set tag-matched (out-of-order safe via
+//!    [`crate::dist::transport::Mailbox`]) into the workspace halo,
+//!    multiply its coupling rows level by level, merge the master's
+//!    level-(C-1) ŷ parent and apply its own C-level boundary transfer;
+//! 5. downsweep its branch and scatter its disjoint slice of the output
+//!    (directly, or as an `Output` message on process transports).
 //!
-//! The master thread gathers the level-C x̂, processes the replicated top
-//! subtree (upsweep above C, top coupling levels, downsweep above C) — the
-//! low-priority stream of Fig. 8 — and scatters each rank's ŷ parent.
+//! The master gathers the level-C x̂, processes the replicated top subtree
+//! over a top-only workspace (O(P), not O(N) —
+//! [`crate::matvec::HgemvWorkspace::top_only`]) and scatters each rank's
+//! ŷ parent.
 //!
-//! # Thread-safety / bitwise-identity argument
+//! # Bitwise-identity argument
 //!
-//! - Every thread owns a private [`HgemvWorkspace`]; the matrix, plans and
-//!   input vector are shared immutably (`ComputeBackend: Sync` makes the
-//!   backend shareable too). No mutable state is shared: remote
-//!   coefficients arrive as owned `Vec<f64>` messages, and the output is
-//!   pre-split into per-rank disjoint `&mut` chunks (branch leaf ranges
-//!   are contiguous in the permuted ordering).
-//! - Each rank executes the *same* phase functions over the *same* branch
-//!   slices in the *same* per-destination order as the serial sweep, on
-//!   bitwise-identical inputs (messages are pure copies). The only
-//!   cross-thread accumulation — the C-level downsweep transfer — is
-//!   applied by the *receiving* rank on top of its own coupling sums via
-//!   [`crate::matvec::downsweep_transfer_parity`], reproducing the serial
-//!   in-place accumulation order exactly. Hence `y` is bitwise identical
-//!   to the serial product for every P.
-//! - Per-rank [`Metrics`] are merged after join in rank order
-//!   ([`Metrics::merge_all`]), so the counters are race-free and
-//!   deterministic.
+//! Each rank executes the *same* per-block GEMMs over the *same* branch
+//! slices in the *same* per-destination order as the serial sweep
+//! ([`crate::dist::branch`] prefilters the conflict-free batches without
+//! reordering), on bitwise-identical inputs (messages are pure copies;
+//! the branch workspace only relocates blocks). The only cross-rank
+//! accumulation — the C-level boundary — is applied by the *receiving*
+//! rank on top of its own coupling sums, reproducing the serial in-place
+//! order. Hence `y` is bitwise identical to the serial product for every
+//! P, on every transport (asserted by `tests/transport.rs`).
+//!
+//! Every rank also stamps an `Instant` around each phase, and the
+//! in-process endpoints are wrapped in
+//! [`crate::dist::transport::recording::Recording`] — so a *measured*
+//! Chrome trace ([`crate::dist::hgemv::DistOptions::measured_trace`]) can
+//! be emitted next to the virtual-schedule trace.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use crate::backend::ComputeBackend;
+use crate::dist::branch::{
+    branch_dense_multiply, branch_downsweep_boundary, branch_downsweep_leaf,
+    branch_downsweep_transfer, branch_tree_multiply, branch_upsweep_leaf,
+    branch_upsweep_transfer, fill_branch_input, unpad_branch_output, BranchPlan, BranchWorkspace,
+};
 use crate::dist::hgemv::DistHgemv;
+use crate::dist::pool::RankPool;
+use crate::dist::transport::recording::{CommEvent, Recording};
+use crate::dist::transport::{inproc, Endpoint, Mailbox, Message, MsgKind, TransportError};
+use crate::dist::{Decomposition, ExchangePlan};
 use crate::matvec::{
-    dense_multiply_range, downsweep_leaf_range, downsweep_transfer_level,
-    downsweep_transfer_parity, pad_leaf_input, tree_multiply_level, unpad_leaf_range,
-    upsweep_leaf_range, upsweep_transfer_level, HgemvWorkspace,
+    downsweep_transfer_level, tree_multiply_level, upsweep_transfer_level, HgemvPlan,
+    HgemvWorkspace,
 };
 use crate::metrics::Metrics;
 use crate::tree::H2Matrix;
+use crate::util::trace::TraceCollector;
 
 /// How the distributed operations execute their numerical work.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -72,69 +86,379 @@ pub enum ExecMode {
     /// time by the analytic cost model (the simulator).
     #[default]
     Virtual,
-    /// One OS thread per virtual rank exchanging level-C coefficients
-    /// through typed channels; reports measured wall-clock alongside the
-    /// virtual schedule.
+    /// One pooled OS thread per virtual rank over the in-process
+    /// transport, branch-local O(N/P) workspaces; reports measured
+    /// wall-clock alongside the virtual schedule. (Real OS-*process*
+    /// ranks are reached through
+    /// [`crate::dist::transport::socket::socket_hgemv`], which reuses the
+    /// same rank bodies.)
     Threaded,
 }
 
-/// The typed messages of the in-process interconnect.
-enum Msg {
-    /// Plan-driven x̂ exchange: the node blocks of `level` that `src` owns
-    /// and the receiver's coupling rows reference, concatenated in the
-    /// plan's (sorted) node order.
-    Xhat { level: usize, src: usize, data: Vec<f64> },
-    /// A rank's level-C x̂ block, gathered to the master.
-    Gather { src: usize, data: Vec<f64> },
-    /// The master's level-(C-1) ŷ block for the receiving rank's parent.
-    Parent { data: Vec<f64> },
+/// Phase ids of the measured per-rank trace. Indexes [`PHASES`].
+pub(crate) const PH_INPUT: usize = 0;
+pub(crate) const PH_UPSWEEP: usize = 1;
+pub(crate) const PH_SEND: usize = 2;
+pub(crate) const PH_DENSE: usize = 3;
+pub(crate) const PH_RECV: usize = 4;
+pub(crate) const PH_MULT: usize = 5;
+pub(crate) const PH_BOUNDARY: usize = 6;
+pub(crate) const PH_DOWNSWEEP: usize = 7;
+pub(crate) const PH_OUTPUT: usize = 8;
+pub(crate) const PH_GATHER: usize = 9;
+pub(crate) const PH_TOP: usize = 10;
+pub(crate) const PH_SCATTER: usize = 11;
+
+/// (name, chrome-trace category) of every phase id.
+pub(crate) const PHASES: &[(&str, &str)] = &[
+    ("input gather", "compute"),
+    ("upsweep", "compute"),
+    ("xhat send", "comm"),
+    ("dense + diagonal mult", "compute"),
+    ("xhat recv", "comm"),
+    ("coupling mult", "compute"),
+    ("boundary merge", "compute"),
+    ("downsweep", "compute"),
+    ("output scatter", "compute"),
+    ("xhat gather", "comm"),
+    ("top subtree", "lowprio"),
+    ("yhat scatter", "comm"),
+];
+
+/// Measured phase spans of one rank: (phase id, start s, duration s),
+/// relative to the product's shared origin instant.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct RankTrace {
+    pub events: Vec<(usize, f64, f64)>,
+}
+
+impl RankTrace {
+    fn push(&mut self, phase: usize, start: f64, end: f64) {
+        self.events.push((phase, start, end - start));
+    }
+}
+
+/// Where a rank's output rows go.
+pub(crate) enum YSink<'a> {
+    /// Write into this disjoint slice of the shared output, whose first
+    /// row is the given base row (in-process transport).
+    Slice(&'a mut [f64], usize),
+    /// Ship them to the master as an `Output` message (process ranks).
+    Send,
 }
 
 /// What the threaded execution hands back to the virtual-time scheduler.
 pub(crate) struct ThreadedOutcome {
-    /// Wall-clock seconds of the parallel section (spawn to join).
+    /// Wall-clock seconds of the parallel section (dispatch to join).
     pub measured: f64,
     /// Per-rank wall-clock completion offsets.
     pub per_rank: Vec<f64>,
     /// Executed-work counters plus actual channel traffic, merged in rank
     /// order (master last).
     pub metrics: Metrics,
+    /// Measured Chrome trace (per-phase spans + recorded messages), when
+    /// requested.
+    pub trace_json: Option<String>,
 }
 
-/// One thread's private context.
-struct Seat<'s> {
-    idx: usize,
-    ws: &'s mut HgemvWorkspace,
-    rx: Receiver<Msg>,
-    tx: Vec<Sender<Msg>>,
-    /// Branch ranks carry their disjoint output chunk and its base row.
-    y: Option<(&'s mut [f64], usize)>,
+/// Ship level `l`'s send sets (pipelined: called as soon as that level's
+/// x̂ is final).
+fn send_level_xhat<E: Endpoint>(
+    a: &H2Matrix,
+    bp: &BranchPlan,
+    bw: &BranchWorkspace,
+    ep: &mut E,
+    metrics: &mut Metrics,
+    l: usize,
+) -> Result<(), TransportError> {
+    let nv = bp.nv;
+    let k = a.v.ranks[l];
+    for (dst, offs) in &bp.sends[l] {
+        let mut data = Vec::with_capacity(offs.len() * k * nv);
+        for &o in offs {
+            data.extend_from_slice(&bw.xhat[l][o..o + k * nv]);
+        }
+        metrics.send(data.len() * 8);
+        ep.send(*dst, Message::new(MsgKind::Xhat, l, bp.rank, data))?;
+    }
+    Ok(())
 }
 
-/// Execute `y = A·x` across real OS threads. `x`/`y` are N × nv in the
-/// permuted ordering, exactly as in the virtual path; the result is
-/// bitwise identical to the serial [`crate::matvec::hgemv`].
+/// One branch rank's slice of the product (steps 1–5 of the module docs),
+/// generic over the transport endpoint.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_branch<E: Endpoint>(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    ex: &ExchangePlan,
+    bp: &BranchPlan,
+    bw: &mut BranchWorkspace,
+    ep: &mut E,
+    mb: &mut Mailbox,
+    x: Option<&[f64]>,
+    y_out: YSink<'_>,
+    t0: Instant,
+) -> Result<(Metrics, RankTrace), TransportError> {
+    let d = ex.decomp;
+    let (p, c, depth) = (d.p, d.c_level, d.depth);
+    let nv = bp.nv;
+    let r = bp.rank;
+    let mut metrics = Metrics::new();
+    let mut trace = RankTrace::default();
+    let now = |t0: &Instant| t0.elapsed().as_secs_f64();
+
+    // 1. Branch-local input (the in-process path gathers from the shared
+    // vector; process ranks received it as their Input message already).
+    if let Some(x) = x {
+        let t = now(&t0);
+        fill_branch_input(a, bp, x, &mut bw.x_pad);
+        trace.push(PH_INPUT, t, now(&t0));
+    }
+
+    // 2. Branch upsweep with pipelined sends: a level's exchange set ships
+    // the moment that level's x̂ is final.
+    let t = now(&t0);
+    branch_upsweep_leaf(a, backend, bp, bw, &mut metrics);
+    trace.push(PH_UPSWEEP, t, now(&t0));
+    let t = now(&t0);
+    send_level_xhat(a, bp, bw, ep, &mut metrics, depth)?;
+    trace.push(PH_SEND, t, now(&t0));
+    for l in ((c + 1)..=depth).rev() {
+        let t = now(&t0);
+        branch_upsweep_transfer(a, backend, bp, bw, &mut metrics, l);
+        trace.push(PH_UPSWEEP, t, now(&t0));
+        let t = now(&t0);
+        send_level_xhat(a, bp, bw, ep, &mut metrics, l - 1)?;
+        trace.push(PH_SEND, t, now(&t0));
+    }
+    if c > 0 {
+        // Level-C gather to the master (own node is local slot 0).
+        let t = now(&t0);
+        let k_c = a.v.ranks[c];
+        let data = bw.xhat[c][0..k_c * nv].to_vec();
+        metrics.send(data.len() * 8);
+        ep.send(p, Message::new(MsgKind::Gather, c, r, data))?;
+        trace.push(PH_SEND, t, now(&t0));
+    }
+
+    // 3. Dense/diagonal blocks need no remote coefficients: execute them
+    // while the exchange is in flight (§4.2's overlap, for real).
+    let t = now(&t0);
+    branch_dense_multiply(a, backend, bp, bw, &mut metrics);
+    trace.push(PH_DENSE, t, now(&t0));
+
+    // 4. Receive the exchange set into the workspace halo, tag-matched
+    // (the master's scatter or a fast peer may overtake — the mailbox
+    // stashes whatever arrives early).
+    let expected = ex.messages_into(r);
+    let t = now(&t0);
+    for _ in 0..expected {
+        let msg = mb.recv_kind(ep, MsgKind::Xhat)?;
+        let l = msg.tag.level as usize;
+        let src = msg.tag.src as usize;
+        let k = a.v.ranks[l];
+        let offs = bp.recv_scatter[l]
+            .iter()
+            .find(|(s, _)| *s == src)
+            .map(|(_, offs)| offs)
+            .ok_or_else(|| {
+                TransportError::Protocol(format!(
+                    "rank {r}: xhat message from {src} at level {l} is outside the exchange plan"
+                ))
+            })?;
+        if msg.data.len() != offs.len() * k * nv {
+            return Err(TransportError::Protocol(format!(
+                "rank {r}: xhat payload from {src} at level {l} has {} values, plan promises {}",
+                msg.data.len(),
+                offs.len() * k * nv
+            )));
+        }
+        for (i, &o) in offs.iter().enumerate() {
+            bw.xhat[l][o..o + k * nv].copy_from_slice(&msg.data[i * k * nv..(i + 1) * k * nv]);
+        }
+    }
+    trace.push(PH_RECV, t, now(&t0));
+
+    // Coupling rows, level by level in serial order.
+    let t = now(&t0);
+    for l in c..=depth {
+        branch_tree_multiply(a, backend, bp, bw, &mut metrics, l);
+    }
+    trace.push(PH_MULT, t, now(&t0));
+
+    // C-level boundary: merge the master's ŷ parent, then apply this
+    // rank's boundary transfer on top of its own coupling sums — the same
+    // in-place accumulation the serial downsweep performs.
+    if c > 0 {
+        let t = now(&t0);
+        let msg = mb.recv_kind(ep, MsgKind::Parent)?;
+        if msg.data.len() != bw.parent.len() {
+            return Err(TransportError::Protocol(format!(
+                "rank {r}: parent payload has {} values, expected {}",
+                msg.data.len(),
+                bw.parent.len()
+            )));
+        }
+        bw.parent.copy_from_slice(&msg.data);
+        branch_downsweep_boundary(a, backend, bp, bw, &mut metrics);
+        trace.push(PH_BOUNDARY, t, now(&t0));
+    }
+
+    // 5. Branch downsweep and the disjoint output scatter.
+    let t = now(&t0);
+    for l in (c + 1)..=depth {
+        branch_downsweep_transfer(a, backend, bp, bw, &mut metrics, l);
+    }
+    branch_downsweep_leaf(a, backend, bp, bw, &mut metrics);
+    trace.push(PH_DOWNSWEEP, t, now(&t0));
+
+    let t = now(&t0);
+    match y_out {
+        YSink::Slice(chunk, base_row) => {
+            unpad_branch_output(a, bp, &bw.y_pad, chunk, base_row);
+        }
+        YSink::Send => {
+            let base_row = a.tree.node(depth, bp.leaf_range.start).start;
+            let end_row = if bp.leaf_range.end == (1usize << depth) {
+                a.n()
+            } else {
+                a.tree.node(depth, bp.leaf_range.end).start
+            };
+            let mut rows = vec![0.0; (end_row - base_row) * nv];
+            unpad_branch_output(a, bp, &bw.y_pad, &mut rows, base_row);
+            metrics.send(rows.len() * 8);
+            ep.send(p, Message::new(MsgKind::Output, 0, r, rows))?;
+        }
+    }
+    trace.push(PH_OUTPUT, t, now(&t0));
+
+    Ok((metrics, trace))
+}
+
+/// The master's side: level-C gather, replicated top subtree over a
+/// top-only workspace, ŷ parent scatter. Generic over the transport.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_top_master<E: Endpoint>(
+    a: &H2Matrix,
+    backend: &dyn ComputeBackend,
+    plan: &HgemvPlan,
+    d: Decomposition,
+    ws: &mut HgemvWorkspace,
+    ep: &mut E,
+    mb: &mut Mailbox,
+    t0: Instant,
+) -> Result<(Metrics, RankTrace), TransportError> {
+    let (p, c) = (d.p, d.c_level);
+    debug_assert!(c > 0, "the master only exists when the top subtree does");
+    let nv = plan.nv;
+    let mut metrics = Metrics::new();
+    let mut trace = RankTrace::default();
+    let now = |t0: &Instant| t0.elapsed().as_secs_f64();
+
+    // Gather the level-C x̂ block of every branch rank.
+    let t = now(&t0);
+    let k_c = a.v.ranks[c];
+    for _ in 0..p {
+        let msg = mb.recv_kind(ep, MsgKind::Gather)?;
+        let src = msg.tag.src as usize;
+        if src >= p || msg.data.len() != k_c * nv {
+            return Err(TransportError::Protocol(format!(
+                "master: malformed gather from {src} ({} values, expected {})",
+                msg.data.len(),
+                k_c * nv
+            )));
+        }
+        ws.xhat.levels[c][src * k_c * nv..(src + 1) * k_c * nv].copy_from_slice(&msg.data);
+    }
+    trace.push(PH_GATHER, t, now(&t0));
+
+    // Replicated top subtree (the Fig. 8 low-priority stream).
+    let t = now(&t0);
+    for l in (1..=c).rev() {
+        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+    }
+    for l in 0..c {
+        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
+    }
+    for l in 1..c {
+        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+    }
+    trace.push(PH_TOP, t, now(&t0));
+
+    // Scatter each rank's level-(C-1) ŷ parent; the rank applies the
+    // C-level transfer itself (its node only), so the boundary node's
+    // accumulation order matches the serial sweep bitwise.
+    let t = now(&t0);
+    let k_par = a.u.ranks[c - 1];
+    for r in 0..p {
+        let par = r >> 1;
+        let data = ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].to_vec();
+        metrics.send(data.len() * 8);
+        ep.send(r, Message::new(MsgKind::Parent, 0, p, data))?;
+    }
+    trace.push(PH_SCATTER, t, now(&t0));
+
+    Ok((metrics, trace))
+}
+
+/// Break every peer out of its blocking receive after this endpoint's
+/// rank body failed: a `Shutdown` broadcast turns into
+/// [`TransportError::Closed`] inside their [`Mailbox`] waits, so one
+/// failing rank surfaces as an error at every other instead of a hang.
+fn abort_peers<E: Endpoint>(ep: &mut E, n_eps: usize, src: usize) {
+    for dst in 0..n_eps {
+        if dst != src {
+            let _ = ep.send(dst, Message::new(MsgKind::Shutdown, 0, src, Vec::new()));
+        }
+    }
+}
+
+/// Render the measured Chrome trace from per-rank phase spans plus the
+/// recorded message traffic (pid = rank, the master at pid = P).
+#[allow(clippy::type_complexity)]
+pub(crate) fn measured_trace_json(parts: &[(usize, RankTrace, Vec<CommEvent>)]) -> String {
+    let mut tc = TraceCollector::new();
+    for (pid, tr, comm) in parts {
+        for &(ph, start, dur) in &tr.events {
+            let (name, cat) = PHASES[ph];
+            let tid = match cat {
+                "compute" => 0,
+                "comm" => 1,
+                _ => 2,
+            };
+            tc.add(name, cat, *pid, tid, start, dur);
+        }
+        for e in comm {
+            tc.add(&e.label(), "comm", *pid, 1, e.start, e.dur);
+        }
+    }
+    tc.to_json()
+}
+
+/// Execute `y = A·x` on pooled OS threads over the in-process transport.
+/// `x`/`y` are N × nv in the permuted ordering, exactly as in the virtual
+/// path; the result is bitwise identical to the serial
+/// [`crate::matvec::hgemv`].
 pub(crate) fn run_threaded(
     op: &DistHgemv,
     a: &H2Matrix,
     backend: &dyn ComputeBackend,
     x: &[f64],
     y: &mut [f64],
+    want_trace: bool,
 ) -> ThreadedOutcome {
     let d = op.decomp;
     let (p, c, depth) = (d.p, d.c_level, d.depth);
     let nv = op.plan.nv;
     let has_master = c > 0;
-    let n_threads = p + usize::from(has_master);
 
-    // One channel endpoint per thread: ranks 0..P, master at index P.
-    let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(n_threads);
-    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(n_threads);
-    for _ in 0..n_threads {
-        let (tx, rx) = channel();
-        txs.push(tx);
-        rxs.push(rx);
-    }
+    // Branch plans and O(N/P) workspaces, allocated outside the timed
+    // region: the measurement is of execution, not one-time setup (the
+    // virtual path likewise reuses its workspace across products).
+    let bps: Vec<BranchPlan> =
+        (0..p).map(|r| BranchPlan::build(a, &op.exchange, r, nv)).collect();
+    let mut bws: Vec<BranchWorkspace> = bps.iter().map(|bp| BranchWorkspace::new(a, bp)).collect();
+    let mut top_ws = if has_master { Some(HgemvWorkspace::top_only(a, nv, c)) } else { None };
 
     // Disjoint per-rank output chunks: branch leaf ranges are contiguous
     // point ranges in the permuted ordering, so `y` splits cleanly.
@@ -156,232 +480,105 @@ pub(crate) fn run_threaded(
         debug_assert!(rest.is_empty(), "leaf ranges must cover the output");
     }
 
-    // Workspaces are allocated outside the timed region: the measurement
-    // is of execution, not of one-time buffer setup (the virtual path
-    // likewise reuses workspaces across products). The threads below rely
-    // on these being freshly zeroed — they skip the serial prologue's
-    // redundant clears. (Branch-local, reusable workspaces are a ROADMAP
-    // open item; plan offsets are absolute, so slicing needs plan work.)
-    let mut workspaces: Vec<HgemvWorkspace> =
-        (0..n_threads).map(|_| HgemvWorkspace::new(a, nv)).collect();
-
-    let mut seats: Vec<Seat<'_>> = Vec::with_capacity(n_threads);
-    {
-        let mut y_it = y_chunks.into_iter();
-        let mut rx_it = rxs.into_iter();
-        for (idx, ws) in workspaces.iter_mut().enumerate() {
-            let rx = rx_it.next().expect("one receiver per seat");
-            let y = if idx < p { y_it.next() } else { None };
-            seats.push(Seat { idx, ws, rx, tx: txs.clone(), y });
-        }
-    }
-    drop(txs);
+    let n_eps = p + usize::from(has_master);
+    let eps = inproc::mesh(n_eps);
 
     let t0 = Instant::now();
-    let results: Vec<(Metrics, f64)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = seats
-            .into_iter()
-            .map(|seat| {
-                scope.spawn(move || {
-                    if seat.idx < p {
-                        run_rank(op, a, backend, x, t0, seat)
-                    } else {
-                        run_master(op, a, backend, t0, seat)
+    type RankOut = (Metrics, RankTrace, Vec<CommEvent>, f64);
+    let mut jobs: Vec<Box<dyn FnOnce() -> Result<RankOut, TransportError> + Send + '_>> =
+        Vec::with_capacity(n_eps);
+    {
+        let mut ep_it = eps.into_iter();
+        let mut y_it = y_chunks.into_iter();
+        let ex = &op.exchange;
+        for (bp, bw) in bps.iter().zip(bws.iter_mut()) {
+            let ep = ep_it.next().expect("one endpoint per rank");
+            let (chunk, base_row) = y_it.next().expect("one output chunk per rank");
+            jobs.push(Box::new(move || {
+                // Recording stamps cost two Instant calls per message —
+                // only pay them when the trace was actually requested.
+                let mut rec = if want_trace {
+                    Recording::new(ep, t0)
+                } else {
+                    Recording::passthrough(ep, t0)
+                };
+                let mut mb = Mailbox::new();
+                let r_id = bp.rank;
+                let attempt = catch_unwind(AssertUnwindSafe(|| {
+                    run_branch(
+                        a,
+                        backend,
+                        ex,
+                        bp,
+                        bw,
+                        &mut rec,
+                        &mut mb,
+                        Some(x),
+                        YSink::Slice(chunk, base_row),
+                        t0,
+                    )
+                }));
+                // On any failure, wake the peers before reporting it —
+                // otherwise they block forever on this rank's messages.
+                let out = match attempt {
+                    Ok(out) => out,
+                    Err(payload) => {
+                        abort_peers(&mut rec, n_eps, r_id);
+                        resume_unwind(payload);
                     }
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("executor thread panicked")).collect()
-    });
+                };
+                if out.is_err() {
+                    abort_peers(&mut rec, n_eps, r_id);
+                }
+                let (metrics, tr) = out?;
+                Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))
+            }));
+        }
+        if let Some(tw) = top_ws.as_mut() {
+            let ep = ep_it.next().expect("master endpoint");
+            let plan = &op.plan;
+            jobs.push(Box::new(move || {
+                let mut rec = if want_trace {
+                    Recording::new(ep, t0)
+                } else {
+                    Recording::passthrough(ep, t0)
+                };
+                let mut mb = Mailbox::new();
+                let attempt = catch_unwind(AssertUnwindSafe(|| {
+                    run_top_master(a, backend, plan, d, tw, &mut rec, &mut mb, t0)
+                }));
+                let out = match attempt {
+                    Ok(out) => out,
+                    Err(payload) => {
+                        abort_peers(&mut rec, n_eps, p);
+                        resume_unwind(payload);
+                    }
+                };
+                if out.is_err() {
+                    abort_peers(&mut rec, n_eps, p);
+                }
+                let (metrics, tr) = out?;
+                Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))
+            }));
+        }
+    }
+    let results = RankPool::global().scoped(jobs);
     let measured = t0.elapsed().as_secs_f64();
 
-    let metrics = Metrics::merge_all(results.iter().map(|(m, _)| m));
-    let per_rank: Vec<f64> = results.iter().take(p).map(|&(_, t)| t).collect();
-    ThreadedOutcome { measured, per_rank, metrics }
-}
+    let results: Vec<RankOut> = results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("threaded executor rank failed: {e}")))
+        .collect();
+    let metrics = Metrics::merge_all(results.iter().map(|(m, _, _, _)| m));
+    let per_rank: Vec<f64> = results.iter().take(p).map(|&(_, _, _, t)| t).collect();
+    let trace_json = want_trace.then(|| {
+        let parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = results
+            .into_iter()
+            .enumerate()
+            .map(|(i, (_, tr, comm, _))| (i, tr, comm))
+            .collect();
+        measured_trace_json(&parts)
+    });
 
-/// One branch rank's slice of the product (steps 1–5 of the module docs).
-fn run_rank(
-    op: &DistHgemv,
-    a: &H2Matrix,
-    backend: &dyn ComputeBackend,
-    x: &[f64],
-    t0: Instant,
-    seat: Seat<'_>,
-) -> (Metrics, f64) {
-    let d = op.decomp;
-    let (p, c, depth) = (d.p, d.c_level, d.depth);
-    let plan = &op.plan;
-    let nv = plan.nv;
-    let r = seat.idx;
-    let ws = seat.ws;
-    let mut metrics = Metrics::new();
-
-    // Local branch upsweep (private state only). The full x_pad gather is
-    // needed (dense rows read cross-branch source leaves), but the
-    // coefficient trees and y_pad of this freshly allocated workspace are
-    // already zero — the serial prologue's clears would be redundant
-    // O(N·nv) passes on every rank.
-    pad_leaf_input(a, x, &mut ws.x_pad, nv);
-    upsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-    for l in ((c + 1)..=depth).rev() {
-        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
-    }
-
-    // Plan-driven x̂ sends, then the level-C gather to the master.
-    for l in c..=depth {
-        let k = a.v.ranks[l];
-        for (dst, nodes) in &op.exchange.levels[l].send[r] {
-            let mut data = Vec::with_capacity(nodes.len() * k * nv);
-            for &s in nodes {
-                let s = s as usize;
-                data.extend_from_slice(&ws.xhat.levels[l][s * k * nv..(s + 1) * k * nv]);
-            }
-            metrics.send(data.len() * 8);
-            seat.tx[*dst].send(Msg::Xhat { level: l, src: r, data }).expect("xhat send");
-        }
-    }
-    if c > 0 {
-        let k_c = a.v.ranks[c];
-        let data = ws.xhat.levels[c][r * k_c * nv..(r + 1) * k_c * nv].to_vec();
-        metrics.send(data.len() * 8);
-        seat.tx[p].send(Msg::Gather { src: r, data }).expect("gather send");
-    }
-
-    // Dense/diagonal blocks need no remote data: execute them while the
-    // exchange is in flight. (They write y_pad, disjoint from the ŷ tree,
-    // so reordering them before the coupling phase keeps every memory
-    // location's accumulation order — and hence the result — bitwise equal
-    // to the serial sweep.)
-    dense_multiply_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-
-    // Receive the exchange set (the master's scatter may arrive early —
-    // stash it; channel order across senders is not load-bearing).
-    let expected = op.exchange.messages_into(r);
-    let mut received = 0usize;
-    let mut parent: Option<Vec<f64>> = None;
-    while received < expected {
-        match seat.rx.recv().expect("exchange recv") {
-            Msg::Xhat { level, src, data } => {
-                scatter_xhat(op, a, ws, r, level, src, &data);
-                received += 1;
-            }
-            Msg::Parent { data } => parent = Some(data),
-            Msg::Gather { .. } => unreachable!("gather messages address the master"),
-        }
-    }
-
-    // Coupling rows, level by level in serial order.
-    for l in c..=depth {
-        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l));
-    }
-
-    // C-level boundary: copy the master's ŷ parent into the private tree,
-    // then apply this rank's parity transfer on top of its own coupling
-    // sums — the same in-place accumulation the serial downsweep performs.
-    if c > 0 {
-        let data = parent.unwrap_or_else(|| loop {
-            match seat.rx.recv().expect("parent recv") {
-                Msg::Parent { data } => break data,
-                _ => unreachable!("only the master's scatter is outstanding"),
-            }
-        });
-        let k_par = a.u.ranks[c - 1];
-        let par = r >> 1;
-        ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].copy_from_slice(&data);
-        downsweep_transfer_parity(a, backend, plan, ws, &mut metrics, c, par..par + 1, r & 1);
-    }
-
-    // Branch downsweep and disjoint output scatter.
-    for l in (c + 1)..=depth {
-        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, d.own_range(r, l - 1));
-    }
-    downsweep_leaf_range(a, backend, plan, ws, &mut metrics, d.own_range(r, depth));
-    let (y_chunk, base_row) = seat.y.expect("rank seat carries an output chunk");
-    unpad_leaf_range(a, &ws.y_pad, y_chunk, nv, d.own_range(r, depth), base_row);
-
-    (metrics, t0.elapsed().as_secs_f64())
-}
-
-/// The master thread: level-C gather, replicated top subtree, ŷ scatter.
-fn run_master(
-    op: &DistHgemv,
-    a: &H2Matrix,
-    backend: &dyn ComputeBackend,
-    t0: Instant,
-    seat: Seat<'_>,
-) -> (Metrics, f64) {
-    let d = op.decomp;
-    let (p, c) = (d.p, d.c_level);
-    debug_assert!(c > 0, "the master thread only exists when the top subtree does");
-    let plan = &op.plan;
-    let nv = plan.nv;
-    // The master's workspace is freshly allocated (zeroed) by
-    // `run_threaded`; only the gathered level-C blocks are written below.
-    let ws = seat.ws;
-    let mut metrics = Metrics::new();
-
-    // Gather the level-C x̂ block of every branch rank.
-    let k_c = a.v.ranks[c];
-    let mut received = 0usize;
-    while received < p {
-        match seat.rx.recv().expect("gather recv") {
-            Msg::Gather { src, data } => {
-                ws.xhat.levels[c][src * k_c * nv..(src + 1) * k_c * nv].copy_from_slice(&data);
-                received += 1;
-            }
-            _ => unreachable!("branch ranks only send gathers to the master"),
-        }
-    }
-
-    // Replicated top subtree (the Fig. 8 low-priority stream): upsweep
-    // above the C-level, top coupling levels, downsweep above the C-level.
-    for l in (1..=c).rev() {
-        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
-    }
-    for l in 0..c {
-        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
-    }
-    for l in 1..c {
-        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
-    }
-
-    // Scatter each rank's level-(C-1) ŷ parent. The rank applies the
-    // C-level transfer itself (its parity only), so the boundary node's
-    // accumulation order matches the serial sweep bitwise.
-    let k_par = a.u.ranks[c - 1];
-    for r in 0..p {
-        let par = r >> 1;
-        let data = ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].to_vec();
-        metrics.send(data.len() * 8);
-        seat.tx[r].send(Msg::Parent { data }).expect("parent send");
-    }
-
-    (metrics, t0.elapsed().as_secs_f64())
-}
-
-/// Place a received exchange payload into the private x̂ tree at the node
-/// positions the plan promised (sorted node order, pure copy).
-fn scatter_xhat(
-    op: &DistHgemv,
-    a: &H2Matrix,
-    ws: &mut HgemvWorkspace,
-    r: usize,
-    level: usize,
-    src: usize,
-    data: &[f64],
-) {
-    let k = a.v.ranks[level];
-    let nv = ws.nv;
-    let nodes = op.exchange.levels[level].recv[r]
-        .iter()
-        .find(|(s, _)| *s == src)
-        .map(|(_, nodes)| nodes)
-        .expect("message from a source outside the exchange plan");
-    debug_assert_eq!(data.len(), nodes.len() * k * nv, "payload must match the plan");
-    for (i, &node) in nodes.iter().enumerate() {
-        let node = node as usize;
-        ws.xhat.levels[level][node * k * nv..(node + 1) * k * nv]
-            .copy_from_slice(&data[i * k * nv..(i + 1) * k * nv]);
-    }
+    ThreadedOutcome { measured, per_rank, metrics, trace_json }
 }

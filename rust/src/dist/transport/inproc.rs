@@ -1,0 +1,137 @@
+//! In-process transport: one endpoint per rank over `std::sync::mpsc`
+//! channels, plus a shared `std::sync::Barrier`. This is the PR-2
+//! executor's typed-channel interconnect refactored behind the
+//! [`Endpoint`] trait; ranks are OS threads sharing one address space
+//! (each still computes only on its O(N/P) branch workspace).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use super::{Endpoint, Message, TransportError};
+
+/// One thread's connection to the in-process mesh.
+pub struct InProcEndpoint {
+    id: usize,
+    rx: Receiver<Message>,
+    txs: Vec<Sender<Message>>,
+    barrier: Arc<Barrier>,
+}
+
+/// Build a fully connected mesh of `n` endpoints (ranks `0..n-1`; by the
+/// executors' convention the last one is the master when a top subtree
+/// exists). Each endpoint can send to every other, including itself.
+pub fn mesh(n: usize) -> Vec<InProcEndpoint> {
+    let mut txs: Vec<Sender<Message>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Receiver<Message>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(n));
+    rxs.into_iter()
+        .enumerate()
+        .map(|(id, rx)| InProcEndpoint { id, rx, txs: txs.clone(), barrier: barrier.clone() })
+        .collect()
+}
+
+impl Endpoint for InProcEndpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
+        let tx = self.txs.get(dst).ok_or_else(|| {
+            TransportError::Protocol(format!(
+                "send to unknown endpoint {dst} of {}",
+                self.txs.len()
+            ))
+        })?;
+        tx.send(msg).map_err(|_| {
+            TransportError::Closed(format!("endpoint {dst} dropped its receiver (peer exited)"))
+        })
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        self.rx.recv().map_err(|_| {
+            TransportError::Closed(format!(
+                "all senders to endpoint {} are gone (every peer exited)",
+                self.id
+            ))
+        })
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        self.barrier.wait();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::{Mailbox, MsgKind};
+
+    #[test]
+    fn point_to_point_delivery() {
+        let mut eps = mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, Message::new(MsgKind::Xhat, 3, 0, vec![1.0, 2.0])).unwrap();
+        let m = b.recv().unwrap();
+        assert_eq!(m.tag.kind, MsgKind::Xhat);
+        assert_eq!(m.tag.level, 3);
+        assert_eq!(m.tag.src, 0);
+        assert_eq!(m.data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mailbox_matches_tags_out_of_order() {
+        let mut eps = mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // Delivery order: Xhat L2, Parent, Xhat L3 — consumed in the
+        // opposite order via tag-matched receives.
+        a.send(1, Message::new(MsgKind::Xhat, 2, 0, vec![2.0])).unwrap();
+        a.send(1, Message::new(MsgKind::Parent, 0, 0, vec![9.0])).unwrap();
+        a.send(1, Message::new(MsgKind::Xhat, 3, 0, vec![3.0])).unwrap();
+        let mut mb = Mailbox::new();
+        let p = mb.recv_kind(&mut b, MsgKind::Parent).unwrap();
+        assert_eq!(p.data, vec![9.0]);
+        let x3 = mb.recv_where(&mut b, |t| t.kind == MsgKind::Xhat && t.level == 3).unwrap();
+        assert_eq!(x3.data, vec![3.0]);
+        let x2 = mb.recv_where(&mut b, |t| t.kind == MsgKind::Xhat && t.level == 2).unwrap();
+        assert_eq!(x2.data, vec![2.0]);
+        assert_eq!(mb.stashed(), 0);
+    }
+
+    #[test]
+    fn shutdown_aborts_mailbox_waits() {
+        // A failing rank broadcasts Shutdown; peers blocked in tag-matched
+        // receives must error out instead of waiting forever.
+        let mut eps = mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, Message::new(MsgKind::Shutdown, 0, 0, Vec::new())).unwrap();
+        let mut mb = Mailbox::new();
+        let err = mb.recv_kind(&mut b, MsgKind::Xhat).unwrap_err();
+        assert!(matches!(err, TransportError::Closed(_)));
+        assert!(err.to_string().contains("aborted"), "{err}");
+    }
+
+    #[test]
+    fn closed_peer_is_an_error_not_a_hang() {
+        let mut eps = mesh(2);
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        drop(b); // peer "crashes": its receiver is gone
+        let err = a.send(1, Message::new(MsgKind::Gather, 0, 0, vec![])).unwrap_err();
+        assert!(matches!(err, TransportError::Closed(_)));
+        // a's own receiver: every sender (a's clones went to b) — drop the
+        // remaining sends by dropping a's txs through a fresh mesh instead.
+        let mut eps = mesh(1);
+        let mut solo = eps.pop().unwrap();
+        solo.txs.clear(); // no senders remain
+        assert!(matches!(solo.recv().unwrap_err(), TransportError::Closed(_)));
+    }
+}

@@ -1,0 +1,356 @@
+//! Pluggable rank-to-rank transports for the distributed executor.
+//!
+//! The branch/master runner of [`crate::dist::threaded`] is written against
+//! one small surface — typed, tagged, point-to-point [`Endpoint::send`] /
+//! [`Endpoint::recv`] plus a collective [`Endpoint::barrier`] — carrying
+//! exactly the message sets of the [`crate::dist::ExchangePlan`]. Three
+//! implementations plug in underneath:
+//!
+//! - [`inproc`] — one in-process endpoint per rank over `std::sync::mpsc`
+//!   channels (the PR-2 executor's interconnect, refactored behind the
+//!   trait). Ranks are OS threads of one address space.
+//! - [`socket`] — *real* OS-process ranks: `h2opus worker` subprocesses
+//!   exchanging length-prefixed binary frames over a Unix domain socket
+//!   hub. Each rank holds only its O(N/P) branch workspace
+//!   ([`crate::dist::branch`]), which is the paper's distributed-memory
+//!   claim executed for real.
+//! - [`recording`] — a wrapper endpoint stamping an `Instant` on every
+//!   send/recv, so the measured Chrome trace shows actual message traffic
+//!   next to the per-phase compute spans.
+//!
+//! Delivery is reliable and FIFO per (source, destination) pair, but
+//! *unordered across sources* — the [`Mailbox`] gives the runner
+//! tag-matched receives over that weaker guarantee (e.g. the master's ŷ
+//! scatter may overtake a peer's x̂ block; the mailbox stashes whichever
+//! arrives early).
+
+pub mod inproc;
+pub mod recording;
+#[cfg(unix)]
+pub mod socket;
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::config::H2Config;
+use crate::construct::{build_h2, ExponentialKernel};
+use crate::geometry::PointSet;
+use crate::tree::H2Matrix;
+
+/// A deterministic test-matrix specification that round-trips through
+/// worker CLI flags, so every rank process of the socket transport
+/// rebuilds the identical [`H2Matrix`] (construction involves no
+/// randomness). Lives here (not in [`socket`]) so non-Unix builds and the
+/// CLI can share it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixJob {
+    pub dim: usize,
+    pub n_side: usize,
+    pub leaf_size: usize,
+    pub eta: f64,
+    pub cheb_grid: usize,
+    pub corr_len: f64,
+}
+
+impl MatrixJob {
+    /// The CLI defaults for `dim` (mirrors `h2opus matvec`'s).
+    pub fn defaults(dim: usize, n_side: usize) -> Self {
+        MatrixJob {
+            dim,
+            n_side,
+            leaf_size: 32,
+            eta: if dim == 2 { 0.9 } else { 0.95 },
+            cheb_grid: if dim == 2 { 4 } else { 2 },
+            corr_len: if dim == 2 { 0.1 } else { 0.2 },
+        }
+    }
+
+    /// Number of points (= matrix dimension N) without building anything.
+    pub fn n_points(&self) -> usize {
+        self.n_side.pow(self.dim as u32)
+    }
+
+    /// Build the matrix (bit-identical across processes of one binary).
+    pub fn build(&self) -> H2Matrix {
+        let points = if self.dim == 2 {
+            PointSet::grid_2d(self.n_side, 1.0)
+        } else {
+            PointSet::grid_3d(self.n_side, 1.0)
+        };
+        let kernel = ExponentialKernel { dim: self.dim, corr_len: self.corr_len };
+        let cfg =
+            H2Config { leaf_size: self.leaf_size, eta: self.eta, cheb_grid: self.cheb_grid };
+        build_h2(points, &kernel, &cfg)
+    }
+
+    /// The worker CLI flags encoding this job (f64s print in Rust's
+    /// shortest round-trip form, so parsing recovers the exact bits).
+    pub fn to_args(&self) -> Vec<String> {
+        vec![
+            "--dim".into(),
+            self.dim.to_string(),
+            "--n-side".into(),
+            self.n_side.to_string(),
+            "--leaf-size".into(),
+            self.leaf_size.to_string(),
+            "--eta".into(),
+            self.eta.to_string(),
+            "--g".into(),
+            self.cheb_grid.to_string(),
+            "--corr".into(),
+            self.corr_len.to_string(),
+        ]
+    }
+}
+
+/// The message kinds of the distributed HGEMV protocol (plus the session
+/// bookkeeping kinds the socket transport needs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Worker handshake: announces the sender's rank (socket only).
+    Hello,
+    /// The coordinator's branch-local padded input block (socket only).
+    Input,
+    /// Plan-driven x̂ exchange: the `level` node blocks of `src` that the
+    /// receiver's coupling rows reference, in the plan's sorted node order.
+    Xhat,
+    /// A rank's level-C x̂ block, gathered to the master.
+    Gather,
+    /// The master's level-(C-1) ŷ block for the receiving rank's parent.
+    Parent,
+    /// A rank's disjoint slice of the output vector (socket only).
+    Output,
+    /// A rank's executed-work counters, f64-encoded (socket only).
+    Metrics,
+    /// A rank's phase/comm trace stamps, f64-encoded (socket only).
+    Trace,
+    /// Barrier token (collected and released by the master/hub).
+    Barrier,
+    /// Session end: the coordinator tells a worker to exit (socket only).
+    Shutdown,
+}
+
+impl MsgKind {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            MsgKind::Hello => 0,
+            MsgKind::Input => 1,
+            MsgKind::Xhat => 2,
+            MsgKind::Gather => 3,
+            MsgKind::Parent => 4,
+            MsgKind::Output => 5,
+            MsgKind::Metrics => 6,
+            MsgKind::Trace => 7,
+            MsgKind::Barrier => 8,
+            MsgKind::Shutdown => 9,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<MsgKind> {
+        Some(match v {
+            0 => MsgKind::Hello,
+            1 => MsgKind::Input,
+            2 => MsgKind::Xhat,
+            3 => MsgKind::Gather,
+            4 => MsgKind::Parent,
+            5 => MsgKind::Output,
+            6 => MsgKind::Metrics,
+            7 => MsgKind::Trace,
+            8 => MsgKind::Barrier,
+            9 => MsgKind::Shutdown,
+            _ => return None,
+        })
+    }
+
+    /// Short name for traces and error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            MsgKind::Hello => "hello",
+            MsgKind::Input => "input",
+            MsgKind::Xhat => "xhat",
+            MsgKind::Gather => "gather",
+            MsgKind::Parent => "parent",
+            MsgKind::Output => "output",
+            MsgKind::Metrics => "metrics",
+            MsgKind::Trace => "trace",
+            MsgKind::Barrier => "barrier",
+            MsgKind::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// The (kind, level, source) tag every message carries; receives match on
+/// it, so delivery order across sources is immaterial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tag {
+    pub kind: MsgKind,
+    /// Tree level for `Xhat`; 0 otherwise.
+    pub level: u32,
+    /// Sending endpoint id (rank, or P for the master/hub).
+    pub src: u32,
+}
+
+impl Tag {
+    pub fn new(kind: MsgKind, level: usize, src: usize) -> Self {
+        Tag { kind, level: level as u32, src: src as u32 }
+    }
+}
+
+/// One typed message: a tag plus an owned f64 payload.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub tag: Tag,
+    pub data: Vec<f64>,
+}
+
+impl Message {
+    pub fn new(kind: MsgKind, level: usize, src: usize, data: Vec<f64>) -> Self {
+        Message { tag: Tag::new(kind, level, src), data }
+    }
+
+    /// Wire payload size in bytes (what the metrics counters account).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// Why a transport operation failed. A worker crash surfaces as `Closed`
+/// at every peer still expecting traffic from it — the executors propagate
+/// it instead of hanging.
+#[derive(Clone, Debug)]
+pub enum TransportError {
+    /// The peer (or the whole session) is gone: channel disconnected,
+    /// socket EOF, worker process exited.
+    Closed(String),
+    /// An OS-level I/O failure on the socket transport.
+    Io(String),
+    /// A malformed or out-of-protocol frame.
+    Protocol(String),
+    /// A blocking receive exceeded the session deadline.
+    Timeout(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Closed(d) => write!(f, "transport closed: {d}"),
+            TransportError::Io(d) => write!(f, "transport I/O error: {d}"),
+            TransportError::Protocol(d) => write!(f, "transport protocol error: {d}"),
+            TransportError::Timeout(d) => write!(f, "transport timeout: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// One rank's connection to the interconnect.
+///
+/// Endpoint ids are `0..P` for the branch ranks and `P` for the
+/// master/hub. `barrier` is collective over every endpoint of the
+/// transport and must only be called at quiescent points (no other
+/// traffic in flight), which is how the executors use it.
+pub trait Endpoint: Send {
+    /// This endpoint's id (rank, or P for the master).
+    fn id(&self) -> usize;
+
+    /// Enqueue `msg` for endpoint `dst`. Does not block on the receiver.
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError>;
+
+    /// Blocking receive of the next message, in per-source FIFO order but
+    /// arbitrary cross-source order — match on [`Message::tag`] (see
+    /// [`Mailbox`]).
+    fn recv(&mut self) -> Result<Message, TransportError>;
+
+    /// Collective barrier over all endpoints of this transport.
+    fn barrier(&mut self) -> Result<(), TransportError>;
+}
+
+/// Tag-matched receives over an [`Endpoint`]'s unordered delivery: stashes
+/// messages that do not match the current predicate so they are delivered
+/// to a later matching receive instead of being dropped. One mailbox per
+/// endpoint, owned by the runner.
+#[derive(Default)]
+pub struct Mailbox {
+    stash: VecDeque<Message>,
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Mailbox::default()
+    }
+
+    /// Receive the next message whose tag satisfies `pred`, buffering any
+    /// other traffic that arrives first. A `Shutdown` message aborts the
+    /// wait with [`TransportError::Closed`]: it is how a failing peer
+    /// breaks the others out of their blocking receives (the executors
+    /// broadcast it on error), so a rank failure surfaces as an error at
+    /// every peer instead of a hang — on every transport.
+    pub fn recv_where<E: Endpoint + ?Sized>(
+        &mut self,
+        ep: &mut E,
+        pred: impl Fn(Tag) -> bool,
+    ) -> Result<Message, TransportError> {
+        if let Some(i) = self.stash.iter().position(|m| pred(m.tag)) {
+            return Ok(self.stash.remove(i).expect("position is in range"));
+        }
+        loop {
+            let msg = ep.recv()?;
+            if pred(msg.tag) {
+                return Ok(msg);
+            }
+            if msg.tag.kind == MsgKind::Shutdown {
+                return Err(TransportError::Closed(format!(
+                    "endpoint {} aborted the session",
+                    msg.tag.src
+                )));
+            }
+            self.stash.push_back(msg);
+        }
+    }
+
+    /// Receive the next message of `kind`.
+    pub fn recv_kind<E: Endpoint + ?Sized>(
+        &mut self,
+        ep: &mut E,
+        kind: MsgKind,
+    ) -> Result<Message, TransportError> {
+        self.recv_where(ep, |t| t.kind == kind)
+    }
+
+    /// Number of stashed (received but not yet consumed) messages.
+    pub fn stashed(&self) -> usize {
+        self.stash.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_u8_roundtrip() {
+        for k in [
+            MsgKind::Hello,
+            MsgKind::Input,
+            MsgKind::Xhat,
+            MsgKind::Gather,
+            MsgKind::Parent,
+            MsgKind::Output,
+            MsgKind::Metrics,
+            MsgKind::Trace,
+            MsgKind::Barrier,
+            MsgKind::Shutdown,
+        ] {
+            assert_eq!(MsgKind::from_u8(k.to_u8()), Some(k));
+        }
+        assert_eq!(MsgKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn error_messages_name_the_failure() {
+        let e = TransportError::Closed("rank 2 exited".into());
+        assert!(e.to_string().contains("rank 2 exited"));
+        let e = TransportError::Timeout("no output within 30s".into());
+        assert!(e.to_string().contains("timeout"));
+    }
+}

@@ -1,0 +1,178 @@
+//! A transport wrapper that stamps an [`Instant`] on every send and
+//! receive, so measured Chrome traces can draw the *actual* message
+//! traffic of a product next to the per-phase compute spans (the
+//! virtual-schedule trace only shows the modeled comm).
+//!
+//! The wrapper is transparent: it implements [`Endpoint`] over any inner
+//! endpoint and costs two `Instant::now()` calls per message. Events are
+//! recorded relative to an origin instant shared by every endpoint of the
+//! product (the executor's `t0`), so per-rank streams line up on one
+//! timeline.
+
+use std::time::Instant;
+
+use super::{Endpoint, Message, MsgKind, Tag, TransportError};
+
+/// Direction of a recorded transport operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommDir {
+    Send,
+    Recv,
+}
+
+/// One stamped transport operation.
+#[derive(Clone, Debug)]
+pub struct CommEvent {
+    pub dir: CommDir,
+    pub tag: Tag,
+    /// The peer endpoint (destination for sends; source for receives).
+    pub peer: usize,
+    /// Payload bytes on the wire.
+    pub bytes: usize,
+    /// Seconds since the shared origin at which the operation began.
+    pub start: f64,
+    /// Seconds the operation blocked (receives include the wait).
+    pub dur: f64,
+}
+
+impl CommEvent {
+    /// Display name for trace events, e.g. `send xhat L3 -> 2`.
+    pub fn label(&self) -> String {
+        match self.dir {
+            CommDir::Send => {
+                format!("send {} L{} -> {}", self.tag.kind.name(), self.tag.level, self.peer)
+            }
+            CommDir::Recv => {
+                format!("recv {} L{} <- {}", self.tag.kind.name(), self.tag.level, self.tag.src)
+            }
+        }
+    }
+}
+
+/// The recording wrapper endpoint.
+pub struct Recording<E: Endpoint> {
+    inner: E,
+    origin: Instant,
+    enabled: bool,
+    events: Vec<CommEvent>,
+}
+
+impl<E: Endpoint> Recording<E> {
+    /// Wrap `inner`, timestamping relative to `origin`.
+    pub fn new(inner: E, origin: Instant) -> Self {
+        Recording { inner, origin, enabled: true, events: Vec::new() }
+    }
+
+    /// A disabled wrapper: delegates with no stamping (one branch per
+    /// operation), so executors can keep a single code path without
+    /// paying `Instant` calls inside the measured section when no trace
+    /// was requested.
+    pub fn passthrough(inner: E, origin: Instant) -> Self {
+        Recording { inner, origin, enabled: false, events: Vec::new() }
+    }
+
+    /// The recorded operations, in execution order, consuming the wrapper.
+    pub fn into_events(self) -> Vec<CommEvent> {
+        self.events
+    }
+
+    /// The recorded operations so far.
+    pub fn events(&self) -> &[CommEvent] {
+        &self.events
+    }
+
+    /// Unwrap the inner endpoint, discarding the recorder.
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+impl<E: Endpoint> Endpoint for Recording<E> {
+    fn id(&self) -> usize {
+        self.inner.id()
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
+        if !self.enabled {
+            return self.inner.send(dst, msg);
+        }
+        let tag = msg.tag;
+        let bytes = msg.payload_bytes();
+        let start = self.now();
+        let out = self.inner.send(dst, msg);
+        self.events.push(CommEvent {
+            dir: CommDir::Send,
+            tag,
+            peer: dst,
+            bytes,
+            start,
+            dur: self.now() - start,
+        });
+        out
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        if !self.enabled {
+            return self.inner.recv();
+        }
+        let start = self.now();
+        let msg = self.inner.recv()?;
+        self.events.push(CommEvent {
+            dir: CommDir::Recv,
+            tag: msg.tag,
+            peer: msg.tag.src as usize,
+            bytes: msg.payload_bytes(),
+            start,
+            dur: self.now() - start,
+        });
+        Ok(msg)
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        if !self.enabled {
+            return self.inner.barrier();
+        }
+        let start = self.now();
+        let out = self.inner.barrier();
+        self.events.push(CommEvent {
+            dir: CommDir::Recv,
+            tag: Tag::new(MsgKind::Barrier, 0, self.inner.id()),
+            peer: self.inner.id(),
+            bytes: 0,
+            start,
+            dur: self.now() - start,
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::inproc;
+
+    #[test]
+    fn stamps_sends_and_recvs_in_order() {
+        let origin = Instant::now();
+        let mut eps = inproc::mesh(2).into_iter();
+        let mut a = Recording::new(eps.next().unwrap(), origin);
+        let mut b = Recording::new(eps.next().unwrap(), origin);
+        a.send(1, Message::new(MsgKind::Xhat, 2, 0, vec![1.0, 2.0, 3.0])).unwrap();
+        let m = b.recv().unwrap();
+        assert_eq!(m.data.len(), 3);
+        let ea = a.into_events();
+        assert_eq!(ea.len(), 1);
+        assert_eq!(ea[0].dir, CommDir::Send);
+        assert_eq!(ea[0].bytes, 24);
+        assert!(ea[0].label().contains("send xhat L2 -> 1"));
+        let eb = b.into_events();
+        assert_eq!(eb.len(), 1);
+        assert_eq!(eb[0].dir, CommDir::Recv);
+        assert!(eb[0].start >= 0.0 && eb[0].dur >= 0.0);
+        assert!(eb[0].label().contains("recv xhat L2 <- 0"));
+    }
+}

@@ -1,0 +1,792 @@
+//! Real OS-process ranks over Unix domain sockets.
+//!
+//! [`socket_hgemv`] spawns P `h2opus worker` subprocesses, each of which
+//! rebuilds the (deterministic) test matrix from its [`MatrixJob`] CLI
+//! flags, allocates only its branch-local O(N/P) workspace
+//! ([`crate::dist::branch`]) and runs the *same* rank body
+//! ([`crate::dist::threaded::run_branch`]) as the in-process executor —
+//! so the product is bitwise identical to the serial sweep while no
+//! process ever holds more than its branch (+ level-C halo) of the
+//! workspace. This is the paper's distributed-memory execution made real
+//! within one node.
+//!
+//! # Topology and protocol
+//!
+//! The coordinator is a hub: workers connect to one Unix socket, and a
+//! per-worker reader thread routes each length-prefixed frame to its
+//! destination (another worker's writer thread, or the coordinator's own
+//! master endpoint, id = P). Writer threads drain unbounded in-memory
+//! queues, so routing never blocks on a busy destination — the pipelined
+//! sends of the rank body cannot deadlock on full socket buffers.
+//!
+//! Session shape:
+//!
+//! 1. handshake — each worker sends `Hello{rank}`;
+//! 2. the coordinator ships every worker its branch-local `Input` block
+//!    (own + dense-halo leaf rows only: O(N/P) per rank);
+//! 3. barrier — the measured wall-clock starts at its release;
+//! 4. the distributed product: plan-driven `Xhat` exchanges between
+//!    workers, the level-C `Gather` to the coordinator (which runs the
+//!    replicated top subtree over a top-only workspace), the `Parent`
+//!    scatter back;
+//! 5. each worker ships its `Output` rows, its f64-encoded `Metrics` and
+//!    its measured `Trace` stamps, then parks until the coordinator
+//!    closes the session (EOF).
+//!
+//! A worker crash surfaces as an EOF on its hub connection; the reader
+//! thread converts it into a [`TransportError::Closed`] delivered to the
+//! coordinator, which tears the session down (killing the remaining
+//! children) instead of hanging — asserted by `tests/transport.rs`.
+//!
+//! Framing is a hand-rolled 24-byte little-endian header (kind, level,
+//! src, dst, payload length) plus a raw f64 payload — the offline image
+//! vendors no serde/bincode; the format plays bincode's role.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::recording::{CommDir, CommEvent, Recording};
+use super::{Endpoint, Mailbox, MatrixJob, Message, MsgKind, Tag, TransportError};
+use crate::dist::branch::{fill_branch_input, BranchPlan, BranchWorkspace};
+use crate::dist::threaded::{
+    measured_trace_json, run_branch, run_top_master, RankTrace, YSink,
+};
+use crate::dist::{Decomposition, ExchangePlan};
+use crate::matvec::{HgemvPlan, HgemvWorkspace};
+use crate::metrics::Metrics;
+
+/// Options of one socket session.
+#[derive(Clone, Debug)]
+pub struct SocketOptions {
+    /// The `h2opus` binary to spawn workers from.
+    pub worker_exe: PathBuf,
+    /// Deadline for connection setup and for any blocking receive.
+    pub timeout: Duration,
+    /// Extra environment for the workers (test hooks).
+    pub extra_env: Vec<(String, String)>,
+    /// Collect the measured Chrome trace from the workers' stamps.
+    pub measured_trace: bool,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        SocketOptions {
+            worker_exe: default_worker_exe(),
+            timeout: Duration::from_secs(60),
+            extra_env: Vec::new(),
+            measured_trace: false,
+        }
+    }
+}
+
+/// Best-effort location of the `h2opus` binary for worker spawning: the
+/// current executable when it *is* the CLI, else a sibling named `h2opus`
+/// (test/bench binaries live in `target/<profile>/deps/`, the bin one
+/// directory up). Tests and benches should pass
+/// `env!("CARGO_BIN_EXE_h2opus")` explicitly instead — that also makes
+/// Cargo build the binary.
+pub fn default_worker_exe() -> PathBuf {
+    let me = std::env::current_exe().unwrap_or_else(|_| PathBuf::from("h2opus"));
+    if me.file_stem().is_some_and(|s| s.to_string_lossy().starts_with("h2opus")) {
+        return me;
+    }
+    for dir in [me.parent(), me.parent().and_then(Path::parent)].into_iter().flatten() {
+        let cand = dir.join("h2opus");
+        if cand.exists() {
+            return cand;
+        }
+    }
+    me
+}
+
+/// Outcome of one socket-transport product.
+#[derive(Clone, Debug)]
+pub struct SocketReport {
+    /// Wall-clock seconds from barrier release to the last `Output` row.
+    pub measured: f64,
+    /// Per-rank worker-side wall-clock of the rank body.
+    pub per_rank: Vec<f64>,
+    /// Executed-work counters merged in rank order (coordinator last) —
+    /// actual wire traffic, real flops.
+    pub metrics: Metrics,
+    /// Measured Chrome trace (worker phase stamps + per-message events),
+    /// when [`SocketOptions::measured_trace`].
+    pub measured_trace_json: Option<String>,
+}
+
+// ---------------------------------------------------------------- framing
+
+const HEADER_LEN: usize = 24;
+
+fn io_err(e: std::io::Error, what: &str) -> TransportError {
+    match e.kind() {
+        ErrorKind::UnexpectedEof | ErrorKind::BrokenPipe | ErrorKind::ConnectionReset => {
+            TransportError::Closed(format!("{what}: peer closed ({e})"))
+        }
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            TransportError::Timeout(format!("{what}: {e}"))
+        }
+        _ => TransportError::Io(format!("{what}: {e}")),
+    }
+}
+
+/// Write one frame: header + raw little-endian f64 payload.
+fn write_frame<W: Write>(w: &mut W, dst: usize, msg: &Message) -> Result<(), TransportError> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = msg.tag.kind.to_u8();
+    header[4..8].copy_from_slice(&msg.tag.level.to_le_bytes());
+    header[8..12].copy_from_slice(&msg.tag.src.to_le_bytes());
+    header[12..16].copy_from_slice(&(dst as u32).to_le_bytes());
+    header[16..24].copy_from_slice(&(msg.data.len() as u64).to_le_bytes());
+    w.write_all(&header).map_err(|e| io_err(e, "write header"))?;
+    let mut payload = Vec::with_capacity(msg.data.len() * 8);
+    for v in &msg.data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&payload).map_err(|e| io_err(e, "write payload"))?;
+    w.flush().map_err(|e| io_err(e, "flush"))?;
+    Ok(())
+}
+
+/// Read one frame; returns (destination endpoint, message).
+fn read_frame<R: Read>(r: &mut R) -> Result<(usize, Message), TransportError> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(|e| io_err(e, "read header"))?;
+    let kind = MsgKind::from_u8(header[0])
+        .ok_or_else(|| TransportError::Protocol(format!("unknown message kind {}", header[0])))?;
+    let level = u32::from_le_bytes(header[4..8].try_into().expect("4 bytes"));
+    let src = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
+    let dst = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes")) as usize;
+    let len = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes")) as usize;
+    // 1 GiB payload cap: anything larger is a corrupt frame, not data.
+    if len > (1usize << 27) {
+        return Err(TransportError::Protocol(format!("frame claims {len} f64s")));
+    }
+    let mut payload = vec![0u8; len * 8];
+    r.read_exact(&mut payload).map_err(|e| io_err(e, "read payload"))?;
+    let data = payload
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+        .collect();
+    Ok((dst, Message { tag: Tag { kind, level, src }, data }))
+}
+
+// ------------------------------------------------------------- worker side
+
+/// A worker process's connection to the hub.
+pub struct WorkerEndpoint {
+    rank: usize,
+    p: usize,
+    stream: UnixStream,
+    prestash: VecDeque<Message>,
+}
+
+impl WorkerEndpoint {
+    /// Connect to the coordinator's socket and introduce ourselves.
+    pub fn connect(path: &Path, rank: usize, p: usize) -> Result<Self, TransportError> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let stream = loop {
+            match UnixStream::connect(path) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() > deadline {
+                        return Err(io_err(e, "connect"));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+        let mut ep = WorkerEndpoint { rank, p, stream, prestash: VecDeque::new() };
+        let hello = Message::new(MsgKind::Hello, 0, rank, Vec::new());
+        write_frame(&mut ep.stream, p, &hello)?;
+        Ok(ep)
+    }
+}
+
+impl Endpoint for WorkerEndpoint {
+    fn id(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
+        write_frame(&mut self.stream, dst, &msg)
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        if let Some(m) = self.prestash.pop_front() {
+            return Ok(m);
+        }
+        let (_dst, msg) = read_frame(&mut self.stream)?;
+        Ok(msg)
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        self.send(self.p, Message::new(MsgKind::Barrier, 0, self.rank, Vec::new()))?;
+        loop {
+            let (_dst, msg) = read_frame(&mut self.stream)?;
+            if msg.tag.kind == MsgKind::Barrier {
+                return Ok(());
+            }
+            self.prestash.push_back(msg);
+        }
+    }
+}
+
+fn metrics_to_payload(m: &Metrics, elapsed: f64) -> Vec<f64> {
+    // Counters are exact in f64 up to 2^53 — far beyond any test run.
+    vec![
+        m.flops as f64,
+        m.bytes_sent as f64,
+        m.messages as f64,
+        m.batch_launches as f64,
+        m.pad_waste as f64,
+        m.gemm_words as f64,
+        elapsed,
+    ]
+}
+
+fn metrics_from_payload(data: &[f64]) -> Result<(Metrics, f64), TransportError> {
+    if data.len() != 7 {
+        return Err(TransportError::Protocol(format!(
+            "metrics payload has {} values, expected 7",
+            data.len()
+        )));
+    }
+    let mut m = Metrics::new();
+    m.flops = data[0] as u64;
+    m.bytes_sent = data[1] as u64;
+    m.messages = data[2] as u64;
+    m.batch_launches = data[3] as u64;
+    m.pad_waste = data[4] as u64;
+    m.gemm_words = data[5] as u64;
+    Ok((m, data[6]))
+}
+
+/// Encode (phase stamps + comm events) as flat 6-tuples:
+/// `(code, start, dur, bytes, level, peer)` with phase ids below 100 and
+/// comm ops at `100 + kind·2 + dir` — level and peer preserve the event's
+/// real tag so the re-rendered trace matches the in-process one.
+fn trace_to_payload(tr: &RankTrace, comm: &[CommEvent]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(6 * (tr.events.len() + comm.len()));
+    for &(ph, start, dur) in &tr.events {
+        out.extend_from_slice(&[ph as f64, start, dur, 0.0, 0.0, 0.0]);
+    }
+    for e in comm {
+        let dir = match e.dir {
+            CommDir::Send => 0.0,
+            CommDir::Recv => 1.0,
+        };
+        let code = 100.0 + f64::from(e.tag.kind.to_u8()) * 2.0 + dir;
+        out.extend_from_slice(&[
+            code,
+            e.start,
+            e.dur,
+            e.bytes as f64,
+            f64::from(e.tag.level),
+            e.peer as f64,
+        ]);
+    }
+    out
+}
+
+fn trace_from_payload(
+    data: &[f64],
+    src: usize,
+) -> Result<(RankTrace, Vec<CommEvent>), TransportError> {
+    if data.len() % 6 != 0 {
+        return Err(TransportError::Protocol("trace payload not 6-tuples".into()));
+    }
+    let mut tr = RankTrace::default();
+    let mut comm = Vec::new();
+    for q in data.chunks_exact(6) {
+        let code = q[0] as usize;
+        if code < 100 {
+            tr.events.push((code, q[1], q[2]));
+        } else {
+            let kind = MsgKind::from_u8(((code - 100) / 2) as u8).ok_or_else(|| {
+                TransportError::Protocol(format!("trace comm code {code} has no kind"))
+            })?;
+            let dir = if (code - 100) % 2 == 0 { CommDir::Send } else { CommDir::Recv };
+            // Receives carry the true source in their tag; sends name the
+            // destination through `peer`.
+            let tag_src = if dir == CommDir::Recv { q[5] as usize } else { src };
+            comm.push(CommEvent {
+                dir,
+                tag: Tag { kind, level: q[4] as u32, src: tag_src as u32 },
+                peer: q[5] as usize,
+                bytes: q[3] as usize,
+                start: q[1],
+                dur: q[2],
+            });
+        }
+    }
+    Ok((tr, comm))
+}
+
+/// The body of the `h2opus worker` subcommand: one process rank of a
+/// socket session. Blocks until the coordinator closes the session.
+pub fn run_worker(
+    job: &MatrixJob,
+    connect: &Path,
+    rank: usize,
+    p: usize,
+    nv: usize,
+) -> Result<(), TransportError> {
+    let a = job.build();
+    let d = Decomposition::new(p, a.depth())
+        .map_err(|e| TransportError::Protocol(e.to_string()))?;
+    let ex = ExchangePlan::build(&a, d);
+    let bp = BranchPlan::build(&a, &ex, rank, nv);
+    let mut bw = BranchWorkspace::new(&a, &bp);
+    let backend = crate::backend::native::NativeBackend;
+
+    let mut ep = WorkerEndpoint::connect(connect, rank, p)?;
+
+    // Test hook: simulate a rank crash right after the handshake, so the
+    // coordinator's error propagation (not-a-hang) can be asserted.
+    if let Ok(v) = std::env::var("H2OPUS_TEST_CRASH_RANK") {
+        if v.parse::<usize>() == Ok(rank) {
+            std::process::exit(3);
+        }
+    }
+
+    // Branch-local input: the only rows this process ever holds. The
+    // message's level field carries the session flags (bit 0: record a
+    // measured trace).
+    let mut mb = Mailbox::new();
+    let input = mb.recv_kind(&mut ep, MsgKind::Input)?;
+    if input.data.len() != bw.x_pad.len() {
+        return Err(TransportError::Protocol(format!(
+            "rank {rank}: input block has {} values, branch plan expects {}",
+            input.data.len(),
+            bw.x_pad.len()
+        )));
+    }
+    bw.x_pad.copy_from_slice(&input.data);
+    let record = input.tag.level & 1 == 1;
+
+    // The measured section starts at the barrier release on every side.
+    ep.barrier()?;
+    let t0 = Instant::now();
+    let mut rec =
+        if record { Recording::new(ep, t0) } else { Recording::passthrough(ep, t0) };
+    let (metrics, tr) =
+        run_branch(&a, &backend, &ex, &bp, &mut bw, &mut rec, &mut mb, None, YSink::Send, t0)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let comm = rec.events().to_vec();
+    let mut ep = rec.into_inner();
+
+    ep.send(p, Message::new(MsgKind::Metrics, 0, rank, metrics_to_payload(&metrics, elapsed)))?;
+    if record {
+        ep.send(p, Message::new(MsgKind::Trace, 0, rank, trace_to_payload(&tr, &comm)))?;
+    }
+
+    // Park until the coordinator ends the session — an explicit Shutdown
+    // on a clean run, EOF if the coordinator died.
+    loop {
+        match ep.recv() {
+            Ok(msg) if msg.tag.kind == MsgKind::Shutdown => return Ok(()),
+            Ok(_) => continue,
+            Err(TransportError::Closed(_)) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// -------------------------------------------------------- coordinator side
+
+/// The coordinator's hub endpoint (id = P): sends route through the
+/// per-worker writer queues, receives come from the reader threads.
+struct HubEndpoint {
+    p: usize,
+    rx: Receiver<Result<Message, TransportError>>,
+    out_txs: Vec<Sender<Message>>,
+    timeout: Duration,
+    prestash: VecDeque<Message>,
+}
+
+impl Endpoint for HubEndpoint {
+    fn id(&self) -> usize {
+        self.p
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
+        let tx = self.out_txs.get(dst).ok_or_else(|| {
+            TransportError::Protocol(format!("hub send to unknown rank {dst}"))
+        })?;
+        tx.send(msg)
+            .map_err(|_| TransportError::Closed(format!("worker {dst} writer is gone")))
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        if let Some(m) = self.prestash.pop_front() {
+            return Ok(m);
+        }
+        match self.rx.recv_timeout(self.timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout(format!(
+                "no worker message within {:?}",
+                self.timeout
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TransportError::Closed("all worker readers exited".into()))
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        let mut seen = 0usize;
+        while seen < self.p {
+            let msg = self.recv()?;
+            if msg.tag.kind == MsgKind::Barrier {
+                seen += 1;
+            } else {
+                self.prestash.push_back(msg);
+            }
+        }
+        for r in 0..self.p {
+            self.send(r, Message::new(MsgKind::Barrier, 0, self.p, Vec::new()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Kills the remaining worker processes when the session ends (normally
+/// they exit on EOF first; on errors this prevents orphans and hangs).
+struct ChildGuard {
+    children: Vec<(usize, Child)>,
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for (_, child) in &mut self.children {
+            // A clean worker already exited; only stragglers get killed.
+            match child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+        }
+    }
+}
+
+/// Removes the socket file when the session ends.
+struct SocketFileGuard(PathBuf);
+
+impl Drop for SocketFileGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+static SESSION_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// y = A·x across P real worker subprocesses (see the module docs for the
+/// session protocol). `x`/`y` are N × nv in the permuted ordering, as in
+/// [`crate::matvec::hgemv`]; the result is bitwise identical to the
+/// serial product. The matrix is specified as a [`MatrixJob`] so every
+/// worker can rebuild it deterministically.
+pub fn socket_hgemv(
+    job: &MatrixJob,
+    p: usize,
+    nv: usize,
+    x: &[f64],
+    y: &mut [f64],
+    opts: &SocketOptions,
+) -> Result<SocketReport, TransportError> {
+    let a = job.build();
+    let d = Decomposition::new(p, a.depth())
+        .map_err(|e| TransportError::Protocol(e.to_string()))?;
+    let c = d.c_level;
+    let n = a.n();
+    if x.len() != n * nv || y.len() != n * nv {
+        return Err(TransportError::Protocol(format!(
+            "x/y must be N*nv = {} values (got {}, {})",
+            n * nv,
+            x.len(),
+            y.len()
+        )));
+    }
+    let ex = ExchangePlan::build(&a, d);
+    let bps: Vec<BranchPlan> = (0..p).map(|r| BranchPlan::build(&a, &ex, r, nv)).collect();
+    let backend = crate::backend::native::NativeBackend;
+
+    // Session socket.
+    let sock_path = std::env::temp_dir().join(format!(
+        "h2opus-{}-{}.sock",
+        std::process::id(),
+        SESSION_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_file(&sock_path);
+    let listener = UnixListener::bind(&sock_path).map_err(|e| io_err(e, "bind"))?;
+    listener.set_nonblocking(true).map_err(|e| io_err(e, "listener nonblocking"))?;
+    let _sock_guard = SocketFileGuard(sock_path.clone());
+
+    // Spawn the worker ranks (the guard owns them from the first spawn on,
+    // so any early error kills the already-started ones).
+    let mut guard = ChildGuard { children: Vec::with_capacity(p) };
+    for r in 0..p {
+        let mut cmd = Command::new(&opts.worker_exe);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(&sock_path)
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--ranks")
+            .arg(p.to_string())
+            .arg("--nv")
+            .arg(nv.to_string())
+            .args(job.to_args())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        for (k, v) in &opts.extra_env {
+            cmd.env(k, v);
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| TransportError::Io(format!("spawning worker {r}: {e}")))?;
+        guard.children.push((r, child));
+    }
+
+    // Accept + handshake, with the session deadline and early-exit
+    // detection (a worker that dies before connecting must not hang us).
+    let deadline = Instant::now() + opts.timeout;
+    let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+    let mut accepted = 0usize;
+    while accepted < p {
+        match listener.accept() {
+            Ok((mut s, _addr)) => {
+                s.set_nonblocking(false).map_err(|e| io_err(e, "stream blocking"))?;
+                s.set_read_timeout(Some(opts.timeout))
+                    .map_err(|e| io_err(e, "stream timeout"))?;
+                let (_dst, hello) = read_frame(&mut s)?;
+                if hello.tag.kind != MsgKind::Hello {
+                    return Err(TransportError::Protocol(format!(
+                        "expected hello, got {}",
+                        hello.tag.kind.name()
+                    )));
+                }
+                let r = hello.tag.src as usize;
+                if r >= p || streams[r].is_some() {
+                    return Err(TransportError::Protocol(format!("bad hello rank {r}")));
+                }
+                // Reader threads block for as long as a rank computes; the
+                // session deadline is enforced at the hub's receive side.
+                s.set_read_timeout(None).map_err(|e| io_err(e, "clear timeout"))?;
+                streams[r] = Some(s);
+                accepted += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                for (r, child) in &mut guard.children {
+                    if streams[*r].is_none() {
+                        if let Ok(Some(status)) = child.try_wait() {
+                            return Err(TransportError::Closed(format!(
+                                "worker {r} exited during handshake ({status})"
+                            )));
+                        }
+                    }
+                }
+                if Instant::now() > deadline {
+                    return Err(TransportError::Timeout(format!(
+                        "{accepted}/{p} workers connected within {:?}",
+                        opts.timeout
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(io_err(e, "accept")),
+        }
+    }
+
+    // Router: per worker one writer thread (unbounded queue out) and one
+    // reader thread (frames in, routed by destination), so routing never
+    // blocks on a busy destination's socket buffer — the pipelined sends
+    // cannot deadlock.
+    let (master_tx, master_rx) = channel::<Result<Message, TransportError>>();
+    let mut out_txs: Vec<Sender<Message>> = Vec::with_capacity(p);
+    let mut out_rxs: Vec<Receiver<Message>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel::<Message>();
+        out_txs.push(tx);
+        out_rxs.push(rx);
+    }
+    let mut router_threads = Vec::with_capacity(2 * p);
+    for (w, (slot, out_rx)) in streams.into_iter().zip(out_rxs).enumerate() {
+        let read_half = slot.expect("all workers accepted");
+        let mut write_half = read_half.try_clone().map_err(|e| io_err(e, "clone stream"))?;
+        router_threads.push(
+            std::thread::Builder::new()
+                .name(format!("h2opus-writer-{w}"))
+                .spawn(move || {
+                    while let Ok(msg) = out_rx.recv() {
+                        if write_frame(&mut write_half, w, &msg).is_err() {
+                            break; // the reader side surfaces the failure
+                        }
+                    }
+                })
+                .map_err(|e| TransportError::Io(format!("spawning writer {w}: {e}")))?,
+        );
+        let fwd_txs = out_txs.clone();
+        let to_master = master_tx.clone();
+        let mut read_half = read_half;
+        router_threads.push(
+            std::thread::Builder::new()
+                .name(format!("h2opus-reader-{w}"))
+                .spawn(move || loop {
+                    match read_frame(&mut read_half) {
+                        Ok((dst, msg)) => {
+                            if dst == p {
+                                if to_master.send(Ok(msg)).is_err() {
+                                    break; // session over
+                                }
+                            } else if dst < p {
+                                if fwd_txs[dst].send(msg).is_err() {
+                                    break; // session over
+                                }
+                            } else {
+                                let _ = to_master.send(Err(TransportError::Protocol(
+                                    format!("worker {w} addressed unknown endpoint {dst}"),
+                                )));
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            // EOF after a clean session is consumed by
+                            // nobody; during the session it propagates.
+                            let _ = to_master.send(Err(TransportError::Closed(format!(
+                                "worker {w}: {e}"
+                            ))));
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| TransportError::Io(format!("spawning reader {w}: {e}")))?,
+        );
+    }
+    drop(master_tx);
+    let mut hub = HubEndpoint {
+        p,
+        rx: master_rx,
+        out_txs,
+        timeout: opts.timeout,
+        prestash: VecDeque::new(),
+    };
+
+    // Ship every worker its branch-local input block (O(N/P) rows each);
+    // the level field carries the session flags (bit 0: record a trace).
+    let flags = usize::from(opts.measured_trace);
+    for (r, bp) in bps.iter().enumerate() {
+        let mut buf = vec![0.0; (bp.leaf_range.len() + bp.xpad_halo.len()) * a.u.leaf_dim * nv];
+        fill_branch_input(&a, bp, x, &mut buf);
+        hub.send(r, Message::new(MsgKind::Input, flags, p, buf))?;
+    }
+
+    // The measured section starts at the barrier release on every side.
+    hub.barrier()?;
+    let t0 = Instant::now();
+
+    // The replicated top subtree runs on the coordinator, over a top-only
+    // (O(P)) workspace.
+    let mut mb = Mailbox::new();
+    let mut master_metrics = Metrics::new();
+    let mut master_trace = RankTrace::default();
+    let mut master_comm: Vec<CommEvent> = Vec::new();
+    if c > 0 {
+        let plan = HgemvPlan::new(&a, nv);
+        let mut top_ws = HgemvWorkspace::top_only(&a, nv, c);
+        let mut rec = if opts.measured_trace {
+            Recording::new(hub, t0)
+        } else {
+            Recording::passthrough(hub, t0)
+        };
+        let (m, tr) =
+            run_top_master(&a, &backend, &plan, d, &mut top_ws, &mut rec, &mut mb, t0)?;
+        master_metrics = m;
+        master_trace = tr;
+        master_comm = rec.events().to_vec();
+        hub = rec.into_inner();
+    }
+
+    // Collect the output rows; the measured clock stops at the last one.
+    let depth = a.depth();
+    let mut got_output = vec![false; p];
+    for _ in 0..p {
+        let msg = mb.recv_kind(&mut hub, MsgKind::Output)?;
+        let r = msg.tag.src as usize;
+        if r >= p || got_output[r] {
+            return Err(TransportError::Protocol(format!("unexpected output from {r}")));
+        }
+        got_output[r] = true;
+        let base_row = a.tree.node(depth, bps[r].leaf_range.start).start;
+        let end_row = if bps[r].leaf_range.end == (1usize << depth) {
+            n
+        } else {
+            a.tree.node(depth, bps[r].leaf_range.end).start
+        };
+        if msg.data.len() != (end_row - base_row) * nv {
+            return Err(TransportError::Protocol(format!(
+                "rank {r} output has {} values, expected {}",
+                msg.data.len(),
+                (end_row - base_row) * nv
+            )));
+        }
+        y[base_row * nv..end_row * nv].copy_from_slice(&msg.data);
+    }
+    let measured = t0.elapsed().as_secs_f64();
+
+    // Per-rank counters and trace stamps.
+    let mut rank_metrics: Vec<Metrics> = (0..p).map(|_| Metrics::new()).collect();
+    let mut per_rank = vec![0.0; p];
+    for _ in 0..p {
+        let msg = mb.recv_kind(&mut hub, MsgKind::Metrics)?;
+        let r = msg.tag.src as usize;
+        if r >= p {
+            return Err(TransportError::Protocol(format!("metrics from unknown rank {r}")));
+        }
+        let (m, elapsed) = metrics_from_payload(&msg.data)?;
+        rank_metrics[r] = m;
+        per_rank[r] = elapsed;
+    }
+    let measured_trace_json = if opts.measured_trace {
+        let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
+        for _ in 0..p {
+            let msg = mb.recv_kind(&mut hub, MsgKind::Trace)?;
+            let r = msg.tag.src as usize;
+            let (tr, comm) = trace_from_payload(&msg.data, r)?;
+            parts.push((r, tr, comm));
+        }
+        parts.sort_by_key(|(r, _, _)| *r);
+        parts.push((p, master_trace, master_comm));
+        Some(measured_trace_json(&parts))
+    } else {
+        None
+    };
+
+    let mut metrics = Metrics::merge_all(rank_metrics.iter());
+    metrics.merge(&master_metrics);
+
+    // Clean shutdown: tell every worker to exit, then release the writer
+    // queues. Workers exit on the Shutdown message, their readers see EOF
+    // and drop the forwarding senders, which lets the writer threads
+    // drain and exit — no side waits on a peer that waits on it.
+    for r in 0..p {
+        let _ = hub.send(r, Message::new(MsgKind::Shutdown, 0, p, Vec::new()));
+    }
+    drop(hub);
+    for t in router_threads {
+        let _ = t.join();
+    }
+    for (_, child) in &mut guard.children {
+        let _ = child.wait();
+    }
+
+    Ok(SocketReport { measured, per_rank, metrics, measured_trace_json })
+}

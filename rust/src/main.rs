@@ -2,11 +2,13 @@
 //! line. (Hand-rolled CLI: the offline image carries no clap.)
 //!
 //! ```text
-//! h2opus matvec   [--n-side 32] [--dim 2] [--ranks 4] [--nv 1] [--backend native|xla] [--no-overlap] [--threaded] [--trace out.json]
+//! h2opus matvec   [--n-side 32] [--dim 2] [--ranks 4] [--nv 1] [--backend native|xla] [--no-overlap]
+//!                 [--threaded] [--transport inproc|socket] [--trace out.json] [--measured-trace out.json]
 //! h2opus compress [--n-side 32] [--dim 2] [--ranks 4] [--tau 1e-3] [--backend native|xla] [--threaded]
 //! h2opus solve    [--n-side 32] [--ranks 4] [--beta 0.75] [--rtol 1e-6] [--backend native|xla]
 //! h2opus accuracy [--n-side 32] [--dim 2] [--g 4]
 //! h2opus info     [--n-side 32] [--dim 2]
+//! h2opus worker   --connect SOCK --rank R --ranks P --nv NV [matrix flags]   (internal: socket-transport rank)
 //! ```
 
 use std::collections::HashMap;
@@ -14,10 +16,9 @@ use std::collections::HashMap;
 use h2opus::backend::native::NativeBackend;
 use h2opus::backend::ComputeBackend;
 use h2opus::compression::compress_full;
-use h2opus::config::{H2Config, NetworkModel};
-use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::config::NetworkModel;
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
-use h2opus::geometry::PointSet;
+use h2opus::dist::transport::MatrixJob;
 use h2opus::metrics::Metrics;
 use h2opus::runtime::XlaBackend;
 use h2opus::util::Prng;
@@ -58,29 +59,36 @@ fn backend_from(flags: &HashMap<String, String>) -> Box<dyn ComputeBackend> {
     }
 }
 
-fn build_test_matrix(flags: &HashMap<String, String>) -> h2opus::tree::H2Matrix {
+/// The deterministic test-matrix job a flag set describes — the same
+/// specification the socket transport ships to its worker processes.
+fn job_from(flags: &HashMap<String, String>) -> MatrixJob {
     let dim: usize = get(flags, "dim", 2);
-    let n_side: usize = get(flags, "n-side", 32);
-    let g: usize = get(flags, "g", if dim == 2 { 4 } else { 2 });
-    let cfg = H2Config {
+    MatrixJob {
+        dim,
+        n_side: get(flags, "n-side", 32),
         leaf_size: get(flags, "leaf-size", 32),
         eta: get(flags, "eta", if dim == 2 { 0.9 } else { 0.95 }),
-        cheb_grid: g,
-    };
-    let (points, corr) = if dim == 2 {
-        (PointSet::grid_2d(n_side, 1.0), 0.1)
-    } else {
-        (PointSet::grid_3d(n_side, 1.0), 0.2)
-    };
-    let kernel = ExponentialKernel { dim, corr_len: corr };
-    build_h2(points, &kernel, &cfg)
+        cheb_grid: get(flags, "g", if dim == 2 { 4 } else { 2 }),
+        corr_len: get(flags, "corr", if dim == 2 { 0.1 } else { 0.2 }),
+    }
+}
+
+fn build_test_matrix(flags: &HashMap<String, String>) -> h2opus::tree::H2Matrix {
+    job_from(flags).build()
 }
 
 fn cmd_matvec(flags: &HashMap<String, String>) {
-    let a = build_test_matrix(flags);
-    let backend = backend_from(flags);
     let ranks: usize = get(flags, "ranks", 4);
     let nv: usize = get(flags, "nv", 1);
+    let transport = flags.get("transport").map(String::as_str).unwrap_or("inproc");
+
+    if transport == "socket" {
+        cmd_matvec_socket(flags, ranks, nv);
+        return;
+    }
+
+    let a = build_test_matrix(flags);
+    let backend = backend_from(flags);
     let n = a.n();
     let mut rng = Prng::new(1234);
     let x = rng.normal_vec(n * nv);
@@ -89,6 +97,7 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
         net: NetworkModel::default(),
         overlap: !flags.contains_key("no-overlap"),
         trace: flags.contains_key("trace"),
+        measured_trace: flags.contains_key("measured-trace"),
         mode: if flags.contains_key("threaded") { ExecMode::Threaded } else { ExecMode::Virtual },
     };
     let rep = dist_hgemv(&a, backend.as_ref(), ranks, nv, &x, &mut y, &opts);
@@ -105,6 +114,74 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
         std::fs::write(path, json).expect("writing trace");
         println!("trace written to {path}");
     }
+    if let (Some(path), Some(json)) = (flags.get("measured-trace"), rep.measured_trace_json) {
+        std::fs::write(path, json).expect("writing measured trace");
+        println!("measured trace written to {path}");
+    }
+}
+
+#[cfg(unix)]
+fn cmd_matvec_socket(flags: &HashMap<String, String>, ranks: usize, nv: usize) {
+    use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+    let job = job_from(flags);
+    let n = job.n_points();
+    let mut rng = Prng::new(1234);
+    let x = rng.normal_vec(n * nv);
+    let mut y = vec![0.0; n * nv];
+    let opts = SocketOptions {
+        measured_trace: flags.contains_key("measured-trace"),
+        ..SocketOptions::default()
+    };
+    match socket_hgemv(&job, ranks, nv, &x, &mut y, &opts) {
+        Ok(rep) => {
+            println!("N = {n}, P = {ranks}, nv = {nv}, transport = socket (worker subprocesses)");
+            println!("measured time     {:>12.3} ms", rep.measured * 1e3);
+            println!("flops             {:>12}", rep.metrics.flops);
+            println!("wire volume       {:>12} B over {} messages", rep.metrics.bytes_sent, rep.metrics.messages);
+            for (r, t) in rep.per_rank.iter().enumerate() {
+                println!("  rank {r:>2}         {:>12.3} ms", t * 1e3);
+            }
+            if let (Some(path), Some(json)) = (flags.get("measured-trace"), rep.measured_trace_json)
+            {
+                std::fs::write(path, json).expect("writing measured trace");
+                println!("measured trace written to {path}");
+            }
+        }
+        Err(e) => {
+            eprintln!("socket matvec failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn cmd_matvec_socket(_flags: &HashMap<String, String>, _ranks: usize, _nv: usize) {
+    eprintln!("the socket transport requires Unix domain sockets");
+    std::process::exit(1);
+}
+
+#[cfg(unix)]
+fn cmd_worker(flags: &HashMap<String, String>) {
+    let job = job_from(flags);
+    let connect = flags.get("connect").map(String::as_str).unwrap_or_else(|| {
+        eprintln!("worker: --connect <socket path> is required");
+        std::process::exit(2)
+    });
+    let rank: usize = get(flags, "rank", 0);
+    let ranks: usize = get(flags, "ranks", 1);
+    let nv: usize = get(flags, "nv", 1);
+    if let Err(e) =
+        h2opus::dist::transport::socket::run_worker(&job, std::path::Path::new(connect), rank, ranks, nv)
+    {
+        eprintln!("worker {rank}/{ranks} failed: {e}");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(not(unix))]
+fn cmd_worker(_flags: &HashMap<String, String>) {
+    eprintln!("the socket transport requires Unix domain sockets");
+    std::process::exit(1);
 }
 
 fn cmd_compress(flags: &HashMap<String, String>) {
@@ -212,10 +289,12 @@ fn main() {
         "solve" => cmd_solve(&flags),
         "accuracy" => cmd_accuracy(&flags),
         "info" => cmd_info(&flags),
+        "worker" => cmd_worker(&flags),
         _ => {
             println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
-            println!("commands: matvec | compress | solve | accuracy | info");
+            println!("commands: matvec | compress | solve | accuracy | info | worker");
             println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
+            println!("matvec flags: --threaded --transport inproc|socket --trace F --measured-trace F");
         }
     }
 }

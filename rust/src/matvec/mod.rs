@@ -65,6 +65,30 @@ impl HgemvWorkspace {
             y_pad: vec![0.0; leaves * m_pad * nv],
         }
     }
+
+    /// A workspace holding only the replicated top subtree (coefficient
+    /// levels 0..=`c_level`, no padded leaf buffers) — what the
+    /// distributed master needs for the gather → top phases → scatter
+    /// sequence. Its footprint is O(P·k), independent of N; the top-level
+    /// phase functions ([`upsweep_transfer_level`],
+    /// [`tree_multiply_level`], [`downsweep_transfer_level`]) never touch
+    /// the empty deeper levels.
+    pub fn top_only(a: &H2Matrix, nv: usize, c_level: usize) -> Self {
+        HgemvWorkspace {
+            nv,
+            xhat: VectorTree::zeros_top(a.depth(), &a.v.ranks, nv, c_level),
+            yhat: VectorTree::zeros_top(a.depth(), &a.u.ranks, nv, c_level),
+            x_pad: Vec::new(),
+            y_pad: Vec::new(),
+        }
+    }
+
+    /// Total allocated bytes — the serial baseline of the distributed
+    /// memory regression test (`tests/transport.rs`).
+    pub fn memory_bytes(&self) -> usize {
+        (self.xhat.memory_words() + self.yhat.memory_words() + self.x_pad.len() + self.y_pad.len())
+            * 8
+    }
 }
 
 /// y = A·x for `nv` vectors at once. `x`/`y` are row-major N × nv in the
@@ -124,9 +148,10 @@ pub fn unpad_leaf_output(a: &H2Matrix, y_pad: &[f64], y: &mut [f64], nv: usize) 
 
 /// Scatter the padded output of the contiguous leaf range into `y_chunk`,
 /// a slice of the permuted output starting at point row `base_row` (the
-/// first row owned by the range). The threaded executor hands each rank a
-/// disjoint `y_chunk` via `split_at_mut`, so branch output writes are
-/// `Send`-safe without sharing the full vector.
+/// first row owned by the range). This is the general, globally-indexed
+/// form behind [`unpad_leaf_output`]; the distributed executors use the
+/// branch-local counterpart `crate::dist::branch::unpad_branch_output`
+/// (same contract over a rank's O(N/P) `y_pad` layout).
 pub fn unpad_leaf_range(
     a: &H2Matrix,
     y_pad: &[f64],

@@ -15,6 +15,11 @@ pub struct Metrics {
     pub batch_launches: u64,
     /// Elements of padding waste in batched launches (padded - actual).
     pub pad_waste: u64,
+    /// Operand/result f64 words touched by batched GEMMs
+    /// (nb·(m·k + k·n + m·n) per launch) — the memory-traffic term of the
+    /// [`crate::dist::hgemv::CostModel`], recorded so measured runs can
+    /// calibrate `byte_time` (`python/tests/model_check.py --fit`).
+    pub gemm_words: u64,
 }
 
 impl Metrics {
@@ -25,6 +30,7 @@ impl Metrics {
     /// Record one batched GEMM: nb blocks of (m × k)·(k × n).
     pub fn gemm(&mut self, nb: usize, m: usize, k: usize, n: usize) {
         self.flops += 2 * (nb * m * k * n) as u64;
+        self.gemm_words += (nb * (m * k + k * n + m * n)) as u64;
         self.batch_launches += 1;
     }
 
@@ -54,6 +60,7 @@ impl Metrics {
         self.messages += other.messages;
         self.batch_launches += other.batch_launches;
         self.pad_waste += other.pad_waste;
+        self.gemm_words += other.gemm_words;
     }
 
     /// Aggregate per-rank counters without data races: each thread of the

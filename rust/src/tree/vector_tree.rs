@@ -22,6 +22,18 @@ impl VectorTree {
         VectorTree { depth, ranks: ranks.to_vec(), nv, levels }
     }
 
+    /// A vector tree allocated only down to `max_level` (inclusive);
+    /// deeper levels are empty. The distributed master workspace uses this
+    /// for the replicated top subtree (levels 0..=C), so the master's
+    /// footprint is O(P) instead of O(N).
+    pub fn zeros_top(depth: usize, ranks: &[usize], nv: usize, max_level: usize) -> Self {
+        assert_eq!(ranks.len(), depth + 1);
+        let levels = (0..=depth)
+            .map(|l| if l <= max_level { vec![0.0; (1 << l) * ranks[l] * nv] } else { Vec::new() })
+            .collect();
+        VectorTree { depth, ranks: ranks.to_vec(), nv, levels }
+    }
+
     /// Coefficient block of node j at level l.
     pub fn node(&self, l: usize, j: usize) -> &[f64] {
         let sz = self.ranks[l] * self.nv;

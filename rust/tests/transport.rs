@@ -1,0 +1,272 @@
+//! Transport conformance suite + the O(N/P) memory regression test.
+//!
+//! Every transport must drive the distributed HGEMV to a *bitwise*
+//! serial-identical result for P ∈ {1, 2, 4, 8}; deliveries may be
+//! reordered across sources (tag matching must absorb that); a dead
+//! worker process must surface as an error, not a hang; and the
+//! branch-local workspaces must actually realize the O(N/P) memory
+//! footprint the distributed format promises (≤ serial/P plus the level-C
+//! boundary slack).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+use h2opus::dist::transport::{inproc, Endpoint, Mailbox, MatrixJob, Message, MsgKind};
+use h2opus::dist::{BranchPlan, BranchWorkspace, Decomposition, ExchangePlan};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::Prng;
+
+/// The conformance matrix: N = 256, depth 4 (so P = 8 splits at C = 3).
+fn conformance_job() -> MatrixJob {
+    MatrixJob { dim: 2, n_side: 16, leaf_size: 16, eta: 0.9, cheb_grid: 3, corr_len: 0.1 }
+}
+
+fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
+    let n = a.n();
+    let plan = HgemvPlan::new(a, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    let mut metrics = Metrics::new();
+    let mut y = vec![0.0; n * nv];
+    hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut metrics);
+    y
+}
+
+/// InProc transport (pooled rank threads, branch-local workspaces):
+/// bitwise identical to serial for every supported P.
+#[test]
+fn inproc_transport_bitwise_identical_all_p() {
+    let a = conformance_job().build();
+    let n = a.n();
+    let mut rng = Prng::new(900);
+    for nv in [1usize, 3] {
+        let x = rng.normal_vec(n * nv);
+        let y_serial = serial_product(&a, &x, nv);
+        let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+        for p in [1usize, 2, 4, 8] {
+            let mut y = vec![0.0; n * nv];
+            let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &opts);
+            assert_eq!(y, y_serial, "inproc P={p} nv={nv} not bitwise equal");
+            assert!(rep.measured.unwrap() > 0.0);
+        }
+    }
+}
+
+/// The recording transport (active stamping wrapped around every
+/// endpoint) stays bitwise-identical to serial for every P and produces a
+/// measured Chrome trace with compute phases, message events and valid
+/// bracketing.
+#[test]
+fn recording_transport_emits_measured_trace() {
+    let a = conformance_job().build();
+    let n = a.n();
+    let mut rng = Prng::new(903);
+    let x = rng.normal_vec(n);
+    let y_serial = serial_product(&a, &x, 1);
+    let opts = DistOptions {
+        mode: ExecMode::Threaded,
+        measured_trace: true,
+        ..DistOptions::default()
+    };
+    for p in [1usize, 2, 8] {
+        let mut y = vec![0.0; n];
+        dist_hgemv(&a, &NativeBackend, p, 1, &x, &mut y, &opts);
+        assert_eq!(y, y_serial, "recording P={p} not bitwise equal to serial");
+    }
+    let mut y = vec![0.0; n];
+    let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+    assert_eq!(y, y_serial, "recording P=4 not bitwise equal to serial");
+    let json = rep.measured_trace_json.expect("measured trace requested");
+    assert!(json.trim_start().starts_with('[') && json.trim_end().ends_with(']'));
+    for needle in ["upsweep", "dense + diagonal mult", "downsweep", "send xhat", "top subtree"] {
+        assert!(json.contains(needle), "measured trace missing {needle:?}");
+    }
+    // Without the flag the trace is not built.
+    let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+    let rep = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+    assert!(rep.measured_trace_json.is_none());
+}
+
+/// Tag-matched receives must absorb arbitrary cross-source delivery
+/// order: a Parent overtaking the Xhat exchange, levels arriving
+/// scrambled.
+#[test]
+fn out_of_order_tag_delivery_is_absorbed() {
+    let mut eps = inproc::mesh(2).into_iter();
+    let mut a = eps.next().unwrap();
+    let mut b = eps.next().unwrap();
+    // Delivery order: Parent, Xhat L4, Xhat L3, Gather — consumed as
+    // Xhat L3, Xhat L4, Parent, Gather.
+    a.send(1, Message::new(MsgKind::Parent, 0, 0, vec![7.0])).unwrap();
+    a.send(1, Message::new(MsgKind::Xhat, 4, 0, vec![4.0])).unwrap();
+    a.send(1, Message::new(MsgKind::Xhat, 3, 0, vec![3.0])).unwrap();
+    a.send(1, Message::new(MsgKind::Gather, 2, 0, vec![2.0])).unwrap();
+    let mut mb = Mailbox::new();
+    let m = mb.recv_where(&mut b, |t| t.kind == MsgKind::Xhat && t.level == 3).unwrap();
+    assert_eq!(m.data, vec![3.0]);
+    let m = mb.recv_where(&mut b, |t| t.kind == MsgKind::Xhat && t.level == 4).unwrap();
+    assert_eq!(m.data, vec![4.0]);
+    let m = mb.recv_kind(&mut b, MsgKind::Parent).unwrap();
+    assert_eq!(m.data, vec![7.0]);
+    let m = mb.recv_kind(&mut b, MsgKind::Gather).unwrap();
+    assert_eq!(m.data, vec![2.0]);
+    assert_eq!(mb.stashed(), 0, "nothing may be left behind");
+}
+
+/// The collective barrier releases every endpoint only after all arrived.
+#[test]
+fn inproc_barrier_synchronizes_all_endpoints() {
+    let n = 4;
+    let eps = inproc::mesh(n);
+    let arrived = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let arrived = arrived.clone();
+            std::thread::spawn(move || {
+                arrived.fetch_add(1, Ordering::SeqCst);
+                ep.barrier().unwrap();
+                // After the barrier, every endpoint must have arrived.
+                assert_eq!(arrived.load(Ordering::SeqCst), 4);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// O(N/P) memory regression: the per-rank branch workspace must fit in
+/// serial/P plus the level-C boundary slack (x̂ halo + dense leaf halo +
+/// parent block), and actually shrink as P grows.
+#[test]
+fn per_rank_workspace_is_o_n_over_p() {
+    // N = 1024, depth 6 — big enough that the halo is small against 1/P.
+    let points = PointSet::grid_2d(32, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    let a = build_h2(points, &kernel, &cfg);
+    let nv = 2;
+    let serial_bytes = HgemvWorkspace::new(&a, nv).memory_bytes();
+    for p in [2usize, 4, 8] {
+        let d = Decomposition::new(p, a.depth()).unwrap();
+        let ex = ExchangePlan::build(&a, d);
+        for r in 0..p {
+            let bp = BranchPlan::build(&a, &ex, r, nv);
+            let bw = BranchWorkspace::new(&a, &bp);
+            let slack = bp.halo_bytes(&a);
+            assert!(
+                bw.memory_bytes() <= serial_bytes / p + slack,
+                "P={p} rank {r}: {} B > serial/P {} B + slack {} B",
+                bw.memory_bytes(),
+                serial_bytes / p,
+                slack
+            );
+            assert!(
+                bw.memory_bytes() < serial_bytes,
+                "P={p} rank {r}: branch workspace not smaller than serial"
+            );
+            if p <= 4 {
+                assert!(
+                    slack < serial_bytes / p,
+                    "P={p} rank {r}: slack {} B dominates serial/P {} B — bound vacuous",
+                    slack,
+                    serial_bytes / p
+                );
+            }
+        }
+    }
+    // The master's top-only workspace is O(P), far below serial.
+    let top = HgemvWorkspace::top_only(&a, nv, 3).memory_bytes();
+    assert!(top < serial_bytes / 4, "top-only workspace {top} B not O(P)");
+}
+
+/// Socket transport: real worker subprocesses produce bitwise-identical
+/// output to serial for P ∈ {1, 2, 4, 8}.
+#[cfg(unix)]
+#[test]
+fn socket_transport_bitwise_identical_all_p() {
+    use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut rng = Prng::new(901);
+    let nv = 1;
+    let x = rng.normal_vec(n * nv);
+    let y_serial = serial_product(&a, &x, nv);
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        ..SocketOptions::default()
+    };
+    for p in [1usize, 2, 4, 8] {
+        let mut y = vec![0.0; n * nv];
+        let rep = socket_hgemv(&job, p, nv, &x, &mut y, &opts)
+            .unwrap_or_else(|e| panic!("socket P={p}: {e}"));
+        assert_eq!(y, y_serial, "socket P={p} not bitwise equal to serial");
+        assert!(rep.measured > 0.0);
+        assert_eq!(rep.per_rank.len(), p);
+        assert!(rep.metrics.flops > 0);
+    }
+}
+
+/// Socket transport with nv > 1 and a measured trace.
+#[cfg(unix)]
+#[test]
+fn socket_transport_multivector_and_trace() {
+    use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut rng = Prng::new(902);
+    let nv = 3;
+    let x = rng.normal_vec(n * nv);
+    let y_serial = serial_product(&a, &x, nv);
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        measured_trace: true,
+        ..SocketOptions::default()
+    };
+    let mut y = vec![0.0; n * nv];
+    let rep = socket_hgemv(&job, 4, nv, &x, &mut y, &opts).expect("socket run");
+    assert_eq!(y, y_serial, "socket nv=3 not bitwise equal");
+    let json = rep.measured_trace_json.expect("trace requested");
+    assert!(json.contains("upsweep") && json.contains("top subtree"));
+}
+
+/// A crashed worker must turn into a transport error at the coordinator —
+/// promptly, not as a hang until some external timeout.
+#[cfg(unix)]
+#[test]
+fn socket_worker_crash_propagates_error_not_hang() {
+    use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+    use std::time::{Duration, Instant};
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(30),
+        extra_env: vec![("H2OPUS_TEST_CRASH_RANK".into(), "1".into())],
+        ..SocketOptions::default()
+    };
+    let t0 = Instant::now();
+    let err = socket_hgemv(&job, 2, 1, &x, &mut y, &opts)
+        .expect_err("a crashed rank must fail the product");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(25),
+        "crash took {elapsed:?} to surface — behaved like a hang"
+    );
+    let msg = err.to_string();
+    assert!(
+        msg.contains("closed") || msg.contains("exited") || msg.contains("timeout"),
+        "error must name the failure: {msg}"
+    );
+}
