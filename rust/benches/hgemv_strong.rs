@@ -17,7 +17,7 @@ use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
-use h2opus::dist::transport::MatrixJob;
+use h2opus::dist::transport::{JobKind, MatrixJob};
 use h2opus::geometry::PointSet;
 use h2opus::metrics::Metrics;
 use h2opus::util::timer::trimmed_mean;
@@ -98,6 +98,7 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
         eta: cfg.eta,
         cheb_grid: cfg.cheb_grid,
         corr_len: corr,
+        kind: JobKind::Exponential,
     };
     let points =
         if dim == 2 { PointSet::grid_2d(side, 1.0) } else { PointSet::grid_3d(side, 1.0) };
@@ -142,8 +143,9 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
             );
             rows.push(format!(
                 "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
-                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}}}",
-                mm.flops, mm.batch_launches, mm.gemm_words
+                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}, \
+                 \"matrix_bytes\": {}}}",
+                mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes
             ));
         }
     }

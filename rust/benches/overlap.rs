@@ -104,6 +104,7 @@ fn main() {
         eta: 0.9,
         cheb_grid: 4,
         corr_len: 0.1,
+        kind: h2opus::dist::transport::JobKind::Exponential,
     };
     let mut measured_of = |p: usize| {
         let vopts = DistOptions::default();

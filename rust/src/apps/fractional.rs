@@ -24,8 +24,9 @@ use crate::backend::ComputeBackend;
 use crate::compression::compress_full;
 use crate::config::{H2Config, NetworkModel};
 use crate::construct::builder::build_h2;
-use crate::construct::kernels::FractionalKernel;
+use crate::construct::kernels::{paper_kappa, FractionalKernel};
 use crate::dist::hgemv::{DistHgemv, DistOptions, ExecMode};
+use crate::dist::transport::{JobKind, MatrixJob};
 use crate::geometry::{PointSet, MAX_DIM};
 use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
@@ -36,18 +37,11 @@ use crate::tree::H2Matrix;
 use crate::util::Timer;
 
 /// The paper's bump diffusivity field (Eqs. 6–7):
-/// κ(x) = 1 + f(x₁; 0, 1.5)·f(x₂; 0, 2.0).
+/// κ(x) = 1 + f(x₁; 0, 1.5)·f(x₂; 0, 2.0). Delegates to
+/// [`paper_kappa`] so the in-process operator and the distributed worker
+/// session evaluate the identical diffusivity.
 pub fn kappa(x: f64, y: f64) -> f64 {
-    1.0 + bump(x, 0.0, 1.5) * bump(y, 0.0, 2.0)
-}
-
-fn bump(x: f64, c: f64, ell: f64) -> f64 {
-    let r = (x - c) / (ell / 2.0);
-    if r.abs() < 1.0 {
-        (-1.0 / (1.0 - r * r)).exp()
-    } else {
-        0.0
-    }
+    paper_kappa(&[x, y, 0.0])
 }
 
 /// Problem configuration.
@@ -83,6 +77,24 @@ impl FractionalProblem {
     pub fn h(&self) -> f64 {
         2.0 / self.n_side as f64
     }
+
+    /// The deterministic job describing this problem's (uncompressed)
+    /// fractional kernel matrix over Ω — what a persistent distributed
+    /// session ([`crate::dist::transport::socket::SocketSession`]) ships
+    /// to its worker ranks, which rebuild their shards branch-scoped from
+    /// these flags. Same points, same kernel, same clustering as
+    /// [`setup`]'s K, so the permutations agree.
+    pub fn matrix_job(&self) -> MatrixJob {
+        MatrixJob {
+            dim: 2,
+            n_side: self.n_side,
+            leaf_size: self.h2.leaf_size,
+            eta: self.h2.eta,
+            cheb_grid: self.h2.cheb_grid,
+            corr_len: 0.0,
+            kind: JobKind::Fractional { beta: self.beta },
+        }
+    }
 }
 
 /// Assembled operator + preconditioner + setup timings.
@@ -108,16 +120,11 @@ pub struct FractionalSystem {
     pub dist: DistHgemv,
 }
 
-/// Cell-centered grid over [lo,hi]² with n cells per side.
+/// Cell-centered grid over [lo,hi]² with n cells per side (the shared
+/// constructor — the distributed session's `MatrixJob` uses the same one,
+/// so worker-side clustering matches bitwise).
 fn cell_grid(n: usize, lo: f64, hi: f64) -> PointSet {
-    let h = (hi - lo) / n as f64;
-    let mut ps = PointSet::new(2);
-    for j in 0..n {
-        for i in 0..n {
-            ps.push(&[lo + (i as f64 + 0.5) * h, lo + (j as f64 + 0.5) * h]);
-        }
-    }
-    ps
+    PointSet::cell_grid_2d(n, lo, hi)
 }
 
 /// Assemble the full system (the paper's "setup" phase, Fig. 13 left).
@@ -125,12 +132,15 @@ pub fn setup(problem: FractionalProblem, backend: &dyn ComputeBackend) -> Fracti
     let n_side = problem.n_side;
     let n = problem.n();
     let beta = problem.beta;
-    let kap = |p: &[f64; MAX_DIM]| kappa(p[0], p[1]);
 
     // ---- K over Ω, Chebyshev construction + algebraic compression ----
     let t = Timer::start();
     let points = cell_grid(n_side, -1.0, 1.0);
-    let kernel = FractionalKernel { dim: 2, beta, kappa: kap };
+    // The plain-fn diffusivity keeps this kernel identical (same code
+    // path, same bits) to the one the distributed session's workers
+    // rebuild from CLI flags.
+    let kernel =
+        FractionalKernel { dim: 2, beta, kappa: paper_kappa as fn(&[f64; MAX_DIM]) -> f64 };
     let mut k_raw = build_h2(points, &kernel, &problem.h2);
     let mut metrics = Metrics::new();
     let (k, _stats) = compress_full(&mut k_raw, problem.tau, backend, &mut metrics);
@@ -293,6 +303,101 @@ pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64
     FractionalSolve { result, u, solve_time, time_per_iteration: tpi }
 }
 
+/// Run the preconditioned Krylov solve with the H² product served by a
+/// *persistent distributed session*: P live `h2opus worker` processes
+/// hold shards of the (uncompressed, construction-accuracy) fractional
+/// kernel matrix and serve one product per CG iteration — worker spawn,
+/// branch-scoped matrix construction and plan building are paid once for
+/// the whole solve instead of per product
+/// ([`crate::dist::transport::socket::SocketSession`]).
+///
+/// The session matrix is built from the same kernel, points and
+/// clustering as [`setup`]'s K but *before* algebraic compression
+/// (compression requires the assembled global matrix, which no session
+/// process ever holds), so the applied operator matches K to construction
+/// accuracy; D, C, b and the multigrid preconditioner are identical to
+/// [`solve`]'s. See DESIGN.md "Substitutions".
+///
+/// Panics if a session product fails mid-solve (the CG callback cannot
+/// propagate transport errors); start-up failures surface from
+/// [`crate::dist::transport::socket::SocketSession::start`] before this
+/// is ever called.
+#[cfg(unix)]
+pub fn solve_with_session(
+    sys: &mut FractionalSystem,
+    session: &mut crate::dist::transport::socket::SocketSession,
+    rtol: f64,
+) -> FractionalSolve {
+    let n = sys.problem.n();
+    assert_eq!(session.n(), n, "session matrix dimension mismatch");
+    assert_eq!(
+        session.tree().perm,
+        sys.k.tree.perm,
+        "session clustering must match the in-process matrix"
+    );
+    let h2half = sys.problem.h() * sys.problem.h(); // the h² of Eq. 9
+
+    let perm = sys.k.tree.perm.clone();
+    let mut x_orig = vec![0.0; n];
+    let mut cx_orig = vec![0.0; n];
+    let mut kx_perm = vec![0.0; n];
+
+    let t = Timer::start();
+    let d = &sys.d;
+    let c = &sys.c;
+    let mut apply = |x_perm: &[f64], y_perm: &mut [f64]| {
+        // y = h² (D + K + C) x, K applied by the live worker ranks.
+        session
+            .hgemv(x_perm, &mut kx_perm)
+            .expect("distributed session HGEMV failed mid-solve");
+        for pos in 0..n {
+            x_orig[perm[pos]] = x_perm[pos];
+        }
+        c.spmv(&x_orig, &mut cx_orig);
+        for pos in 0..n {
+            let orig = perm[pos];
+            y_perm[pos] = h2half * (d[orig] * x_perm[pos] + kx_perm[pos] + cx_orig[orig]);
+        }
+    };
+    struct OpWrap<'a>(usize, &'a mut dyn FnMut(&[f64], &mut [f64]));
+    impl LinOp for OpWrap<'_> {
+        fn n(&self) -> usize {
+            self.0
+        }
+        fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+            (self.1)(x, y)
+        }
+    }
+    let mut opw = OpWrap(n, &mut apply);
+
+    // Preconditioner: V-cycle on C (permute in/out of the grid ordering).
+    let mg = &mut sys.mg;
+    let perm2 = perm.clone();
+    let mut pin = vec![0.0; n];
+    let mut pout = vec![0.0; n];
+    let mut pre = move |r_perm: &[f64], z_perm: &mut [f64]| {
+        for pos in 0..n {
+            pin[perm2[pos]] = r_perm[pos];
+        }
+        mg.apply_vcycle(&pin, &mut pout);
+        for pos in 0..n {
+            z_perm[pos] = pout[perm2[pos]];
+        }
+    };
+    let mut prew = OpWrap(n, &mut pre);
+
+    let mut u_perm = vec![0.0; n];
+    let result = pcg(&mut opw, &mut prew, &sys.b, &mut u_perm, rtol, 500);
+    let solve_time = t.elapsed();
+
+    let mut u = vec![0.0; n];
+    for pos in 0..n {
+        u[perm[pos]] = u_perm[pos];
+    }
+    let tpi = solve_time / result.iterations.max(1) as f64;
+    FractionalSolve { result, u, solve_time, time_per_iteration: tpi }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +420,20 @@ mod tests {
             tau: 1e-6,
             ranks: 2,
         }
+    }
+
+    #[test]
+    fn matrix_job_matches_setup_clustering() {
+        // The session job must reproduce K's points and clustering, or a
+        // distributed solve would permute vectors differently than the
+        // in-process operator.
+        let problem = small_problem(16);
+        let job = problem.matrix_job();
+        assert_eq!(job.n_points(), problem.n());
+        let a = job.build();
+        let sys = setup(problem, &NativeBackend);
+        assert_eq!(a.tree.perm, sys.k.tree.perm);
+        assert_eq!(a.depth(), sys.k.depth());
     }
 
     #[test]

@@ -7,9 +7,28 @@ use crate::clustering::ClusterTree;
 use crate::config::H2Config;
 use crate::construct::chebyshev::{cheb_grid, ChebBasis};
 use crate::construct::kernels::Kernel;
+use crate::dist::shard::ShardedMatrix;
+use crate::dist::{Decomposition, DecompositionError};
 use crate::geometry::{PointSet, MAX_DIM};
 use crate::linalg::Mat;
 use crate::tree::H2Matrix;
+
+/// When this environment variable is set, any attempt to assemble a full
+/// (global) H² matrix in this process panics. The socket coordinator sets
+/// it for every `h2opus worker` subprocess: workers must construct only
+/// their [`ShardedMatrix`] ([`build_branch`]), which is what makes N
+/// beyond one process's memory representable. CI runs the socket suites
+/// under this guard, so a regression that sneaks a global build into a
+/// worker fails loudly instead of silently re-inflating per-rank memory.
+pub const FORBID_FULL_MATRIX_ENV: &str = "H2OPUS_FORBID_FULL_MATRIX";
+
+fn assert_full_matrix_allowed() {
+    assert!(
+        std::env::var_os(FORBID_FULL_MATRIX_ENV).is_none(),
+        "{FORBID_FULL_MATRIX_ENV} is set: this process (a distributed worker rank) must \
+         construct branch shards (construct::build_branch), never the full H^2 matrix"
+    );
+}
 
 /// Build an H^2 approximation of the kernel matrix K[i,j] = κ(x_i, x_j)
 /// over `points` (square, same row/column point set).
@@ -31,6 +50,7 @@ pub fn build_h2_with_structure(
     kernel: &dyn Kernel,
     cfg: &H2Config,
 ) -> H2Matrix {
+    assert_full_matrix_allowed();
     let dim = tree.points.dim;
     let k = cfg.rank(dim);
     let depth = tree.depth;
@@ -109,6 +129,161 @@ pub fn build_h2_with_structure(
         }
     }
     h2
+}
+
+/// Materialize only rank `rank`'s shard of the H² matrix (owned branch +
+/// replicated top) directly from the kernel — the out-of-core
+/// construction path: no global matrix is ever allocated, so a worker
+/// process's matrix footprint is O(N/P) + O(P·k²) instead of O(N·k·C_sp).
+/// Returns the shard together with the (index-only) global
+/// [`MatrixStructure`], which callers need for exchange plans and input
+/// layouts. Bitwise identical to slicing the global construction
+/// ([`ShardedMatrix::from_global`]) — asserted by `tests/shard.rs`.
+pub fn build_branch(
+    points: PointSet,
+    kernel: &dyn Kernel,
+    cfg: &H2Config,
+    p: usize,
+    rank: usize,
+) -> Result<(ShardedMatrix, MatrixStructure), DecompositionError> {
+    build_shard(points, kernel, cfg, p, Some(rank))
+}
+
+/// The coordinator's shard: the replicated top subtree only (no branch).
+pub fn build_top(
+    points: PointSet,
+    kernel: &dyn Kernel,
+    cfg: &H2Config,
+    p: usize,
+) -> Result<(ShardedMatrix, MatrixStructure), DecompositionError> {
+    build_shard(points, kernel, cfg, p, None)
+}
+
+/// Shared branch-scoped assembly. Every block is filled by the *same*
+/// formula, in the same per-block evaluation order, as
+/// [`build_h2_with_structure`] — construction is deterministic, so shard
+/// data is bit-identical to the corresponding slice of a global build.
+fn build_shard(
+    points: PointSet,
+    kernel: &dyn Kernel,
+    cfg: &H2Config,
+    p: usize,
+    rank: Option<usize>,
+) -> Result<(ShardedMatrix, MatrixStructure), DecompositionError> {
+    let dim = points.dim;
+    assert_eq!(dim, kernel.dim(), "kernel/point dimension mismatch");
+    let k = cfg.rank(dim);
+    let tree = ClusterTree::build_with_min_leaf(points, cfg.leaf_size, k);
+    let structure = MatrixStructure::build(&tree, &tree, cfg.eta);
+    let d = Decomposition::new(p, tree.depth)?;
+    let depth = tree.depth;
+    let ranks = vec![k; depth + 1];
+    let m_pad = tree.max_leaf_size();
+    let mut sm = ShardedMatrix::zeros(tree, &structure, &ranks, m_pad, d, rank);
+    let c = d.c_level;
+    let g = cfg.cheb_grid;
+    let mut vals = vec![0.0; k];
+
+    // ---- replicated top: transfers of levels 1..=C (all nodes) and
+    // coupling blocks of levels 0..C ----
+    for l in 1..=c {
+        for j in 0..(1usize << l) {
+            let parent_bbox = sm.tree.node(l - 1, j / 2).bbox;
+            let parent_basis = ChebBasis::new(&parent_bbox, g);
+            let child_grid = cheb_grid(&sm.tree.node(l, j).bbox, g);
+            let sz = k * k;
+            let e = &mut sm.top_u_transfers[l][j * sz..(j + 1) * sz];
+            for (ac, y) in child_grid.iter().enumerate() {
+                parent_basis.eval_all(y, &mut vals);
+                e[ac * k..(ac + 1) * k].copy_from_slice(&vals);
+            }
+        }
+        let eu = sm.top_u_transfers[l].clone();
+        sm.top_v_transfers[l].copy_from_slice(&eu);
+    }
+    for l in 0..c {
+        let pairs = sm.top_coupling[l].pairs.clone();
+        for (pi, &(t, s)) in pairs.iter().enumerate() {
+            let gt = cheb_grid(&sm.tree.node(l, t as usize).bbox, g);
+            let gs = cheb_grid(&sm.tree.node(l, s as usize).bbox, g);
+            let blk = sm.top_coupling[l].block_mut(pi, k);
+            for (a, ya) in gt.iter().enumerate() {
+                for (b, yb) in gs.iter().enumerate() {
+                    blk[a * k + b] = kernel.eval(ya, yb);
+                }
+            }
+        }
+    }
+
+    let Some(r) = rank else {
+        return Ok((sm, structure));
+    };
+
+    // ---- owned branch: leaf bases over the owned leaf range ----
+    let leaf_range = sm.leaf_range.clone();
+    for j in leaf_range.clone() {
+        let node = sm.tree.node(depth, j).clone();
+        let basis = ChebBasis::new(&node.bbox, g);
+        let slot = j - leaf_range.start;
+        for i in 0..node.size() {
+            let orig = sm.tree.perm[node.start + i];
+            let x = sm.tree.points.get(orig);
+            basis.eval_all(&x, &mut vals);
+            let row = (slot * m_pad + i) * k;
+            sm.u_leaf_bases[row..row + k].copy_from_slice(&vals);
+            sm.v_leaf_bases[row..row + k].copy_from_slice(&vals);
+        }
+    }
+    // Interlevel transfers of the owned nodes below the C-level.
+    for l in (c + 1)..=depth {
+        let own = d.own_range(r, l);
+        for j in own.clone() {
+            let parent_bbox = sm.tree.node(l - 1, j / 2).bbox;
+            let parent_basis = ChebBasis::new(&parent_bbox, g);
+            let child_grid = cheb_grid(&sm.tree.node(l, j).bbox, g);
+            let sz = k * k;
+            let local = j - own.start;
+            let e = &mut sm.u_transfers[l][local * sz..(local + 1) * sz];
+            for (ac, y) in child_grid.iter().enumerate() {
+                parent_basis.eval_all(y, &mut vals);
+                e[ac * k..(ac + 1) * k].copy_from_slice(&vals);
+            }
+        }
+        let eu = sm.u_transfers[l].clone();
+        sm.v_transfers[l].copy_from_slice(&eu);
+    }
+    // Owned coupling rows (a column grid may belong to a remote node —
+    // only its bounding box is needed, which the replicated tree has).
+    for l in c..=depth {
+        let row_start = sm.coupling[l].row_start;
+        let pairs = sm.coupling[l].level.pairs.clone();
+        for (pi, &(t_loc, s)) in pairs.iter().enumerate() {
+            let gt = cheb_grid(&sm.tree.node(l, row_start + t_loc as usize).bbox, g);
+            let gs = cheb_grid(&sm.tree.node(l, s as usize).bbox, g);
+            let blk = sm.coupling[l].level.block_mut(pi, k);
+            for (a, ya) in gt.iter().enumerate() {
+                for (b, yb) in gs.iter().enumerate() {
+                    blk[a * k + b] = kernel.eval(ya, yb);
+                }
+            }
+        }
+    }
+    // Owned dense rows.
+    let dpairs = sm.dense.blocks.pairs.clone();
+    let row_start = sm.dense.row_start;
+    for (pi, &(t_loc, s)) in dpairs.iter().enumerate() {
+        let nt = sm.tree.node(depth, row_start + t_loc as usize).clone();
+        let ns = sm.tree.node(depth, s as usize).clone();
+        let blk = sm.dense.blocks.block_mut(pi);
+        for i in 0..nt.size() {
+            let xi = sm.tree.points.get(sm.tree.perm[nt.start + i]);
+            for jj in 0..ns.size() {
+                let yj = sm.tree.points.get(sm.tree.perm[ns.start + jj]);
+                blk[i * m_pad + jj] = kernel.eval(&xi, &yj);
+            }
+        }
+    }
+    Ok((sm, structure))
 }
 
 /// Dense kernel matrix in the *permuted* (cluster-tree) ordering — the

@@ -59,6 +59,25 @@ impl Kernel for GaussianKernel {
     }
 }
 
+/// The paper's §6.4 bump diffusivity field over coordinates:
+/// κ(x) = 1 + f(x₁; 0, 1.5)·f(x₂; 0, 2.0) (Eqs. 6–7). A plain `fn` (no
+/// closure state) so a [`FractionalKernel`] over it round-trips through
+/// worker CLI flags — every process of a distributed session evaluates
+/// the identical diffusivity.
+pub fn paper_kappa(p: &[f64; MAX_DIM]) -> f64 {
+    1.0 + kappa_bump(p[0], 0.0, 1.5) * kappa_bump(p[1], 0.0, 2.0)
+}
+
+/// The compactly supported bump f(x; c, ℓ) of Eq. 7.
+pub fn kappa_bump(x: f64, c: f64, ell: f64) -> f64 {
+    let r = (x - c) / (ell / 2.0);
+    if r.abs() < 1.0 {
+        (-1.0 / (1.0 - r * r)).exp()
+    } else {
+        0.0
+    }
+}
+
 /// The singular fractional-diffusion kernel
 /// K(x, y) = −2 a(x,y) / |y − x|^{2 + 2β} with a(x,y) = √κ(x)√κ(y)
 /// (§6.4, Eq. 11). The diagonal (x = y) is zero by construction of K.

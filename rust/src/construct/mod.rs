@@ -11,5 +11,7 @@ pub mod builder;
 pub mod chebyshev;
 pub mod kernels;
 
-pub use builder::{build_h2, dense_kernel_matrix};
+pub use builder::{
+    build_branch, build_h2, build_top, dense_kernel_matrix, FORBID_FULL_MATRIX_ENV,
+};
 pub use kernels::{ExponentialKernel, Kernel};

@@ -1,41 +1,50 @@
-//! Branch-local marshaling plans and O(N/P) workspaces.
+//! Branch-local marshaling plans, O(N/P) workspaces and the branch phase
+//! functions of the distributed HGEMV — all reading from a per-rank
+//! [`ShardedMatrix`].
 //!
-//! The PR-2 threaded executor still allocated a *full-size*
-//! [`crate::matvec::HgemvWorkspace`] per rank (the serial plan's offsets
-//! are absolute), so P ranks cost P× the serial memory — the opposite of
-//! the paper's distributed-memory claim. This module slices both the
-//! workspace and the marshaling plan per branch:
+//! PR 3 sliced the *workspace* per branch but every rank still indexed a
+//! shared (or rebuilt) full matrix: basis, transfer, coupling and dense
+//! offsets were global. With [`crate::dist::shard`] the matrix storage
+//! itself is per-rank, so this module now speaks entirely in shard-local
+//! coordinates:
 //!
-//! - [`BranchWorkspace`] holds, for one rank, only its branch's nodes at
-//!   every level l ≥ C plus a *halo*: the remote x̂ nodes its coupling rows
-//!   reference (exactly the [`crate::dist::ExchangePlan`] receive sets)
-//!   and the remote leaves its dense rows read. Totalling O(N/P) plus the
-//!   level-C boundary, vs the serial workspace's O(N).
-//! - [`BranchPlan`] rebases every marshaling offset to that layout: own
-//!   nodes map to `global − first_owned`, halo nodes translate through a
-//!   sorted per-level table (binary search at plan build, pure offset
-//!   arithmetic in the hot path). Matrix data (bases, transfers, coupling
-//!   and dense blocks) stays globally indexed — in-process ranks share it
-//!   immutably, and socket worker processes rebuild it deterministically.
+//! - [`BranchPlan`] rebases every offset to the shard layout: leaf bases
+//!   and transfers index the owned-node buffers, coupling/dense block
+//!   offsets index the owned-row buffers (the shard's conflict-free
+//!   batches *are* the owned-row prefilter of the global batches, in
+//!   serial order), and halo x̂ nodes translate through the sorted
+//!   per-level tables (binary search at plan build, pure offset
+//!   arithmetic in the hot path). The only globally indexed matrix datum
+//!   a branch rank touches is its level-C boundary transfer, which lives
+//!   in the shard's replicated top at offset `rank·k_C·k_{C-1}`.
+//! - [`BranchWorkspace`] holds the rank's O(N/P) coefficient/padded
+//!   buffers: own branch nodes plus the level-C halo (exactly the
+//!   [`crate::dist::ExchangePlan`] receive sets) and the dense-halo
+//!   leaves.
+//! - [`BranchIo`] is the structure-only input layout (owned leaf range +
+//!   dense halo) that the socket *coordinator* needs to ship each
+//!   worker its `Input` block without building any branch plan — or any
+//!   matrix data at all.
 //!
-//! The branch phase functions below feed the *same* per-block GEMMs to the
-//! backend in the *same* per-destination order as the serial sweep
-//! (prefiltered batch entries keep their serial relative order), so the
-//! distributed product stays bitwise identical to [`crate::matvec::hgemv`]
-//! for every P — now with per-rank memory that actually shrinks as P
-//! grows (asserted by `tests/transport.rs`'s memory regression test).
+//! The branch phase functions feed the *same* per-block GEMMs to the
+//! backend in the *same* per-destination order as the serial sweep, so
+//! the distributed product stays bitwise identical to
+//! [`crate::matvec::hgemv`] for every P — with per-rank matrix *and*
+//! workspace memory that shrinks as P grows (asserted by
+//! `tests/transport.rs` and `tests/shard.rs`).
 
 use std::ops::Range;
 
 use crate::backend::{BatchRef, ComputeBackend, GemmDims};
-use crate::dist::ExchangePlan;
+use crate::clustering::ClusterTree;
+use crate::dist::shard::ShardedMatrix;
+use crate::dist::{Decomposition, ExchangePlan};
 use crate::matvec::plan::{BatchOffsets, LevelMultPlan, LevelTransferPlan};
 use crate::metrics::Metrics;
-use crate::tree::H2Matrix;
 
-/// The branch-sliced marshaling plan of one rank: every coefficient offset
-/// is local to that rank's [`BranchWorkspace`]; matrix-data offsets stay
-/// global.
+/// The branch-sliced marshaling plan of one rank: every offset — vector,
+/// coefficient *and* matrix data — is local to that rank's
+/// [`ShardedMatrix`] + [`BranchWorkspace`].
 #[derive(Clone, Debug)]
 pub struct BranchPlan {
     pub rank: usize,
@@ -50,23 +59,24 @@ pub struct BranchPlan {
     pub xhat_halo: Vec<Vec<u32>>,
     /// Sorted remote leaves read by owned dense rows.
     pub xpad_halo: Vec<u32>,
-    /// Leaf-stage offsets over the own leaves: bases globally indexed,
-    /// vector/coefficient offsets local.
+    /// Leaf-stage offsets over the own leaves, all shard-local.
     pub leaf_basis_off: Vec<usize>,
     pub leaf_vec_off: Vec<usize>,
     pub leaf_coeff_off: Vec<usize>,
     /// `up[l]` for l in C+1..=depth (lower indices empty): interlevel
     /// transfer parity batches over the own parents of level l-1, shared
     /// by the upsweep and the downsweep exactly like the serial plan.
+    /// Transfer offsets index the shard's local transfer buffers.
     pub up: Vec<LevelTransferPlan>,
-    /// `mult[l]` for l in C..=depth (lower indices empty): coupling
-    /// batches prefiltered to owned rows, src offsets translated through
-    /// the halo table.
+    /// `mult[l]` for l in C..=depth (lower indices empty): the shard's
+    /// conflict-free coupling batches, src offsets translated through the
+    /// halo table, block offsets local pair indices.
     pub mult: Vec<LevelMultPlan>,
-    /// Dense batches prefiltered to owned rows.
+    /// The shard's dense batches.
     pub dense: LevelMultPlan,
-    /// Offset of this rank's level-C transfer matrix in `u.transfers[C]`
-    /// (the C-level boundary downsweep). Zero when C = 0 (unused).
+    /// Offset of this rank's level-C transfer matrix in the shard's
+    /// replicated `top_u_transfers[C]` (the C-level boundary downsweep).
+    /// Zero when C = 0 (unused).
     pub boundary_transfer_off: usize,
     /// `sends[l]` = (destination rank, local x̂ offsets of the plan's send
     /// nodes) — what to ship as soon as level l's upsweep finishes.
@@ -77,34 +87,35 @@ pub struct BranchPlan {
 }
 
 impl BranchPlan {
-    /// Slice the marshaling plan of `a` for `rank` under the exchange
+    /// Build the marshaling plan of `sm`'s branch under the exchange
     /// plan's decomposition.
-    pub fn build(a: &H2Matrix, ex: &ExchangePlan, rank: usize, nv: usize) -> Self {
+    pub fn build(sm: &ShardedMatrix, ex: &ExchangePlan, nv: usize) -> Self {
         let d = ex.decomp;
+        assert_eq!(d, sm.decomp, "exchange plan and shard use different decompositions");
+        let rank = sm.branch_rank();
         let (c, depth) = (d.c_level, d.depth);
-        let m_pad = a.u.leaf_dim;
-        let k_leaf = a.rank(depth);
+        let m_pad = sm.leaf_dim;
+        let k_leaf = sm.v_ranks[depth];
         let lpr = d.leaves_per_rank();
-        let leaf_range = d.own_range(rank, depth);
+        let leaf_range = sm.leaf_range.clone();
 
         // Halo tables (the exchange plan's receive sets, merged per level).
         let mut xhat_halo: Vec<Vec<u32>> = vec![Vec::new(); depth + 1];
         for l in c..=depth {
             xhat_halo[l] = ex.halo_nodes(l, rank);
         }
-        let mut xpad_halo: Vec<u32> = a
+        let mut xpad_halo: Vec<u32> = sm
             .dense
+            .blocks
             .pairs
             .iter()
-            .filter(|&&(t, s)| {
-                leaf_range.contains(&(t as usize)) && !leaf_range.contains(&(s as usize))
-            })
+            .filter(|&&(_, s)| !leaf_range.contains(&(s as usize)))
             .map(|&(_, s)| s)
             .collect();
         xpad_halo.sort_unstable();
         xpad_halo.dedup();
 
-        // Local node index at level l: own nodes first (rebased through
+        // Local x̂ node index at level l: own nodes first (rebased through
         // the decomposition), then the sorted halo.
         let xloc = |l: usize, j: usize| -> usize {
             if d.own_range(rank, l).contains(&j) {
@@ -126,21 +137,21 @@ impl BranchPlan {
             }
         };
 
-        // Leaf stage (own leaves).
+        // Leaf stage (own leaves, shard-local bases).
         let mut leaf_basis_off = Vec::with_capacity(lpr);
         let mut leaf_vec_off = Vec::with_capacity(lpr);
         let mut leaf_coeff_off = Vec::with_capacity(lpr);
-        for j in leaf_range.clone() {
-            leaf_basis_off.push(j * m_pad * k_leaf);
-            leaf_vec_off.push((j - leaf_range.start) * m_pad * nv);
-            leaf_coeff_off.push((j - leaf_range.start) * k_leaf * nv);
+        for slot in 0..leaf_range.len() {
+            leaf_basis_off.push(slot * m_pad * k_leaf);
+            leaf_vec_off.push(slot * m_pad * nv);
+            leaf_coeff_off.push(slot * k_leaf * nv);
         }
 
-        // Interlevel transfers: own parents of level l-1, local child and
-        // parent coefficient offsets, global transfer offsets.
+        // Interlevel transfers: own parents of level l-1, all offsets
+        // local (children of own parents are own nodes).
         let mut up: Vec<LevelTransferPlan> = vec![LevelTransferPlan::default(); depth + 1];
         for l in (c + 1)..=depth {
-            let (k_l, k_par) = (a.rank(l), a.rank(l - 1));
+            let (k_l, k_par) = (sm.u_ranks[l], sm.u_ranks[l - 1]);
             let parents = d.own_range(rank, l - 1);
             let child_base = d.own_range(rank, l).start;
             let plan = &mut up[l];
@@ -149,31 +160,30 @@ impl BranchPlan {
                 po.nb = parents.len();
                 for (i, p) in parents.clone().enumerate() {
                     let child = 2 * p + parity;
-                    po.transfer_off.push(child * k_l * k_par);
+                    po.transfer_off.push((child - child_base) * k_l * k_par);
                     po.child_off.push((child - child_base) * k_l * nv);
                     po.parent_off.push(i * k_par * nv);
                 }
             }
         }
 
-        // Coupling batches prefiltered to owned rows; serial relative
-        // order within each batch is preserved, so per-destination
-        // accumulation order matches the whole-level sweep bitwise.
+        // Coupling batches: the shard's batches *are* the owned-row
+        // prefilter of the global conflict-free batches, in serial
+        // relative order — so per-destination accumulation order matches
+        // the whole-level sweep bitwise.
         let mut mult: Vec<LevelMultPlan> = Vec::with_capacity(depth + 1);
-        for (l, cl) in a.coupling.iter().enumerate() {
+        for l in 0..=depth {
             let mut lp = LevelMultPlan::default();
             if l >= c {
-                let k = a.rank(l);
-                let rows = d.own_range(rank, l);
-                for batch in &cl.batches {
+                let k = sm.u_ranks[l];
+                let sc = &sm.coupling[l];
+                for batch in &sc.level.batches {
                     let mut bo = BatchOffsets::default();
                     for &pi in batch {
-                        let (t, s) = cl.pairs[pi as usize];
-                        if rows.contains(&(t as usize)) {
-                            bo.block_off.push(pi as usize * k * k);
-                            bo.src_off.push(xloc(l, s as usize) * k * nv);
-                            bo.dst_off.push((t as usize - rows.start) * k * nv);
-                        }
+                        let (t_loc, s) = sc.level.pairs[pi as usize];
+                        bo.block_off.push(pi as usize * k * k);
+                        bo.src_off.push(xloc(l, s as usize) * k * nv);
+                        bo.dst_off.push(t_loc as usize * k * nv);
                     }
                     bo.nb = bo.dst_off.len();
                     if bo.nb > 0 {
@@ -184,17 +194,15 @@ impl BranchPlan {
             mult.push(lp);
         }
 
-        // Dense batches prefiltered to owned rows.
+        // Dense batches (shard-local rows and blocks).
         let mut dense = LevelMultPlan::default();
-        for batch in &a.dense.batches {
+        for batch in &sm.dense.blocks.batches {
             let mut bo = BatchOffsets::default();
             for &pi in batch {
-                let (t, s) = a.dense.pairs[pi as usize];
-                if leaf_range.contains(&(t as usize)) {
-                    bo.block_off.push(pi as usize * m_pad * m_pad);
-                    bo.src_off.push(leaf_loc(s as usize) * m_pad * nv);
-                    bo.dst_off.push((t as usize - leaf_range.start) * m_pad * nv);
-                }
+                let (t_loc, s) = sm.dense.blocks.pairs[pi as usize];
+                bo.block_off.push(pi as usize * m_pad * m_pad);
+                bo.src_off.push(leaf_loc(s as usize) * m_pad * nv);
+                bo.dst_off.push(t_loc as usize * m_pad * nv);
             }
             bo.nb = bo.dst_off.len();
             if bo.nb > 0 {
@@ -206,7 +214,7 @@ impl BranchPlan {
         let mut sends: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); depth + 1];
         let mut recv_scatter: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); depth + 1];
         for l in c..=depth {
-            let k = a.v.ranks[l];
+            let k = sm.v_ranks[l];
             let own_start = d.own_range(rank, l).start;
             for (dst, nodes) in &ex.levels[l].send[rank] {
                 let offs =
@@ -221,7 +229,7 @@ impl BranchPlan {
         }
 
         let boundary_transfer_off =
-            if c > 0 { rank * a.rank(c) * a.rank(c - 1) } else { 0 };
+            if c > 0 { rank * sm.u_ranks[c] * sm.u_ranks[c - 1] } else { 0 };
 
         BranchPlan {
             rank,
@@ -253,17 +261,52 @@ impl BranchPlan {
     /// dense leaf halo and the parent ŷ block — everything a rank stores
     /// beyond its own 1/P share. The memory regression test allows exactly
     /// this on top of `serial/P`.
-    pub fn halo_bytes(&self, a: &H2Matrix) -> usize {
+    pub fn halo_bytes(&self, sm: &ShardedMatrix) -> usize {
         let nv = self.nv;
         let mut words = 0usize;
         for l in self.c_level..=self.depth {
-            words += self.xhat_halo[l].len() * a.v.ranks[l] * nv;
+            words += self.xhat_halo[l].len() * sm.v_ranks[l] * nv;
         }
-        words += self.xpad_halo.len() * a.u.leaf_dim * nv;
+        words += self.xpad_halo.len() * sm.leaf_dim * nv;
         if self.c_level > 0 {
-            words += a.u.ranks[self.c_level - 1] * nv;
+            words += sm.u_ranks[self.c_level - 1] * nv;
         }
         words * 8
+    }
+}
+
+/// The structure-only input layout of one rank: its owned leaf range plus
+/// the sorted remote leaves its dense rows read. This is everything the
+/// socket coordinator needs to assemble a worker's `Input` block (and to
+/// size its `Output`), derivable from the [`MatrixStructure`] alone — no
+/// matrix data, no branch plan.
+///
+/// [`MatrixStructure`]: crate::admissibility::MatrixStructure
+#[derive(Clone, Debug)]
+pub struct BranchIo {
+    pub leaf_range: Range<usize>,
+    pub xpad_halo: Vec<u32>,
+}
+
+impl BranchIo {
+    /// Input layout of `rank` given the global dense pair list.
+    pub fn build(dense_pairs: &[(u32, u32)], d: &Decomposition, rank: usize) -> Self {
+        let leaf_range = d.own_range(rank, d.depth);
+        let mut xpad_halo: Vec<u32> = dense_pairs
+            .iter()
+            .filter(|&&(t, s)| {
+                leaf_range.contains(&(t as usize)) && !leaf_range.contains(&(s as usize))
+            })
+            .map(|&(_, s)| s)
+            .collect();
+        xpad_halo.sort_unstable();
+        xpad_halo.dedup();
+        BranchIo { leaf_range, xpad_halo }
+    }
+
+    /// f64 length of the rank's padded input block.
+    pub fn x_words(&self, m_pad: usize, nv: usize) -> usize {
+        (self.leaf_range.len() + self.xpad_halo.len()) * m_pad * nv
     }
 }
 
@@ -285,9 +328,9 @@ pub struct BranchWorkspace {
 }
 
 impl BranchWorkspace {
-    pub fn new(a: &H2Matrix, bp: &BranchPlan) -> Self {
+    pub fn new(sm: &ShardedMatrix, bp: &BranchPlan) -> Self {
         let (c, depth, nv) = (bp.c_level, bp.depth, bp.nv);
-        let m_pad = a.u.leaf_dim;
+        let m_pad = sm.leaf_dim;
         let lpr = bp.leaf_range.len();
         let mut xhat = Vec::with_capacity(depth + 1);
         let mut yhat = Vec::with_capacity(depth + 1);
@@ -297,11 +340,11 @@ impl BranchWorkspace {
                 yhat.push(Vec::new());
             } else {
                 let w = bp.own_width(l);
-                xhat.push(vec![0.0; (w + bp.xhat_halo[l].len()) * a.v.ranks[l] * nv]);
-                yhat.push(vec![0.0; w * a.u.ranks[l] * nv]);
+                xhat.push(vec![0.0; (w + bp.xhat_halo[l].len()) * sm.v_ranks[l] * nv]);
+                yhat.push(vec![0.0; w * sm.u_ranks[l] * nv]);
             }
         }
-        let parent = if c > 0 { vec![0.0; a.u.ranks[c - 1] * nv] } else { Vec::new() };
+        let parent = if c > 0 { vec![0.0; sm.u_ranks[c - 1] * nv] } else { Vec::new() };
         BranchWorkspace {
             nv,
             xhat,
@@ -312,10 +355,9 @@ impl BranchWorkspace {
         }
     }
 
-    /// Zero every buffer. For embedders that keep a workspace alive across
-    /// products: the phase functions accumulate (`accumulate: true`), so a
-    /// reused workspace must be cleared first. The built-in executors
-    /// currently allocate fresh (zeroed) workspaces per product.
+    /// Zero every buffer. The phase functions accumulate
+    /// (`accumulate: true`), so a workspace reused across products — as
+    /// the persistent socket worker session does — must be cleared first.
     pub fn clear(&mut self) {
         for l in &mut self.xhat {
             l.fill(0.0);
@@ -340,19 +382,26 @@ impl BranchWorkspace {
     }
 }
 
-/// Gather the branch's padded input (own leaves then halo leaves) from the
-/// full permuted input vector. The in-process executor calls this per
-/// rank; the socket coordinator calls it to assemble each worker's
-/// `Input` message — either way a rank only ever stores these O(N/P)
-/// rows.
-pub fn fill_branch_input(a: &H2Matrix, bp: &BranchPlan, x: &[f64], x_pad: &mut [f64]) {
-    let nv = bp.nv;
-    let depth = bp.depth;
-    let m_pad = a.u.leaf_dim;
+/// Gather one rank's padded input (own leaves then halo leaves) from the
+/// full permuted input vector into `x_pad`, given only the structure-level
+/// layout. The in-process executor calls this per rank; the socket
+/// coordinator calls it to assemble each worker's `Input` message —
+/// either way a rank only ever stores these O(N/P) rows.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_input_rows(
+    tree: &ClusterTree,
+    leaf_range: Range<usize>,
+    xpad_halo: &[u32],
+    m_pad: usize,
+    nv: usize,
+    x: &[f64],
+    x_pad: &mut [f64],
+) {
+    let depth = tree.depth;
     x_pad.fill(0.0);
     let mut slot = 0usize;
-    for j in bp.leaf_range.clone().chain(bp.xpad_halo.iter().map(|&j| j as usize)) {
-        let node = a.tree.node(depth, j);
+    for j in leaf_range.chain(xpad_halo.iter().map(|&j| j as usize)) {
+        let node = tree.node(depth, j);
         let rows = node.size();
         let src = &x[node.start * nv..(node.start + rows) * nv];
         x_pad[slot * m_pad * nv..slot * m_pad * nv + rows * nv].copy_from_slice(src);
@@ -360,10 +409,27 @@ pub fn fill_branch_input(a: &H2Matrix, bp: &BranchPlan, x: &[f64], x_pad: &mut [
     }
 }
 
+/// [`fill_input_rows`] with the layout taken from a [`BranchIo`].
+pub fn fill_io_input(
+    tree: &ClusterTree,
+    io: &BranchIo,
+    m_pad: usize,
+    nv: usize,
+    x: &[f64],
+    x_pad: &mut [f64],
+) {
+    fill_input_rows(tree, io.leaf_range.clone(), &io.xpad_halo, m_pad, nv, x, x_pad);
+}
+
+/// [`fill_input_rows`] with the layout taken from a built branch plan.
+pub fn fill_branch_input(sm: &ShardedMatrix, bp: &BranchPlan, x: &[f64], x_pad: &mut [f64]) {
+    fill_input_rows(&sm.tree, bp.leaf_range.clone(), &bp.xpad_halo, sm.leaf_dim, bp.nv, x, x_pad);
+}
+
 /// Scatter the branch's padded output into `y_chunk`, the rank's disjoint
 /// slice of the permuted output starting at point row `base_row`.
 pub fn unpad_branch_output(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     bp: &BranchPlan,
     y_pad: &[f64],
     y_chunk: &mut [f64],
@@ -371,9 +437,9 @@ pub fn unpad_branch_output(
 ) {
     let nv = bp.nv;
     let depth = bp.depth;
-    let m_pad = a.u.leaf_dim;
+    let m_pad = sm.leaf_dim;
     for (slot, j) in bp.leaf_range.clone().enumerate() {
-        let node = a.tree.node(depth, j);
+        let node = sm.tree.node(depth, j);
         let rows = node.size();
         let src = &y_pad[slot * m_pad * nv..slot * m_pad * nv + rows * nv];
         let r0 = node.start - base_row;
@@ -383,9 +449,9 @@ pub fn unpad_branch_output(
 
 /// Upsweep leaf stage over the own leaves: x̂_j = V_jᵀ x_j (batched,
 /// trans_a) — the branch-local counterpart of
-/// [`crate::matvec::upsweep_leaf_range`].
+/// [`crate::matvec::upsweep_leaf_range`], reading the shard's own bases.
 pub fn branch_upsweep_leaf(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -399,14 +465,14 @@ pub fn branch_upsweep_leaf(
     backend.batched_gemm(
         GemmDims {
             nb: bp.leaf_basis_off.len(),
-            m: a.v.ranks[depth],
-            k: a.v.leaf_dim,
+            m: sm.v_ranks[depth],
+            k: sm.leaf_dim,
             n: nv,
             trans_a: true,
             trans_b: false,
             accumulate: false,
         },
-        BatchRef { data: &a.v.leaf_bases, offsets: &bp.leaf_basis_off },
+        BatchRef { data: &sm.v_leaf_bases, offsets: &bp.leaf_basis_off },
         BatchRef { data: &bw.x_pad, offsets: &bp.leaf_vec_off },
         &mut bw.xhat[depth],
         &bp.leaf_coeff_off,
@@ -417,7 +483,7 @@ pub fn branch_upsweep_leaf(
 /// One upsweep transfer level (children l → own parents of l-1), two
 /// parity batches in serial order.
 pub fn branch_upsweep_transfer(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -425,7 +491,7 @@ pub fn branch_upsweep_transfer(
     l: usize,
 ) {
     let nv = bp.nv;
-    let (k_l, k_par) = (a.v.ranks[l], a.v.ranks[l - 1]);
+    let (k_l, k_par) = (sm.v_ranks[l], sm.v_ranks[l - 1]);
     let (lo, hi) = bw.xhat.split_at_mut(l);
     let parent = &mut lo[l - 1];
     let child = &hi[0];
@@ -444,7 +510,7 @@ pub fn branch_upsweep_transfer(
                 trans_b: false,
                 accumulate: true,
             },
-            BatchRef { data: &a.v.transfers[l], offsets: &po.transfer_off },
+            BatchRef { data: &sm.v_transfers[l], offsets: &po.transfer_off },
             BatchRef { data: child, offsets: &po.child_off },
             parent,
             &po.parent_off,
@@ -453,10 +519,10 @@ pub fn branch_upsweep_transfer(
     }
 }
 
-/// Tree multiplication of level l over the owned rows (prefiltered
+/// Tree multiplication of level l over the owned rows (the shard's
 /// conflict-free batches, serial accumulation order).
 pub fn branch_tree_multiply(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -464,7 +530,7 @@ pub fn branch_tree_multiply(
     l: usize,
 ) {
     let nv = bp.nv;
-    let k = a.rank(l);
+    let k = sm.u_ranks[l];
     for bo in &bp.mult[l].batches {
         backend.batched_gemm(
             GemmDims {
@@ -476,7 +542,7 @@ pub fn branch_tree_multiply(
                 trans_b: false,
                 accumulate: true,
             },
-            BatchRef { data: &a.coupling[l].data, offsets: &bo.block_off },
+            BatchRef { data: &sm.coupling[l].level.data, offsets: &bo.block_off },
             BatchRef { data: &bw.xhat[l], offsets: &bo.src_off },
             &mut bw.yhat[l],
             &bo.dst_off,
@@ -488,14 +554,14 @@ pub fn branch_tree_multiply(
 /// Dense phase over the owned block rows (needs no remote coefficients —
 /// only the x halo, which arrived with the input).
 pub fn branch_dense_multiply(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
     metrics: &mut Metrics,
 ) {
     let nv = bp.nv;
-    let m_pad = a.dense.m_pad;
+    let m_pad = sm.leaf_dim;
     for bo in &bp.dense.batches {
         backend.batched_gemm(
             GemmDims {
@@ -507,7 +573,7 @@ pub fn branch_dense_multiply(
                 trans_b: false,
                 accumulate: true,
             },
-            BatchRef { data: &a.dense.data, offsets: &bo.block_off },
+            BatchRef { data: &sm.dense.blocks.data, offsets: &bo.block_off },
             BatchRef { data: &bw.x_pad, offsets: &bo.src_off },
             &mut bw.y_pad,
             &bo.dst_off,
@@ -520,9 +586,11 @@ pub fn branch_dense_multiply(
 /// applied by the receiving rank on top of its own coupling sums — the
 /// same single-child parity GEMM as
 /// [`crate::matvec::downsweep_transfer_parity`], so the boundary node's
-/// accumulation order matches the serial sweep bitwise.
+/// accumulation order matches the serial sweep bitwise. The transfer is
+/// read from the shard's replicated top (level C holds all P boundary
+/// transfers).
 pub fn branch_downsweep_boundary(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -531,7 +599,7 @@ pub fn branch_downsweep_boundary(
     let c = bp.c_level;
     debug_assert!(c > 0, "no boundary without a top subtree");
     let nv = bp.nv;
-    let (k_c, k_par) = (a.u.ranks[c], a.u.ranks[c - 1]);
+    let (k_c, k_par) = (sm.u_ranks[c], sm.u_ranks[c - 1]);
     backend.batched_gemm(
         GemmDims {
             nb: 1,
@@ -542,7 +610,7 @@ pub fn branch_downsweep_boundary(
             trans_b: false,
             accumulate: true,
         },
-        BatchRef { data: &a.u.transfers[c], offsets: &[bp.boundary_transfer_off] },
+        BatchRef { data: &sm.top_u_transfers[c], offsets: &[bp.boundary_transfer_off] },
         BatchRef { data: &bw.parent, offsets: &[0] },
         &mut bw.yhat[c],
         &[0],
@@ -554,7 +622,7 @@ pub fn branch_downsweep_boundary(
 /// parity batches reusing the upsweep offsets with roles swapped, exactly
 /// like the serial plan.
 pub fn branch_downsweep_transfer(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -562,7 +630,7 @@ pub fn branch_downsweep_transfer(
     l: usize,
 ) {
     let nv = bp.nv;
-    let (k_l, k_par) = (a.u.ranks[l], a.u.ranks[l - 1]);
+    let (k_l, k_par) = (sm.u_ranks[l], sm.u_ranks[l - 1]);
     let (lo, hi) = bw.yhat.split_at_mut(l);
     let parent = &lo[l - 1];
     let child = &mut hi[0];
@@ -581,7 +649,7 @@ pub fn branch_downsweep_transfer(
                 trans_b: false,
                 accumulate: true,
             },
-            BatchRef { data: &a.u.transfers[l], offsets: &po.transfer_off },
+            BatchRef { data: &sm.u_transfers[l], offsets: &po.transfer_off },
             BatchRef { data: parent, offsets: &po.parent_off },
             child,
             &po.child_off,
@@ -592,7 +660,7 @@ pub fn branch_downsweep_transfer(
 
 /// Downsweep leaf expansion over the own leaves: y_j += U_j ŷ_j.
 pub fn branch_downsweep_leaf(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     bp: &BranchPlan,
     bw: &mut BranchWorkspace,
@@ -606,14 +674,14 @@ pub fn branch_downsweep_leaf(
     backend.batched_gemm(
         GemmDims {
             nb: bp.leaf_basis_off.len(),
-            m: a.u.leaf_dim,
-            k: a.u.ranks[depth],
+            m: sm.leaf_dim,
+            k: sm.u_ranks[depth],
             n: nv,
             trans_a: false,
             trans_b: false,
             accumulate: true,
         },
-        BatchRef { data: &a.u.leaf_bases, offsets: &bp.leaf_basis_off },
+        BatchRef { data: &sm.u_leaf_bases, offsets: &bp.leaf_basis_off },
         BatchRef { data: &bw.yhat[depth], offsets: &bp.leaf_coeff_off },
         &mut bw.y_pad,
         &bp.leaf_vec_off,
@@ -626,8 +694,8 @@ mod tests {
     use super::*;
     use crate::config::H2Config;
     use crate::construct::{build_h2, ExponentialKernel};
-    use crate::dist::Decomposition;
     use crate::geometry::PointSet;
+    use crate::tree::H2Matrix;
 
     fn sample() -> H2Matrix {
         let points = PointSet::grid_2d(16, 1.0); // N = 256
@@ -642,10 +710,12 @@ mod tests {
         for p in [1usize, 2, 4, 8] {
             let d = Decomposition::new(p, a.depth()).unwrap();
             let ex = ExchangePlan::build(&a, d);
+            let shards: Vec<ShardedMatrix> =
+                (0..p).map(|r| ShardedMatrix::from_global(&a, d, r)).collect();
             let plans: Vec<BranchPlan> =
-                (0..p).map(|r| BranchPlan::build(&a, &ex, r, 1)).collect();
+                shards.iter().map(|sm| BranchPlan::build(sm, &ex, 1)).collect();
             // Every coupling block at a level >= C appears in exactly one
-            // rank's prefiltered batches.
+            // rank's batches.
             for (l, cl) in a.coupling.iter().enumerate() {
                 if l < d.c_level {
                     continue;
@@ -673,15 +743,35 @@ mod tests {
         let d = Decomposition::new(4, a.depth()).unwrap();
         let ex = ExchangePlan::build(&a, d);
         for r in 0..4 {
-            let bp = BranchPlan::build(&a, &ex, r, 2);
+            let sm = ShardedMatrix::from_global(&a, d, r);
+            let bp = BranchPlan::build(&sm, &ex, 2);
             for l in d.c_level..=a.depth() {
                 let plan_nodes: usize =
                     ex.levels[l].recv[r].iter().map(|(_, ns)| ns.len()).sum();
                 assert_eq!(bp.xhat_halo[l].len(), plan_nodes, "rank {r} level {l}");
             }
             // Halo bytes are the advertised slack.
-            let bw = BranchWorkspace::new(&a, &bp);
-            assert!(bp.halo_bytes(&a) < bw.memory_bytes());
+            let bw = BranchWorkspace::new(&sm, &bp);
+            assert!(bp.halo_bytes(&sm) < bw.memory_bytes());
+        }
+    }
+
+    #[test]
+    fn branch_io_matches_branch_plan_layout() {
+        // The coordinator's structure-only input layout must agree with
+        // the worker's shard-derived plan, or Input payloads would be
+        // rejected.
+        let a = sample();
+        let d = Decomposition::new(4, a.depth()).unwrap();
+        let ex = ExchangePlan::build(&a, d);
+        for r in 0..4 {
+            let sm = ShardedMatrix::from_global(&a, d, r);
+            let bp = BranchPlan::build(&sm, &ex, 3);
+            let io = BranchIo::build(&a.dense.pairs, &d, r);
+            assert_eq!(io.leaf_range, bp.leaf_range, "rank {r}");
+            assert_eq!(io.xpad_halo, bp.xpad_halo, "rank {r}");
+            let bw = BranchWorkspace::new(&sm, &bp);
+            assert_eq!(io.x_words(sm.leaf_dim, 3), bw.x_pad.len(), "rank {r}");
         }
     }
 
@@ -693,8 +783,9 @@ mod tests {
             let ex = ExchangePlan::build(&a, d);
             (0..p)
                 .map(|r| {
-                    let bp = BranchPlan::build(&a, &ex, r, 1);
-                    BranchWorkspace::new(&a, &bp).memory_bytes()
+                    let sm = ShardedMatrix::from_global(&a, d, r);
+                    let bp = BranchPlan::build(&sm, &ex, 1);
+                    BranchWorkspace::new(&sm, &bp).memory_bytes()
                 })
                 .max()
                 .unwrap()

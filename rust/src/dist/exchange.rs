@@ -12,6 +12,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use crate::admissibility::MatrixStructure;
 use crate::dist::Decomposition;
 use crate::tree::H2Matrix;
 
@@ -39,11 +40,30 @@ impl ExchangePlan {
     /// Precompute the exchange sets of `a` under decomposition `d`.
     pub fn build(a: &H2Matrix, d: Decomposition) -> Self {
         assert_eq!(d.depth, a.depth(), "decomposition built for a different tree");
-        let mut levels = Vec::with_capacity(a.depth() + 1);
-        for l in 0..=a.depth() {
+        let levels: Vec<&[(u32, u32)]> = a.coupling.iter().map(|cl| cl.pairs.as_slice()).collect();
+        Self::from_level_pairs(&levels, d)
+    }
+
+    /// Precompute the exchange sets from the index-only
+    /// [`MatrixStructure`] — what a sharded worker process has (it never
+    /// assembles the global matrix, but the structure is O(N) index data
+    /// every rank derives from the replicated cluster tree).
+    pub fn build_from_structure(s: &MatrixStructure, d: Decomposition) -> Self {
+        let levels: Vec<&[(u32, u32)]> = s.coupling.iter().map(|v| v.as_slice()).collect();
+        Self::from_level_pairs(&levels, d)
+    }
+
+    fn from_level_pairs(pairs_by_level: &[&[(u32, u32)]], d: Decomposition) -> Self {
+        assert_eq!(
+            pairs_by_level.len(),
+            d.depth + 1,
+            "decomposition built for a different tree"
+        );
+        let mut levels = Vec::with_capacity(d.depth + 1);
+        for (l, level_pairs) in pairs_by_level.iter().enumerate() {
             let mut need: Vec<BTreeMap<usize, BTreeSet<u32>>> = vec![BTreeMap::new(); d.p];
             if l >= d.c_level {
-                for &(t, s) in &a.coupling[l].pairs {
+                for &(t, s) in level_pairs.iter() {
                     let pt = d.owner(l, t as usize);
                     let ps = d.owner(l, s as usize);
                     if pt != ps {

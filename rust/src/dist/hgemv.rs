@@ -104,6 +104,69 @@ impl CostModel {
         let words = (nb * (m * k + k * n + m * n)) as f64;
         self.t_launch + flops * self.flop_time + 8.0 * words * self.byte_time
     }
+
+    /// The model the schedule prices with on *this* host: the calibration
+    /// file named by the `H2OPUS_COST_CALIBRATION` environment variable
+    /// (written by `python/tests/model_check.py --fit` from measured E1/E2
+    /// bench rows; the CLI's `--cost-calibration` flag sets the variable),
+    /// falling back to the V100-share defaults. Cached after first load.
+    pub fn host() -> CostModel {
+        static CACHE: std::sync::OnceLock<CostModel> = std::sync::OnceLock::new();
+        *CACHE.get_or_init(|| {
+            match std::env::var_os("H2OPUS_COST_CALIBRATION") {
+                Some(path) => {
+                    let path = std::path::PathBuf::from(path);
+                    match CostModel::from_calibration_file(&path) {
+                        Some(m) => m,
+                        None => {
+                            eprintln!(
+                                "h2opus: could not load CostModel calibration from {} — \
+                                 using V100-share defaults",
+                                path.display()
+                            );
+                            CostModel::default()
+                        }
+                    }
+                }
+                None => CostModel::default(),
+            }
+        })
+    }
+
+    /// Parse a `cost_model_calibration.json` file (the `--fit` output).
+    pub fn from_calibration_file(path: &std::path::Path) -> Option<CostModel> {
+        let text = std::fs::read_to_string(path).ok()?;
+        CostModel::from_json(&text)
+    }
+
+    /// Parse the three constants out of the calibration JSON. Hand-rolled
+    /// key scan (the offline image vendors no serde): takes the *first*
+    /// occurrence of each key, which in the fit's payload is the
+    /// calibrated top-level value (the nested `"defaults"` object comes
+    /// after). Returns `None` unless all three parse to finite positive
+    /// numbers.
+    pub fn from_json(text: &str) -> Option<CostModel> {
+        let t_launch = json_number(text, "t_launch")?;
+        let flop_time = json_number(text, "flop_time")?;
+        let byte_time = json_number(text, "byte_time")?;
+        let ok = |v: f64| v.is_finite() && v > 0.0;
+        if ok(t_launch) && ok(flop_time) && ok(byte_time) {
+            Some(CostModel { t_launch, flop_time, byte_time })
+        } else {
+            None
+        }
+    }
+}
+
+/// First numeric value following `"key":` in a JSON text.
+fn json_number(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let i = text.find(&pat)?;
+    let rest = text[i + pat.len()..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|ch: char| !(ch.is_ascii_digit() || matches!(ch, '+' | '-' | '.' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 /// Outcome of one distributed product.
@@ -278,7 +341,7 @@ impl DistHgemv {
         metrics: &mut Metrics,
         account_comm: bool,
     ) -> DistReport {
-        let model = CostModel::default();
+        let model = CostModel::host();
         let net = &opts.net;
         let d = self.decomp;
         let (p, c, depth) = (d.p, d.c_level, d.depth);
@@ -606,6 +669,50 @@ mod tests {
         assert_eq!(rep.measured_per_rank.as_ref().unwrap().len(), 4);
         // The virtual schedule is still priced alongside.
         assert!(rep.time > 0.0);
+    }
+
+    #[test]
+    fn cost_model_parses_calibration_json() {
+        // The --fit payload shape: calibrated values first, defaults in a
+        // nested object afterwards (first-occurrence scan must pick the
+        // calibrated ones).
+        let json = r#"{
+  "t_launch": 2.5e-06,
+  "flop_time": 1.25e-10,
+  "byte_time": 3.0e-11,
+  "rel_rms_residual": 0.21,
+  "rows_used": 12,
+  "defaults": {"t_launch": 1.5e-06, "flop_time": 4.0e-10, "byte_time": 4.0e-11}
+}"#;
+        let m = CostModel::from_json(json).expect("parse");
+        assert_eq!(m.t_launch, 2.5e-6);
+        assert_eq!(m.flop_time, 1.25e-10);
+        assert_eq!(m.byte_time, 3.0e-11);
+        // Malformed / non-positive constants are rejected, not defaulted.
+        assert!(CostModel::from_json("{}").is_none());
+        assert!(CostModel::from_json(
+            r#"{"t_launch": -1.0, "flop_time": 1e-10, "byte_time": 1e-11}"#
+        )
+        .is_none());
+        assert!(CostModel::from_json(
+            r#"{"t_launch": "nope", "flop_time": 1e-10, "byte_time": 1e-11}"#
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn cost_model_loads_calibration_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("h2opus-calib-test-{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"t_launch": 1e-6, "flop_time": 2e-10, "byte_time": 5e-11}"#)
+            .expect("write calibration");
+        let m = CostModel::from_calibration_file(&path).expect("load");
+        assert_eq!(m.flop_time, 2e-10);
+        let _ = std::fs::remove_file(&path);
+        assert!(CostModel::from_calibration_file(std::path::Path::new(
+            "/nonexistent/h2opus-calibration.json"
+        ))
+        .is_none());
     }
 
     #[test]

@@ -32,6 +32,12 @@
 //! - [`branch`] — branch-local marshaling plans and O(N/P) workspaces
 //!   (own nodes + level-C halo), so per-rank memory shrinks with P as the
 //!   paper's distributed format promises;
+//! - [`shard`] — per-rank *matrix storage*: a [`ShardedMatrix`] holds only
+//!   the owned basis-subtree slice, owned coupling/dense rows and the
+//!   replicated top subtree, with local↔global translation tables; worker
+//!   processes build shards directly from the kernel
+//!   ([`crate::construct::build_branch`]) and never allocate the global
+//!   matrix — the out-of-core-N frontier;
 //! - [`transport`] — the interconnects: in-process channels
 //!   ([`transport::inproc`]), real worker *subprocesses* over Unix domain
 //!   sockets ([`transport::socket`] — `h2opus worker` ranks with true
@@ -75,6 +81,7 @@ pub mod decomposition;
 pub mod exchange;
 pub mod hgemv;
 pub mod pool;
+pub mod shard;
 pub mod threaded;
 pub mod transport;
 
@@ -82,10 +89,11 @@ pub mod transport;
 /// `dist::plan` (e.g. by the property tests).
 pub use self::exchange as plan;
 
-pub use self::branch::{BranchPlan, BranchWorkspace};
+pub use self::branch::{BranchIo, BranchPlan, BranchWorkspace};
 pub use self::compress::{dist_compress, DistCompressReport};
 pub use self::decomposition::{Decomposition, DecompositionError};
 pub use self::exchange::{ExchangePlan, LevelExchange};
 pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};
 pub use self::pool::RankPool;
+pub use self::shard::ShardedMatrix;
 pub use self::threaded::ExecMode;

@@ -1,0 +1,581 @@
+//! `dist::shard` — per-rank H² matrix storage for out-of-core N.
+//!
+//! Until this module existed, every rank of the distributed executor —
+//! including each `h2opus worker` subprocess — constructed and held the
+//! *entire* [`H2Matrix`], so the largest representable problem was bounded
+//! by one process's memory. A [`ShardedMatrix`] holds, per rank, only
+//! what the paper's §3 distribution assigns it:
+//!
+//! - its own **basis-subtree slice**: U/V leaf bases of the owned leaf
+//!   range and U/V interlevel transfers of the owned nodes at every level
+//!   below the C-level,
+//! - the **coupling rows** (levels l ≥ C) and **dense leaf rows** whose
+//!   row cluster lies in the branch,
+//! - the **replicated top subtree**: the full transfers of levels 1..=C
+//!   (which include the rank's own level-C boundary transfer) and the
+//!   full coupling blocks of levels 0..C — O(P·k²), shared by every rank
+//!   exactly as in the paper and in Börm's distributed H² layout,
+//! - **translation tables** mapping local node/pair indices back to the
+//!   global tree: coupling/dense pairs store `(local row, global col)`
+//!   next to [`ShardCoupling::row_start`], and the leaf range rebases
+//!   leaf slots.
+//!
+//! The cluster tree itself (points + permutation + node ranges) is O(N)
+//! *index* data — orders of magnitude below the O(N·k·C_sp) matrix data —
+//! and stays replicated so a rank can slice inputs/outputs and evaluate
+//! admissibility-derived layouts locally.
+//!
+//! Two constructions produce bit-identical shards:
+//!
+//! - [`ShardedMatrix::from_global`] slices an assembled [`H2Matrix`]
+//!   (used by the in-process threaded executor, which shares one address
+//!   space), and
+//! - [`crate::construct::build_branch`] materializes a shard *directly*
+//!   from the kernel without ever allocating the global matrix (used by
+//!   `h2opus worker` processes — the out-of-core path). Worker processes
+//!   additionally run under the `H2OPUS_FORBID_FULL_MATRIX` guard, which
+//!   makes any full-matrix construction a hard failure.
+//!
+//! Local coupling structure reuses [`CouplingLevel`] with rows rebased to
+//! the branch: the per-row conflict-free batches of a shard are then
+//! *exactly* the owned-row prefilter of the global batches, in the same
+//! serial order — which is what keeps sharded HGEMV bitwise identical to
+//! the serial product (asserted by `tests/shard.rs`).
+
+use std::ops::Range;
+
+use crate::admissibility::MatrixStructure;
+use crate::clustering::ClusterTree;
+use crate::dist::Decomposition;
+use crate::tree::{CouplingLevel, DenseBlocks, H2Matrix};
+
+/// One level of owned coupling rows: a [`CouplingLevel`] whose pairs are
+/// `(local row, global col)` — local row `t` is global row
+/// `row_start + t`. The CSR/batch structure over local rows coincides
+/// with the owned-row prefilter of the global level's batches.
+#[derive(Clone, Debug, Default)]
+pub struct ShardCoupling {
+    /// Global node index of local block row 0.
+    pub row_start: usize,
+    /// Local-row coupling level (pairs `(t_local, s_global)`).
+    pub level: CouplingLevel,
+}
+
+impl ShardCoupling {
+    /// Global (row, col) node pair of local pair `p`.
+    pub fn global_pair(&self, p: usize) -> (usize, usize) {
+        let (t, s) = self.level.pairs[p];
+        (self.row_start + t as usize, s as usize)
+    }
+}
+
+/// Owned dense leaf rows: a [`DenseBlocks`] whose pairs are
+/// `(local leaf row, global leaf col)`.
+#[derive(Clone, Debug, Default)]
+pub struct ShardDense {
+    /// Global leaf index of local block row 0.
+    pub row_start: usize,
+    /// Local-row dense blocks (pairs `(t_local, s_global)`).
+    pub blocks: DenseBlocks,
+}
+
+impl ShardDense {
+    /// Global (row, col) leaf pair of local pair `p`.
+    pub fn global_pair(&self, p: usize) -> (usize, usize) {
+        let (t, s) = self.blocks.pairs[p];
+        (self.row_start + t as usize, s as usize)
+    }
+}
+
+/// One rank's slice of an H² matrix (see module docs): the owned branch,
+/// the replicated top subtree and the local↔global translation tables.
+#[derive(Clone, Debug)]
+pub struct ShardedMatrix {
+    /// The full cluster tree (points, permutation, node ranges): O(N)
+    /// index data, replicated on every rank.
+    pub tree: ClusterTree,
+    /// The decomposition this shard was cut under.
+    pub decomp: Decomposition,
+    /// The owning branch rank, or `None` for a top-only shard (what the
+    /// socket coordinator holds: replicated top, no branch).
+    pub rank: Option<usize>,
+    /// Per-level U basis ranks (identical to the global tree's).
+    pub u_ranks: Vec<usize>,
+    /// Per-level V basis ranks.
+    pub v_ranks: Vec<usize>,
+    /// Padded leaf dimension m_pad.
+    pub leaf_dim: usize,
+
+    // ---- replicated top subtree (levels above the C-level) ----
+    /// Full coupling levels 0..C in the global layout (empty when C = 0).
+    pub top_coupling: Vec<CouplingLevel>,
+    /// `top_u_transfers[l]` for l in 1..=C: the *full* level (all 2^l
+    /// nodes, global layout). Index 0 is empty. Level C carries every
+    /// rank's boundary transfer, so a branch rank finds its own at offset
+    /// `rank · k_C · k_{C-1}`.
+    pub top_u_transfers: Vec<Vec<f64>>,
+    pub top_v_transfers: Vec<Vec<f64>>,
+
+    // ---- owned branch (empty for a top-only shard) ----
+    /// Globally indexed owned leaf range.
+    pub leaf_range: Range<usize>,
+    /// Actual row counts of the owned leaves.
+    pub leaf_sizes: Vec<usize>,
+    /// Owned U leaf bases: local slot j at `[j·m_pad·k ..]`.
+    pub u_leaf_bases: Vec<f64>,
+    pub v_leaf_bases: Vec<f64>,
+    /// `u_transfers[l]` for l in C+1..=depth: owned nodes only, local
+    /// layout (local node j at `[j·k_l·k_{l-1} ..]`). Lower levels empty —
+    /// the level-C boundary transfer lives in the replicated top.
+    pub u_transfers: Vec<Vec<f64>>,
+    pub v_transfers: Vec<Vec<f64>>,
+    /// `coupling[l]` for l in C..=depth: owned coupling rows. Lower
+    /// levels empty (they live in `top_coupling`).
+    pub coupling: Vec<ShardCoupling>,
+    /// Owned dense leaf rows.
+    pub dense: ShardDense,
+}
+
+/// The `(t_local, s_global)` pair list of the owned contiguous row range
+/// of a globally sorted `(t, s)` list — the shard's serial-order slice.
+pub(crate) fn owned_pairs(pairs: &[(u32, u32)], rows: &Range<usize>) -> Vec<(u32, u32)> {
+    let lo = pairs.partition_point(|&(t, _)| (t as usize) < rows.start);
+    let hi = pairs.partition_point(|&(t, _)| (t as usize) < rows.end);
+    pairs[lo..hi].iter().map(|&(t, s)| (t - rows.start as u32, s)).collect()
+}
+
+impl ShardedMatrix {
+    /// A zero-data shard with the full structural layout (top + branch
+    /// when `rank` is given): what [`crate::construct::build_branch`]
+    /// fills numerically, block by block, without a global matrix.
+    pub fn zeros(
+        tree: ClusterTree,
+        structure: &MatrixStructure,
+        ranks: &[usize],
+        m_pad: usize,
+        d: Decomposition,
+        rank: Option<usize>,
+    ) -> Self {
+        let depth = tree.depth;
+        assert_eq!(d.depth, depth, "decomposition built for a different tree");
+        assert_eq!(structure.coupling.len(), depth + 1);
+        assert_eq!(ranks.len(), depth + 1);
+        let c = d.c_level;
+
+        // Replicated top.
+        let mut top_u_transfers = vec![Vec::new()];
+        for l in 1..=c {
+            top_u_transfers.push(vec![0.0; (1usize << l) * ranks[l] * ranks[l - 1]]);
+        }
+        let top_v_transfers = top_u_transfers.clone();
+        let top_coupling: Vec<CouplingLevel> = (0..c)
+            .map(|l| CouplingLevel::from_pairs(structure.coupling[l].clone(), 1 << l, ranks[l]))
+            .collect();
+
+        // Owned branch.
+        let mut leaf_range = 0..0;
+        let mut leaf_sizes = Vec::new();
+        let mut u_leaf_bases = Vec::new();
+        let mut v_leaf_bases = Vec::new();
+        let mut u_transfers = vec![Vec::new(); depth + 1];
+        let mut v_transfers = vec![Vec::new(); depth + 1];
+        let mut coupling = vec![ShardCoupling::default(); depth + 1];
+        let mut dense = ShardDense::default();
+        if let Some(r) = rank {
+            assert!(r < d.p, "rank {r} out of range for P = {}", d.p);
+            leaf_range = d.own_range(r, depth);
+            leaf_sizes =
+                tree.leaves()[leaf_range.clone()].iter().map(|n| n.size()).collect();
+            let k_leaf = ranks[depth];
+            u_leaf_bases = vec![0.0; leaf_range.len() * m_pad * k_leaf];
+            v_leaf_bases = u_leaf_bases.clone();
+            for l in (c + 1)..=depth {
+                let words = d.branch_width(l) * ranks[l] * ranks[l - 1];
+                u_transfers[l] = vec![0.0; words];
+                v_transfers[l] = vec![0.0; words];
+            }
+            for l in c..=depth {
+                let rows = d.own_range(r, l);
+                let pairs = owned_pairs(&structure.coupling[l], &rows);
+                coupling[l] = ShardCoupling {
+                    row_start: rows.start,
+                    level: CouplingLevel::from_pairs(pairs, rows.len(), ranks[l]),
+                };
+            }
+            let dpairs = owned_pairs(&structure.dense, &leaf_range);
+            dense = ShardDense {
+                row_start: leaf_range.start,
+                blocks: DenseBlocks::from_pairs(dpairs, leaf_range.len(), m_pad),
+            };
+        }
+
+        ShardedMatrix {
+            tree,
+            decomp: d,
+            rank,
+            u_ranks: ranks.to_vec(),
+            v_ranks: ranks.to_vec(),
+            leaf_dim: m_pad,
+            top_coupling,
+            top_u_transfers,
+            top_v_transfers,
+            leaf_range,
+            leaf_sizes,
+            u_leaf_bases,
+            v_leaf_bases,
+            u_transfers,
+            v_transfers,
+            coupling,
+            dense,
+        }
+    }
+
+    /// Slice `rank`'s shard out of an assembled global matrix. Bitwise
+    /// identical to the directly constructed shard
+    /// ([`crate::construct::build_branch`]) — asserted by `tests/shard.rs`.
+    pub fn from_global(a: &H2Matrix, d: Decomposition, rank: usize) -> Self {
+        let mut sm = Self::top_from_global(a, d);
+        assert!(rank < d.p, "rank {rank} out of range for P = {}", d.p);
+        sm.rank = Some(rank);
+        let depth = d.depth;
+        let c = d.c_level;
+        let m_pad = a.u.leaf_dim;
+
+        let leaf_range = d.own_range(rank, depth);
+        sm.leaf_sizes = a.u.leaf_sizes[leaf_range.clone()].to_vec();
+        let ku = a.u.ranks[depth];
+        let kv = a.v.ranks[depth];
+        sm.u_leaf_bases =
+            a.u.leaf_bases[leaf_range.start * m_pad * ku..leaf_range.end * m_pad * ku].to_vec();
+        sm.v_leaf_bases =
+            a.v.leaf_bases[leaf_range.start * m_pad * kv..leaf_range.end * m_pad * kv].to_vec();
+        for l in (c + 1)..=depth {
+            let own = d.own_range(rank, l);
+            let su = a.u.ranks[l] * a.u.ranks[l - 1];
+            let sv = a.v.ranks[l] * a.v.ranks[l - 1];
+            sm.u_transfers[l] = a.u.transfers[l][own.start * su..own.end * su].to_vec();
+            sm.v_transfers[l] = a.v.transfers[l][own.start * sv..own.end * sv].to_vec();
+        }
+        for l in c..=depth {
+            let rows = d.own_range(rank, l);
+            let k = a.rank(l);
+            let cl = &a.coupling[l];
+            let lo = cl.row_ptr[rows.start];
+            let hi = cl.row_ptr[rows.end];
+            let pairs: Vec<(u32, u32)> =
+                cl.pairs[lo..hi].iter().map(|&(t, s)| (t - rows.start as u32, s)).collect();
+            let mut level = CouplingLevel::from_pairs(pairs, rows.len(), k);
+            level.data.copy_from_slice(&cl.data[lo * k * k..hi * k * k]);
+            sm.coupling[l] = ShardCoupling { row_start: rows.start, level };
+        }
+        let db = &a.dense;
+        let lo = db.row_ptr[leaf_range.start];
+        let hi = db.row_ptr[leaf_range.end];
+        let pairs: Vec<(u32, u32)> =
+            db.pairs[lo..hi].iter().map(|&(t, s)| (t - leaf_range.start as u32, s)).collect();
+        let mut blocks = DenseBlocks::from_pairs(pairs, leaf_range.len(), m_pad);
+        blocks
+            .data
+            .copy_from_slice(&db.data[lo * m_pad * m_pad..hi * m_pad * m_pad]);
+        sm.dense = ShardDense { row_start: leaf_range.start, blocks };
+        sm.leaf_range = leaf_range;
+        sm
+    }
+
+    /// The replicated-top-only shard of a global matrix (what the socket
+    /// coordinator holds: O(P·k²) matrix data plus the O(N) tree).
+    pub fn top_from_global(a: &H2Matrix, d: Decomposition) -> Self {
+        assert_eq!(d.depth, a.depth(), "decomposition built for a different tree");
+        let depth = d.depth;
+        let c = d.c_level;
+        let mut top_u_transfers = vec![Vec::new()];
+        let mut top_v_transfers = vec![Vec::new()];
+        for l in 1..=c {
+            top_u_transfers.push(a.u.transfers[l].clone());
+            top_v_transfers.push(a.v.transfers[l].clone());
+        }
+        ShardedMatrix {
+            tree: a.tree.clone(),
+            decomp: d,
+            rank: None,
+            u_ranks: a.u.ranks.clone(),
+            v_ranks: a.v.ranks.clone(),
+            leaf_dim: a.u.leaf_dim,
+            top_coupling: a.coupling[..c].to_vec(),
+            top_u_transfers,
+            top_v_transfers,
+            leaf_range: 0..0,
+            leaf_sizes: Vec::new(),
+            u_leaf_bases: Vec::new(),
+            v_leaf_bases: Vec::new(),
+            u_transfers: vec![Vec::new(); depth + 1],
+            v_transfers: vec![Vec::new(); depth + 1],
+            coupling: vec![ShardCoupling::default(); depth + 1],
+            dense: ShardDense::default(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.tree.depth
+    }
+
+    /// Matrix dimension N.
+    pub fn n(&self) -> usize {
+        self.tree.num_points()
+    }
+
+    pub fn c_level(&self) -> usize {
+        self.decomp.c_level
+    }
+
+    /// The owning branch rank; panics on a top-only shard.
+    pub fn branch_rank(&self) -> usize {
+        self.rank.expect("top-only shard has no branch rank")
+    }
+
+    // ---- local <-> global translation -------------------------------
+
+    /// Local slot of the globally indexed owned leaf `j`.
+    pub fn local_leaf(&self, j: usize) -> usize {
+        debug_assert!(self.leaf_range.contains(&j), "leaf {j} is not owned by this shard");
+        j - self.leaf_range.start
+    }
+
+    /// Global leaf index of local slot `slot`.
+    pub fn global_leaf(&self, slot: usize) -> usize {
+        debug_assert!(slot < self.leaf_range.len());
+        self.leaf_range.start + slot
+    }
+
+    /// Local node index of the globally indexed owned node `j` at level
+    /// `l ≥ C`.
+    pub fn local_node(&self, l: usize, j: usize) -> usize {
+        self.decomp.local_index(self.branch_rank(), l, j)
+    }
+
+    /// Global node index of local node `local` at level `l ≥ C`.
+    pub fn global_node(&self, l: usize, local: usize) -> usize {
+        let own = self.decomp.own_range(self.branch_rank(), l);
+        debug_assert!(local < own.len());
+        own.start + local
+    }
+
+    // ---- storage accounting -----------------------------------------
+
+    /// f64 words of the owned branch (bases with *actual* leaf sizes,
+    /// transfers below the C-level, owned coupling blocks, dense rows at
+    /// actual sizes) — the per-rank 1/P share. Uses the same conventions
+    /// as [`H2Matrix::memory_words`], so the shards of one matrix sum to
+    /// exactly its serial footprint (plus one replicated top per rank).
+    pub fn branch_words(&self) -> usize {
+        let depth = self.depth();
+        let ku = self.u_ranks[depth];
+        let kv = self.v_ranks[depth];
+        let mut words: usize = self.leaf_sizes.iter().map(|&s| s * (ku + kv)).sum();
+        for l in (self.c_level() + 1)..=depth {
+            words += self.u_transfers[l].len() + self.v_transfers[l].len();
+        }
+        for (l, sc) in self.coupling.iter().enumerate() {
+            words += sc.level.num_blocks() * self.u_ranks[l] * self.u_ranks[l];
+        }
+        for &(t, s) in &self.dense.blocks.pairs {
+            words += self.leaf_sizes[t as usize] * self.tree.node(depth, s as usize).size();
+        }
+        words
+    }
+
+    /// f64 words of the replicated top subtree (identical on every rank).
+    pub fn replication_words(&self) -> usize {
+        let mut words: usize = self
+            .top_u_transfers
+            .iter()
+            .zip(&self.top_v_transfers)
+            .map(|(u, v)| u.len() + v.len())
+            .sum();
+        for (l, cl) in self.top_coupling.iter().enumerate() {
+            words += cl.num_blocks() * self.u_ranks[l] * self.u_ranks[l];
+        }
+        words
+    }
+
+    /// Total matrix bytes this shard stores — the quantity
+    /// [`crate::metrics::Metrics::matrix_bytes`] reports and the
+    /// out-of-core memory regression test bounds by
+    /// `serial/P + replication/imbalance slack`.
+    pub fn matrix_bytes(&self) -> usize {
+        (self.branch_words() + self.replication_words()) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::H2Config;
+    use crate::construct::{build_h2, ExponentialKernel};
+    use crate::geometry::PointSet;
+
+    fn sample() -> H2Matrix {
+        let points = PointSet::grid_2d(16, 1.0); // N = 256
+        let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+        let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+        build_h2(points, &kernel, &cfg)
+    }
+
+    #[test]
+    fn shards_partition_the_global_matrix() {
+        let a = sample();
+        let serial = a.memory_words();
+        for p in [1usize, 2, 4, 8] {
+            let d = Decomposition::new(p, a.depth()).unwrap();
+            let shards: Vec<ShardedMatrix> =
+                (0..p).map(|r| ShardedMatrix::from_global(&a, d, r)).collect();
+            // Every owned structure element appears exactly once; the
+            // replicated top is identical on every rank.
+            let branch_total: usize = shards.iter().map(|s| s.branch_words()).sum();
+            let rep = shards[0].replication_words();
+            for s in &shards {
+                assert_eq!(s.replication_words(), rep);
+            }
+            assert_eq!(branch_total + rep, serial, "P={p}: shards do not partition the matrix");
+            // Coupling blocks partition per level.
+            for (l, cl) in a.coupling.iter().enumerate() {
+                let c = d.c_level;
+                let owned: usize = if l >= c {
+                    shards.iter().map(|s| s.coupling[l].level.num_blocks()).sum()
+                } else {
+                    shards[0].top_coupling[l].num_blocks()
+                };
+                assert_eq!(owned, cl.num_blocks(), "P={p} level {l}");
+            }
+            let dense_total: usize = shards.iter().map(|s| s.dense.blocks.pairs.len()).sum();
+            assert_eq!(dense_total, a.dense.pairs.len());
+        }
+    }
+
+    #[test]
+    fn from_global_slices_match_the_source() {
+        let a = sample();
+        let d = Decomposition::new(4, a.depth()).unwrap();
+        let depth = a.depth();
+        for r in 0..4 {
+            let sm = ShardedMatrix::from_global(&a, d, r);
+            assert_eq!(sm.branch_rank(), r);
+            // Leaf bases: local slot j == global leaf leaf_range.start + j.
+            let k = a.rank(depth);
+            let m = a.u.leaf_dim;
+            for slot in 0..sm.leaf_range.len() {
+                let g = sm.global_leaf(slot);
+                assert_eq!(sm.local_leaf(g), slot);
+                assert_eq!(
+                    &sm.u_leaf_bases[slot * m * k..(slot + 1) * m * k],
+                    a.u.leaf(g),
+                    "rank {r} leaf {g}"
+                );
+            }
+            // Coupling rows carry the global data in serial order.
+            for l in d.c_level..=depth {
+                let sc = &sm.coupling[l];
+                for p in 0..sc.level.num_blocks() {
+                    let (gt, gs) = sc.global_pair(p);
+                    // find the global pair index
+                    let gp = a.coupling[l]
+                        .pairs
+                        .iter()
+                        .position(|&(t, s)| (t as usize, s as usize) == (gt, gs))
+                        .expect("pair exists globally");
+                    assert_eq!(
+                        sc.level.block(p, a.rank(l)),
+                        a.coupling[l].block(gp, a.rank(l)),
+                        "rank {r} level {l} pair {p}"
+                    );
+                    assert_eq!(d.owner(l, gt), r, "shard holds a foreign row");
+                }
+            }
+            // Dense rows.
+            for p in 0..sm.dense.blocks.pairs.len() {
+                let (gt, gs) = sm.dense.global_pair(p);
+                let gp = a
+                    .dense
+                    .pairs
+                    .iter()
+                    .position(|&(t, s)| (t as usize, s as usize) == (gt, gs))
+                    .expect("dense pair exists globally");
+                assert_eq!(sm.dense.blocks.block(p), a.dense.block(gp));
+            }
+            // The boundary transfer sits in the replicated top at the
+            // rank's offset.
+            let c = d.c_level;
+            let sz = a.rank(c) * a.rank(c - 1);
+            assert_eq!(
+                &sm.top_u_transfers[c][r * sz..(r + 1) * sz],
+                a.u.transfer(c, r)
+            );
+        }
+    }
+
+    #[test]
+    fn shard_batches_equal_prefiltered_global_batches() {
+        // The local conflict-free batches must be the owned-row prefilter
+        // of the global batches, in the same order — the bitwise-identity
+        // precondition of the sharded HGEMV.
+        let a = sample();
+        let d = Decomposition::new(4, a.depth()).unwrap();
+        for r in 0..4 {
+            let sm = ShardedMatrix::from_global(&a, d, r);
+            for l in d.c_level..=a.depth() {
+                let rows = d.own_range(r, l);
+                let sc = &sm.coupling[l];
+                let global_filtered: Vec<Vec<(usize, usize)>> = a.coupling[l]
+                    .batches
+                    .iter()
+                    .map(|b| {
+                        b.iter()
+                            .map(|&pi| a.coupling[l].pairs[pi as usize])
+                            .filter(|&(t, _)| rows.contains(&(t as usize)))
+                            .map(|(t, s)| (t as usize, s as usize))
+                            .collect()
+                    })
+                    .filter(|b: &Vec<_>| !b.is_empty())
+                    .collect();
+                let local: Vec<Vec<(usize, usize)>> = sc
+                    .level
+                    .batches
+                    .iter()
+                    .map(|b| {
+                        b.iter().map(|&pi| sc.global_pair(pi as usize)).collect::<Vec<_>>()
+                    })
+                    .filter(|b: &Vec<_>| !b.is_empty())
+                    .collect();
+                assert_eq!(local, global_filtered, "rank {r} level {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_only_shard_is_small_and_branchless() {
+        let a = sample();
+        let d = Decomposition::new(8, a.depth()).unwrap();
+        let sm = ShardedMatrix::top_from_global(&a, d);
+        assert!(sm.rank.is_none());
+        assert_eq!(sm.branch_words(), 0);
+        assert!(sm.replication_words() > 0);
+        assert!(
+            sm.matrix_bytes() < a.memory_words() * 8 / 4,
+            "top-only shard ({} B) must be far below the serial matrix ({} B)",
+            sm.matrix_bytes(),
+            a.memory_words() * 8
+        );
+        assert_eq!(sm.top_coupling.len(), 3);
+        assert_eq!(sm.top_u_transfers.len(), 4);
+    }
+
+    #[test]
+    fn single_rank_shard_is_the_whole_matrix() {
+        let a = sample();
+        let d = Decomposition::new(1, a.depth()).unwrap();
+        let sm = ShardedMatrix::from_global(&a, d, 0);
+        assert_eq!(sm.replication_words(), 0);
+        assert_eq!(sm.branch_words(), a.memory_words());
+        assert_eq!(sm.leaf_range, 0..1 << a.depth());
+    }
+}

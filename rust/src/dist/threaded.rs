@@ -1,10 +1,12 @@
-//! The real distributed HGEMV executor, generic over the transport.
+//! The real distributed HGEMV executor, generic over the transport, with
+//! per-rank *sharded* matrix storage.
 //!
 //! Where [`crate::dist::hgemv`] *simulates* the paper's §4 runtime (one
 //! loop over virtual ranks, speedups priced by the analytic
 //! [`crate::dist::hgemv::CostModel`]), this module actually executes it:
 //! every rank runs its branch slice of the phase functions over a
-//! branch-local O(N/P) workspace ([`crate::dist::branch`]), exchanging
+//! branch-local O(N/P) workspace reading from its own
+//! [`crate::dist::ShardedMatrix`] ([`crate::dist::branch`]), exchanging
 //! level-C basis coefficients through a pluggable
 //! [`crate::dist::transport::Endpoint`] driven by the same
 //! [`crate::dist::ExchangePlan`] that prices the virtual schedule.
@@ -12,10 +14,12 @@
 //! [`run_branch`] / [`run_top_master`] are the transport-generic rank
 //! bodies; [`run_threaded`] instantiates them over the in-process
 //! transport ([`crate::dist::transport::inproc`]) with one pooled OS
-//! thread per rank ([`crate::dist::pool::RankPool`] — threads are parked
-//! between products, so chained products pay no spawn cost), and the
-//! socket transport ([`crate::dist::transport::socket`]) instantiates the
-//! *same* bodies in real worker subprocesses.
+//! thread per rank ([`crate::dist::pool::RankPool`]), slicing one shard
+//! per rank out of the caller's matrix; the socket transport
+//! ([`crate::dist::transport::socket`]) instantiates the *same* bodies in
+//! real worker subprocesses whose shards are built branch-scoped from the
+//! kernel — no process of a socket session ever allocates the global
+//! matrix.
 //!
 //! # Execution plan (per rank r)
 //!
@@ -35,21 +39,23 @@
 //!    (directly, or as an `Output` message on process transports).
 //!
 //! The master gathers the level-C x̂, processes the replicated top subtree
-//! over a top-only workspace (O(P), not O(N) —
-//! [`crate::matvec::HgemvWorkspace::top_only`]) and scatters each rank's
-//! ŷ parent.
+//! of its (top-only) shard over a top-only workspace (O(P), not O(N) —
+//! [`crate::matvec::HgemvWorkspace::top_only_dims`]) and scatters each
+//! rank's ŷ parent.
 //!
 //! # Bitwise-identity argument
 //!
 //! Each rank executes the *same* per-block GEMMs over the *same* branch
-//! slices in the *same* per-destination order as the serial sweep
-//! ([`crate::dist::branch`] prefilters the conflict-free batches without
-//! reordering), on bitwise-identical inputs (messages are pure copies;
-//! the branch workspace only relocates blocks). The only cross-rank
+//! slices in the *same* per-destination order as the serial sweep (the
+//! shard's conflict-free batches are the owned-row prefilter of the
+//! global batches without reordering), on bitwise-identical inputs
+//! (messages are pure copies; shard data is a pure copy or a
+//! deterministic re-evaluation of the same formulas). The only cross-rank
 //! accumulation — the C-level boundary — is applied by the *receiving*
 //! rank on top of its own coupling sums, reproducing the serial in-place
 //! order. Hence `y` is bitwise identical to the serial product for every
-//! P, on every transport (asserted by `tests/transport.rs`).
+//! P, on every transport (asserted by `tests/transport.rs` and
+//! `tests/shard.rs`).
 //!
 //! Every rank also stamps an `Instant` around each phase, and the
 //! in-process endpoints are wrapped in
@@ -60,7 +66,7 @@
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
-use crate::backend::ComputeBackend;
+use crate::backend::{BatchRef, ComputeBackend, GemmDims};
 use crate::dist::branch::{
     branch_dense_multiply, branch_downsweep_boundary, branch_downsweep_leaf,
     branch_downsweep_transfer, branch_tree_multiply, branch_upsweep_leaf,
@@ -68,13 +74,12 @@ use crate::dist::branch::{
 };
 use crate::dist::hgemv::DistHgemv;
 use crate::dist::pool::RankPool;
+use crate::dist::shard::ShardedMatrix;
 use crate::dist::transport::recording::{CommEvent, Recording};
 use crate::dist::transport::{inproc, Endpoint, Mailbox, Message, MsgKind, TransportError};
-use crate::dist::{Decomposition, ExchangePlan};
-use crate::matvec::{
-    downsweep_transfer_level, tree_multiply_level, upsweep_transfer_level, HgemvPlan,
-    HgemvWorkspace,
-};
+use crate::dist::ExchangePlan;
+use crate::matvec::plan::{BatchOffsets, LevelMultPlan, LevelTransferPlan};
+use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
 use crate::tree::H2Matrix;
 use crate::util::trace::TraceCollector;
@@ -87,11 +92,11 @@ pub enum ExecMode {
     #[default]
     Virtual,
     /// One pooled OS thread per virtual rank over the in-process
-    /// transport, branch-local O(N/P) workspaces; reports measured
-    /// wall-clock alongside the virtual schedule. (Real OS-*process*
-    /// ranks are reached through
+    /// transport, sharded matrix storage + branch-local O(N/P)
+    /// workspaces; reports measured wall-clock alongside the virtual
+    /// schedule. (Real OS-*process* ranks are reached through
     /// [`crate::dist::transport::socket::socket_hgemv`], which reuses the
-    /// same rank bodies.)
+    /// same rank bodies over branch-constructed shards.)
     Threaded,
 }
 
@@ -164,7 +169,7 @@ pub(crate) struct ThreadedOutcome {
 /// Ship level `l`'s send sets (pipelined: called as soon as that level's
 /// x̂ is final).
 fn send_level_xhat<E: Endpoint>(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     bp: &BranchPlan,
     bw: &BranchWorkspace,
     ep: &mut E,
@@ -172,7 +177,7 @@ fn send_level_xhat<E: Endpoint>(
     l: usize,
 ) -> Result<(), TransportError> {
     let nv = bp.nv;
-    let k = a.v.ranks[l];
+    let k = sm.v_ranks[l];
     for (dst, offs) in &bp.sends[l] {
         let mut data = Vec::with_capacity(offs.len() * k * nv);
         for &o in offs {
@@ -185,10 +190,10 @@ fn send_level_xhat<E: Endpoint>(
 }
 
 /// One branch rank's slice of the product (steps 1–5 of the module docs),
-/// generic over the transport endpoint.
+/// generic over the transport endpoint, reading only the rank's shard.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_branch<E: Endpoint>(
-    a: &H2Matrix,
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
     ex: &ExchangePlan,
     bp: &BranchPlan,
@@ -211,30 +216,30 @@ pub(crate) fn run_branch<E: Endpoint>(
     // vector; process ranks received it as their Input message already).
     if let Some(x) = x {
         let t = now(&t0);
-        fill_branch_input(a, bp, x, &mut bw.x_pad);
+        fill_branch_input(sm, bp, x, &mut bw.x_pad);
         trace.push(PH_INPUT, t, now(&t0));
     }
 
     // 2. Branch upsweep with pipelined sends: a level's exchange set ships
     // the moment that level's x̂ is final.
     let t = now(&t0);
-    branch_upsweep_leaf(a, backend, bp, bw, &mut metrics);
+    branch_upsweep_leaf(sm, backend, bp, bw, &mut metrics);
     trace.push(PH_UPSWEEP, t, now(&t0));
     let t = now(&t0);
-    send_level_xhat(a, bp, bw, ep, &mut metrics, depth)?;
+    send_level_xhat(sm, bp, bw, ep, &mut metrics, depth)?;
     trace.push(PH_SEND, t, now(&t0));
     for l in ((c + 1)..=depth).rev() {
         let t = now(&t0);
-        branch_upsweep_transfer(a, backend, bp, bw, &mut metrics, l);
+        branch_upsweep_transfer(sm, backend, bp, bw, &mut metrics, l);
         trace.push(PH_UPSWEEP, t, now(&t0));
         let t = now(&t0);
-        send_level_xhat(a, bp, bw, ep, &mut metrics, l - 1)?;
+        send_level_xhat(sm, bp, bw, ep, &mut metrics, l - 1)?;
         trace.push(PH_SEND, t, now(&t0));
     }
     if c > 0 {
         // Level-C gather to the master (own node is local slot 0).
         let t = now(&t0);
-        let k_c = a.v.ranks[c];
+        let k_c = sm.v_ranks[c];
         let data = bw.xhat[c][0..k_c * nv].to_vec();
         metrics.send(data.len() * 8);
         ep.send(p, Message::new(MsgKind::Gather, c, r, data))?;
@@ -244,7 +249,7 @@ pub(crate) fn run_branch<E: Endpoint>(
     // 3. Dense/diagonal blocks need no remote coefficients: execute them
     // while the exchange is in flight (§4.2's overlap, for real).
     let t = now(&t0);
-    branch_dense_multiply(a, backend, bp, bw, &mut metrics);
+    branch_dense_multiply(sm, backend, bp, bw, &mut metrics);
     trace.push(PH_DENSE, t, now(&t0));
 
     // 4. Receive the exchange set into the workspace halo, tag-matched
@@ -256,7 +261,7 @@ pub(crate) fn run_branch<E: Endpoint>(
         let msg = mb.recv_kind(ep, MsgKind::Xhat)?;
         let l = msg.tag.level as usize;
         let src = msg.tag.src as usize;
-        let k = a.v.ranks[l];
+        let k = sm.v_ranks[l];
         let offs = bp.recv_scatter[l]
             .iter()
             .find(|(s, _)| *s == src)
@@ -282,7 +287,7 @@ pub(crate) fn run_branch<E: Endpoint>(
     // Coupling rows, level by level in serial order.
     let t = now(&t0);
     for l in c..=depth {
-        branch_tree_multiply(a, backend, bp, bw, &mut metrics, l);
+        branch_tree_multiply(sm, backend, bp, bw, &mut metrics, l);
     }
     trace.push(PH_MULT, t, now(&t0));
 
@@ -300,32 +305,32 @@ pub(crate) fn run_branch<E: Endpoint>(
             )));
         }
         bw.parent.copy_from_slice(&msg.data);
-        branch_downsweep_boundary(a, backend, bp, bw, &mut metrics);
+        branch_downsweep_boundary(sm, backend, bp, bw, &mut metrics);
         trace.push(PH_BOUNDARY, t, now(&t0));
     }
 
     // 5. Branch downsweep and the disjoint output scatter.
     let t = now(&t0);
     for l in (c + 1)..=depth {
-        branch_downsweep_transfer(a, backend, bp, bw, &mut metrics, l);
+        branch_downsweep_transfer(sm, backend, bp, bw, &mut metrics, l);
     }
-    branch_downsweep_leaf(a, backend, bp, bw, &mut metrics);
+    branch_downsweep_leaf(sm, backend, bp, bw, &mut metrics);
     trace.push(PH_DOWNSWEEP, t, now(&t0));
 
     let t = now(&t0);
     match y_out {
         YSink::Slice(chunk, base_row) => {
-            unpad_branch_output(a, bp, &bw.y_pad, chunk, base_row);
+            unpad_branch_output(sm, bp, &bw.y_pad, chunk, base_row);
         }
         YSink::Send => {
-            let base_row = a.tree.node(depth, bp.leaf_range.start).start;
+            let base_row = sm.tree.node(depth, bp.leaf_range.start).start;
             let end_row = if bp.leaf_range.end == (1usize << depth) {
-                a.n()
+                sm.n()
             } else {
-                a.tree.node(depth, bp.leaf_range.end).start
+                sm.tree.node(depth, bp.leaf_range.end).start
             };
             let mut rows = vec![0.0; (end_row - base_row) * nv];
-            unpad_branch_output(a, bp, &bw.y_pad, &mut rows, base_row);
+            unpad_branch_output(sm, bp, &bw.y_pad, &mut rows, base_row);
             metrics.send(rows.len() * 8);
             ep.send(p, Message::new(MsgKind::Output, 0, r, rows))?;
         }
@@ -335,29 +340,188 @@ pub(crate) fn run_branch<E: Endpoint>(
     Ok((metrics, trace))
 }
 
-/// The master's side: level-C gather, replicated top subtree over a
-/// top-only workspace, ŷ parent scatter. Generic over the transport.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run_top_master<E: Endpoint>(
-    a: &H2Matrix,
+// ---- replicated-top plan + phase functions (master side) ---------------
+//
+// These replicate, GEMM for GEMM, what the serial whole-level phase calls
+// (`upsweep_transfer_level` / `tree_multiply_level` /
+// `downsweep_transfer_level` over the full node range) execute for levels
+// at or above the C-level — but read the shard's replicated top buffers,
+// so the master needs a `ShardedMatrix`, never the full matrix. Offsets
+// are identical to the serial plan's (full levels are stored in the
+// global layout), hence bitwise-identical results.
+
+/// Precomputed marshaling offsets of the replicated top: built once per
+/// product (in-process) or once per *session* (socket), so the per-level
+/// phase calls below stay allocation-free like every other hot path.
+pub(crate) struct TopPlan {
+    /// `up[l]` for l in 1..=C (index 0 unused): the full level's two
+    /// parity batches, shared by up- and downsweep like the serial plan.
+    up: Vec<LevelTransferPlan>,
+    /// `mult[l]` for l in 0..C: the full level's conflict-free batches.
+    mult: Vec<LevelMultPlan>,
+}
+
+impl TopPlan {
+    pub(crate) fn build(sm: &ShardedMatrix, nv: usize) -> TopPlan {
+        let c = sm.c_level();
+        let mut up = vec![LevelTransferPlan::default()];
+        for l in 1..=c {
+            let (k_l, k_par) = (sm.v_ranks[l], sm.v_ranks[l - 1]);
+            let nb = 1usize << (l - 1);
+            let mut plan = LevelTransferPlan::default();
+            for parity in 0..2 {
+                let po = &mut plan.parity[parity];
+                po.nb = nb;
+                for i in 0..nb {
+                    let child = 2 * i + parity;
+                    po.transfer_off.push(child * k_l * k_par);
+                    po.child_off.push(child * k_l * nv);
+                    po.parent_off.push(i * k_par * nv);
+                }
+            }
+            up.push(plan);
+        }
+        let mut mult = Vec::with_capacity(c);
+        for (l, cl) in sm.top_coupling.iter().enumerate() {
+            let k = sm.u_ranks[l];
+            let mut lp = LevelMultPlan::default();
+            for batch in &cl.batches {
+                let mut bo = BatchOffsets { nb: batch.len(), ..Default::default() };
+                for &pi in batch {
+                    let (t, s) = cl.pairs[pi as usize];
+                    bo.block_off.push(pi as usize * k * k);
+                    bo.src_off.push(s as usize * k * nv);
+                    bo.dst_off.push(t as usize * k * nv);
+                }
+                lp.batches.push(bo);
+            }
+            mult.push(lp);
+        }
+        TopPlan { up, mult }
+    }
+}
+
+fn top_upsweep_transfer(
+    sm: &ShardedMatrix,
     backend: &dyn ComputeBackend,
-    plan: &HgemvPlan,
-    d: Decomposition,
+    tp: &TopPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+) {
+    let nv = ws.nv;
+    let (k_l, k_par) = (sm.v_ranks[l], sm.v_ranks[l - 1]);
+    let (lo, hi) = ws.xhat.levels.split_at_mut(l);
+    let parent = &mut lo[l - 1];
+    let child = &hi[0];
+    for parity in 0..2 {
+        let po = &tp.up[l].parity[parity];
+        backend.batched_gemm(
+            GemmDims {
+                nb: po.nb,
+                m: k_par,
+                k: k_l,
+                n: nv,
+                trans_a: true,
+                trans_b: false,
+                accumulate: true,
+            },
+            BatchRef { data: &sm.top_v_transfers[l], offsets: &po.transfer_off },
+            BatchRef { data: child, offsets: &po.child_off },
+            parent,
+            &po.parent_off,
+            metrics,
+        );
+    }
+}
+
+fn top_tree_multiply(
+    sm: &ShardedMatrix,
+    backend: &dyn ComputeBackend,
+    tp: &TopPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+) {
+    let nv = ws.nv;
+    let k = sm.u_ranks[l];
+    for bo in &tp.mult[l].batches {
+        backend.batched_gemm(
+            GemmDims {
+                nb: bo.nb,
+                m: k,
+                k,
+                n: nv,
+                trans_a: false,
+                trans_b: false,
+                accumulate: true,
+            },
+            BatchRef { data: &sm.top_coupling[l].data, offsets: &bo.block_off },
+            BatchRef { data: &ws.xhat.levels[l], offsets: &bo.src_off },
+            &mut ws.yhat.levels[l],
+            &bo.dst_off,
+            metrics,
+        );
+    }
+}
+
+fn top_downsweep_transfer(
+    sm: &ShardedMatrix,
+    backend: &dyn ComputeBackend,
+    tp: &TopPlan,
+    ws: &mut HgemvWorkspace,
+    metrics: &mut Metrics,
+    l: usize,
+) {
+    let nv = ws.nv;
+    let (k_l, k_par) = (sm.u_ranks[l], sm.u_ranks[l - 1]);
+    let (lo, hi) = ws.yhat.levels.split_at_mut(l);
+    let parent = &lo[l - 1];
+    let child = &mut hi[0];
+    for parity in 0..2 {
+        let po = &tp.up[l].parity[parity];
+        backend.batched_gemm(
+            GemmDims {
+                nb: po.nb,
+                m: k_l,
+                k: k_par,
+                n: nv,
+                trans_a: false,
+                trans_b: false,
+                accumulate: true,
+            },
+            BatchRef { data: &sm.top_u_transfers[l], offsets: &po.transfer_off },
+            BatchRef { data: parent, offsets: &po.parent_off },
+            child,
+            &po.child_off,
+            metrics,
+        );
+    }
+}
+
+/// The master's side: level-C gather, replicated top subtree over a
+/// top-only workspace reading a top-only shard, ŷ parent scatter. Generic
+/// over the transport.
+pub(crate) fn run_top_master<E: Endpoint>(
+    sm: &ShardedMatrix,
+    backend: &dyn ComputeBackend,
+    tp: &TopPlan,
     ws: &mut HgemvWorkspace,
     ep: &mut E,
     mb: &mut Mailbox,
     t0: Instant,
 ) -> Result<(Metrics, RankTrace), TransportError> {
+    let d = sm.decomp;
     let (p, c) = (d.p, d.c_level);
     debug_assert!(c > 0, "the master only exists when the top subtree does");
-    let nv = plan.nv;
+    let nv = ws.nv;
     let mut metrics = Metrics::new();
     let mut trace = RankTrace::default();
     let now = |t0: &Instant| t0.elapsed().as_secs_f64();
 
     // Gather the level-C x̂ block of every branch rank.
     let t = now(&t0);
-    let k_c = a.v.ranks[c];
+    let k_c = sm.v_ranks[c];
     for _ in 0..p {
         let msg = mb.recv_kind(ep, MsgKind::Gather)?;
         let src = msg.tag.src as usize;
@@ -375,13 +539,13 @@ pub(crate) fn run_top_master<E: Endpoint>(
     // Replicated top subtree (the Fig. 8 low-priority stream).
     let t = now(&t0);
     for l in (1..=c).rev() {
-        upsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+        top_upsweep_transfer(sm, backend, tp, ws, &mut metrics, l);
     }
     for l in 0..c {
-        tree_multiply_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << l);
+        top_tree_multiply(sm, backend, tp, ws, &mut metrics, l);
     }
     for l in 1..c {
-        downsweep_transfer_level(a, backend, plan, ws, &mut metrics, l, 0..1usize << (l - 1));
+        top_downsweep_transfer(sm, backend, tp, ws, &mut metrics, l);
     }
     trace.push(PH_TOP, t, now(&t0));
 
@@ -389,7 +553,7 @@ pub(crate) fn run_top_master<E: Endpoint>(
     // C-level transfer itself (its node only), so the boundary node's
     // accumulation order matches the serial sweep bitwise.
     let t = now(&t0);
-    let k_par = a.u.ranks[c - 1];
+    let k_par = sm.u_ranks[c - 1];
     for r in 0..p {
         let par = r >> 1;
         let data = ws.yhat.levels[c - 1][par * k_par * nv..(par + 1) * k_par * nv].to_vec();
@@ -436,9 +600,10 @@ pub(crate) fn measured_trace_json(parts: &[(usize, RankTrace, Vec<CommEvent>)]) 
 }
 
 /// Execute `y = A·x` on pooled OS threads over the in-process transport.
-/// `x`/`y` are N × nv in the permuted ordering, exactly as in the virtual
-/// path; the result is bitwise identical to the serial
-/// [`crate::matvec::hgemv`].
+/// Each rank thread reads only its [`ShardedMatrix`] (sliced out of the
+/// caller's matrix once, outside the timed region). `x`/`y` are N × nv in
+/// the permuted ordering, exactly as in the virtual path; the result is
+/// bitwise identical to the serial [`crate::matvec::hgemv`].
 pub(crate) fn run_threaded(
     op: &DistHgemv,
     a: &H2Matrix,
@@ -452,13 +617,20 @@ pub(crate) fn run_threaded(
     let nv = op.plan.nv;
     let has_master = c > 0;
 
-    // Branch plans and O(N/P) workspaces, allocated outside the timed
-    // region: the measurement is of execution, not one-time setup (the
-    // virtual path likewise reuses its workspace across products).
+    // Shards, branch plans and O(N/P) workspaces, allocated outside the
+    // timed region: the measurement is of execution, not one-time setup
+    // (the virtual path likewise reuses its workspace across products).
+    let shards: Vec<ShardedMatrix> =
+        (0..p).map(|r| ShardedMatrix::from_global(a, d, r)).collect();
+    let sm_top = has_master.then(|| ShardedMatrix::top_from_global(a, d));
+    let top_plan = sm_top.as_ref().map(|sm| TopPlan::build(sm, nv));
     let bps: Vec<BranchPlan> =
-        (0..p).map(|r| BranchPlan::build(a, &op.exchange, r, nv)).collect();
-    let mut bws: Vec<BranchWorkspace> = bps.iter().map(|bp| BranchWorkspace::new(a, bp)).collect();
-    let mut top_ws = if has_master { Some(HgemvWorkspace::top_only(a, nv, c)) } else { None };
+        shards.iter().map(|sm| BranchPlan::build(sm, &op.exchange, nv)).collect();
+    let mut bws: Vec<BranchWorkspace> =
+        shards.iter().zip(&bps).map(|(sm, bp)| BranchWorkspace::new(sm, bp)).collect();
+    let mut top_ws = sm_top
+        .as_ref()
+        .map(|sm| HgemvWorkspace::top_only_dims(depth, &sm.u_ranks, &sm.v_ranks, nv, c));
 
     // Disjoint per-rank output chunks: branch leaf ranges are contiguous
     // point ranges in the permuted ordering, so `y` splits cleanly.
@@ -491,7 +663,7 @@ pub(crate) fn run_threaded(
         let mut ep_it = eps.into_iter();
         let mut y_it = y_chunks.into_iter();
         let ex = &op.exchange;
-        for (bp, bw) in bps.iter().zip(bws.iter_mut()) {
+        for ((sm, bp), bw) in shards.iter().zip(bps.iter()).zip(bws.iter_mut()) {
             let ep = ep_it.next().expect("one endpoint per rank");
             let (chunk, base_row) = y_it.next().expect("one output chunk per rank");
             jobs.push(Box::new(move || {
@@ -506,7 +678,7 @@ pub(crate) fn run_threaded(
                 let r_id = bp.rank;
                 let attempt = catch_unwind(AssertUnwindSafe(|| {
                     run_branch(
-                        a,
+                        sm,
                         backend,
                         ex,
                         bp,
@@ -530,13 +702,15 @@ pub(crate) fn run_threaded(
                 if out.is_err() {
                     abort_peers(&mut rec, n_eps, r_id);
                 }
-                let (metrics, tr) = out?;
+                let (mut metrics, tr) = out?;
+                metrics.matrix_bytes = sm.matrix_bytes() as u64;
                 Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))
             }));
         }
-        if let Some(tw) = top_ws.as_mut() {
+        if let (Some(tw), Some(smt), Some(tp)) =
+            (top_ws.as_mut(), sm_top.as_ref(), top_plan.as_ref())
+        {
             let ep = ep_it.next().expect("master endpoint");
-            let plan = &op.plan;
             jobs.push(Box::new(move || {
                 let mut rec = if want_trace {
                     Recording::new(ep, t0)
@@ -545,7 +719,7 @@ pub(crate) fn run_threaded(
                 };
                 let mut mb = Mailbox::new();
                 let attempt = catch_unwind(AssertUnwindSafe(|| {
-                    run_top_master(a, backend, plan, d, tw, &mut rec, &mut mb, t0)
+                    run_top_master(smt, backend, tp, tw, &mut rec, &mut mb, t0)
                 }));
                 let out = match attempt {
                     Ok(out) => out,
@@ -557,7 +731,8 @@ pub(crate) fn run_threaded(
                 if out.is_err() {
                     abort_peers(&mut rec, n_eps, p);
                 }
-                let (metrics, tr) = out?;
+                let (mut metrics, tr) = out?;
+                metrics.matrix_bytes = smt.matrix_bytes() as u64;
                 Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))
             }));
         }

@@ -32,16 +32,32 @@ pub mod socket;
 use std::collections::VecDeque;
 use std::fmt;
 
+use crate::admissibility::MatrixStructure;
 use crate::config::H2Config;
-use crate::construct::{build_h2, ExponentialKernel};
-use crate::geometry::PointSet;
+use crate::construct::kernels::{paper_kappa, FractionalKernel};
+use crate::construct::{build_branch, build_h2, build_top, ExponentialKernel, Kernel};
+use crate::dist::shard::ShardedMatrix;
+use crate::dist::DecompositionError;
+use crate::geometry::{PointSet, MAX_DIM};
 use crate::tree::H2Matrix;
 
-/// A deterministic test-matrix specification that round-trips through
-/// worker CLI flags, so every rank process of the socket transport
-/// rebuilds the identical [`H2Matrix`] (construction involves no
-/// randomness). Lives here (not in [`socket`]) so non-Unix builds and the
-/// CLI can share it.
+/// Which kernel/point-set family a [`MatrixJob`] describes. Every variant
+/// is fully determined by the job's scalar fields, so worker processes
+/// reconstruct identical data from CLI flags.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobKind {
+    /// §6.1 test sets: exp(−r/ℓ) over the unit-box grid (2D or 3D).
+    Exponential,
+    /// §6.4 fractional-diffusion kernel (Eq. 11) with the paper's bump
+    /// diffusivity, over the cell-centered grid on Ω = [-1,1]² — what the
+    /// persistent solver session ships to its workers.
+    Fractional { beta: f64 },
+}
+
+/// A deterministic matrix specification that round-trips through worker
+/// CLI flags, so every rank process of the socket transport rebuilds
+/// identical data (construction involves no randomness). Lives here (not
+/// in [`socket`]) so non-Unix builds and the CLI can share it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatrixJob {
     pub dim: usize,
@@ -50,6 +66,7 @@ pub struct MatrixJob {
     pub eta: f64,
     pub cheb_grid: usize,
     pub corr_len: f64,
+    pub kind: JobKind,
 }
 
 impl MatrixJob {
@@ -62,31 +79,90 @@ impl MatrixJob {
             eta: if dim == 2 { 0.9 } else { 0.95 },
             cheb_grid: if dim == 2 { 4 } else { 2 },
             corr_len: if dim == 2 { 0.1 } else { 0.2 },
+            kind: JobKind::Exponential,
         }
     }
 
     /// Number of points (= matrix dimension N) without building anything.
     pub fn n_points(&self) -> usize {
-        self.n_side.pow(self.dim as u32)
+        match self.kind {
+            JobKind::Exponential => self.n_side.pow(self.dim as u32),
+            // The fractional problem is 2-D regardless of `dim`.
+            JobKind::Fractional { .. } => self.n_side * self.n_side,
+        }
     }
 
-    /// Build the matrix (bit-identical across processes of one binary).
+    /// The job's point set.
+    pub fn points(&self) -> PointSet {
+        match self.kind {
+            JobKind::Exponential => {
+                if self.dim == 2 {
+                    PointSet::grid_2d(self.n_side, 1.0)
+                } else {
+                    PointSet::grid_3d(self.n_side, 1.0)
+                }
+            }
+            // The fractional problem is posed on the cell-centered grid
+            // over Ω = [-1,1]² (apps::fractional uses the same one).
+            JobKind::Fractional { .. } => {
+                assert_eq!(
+                    self.dim, 2,
+                    "the fractional-diffusion kernel is 2-D (got --dim {})",
+                    self.dim
+                );
+                PointSet::cell_grid_2d(self.n_side, -1.0, 1.0)
+            }
+        }
+    }
+
+    /// The job's kernel.
+    pub fn kernel(&self) -> Box<dyn Kernel> {
+        match self.kind {
+            JobKind::Exponential => {
+                Box::new(ExponentialKernel { dim: self.dim, corr_len: self.corr_len })
+            }
+            JobKind::Fractional { beta } => Box::new(FractionalKernel {
+                dim: 2,
+                beta,
+                kappa: paper_kappa as fn(&[f64; MAX_DIM]) -> f64,
+            }),
+        }
+    }
+
+    /// The job's construction config.
+    pub fn config(&self) -> H2Config {
+        H2Config { leaf_size: self.leaf_size, eta: self.eta, cheb_grid: self.cheb_grid }
+    }
+
+    /// Build the *global* matrix (bit-identical across processes of one
+    /// binary). Panics under the `H2OPUS_FORBID_FULL_MATRIX` guard —
+    /// worker ranks must use [`MatrixJob::build_branch`] instead.
     pub fn build(&self) -> H2Matrix {
-        let points = if self.dim == 2 {
-            PointSet::grid_2d(self.n_side, 1.0)
-        } else {
-            PointSet::grid_3d(self.n_side, 1.0)
-        };
-        let kernel = ExponentialKernel { dim: self.dim, corr_len: self.corr_len };
-        let cfg =
-            H2Config { leaf_size: self.leaf_size, eta: self.eta, cheb_grid: self.cheb_grid };
-        build_h2(points, &kernel, &cfg)
+        build_h2(self.points(), self.kernel().as_ref(), &self.config())
+    }
+
+    /// Build only rank `rank`'s [`ShardedMatrix`] plus the index-only
+    /// structure — the worker path: no global matrix is allocated.
+    pub fn build_branch(
+        &self,
+        p: usize,
+        rank: usize,
+    ) -> Result<(ShardedMatrix, MatrixStructure), DecompositionError> {
+        build_branch(self.points(), self.kernel().as_ref(), &self.config(), p, rank)
+    }
+
+    /// Build the coordinator's top-only shard plus the structure.
+    pub fn build_top(
+        &self,
+        p: usize,
+    ) -> Result<(ShardedMatrix, MatrixStructure), DecompositionError> {
+        build_top(self.points(), self.kernel().as_ref(), &self.config(), p)
     }
 
     /// The worker CLI flags encoding this job (f64s print in Rust's
     /// shortest round-trip form, so parsing recovers the exact bits).
     pub fn to_args(&self) -> Vec<String> {
-        vec![
+        let mut args = vec![
             "--dim".into(),
             self.dim.to_string(),
             "--n-side".into(),
@@ -99,7 +175,20 @@ impl MatrixJob {
             self.cheb_grid.to_string(),
             "--corr".into(),
             self.corr_len.to_string(),
-        ]
+        ];
+        match self.kind {
+            JobKind::Exponential => {
+                args.push("--kernel".into());
+                args.push("exp".into());
+            }
+            JobKind::Fractional { beta } => {
+                args.push("--kernel".into());
+                args.push("fractional".into());
+                args.push("--beta".into());
+                args.push(beta.to_string());
+            }
+        }
+        args
     }
 }
 
@@ -263,6 +352,27 @@ pub trait Endpoint: Send {
 
     /// Collective barrier over all endpoints of this transport.
     fn barrier(&mut self) -> Result<(), TransportError>;
+}
+
+/// A mutable reference is itself an endpoint — lets long-lived owners
+/// (the persistent socket session) lend their endpoint to per-product
+/// wrappers like [`recording::Recording`] without moving it.
+impl<E: Endpoint + ?Sized> Endpoint for &mut E {
+    fn id(&self) -> usize {
+        (**self).id()
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
+        (**self).send(dst, msg)
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        (**self).recv()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        (**self).barrier()
+    }
 }
 
 /// Tag-matched receives over an [`Endpoint`]'s unordered delivery: stashes

@@ -1,14 +1,25 @@
-//! Real OS-process ranks over Unix domain sockets.
+//! Real OS-process ranks over Unix domain sockets, with per-process
+//! *sharded* matrix storage and a persistent multi-product session.
 //!
-//! [`socket_hgemv`] spawns P `h2opus worker` subprocesses, each of which
-//! rebuilds the (deterministic) test matrix from its [`MatrixJob`] CLI
-//! flags, allocates only its branch-local O(N/P) workspace
-//! ([`crate::dist::branch`]) and runs the *same* rank body
-//! ([`crate::dist::threaded::run_branch`]) as the in-process executor —
-//! so the product is bitwise identical to the serial sweep while no
-//! process ever holds more than its branch (+ level-C halo) of the
-//! workspace. This is the paper's distributed-memory execution made real
-//! within one node.
+//! [`SocketSession::start`] spawns P `h2opus worker` subprocesses. Each
+//! worker rebuilds only its own [`ShardedMatrix`] from its [`MatrixJob`]
+//! CLI flags ([`MatrixJob::build_branch`] — branch-scoped construction,
+//! never the global matrix; enforced by the `H2OPUS_FORBID_FULL_MATRIX`
+//! guard the coordinator sets on every worker), allocates its
+//! branch-local O(N/P) workspace ([`crate::dist::branch`]) and then runs
+//! the *same* rank body ([`crate::dist::threaded::run_branch`]) as the
+//! in-process executor for every product of the session — so each product
+//! is bitwise identical to the serial sweep while no process ever holds
+//! more than its branch (+ replicated top + level-C halo) of the matrix
+//! or the workspace. This is the paper's distributed-memory storage made
+//! real within one node: representable N is bounded by the *sum* of the
+//! workers' memories, not by any single process.
+//!
+//! [`socket_hgemv`] is the one-shot wrapper (start, one product, drop);
+//! [`SocketSession::hgemv`] amortizes worker spawn, shard construction
+//! and plan building across products — the solver's CG loop drives one
+//! session for its whole iteration history
+//! ([`crate::apps::fractional::solve_with_session`]).
 //!
 //! # Topology and protocol
 //!
@@ -21,17 +32,20 @@
 //!
 //! Session shape:
 //!
-//! 1. handshake — each worker sends `Hello{rank}`;
-//! 2. the coordinator ships every worker its branch-local `Input` block
-//!    (own + dense-halo leaf rows only: O(N/P) per rank);
-//! 3. barrier — the measured wall-clock starts at its release;
-//! 4. the distributed product: plan-driven `Xhat` exchanges between
-//!    workers, the level-C `Gather` to the coordinator (which runs the
-//!    replicated top subtree over a top-only workspace), the `Parent`
-//!    scatter back;
-//! 5. each worker ships its `Output` rows, its f64-encoded `Metrics` and
-//!    its measured `Trace` stamps, then parks until the coordinator
-//!    closes the session (EOF).
+//! 1. handshake — each worker sends `Hello{rank}` and parks;
+//! 2. per product: the coordinator ships every worker its branch-local
+//!    `Input` block (own + dense-halo leaf rows only: O(N/P) per rank);
+//!    a barrier releases the measured wall-clock; the plan-driven `Xhat`
+//!    exchanges run between workers, the level-C `Gather` goes to the
+//!    coordinator (which runs the replicated top subtree of its
+//!    *top-only shard* over a top-only workspace), the `Parent` scatter
+//!    comes back; each worker ships its `Output` rows, its f64-encoded
+//!    `Metrics` (including its shard's
+//!    [`crate::metrics::Metrics::matrix_bytes`]) and optionally its
+//!    measured `Trace` stamps, then loops back to wait for the next
+//!    `Input`;
+//! 3. dropping the session sends `Shutdown`; workers exit, the router
+//!    drains, children are reaped.
 //!
 //! A worker crash surfaces as an EOF on its hub connection; the reader
 //! thread converts it into a [`TransportError::Closed`] delivered to the
@@ -53,12 +67,14 @@ use std::time::{Duration, Instant};
 
 use super::recording::{CommDir, CommEvent, Recording};
 use super::{Endpoint, Mailbox, MatrixJob, Message, MsgKind, Tag, TransportError};
-use crate::dist::branch::{fill_branch_input, BranchPlan, BranchWorkspace};
+use crate::construct::FORBID_FULL_MATRIX_ENV;
+use crate::dist::branch::{fill_io_input, BranchIo, BranchPlan, BranchWorkspace};
+use crate::dist::shard::ShardedMatrix;
 use crate::dist::threaded::{
-    measured_trace_json, run_branch, run_top_master, RankTrace, YSink,
+    measured_trace_json, run_branch, run_top_master, RankTrace, TopPlan, YSink,
 };
-use crate::dist::{Decomposition, ExchangePlan};
-use crate::matvec::{HgemvPlan, HgemvWorkspace};
+use crate::dist::ExchangePlan;
+use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
 
 /// Options of one socket session.
@@ -113,7 +129,7 @@ pub struct SocketReport {
     /// Per-rank worker-side wall-clock of the rank body.
     pub per_rank: Vec<f64>,
     /// Executed-work counters merged in rank order (coordinator last) —
-    /// actual wire traffic, real flops.
+    /// actual wire traffic, real flops, peak per-rank matrix bytes.
     pub metrics: Metrics,
     /// Measured Chrome trace (worker phase stamps + per-message events),
     /// when [`SocketOptions::measured_trace`].
@@ -233,6 +249,13 @@ impl Endpoint for WorkerEndpoint {
             if msg.tag.kind == MsgKind::Barrier {
                 return Ok(());
             }
+            // An aborted session (poisoned coordinator) must not leave
+            // this rank parked in the barrier until it gets killed.
+            if msg.tag.kind == MsgKind::Shutdown {
+                return Err(TransportError::Closed(
+                    "coordinator aborted the session at the barrier".into(),
+                ));
+            }
             self.prestash.push_back(msg);
         }
     }
@@ -247,14 +270,15 @@ fn metrics_to_payload(m: &Metrics, elapsed: f64) -> Vec<f64> {
         m.batch_launches as f64,
         m.pad_waste as f64,
         m.gemm_words as f64,
+        m.matrix_bytes as f64,
         elapsed,
     ]
 }
 
 fn metrics_from_payload(data: &[f64]) -> Result<(Metrics, f64), TransportError> {
-    if data.len() != 7 {
+    if data.len() != 8 {
         return Err(TransportError::Protocol(format!(
-            "metrics payload has {} values, expected 7",
+            "metrics payload has {} values, expected 8",
             data.len()
         )));
     }
@@ -265,7 +289,8 @@ fn metrics_from_payload(data: &[f64]) -> Result<(Metrics, f64), TransportError> 
     m.batch_launches = data[3] as u64;
     m.pad_waste = data[4] as u64;
     m.gemm_words = data[5] as u64;
-    Ok((m, data[6]))
+    m.matrix_bytes = data[6] as u64;
+    Ok((m, data[7]))
 }
 
 /// Encode (phase stamps + comm events) as flat 6-tuples:
@@ -330,7 +355,11 @@ fn trace_from_payload(
 }
 
 /// The body of the `h2opus worker` subcommand: one process rank of a
-/// socket session. Blocks until the coordinator closes the session.
+/// socket session. Builds *only its shard* of the matrix
+/// ([`MatrixJob::build_branch`]; the coordinator sets the
+/// `H2OPUS_FORBID_FULL_MATRIX` guard, so a global build would abort the
+/// process), then serves products until the coordinator closes the
+/// session (`Shutdown` or EOF).
 pub fn run_worker(
     job: &MatrixJob,
     connect: &Path,
@@ -338,12 +367,13 @@ pub fn run_worker(
     p: usize,
     nv: usize,
 ) -> Result<(), TransportError> {
-    let a = job.build();
-    let d = Decomposition::new(p, a.depth())
+    let (sm, structure) = job
+        .build_branch(p, rank)
         .map_err(|e| TransportError::Protocol(e.to_string()))?;
-    let ex = ExchangePlan::build(&a, d);
-    let bp = BranchPlan::build(&a, &ex, rank, nv);
-    let mut bw = BranchWorkspace::new(&a, &bp);
+    let d = sm.decomp;
+    let ex = ExchangePlan::build_from_structure(&structure, d);
+    let bp = BranchPlan::build(&sm, &ex, nv);
+    let mut bw = BranchWorkspace::new(&sm, &bp);
     let backend = crate::backend::native::NativeBackend;
 
     let mut ep = WorkerEndpoint::connect(connect, rank, p)?;
@@ -355,46 +385,57 @@ pub fn run_worker(
             std::process::exit(3);
         }
     }
+    // Test hook: deliberately construct the global matrix, proving the
+    // coordinator's guard turns a full build inside a worker into a
+    // session failure rather than silent O(N) memory.
+    if std::env::var_os("H2OPUS_TEST_FORCE_FULL_BUILD").is_some() {
+        let _ = job.build(); // panics under H2OPUS_FORBID_FULL_MATRIX
+    }
 
-    // Branch-local input: the only rows this process ever holds. The
-    // message's level field carries the session flags (bit 0: record a
-    // measured trace).
+    // Product loop: each Input starts one product; Shutdown (surfaced by
+    // the mailbox as Closed) or coordinator EOF ends the session.
     let mut mb = Mailbox::new();
-    let input = mb.recv_kind(&mut ep, MsgKind::Input)?;
-    if input.data.len() != bw.x_pad.len() {
-        return Err(TransportError::Protocol(format!(
-            "rank {rank}: input block has {} values, branch plan expects {}",
-            input.data.len(),
-            bw.x_pad.len()
-        )));
-    }
-    bw.x_pad.copy_from_slice(&input.data);
-    let record = input.tag.level & 1 == 1;
-
-    // The measured section starts at the barrier release on every side.
-    ep.barrier()?;
-    let t0 = Instant::now();
-    let mut rec =
-        if record { Recording::new(ep, t0) } else { Recording::passthrough(ep, t0) };
-    let (metrics, tr) =
-        run_branch(&a, &backend, &ex, &bp, &mut bw, &mut rec, &mut mb, None, YSink::Send, t0)?;
-    let elapsed = t0.elapsed().as_secs_f64();
-    let comm = rec.events().to_vec();
-    let mut ep = rec.into_inner();
-
-    ep.send(p, Message::new(MsgKind::Metrics, 0, rank, metrics_to_payload(&metrics, elapsed)))?;
-    if record {
-        ep.send(p, Message::new(MsgKind::Trace, 0, rank, trace_to_payload(&tr, &comm)))?;
-    }
-
-    // Park until the coordinator ends the session — an explicit Shutdown
-    // on a clean run, EOF if the coordinator died.
     loop {
-        match ep.recv() {
-            Ok(msg) if msg.tag.kind == MsgKind::Shutdown => return Ok(()),
-            Ok(_) => continue,
+        let input = match mb.recv_kind(&mut ep, MsgKind::Input) {
+            Ok(m) => m,
             Err(TransportError::Closed(_)) => return Ok(()),
             Err(e) => return Err(e),
+        };
+        if input.data.len() != bw.x_pad.len() {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank}: input block has {} values, branch plan expects {}",
+                input.data.len(),
+                bw.x_pad.len()
+            )));
+        }
+        // The phase functions accumulate; a session-persistent workspace
+        // must start each product from zero.
+        bw.clear();
+        bw.x_pad.copy_from_slice(&input.data);
+        // The message's level field carries the session flags (bit 0:
+        // record a measured trace).
+        let record = input.tag.level & 1 == 1;
+
+        // The measured section starts at the barrier release everywhere.
+        ep.barrier()?;
+        let t0 = Instant::now();
+        let mut rec = if record {
+            Recording::new(&mut ep, t0)
+        } else {
+            Recording::passthrough(&mut ep, t0)
+        };
+        let (mut metrics, tr) =
+            run_branch(&sm, &backend, &ex, &bp, &mut bw, &mut rec, &mut mb, None, YSink::Send, t0)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        metrics.matrix_bytes = sm.matrix_bytes() as u64;
+        let comm = rec.into_events();
+
+        ep.send(
+            p,
+            Message::new(MsgKind::Metrics, 0, rank, metrics_to_payload(&metrics, elapsed)),
+        )?;
+        if record {
+            ep.send(p, Message::new(MsgKind::Trace, 0, rank, trace_to_payload(&tr, &comm)))?;
         }
     }
 }
@@ -458,7 +499,8 @@ impl Endpoint for HubEndpoint {
 }
 
 /// Kills the remaining worker processes when the session ends (normally
-/// they exit on EOF first; on errors this prevents orphans and hangs).
+/// they exit on Shutdown/EOF first; on errors this prevents orphans and
+/// hangs).
 struct ChildGuard {
     children: Vec<(usize, Child)>,
 }
@@ -489,11 +531,450 @@ impl Drop for SocketFileGuard {
 
 static SESSION_COUNTER: AtomicU64 = AtomicU64::new(0);
 
-/// y = A·x across P real worker subprocesses (see the module docs for the
-/// session protocol). `x`/`y` are N × nv in the permuted ordering, as in
-/// [`crate::matvec::hgemv`]; the result is bitwise identical to the
-/// serial product. The matrix is specified as a [`MatrixJob`] so every
-/// worker can rebuild it deterministically.
+/// A persistent distributed session: P live `h2opus worker` subprocesses
+/// holding their shards and plans, ready to run any number of products.
+/// Worker spawn, branch-scoped matrix construction and plan building are
+/// paid once at [`SocketSession::start`]; every [`SocketSession::hgemv`]
+/// ships only the O(N/P) input blocks — which is what lets an iterative
+/// solver amortize the distributed setup across its whole CG history.
+/// Dropping the session shuts the workers down cleanly.
+pub struct SocketSession {
+    p: usize,
+    nv: usize,
+    opts: SocketOptions,
+    /// Top-only shard: the replicated top subtree + the (full) cluster
+    /// tree — the coordinator never holds branch matrix data.
+    sm_top: ShardedMatrix,
+    /// Precomputed top marshaling offsets (once per session).
+    top_plan: TopPlan,
+    /// Per-rank structure-only input layouts.
+    io: Vec<BranchIo>,
+    hub: Option<HubEndpoint>,
+    mb: Mailbox,
+    guard: ChildGuard,
+    router_threads: Vec<std::thread::JoinHandle<()>>,
+    _sock_guard: SocketFileGuard,
+    products: u64,
+}
+
+impl SocketSession {
+    /// Spawn and connect the P worker ranks of `job` (see module docs for
+    /// the session protocol).
+    pub fn start(
+        job: &MatrixJob,
+        p: usize,
+        nv: usize,
+        opts: SocketOptions,
+    ) -> Result<SocketSession, TransportError> {
+        let (sm_top, structure) =
+            job.build_top(p).map_err(|e| TransportError::Protocol(e.to_string()))?;
+        let d = sm_top.decomp;
+        let top_plan = TopPlan::build(&sm_top, nv);
+        let io: Vec<BranchIo> =
+            (0..p).map(|r| BranchIo::build(&structure.dense, &d, r)).collect();
+
+        // Session socket.
+        let sock_path = std::env::temp_dir().join(format!(
+            "h2opus-{}-{}.sock",
+            std::process::id(),
+            SESSION_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_file(&sock_path);
+        let listener = UnixListener::bind(&sock_path).map_err(|e| io_err(e, "bind"))?;
+        listener.set_nonblocking(true).map_err(|e| io_err(e, "listener nonblocking"))?;
+        let sock_guard = SocketFileGuard(sock_path.clone());
+
+        // Spawn the worker ranks (the guard owns them from the first
+        // spawn on, so any early error kills the already-started ones).
+        // Every worker runs under the full-matrix guard: it must build
+        // its shard, never the global matrix.
+        let mut guard = ChildGuard { children: Vec::with_capacity(p) };
+        for r in 0..p {
+            let mut cmd = Command::new(&opts.worker_exe);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(&sock_path)
+                .arg("--rank")
+                .arg(r.to_string())
+                .arg("--ranks")
+                .arg(p.to_string())
+                .arg("--nv")
+                .arg(nv.to_string())
+                .args(job.to_args())
+                .env(FORBID_FULL_MATRIX_ENV, "1")
+                .stdin(Stdio::null())
+                .stdout(Stdio::null());
+            for (k, v) in &opts.extra_env {
+                cmd.env(k, v);
+            }
+            let child = cmd
+                .spawn()
+                .map_err(|e| TransportError::Io(format!("spawning worker {r}: {e}")))?;
+            guard.children.push((r, child));
+        }
+
+        // Accept + handshake, with the session deadline and early-exit
+        // detection (a worker that dies before connecting must not hang
+        // us).
+        let deadline = Instant::now() + opts.timeout;
+        let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+        let mut accepted = 0usize;
+        while accepted < p {
+            match listener.accept() {
+                Ok((mut s, _addr)) => {
+                    s.set_nonblocking(false).map_err(|e| io_err(e, "stream blocking"))?;
+                    s.set_read_timeout(Some(opts.timeout))
+                        .map_err(|e| io_err(e, "stream timeout"))?;
+                    let (_dst, hello) = read_frame(&mut s)?;
+                    if hello.tag.kind != MsgKind::Hello {
+                        return Err(TransportError::Protocol(format!(
+                            "expected hello, got {}",
+                            hello.tag.kind.name()
+                        )));
+                    }
+                    let r = hello.tag.src as usize;
+                    if r >= p || streams[r].is_some() {
+                        return Err(TransportError::Protocol(format!("bad hello rank {r}")));
+                    }
+                    // Reader threads block for as long as a rank computes;
+                    // the session deadline is enforced at the hub's
+                    // receive side.
+                    s.set_read_timeout(None).map_err(|e| io_err(e, "clear timeout"))?;
+                    streams[r] = Some(s);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    for (r, child) in &mut guard.children {
+                        if streams[*r].is_none() {
+                            if let Ok(Some(status)) = child.try_wait() {
+                                return Err(TransportError::Closed(format!(
+                                    "worker {r} exited during handshake ({status})"
+                                )));
+                            }
+                        }
+                    }
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Timeout(format!(
+                            "{accepted}/{p} workers connected within {:?}",
+                            opts.timeout
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(io_err(e, "accept")),
+            }
+        }
+
+        // Router: per worker one writer thread (unbounded queue out) and
+        // one reader thread (frames in, routed by destination), so
+        // routing never blocks on a busy destination's socket buffer —
+        // the pipelined sends cannot deadlock.
+        let (master_tx, master_rx) = channel::<Result<Message, TransportError>>();
+        let mut out_txs: Vec<Sender<Message>> = Vec::with_capacity(p);
+        let mut out_rxs: Vec<Receiver<Message>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel::<Message>();
+            out_txs.push(tx);
+            out_rxs.push(rx);
+        }
+        let mut router_threads = Vec::with_capacity(2 * p);
+        for (w, (slot, out_rx)) in streams.into_iter().zip(out_rxs).enumerate() {
+            let read_half = slot.expect("all workers accepted");
+            let mut write_half = read_half.try_clone().map_err(|e| io_err(e, "clone stream"))?;
+            router_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("h2opus-writer-{w}"))
+                    .spawn(move || {
+                        while let Ok(msg) = out_rx.recv() {
+                            if write_frame(&mut write_half, w, &msg).is_err() {
+                                break; // the reader side surfaces the failure
+                            }
+                        }
+                    })
+                    .map_err(|e| TransportError::Io(format!("spawning writer {w}: {e}")))?,
+            );
+            let fwd_txs = out_txs.clone();
+            let to_master = master_tx.clone();
+            let mut read_half = read_half;
+            router_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("h2opus-reader-{w}"))
+                    .spawn(move || loop {
+                        match read_frame(&mut read_half) {
+                            Ok((dst, msg)) => {
+                                if dst == p {
+                                    if to_master.send(Ok(msg)).is_err() {
+                                        break; // session over
+                                    }
+                                } else if dst < p {
+                                    if fwd_txs[dst].send(msg).is_err() {
+                                        break; // session over
+                                    }
+                                } else {
+                                    let _ = to_master.send(Err(TransportError::Protocol(
+                                        format!("worker {w} addressed unknown endpoint {dst}"),
+                                    )));
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                // EOF after a clean session is consumed by
+                                // nobody; during the session it propagates.
+                                let _ = to_master.send(Err(TransportError::Closed(format!(
+                                    "worker {w}: {e}"
+                                ))));
+                                break;
+                            }
+                        }
+                    })
+                    .map_err(|e| TransportError::Io(format!("spawning reader {w}: {e}")))?,
+            );
+        }
+        drop(master_tx);
+        let hub = HubEndpoint {
+            p,
+            rx: master_rx,
+            out_txs,
+            timeout: opts.timeout,
+            prestash: VecDeque::new(),
+        };
+
+        Ok(SocketSession {
+            p,
+            nv,
+            opts,
+            sm_top,
+            top_plan,
+            io,
+            hub: Some(hub),
+            mb: Mailbox::new(),
+            guard,
+            router_threads,
+            _sock_guard: sock_guard,
+            products: 0,
+        })
+    }
+
+    /// Number of worker ranks.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// Matrix dimension N.
+    pub fn n(&self) -> usize {
+        self.sm_top.n()
+    }
+
+    /// The session's cluster tree (for permuting in/out of the H²
+    /// ordering — callers must agree with it, e.g. the solver asserts its
+    /// own matrix was clustered identically).
+    pub fn tree(&self) -> &crate::clustering::ClusterTree {
+        &self.sm_top.tree
+    }
+
+    /// Products run so far (observability: a solver session should show
+    /// one spawn and many products).
+    pub fn products(&self) -> u64 {
+        self.products
+    }
+
+    /// One distributed product y = A·x over the live worker ranks.
+    /// `x`/`y` are N × nv in the permuted ordering, as in
+    /// [`crate::matvec::hgemv`]; the result is bitwise identical to the
+    /// serial product.
+    ///
+    /// A mid-product transport error **poisons the session**: frames of
+    /// the failed product may still be in flight, so a retry could
+    /// silently consume stale `Output` rows. The poisoned session
+    /// broadcasts a best-effort `Shutdown`, refuses further products
+    /// (`Closed`), and cleans up on drop.
+    pub fn hgemv(&mut self, x: &[f64], y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        let n = self.sm_top.n();
+        let nv = self.nv;
+        if x.len() != n * nv || y.len() != n * nv {
+            return Err(TransportError::Protocol(format!(
+                "x/y must be N*nv = {} values (got {}, {})",
+                n * nv,
+                x.len(),
+                y.len()
+            )));
+        }
+        match self.product(x, y) {
+            Ok(rep) => Ok(rep),
+            Err(e) => {
+                if let Some(hub) = self.hub.as_mut() {
+                    for r in 0..self.p {
+                        let _ = hub
+                            .send(r, Message::new(MsgKind::Shutdown, 0, self.p, Vec::new()));
+                    }
+                }
+                self.hub = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn product(&mut self, x: &[f64], y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        let Self { p, nv, opts, sm_top, top_plan, io, hub, mb, products, .. } = self;
+        let (p, nv) = (*p, *nv);
+        let hub = hub.as_mut().ok_or_else(|| {
+            TransportError::Closed(
+                "session shut down (a previous product failed or the session was closed)".into(),
+            )
+        })?;
+        let d = sm_top.decomp;
+        let c = d.c_level;
+        let n = sm_top.n();
+        let backend = crate::backend::native::NativeBackend;
+        let m_pad = sm_top.leaf_dim;
+        let depth = sm_top.depth();
+
+        // Ship every worker its branch-local input block (O(N/P) rows
+        // each); the level field carries the session flags (bit 0:
+        // record a trace).
+        let flags = usize::from(opts.measured_trace);
+        for (r, layout) in io.iter().enumerate() {
+            let mut buf = vec![0.0; layout.x_words(m_pad, nv)];
+            fill_io_input(&sm_top.tree, layout, m_pad, nv, x, &mut buf);
+            hub.send(r, Message::new(MsgKind::Input, flags, p, buf))?;
+        }
+
+        // The measured section starts at the barrier release on every
+        // side.
+        hub.barrier()?;
+        let t0 = Instant::now();
+
+        // The replicated top subtree runs on the coordinator, over its
+        // top-only shard and an O(P) workspace.
+        let mut master_metrics = Metrics::new();
+        let mut master_trace = RankTrace::default();
+        let mut master_comm: Vec<CommEvent> = Vec::new();
+        if c > 0 {
+            let mut top_ws =
+                HgemvWorkspace::top_only_dims(depth, &sm_top.u_ranks, &sm_top.v_ranks, nv, c);
+            let mut rec = if opts.measured_trace {
+                Recording::new(&mut *hub, t0)
+            } else {
+                Recording::passthrough(&mut *hub, t0)
+            };
+            let (mut m, tr) =
+                run_top_master(sm_top, &backend, top_plan, &mut top_ws, &mut rec, mb, t0)?;
+            m.matrix_bytes = sm_top.matrix_bytes() as u64;
+            master_metrics = m;
+            master_trace = tr;
+            master_comm = rec.into_events();
+        }
+
+        // Collect the output rows; the measured clock stops at the last.
+        let mut got_output = vec![false; p];
+        for _ in 0..p {
+            let msg = mb.recv_kind(hub, MsgKind::Output)?;
+            let r = msg.tag.src as usize;
+            if r >= p || got_output[r] {
+                return Err(TransportError::Protocol(format!("unexpected output from {r}")));
+            }
+            got_output[r] = true;
+            let leaf_range = &io[r].leaf_range;
+            let base_row = sm_top.tree.node(depth, leaf_range.start).start;
+            let end_row = if leaf_range.end == (1usize << depth) {
+                n
+            } else {
+                sm_top.tree.node(depth, leaf_range.end).start
+            };
+            if msg.data.len() != (end_row - base_row) * nv {
+                return Err(TransportError::Protocol(format!(
+                    "rank {r} output has {} values, expected {}",
+                    msg.data.len(),
+                    (end_row - base_row) * nv
+                )));
+            }
+            y[base_row * nv..end_row * nv].copy_from_slice(&msg.data);
+        }
+        let measured = t0.elapsed().as_secs_f64();
+
+        // Per-rank counters and trace stamps.
+        let mut rank_metrics: Vec<Metrics> = (0..p).map(|_| Metrics::new()).collect();
+        let mut per_rank = vec![0.0; p];
+        for _ in 0..p {
+            let msg = mb.recv_kind(hub, MsgKind::Metrics)?;
+            let r = msg.tag.src as usize;
+            if r >= p {
+                return Err(TransportError::Protocol(format!(
+                    "metrics from unknown rank {r}"
+                )));
+            }
+            let (m, elapsed) = metrics_from_payload(&msg.data)?;
+            rank_metrics[r] = m;
+            per_rank[r] = elapsed;
+        }
+        let measured_trace_json = if opts.measured_trace {
+            let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
+            for _ in 0..p {
+                let msg = mb.recv_kind(hub, MsgKind::Trace)?;
+                let r = msg.tag.src as usize;
+                let (tr, comm) = trace_from_payload(&msg.data, r)?;
+                parts.push((r, tr, comm));
+            }
+            parts.sort_by_key(|(r, _, _)| *r);
+            parts.push((p, master_trace, master_comm));
+            Some(measured_trace_json(&parts))
+        } else {
+            None
+        };
+
+        let mut metrics = Metrics::merge_all(rank_metrics.iter());
+        metrics.merge(&master_metrics);
+        *products += 1;
+
+        Ok(SocketReport { measured, per_rank, metrics, measured_trace_json })
+    }
+}
+
+impl Drop for SocketSession {
+    fn drop(&mut self) {
+        // Clean shutdown: tell every worker to exit, then release the
+        // writer queues by dropping the hub. Workers exit on the Shutdown
+        // message, their readers see EOF and drop the forwarding senders,
+        // which lets the writer threads drain and exit.
+        if let Some(mut hub) = self.hub.take() {
+            for r in 0..self.p {
+                let _ = hub.send(r, Message::new(MsgKind::Shutdown, 0, self.p, Vec::new()));
+            }
+        }
+        // A stalled worker would never read the Shutdown (and the joins
+        // below would block on its reader thread forever), so grant a
+        // short grace period and then kill stragglers — only after the
+        // children are gone is joining the router guaranteed to finish.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let all_exited = self
+                .guard
+                .children
+                .iter_mut()
+                .all(|(_, c)| matches!(c.try_wait(), Ok(Some(_))));
+            if all_exited || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for (_, child) in &mut self.guard.children {
+            if !matches!(child.try_wait(), Ok(Some(_))) {
+                let _ = child.kill();
+            }
+        }
+        for t in self.router_threads.drain(..) {
+            let _ = t.join();
+        }
+        for (_, child) in &mut self.guard.children {
+            let _ = child.wait();
+        }
+    }
+}
+
+/// One-shot product: y = A·x across P real worker subprocesses (see the
+/// module docs for the session protocol) — starts a [`SocketSession`],
+/// runs one product and tears the session down. For repeated products
+/// keep the session alive instead.
 pub fn socket_hgemv(
     job: &MatrixJob,
     p: usize,
@@ -502,291 +983,6 @@ pub fn socket_hgemv(
     y: &mut [f64],
     opts: &SocketOptions,
 ) -> Result<SocketReport, TransportError> {
-    let a = job.build();
-    let d = Decomposition::new(p, a.depth())
-        .map_err(|e| TransportError::Protocol(e.to_string()))?;
-    let c = d.c_level;
-    let n = a.n();
-    if x.len() != n * nv || y.len() != n * nv {
-        return Err(TransportError::Protocol(format!(
-            "x/y must be N*nv = {} values (got {}, {})",
-            n * nv,
-            x.len(),
-            y.len()
-        )));
-    }
-    let ex = ExchangePlan::build(&a, d);
-    let bps: Vec<BranchPlan> = (0..p).map(|r| BranchPlan::build(&a, &ex, r, nv)).collect();
-    let backend = crate::backend::native::NativeBackend;
-
-    // Session socket.
-    let sock_path = std::env::temp_dir().join(format!(
-        "h2opus-{}-{}.sock",
-        std::process::id(),
-        SESSION_COUNTER.fetch_add(1, Ordering::Relaxed)
-    ));
-    let _ = std::fs::remove_file(&sock_path);
-    let listener = UnixListener::bind(&sock_path).map_err(|e| io_err(e, "bind"))?;
-    listener.set_nonblocking(true).map_err(|e| io_err(e, "listener nonblocking"))?;
-    let _sock_guard = SocketFileGuard(sock_path.clone());
-
-    // Spawn the worker ranks (the guard owns them from the first spawn on,
-    // so any early error kills the already-started ones).
-    let mut guard = ChildGuard { children: Vec::with_capacity(p) };
-    for r in 0..p {
-        let mut cmd = Command::new(&opts.worker_exe);
-        cmd.arg("worker")
-            .arg("--connect")
-            .arg(&sock_path)
-            .arg("--rank")
-            .arg(r.to_string())
-            .arg("--ranks")
-            .arg(p.to_string())
-            .arg("--nv")
-            .arg(nv.to_string())
-            .args(job.to_args())
-            .stdin(Stdio::null())
-            .stdout(Stdio::null());
-        for (k, v) in &opts.extra_env {
-            cmd.env(k, v);
-        }
-        let child = cmd
-            .spawn()
-            .map_err(|e| TransportError::Io(format!("spawning worker {r}: {e}")))?;
-        guard.children.push((r, child));
-    }
-
-    // Accept + handshake, with the session deadline and early-exit
-    // detection (a worker that dies before connecting must not hang us).
-    let deadline = Instant::now() + opts.timeout;
-    let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
-    let mut accepted = 0usize;
-    while accepted < p {
-        match listener.accept() {
-            Ok((mut s, _addr)) => {
-                s.set_nonblocking(false).map_err(|e| io_err(e, "stream blocking"))?;
-                s.set_read_timeout(Some(opts.timeout))
-                    .map_err(|e| io_err(e, "stream timeout"))?;
-                let (_dst, hello) = read_frame(&mut s)?;
-                if hello.tag.kind != MsgKind::Hello {
-                    return Err(TransportError::Protocol(format!(
-                        "expected hello, got {}",
-                        hello.tag.kind.name()
-                    )));
-                }
-                let r = hello.tag.src as usize;
-                if r >= p || streams[r].is_some() {
-                    return Err(TransportError::Protocol(format!("bad hello rank {r}")));
-                }
-                // Reader threads block for as long as a rank computes; the
-                // session deadline is enforced at the hub's receive side.
-                s.set_read_timeout(None).map_err(|e| io_err(e, "clear timeout"))?;
-                streams[r] = Some(s);
-                accepted += 1;
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                for (r, child) in &mut guard.children {
-                    if streams[*r].is_none() {
-                        if let Ok(Some(status)) = child.try_wait() {
-                            return Err(TransportError::Closed(format!(
-                                "worker {r} exited during handshake ({status})"
-                            )));
-                        }
-                    }
-                }
-                if Instant::now() > deadline {
-                    return Err(TransportError::Timeout(format!(
-                        "{accepted}/{p} workers connected within {:?}",
-                        opts.timeout
-                    )));
-                }
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Err(e) => return Err(io_err(e, "accept")),
-        }
-    }
-
-    // Router: per worker one writer thread (unbounded queue out) and one
-    // reader thread (frames in, routed by destination), so routing never
-    // blocks on a busy destination's socket buffer — the pipelined sends
-    // cannot deadlock.
-    let (master_tx, master_rx) = channel::<Result<Message, TransportError>>();
-    let mut out_txs: Vec<Sender<Message>> = Vec::with_capacity(p);
-    let mut out_rxs: Vec<Receiver<Message>> = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = channel::<Message>();
-        out_txs.push(tx);
-        out_rxs.push(rx);
-    }
-    let mut router_threads = Vec::with_capacity(2 * p);
-    for (w, (slot, out_rx)) in streams.into_iter().zip(out_rxs).enumerate() {
-        let read_half = slot.expect("all workers accepted");
-        let mut write_half = read_half.try_clone().map_err(|e| io_err(e, "clone stream"))?;
-        router_threads.push(
-            std::thread::Builder::new()
-                .name(format!("h2opus-writer-{w}"))
-                .spawn(move || {
-                    while let Ok(msg) = out_rx.recv() {
-                        if write_frame(&mut write_half, w, &msg).is_err() {
-                            break; // the reader side surfaces the failure
-                        }
-                    }
-                })
-                .map_err(|e| TransportError::Io(format!("spawning writer {w}: {e}")))?,
-        );
-        let fwd_txs = out_txs.clone();
-        let to_master = master_tx.clone();
-        let mut read_half = read_half;
-        router_threads.push(
-            std::thread::Builder::new()
-                .name(format!("h2opus-reader-{w}"))
-                .spawn(move || loop {
-                    match read_frame(&mut read_half) {
-                        Ok((dst, msg)) => {
-                            if dst == p {
-                                if to_master.send(Ok(msg)).is_err() {
-                                    break; // session over
-                                }
-                            } else if dst < p {
-                                if fwd_txs[dst].send(msg).is_err() {
-                                    break; // session over
-                                }
-                            } else {
-                                let _ = to_master.send(Err(TransportError::Protocol(
-                                    format!("worker {w} addressed unknown endpoint {dst}"),
-                                )));
-                                break;
-                            }
-                        }
-                        Err(e) => {
-                            // EOF after a clean session is consumed by
-                            // nobody; during the session it propagates.
-                            let _ = to_master.send(Err(TransportError::Closed(format!(
-                                "worker {w}: {e}"
-                            ))));
-                            break;
-                        }
-                    }
-                })
-                .map_err(|e| TransportError::Io(format!("spawning reader {w}: {e}")))?,
-        );
-    }
-    drop(master_tx);
-    let mut hub = HubEndpoint {
-        p,
-        rx: master_rx,
-        out_txs,
-        timeout: opts.timeout,
-        prestash: VecDeque::new(),
-    };
-
-    // Ship every worker its branch-local input block (O(N/P) rows each);
-    // the level field carries the session flags (bit 0: record a trace).
-    let flags = usize::from(opts.measured_trace);
-    for (r, bp) in bps.iter().enumerate() {
-        let mut buf = vec![0.0; (bp.leaf_range.len() + bp.xpad_halo.len()) * a.u.leaf_dim * nv];
-        fill_branch_input(&a, bp, x, &mut buf);
-        hub.send(r, Message::new(MsgKind::Input, flags, p, buf))?;
-    }
-
-    // The measured section starts at the barrier release on every side.
-    hub.barrier()?;
-    let t0 = Instant::now();
-
-    // The replicated top subtree runs on the coordinator, over a top-only
-    // (O(P)) workspace.
-    let mut mb = Mailbox::new();
-    let mut master_metrics = Metrics::new();
-    let mut master_trace = RankTrace::default();
-    let mut master_comm: Vec<CommEvent> = Vec::new();
-    if c > 0 {
-        let plan = HgemvPlan::new(&a, nv);
-        let mut top_ws = HgemvWorkspace::top_only(&a, nv, c);
-        let mut rec = if opts.measured_trace {
-            Recording::new(hub, t0)
-        } else {
-            Recording::passthrough(hub, t0)
-        };
-        let (m, tr) =
-            run_top_master(&a, &backend, &plan, d, &mut top_ws, &mut rec, &mut mb, t0)?;
-        master_metrics = m;
-        master_trace = tr;
-        master_comm = rec.events().to_vec();
-        hub = rec.into_inner();
-    }
-
-    // Collect the output rows; the measured clock stops at the last one.
-    let depth = a.depth();
-    let mut got_output = vec![false; p];
-    for _ in 0..p {
-        let msg = mb.recv_kind(&mut hub, MsgKind::Output)?;
-        let r = msg.tag.src as usize;
-        if r >= p || got_output[r] {
-            return Err(TransportError::Protocol(format!("unexpected output from {r}")));
-        }
-        got_output[r] = true;
-        let base_row = a.tree.node(depth, bps[r].leaf_range.start).start;
-        let end_row = if bps[r].leaf_range.end == (1usize << depth) {
-            n
-        } else {
-            a.tree.node(depth, bps[r].leaf_range.end).start
-        };
-        if msg.data.len() != (end_row - base_row) * nv {
-            return Err(TransportError::Protocol(format!(
-                "rank {r} output has {} values, expected {}",
-                msg.data.len(),
-                (end_row - base_row) * nv
-            )));
-        }
-        y[base_row * nv..end_row * nv].copy_from_slice(&msg.data);
-    }
-    let measured = t0.elapsed().as_secs_f64();
-
-    // Per-rank counters and trace stamps.
-    let mut rank_metrics: Vec<Metrics> = (0..p).map(|_| Metrics::new()).collect();
-    let mut per_rank = vec![0.0; p];
-    for _ in 0..p {
-        let msg = mb.recv_kind(&mut hub, MsgKind::Metrics)?;
-        let r = msg.tag.src as usize;
-        if r >= p {
-            return Err(TransportError::Protocol(format!("metrics from unknown rank {r}")));
-        }
-        let (m, elapsed) = metrics_from_payload(&msg.data)?;
-        rank_metrics[r] = m;
-        per_rank[r] = elapsed;
-    }
-    let measured_trace_json = if opts.measured_trace {
-        let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
-        for _ in 0..p {
-            let msg = mb.recv_kind(&mut hub, MsgKind::Trace)?;
-            let r = msg.tag.src as usize;
-            let (tr, comm) = trace_from_payload(&msg.data, r)?;
-            parts.push((r, tr, comm));
-        }
-        parts.sort_by_key(|(r, _, _)| *r);
-        parts.push((p, master_trace, master_comm));
-        Some(measured_trace_json(&parts))
-    } else {
-        None
-    };
-
-    let mut metrics = Metrics::merge_all(rank_metrics.iter());
-    metrics.merge(&master_metrics);
-
-    // Clean shutdown: tell every worker to exit, then release the writer
-    // queues. Workers exit on the Shutdown message, their readers see EOF
-    // and drop the forwarding senders, which lets the writer threads
-    // drain and exit — no side waits on a peer that waits on it.
-    for r in 0..p {
-        let _ = hub.send(r, Message::new(MsgKind::Shutdown, 0, p, Vec::new()));
-    }
-    drop(hub);
-    for t in router_threads {
-        let _ = t.join();
-    }
-    for (_, child) in &mut guard.children {
-        let _ = child.wait();
-    }
-
-    Ok(SocketReport { measured, per_rank, metrics, measured_trace_json })
+    let mut session = SocketSession::start(job, p, nv, opts.clone())?;
+    session.hgemv(x, y)
 }

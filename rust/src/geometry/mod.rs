@@ -83,6 +83,21 @@ impl PointSet {
         ps
     }
 
+    /// Cell-centered 2D grid: n×n cell midpoints over [lo, hi]² — the
+    /// §6.4 fractional-diffusion discretization (used both by
+    /// `apps::fractional` and by the distributed solver session's
+    /// [`crate::dist::transport::MatrixJob`], which must agree bitwise).
+    pub fn cell_grid_2d(n: usize, lo: f64, hi: f64) -> Self {
+        let h = (hi - lo) / n as f64;
+        let mut ps = PointSet::new(2);
+        for j in 0..n {
+            for i in 0..n {
+                ps.push(&[lo + (i as f64 + 0.5) * h, lo + (j as f64 + 0.5) * h]);
+            }
+        }
+        ps
+    }
+
     /// 2D grid of points with spacing `h` covering the box
     /// [lo, hi]² (inclusive of both ends when (hi-lo)/h is integral).
     /// Used for the fractional-diffusion domains Ω and Ω ∪ Ω₀ (§6.4).

@@ -17,6 +17,10 @@
 //!   ([`dist::ExchangePlan`]) and §4.2 communication/computation overlap
 //!   ([`dist::hgemv`], [`dist::compress`]) — see the [`dist`] module docs
 //!   for a runnable example,
+//! - per-rank *sharded* matrix storage for out-of-core N
+//!   ([`dist::shard`]): real worker processes construct only their branch
+//!   of the matrix and serve bitwise serial-identical products over a
+//!   persistent socket session ([`dist::transport::socket`]),
 //! - batched dense linear-algebra backends: a pure-Rust reference and an
 //!   AOT-compiled JAX/Pallas path executed through PJRT ([`backend`],
 //!   [`runtime`]),

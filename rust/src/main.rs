@@ -18,7 +18,7 @@ use h2opus::backend::ComputeBackend;
 use h2opus::compression::compress_full;
 use h2opus::config::NetworkModel;
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
-use h2opus::dist::transport::MatrixJob;
+use h2opus::dist::transport::{JobKind, MatrixJob};
 use h2opus::metrics::Metrics;
 use h2opus::runtime::XlaBackend;
 use h2opus::util::Prng;
@@ -63,6 +63,10 @@ fn backend_from(flags: &HashMap<String, String>) -> Box<dyn ComputeBackend> {
 /// specification the socket transport ships to its worker processes.
 fn job_from(flags: &HashMap<String, String>) -> MatrixJob {
     let dim: usize = get(flags, "dim", 2);
+    let kind = match flags.get("kernel").map(String::as_str) {
+        Some("fractional") => JobKind::Fractional { beta: get(flags, "beta", 0.75) },
+        _ => JobKind::Exponential,
+    };
     MatrixJob {
         dim,
         n_side: get(flags, "n-side", 32),
@@ -70,6 +74,7 @@ fn job_from(flags: &HashMap<String, String>) -> MatrixJob {
         eta: get(flags, "eta", if dim == 2 { 0.9 } else { 0.95 }),
         cheb_grid: get(flags, "g", if dim == 2 { 4 } else { 2 }),
         corr_len: get(flags, "corr", if dim == 2 { 0.1 } else { 0.2 }),
+        kind,
     }
 }
 
@@ -138,6 +143,7 @@ fn cmd_matvec_socket(flags: &HashMap<String, String>, ranks: usize, nv: usize) {
             println!("measured time     {:>12.3} ms", rep.measured * 1e3);
             println!("flops             {:>12}", rep.metrics.flops);
             println!("wire volume       {:>12} B over {} messages", rep.metrics.bytes_sent, rep.metrics.messages);
+            println!("peak rank matrix  {:>12} B (sharded storage)", rep.metrics.matrix_bytes);
             for (r, t) in rep.per_rank.iter().enumerate() {
                 println!("  rank {r:>2}         {:>12.3} ms", t * 1e3);
             }
@@ -223,13 +229,21 @@ fn cmd_solve(flags: &HashMap<String, String>) {
     let n_side: usize = get(flags, "n-side", 32);
     let ranks: usize = get(flags, "ranks", 4);
     let rtol: f64 = get(flags, "rtol", 1e-6);
+    let transport = flags.get("transport").map(String::as_str).unwrap_or("inproc");
     let backend = backend_from(flags);
     let mut problem = FractionalProblem::paper_defaults(n_side, ranks);
     problem.beta = get(flags, "beta", 0.75);
-    println!("fractional diffusion: {n_side}x{n_side} grid, beta = {}, P = {ranks}", problem.beta);
+    println!(
+        "fractional diffusion: {n_side}x{n_side} grid, beta = {}, P = {ranks}, transport = {transport}",
+        problem.beta
+    );
     let mut sys = setup(problem, backend.as_ref());
     println!("setup: K {:.3} s, D {:.3} s, C+MG {:.3} s", sys.setup_k, sys.setup_d, sys.setup_c);
-    let sol = solve(&mut sys, backend.as_ref(), rtol);
+    let sol = if transport == "socket" {
+        solve_over_socket(&mut sys, ranks, rtol)
+    } else {
+        solve(&mut sys, backend.as_ref(), rtol)
+    };
     println!(
         "solve: {} iterations, {:.3} s total, {:.3} ms/iteration, converged = {}",
         sol.result.iterations,
@@ -239,8 +253,46 @@ fn cmd_solve(flags: &HashMap<String, String>) {
     );
 }
 
+/// CG over a persistent socket session: the kernel matrix is sharded
+/// across P live worker subprocesses that stay up for the whole
+/// iteration history (one spawn + shard build, many products).
+#[cfg(unix)]
+fn solve_over_socket(
+    sys: &mut h2opus::apps::fractional::FractionalSystem,
+    ranks: usize,
+    rtol: f64,
+) -> h2opus::apps::fractional::FractionalSolve {
+    use h2opus::apps::fractional::solve_with_session;
+    use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+    let job = sys.problem.matrix_job();
+    let mut session = match SocketSession::start(&job, ranks, 1, SocketOptions::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to start the worker session: {e}");
+            std::process::exit(1);
+        }
+    };
+    let sol = solve_with_session(sys, &mut session, rtol);
+    println!(
+        "session: {} worker ranks spawned once, {} distributed products served",
+        session.ranks(),
+        session.products()
+    );
+    sol
+}
+
+#[cfg(not(unix))]
+fn solve_over_socket(
+    _sys: &mut h2opus::apps::fractional::FractionalSystem,
+    _ranks: usize,
+    _rtol: f64,
+) -> h2opus::apps::fractional::FractionalSolve {
+    eprintln!("the socket transport requires Unix domain sockets");
+    std::process::exit(1);
+}
+
 fn cmd_accuracy(flags: &HashMap<String, String>) {
-    use h2opus::construct::dense_kernel_matrix;
+    use h2opus::construct::{dense_kernel_matrix, ExponentialKernel};
     let a = build_test_matrix(flags);
     let dim: usize = get(flags, "dim", 2);
     let corr = if dim == 2 { 0.1 } else { 0.2 };
@@ -283,6 +335,12 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[1.min(args.len())..]);
+    // --cost-calibration PATH anchors the virtual-time CostModel to this
+    // host (the file model_check.py --fit writes); the env var form
+    // H2OPUS_COST_CALIBRATION works for embedders and subprocesses.
+    if let Some(path) = flags.get("cost-calibration") {
+        std::env::set_var("H2OPUS_COST_CALIBRATION", path);
+    }
     match cmd {
         "matvec" => cmd_matvec(&flags),
         "compress" => cmd_compress(&flags),
@@ -294,7 +352,10 @@ fn main() {
             println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
             println!("commands: matvec | compress | solve | accuracy | info | worker");
             println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
+            println!("              --cost-calibration target/cost_model_calibration.json");
             println!("matvec flags: --threaded --transport inproc|socket --trace F --measured-trace F");
+            println!("              --kernel exp|fractional --beta B");
+            println!("solve flags:  --transport inproc|socket (socket = persistent sharded worker session)");
         }
     }
 }

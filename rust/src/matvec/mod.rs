@@ -74,10 +74,24 @@ impl HgemvWorkspace {
     /// [`tree_multiply_level`], [`downsweep_transfer_level`]) never touch
     /// the empty deeper levels.
     pub fn top_only(a: &H2Matrix, nv: usize, c_level: usize) -> Self {
+        Self::top_only_dims(a.depth(), &a.u.ranks, &a.v.ranks, nv, c_level)
+    }
+
+    /// [`HgemvWorkspace::top_only`] from bare dimensions — what the
+    /// sharded distributed master uses: it holds a
+    /// [`crate::dist::ShardedMatrix`] (tree + replicated top), never a
+    /// full [`H2Matrix`].
+    pub fn top_only_dims(
+        depth: usize,
+        u_ranks: &[usize],
+        v_ranks: &[usize],
+        nv: usize,
+        c_level: usize,
+    ) -> Self {
         HgemvWorkspace {
             nv,
-            xhat: VectorTree::zeros_top(a.depth(), &a.v.ranks, nv, c_level),
-            yhat: VectorTree::zeros_top(a.depth(), &a.u.ranks, nv, c_level),
+            xhat: VectorTree::zeros_top(depth, v_ranks, nv, c_level),
+            yhat: VectorTree::zeros_top(depth, u_ranks, nv, c_level),
             x_pad: Vec::new(),
             y_pad: Vec::new(),
         }

@@ -20,6 +20,12 @@ pub struct Metrics {
     /// [`crate::dist::hgemv::CostModel`], recorded so measured runs can
     /// calibrate `byte_time` (`python/tests/model_check.py --fit`).
     pub gemm_words: u64,
+    /// Peak per-rank H² *matrix* storage in bytes
+    /// ([`crate::dist::ShardedMatrix::matrix_bytes`]): each rank of the
+    /// sharded executors records its own shard's footprint, and merging
+    /// keeps the **maximum** (a per-rank peak, not a sum) — the quantity
+    /// the out-of-core memory trajectory is benchmarked by (E1/E2 rows).
+    pub matrix_bytes: u64,
 }
 
 impl Metrics {
@@ -61,6 +67,9 @@ impl Metrics {
         self.batch_launches += other.batch_launches;
         self.pad_waste += other.pad_waste;
         self.gemm_words += other.gemm_words;
+        // Peak per-rank storage: the merged value answers "how big was
+        // the largest rank", so it maxes instead of summing.
+        self.matrix_bytes = self.matrix_bytes.max(other.matrix_bytes);
     }
 
     /// Aggregate per-rank counters without data races: each thread of the
@@ -100,6 +109,16 @@ mod tests {
         assert_eq!(fwd.flops, rev.flops);
         assert_eq!(fwd.bytes_sent, 64);
         assert_eq!(fwd.batch_launches, 2);
+    }
+
+    #[test]
+    fn matrix_bytes_merges_as_peak() {
+        let mut a = Metrics::new();
+        a.matrix_bytes = 100;
+        let mut b = Metrics::new();
+        b.matrix_bytes = 250;
+        let merged = Metrics::merge_all([&a, &b]);
+        assert_eq!(merged.matrix_bytes, 250, "peak, not sum");
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! `dist::shard` conformance suite: branch-scoped construction must be
+//! bit-identical to slicing a global build; per-rank matrix storage must
+//! actually be O(N/P) + replicated-top slack; sharded HGEMV must stay
+//! bitwise serial-identical on both executors while workers never
+//! materialize the global matrix (enforced by the
+//! `H2OPUS_FORBID_FULL_MATRIX` guard); and the persistent socket session
+//! must amortize worker spawn across products — including a full CG
+//! solve driving one session.
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+#[cfg(unix)]
+use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions, SocketSession};
+use h2opus::dist::transport::{JobKind, MatrixJob};
+use h2opus::dist::{Decomposition, ShardedMatrix};
+use h2opus::geometry::PointSet;
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::Prng;
+
+/// The conformance matrix: N = 256, depth 4 (so P = 8 splits at C = 3).
+fn conformance_job() -> MatrixJob {
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    }
+}
+
+fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
+    let n = a.n();
+    let plan = HgemvPlan::new(a, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    let mut metrics = Metrics::new();
+    let mut y = vec![0.0; n * nv];
+    hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut metrics);
+    y
+}
+
+fn assert_shards_equal(a: &ShardedMatrix, b: &ShardedMatrix, what: &str) {
+    assert_eq!(a.rank, b.rank, "{what}: rank");
+    assert_eq!(a.decomp, b.decomp, "{what}: decomp");
+    assert_eq!(a.u_ranks, b.u_ranks, "{what}: u_ranks");
+    assert_eq!(a.v_ranks, b.v_ranks, "{what}: v_ranks");
+    assert_eq!(a.leaf_dim, b.leaf_dim, "{what}: leaf_dim");
+    assert_eq!(a.leaf_range, b.leaf_range, "{what}: leaf_range");
+    assert_eq!(a.leaf_sizes, b.leaf_sizes, "{what}: leaf_sizes");
+    assert_eq!(a.u_leaf_bases, b.u_leaf_bases, "{what}: u leaf bases");
+    assert_eq!(a.v_leaf_bases, b.v_leaf_bases, "{what}: v leaf bases");
+    assert_eq!(a.u_transfers, b.u_transfers, "{what}: u transfers");
+    assert_eq!(a.v_transfers, b.v_transfers, "{what}: v transfers");
+    assert_eq!(a.top_u_transfers, b.top_u_transfers, "{what}: top u transfers");
+    assert_eq!(a.top_v_transfers, b.top_v_transfers, "{what}: top v transfers");
+    assert_eq!(a.top_coupling.len(), b.top_coupling.len(), "{what}: top levels");
+    for (l, (ca, cb)) in a.top_coupling.iter().zip(&b.top_coupling).enumerate() {
+        assert_eq!(ca.pairs, cb.pairs, "{what}: top coupling pairs L{l}");
+        assert_eq!(ca.data, cb.data, "{what}: top coupling data L{l}");
+    }
+    for l in 0..a.coupling.len() {
+        let (ca, cb) = (&a.coupling[l], &b.coupling[l]);
+        assert_eq!(ca.row_start, cb.row_start, "{what}: coupling row_start L{l}");
+        assert_eq!(ca.level.pairs, cb.level.pairs, "{what}: coupling pairs L{l}");
+        assert_eq!(ca.level.batches, cb.level.batches, "{what}: coupling batches L{l}");
+        assert_eq!(ca.level.data, cb.level.data, "{what}: coupling data L{l}");
+    }
+    assert_eq!(a.dense.row_start, b.dense.row_start, "{what}: dense row_start");
+    assert_eq!(a.dense.blocks.pairs, b.dense.blocks.pairs, "{what}: dense pairs");
+    assert_eq!(a.dense.blocks.data, b.dense.blocks.data, "{what}: dense data");
+}
+
+/// Branch-scoped construction (what a worker runs, no global matrix)
+/// must produce bit-identical shards to slicing a global build — for the
+/// exponential test set and for the fractional solver kernel.
+#[test]
+fn branch_construction_matches_global_slicing() {
+    let jobs = vec![
+        conformance_job(),
+        MatrixJob {
+            dim: 2,
+            n_side: 16,
+            leaf_size: 16,
+            eta: 0.9,
+            cheb_grid: 4,
+            corr_len: 0.0,
+            kind: JobKind::Fractional { beta: 0.75 },
+        },
+    ];
+    for job in jobs {
+        let a = job.build();
+        for p in [1usize, 2, 4] {
+            let d = Decomposition::new(p, a.depth()).unwrap();
+            for r in 0..p {
+                let (direct, structure) =
+                    job.build_branch(p, r).expect("branch construction");
+                let sliced = ShardedMatrix::from_global(&a, d, r);
+                assert_shards_equal(&direct, &sliced, &format!("{:?} P={p} rank {r}", job.kind));
+                // The returned structure is the global one.
+                assert_eq!(structure.dense, a.dense.pairs);
+            }
+            let (top_direct, _) = job.build_top(p).expect("top construction");
+            let top_sliced = ShardedMatrix::top_from_global(&a, d);
+            assert_shards_equal(&top_direct, &top_sliced, &format!("{:?} P={p} top", job.kind));
+        }
+    }
+}
+
+/// Out-of-core memory regression: per-rank matrix storage must fit in
+/// serial/P plus the replicated-top + structural-imbalance slack, the
+/// shards must exactly partition the serial matrix, and the per-rank
+/// maximum must shrink as P grows.
+#[test]
+fn per_rank_matrix_storage_is_o_n_over_p() {
+    // N = 1024, depth 6 — big enough that the replicated top is small
+    // against 1/P.
+    let points = PointSet::grid_2d(32, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    let a = build_h2(points, &kernel, &cfg);
+    let serial_bytes = a.memory_words() * 8;
+    let mut prev_max = serial_bytes + 1;
+    for p in [2usize, 4, 8] {
+        let d = Decomposition::new(p, a.depth()).unwrap();
+        let shards: Vec<ShardedMatrix> =
+            (0..p).map(|r| ShardedMatrix::from_global(&a, d, r)).collect();
+        // Partition identity: branch storage sums to the serial matrix
+        // minus one copy of the replicated top.
+        let branch_total: usize = shards.iter().map(|s| s.branch_words()).sum();
+        let rep = shards[0].replication_words();
+        assert_eq!(branch_total + rep, a.memory_words(), "P={p}: not a partition");
+        for (r, s) in shards.iter().enumerate() {
+            // serial/P + replicated-top/imbalance slack (imbalance is the
+            // structure-dictated excess of this rank's rows over the even
+            // share — C_sp variance, not shard overhead).
+            let imbalance = s.branch_words().saturating_sub(branch_total / p);
+            let slack = (rep + imbalance) * 8;
+            assert!(
+                s.matrix_bytes() <= serial_bytes / p + slack,
+                "P={p} rank {r}: {} B > serial/P {} B + slack {} B",
+                s.matrix_bytes(),
+                serial_bytes / p,
+                slack
+            );
+            assert!(
+                s.matrix_bytes() < serial_bytes * 3 / 4,
+                "P={p} rank {r}: shard not materially smaller than serial"
+            );
+            if p <= 4 {
+                assert!(
+                    slack < serial_bytes / p,
+                    "P={p} rank {r}: slack {slack} B dominates serial/P — bound vacuous"
+                );
+            }
+        }
+        let max_bytes = shards.iter().map(|s| s.matrix_bytes()).max().unwrap();
+        assert!(
+            max_bytes < prev_max,
+            "P={p}: peak shard {max_bytes} B did not shrink (prev {prev_max} B)"
+        );
+        prev_max = max_bytes;
+    }
+}
+
+/// Sharded HGEMV stays bitwise serial-identical on the in-process
+/// executor (which slices shards from the global matrix) and the socket
+/// transport (whose workers construct shards branch-scoped under the
+/// full-matrix guard), and both report the peak per-rank matrix bytes.
+#[test]
+fn sharded_hgemv_bitwise_identical_and_reports_matrix_bytes() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let serial_bytes = (a.memory_words() * 8) as u64;
+    let mut rng = Prng::new(910);
+    let nv = 2;
+    let x = rng.normal_vec(n * nv);
+    let y_serial = serial_product(&a, &x, nv);
+
+    // In-process threaded executor over from_global shards.
+    let topts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+    for p in [1usize, 2, 4, 8] {
+        let mut y = vec![0.0; n * nv];
+        let rep = dist_hgemv(&a, &NativeBackend, p, nv, &x, &mut y, &topts);
+        assert_eq!(y, y_serial, "inproc P={p} not bitwise equal");
+        let mb = rep.metrics.matrix_bytes;
+        assert!(mb > 0, "inproc P={p}: matrix bytes not reported");
+        let d = Decomposition::new(p, a.depth()).unwrap();
+        let expect =
+            (0..p).map(|r| ShardedMatrix::from_global(&a, d, r).matrix_bytes() as u64).max();
+        assert_eq!(mb, expect.unwrap(), "inproc P={p}: peak shard bytes mismatch");
+        if p >= 4 {
+            assert!(mb < serial_bytes, "inproc P={p}: shard not below serial");
+        }
+    }
+
+    // Socket transport: worker subprocesses with branch-built shards.
+    #[cfg(unix)]
+    {
+        let opts = SocketOptions {
+            worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+            ..SocketOptions::default()
+        };
+        for p in [1usize, 2, 4, 8] {
+            let mut y = vec![0.0; n * nv];
+            let rep = socket_hgemv(&job, p, nv, &x, &mut y, &opts)
+                .unwrap_or_else(|e| panic!("socket P={p}: {e}"));
+            assert_eq!(y, y_serial, "socket P={p} not bitwise equal");
+            let d = Decomposition::new(p, a.depth()).unwrap();
+            let expect = (0..p)
+                .map(|r| ShardedMatrix::from_global(&a, d, r).matrix_bytes() as u64)
+                .max()
+                .unwrap();
+            assert_eq!(
+                rep.metrics.matrix_bytes, expect,
+                "socket P={p}: workers must report their shard footprint"
+            );
+        }
+    }
+}
+
+/// A worker that constructs the full matrix must abort the session with
+/// an error (the `H2OPUS_FORBID_FULL_MATRIX` guard the coordinator sets),
+/// promptly — not hang, not silently hold O(N) memory.
+#[cfg(unix)]
+#[test]
+fn worker_full_matrix_build_fails_the_session() {
+    use std::time::{Duration, Instant};
+    let job = conformance_job();
+    let n = job.n_points();
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(30),
+        extra_env: vec![("H2OPUS_TEST_FORCE_FULL_BUILD".into(), "1".into())],
+        ..SocketOptions::default()
+    };
+    let t0 = Instant::now();
+    let err = socket_hgemv(&job, 2, 1, &x, &mut y, &opts)
+        .expect_err("a worker that builds the global matrix must fail the product");
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(25), "guard took {elapsed:?} — behaved like a hang");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("closed") || msg.contains("exited") || msg.contains("timeout"),
+        "error must name the failure: {msg}"
+    );
+}
+
+/// The persistent session serves many bitwise-correct products from one
+/// worker spawn.
+#[cfg(unix)]
+#[test]
+fn socket_session_amortizes_spawn_across_products() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        ..SocketOptions::default()
+    };
+    let mut session = SocketSession::start(&job, 4, 1, opts).expect("session start");
+    assert_eq!(session.ranks(), 4);
+    assert_eq!(session.n(), n);
+    let mut rng = Prng::new(911);
+    for round in 0..3 {
+        let x = rng.normal_vec(n);
+        let y_serial = serial_product(&a, &x, 1);
+        let mut y = vec![0.0; n];
+        let rep = session.hgemv(&x, &mut y).expect("session product");
+        assert_eq!(y, y_serial, "round {round} not bitwise equal");
+        assert!(rep.measured > 0.0);
+    }
+    assert_eq!(session.products(), 3, "same workers must have served every product");
+}
+
+/// The fractional-diffusion CG solve over one persistent session: the
+/// kernel matrix lives sharded in the worker processes for the whole
+/// iteration history (one spawn, one branch-scoped construction, many
+/// products), and the solve still converges to a physical solution.
+#[cfg(unix)]
+#[test]
+fn session_solver_converges_with_one_spawn() {
+    use h2opus::apps::fractional::{setup, solve_with_session, FractionalProblem};
+    let problem = FractionalProblem {
+        n_side: 16,
+        beta: 0.75,
+        h2: H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 4 },
+        tau: 1e-6,
+        ranks: 2,
+    };
+    let n_side = problem.n_side;
+    let mut sys = setup(problem.clone(), &NativeBackend);
+    let opts = SocketOptions {
+        worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        ..SocketOptions::default()
+    };
+    let mut session =
+        SocketSession::start(&problem.matrix_job(), 2, 1, opts).expect("session start");
+    let sol = solve_with_session(&mut sys, &mut session, 1e-6);
+    assert!(sol.result.converged, "session CG did not converge ({} its)", sol.result.iterations);
+    // One distributed product per operator application, all on the same
+    // spawned workers.
+    assert!(
+        session.products() >= sol.result.iterations as u64,
+        "products {} < iterations {}",
+        session.products(),
+        sol.result.iterations
+    );
+    // Physics: u > 0 inside, decaying toward the constrained boundary.
+    let center = (n_side / 2) * n_side + n_side / 2;
+    assert!(sol.u[center] > 0.0, "u(center) = {}", sol.u[center]);
+    assert!(sol.u[0] < sol.u[center]);
+}

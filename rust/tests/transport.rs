@@ -15,8 +15,8 @@ use h2opus::backend::native::NativeBackend;
 use h2opus::config::H2Config;
 use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
-use h2opus::dist::transport::{inproc, Endpoint, Mailbox, MatrixJob, Message, MsgKind};
-use h2opus::dist::{BranchPlan, BranchWorkspace, Decomposition, ExchangePlan};
+use h2opus::dist::transport::{inproc, Endpoint, JobKind, Mailbox, MatrixJob, Message, MsgKind};
+use h2opus::dist::{BranchPlan, BranchWorkspace, Decomposition, ExchangePlan, ShardedMatrix};
 use h2opus::geometry::PointSet;
 use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
 use h2opus::metrics::Metrics;
@@ -24,7 +24,15 @@ use h2opus::util::Prng;
 
 /// The conformance matrix: N = 256, depth 4 (so P = 8 splits at C = 3).
 fn conformance_job() -> MatrixJob {
-    MatrixJob { dim: 2, n_side: 16, leaf_size: 16, eta: 0.9, cheb_grid: 3, corr_len: 0.1 }
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    }
 }
 
 fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
@@ -157,9 +165,10 @@ fn per_rank_workspace_is_o_n_over_p() {
         let d = Decomposition::new(p, a.depth()).unwrap();
         let ex = ExchangePlan::build(&a, d);
         for r in 0..p {
-            let bp = BranchPlan::build(&a, &ex, r, nv);
-            let bw = BranchWorkspace::new(&a, &bp);
-            let slack = bp.halo_bytes(&a);
+            let sm = ShardedMatrix::from_global(&a, d, r);
+            let bp = BranchPlan::build(&sm, &ex, nv);
+            let bw = BranchWorkspace::new(&sm, &bp);
+            let slack = bp.halo_bytes(&sm);
             assert!(
                 bw.memory_bytes() <= serial_bytes / p + slack,
                 "P={p} rank {r}: {} B > serial/P {} B + slack {} B",
