@@ -34,10 +34,15 @@ counters) to target/hgemv_{weak,strong}_rows.json; the fit solves the
 
     t_measured ≈ t_launch·(L/d) + flop_time·(F/d) + byte_time·(8·W/d),
 
-with d = min(P, cores) the effective parallelism, and writes the
+with the effective parallelism d transport-aware: in-process rank threads
+share one backend pool (d = min(P + backend_threads − 1, cores)) while
+socket worker processes each own one (d = min(P·backend_threads, cores)) —
+the rows record the budget and transport they were measured under — and
+writes the
 per-machine constants to target/cost_model_calibration.json next to the
-rows. Swap them into `dist::hgemv::CostModel` to re-anchor the virtual
-scheduler to this machine.
+rows, including the backend_threads the fit saw — so a γ_gemm fitted
+against a multithreaded backend is never silently reused as if it were a
+single-thread rate (`CostModel::host` warns on a mismatch).
 """
 import json
 import math
@@ -538,11 +543,23 @@ def fit_cost_model():
         print(f"fit: SKIP ({len(rows)} usable rows, need >= 3)")
         return True
     # Design matrix: per-row effective-parallelism share of each cost term.
+    # The backend pool composes differently per transport: in-process rank
+    # threads *share* one pool (a rank finding it busy runs inline), so at
+    # most p + backend_threads - 1 threads compute; socket worker processes
+    # each own a pool, so up to p * backend_threads do. Both capped by the
+    # machine, and both reduce to the old d = min(p, cores) at width 1.
     xs, ys = [], []
     for r in rows:
-        d = max(1, min(r["p"], r.get("cores", 1)))
+        bt = r.get("backend_threads", 1)
+        p = r["p"]
+        width = p * bt if r.get("transport") == "socket" else p + bt - 1
+        d = max(1, min(width, r.get("cores", 1)))
         xs.append([r["launches"] / d, r["flops"] / d, 8.0 * r["words"] / d])
         ys.append(r["measured_s"])
+    threads_seen = sorted({r.get("backend_threads", 1) for r in rows})
+    if len(threads_seen) > 1:
+        print(f"fit: WARNING mixed backend_threads in rows: {threads_seen} "
+              f"(the fitted constants blend different backend widths)")
     ata = [[sum(x[i] * x[j] for x in xs) for j in range(3)] for i in range(3)]
     atb = [sum(x[i] * y for x, y in zip(xs, ys)) for i in range(3)]
     sol = solve3(ata, atb)
@@ -564,6 +581,10 @@ def fit_cost_model():
         "t_launch": clamped[0],
         "flop_time": clamped[1],
         "byte_time": clamped[2],
+        # The backend pool width the rows were measured under (max over
+        # rows): CostModel::host() warns when the running process uses a
+        # different width than its calibration assumed.
+        "backend_threads": max(threads_seen),
         "rel_rms_residual": rel_rms,
         "rows_used": len(rows),
         "row_files": [os.path.basename(f) for f in files],

@@ -1,7 +1,23 @@
 //! E9 (§6.1): sustained batched-kernel rates — the efficiency denominator
-//! the paper measures with MAGMA's batched GEMM on 64×64 blocks. Compares
-//! the native backend against the XLA/PJRT AOT path (JAX/Pallas
-//! artifacts) for GEMM, QR and SVD at the library's bucket shapes.
+//! the paper measures with MAGMA's batched GEMM on 64×64 blocks (2.3
+//! Tflop/s HGEMV, 670 Gflop/s compression come from these kernels).
+//!
+//! Axes:
+//! - **threads** — the parallel native backend's pool width (the paper's
+//!   analogue: how much of the GPU a batch occupies);
+//! - **shape** — block shapes drawn from the real tree levels of the
+//!   library's default configurations (leaf bases m×k, transfer stacks
+//!   2k×k, coupling k×k×nv, dense m×m×nv) plus the paper's 64×64 block;
+//! - **op** — GEMM / QR / SVD, native vs the XLA/PJRT AOT path.
+//!
+//! Every measured point appends a row to `target/bench_e9.json`
+//! (`{op, nb, m, k, n, threads, cores, gflops}`) — the perf-trajectory
+//! baseline for the batched hot path.
+//!
+//! `H2OPUS_BENCH_TINY=1` shrinks batch counts for CI smoke.
+//! `H2OPUS_E9_ASSERT=1` (CI) additionally asserts the parallel dispatch
+//! beats the serial loop on one large batch, and exits nonzero otherwise
+//! (skipped on single-core machines).
 
 use std::path::Path;
 
@@ -9,53 +25,163 @@ use h2opus::backend::native::NativeBackend;
 use h2opus::backend::{contiguous_offsets, BatchRef, ComputeBackend, GemmDims};
 use h2opus::metrics::Metrics;
 use h2opus::runtime::XlaBackend;
+use h2opus::util::parallel::ParallelPool;
 use h2opus::util::timer::trimmed_mean_time;
 use h2opus::util::Prng;
 
-fn gemm_rate(be: &dyn ComputeBackend, nb: usize, m: usize, k: usize, n: usize) -> f64 {
-    let mut rng = Prng::new(5);
-    let a = rng.normal_vec(nb * m * k);
-    let b = rng.normal_vec(nb * k * n);
-    let mut c = vec![0.0; nb * m * n];
-    let dims = GemmDims { nb, m, k, n, trans_a: false, trans_b: false, accumulate: false };
-    let ao = contiguous_offsets(nb, m * k);
-    let bo = contiguous_offsets(nb, k * n);
-    let co = contiguous_offsets(nb, m * n);
-    let t = trimmed_mean_time(5, || {
-        let mut mt = Metrics::new();
-        be.batched_gemm(dims, BatchRef { data: &a, offsets: &ao }, BatchRef { data: &b, offsets: &bo }, &mut c, &co, &mut mt);
-    });
-    2.0 * (nb * m * k * n) as f64 / t / 1e9
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
 }
 
-fn qr_rate(be: &dyn ComputeBackend, nb: usize, rows: usize, cols: usize) -> f64 {
+/// One prepared batched-GEMM problem, reusable across timed runs.
+struct GemmCase {
+    dims: GemmDims,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+    ao: Vec<usize>,
+    bo: Vec<usize>,
+    co: Vec<usize>,
+}
+
+impl GemmCase {
+    fn new(nb: usize, m: usize, k: usize, n: usize) -> GemmCase {
+        let mut rng = Prng::new(5);
+        GemmCase {
+            dims: GemmDims { nb, m, k, n, trans_a: false, trans_b: false, accumulate: false },
+            a: rng.normal_vec(nb * m * k),
+            b: rng.normal_vec(nb * k * n),
+            c: vec![0.0; nb * m * n],
+            ao: contiguous_offsets(nb, m * k),
+            bo: contiguous_offsets(nb, k * n),
+            co: contiguous_offsets(nb, m * n),
+        }
+    }
+
+    fn flops(&self) -> f64 {
+        let d = self.dims;
+        2.0 * (d.nb * d.m * d.k * d.n) as f64
+    }
+
+    /// Gflop/s on the native backend over `pool`.
+    fn native_rate(&mut self, pool: &ParallelPool, runs: usize) -> f64 {
+        let be = NativeBackend;
+        let (dims, a, b, ao, bo, co) = (self.dims, &self.a, &self.b, &self.ao, &self.bo, &self.co);
+        let c = &mut self.c;
+        let t = trimmed_mean_time(runs, || {
+            let mut mt = Metrics::new();
+            be.batched_gemm_on(
+                pool,
+                dims,
+                BatchRef { data: a, offsets: ao },
+                BatchRef { data: b, offsets: bo },
+                &mut c[..],
+                co,
+                &mut mt,
+            );
+        });
+        self.flops() / t / 1e9
+    }
+
+    /// Gflop/s through the `ComputeBackend` trait (XLA path).
+    fn trait_rate(&mut self, be: &dyn ComputeBackend, runs: usize) -> f64 {
+        let (dims, a, b, ao, bo, co) = (self.dims, &self.a, &self.b, &self.ao, &self.bo, &self.co);
+        let c = &mut self.c;
+        let t = trimmed_mean_time(runs, || {
+            let mut mt = Metrics::new();
+            be.batched_gemm(
+                dims,
+                BatchRef { data: a, offsets: ao },
+                BatchRef { data: b, offsets: bo },
+                &mut c[..],
+                co,
+                &mut mt,
+            );
+        });
+        self.flops() / t / 1e9
+    }
+}
+
+fn qr_rate(pool: &ParallelPool, nb: usize, rows: usize, cols: usize, runs: usize) -> f64 {
     let mut rng = Prng::new(6);
     let a = rng.normal_vec(nb * rows * cols);
     let mut q = vec![0.0; nb * rows * cols];
     let mut r = vec![0.0; nb * cols * cols];
-    let t = trimmed_mean_time(5, || {
+    let be = NativeBackend;
+    let t = trimmed_mean_time(runs, || {
         let mut mt = Metrics::new();
-        be.batched_qr(nb, rows, cols, &a, &mut q, &mut r, &mut mt);
+        be.batched_qr_on(pool, nb, rows, cols, &a, &mut q, &mut r, &mut mt);
     });
-    let flops_per = 2 * rows * cols * cols;
-    (nb * flops_per) as f64 / t / 1e9
+    (nb * 2 * rows * cols * cols) as f64 / t / 1e9
 }
 
-fn svd_rate(be: &dyn ComputeBackend, nb: usize, rows: usize, cols: usize) -> f64 {
+fn svd_rate(pool: &ParallelPool, nb: usize, rows: usize, cols: usize, runs: usize) -> f64 {
     let mut rng = Prng::new(7);
     let a = rng.normal_vec(nb * rows * cols);
     let mut u = vec![0.0; nb * rows * cols];
     let mut s = vec![0.0; nb * cols];
     let mut v = vec![0.0; nb * cols * cols];
-    let t = trimmed_mean_time(3, || {
+    let be = NativeBackend;
+    let t = trimmed_mean_time(runs, || {
         let mut mt = Metrics::new();
-        be.batched_svd(nb, rows, cols, &a, &mut u, &mut s, &mut v, &mut mt);
+        be.batched_svd_on(pool, nb, rows, cols, &a, &mut u, &mut s, &mut v, &mut mt);
     });
     (nb * 14 * rows * cols * cols) as f64 / t / 1e9
 }
 
+/// CI gate: the pooled dispatch must beat the serial loop on one large
+/// paper-shaped batch. Returns false (after printing why) on failure.
+fn assert_parallel_beats_serial(pools: &[(usize, ParallelPool)], cores: usize) -> bool {
+    if cores < 2 {
+        println!("E9 assert: SKIP (single-core machine)");
+        return true;
+    }
+    let nb = 2048;
+    let (m, k, n) = (32, 32, 32);
+    let mut case = GemmCase::new(nb, m, k, n);
+    let serial = ParallelPool::new(1);
+    let r1 = case.native_rate(&serial, 7);
+    // The widest pool not exceeding the core count (wider pools only
+    // timeshare on CI runners).
+    let (w, pool) = pools
+        .iter()
+        .filter(|(w, _)| *w <= cores)
+        .max_by_key(|(w, _)| *w)
+        .expect("a pool within the core budget");
+    let rp = case.native_rate(pool, 7);
+    // With >= 4 real cores a 4-wide pool on 2048 blocks of 32^3 sits far
+    // above parity (~2.5-3.5x), so a strict win is a safe gate; on 2-3
+    // core runners the expected margin is thin enough that noisy-neighbor
+    // contention could flip a strict comparison, so allow 10% slack there.
+    let need = if cores >= 4 { 1.0 } else { 0.9 };
+    println!(
+        "E9 assert: serial {r1:.3} Gflop/s vs {w} threads {rp:.3} Gflop/s ({:.2}x, {cores} cores, need > {need:.2}x)",
+        rp / r1
+    );
+    if rp > r1 * need {
+        true
+    } else {
+        println!("E9 assert: FAIL — parallel dispatch did not beat the serial loop");
+        false
+    }
+}
+
 fn main() {
-    println!("E9 / §6.1 — batched-kernel sustained rates (Gflop/s), native vs XLA AOT");
+    println!("E9 / §6.1 — batched-kernel sustained rates (Gflop/s)");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads_axis: &[usize] = &[1, 2, 4, 8];
+    let pools: Vec<(usize, ParallelPool)> =
+        threads_axis.iter().map(|&t| (t, ParallelPool::new(t))).collect();
+    let runs = if tiny() { 3 } else { 5 };
+    let scale = if tiny() { 4 } else { 1 };
+    let mut rows: Vec<String> = Vec::new();
+    let mut push_row = |op: &str, nb: usize, m: usize, k: usize, n: usize, t: usize, g: f64| {
+        rows.push(format!(
+            "{{\"op\": \"{op}\", \"nb\": {nb}, \"m\": {m}, \"k\": {k}, \"n\": {n}, \
+             \"threads\": {t}, \"cores\": {cores}, \"gflops\": {g:.4}}}"
+        ));
+    };
+
     let xla = if Path::new("artifacts/manifest.txt").exists() {
         Some(XlaBackend::new(Path::new("artifacts")).expect("loading artifacts"))
     } else {
@@ -63,47 +189,86 @@ fn main() {
         None
     };
 
-    println!("\n-- batched GEMM --");
-    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
-    for &(nb, m, k, n) in &[(256usize, 32usize, 32usize, 32usize), (1024, 16, 16, 16), (256, 32, 16, 64)] {
-        let nat = gemm_rate(&NativeBackend, nb, m, k, n);
-        let x = xla.as_ref().map(|b| gemm_rate(b, nb, m, k, n));
-        println!(
-            "{:>6} {:>12} {:>12.3} {:>12}",
-            nb,
-            format!("{m}x{k}x{n}"),
-            nat,
-            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
-        );
+    // Block shapes of the real tree levels: the 2D defaults (leaf m=32,
+    // rank k=16), the 3D defaults (k=8), transfer stacks (2k×k), coupling
+    // blocks (k×k) at nv ∈ {1, 16}, dense leaf blocks, and the paper's
+    // 64×64 MAGMA reference shape.
+    println!("\n-- batched GEMM (native, by pool width; {cores} cores) --");
+    let header: String =
+        threads_axis.iter().map(|t| format!("{:>10}", format!("t={t}"))).collect();
+    println!("{:>6} {:>12} {:>10} {header}", "nb", "shape", "role");
+    let gemm_shapes: &[(&str, usize, usize, usize, usize)] = &[
+        ("leaf", 1024 / scale, 32, 16, 1),
+        ("leaf", 1024 / scale, 32, 16, 16),
+        ("transfer", 2048 / scale, 16, 16, 16),
+        ("coupling", 2048 / scale, 16, 16, 1),
+        ("coupling", 2048 / scale, 16, 16, 16),
+        ("coupling3d", 4096 / scale, 8, 8, 16),
+        ("dense", 512 / scale, 32, 32, 16),
+        ("paper64", 256 / scale, 64, 64, 64),
+    ];
+    for &(role, nb, m, k, n) in gemm_shapes {
+        let mut case = GemmCase::new(nb, m, k, n);
+        let mut cols_out = String::new();
+        for (t, pool) in &pools {
+            let g = case.native_rate(pool, runs);
+            push_row("gemm", nb, m, k, n, *t, g);
+            cols_out.push_str(&format!("{g:>10.3}"));
+        }
+        println!("{:>6} {:>12} {:>10} {cols_out}", nb, format!("{m}x{k}x{n}"), role);
     }
 
-    println!("\n-- batched QR (rows x cols) --");
-    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
-    for &(nb, rows, cols) in &[(256usize, 32usize, 16usize), (64, 128, 16)] {
-        let nat = qr_rate(&NativeBackend, nb, rows, cols);
-        let x = xla.as_ref().map(|b| qr_rate(b, nb, rows, cols));
-        println!(
-            "{:>6} {:>12} {:>12.3} {:>12}",
-            nb,
-            format!("{rows}x{cols}"),
-            nat,
-            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
-        );
+    if let Some(xla) = xla.as_ref() {
+        println!("\n-- batched GEMM (XLA AOT, for reference) --");
+        for &(nb, m, k, n) in &[(256usize, 32usize, 32usize, 32usize), (1024, 16, 16, 16)] {
+            let mut case = GemmCase::new(nb / scale, m, k, n);
+            let g = case.trait_rate(xla, runs);
+            push_row("gemm_xla", nb / scale, m, k, n, 1, g);
+            println!("{:>6} {:>12} {:>10.3}", nb / scale, format!("{m}x{k}x{n}"), g);
+        }
     }
 
-    println!("\n-- batched SVD (rows x cols) --");
-    println!("{:>6} {:>12} {:>12} {:>12}", "nb", "shape", "native", "xla");
-    for &(nb, rows, cols) in &[(64usize, 16usize, 8usize)] {
-        let nat = svd_rate(&NativeBackend, nb, rows, cols);
-        let x = xla.as_ref().map(|b| svd_rate(b, nb, rows, cols));
-        println!(
-            "{:>6} {:>12} {:>12.3} {:>12}",
-            nb,
-            format!("{rows}x{cols}"),
-            nat,
-            x.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into())
-        );
+    println!("\n-- batched QR (rows x cols, native, by pool width) --");
+    println!("{:>6} {:>12} {:>10} {header}", "nb", "shape", "role");
+    let qr_shapes: &[(&str, usize, usize, usize)] = &[
+        ("leaf", 256 / scale, 32, 16),
+        ("stack", 512 / scale, 32, 16),
+        ("tall", 64 / scale, 128, 16),
+    ];
+    for &(role, nb, rows_n, cols_n) in qr_shapes {
+        let mut cols_out = String::new();
+        for (t, pool) in &pools {
+            let g = qr_rate(pool, nb, rows_n, cols_n, runs);
+            push_row("qr", nb, rows_n, cols_n, 0, *t, g);
+            cols_out.push_str(&format!("{g:>10.3}"));
+        }
+        println!("{:>6} {:>12} {:>10} {cols_out}", nb, format!("{rows_n}x{cols_n}"), role);
+    }
+
+    println!("\n-- batched SVD (rows x cols, native, by pool width) --");
+    println!("{:>6} {:>12} {:>10} {header}", "nb", "shape", "role");
+    let svd_shapes: &[(&str, usize, usize, usize)] = &[
+        ("trunc", 128 / scale, 16, 8),
+        ("stack", 64 / scale, 32, 16),
+    ];
+    for &(role, nb, rows_n, cols_n) in svd_shapes {
+        let mut cols_out = String::new();
+        for (t, pool) in &pools {
+            let g = svd_rate(pool, nb, rows_n, cols_n, runs);
+            push_row("svd", nb, rows_n, cols_n, 0, *t, g);
+            cols_out.push_str(&format!("{g:>10.3}"));
+        }
+        println!("{:>6} {:>12} {:>10} {cols_out}", nb, format!("{rows_n}x{cols_n}"), role);
     }
     println!("\n(The 32x16 SVD artifact is excluded: its unrolled Jacobi graph compiles");
     println!(" for minutes under XLA CPU — see DESIGN.md \"Substitutions\" for the stack notes.)");
+
+    std::fs::create_dir_all("target").ok();
+    let path = "target/bench_e9.json";
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing E9 rows");
+    println!("\nE9 rows written: {path}");
+
+    if std::env::var("H2OPUS_E9_ASSERT").is_ok() && !assert_parallel_beats_serial(&pools, cores) {
+        std::process::exit(1);
+    }
 }

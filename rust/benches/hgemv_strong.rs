@@ -107,6 +107,9 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
     let n = a.n();
     let runs = if tiny() { 3 } else { 5 };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Recorded per row so the CostModel fit knows how wide the batched
+    // backend ran when these wall-clocks were measured.
+    let bt = h2opus::backend::backend_threads();
     println!("\n== {dim}D test set, strong scaling, N = {n}, transport = {transport} ==");
     println!(
         "{:>4} {:>4} {:>13} {:>9} {:>13} {:>9} {:>9}",
@@ -143,6 +146,7 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
             );
             rows.push(format!(
                 "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
+                 \"backend_threads\": {bt}, \
                  \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}, \
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes

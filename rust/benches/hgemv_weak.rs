@@ -96,6 +96,9 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
     );
     let runs = if tiny() { 3 } else { 5 };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Recorded per row so the CostModel fit knows how wide the batched
+    // backend ran when these wall-clocks were measured.
+    let bt = h2opus::backend::backend_threads();
     let mut base_rate: Vec<Option<f64>> = vec![None; nvs.len()];
     for &p in ps {
         let n_target = local_n * p;
@@ -162,6 +165,7 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
             );
             rows.push(format!(
                 "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
+                 \"backend_threads\": {bt}, \
                  \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}, \
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes

@@ -15,11 +15,67 @@
 //! buffers: this is exactly the paper's marshaling output (Alg. 3) — a
 //! gather of per-block pointers into the flattened tree storage with no
 //! data movement. The conflict-free batch ordering of §3.2 guarantees
-//! output offsets are distinct within a call.
+//! output offsets are distinct within a call — and since every block of a
+//! call has one fixed output size, distinct offsets mean pairwise-disjoint
+//! output windows. That disjointness is the documented safety contract the
+//! parallel native dispatch builds on: blocks of one batch may execute on
+//! different pool threads writing through
+//! [`crate::util::parallel::DisjointOut`] with no further synchronization,
+//! and per-block results are bitwise identical to the serial loop because
+//! each block runs the very same scalar kernel on the same inputs.
+//!
+//! # Thread budget
+//!
+//! The parallel dispatch width is a process-wide budget read from
+//! `H2OPUS_BACKEND_THREADS` (or set programmatically with
+//! [`set_backend_threads`], or via the CLI's `--backend-threads`): the
+//! global [`crate::util::parallel::ParallelPool`] is sized to it at first
+//! use. The default is 1 — the exact serial loop. Composition with the
+//! threaded distributed executor's per-rank OS threads is
+//! first-come-first-served: the P rank threads *share* the one pool (a
+//! rank that finds it busy executes its batch inline), so total
+//! oversubscription is bounded by `P + budget` threads and nesting can
+//! never deadlock.
 
 pub mod native;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::metrics::Metrics;
+
+/// The process-wide batched-backend thread budget (resolved once): the
+/// value set by [`set_backend_threads`] if any, else
+/// `H2OPUS_BACKEND_THREADS`, else 1 (serial).
+static BACKEND_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Current backend thread budget (≥ 1). First call resolves and caches it.
+pub fn backend_threads() -> usize {
+    match BACKEND_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let t = std::env::var("H2OPUS_BACKEND_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&t| t >= 1)
+                .unwrap_or(1);
+            // Install the env default only if nothing was set meanwhile: a
+            // concurrent `set_backend_threads` must win over the lazy
+            // resolution, not be clobbered by it.
+            match BACKEND_THREADS.compare_exchange(0, t, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => t,
+                Err(current) => current,
+            }
+        }
+        t => t,
+    }
+}
+
+/// Override the backend thread budget (values < 1 clamp to 1). Must run
+/// before the first batched call to take effect on the global pool, whose
+/// width freezes when it is first used ([`crate::util::parallel::ParallelPool::global`]);
+/// the CLI calls this at startup from `--backend-threads`.
+pub fn set_backend_threads(threads: usize) {
+    BACKEND_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
 
 /// Dimensions of one batched GEMM: nb blocks of op(A)·B with
 /// op(A): m × k, B: k × n, C: m × n.
@@ -118,5 +174,12 @@ mod tests {
     fn contiguous_offsets_stride() {
         assert_eq!(contiguous_offsets(3, 10), vec![0, 10, 20]);
         assert!(contiguous_offsets(0, 5).is_empty());
+    }
+
+    #[test]
+    fn backend_threads_resolves_to_at_least_one() {
+        // Whatever the environment says (including unset or garbage), the
+        // resolved budget is a usable width.
+        assert!(backend_threads() >= 1);
     }
 }

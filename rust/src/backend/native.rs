@@ -1,14 +1,224 @@
-//! Pure-Rust batched backend: loops over [`crate::linalg`] kernels.
-//! Serves as the correctness oracle for the XLA backend and the baseline
-//! for the batched-performance microbenchmarks (E9).
+//! Pure-Rust batched backend: register-blocked [`crate::linalg`] kernels
+//! dispatched over the persistent worker pool
+//! ([`crate::util::parallel::ParallelPool`]).
+//!
+//! Serves as the correctness oracle for the XLA backend and the
+//! performance baseline for the batched microbenchmarks (E9). The role the
+//! paper fills with MAGMA/KBLAS batched GPU kernels — execute a marshaled
+//! batch of small dense blocks at hardware speed — is played here by
+//! splitting the batch's blocks across pool threads. Safety rests on the
+//! §3.2 conflict-free-offsets contract (see [`crate::backend`] module
+//! docs); *per-block results are bitwise identical to the serial loop*
+//! because every block runs the same scalar kernel on the same inputs,
+//! whichever thread claims it, and blocks write disjoint outputs. The
+//! serial loop is recovered exactly at width 1 (`H2OPUS_BACKEND_THREADS`
+//! unset or 1).
 
 use super::{BatchRef, ComputeBackend, GemmDims};
-use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, householder_qr, jacobi_svd, qr_r_only};
+use crate::linalg::{
+    gemm_nn, gemm_nt, gemm_tn, gemm_tt, householder_qr, jacobi_svd, qr_r_only,
+};
 use crate::metrics::Metrics;
+use crate::util::parallel::{DisjointOut, ParallelPool};
 
 /// The native (pure Rust) compute backend.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeBackend;
+
+/// Minimum estimated flops in a batch before the pool dispatch pays for
+/// itself (a condvar wake + join is ~a few µs; below this the serial loop
+/// wins). Results are identical either way — this is purely a scheduling
+/// threshold.
+const PAR_MIN_FLOPS: usize = 65_536;
+
+/// One block of a batched GEMM: op(A)·op(B) on the shared microkernels.
+#[inline]
+fn gemm_block(
+    m: usize,
+    k: usize,
+    n: usize,
+    trans_a: bool,
+    trans_b: bool,
+    accumulate: bool,
+    ab: &[f64],
+    bb: &[f64],
+    cb: &mut [f64],
+) {
+    match (trans_a, trans_b) {
+        (false, false) => gemm_nn(m, k, n, ab, bb, cb, accumulate),
+        (true, false) => gemm_tn(m, k, n, ab, bb, cb, accumulate),
+        (false, true) => gemm_nt(m, k, n, ab, bb, cb, accumulate),
+        // Not used by any marshaled phase; direct kernel (the old path
+        // composed this through a per-call Aᵀ temporary — the parallel
+        // dispatch is allocation-free, so the kernel must be too).
+        (true, true) => gemm_tt(m, k, n, ab, bb, cb, accumulate),
+    }
+}
+
+/// Debug-build verification of the §3.2 contract the parallel dispatch
+/// relies on: output offsets of one call must be pairwise disjoint at
+/// block size `len`.
+#[cfg(debug_assertions)]
+fn debug_check_disjoint(offsets: &[usize], len: usize) {
+    let mut sorted = offsets.to_vec();
+    sorted.sort_unstable();
+    for w in sorted.windows(2) {
+        assert!(
+            w[0] + len <= w[1],
+            "batched output offsets overlap: [{}, {}+{len}) and [{}, {}+{len}) — \
+             the conflict-free batch contract is violated",
+            w[0],
+            w[0],
+            w[1],
+            w[1]
+        );
+    }
+}
+
+#[cfg(not(debug_assertions))]
+fn debug_check_disjoint(_offsets: &[usize], _len: usize) {}
+
+impl NativeBackend {
+    /// [`ComputeBackend::batched_gemm`] over an explicit pool (the trait
+    /// method uses the process-global one). Exposed so tests and benches
+    /// can pin the dispatch width without touching process state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn batched_gemm_on(
+        &self,
+        pool: &ParallelPool,
+        dims: GemmDims,
+        a: BatchRef<'_>,
+        b: BatchRef<'_>,
+        c_data: &mut [f64],
+        c_offsets: &[usize],
+        metrics: &mut Metrics,
+    ) {
+        let GemmDims { nb, m, k, n, trans_a, trans_b, accumulate } = dims;
+        assert_eq!(a.offsets.len(), nb);
+        assert_eq!(b.offsets.len(), nb);
+        assert_eq!(c_offsets.len(), nb);
+        let (a_sz, b_sz, c_sz) = (m * k, k * n, m * n);
+        debug_check_disjoint(c_offsets, c_sz);
+        let out = DisjointOut::new(c_data);
+        let run_blocks = |lo: usize, hi: usize| {
+            for i in lo..hi {
+                let ab = &a.data[a.offsets[i]..a.offsets[i] + a_sz];
+                let bb = &b.data[b.offsets[i]..b.offsets[i] + b_sz];
+                // SAFETY: §3.2 conflict-free batches — every c offset of
+                // this call is distinct and blocks share one size, so the
+                // windows are pairwise disjoint (debug-asserted above) and
+                // each is claimed by exactly one chunk.
+                let cb = unsafe { out.slice_mut(c_offsets[i], c_sz) };
+                gemm_block(m, k, n, trans_a, trans_b, accumulate, ab, bb, cb);
+            }
+        };
+        if nb >= 2 && pool.width() > 1 && 2 * nb * m * k * n >= PAR_MIN_FLOPS {
+            pool.run(nb, &run_blocks);
+        } else {
+            run_blocks(0, nb);
+        }
+        metrics.gemm(nb, m, k, n);
+    }
+
+    /// [`ComputeBackend::batched_qr`] over an explicit pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn batched_qr_on(
+        &self,
+        pool: &ParallelPool,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        q: &mut [f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        let (a_sz, r_sz) = (rows * cols, cols * cols);
+        let q_out = DisjointOut::new(q);
+        let r_out = DisjointOut::new(r);
+        let run_blocks = |lo: usize, hi: usize| {
+            for i in lo..hi {
+                let (qi, ri) = householder_qr(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
+                // SAFETY: block i's output windows are contiguous
+                // i-indexed stripes — disjoint by construction.
+                unsafe { q_out.slice_mut(i * a_sz, a_sz) }.copy_from_slice(&qi);
+                unsafe { r_out.slice_mut(i * r_sz, r_sz) }.copy_from_slice(&ri);
+            }
+        };
+        if nb >= 2 && pool.width() > 1 && 2 * nb * rows * cols * cols >= PAR_MIN_FLOPS {
+            pool.run(nb, &run_blocks);
+        } else {
+            run_blocks(0, nb);
+        }
+        metrics.qr(nb, rows, cols);
+    }
+
+    /// [`ComputeBackend::batched_qr_r`] over an explicit pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn batched_qr_r_on(
+        &self,
+        pool: &ParallelPool,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        r: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        let (a_sz, r_sz) = (rows * cols, cols * cols);
+        let r_out = DisjointOut::new(r);
+        let run_blocks = |lo: usize, hi: usize| {
+            for i in lo..hi {
+                let ri = qr_r_only(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
+                // SAFETY: contiguous i-indexed stripes — disjoint.
+                unsafe { r_out.slice_mut(i * r_sz, r_sz) }.copy_from_slice(&ri);
+            }
+        };
+        if nb >= 2 && pool.width() > 1 && 2 * nb * rows * cols * cols >= PAR_MIN_FLOPS {
+            pool.run(nb, &run_blocks);
+        } else {
+            run_blocks(0, nb);
+        }
+        metrics.qr(nb, rows, cols);
+    }
+
+    /// [`ComputeBackend::batched_svd`] over an explicit pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn batched_svd_on(
+        &self,
+        pool: &ParallelPool,
+        nb: usize,
+        rows: usize,
+        cols: usize,
+        a: &[f64],
+        u: &mut [f64],
+        s: &mut [f64],
+        v: &mut [f64],
+        metrics: &mut Metrics,
+    ) {
+        let (a_sz, v_sz) = (rows * cols, cols * cols);
+        let u_out = DisjointOut::new(u);
+        let s_out = DisjointOut::new(s);
+        let v_out = DisjointOut::new(v);
+        let run_blocks = |lo: usize, hi: usize| {
+            for i in lo..hi {
+                let (ui, si, vi) = jacobi_svd(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
+                // SAFETY: contiguous i-indexed stripes — disjoint.
+                unsafe { u_out.slice_mut(i * a_sz, a_sz) }.copy_from_slice(&ui);
+                unsafe { s_out.slice_mut(i * cols, cols) }.copy_from_slice(&si);
+                unsafe { v_out.slice_mut(i * v_sz, v_sz) }.copy_from_slice(&vi);
+            }
+        };
+        // Jacobi sweeps cost well over the nominal 14·m·n² estimate, so
+        // parallelize eagerly.
+        if nb >= 2 && pool.width() > 1 && 14 * nb * rows * cols * cols >= PAR_MIN_FLOPS {
+            pool.run(nb, &run_blocks);
+        } else {
+            run_blocks(0, nb);
+        }
+        metrics.svd(nb, rows, cols);
+    }
+}
 
 impl ComputeBackend for NativeBackend {
     fn name(&self) -> &str {
@@ -24,33 +234,7 @@ impl ComputeBackend for NativeBackend {
         c_offsets: &[usize],
         metrics: &mut Metrics,
     ) {
-        let GemmDims { nb, m, k, n, trans_a, trans_b, accumulate } = dims;
-        assert_eq!(a.offsets.len(), nb);
-        assert_eq!(b.offsets.len(), nb);
-        assert_eq!(c_offsets.len(), nb);
-        let (a_sz, b_sz, c_sz) = (m * k, k * n, m * n);
-        for i in 0..nb {
-            let ab = &a.data[a.offsets[i]..a.offsets[i] + a_sz];
-            let bb = &b.data[b.offsets[i]..b.offsets[i] + b_sz];
-            let cb = &mut c_data[c_offsets[i]..c_offsets[i] + c_sz];
-            match (trans_a, trans_b) {
-                (false, false) => gemm_nn(m, k, n, ab, bb, cb, accumulate),
-                (true, false) => gemm_tn(m, k, n, ab, bb, cb, accumulate),
-                (false, true) => gemm_nt(m, k, n, ab, bb, cb, accumulate),
-                (true, true) => {
-                    // Not used by any phase; compose via a temporary.
-                    let mut tmp = vec![0.0; m * k];
-                    // tmp = A^T stored m x k
-                    for r in 0..m {
-                        for c in 0..k {
-                            tmp[r * k + c] = ab[c * m + r];
-                        }
-                    }
-                    gemm_nt(m, k, n, &tmp, bb, cb, accumulate);
-                }
-            }
-        }
-        metrics.gemm(nb, m, k, n);
+        self.batched_gemm_on(ParallelPool::global(), dims, a, b, c_data, c_offsets, metrics)
     }
 
     fn batched_qr(
@@ -63,13 +247,7 @@ impl ComputeBackend for NativeBackend {
         r: &mut [f64],
         metrics: &mut Metrics,
     ) {
-        let (a_sz, r_sz) = (rows * cols, cols * cols);
-        for i in 0..nb {
-            let (qi, ri) = householder_qr(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
-            q[i * a_sz..(i + 1) * a_sz].copy_from_slice(&qi);
-            r[i * r_sz..(i + 1) * r_sz].copy_from_slice(&ri);
-        }
-        metrics.qr(nb, rows, cols);
+        self.batched_qr_on(ParallelPool::global(), nb, rows, cols, a, q, r, metrics)
     }
 
     fn batched_qr_r(
@@ -81,12 +259,7 @@ impl ComputeBackend for NativeBackend {
         r: &mut [f64],
         metrics: &mut Metrics,
     ) {
-        let (a_sz, r_sz) = (rows * cols, cols * cols);
-        for i in 0..nb {
-            let ri = qr_r_only(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
-            r[i * r_sz..(i + 1) * r_sz].copy_from_slice(&ri);
-        }
-        metrics.qr(nb, rows, cols);
+        self.batched_qr_r_on(ParallelPool::global(), nb, rows, cols, a, r, metrics)
     }
 
     fn batched_svd(
@@ -100,14 +273,7 @@ impl ComputeBackend for NativeBackend {
         v: &mut [f64],
         metrics: &mut Metrics,
     ) {
-        let (a_sz, v_sz) = (rows * cols, cols * cols);
-        for i in 0..nb {
-            let (ui, si, vi) = jacobi_svd(rows, cols, &a[i * a_sz..(i + 1) * a_sz]);
-            u[i * a_sz..(i + 1) * a_sz].copy_from_slice(&ui);
-            s[i * cols..(i + 1) * cols].copy_from_slice(&si);
-            v[i * v_sz..(i + 1) * v_sz].copy_from_slice(&vi);
-        }
-        metrics.svd(nb, rows, cols);
+        self.batched_svd_on(ParallelPool::global(), nb, rows, cols, a, u, s, v, metrics)
     }
 }
 
@@ -186,6 +352,28 @@ mod tests {
     }
 
     #[test]
+    fn double_transpose_variant_is_allocation_free_kernel() {
+        let mut rng = Prng::new(33);
+        let (m, k, n) = (4, 3, 5);
+        let at = rng.normal_vec(k * m); // A stored k x m
+        let bt = rng.normal_vec(n * k); // B stored n x k
+        let be = NativeBackend;
+        let mut mt = Metrics::new();
+        let mut c = vec![0.0; m * n];
+        be.batched_gemm(
+            GemmDims { nb: 1, m, k, n, trans_a: true, trans_b: true, accumulate: false },
+            BatchRef { data: &at, offsets: &[0] },
+            BatchRef { data: &bt, offsets: &[0] },
+            &mut c,
+            &[0],
+            &mut mt,
+        );
+        let mut want = vec![0.0; m * n];
+        crate::linalg::gemm_tt(m, k, n, &at, &bt, &mut want, false);
+        assert_allclose(&c, &want, 1e-14, 0.0, "tt");
+    }
+
+    #[test]
     fn batched_qr_and_svd_roundtrip() {
         let mut rng = Prng::new(32);
         let (nb, rows, cols) = (4, 8, 3);
@@ -219,5 +407,44 @@ mod tests {
                 assert!(w[0] >= w[1] - 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn parallel_pool_dispatch_is_bitwise_serial() {
+        // A batch big enough to clear PAR_MIN_FLOPS, run on an explicit
+        // 4-wide pool vs the serial loop: outputs must match bit for bit.
+        let mut rng = Prng::new(34);
+        let (nb, m, k, n) = (64, 8, 8, 8);
+        let a = rng.normal_vec(nb * m * k);
+        let b = rng.normal_vec(nb * k * n);
+        let dims = GemmDims { nb, m, k, n, trans_a: false, trans_b: false, accumulate: false };
+        let ao = contiguous_offsets(nb, m * k);
+        let bo = contiguous_offsets(nb, k * n);
+        let co = contiguous_offsets(nb, m * n);
+        let be = NativeBackend;
+        let pool4 = ParallelPool::new(4);
+        let pool1 = ParallelPool::new(1);
+        let mut c_par = vec![0.0; nb * m * n];
+        let mut c_ser = vec![0.0; nb * m * n];
+        let mut mt = Metrics::new();
+        be.batched_gemm_on(
+            &pool4,
+            dims,
+            BatchRef { data: &a, offsets: &ao },
+            BatchRef { data: &b, offsets: &bo },
+            &mut c_par,
+            &co,
+            &mut mt,
+        );
+        be.batched_gemm_on(
+            &pool1,
+            dims,
+            BatchRef { data: &a, offsets: &ao },
+            BatchRef { data: &b, offsets: &bo },
+            &mut c_ser,
+            &co,
+            &mut mt,
+        );
+        assert_eq!(c_par, c_ser, "parallel dispatch must be bitwise-identical to serial");
     }
 }

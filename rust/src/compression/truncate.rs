@@ -365,17 +365,29 @@ pub fn truncate_inner_level(
         &contiguous_offsets(nodes_c, k_new_c * k_par),
         metrics,
     );
+    // Sibling pair accumulation as two *parity* batches (even children,
+    // then odd children), like the upsweep's `LevelTransferPlan::parity`:
+    // within each call every parent P block appears once, so the §3.2
+    // conflict-free-offsets contract holds and the batch may be executed
+    // in parallel. Each parent still accumulates its even child before its
+    // odd child — the per-block in-place order of the former single-batch
+    // form — so results are bit-identical to it.
     let mut pp = vec![0.0; nodes_p * k_new_p * k_par];
-    let ep_off = contiguous_offsets(nodes_c, k_new_c * k_new_p);
-    let pp_off: Vec<usize> = (0..nodes_c).map(|c| (c / 2) * k_new_p * k_par).collect();
-    backend.batched_gemm(
-        GemmDims { nb: nodes_c, m: k_new_p, k: k_new_c, n: k_par, trans_a: true, trans_b: false, accumulate: true },
-        BatchRef { data: &etr, offsets: &ep_off },
-        BatchRef { data: &pce, offsets: &contiguous_offsets(nodes_c, k_new_c * k_par) },
-        &mut pp,
-        &pp_off,
-        metrics,
-    );
+    let pce_off = contiguous_offsets(nodes_c, k_new_c * k_par);
+    for parity in 0..2 {
+        let ep_off: Vec<usize> =
+            (0..nodes_p).map(|i| (2 * i + parity) * k_new_c * k_new_p).collect();
+        let pce_par: Vec<usize> = (0..nodes_p).map(|i| pce_off[2 * i + parity]).collect();
+        let pp_off: Vec<usize> = (0..nodes_p).map(|i| i * k_new_p * k_par).collect();
+        backend.batched_gemm(
+            GemmDims { nb: nodes_p, m: k_new_p, k: k_new_c, n: k_par, trans_a: true, trans_b: false, accumulate: true },
+            BatchRef { data: &etr, offsets: &ep_off },
+            BatchRef { data: &pce, offsets: &pce_par },
+            &mut pp,
+            &pp_off,
+            metrics,
+        );
+    }
     (etr, pp, k_new_p)
 }
 

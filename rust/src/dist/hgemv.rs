@@ -116,8 +116,32 @@ impl CostModel {
             match std::env::var_os("H2OPUS_COST_CALIBRATION") {
                 Some(path) => {
                     let path = std::path::PathBuf::from(path);
-                    match CostModel::from_calibration_file(&path) {
-                        Some(m) => m,
+                    let text = std::fs::read_to_string(&path).ok();
+                    match text.as_deref().and_then(CostModel::from_json) {
+                        Some(m) => {
+                            // Honesty check: a flop_time fitted against a
+                            // multithreaded batched backend is not a
+                            // single-thread rate. The fit records the pool
+                            // width it saw; warn when this process runs a
+                            // different one.
+                            let fitted = text
+                                .as_deref()
+                                .and_then(|t| json_number(t, "backend_threads"))
+                                .map(|v| v as usize);
+                            let current = crate::backend::backend_threads();
+                            if let Some(fitted) = fitted {
+                                if fitted != current {
+                                    eprintln!(
+                                        "h2opus: CostModel calibration {} was fit with \
+                                         backend_threads={fitted}, but this process uses \
+                                         {current} — virtual times may be skewed (refit with \
+                                         model_check.py --fit)",
+                                        path.display()
+                                    );
+                                }
+                            }
+                            m
+                        }
                         None => {
                             eprintln!(
                                 "h2opus: could not load CostModel calibration from {} — \

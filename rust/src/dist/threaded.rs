@@ -62,6 +62,20 @@
 //! [`crate::dist::transport::recording::Recording`] — so a *measured*
 //! Chrome trace ([`crate::dist::hgemv::DistOptions::measured_trace`]) can
 //! be emitted next to the virtual-schedule trace.
+//!
+//! # Composing with the parallel backend (thread budget)
+//!
+//! With `H2OPUS_BACKEND_THREADS > 1` every rank's batched calls go to the
+//! parallel native backend, whose pool is *process-global and shared*:
+//! the first rank to dispatch a batch parallelizes it across the budget;
+//! ranks finding the pool busy run their batch inline (exactly the serial
+//! loop). Total thread pressure is therefore bounded by `P + budget`, the
+//! executor needs no per-rank budget split, and — because per-block
+//! results are bitwise-independent of who executes them — the bitwise
+//! identity argument below is untouched by the backend's parallelism.
+//! (Socket-transport worker *processes* each own their pool; the budget
+//! env var is inherited, so `P × budget` cores are used across the
+//! session — set it to `cores / P` to share a machine evenly.)
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::Instant;

@@ -66,12 +66,24 @@ impl Mat {
     }
 }
 
+/// Width of the register-tile column panel used by [`gemm_nn`]/[`gemm_tn`]:
+/// a 4×8 f64 tile is 8 AVX2 (4 AVX-512) vector accumulators, leaving
+/// registers for the broadcast A scalars and the B panel load — the classic
+/// microkernel shape rustc autovectorizes from fixed-size arrays.
+const NR: usize = 8;
+
 /// C = A·B (or C += A·B when `acc`): A is m×k, B is k×n, C is m×n, all
-/// row-major. i-k-j order streams rows of B/C; output rows are processed
-/// four at a time so every loaded B row feeds four accumulating C rows
-/// (register blocking — measured via `benches/batched_backend.rs` (E9):
-/// +25–45% on the batched shapes, 2.8× on the n = 1 bandwidth-bound case
-/// via the 2-row path).
+/// row-major.
+///
+/// Register-blocked microkernel: interior 4-row × 8-column tiles are
+/// accumulated in a fixed-size register tile over the full k extent (one
+/// pass over A rows and B panel columns per tile), with dedicated paths
+/// for n = 1 (bandwidth-bound gemv, 2-row blocking) and the row/column
+/// remainders. Each output element's contraction runs in strictly
+/// increasing p order, so results are deterministic for fixed shapes (and
+/// identical however the enclosing batch is dispatched); throughput is
+/// measured by `benches/batched_backend.rs` (E9) on the tree-level block
+/// shapes.
 #[inline]
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
@@ -105,23 +117,47 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
         return;
     }
     let m4 = m / 4 * 4;
+    let n8 = n / NR * NR;
     let mut i = 0;
     while i < m4 {
-        let (c01, c23) = c[i * n..(i + 4) * n].split_at_mut(2 * n);
-        let (c0, c1) = c01.split_at_mut(n);
-        let (c2, c3) = c23.split_at_mut(n);
-        for p in 0..k {
-            let x0 = a[i * k + p];
-            let x1 = a[(i + 1) * k + p];
-            let x2 = a[(i + 2) * k + p];
-            let x3 = a[(i + 3) * k + p];
-            let brow = &b[p * n..(p + 1) * n];
-            for (j, &bv) in brow.iter().enumerate() {
-                c0[j] += x0 * bv;
-                c1[j] += x1 * bv;
-                c2[j] += x2 * bv;
-                c3[j] += x3 * bv;
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let mut j = 0;
+        while j < n8 {
+            let mut t = [[0.0f64; NR]; 4];
+            for p in 0..k {
+                let bp: &[f64; NR] = b[p * n + j..p * n + j + NR].try_into().unwrap();
+                let x = [a0[p], a1[p], a2[p], a3[p]];
+                for (tr, &xr) in t.iter_mut().zip(x.iter()) {
+                    for (tc, &bv) in tr.iter_mut().zip(bp.iter()) {
+                        *tc += xr * bv;
+                    }
+                }
             }
+            for (r, tr) in t.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                for (cj, &tv) in crow.iter_mut().zip(tr.iter()) {
+                    *cj += tv;
+                }
+            }
+            j += NR;
+        }
+        while j < n {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for p in 0..k {
+                let bv = b[p * n + j];
+                s0 += a0[p] * bv;
+                s1 += a1[p] * bv;
+                s2 += a2[p] * bv;
+                s3 += a3[p] * bv;
+            }
+            c[i * n + j] += s0;
+            c[(i + 1) * n + j] += s1;
+            c[(i + 2) * n + j] += s2;
+            c[(i + 3) * n + j] += s3;
+            j += 1;
         }
         i += 4;
     }
@@ -139,44 +175,142 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
 }
 
 /// C = Aᵀ·B (or +=): A is k×m (so Aᵀ is m×k), B is k×n, C is m×n.
+///
+/// Same 4×8 register tile as [`gemm_nn`]; the four A values per p step are
+/// a contiguous quad of row p of A (columns i..i+4 of Aᵀ), so the inner
+/// loops stay branch-free and autovectorizable (the old p-outer form
+/// skipped zero A entries, which defeated vectorization on the padded
+/// transfer blocks this kernel mostly sees).
 #[inline]
 pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
     debug_assert!(a.len() >= k * m && b.len() >= k * n && c.len() >= m * n);
     if !acc {
         c[..m * n].fill(0.0);
     }
-    // p is the contraction index over rows of A and B.
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for (i, &api) in arow.iter().enumerate() {
-            if api == 0.0 {
-                continue;
+    let m4 = m / 4 * 4;
+    let n8 = n / NR * NR;
+    let mut i = 0;
+    while i < m4 {
+        let mut j = 0;
+        while j < n8 {
+            let mut t = [[0.0f64; NR]; 4];
+            for p in 0..k {
+                let ap: &[f64; 4] = a[p * m + i..p * m + i + 4].try_into().unwrap();
+                let bp: &[f64; NR] = b[p * n + j..p * n + j + NR].try_into().unwrap();
+                for (tr, &xr) in t.iter_mut().zip(ap.iter()) {
+                    for (tc, &bv) in tr.iter_mut().zip(bp.iter()) {
+                        *tc += xr * bv;
+                    }
+                }
             }
-            let crow = &mut c[i * n..(i + 1) * n];
+            for (r, tr) in t.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                for (cj, &tv) in crow.iter_mut().zip(tr.iter()) {
+                    *cj += tv;
+                }
+            }
+            j += NR;
+        }
+        while j < n {
+            let mut s = [0.0f64; 4];
+            for p in 0..k {
+                let bv = b[p * n + j];
+                for (sr, &av) in s.iter_mut().zip(a[p * m + i..p * m + i + 4].iter()) {
+                    *sr += av * bv;
+                }
+            }
+            for (r, &sv) in s.iter().enumerate() {
+                c[(i + r) * n + j] += sv;
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < m {
+        // Single Aᵀ row: c[i, :] += Σ_p A[p, i] · b[p, :].
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[p * m + i];
+            let brow = &b[p * n..(p + 1) * n];
             for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
-                *cj += api * bj;
+                *cj += aip * bj;
             }
         }
+        i += 1;
     }
 }
 
 /// C = A·Bᵀ (or +=): A is m×k, B is n×k, C is m×n.
+///
+/// Dot-product kernel over contiguous k-extents; four independent dots
+/// share each loaded A row so the contraction vectorizes and the A row
+/// stays in registers. Per-element contraction order is unchanged (one
+/// accumulator per output, increasing p).
 #[inline]
 pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
     debug_assert!(a.len() >= m * k && b.len() >= n * k && c.len() >= m * n);
     if !acc {
         c[..m * n].fill(0.0);
     }
+    let n4 = n / 4 * 4;
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for p in 0..k {
+                let av = arow[p];
+                s0 += av * b0[p];
+                s1 += av * b1[p];
+                s2 += av * b2[p];
+                s3 += av * b3[p];
+            }
+            crow[j] += s0;
+            crow[j + 1] += s1;
+            crow[j + 2] += s2;
+            crow[j + 3] += s3;
+            j += 4;
+        }
+        while j < n {
             let brow = &b[j * k..(j + 1) * k];
             let mut s = 0.0;
             for (x, y) in arow.iter().zip(brow.iter()) {
                 s += x * y;
             }
-            c[i * n + j] += s;
+            crow[j] += s;
+            j += 1;
+        }
+    }
+}
+
+/// C = Aᵀ·Bᵀ (or +=): A is k×m, B is n×k, C is m×n, so
+/// c[i, j] = Σ_p A[p, i] · B[j, p].
+///
+/// Allocation-free: the batched backend previously composed this case
+/// through an explicit Aᵀ temporary on every call. No marshaled phase
+/// uses it (kept for backend completeness); the contraction runs in
+/// increasing p order per output element, exactly like the old composed
+/// path, so results are bit-identical to it.
+#[inline]
+pub fn gemm_tt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64], acc: bool) {
+    debug_assert!(a.len() >= k * m && b.len() >= n * k && c.len() >= m * n);
+    if !acc {
+        c[..m * n].fill(0.0);
+    }
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for (p, &bv) in brow.iter().enumerate() {
+                s += a[p * m + i] * bv;
+            }
+            *cj += s;
         }
     }
 }
@@ -202,7 +336,19 @@ mod tests {
     #[test]
     fn gemm_nn_matches_naive() {
         let mut rng = Prng::new(3);
-        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (7, 2, 9)] {
+        // Shapes chosen to cover the gemv path, full 4×8 tiles, and every
+        // row/column remainder combination.
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 4, 5),
+            (8, 8, 8),
+            (7, 2, 9),
+            (4, 3, 8),
+            (9, 7, 17),
+            (12, 5, 8),
+            (5, 3, 11),
+            (6, 4, 1),
+        ] {
             let a = rng.normal_vec(m * k);
             let b = rng.normal_vec(k * n);
             let mut c = vec![0.0; m * n];
@@ -214,26 +360,70 @@ mod tests {
     #[test]
     fn gemm_tn_matches_transpose() {
         let mut rng = Prng::new(4);
-        let (m, k, n) = (5, 7, 3);
-        let at = rng.normal_vec(k * m); // A is k x m
-        let b = rng.normal_vec(k * n);
-        let mut c = vec![0.0; m * n];
-        gemm_tn(m, k, n, &at, &b, &mut c, false);
-        // reference: transpose A then nn
-        let a = Mat { rows: k, cols: m, data: at.clone() }.transpose();
-        assert_allclose(&c, &naive_nn(m, k, n, &a.data, &b), 1e-13, 1e-13, "tn");
+        for &(m, k, n) in &[(5, 7, 3), (8, 6, 19), (6, 4, 8), (4, 5, 8), (3, 2, 9)] {
+            let at = rng.normal_vec(k * m); // A is k x m
+            let b = rng.normal_vec(k * n);
+            let mut c = vec![0.0; m * n];
+            gemm_tn(m, k, n, &at, &b, &mut c, false);
+            // reference: transpose A then nn
+            let a = Mat { rows: k, cols: m, data: at.clone() }.transpose();
+            assert_allclose(&c, &naive_nn(m, k, n, &a.data, &b), 1e-13, 1e-13, "tn");
+        }
     }
 
     #[test]
     fn gemm_nt_matches_transpose() {
         let mut rng = Prng::new(5);
-        let (m, k, n) = (4, 6, 5);
+        for &(m, k, n) in &[(4, 6, 5), (3, 8, 9), (7, 2, 4), (1, 5, 3)] {
+            let a = rng.normal_vec(m * k);
+            let bt = rng.normal_vec(n * k); // B is n x k
+            let mut c = vec![0.0; m * n];
+            gemm_nt(m, k, n, &a, &bt, &mut c, false);
+            let b = Mat { rows: n, cols: k, data: bt.clone() }.transpose();
+            assert_allclose(&c, &naive_nn(m, k, n, &a, &b.data), 1e-13, 1e-13, "nt");
+        }
+    }
+
+    #[test]
+    fn gemm_tt_matches_double_transpose() {
+        let mut rng = Prng::new(9);
+        for &(m, k, n) in &[(4, 6, 3), (7, 3, 9), (1, 2, 1)] {
+            let at = rng.normal_vec(k * m); // A is k x m
+            let bt = rng.normal_vec(n * k); // B is n x k
+            let mut c = vec![0.0; m * n];
+            gemm_tt(m, k, n, &at, &bt, &mut c, false);
+            let a = Mat { rows: k, cols: m, data: at.clone() }.transpose();
+            let b = Mat { rows: n, cols: k, data: bt.clone() }.transpose();
+            assert_allclose(&c, &naive_nn(m, k, n, &a.data, &b.data), 1e-13, 1e-13, "tt");
+        }
+    }
+
+    #[test]
+    fn all_variants_accumulate_onto_existing_c() {
+        // The tile paths stage partial sums in registers before adding to
+        // C; make sure accumulate mode still sees the initial contents on
+        // every path (tile interior + remainders).
+        let mut rng = Prng::new(10);
+        let (m, k, n) = (6, 5, 10);
         let a = rng.normal_vec(m * k);
-        let bt = rng.normal_vec(n * k); // B is n x k
-        let mut c = vec![0.0; m * n];
-        gemm_nt(m, k, n, &a, &bt, &mut c, false);
-        let b = Mat { rows: n, cols: k, data: bt.clone() }.transpose();
-        assert_allclose(&c, &naive_nn(m, k, n, &a, &b.data), 1e-13, 1e-13, "nt");
+        let at = Mat { rows: m, cols: k, data: a.clone() }.transpose();
+        let b = rng.normal_vec(k * n);
+        let bt = Mat { rows: k, cols: n, data: b.clone() }.transpose();
+        let c0 = rng.normal_vec(m * n);
+        let mut want = c0.clone();
+        for (w, v) in want.iter_mut().zip(naive_nn(m, k, n, &a, &b)) {
+            *w += v;
+        }
+        for variant in 0..4 {
+            let mut c = c0.clone();
+            match variant {
+                0 => gemm_nn(m, k, n, &a, &b, &mut c, true),
+                1 => gemm_tn(m, k, n, &at.data, &b, &mut c, true),
+                2 => gemm_nt(m, k, n, &a, &bt.data, &mut c, true),
+                _ => gemm_tt(m, k, n, &at.data, &bt.data, &mut c, true),
+            }
+            assert_allclose(&c, &want, 1e-12, 1e-12, "acc variant");
+        }
     }
 
     #[test]

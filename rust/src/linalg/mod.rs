@@ -11,6 +11,6 @@ pub mod dense;
 pub mod qr;
 pub mod svd;
 
-pub use dense::{gemm_nn, gemm_nt, gemm_tn, Mat};
+pub use dense::{gemm_nn, gemm_nt, gemm_tn, gemm_tt, Mat};
 pub use qr::{householder_qr, qr_r_only};
 pub use svd::jacobi_svd;

@@ -10,6 +10,10 @@
 //! h2opus info     [--n-side 32] [--dim 2]
 //! h2opus worker   --connect SOCK --rank R --ranks P --nv NV [matrix flags]   (internal: socket-transport rank)
 //! ```
+//!
+//! `--backend-threads T` (or `H2OPUS_BACKEND_THREADS`) sets the parallel
+//! native backend's pool width — the per-process batched-kernel thread
+//! budget, shared by all rank threads (see the `backend` module docs).
 
 use std::collections::HashMap;
 
@@ -341,6 +345,13 @@ fn main() {
     if let Some(path) = flags.get("cost-calibration") {
         std::env::set_var("H2OPUS_COST_CALIBRATION", path);
     }
+    // --backend-threads T sizes the batched backend's worker pool (before
+    // any batched call freezes the global pool width); the env form makes
+    // spawned `h2opus worker` subprocesses inherit the same budget.
+    if let Some(t) = flags.get("backend-threads").and_then(|v| v.parse::<usize>().ok()) {
+        h2opus::backend::set_backend_threads(t);
+        std::env::set_var("H2OPUS_BACKEND_THREADS", t.to_string());
+    }
     match cmd {
         "matvec" => cmd_matvec(&flags),
         "compress" => cmd_compress(&flags),
@@ -352,6 +363,7 @@ fn main() {
             println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
             println!("commands: matvec | compress | solve | accuracy | info | worker");
             println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
+            println!("              --backend-threads T (batched-kernel pool width; env H2OPUS_BACKEND_THREADS)");
             println!("              --cost-calibration target/cost_model_calibration.json");
             println!("matvec flags: --threaded --transport inproc|socket --trace F --measured-trace F");
             println!("              --kernel exp|fractional --beta B");

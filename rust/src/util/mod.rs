@@ -1,7 +1,10 @@
-//! Small self-contained utilities: PRNG, timers, chrome-trace emission and a
+//! Small self-contained utilities: PRNG, timers, chrome-trace emission, a
 //! mini property-testing harness (the offline build image has no
-//! `rand`/`criterion`/`proptest`; see DESIGN.md "Substitutions").
+//! `rand`/`criterion`/`proptest`; see DESIGN.md "Substitutions") and the
+//! persistent data-parallel worker pool behind the batched native backend
+//! ([`parallel`]).
 
+pub mod parallel;
 pub mod prng;
 pub mod testing;
 pub mod timer;

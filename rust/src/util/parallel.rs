@@ -1,0 +1,419 @@
+//! Persistent data-parallel worker pool for the batched backends.
+//!
+//! The paper's single-GPU rates come from running each marshaled batch of
+//! small dense blocks on thousands of GPU threads at once (MAGMA/KBLAS);
+//! the CPU-side equivalent is a pool of OS threads splitting each batch's
+//! *blocks* between them. This pool differs from [`crate::dist::pool::RankPool`]
+//! (long-lived rank bodies, one job per thread, jobs boxed per batch) in
+//! three ways dictated by the GEMM hot path:
+//!
+//! - **allocation-free dispatch**: [`ParallelPool::run`] publishes a
+//!   borrowed `&dyn Fn` chunk closure through a mutex-guarded job slot and
+//!   wakes the parked workers with a condvar — no per-call boxing, no
+//!   channel sends. The batched-GEMM acceptance bar is *zero* allocations
+//!   per dispatched call.
+//! - **dynamic chunking**: workers (and the calling thread, which
+//!   participates) claim chunks of block indices from an atomic counter,
+//!   so a batch whose blocks vary in cost still balances.
+//! - **contended calls degrade, not deadlock**: `run` takes a dispatch
+//!   try-lock; a second caller (e.g. another rank thread of the threaded
+//!   executor mid-product) finds the pool busy and simply executes its
+//!   batch inline on its own thread. Nested parallelism (P rank threads ×
+//!   pool width) therefore never oversubscribes beyond `P + width`
+//!   threads, and the pool can never deadlock on itself — the thread
+//!   budget policy documented in [`crate::backend`].
+//!
+//! # Safety model
+//!
+//! `run` erases the chunk closure's lifetime to park it in the shared job
+//! slot (the same transmute contract as `RankPool::scoped`): it does not
+//! return — not even by unwinding — until every worker has retired from
+//! the epoch, so the borrow can never dangle. Worker panics are caught
+//! (the worker survives for the next batch) and re-raised on the caller
+//! after the batch completes.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Wide pointer to the caller's chunk closure, lifetime-erased so it can
+/// sit in the shared job slot. Only dereferenced between job publication
+/// and the epoch's completion; `run` blocks (even on panic paths) until
+/// every worker has retired, so the pointee always outlives its use.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize, usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-callable from any thread) and the
+// epoch protocol above keeps it alive for as long as any worker can
+// dereference it.
+unsafe impl Send for TaskRef {}
+
+struct JobSlot {
+    /// Bumped once per dispatched batch; a worker runs one chunk loop per
+    /// observed epoch.
+    epoch: u64,
+    /// The published chunk closure (`None` outside a dispatch).
+    task: Option<TaskRef>,
+    /// Number of block items in the current batch.
+    n_items: usize,
+    /// Chunk granularity of the current batch.
+    chunk: usize,
+    /// Workers still inside the current epoch's chunk loop.
+    active: usize,
+    /// Set when a worker chunk panicked (re-raised by the caller).
+    panicked: bool,
+    /// Pool is being dropped; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Wakes parked workers when a batch is published (or on shutdown).
+    start: Condvar,
+    /// Wakes the dispatching caller when the last worker retires.
+    done: Condvar,
+    /// Next unclaimed block index of the current batch.
+    next: AtomicUsize,
+}
+
+/// A persistent pool of parked worker threads executing batches of
+/// independent blocks. See the module docs for the dispatch protocol.
+pub struct ParallelPool {
+    shared: Arc<Shared>,
+    /// Dispatch width: spawned workers + the calling thread.
+    width: usize,
+    /// At most one batch dispatch at a time; contenders run inline.
+    dispatch: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ParallelPool {
+    /// A pool of total width `threads` (the calling thread participates,
+    /// so `threads - 1` workers are spawned; width 0 or 1 spawns none and
+    /// [`run`](ParallelPool::run) executes inline).
+    pub fn new(threads: usize) -> ParallelPool {
+        let width = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot {
+                epoch: 0,
+                task: None,
+                n_items: 0,
+                chunk: 1,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (1..width)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("h2opus-par-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning parallel pool worker")
+            })
+            .collect();
+        ParallelPool { shared, width, dispatch: Mutex::new(()), handles }
+    }
+
+    /// The process-wide pool used by the batched native backend, sized by
+    /// [`crate::backend::backend_threads`] at first use (set the budget —
+    /// env var or [`crate::backend::set_backend_threads`] — before the
+    /// first batched call).
+    pub fn global() -> &'static ParallelPool {
+        static GLOBAL: OnceLock<ParallelPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| ParallelPool::new(crate::backend::backend_threads()))
+    }
+
+    /// Total dispatch width (workers + caller).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Execute `f(lo, hi)` over a partition of `0..n_items`, splitting the
+    /// chunks across the pool width (the calling thread participates) and
+    /// returning once every chunk has completed.
+    ///
+    /// Every index in `0..n_items` is passed to exactly one invocation, so
+    /// per-item work runs exactly once regardless of width — callers rely
+    /// on this for bitwise parity with the serial loop. If another batch
+    /// is already dispatched on this pool (a concurrent rank thread), the
+    /// whole batch runs inline on the calling thread instead of blocking.
+    ///
+    /// Panics in `f` (on any thread) are re-raised here after the batch
+    /// has fully completed; the pool survives for the next batch.
+    pub fn run(&self, n_items: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n_items == 0 {
+            return;
+        }
+        if self.width <= 1 || self.handles.is_empty() {
+            f(0, n_items);
+            return;
+        }
+        // One dispatch at a time. A contended (or poisoned — a previous
+        // caller panicked while dispatching) lock falls back to inline
+        // execution: correctness never depends on winning the pool.
+        let Ok(guard) = self.dispatch.try_lock() else {
+            f(0, n_items);
+            return;
+        };
+        // ~4 chunks per thread balances uneven block costs without
+        // starving the atomic counter.
+        let chunk = (n_items / (self.width * 4)).max(1);
+        let workers = self.handles.len();
+        {
+            let mut slot = self.shared.slot.lock().expect("pool slot");
+            debug_assert!(slot.task.is_none() && slot.active == 0);
+            self.shared.next.store(0, Ordering::Relaxed);
+            // SAFETY: see `TaskRef` — this call waits for `active == 0`
+            // below before returning or unwinding, so the erased borrow
+            // outlives every dereference.
+            let erased = unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize, usize) + Sync),
+                    *const (dyn Fn(usize, usize) + Sync),
+                >(f)
+            };
+            slot.task = Some(TaskRef(erased));
+            slot.n_items = n_items;
+            slot.chunk = chunk;
+            slot.active = workers;
+            slot.epoch += 1;
+            self.shared.start.notify_all();
+        }
+        // The caller participates in the chunk loop. Catch its panic so
+        // the wait below always happens — unwinding past it would dangle
+        // the published borrow.
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            chunk_loop(&self.shared.next, n_items, chunk, f);
+        }));
+        let worker_panicked = {
+            let mut slot = self.shared.slot.lock().expect("pool slot");
+            while slot.active > 0 {
+                slot = self.shared.done.wait(slot).expect("pool slot");
+            }
+            slot.task = None;
+            std::mem::replace(&mut slot.panicked, false)
+        };
+        drop(guard);
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("h2opus parallel pool: a worker chunk panicked (see stderr)");
+        }
+    }
+}
+
+impl Drop for ParallelPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().expect("pool slot");
+            slot.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute chunks until the batch's index space is exhausted.
+fn chunk_loop(next: &AtomicUsize, n_items: usize, chunk: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    loop {
+        let lo = next.fetch_add(chunk, Ordering::Relaxed);
+        if lo >= n_items {
+            return;
+        }
+        f(lo, (lo + chunk).min(n_items));
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let (task, n_items, chunk) = {
+            let mut slot = shared.slot.lock().expect("pool slot");
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != last_epoch {
+                    break;
+                }
+                slot = shared.start.wait(slot).expect("pool slot");
+            }
+            last_epoch = slot.epoch;
+            (slot.task.expect("published task"), slot.n_items, slot.chunk)
+        };
+        // SAFETY: the dispatching caller cannot pass its `active == 0`
+        // wait until this worker decrements below, so the pointee is
+        // alive for the whole chunk loop.
+        let f = unsafe { &*task.0 };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            chunk_loop(&shared.next, n_items, chunk, f);
+        }));
+        let mut slot = shared.slot.lock().expect("pool slot");
+        if outcome.is_err() {
+            slot.panicked = true;
+        }
+        slot.active -= 1;
+        if slot.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A shared output buffer written at caller-guaranteed pairwise-disjoint
+/// ranges from multiple threads.
+///
+/// # The conflict-free-offsets contract
+///
+/// The batched backends may hand distinct `[off, off + len)` windows of
+/// one `&mut [f64]` to different pool threads. That is sound if and only
+/// if the windows outstanding at any one time are pairwise disjoint — in
+/// this codebase, the §3.2 *conflict-free batch ordering* guarantees
+/// exactly that: within one batched call, every output offset is distinct
+/// and blocks have one fixed size, so the windows cannot overlap (the
+/// batched-GEMM entry points `debug_assert` this). Bounds are always
+/// checked; disjointness is the caller's contract.
+pub struct DisjointOut {
+    ptr: *mut f64,
+    len: usize,
+}
+
+// SAFETY: access is raw-pointer based; the disjointness contract above
+// makes concurrent use race-free, and visibility of the writes is
+// established by the pool's slot mutex (workers retire under it before
+// the dispatching caller returns).
+unsafe impl Send for DisjointOut {}
+unsafe impl Sync for DisjointOut {}
+
+impl DisjointOut {
+    pub fn new(data: &mut [f64]) -> DisjointOut {
+        DisjointOut { ptr: data.as_mut_ptr(), len: data.len() }
+    }
+
+    /// The window `[off, off + len)` of the underlying buffer.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee no other live slice of this buffer —
+    /// from this or any other thread — overlaps the window (the
+    /// conflict-free-offsets contract above). Out-of-bounds windows
+    /// panic.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [f64] {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "disjoint output window [{off}, {off}+{len}) out of bounds (len {})",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let pool = ParallelPool::new(4);
+        for &n in &[1usize, 2, 3, 16, 257, 1024] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, &|lo, hi| {
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn width_one_runs_inline() {
+        let pool = ParallelPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let caller = std::thread::current().id();
+        pool.run(8, &|_, _| assert_eq!(std::thread::current().id(), caller));
+    }
+
+    #[test]
+    fn zero_items_is_a_noop() {
+        let pool = ParallelPool::new(3);
+        pool.run(0, &|_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = ParallelPool::new(3);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.run(100, &|lo, hi| {
+                let part: u64 = (lo..hi).map(|i| i as u64).sum();
+                sum.fetch_add(part, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 4950, "round {round}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ParallelPool::new(4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, &|lo, _| {
+                if lo == 0 {
+                    panic!("chunk failed");
+                }
+            });
+        }));
+        assert!(result.is_err(), "chunk panic must reach the caller");
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|lo, hi| {
+            sum.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10, "pool must survive a panicked batch");
+    }
+
+    #[test]
+    fn contended_dispatch_falls_back_inline() {
+        // Many threads hammer one pool; every batch must still cover its
+        // index space exactly once (winners use the pool, losers inline).
+        let pool = ParallelPool::new(2);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let sum = AtomicU64::new(0);
+                        pool.run(64, &|lo, hi| {
+                            sum.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), 64);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn disjoint_out_bounds_checked() {
+        let mut data = vec![0.0; 8];
+        let out = DisjointOut::new(&mut data);
+        let s = unsafe { out.slice_mut(4, 4) };
+        s.fill(1.0);
+        assert!(std::panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+            out.slice_mut(6, 4);
+        }))
+        .is_err());
+        assert_eq!(data[3], 0.0);
+        assert_eq!(data[4], 1.0);
+    }
+}

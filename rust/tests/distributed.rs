@@ -187,6 +187,15 @@ fn threaded_executor_speeds_up_wall_clock() {
         eprintln!("SKIP: only {cores} core(s) available — no parallel speedup to measure");
         return;
     }
+    // With the parallel batched backend enabled, the P = 1 baseline is no
+    // longer serial (its batches already fan out across the backend pool),
+    // so "4 ranks beat 1 rank" stops being the premise under test. The
+    // bitwise conformance tests cover that configuration; this criterion
+    // is about rank parallelism over a serial backend.
+    if h2opus::backend::backend_threads() > 1 {
+        eprintln!("SKIP: H2OPUS_BACKEND_THREADS > 1 — P=1 baseline is already parallel");
+        return;
+    }
     let (n_side, nv, max_ratio) = if cfg!(debug_assertions) {
         (64usize, 2usize, 0.80) // >= 1.25x
     } else if cores < 4 {
