@@ -19,7 +19,13 @@ harness cross-checks the CostModel constants against those measurements:
 
     python3 python/tests/model_check.py                    # model + cross-check
     python3 python/tests/model_check.py --cross-check-only # CI smoke step
+    python3 python/tests/model_check.py --pipeline-only    # E10 pipeline check
     python3 python/tests/model_check.py --fit              # calibrate constants
+
+When the E10 bench has written target/pipeline_summary.json, the harness
+additionally mirrors `CostModel::pipeline` (barrier-per-product vs
+submit/wait overlap pricing) against the recorded phase components and
+checks the measured ablation for the same shape.
 
 The cross-check is a sanity band, not a calibration: the virtual constants
 approximate a per-GPU share of the paper's V100 node, while the measured
@@ -481,6 +487,91 @@ def cross_check_measured():
     return ok
 
 
+def pipeline_cost(products, ship_s, compute_s, gather_s):
+    """Mirror of `CostModel::pipeline`: sequential barriers pay every
+    phase end to end; the pipelined session hides ship+gather of product
+    k+1 under compute of product k (whichever side is longer bounds the
+    steady state)."""
+    if products == 0:
+        return 0.0, 0.0
+    b = float(products)
+    seq = b * (ship_s + compute_s + gather_s)
+    pipe = ship_s + b * max(compute_s, ship_s + gather_s) + gather_s
+    return seq, min(pipe, seq)
+
+
+def find_pipeline_summary():
+    """Locate the E10 bench's pipeline ablation summary, if it was run."""
+    for cand in (
+        "target/pipeline_summary.json",
+        "rust/target/pipeline_summary.json",
+        os.path.join(os.path.dirname(__file__), "..", "..", "rust", "target",
+                     "pipeline_summary.json"),
+    ):
+        if os.path.exists(cand):
+            return cand
+    return None
+
+
+def cross_check_pipeline():
+    """Check the E10 pipeline ablation against `CostModel::pipeline`:
+    the Python mirror must reproduce the Rust pricing from the recorded
+    phase components, the model must never price the pipeline above the
+    barrier path, and the measured pipelined run must not be grossly
+    slower than the measured sequential one. Returns True on PASS/SKIP,
+    False on FAIL."""
+    path = find_pipeline_summary()
+    if path is None:
+        print("pipeline: SKIP (no pipeline_summary.json — run "
+              "`cargo bench --bench serving` first)")
+        return True
+    with open(path) as fh:
+        s = json.load(fh)
+    needed = ("products", "ship_s", "compute_s", "gather_s",
+              "measured_seq_s", "measured_pipe_s", "model_seq_s", "model_pipe_s")
+    if any(k not in s for k in needed):
+        print(f"pipeline: SKIP ({path} predates the phase components)")
+        return True
+    ok = True
+    # Mirror: recombine the recorded components with the Python port of
+    # the pricing formula; it must reproduce the Rust numbers.
+    seq, pipe = pipeline_cost(s["products"], s["ship_s"], s["compute_s"],
+                              s["gather_s"])
+    # The summary records the model times with 9 fixed decimals — allow
+    # that quantization on top of a relative band.
+    tol = lambda v: 1e-6 * max(v, 1e-30) + 2e-9  # noqa: E731
+    mirror_ok = (abs(seq - s["model_seq_s"]) <= tol(seq)
+                 and abs(pipe - s["model_pipe_s"]) <= tol(pipe))
+    ok &= mirror_ok
+    print(f"pipeline mirror: python seq={seq:.3e} pipe={pipe:.3e} vs rust "
+          f"seq={s['model_seq_s']:.3e} pipe={s['model_pipe_s']:.3e}  "
+          f"{'PASS' if mirror_ok else 'FAIL'}")
+    # Shape: the model may never price the pipeline above the barrier
+    # path (it is min-clamped in both implementations).
+    shape_ok = s["model_pipe_s"] <= s["model_seq_s"] * (1 + 1e-9)
+    ok &= shape_ok
+    print(f"pipeline shape: model pipe/seq = "
+          f"{s['model_pipe_s'] / max(s['model_seq_s'], 1e-30):.3f}  "
+          f"{'PASS' if shape_ok else 'FAIL'} (need <= 1)")
+    # Reality: removing the per-product barrier must not make the same
+    # products grossly slower. CI boxes are noisy and the overlap window
+    # is small at smoke sizes, so only a >25% slowdown fails.
+    m_ratio = s["measured_pipe_s"] / max(s["measured_seq_s"], 1e-30)
+    meas_ok = m_ratio <= 1.25
+    ok &= meas_ok
+    print(f"pipeline measured: pipe/seq = {m_ratio:.3f} "
+          f"(B={s['products']}, nv={s.get('nv', '?')})  "
+          f"{'PASS' if meas_ok else 'FAIL'} (need <= 1.25)")
+    # Scale: measured vs model, same-universe band as the E5 cross-check
+    # (the model prices a V100 share unless calibrated for this host).
+    ratio = s["measured_seq_s"] / max(s["model_seq_s"], 1e-30)
+    in_band = 1.0 / 200.0 <= ratio <= 200.0
+    ok &= in_band
+    print(f"pipeline scale: measured/model(seq) = {ratio:.2f}  "
+          f"{'PASS' if in_band else 'FAIL'} (band [1/200, 200])")
+    return ok
+
+
 def find_row_files():
     """Locate the E1/E2 measured-row files written by the benches."""
     roots = (
@@ -621,8 +712,11 @@ def fit_cost_model():
 if __name__ == "__main__":
     if "--cross-check-only" in sys.argv:
         sys.exit(0 if cross_check_measured() else 1)
+    if "--pipeline-only" in sys.argv:
+        sys.exit(0 if cross_check_pipeline() else 1)
     if "--fit" in sys.argv:
         sys.exit(0 if fit_cost_model() else 1)
     main()
     cross_check_measured()
+    cross_check_pipeline()
     fit_cost_model()

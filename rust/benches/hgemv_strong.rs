@@ -45,11 +45,11 @@ fn measure(
     x: &[f64],
     y: &mut [f64],
     runs: usize,
-) -> (f64, Metrics) {
+) -> (f64, Metrics, f64) {
     match transport {
         #[cfg(unix)]
         "socket" => {
-            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions, SocketSession};
             let opts = SocketOptions {
                 worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
                 ..SocketOptions::default()
@@ -61,7 +61,20 @@ fn measure(
                 times.push(rep.measured);
                 metrics = rep.metrics;
             }
-            (trimmed_mean(&times), metrics)
+            // Session-side iteration latency: barrier-free submit/wait
+            // against resident workers — the CG-iteration round trip.
+            let mut session =
+                SocketSession::start(job, p, nv, opts).expect("session start");
+            let pid = session.submit(x, nv).expect("warmup submit");
+            session.wait(pid, y).expect("warmup wait");
+            let mut iters = Vec::new();
+            for _ in 0..runs {
+                let t0 = std::time::Instant::now();
+                let pid = session.submit(x, nv).expect("session submit");
+                session.wait(pid, y).expect("session wait");
+                iters.push(t0.elapsed().as_secs_f64());
+            }
+            (trimmed_mean(&times), metrics, trimmed_mean(&iters))
         }
         _ => {
             let _ = job;
@@ -77,7 +90,8 @@ fn measure(
                 times.push(rep.measured.unwrap());
                 metrics = rep.metrics;
             }
-            (trimmed_mean(&times), metrics)
+            let t = trimmed_mean(&times);
+            (t, metrics, t)
         }
     }
 }
@@ -112,8 +126,8 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
     let bt = h2opus::backend::backend_threads();
     println!("\n== {dim}D test set, strong scaling, N = {n}, transport = {transport} ==");
     println!(
-        "{:>4} {:>4} {:>13} {:>9} {:>13} {:>9} {:>9}",
-        "P", "nv", "virt (ms)", "virt spd", "meas (ms)", "meas spd", "eff (%)"
+        "{:>4} {:>4} {:>13} {:>9} {:>13} {:>9} {:>13} {:>9}",
+        "P", "nv", "virt (ms)", "virt spd", "meas (ms)", "meas spd", "iter (ms)", "eff (%)"
     );
     let mut rng = Prng::new(43);
     for &nv in nvs {
@@ -131,23 +145,25 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
                 times.push(rep.time);
             }
             let t = trimmed_mean(&times);
-            let (tm, mm) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
+            let (tm, mm, si) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
             let base = *t1.get_or_insert(t);
             let mbase = *m1.get_or_insert(tm);
             println!(
-                "{:>4} {:>4} {:>13.3} {:>9.2} {:>13.3} {:>9.2} {:>9.1}",
+                "{:>4} {:>4} {:>13.3} {:>9.2} {:>13.3} {:>9.2} {:>13.3} {:>9.1}",
                 p,
                 nv,
                 t * 1e3,
                 base / t,
                 tm * 1e3,
                 mbase / tm,
+                si * 1e3,
                 100.0 * base / t / p as f64
             );
             rows.push(format!(
                 "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
                  \"backend_threads\": {bt}, \
-                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}, \
+                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"session_iter_s\": {si:e}, \
+                 \"flops\": {}, \"launches\": {}, \"words\": {}, \
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes
             ));

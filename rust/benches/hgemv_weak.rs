@@ -40,7 +40,10 @@ fn transport() -> String {
 }
 
 /// Measured wall-clock (trimmed mean) + executed counters on the chosen
-/// transport.
+/// transport, plus the resident-session per-iteration latency (one
+/// pipelined `submit`/`wait` round trip — what a CG iteration pays; see
+/// `solve_with_session`). In-process there is no session, so the
+/// per-iteration latency is the measured product itself.
 fn measure(
     transport: &str,
     a: &h2opus::tree::H2Matrix,
@@ -50,11 +53,11 @@ fn measure(
     x: &[f64],
     y: &mut [f64],
     runs: usize,
-) -> (f64, Metrics) {
+) -> (f64, Metrics, f64) {
     match transport {
         #[cfg(unix)]
         "socket" => {
-            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions};
+            use h2opus::dist::transport::socket::{socket_hgemv, SocketOptions, SocketSession};
             let opts = SocketOptions {
                 worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
                 ..SocketOptions::default()
@@ -66,7 +69,20 @@ fn measure(
                 times.push(rep.measured);
                 metrics = rep.metrics;
             }
-            (trimmed_mean(&times), metrics)
+            // Session-side iteration latency: barrier-free submit/wait
+            // against resident workers (plan caches warm after round 0).
+            let mut session =
+                SocketSession::start(job, p, nv, opts).expect("session start");
+            let pid = session.submit(x, nv).expect("warmup submit");
+            session.wait(pid, y).expect("warmup wait");
+            let mut iters = Vec::new();
+            for _ in 0..runs {
+                let t0 = std::time::Instant::now();
+                let pid = session.submit(x, nv).expect("session submit");
+                session.wait(pid, y).expect("session wait");
+                iters.push(t0.elapsed().as_secs_f64());
+            }
+            (trimmed_mean(&times), metrics, trimmed_mean(&iters))
         }
         _ => {
             let _ = job;
@@ -82,7 +98,8 @@ fn measure(
                 times.push(rep.measured.unwrap());
                 metrics = rep.metrics;
             }
-            (trimmed_mean(&times), metrics)
+            let t = trimmed_mean(&times);
+            (t, metrics, t)
         }
     }
 }
@@ -91,8 +108,9 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
     let transport = transport();
     println!("\n== {dim}D exponential kernel, weak scaling, pN = {local_n}/rank, transport = {transport} ==");
     println!(
-        "{:>4} {:>9} {:>4} {:>13} {:>13} {:>14} {:>11} {:>12}",
-        "P", "N", "nv", "virt (ms)", "meas (ms)", "Gflop/s/rank", "eff (%)", "comm (KiB)"
+        "{:>4} {:>9} {:>4} {:>13} {:>13} {:>13} {:>14} {:>11} {:>12}",
+        "P", "N", "nv", "virt (ms)", "meas (ms)", "iter (ms)", "Gflop/s/rank", "eff (%)",
+        "comm (KiB)"
     );
     let runs = if tiny() { 3 } else { 5 };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -143,7 +161,7 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
             let t = trimmed_mean(&times);
             // Measured wall-clock of the real executor on the same
             // (matrix, P, nv) — the reality the virtual time models.
-            let (tm, mm) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
+            let (tm, mm, si) = measure(&transport, &a, &job, p, nv, &x, &mut y, runs);
             let rate = flops as f64 / t / 1e9 / p as f64;
             let eff = match base_rate[nvi] {
                 None => {
@@ -153,12 +171,13 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
                 Some(r0) => 100.0 * rate / r0,
             };
             println!(
-                "{:>4} {:>9} {:>4} {:>13.3} {:>13.3} {:>14.3} {:>11.1} {:>12.1}",
+                "{:>4} {:>9} {:>4} {:>13.3} {:>13.3} {:>13.3} {:>14.3} {:>11.1} {:>12.1}",
                 p,
                 n,
                 nv,
                 t * 1e3,
                 tm * 1e3,
+                si * 1e3,
                 rate,
                 eff,
                 comm as f64 / 1024.0
@@ -166,7 +185,8 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
             rows.push(format!(
                 "{{\"p\": {p}, \"n\": {n}, \"nv\": {nv}, \"cores\": {cores}, \"transport\": \"{transport}\", \
                  \"backend_threads\": {bt}, \
-                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"flops\": {}, \"launches\": {}, \"words\": {}, \
+                 \"virtual_s\": {t:e}, \"measured_s\": {tm:e}, \"session_iter_s\": {si:e}, \
+                 \"flops\": {}, \"launches\": {}, \"words\": {}, \
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes
             ));

@@ -1,0 +1,305 @@
+//! E10: pipelined, request-coalescing HGEMV serving throughput over the
+//! resident socket session (the paper's `num_vectors` batching, driven
+//! from concurrent clients instead of one wide caller).
+//!
+//! Axes:
+//! - **concurrency** — closed-loop client threads submitting
+//!   single-vector products back to back;
+//! - **coalesce cap** — the widest fused product the
+//!   [`SessionServer`] dispatcher will build;
+//! - **pipeline depth** — products in flight on the session (depth 1 +
+//!   cap 1 is the sequential barrier-per-product baseline).
+//!
+//! Every cell appends a row to `target/bench_e10.json` (`{concurrency,
+//! cap, depth, requests, reqs_per_s, p50_ms, p99_ms, achieved_nv}` —
+//! the achieved-width histogram shows how much coalescing actually
+//! happened). A raw-session ablation (same products, barriers vs
+//! pipeline) is priced against [`CostModel::pipeline`] and recorded in
+//! `target/pipeline_summary.json` for the model-check harness.
+//!
+//! `H2OPUS_BENCH_TINY=1` shrinks the matrix and the sweep for CI smoke.
+//! `H2OPUS_E10_ASSERT=1` (CI) additionally asserts the pipelined +
+//! coalesced server beats the sequential baseline by >= 1.5x at
+//! concurrency 8, and exits nonzero otherwise (skipped on single-core
+//! machines).
+
+#[cfg(unix)]
+use std::collections::BTreeMap;
+#[cfg(unix)]
+use std::path::PathBuf;
+#[cfg(unix)]
+use std::time::Instant;
+
+#[cfg(unix)]
+use h2opus::dist::hgemv::CostModel;
+#[cfg(unix)]
+use h2opus::dist::transport::server::{ServerOptions, SessionServer};
+#[cfg(unix)]
+use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+#[cfg(unix)]
+use h2opus::dist::transport::{JobKind, MatrixJob};
+#[cfg(unix)]
+use h2opus::util::Prng;
+
+#[cfg(unix)]
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
+#[cfg(unix)]
+fn worker_opts() -> SocketOptions {
+    SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        ..SocketOptions::default()
+    }
+}
+
+#[cfg(unix)]
+fn percentile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] * 1e3
+}
+
+#[cfg(unix)]
+struct Cell {
+    concurrency: usize,
+    cap: usize,
+    depth: usize,
+    requests: usize,
+    reqs_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    achieved_nv: BTreeMap<usize, u64>,
+}
+
+/// One sweep cell: a fresh server, `concurrency` closed-loop clients
+/// each issuing `per_client` single-vector products. Spawn/teardown is
+/// excluded from the timed section.
+#[cfg(unix)]
+fn run_cell(
+    job: &MatrixJob,
+    p: usize,
+    concurrency: usize,
+    cap: usize,
+    depth: usize,
+    per_client: usize,
+) -> Cell {
+    let server = SessionServer::start(
+        job,
+        p,
+        worker_opts(),
+        ServerOptions { max_coalesce: cap, pipeline_depth: depth },
+    )
+    .expect("server start");
+    let n = server.n();
+    // Warm the plan caches (width 1 and a fused width) off the clock.
+    let warm = vec![0.1; n];
+    server.submit(&warm).expect("warmup").wait().expect("warmup product");
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    let mut rng = Prng::new(4200 + c as u64);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let x = rng.normal_vec(n);
+                        let tr = Instant::now();
+                        let served = server.submit(&x).expect("submit").wait().expect("serve");
+                        lats.push(tr.elapsed().as_secs_f64());
+                        assert_eq!(served.y.len(), n);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread"));
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let requests = concurrency * per_client;
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    Cell {
+        concurrency,
+        cap,
+        depth,
+        requests,
+        reqs_per_s: requests as f64 / elapsed,
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p99_ms: percentile_ms(&latencies, 0.99),
+        achieved_nv: server.stats().nv_histogram,
+    }
+}
+
+/// Raw-session ablation: the same B products run barrier-per-product
+/// (`hgemv`) vs pipelined (`submit` all, `wait` all), next to the
+/// `CostModel::pipeline` prediction. Writes
+/// `target/pipeline_summary.json` for model_check.py.
+#[cfg(unix)]
+fn pipeline_ablation(job: &MatrixJob, p: usize, nv: usize, products: usize) {
+    let opts = worker_opts();
+    let mut session = SocketSession::start(job, p, nv, opts).expect("session start");
+    let n = session.n();
+    let mut rng = Prng::new(43);
+    let xs: Vec<Vec<f64>> = (0..products).map(|_| rng.normal_vec(n * nv)).collect();
+    let mut y = vec![0.0; n * nv];
+
+    // Warm-up product: plan caches on both sides, and the metrics that
+    // feed the model's compute term.
+    let rep = session.hgemv(&xs[0], &mut y).expect("warmup");
+    let cm = CostModel::host();
+    let compute_s =
+        rep.metrics.flops as f64 * cm.flop_time + rep.metrics.batch_launches as f64 * cm.t_launch;
+    let ship_s = cm.xfer(n * nv * 8);
+    let gather_s = cm.xfer(n * nv * 8);
+    let (model_seq, model_pipe) = cm.pipeline(products, ship_s, compute_s, gather_s);
+
+    let t0 = Instant::now();
+    for x in &xs {
+        session.hgemv(x, &mut y).expect("sequential product");
+    }
+    let seq = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let pids: Vec<u64> =
+        xs.iter().map(|x| session.submit(x, nv).expect("submit")).collect();
+    for pid in pids {
+        session.wait(pid, &mut y).expect("wait");
+    }
+    let pipe = t0.elapsed().as_secs_f64();
+
+    println!("\n-- raw-session pipeline ablation (P = {p}, nv = {nv}, B = {products}) --");
+    println!("  sequential (barrier/product): {:.3} ms", seq * 1e3);
+    println!("  pipelined  (submit/wait):     {:.3} ms ({:.2}x)", pipe * 1e3, seq / pipe);
+    println!(
+        "  CostModel::pipeline predicts: seq {:.3} ms, pipe {:.3} ms ({:.2}x)",
+        model_seq * 1e3,
+        model_pipe * 1e3,
+        model_seq / model_pipe
+    );
+
+    let summary = format!(
+        "{{\n  \"n\": {n},\n  \"ranks\": {p},\n  \"nv\": {nv},\n  \"products\": {products},\n  \
+         \"ship_s\": {ship_s:.12},\n  \"compute_s\": {compute_s:.12},\n  \
+         \"gather_s\": {gather_s:.12},\n  \
+         \"measured_seq_s\": {seq:.9},\n  \"measured_pipe_s\": {pipe:.9},\n  \
+         \"model_seq_s\": {model_seq:.9},\n  \"model_pipe_s\": {model_pipe:.9}\n}}\n"
+    );
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/pipeline_summary.json", &summary).expect("writing pipeline summary");
+    println!("  summary written: target/pipeline_summary.json");
+}
+
+#[cfg(unix)]
+fn main() {
+    println!("E10 — pipelined, request-coalescing HGEMV serving (socket session)");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (side, per_client) = if tiny() { (16usize, 6usize) } else { (64, 20) };
+    let job = MatrixJob {
+        dim: 2,
+        n_side: side,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    };
+    let p = 2usize;
+    println!("N = {}, P = {p}, {cores} cores, {per_client} requests per client", side * side);
+
+    // (cap, depth): depth 1 + cap 1 is the sequential barrier-per-product
+    // baseline the speedup is measured against.
+    let configs: &[(usize, usize)] =
+        if tiny() { &[(1, 1), (16, 2)] } else { &[(1, 1), (4, 2), (16, 2)] };
+    let concurrency_axis: &[usize] = if tiny() { &[2, 8] } else { &[1, 2, 4, 8] };
+
+    let mut cells: Vec<Cell> = Vec::new();
+    println!(
+        "\n{:>11} {:>5} {:>6} {:>9} {:>10} {:>9} {:>9}  achieved nv",
+        "concurrency", "cap", "depth", "requests", "reqs/s", "p50 ms", "p99 ms"
+    );
+    for &(cap, depth) in configs {
+        for &c in concurrency_axis {
+            let cell = run_cell(&job, p, c, cap, depth, per_client);
+            let hist: String = cell
+                .achieved_nv
+                .iter()
+                .map(|(nv, count)| format!("{nv}:{count}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!(
+                "{:>11} {:>5} {:>6} {:>9} {:>10.1} {:>9.3} {:>9.3}  {hist}",
+                cell.concurrency,
+                cell.cap,
+                cell.depth,
+                cell.requests,
+                cell.reqs_per_s,
+                cell.p50_ms,
+                cell.p99_ms
+            );
+            cells.push(cell);
+        }
+    }
+
+    let rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            let hist: String = c
+                .achieved_nv
+                .iter()
+                .map(|(nv, count)| format!("\"{nv}\": {count}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!(
+                "{{\"concurrency\": {}, \"cap\": {}, \"depth\": {}, \"requests\": {}, \
+                 \"reqs_per_s\": {:.3}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+                 \"achieved_nv\": {{{hist}}}}}",
+                c.concurrency, c.cap, c.depth, c.requests, c.reqs_per_s, c.p50_ms, c.p99_ms
+            )
+        })
+        .collect();
+    std::fs::create_dir_all("target").ok();
+    let path = "target/bench_e10.json";
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing E10 rows");
+    println!("\nE10 rows written: {path}");
+
+    pipeline_ablation(&job, p, if tiny() { 2 } else { 4 }, 8);
+
+    if std::env::var("H2OPUS_E10_ASSERT").is_ok() {
+        if cores < 2 {
+            println!("E10 assert: SKIP (single-core machine)");
+            return;
+        }
+        let at = |cap: usize, depth: usize| {
+            cells
+                .iter()
+                .filter(|c| c.cap == cap && c.depth == depth)
+                .max_by_key(|c| c.concurrency)
+                .map(|c| c.reqs_per_s)
+                .expect("sweep covers the asserted configs")
+        };
+        let base = at(1, 1);
+        let piped = at(16, 2);
+        println!(
+            "E10 assert: sequential {base:.1} reqs/s vs pipelined+coalesced {piped:.1} reqs/s \
+             ({:.2}x, need >= 1.50x)",
+            piped / base
+        );
+        if piped < base * 1.5 {
+            println!("E10 assert: FAIL — serving pipeline did not clear 1.5x");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn main() {
+    println!("E10 requires the Unix-domain-socket transport; skipping on this platform");
+}

@@ -227,6 +227,12 @@ pub struct FractionalSolve {
     pub u: Vec<f64>,
     pub solve_time: f64,
     pub time_per_iteration: f64,
+    /// Mean session-side wall-clock per distributed product (submit →
+    /// collected), when the solve ran over a persistent socket session
+    /// ([`solve_with_session`]); `None` for the in-process solve. The
+    /// E1/E2 bench rows report it as the per-iteration latency of the
+    /// pipelined serving path.
+    pub session_product_s: Option<f64>,
 }
 
 /// Run the preconditioned Krylov solve (Fig. 13 right).
@@ -300,7 +306,7 @@ pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64
         u[perm[pos]] = u_perm[pos];
     }
     let tpi = solve_time / result.iterations.max(1) as f64;
-    FractionalSolve { result, u, solve_time, time_per_iteration: tpi }
+    FractionalSolve { result, u, solve_time, time_per_iteration: tpi, session_product_s: None }
 }
 
 /// Run the preconditioned Krylov solve with the H² product served by a
@@ -345,15 +351,29 @@ pub fn solve_with_session(
     let t = Timer::start();
     let d = &sys.d;
     let c = &sys.c;
+    let mut product_time = 0.0f64;
+    let mut product_count = 0u64;
     let mut apply = |x_perm: &[f64], y_perm: &mut [f64]| {
-        // y = h² (D + K + C) x, K applied by the live worker ranks.
-        session
-            .hgemv(x_perm, &mut kx_perm)
-            .expect("distributed session HGEMV failed mid-solve");
+        // y = h² (D + K + C) x, K applied by the live worker ranks over
+        // the pipelined submit/wait path: no per-product barrier, plans
+        // and workspaces reused from the session's per-width caches. CG's
+        // serial dependence (p_{k+1} needs iteration k's product) keeps
+        // the pipeline one deep, so the win here is the removed
+        // synchronization, not overlap; the sparse C·x below still runs
+        // while the workers compute.
+        let tp = std::time::Instant::now();
+        let pid = session
+            .submit(x_perm, 1)
+            .expect("distributed session submit failed mid-solve");
         for pos in 0..n {
             x_orig[perm[pos]] = x_perm[pos];
         }
         c.spmv(&x_orig, &mut cx_orig);
+        session
+            .wait(pid, &mut kx_perm)
+            .expect("distributed session HGEMV failed mid-solve");
+        product_time += tp.elapsed().as_secs_f64();
+        product_count += 1;
         for pos in 0..n {
             let orig = perm[pos];
             y_perm[pos] = h2half * (d[orig] * x_perm[pos] + kx_perm[pos] + cx_orig[orig]);
@@ -395,7 +415,12 @@ pub fn solve_with_session(
         u[perm[pos]] = u_perm[pos];
     }
     let tpi = solve_time / result.iterations.max(1) as f64;
-    FractionalSolve { result, u, solve_time, time_per_iteration: tpi }
+    let session_product_s = if product_count > 0 {
+        Some(product_time / product_count as f64)
+    } else {
+        None
+    };
+    FractionalSolve { result, u, solve_time, time_per_iteration: tpi, session_product_s }
 }
 
 #[cfg(test)]

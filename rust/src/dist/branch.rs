@@ -370,6 +370,27 @@ impl BranchWorkspace {
         self.y_pad.fill(0.0);
     }
 
+    /// Zero only the buffers `run_branch` actually accumulates into,
+    /// skipping those it provably rewrites in full before reading:
+    /// `x_pad` (overwritten by the `Input` copy / tail-zeroing
+    /// [`fill_branch_input`]), the leaf x̂ level (own slots overwritten by
+    /// the accumulate:false leaf upsweep, halo slots by the
+    /// `copy_from_slice` x̂ receives) and `parent` (overwritten by the
+    /// `Parent` message copy). The upper x̂ levels, ŷ and `y_pad` all
+    /// accumulate and must start at zero. Bitwise identical to
+    /// [`BranchWorkspace::clear`] for any complete product; the skipped
+    /// fills are the two O(N/P·nv) ones.
+    pub fn clear_accumulators(&mut self) {
+        let depth = self.xhat.len() - 1;
+        for l in &mut self.xhat[..depth] {
+            l.fill(0.0);
+        }
+        for l in &mut self.yhat {
+            l.fill(0.0);
+        }
+        self.y_pad.fill(0.0);
+    }
+
     /// Total allocated bytes — the quantity the O(N/P) memory regression
     /// test bounds by `serial/P +` [`BranchPlan::halo_bytes`].
     pub fn memory_bytes(&self) -> usize {
@@ -398,13 +419,18 @@ pub fn fill_input_rows(
     x_pad: &mut [f64],
 ) {
     let depth = tree.depth;
-    x_pad.fill(0.0);
+    // Per-slot tail zeroing instead of a full upfront fill: the copied
+    // rows overwrite their prefix anyway, so only the padding rows
+    // `rows..m_pad` of each slot need clearing — bitwise identical,
+    // and the O(N/P·nv) fill drops off the per-product critical path.
     let mut slot = 0usize;
     for j in leaf_range.chain(xpad_halo.iter().map(|&j| j as usize)) {
         let node = tree.node(depth, j);
         let rows = node.size();
         let src = &x[node.start * nv..(node.start + rows) * nv];
-        x_pad[slot * m_pad * nv..slot * m_pad * nv + rows * nv].copy_from_slice(src);
+        let dst = &mut x_pad[slot * m_pad * nv..(slot + 1) * m_pad * nv];
+        dst[..rows * nv].copy_from_slice(src);
+        dst[rows * nv..].fill(0.0);
         slot += 1;
     }
 }

@@ -105,6 +105,40 @@ impl CostModel {
         self.t_launch + flops * self.flop_time + 8.0 * words * self.byte_time
     }
 
+    /// Virtual time of moving `bytes` over the interconnect as one
+    /// message (launch latency plus the bandwidth term).
+    pub fn xfer(&self, bytes: usize) -> f64 {
+        self.t_launch + bytes as f64 * self.byte_time
+    }
+
+    /// Price a product pipeline over the resident socket session (the
+    /// E10 serving path): each product ships O(N/P) `Input` frames
+    /// (`ship_s`), computes on the workers (`compute_s`) and pays the
+    /// coordinator's top share plus the `Output` gather (`gather_s`).
+    /// Sequential dispatch pays the full sum per product; the pipelined
+    /// path overlaps shipping/gathering of adjacent products with worker
+    /// compute, so each steady-state step costs the *larger* of the
+    /// worker stage and the coordinator stage. Returns `(t_sequential,
+    /// t_pipelined)` for `products` products — the gap between the two
+    /// is the overlap the pipeline is predicted to hide, which
+    /// `model_check.py` cross-checks against the measured E10 rows.
+    pub fn pipeline(
+        &self,
+        products: usize,
+        ship_s: f64,
+        compute_s: f64,
+        gather_s: f64,
+    ) -> (f64, f64) {
+        if products == 0 {
+            return (0.0, 0.0);
+        }
+        let b = products as f64;
+        let seq = b * (ship_s + compute_s + gather_s);
+        let steady = compute_s.max(ship_s + gather_s);
+        let pipe = ship_s + b * steady + gather_s;
+        (seq, pipe.min(seq))
+    }
+
     /// The model the schedule prices with on *this* host: the calibration
     /// file named by the `H2OPUS_COST_CALIBRATION` environment variable
     /// (written by `python/tests/model_check.py --fit` from measured E1/E2

@@ -162,8 +162,11 @@ pub(crate) enum YSink<'a> {
     /// Write into this disjoint slice of the shared output, whose first
     /// row is the given base row (in-process transport).
     Slice(&'a mut [f64], usize),
-    /// Ship them to the master as an `Output` message (process ranks).
-    Send,
+    /// Ship them to the master as an `Output` message tagged with this
+    /// wire product id (process ranks; see
+    /// `transport::socket`'s pipelined framing — the in-process
+    /// transport never constructs this variant).
+    Send(u32),
 }
 
 /// What the threaded execution hands back to the virtual-time scheduler.
@@ -336,7 +339,7 @@ pub(crate) fn run_branch<E: Endpoint>(
         YSink::Slice(chunk, base_row) => {
             unpad_branch_output(sm, bp, &bw.y_pad, chunk, base_row);
         }
-        YSink::Send => {
+        YSink::Send(product) => {
             let base_row = sm.tree.node(depth, bp.leaf_range.start).start;
             let end_row = if bp.leaf_range.end == (1usize << depth) {
                 sm.n()
@@ -346,7 +349,7 @@ pub(crate) fn run_branch<E: Endpoint>(
             let mut rows = vec![0.0; (end_row - base_row) * nv];
             unpad_branch_output(sm, bp, &bw.y_pad, &mut rows, base_row);
             metrics.send(rows.len() * 8);
-            ep.send(p, Message::new(MsgKind::Output, 0, r, rows))?;
+            ep.send(p, Message::new(MsgKind::Output, product as usize, r, rows))?;
         }
     }
     trace.push(PH_OUTPUT, t, now(&t0));

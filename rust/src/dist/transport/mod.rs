@@ -27,6 +27,8 @@
 pub mod inproc;
 pub mod recording;
 #[cfg(unix)]
+pub mod server;
+#[cfg(unix)]
 pub mod socket;
 
 use std::collections::VecDeque;

@@ -35,17 +35,49 @@
 //! 1. handshake — each worker sends `Hello{rank}` and parks;
 //! 2. per product: the coordinator ships every worker its branch-local
 //!    `Input` block (own + dense-halo leaf rows only: O(N/P) per rank);
-//!    a barrier releases the measured wall-clock; the plan-driven `Xhat`
-//!    exchanges run between workers, the level-C `Gather` goes to the
-//!    coordinator (which runs the replicated top subtree of its
-//!    *top-only shard* over a top-only workspace), the `Parent` scatter
-//!    comes back; each worker ships its `Output` rows, its f64-encoded
-//!    `Metrics` (including its shard's
-//!    [`crate::metrics::Metrics::matrix_bytes`]) and optionally its
-//!    measured `Trace` stamps, then loops back to wait for the next
+//!    in the synchronous [`SocketSession::hgemv`] path a barrier releases
+//!    the measured wall-clock; the plan-driven `Xhat` exchanges run
+//!    between workers, the level-C `Gather` goes to the coordinator
+//!    (which runs the replicated top subtree of its *top-only shard* over
+//!    a top-only workspace), the `Parent` scatter comes back; each worker
+//!    ships its `Output` rows, its f64-encoded `Metrics` (including its
+//!    shard's [`crate::metrics::Metrics::matrix_bytes`]) and optionally
+//!    its measured `Trace` stamps, then loops back to wait for the next
 //!    `Input`;
 //! 3. dropping the session sends `Shutdown`; workers exit, the router
 //!    drains, children are reaped.
+//!
+//! # Pipelined products
+//!
+//! [`SocketSession::submit`] / [`SocketSession::wait`] run the same
+//! protocol *without* the per-product barrier, with several products in
+//! flight: product k+1's `Input` frames ship (and its worker upsweep
+//! starts) while product k's downsweep and `Output` gather are still
+//! running. Correctness needs no product ids on the interior traffic:
+//! delivery is FIFO per (source, destination) pair, workers execute
+//! products strictly in order, and the coordinator consumes exactly P
+//! `Gather` frames per product — so the n-th per-source batch of every
+//! tag belongs to the n-th product, with early arrivals absorbed by the
+//! [`Mailbox`]. Cross-source interleavings are bounded by causality: a
+//! rank reaches product k+1's sends only after receiving its `Parent`
+//! for product k, which the coordinator releases only after *every*
+//! rank's product-k `Gather` — and each hub reader enqueues one source's
+//! frames in order into per-destination FIFO queues, so by the time any
+//! product-k+1 interior frame is enqueued to a destination, all
+//! product-k frames for it already were. Product ids *are* carried on
+//! the boundary traffic (`Input`, `Output`, `Metrics`, `Trace`) for
+//! attribution and desync detection.
+//!
+//! The `Input` frame's `level` word packs the per-product wire flags:
+//! bit 0 = record a measured trace, bit 1 = pipelined (skip the worker
+//! barrier), bits 2..12 = the product's column count nv (the serving
+//! layer coalesces concurrent requests into one wide product), bits
+//! 12..32 = the product id mod 2^20. `Output`/`Metrics`/`Trace` echo the
+//! wire product id in their `level`. Workers keep a per-nv cache of
+//! branch plans and double-buffered workspaces, so variable-width
+//! products pay plan construction once per distinct width and the
+//! workspace clear happens off the critical path (after the previous
+//! product's `Metrics` ships, while the coordinator is still gathering).
 //!
 //! A worker crash surfaces as an EOF on its hub connection; the reader
 //! thread converts it into a [`TransportError::Closed`] delivered to the
@@ -56,7 +88,7 @@
 //! src, dst, payload length) plus a raw f64 payload — the offline image
 //! vendors no serde/bincode; the format plays bincode's role.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
@@ -134,6 +166,59 @@ pub struct SocketReport {
     /// Measured Chrome trace (worker phase stamps + per-message events),
     /// when [`SocketOptions::measured_trace`].
     pub measured_trace_json: Option<String>,
+    /// Achieved width of this product (columns of the N×nv batch). Under
+    /// the request-coalescing [`super::server::SessionServer`] this is
+    /// how many concurrent single-vector submissions were fused into the
+    /// one product that produced this report.
+    pub coalesced_nv: u64,
+    /// Seconds this product spent queued/overlapped before collection:
+    /// for pipelined products, [`SocketSession::submit`] →
+    /// [`SocketSession::wait`]; the session server replaces it with the
+    /// mean time its coalesced requests waited for dispatch. Zero for the
+    /// synchronous [`SocketSession::hgemv`] path.
+    pub queue_wait_s: f64,
+}
+
+// ----------------------------------------------------------- wire flags
+
+/// nv travels in bits 2..12 of the `Input` level word.
+const NV_BITS: u32 = 10;
+/// The product id travels (mod 2^20) in bits 12..32.
+const PID_BITS: u32 = 20;
+/// Widest product expressible on the wire (and thus the coalescing cap).
+pub const MAX_WIRE_NV: usize = (1 << NV_BITS) - 1;
+
+/// The wire form of a product id: `Output`/`Metrics`/`Trace` echo it in
+/// their `level` word. 2^20 in-flight-distinguishable products is far
+/// beyond any real pipeline depth.
+fn wire_pid(pid: u64) -> u32 {
+    (pid & ((1 << PID_BITS) - 1)) as u32
+}
+
+/// Pack the per-product `Input` flags (see the module docs).
+fn pack_input_flags(trace: bool, pipelined: bool, nv: usize, pid: u64) -> usize {
+    debug_assert!((1..=MAX_WIRE_NV).contains(&nv));
+    usize::from(trace)
+        | usize::from(pipelined) << 1
+        | nv << 2
+        | (wire_pid(pid) as usize) << (2 + NV_BITS)
+}
+
+/// The decoded `Input` flags a worker acts on.
+struct InputFlags {
+    trace: bool,
+    pipelined: bool,
+    nv: usize,
+    pid: u32,
+}
+
+fn unpack_input_flags(level: u32) -> InputFlags {
+    InputFlags {
+        trace: level & 1 == 1,
+        pipelined: level & 2 == 2,
+        nv: ((level >> 2) & (MAX_WIRE_NV as u32)) as usize,
+        pid: level >> (2 + NV_BITS),
+    }
 }
 
 // ---------------------------------------------------------------- framing
@@ -271,14 +356,15 @@ fn metrics_to_payload(m: &Metrics, elapsed: f64) -> Vec<f64> {
         m.pad_waste as f64,
         m.gemm_words as f64,
         m.matrix_bytes as f64,
+        m.coalesced_nv as f64,
         elapsed,
     ]
 }
 
 fn metrics_from_payload(data: &[f64]) -> Result<(Metrics, f64), TransportError> {
-    if data.len() != 8 {
+    if data.len() != 9 {
         return Err(TransportError::Protocol(format!(
-            "metrics payload has {} values, expected 8",
+            "metrics payload has {} values, expected 9",
             data.len()
         )));
     }
@@ -290,7 +376,8 @@ fn metrics_from_payload(data: &[f64]) -> Result<(Metrics, f64), TransportError> 
     m.pad_waste = data[4] as u64;
     m.gemm_words = data[5] as u64;
     m.matrix_bytes = data[6] as u64;
-    Ok((m, data[7]))
+    m.coalesced_nv = data[7] as u64;
+    Ok((m, data[8]))
 }
 
 /// Encode (phase stamps + comm events) as flat 6-tuples:
@@ -354,12 +441,33 @@ fn trace_from_payload(
     Ok((tr, comm))
 }
 
+/// A worker's per-width serving state: the branch plan for that nv plus
+/// two workspaces used alternately, so the post-product clear of one
+/// workspace happens after its `Metrics` frame ships (while the
+/// coordinator is still gathering) instead of on the next product's
+/// critical path.
+struct ProductSlot {
+    bp: BranchPlan,
+    ws: [BranchWorkspace; 2],
+    flip: usize,
+}
+
+impl ProductSlot {
+    fn build(sm: &ShardedMatrix, ex: &ExchangePlan, nv: usize) -> Self {
+        let bp = BranchPlan::build(sm, ex, nv);
+        let ws = [BranchWorkspace::new(sm, &bp), BranchWorkspace::new(sm, &bp)];
+        ProductSlot { bp, ws, flip: 0 }
+    }
+}
+
 /// The body of the `h2opus worker` subcommand: one process rank of a
 /// socket session. Builds *only its shard* of the matrix
 /// ([`MatrixJob::build_branch`]; the coordinator sets the
 /// `H2OPUS_FORBID_FULL_MATRIX` guard, so a global build would abort the
 /// process), then serves products until the coordinator closes the
-/// session (`Shutdown` or EOF).
+/// session (`Shutdown` or EOF). Products of any width are served: plans
+/// and double-buffered workspaces are cached per distinct nv, seeded with
+/// the session's default width so the first product pays no plan build.
 pub fn run_worker(
     job: &MatrixJob,
     connect: &Path,
@@ -372,8 +480,8 @@ pub fn run_worker(
         .map_err(|e| TransportError::Protocol(e.to_string()))?;
     let d = sm.decomp;
     let ex = ExchangePlan::build_from_structure(&structure, d);
-    let bp = BranchPlan::build(&sm, &ex, nv);
-    let mut bw = BranchWorkspace::new(&sm, &bp);
+    let mut slots: HashMap<usize, ProductSlot> = HashMap::new();
+    slots.insert(nv, ProductSlot::build(&sm, &ex, nv));
     let backend = crate::backend::native::NativeBackend;
 
     let mut ep = WorkerEndpoint::connect(connect, rank, p)?;
@@ -385,6 +493,16 @@ pub fn run_worker(
             std::process::exit(3);
         }
     }
+    // Test hook: crash on receiving a specific product's Input
+    // ("<pid>" or "<pid>@<rank>"), so mid-pipeline failure handling —
+    // every in-flight product erroring out, no hang — can be asserted.
+    let crash_on_product: Option<(u32, Option<usize>)> =
+        std::env::var("H2OPUS_TEST_CRASH_ON_PRODUCT").ok().and_then(|v| {
+            match v.split_once('@') {
+                Some((pid, rk)) => Some((pid.parse().ok()?, Some(rk.parse().ok()?))),
+                None => Some((v.parse().ok()?, None)),
+            }
+        });
     // Test hook: deliberately construct the global matrix, proving the
     // coordinator's guard turns a full build inside a worker into a
     // session failure rather than silent O(N) memory.
@@ -401,42 +519,89 @@ pub fn run_worker(
             Err(TransportError::Closed(_)) => return Ok(()),
             Err(e) => return Err(e),
         };
+        let flags = unpack_input_flags(input.tag.level);
+        if let Some((pid, at_rank)) = crash_on_product {
+            if pid == flags.pid && at_rank.unwrap_or(rank) == rank {
+                std::process::exit(3);
+            }
+        }
+        if flags.nv == 0 {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank}: input frame for product {} declares nv = 0",
+                flags.pid
+            )));
+        }
+        let slot =
+            slots.entry(flags.nv).or_insert_with(|| ProductSlot::build(&sm, &ex, flags.nv));
+        let bp = &slot.bp;
+        let bw = &mut slot.ws[slot.flip];
         if input.data.len() != bw.x_pad.len() {
             return Err(TransportError::Protocol(format!(
-                "rank {rank}: input block has {} values, branch plan expects {}",
+                "rank {rank}: input block for product {} (nv = {}) has {} values, branch \
+                 plan expects {}",
+                flags.pid,
+                flags.nv,
                 input.data.len(),
                 bw.x_pad.len()
             )));
         }
-        // The phase functions accumulate; a session-persistent workspace
-        // must start each product from zero.
-        bw.clear();
+        // The workspace's accumulators were zeroed after its previous
+        // product (or at allocation); x_pad is fully overwritten here.
         bw.x_pad.copy_from_slice(&input.data);
-        // The message's level field carries the session flags (bit 0:
-        // record a measured trace).
-        let record = input.tag.level & 1 == 1;
 
-        // The measured section starts at the barrier release everywhere.
-        ep.barrier()?;
+        // Synchronous products measure from a collective barrier release;
+        // pipelined ones skip it — overlap is the whole point.
+        if !flags.pipelined {
+            ep.barrier()?;
+        }
         let t0 = Instant::now();
-        let mut rec = if record {
+        let mut rec = if flags.trace {
             Recording::new(&mut ep, t0)
         } else {
             Recording::passthrough(&mut ep, t0)
         };
-        let (mut metrics, tr) =
-            run_branch(&sm, &backend, &ex, &bp, &mut bw, &mut rec, &mut mb, None, YSink::Send, t0)?;
+        let (mut metrics, tr) = run_branch(
+            &sm,
+            &backend,
+            &ex,
+            bp,
+            bw,
+            &mut rec,
+            &mut mb,
+            None,
+            YSink::Send(flags.pid),
+            t0,
+        )?;
         let elapsed = t0.elapsed().as_secs_f64();
         metrics.matrix_bytes = sm.matrix_bytes() as u64;
+        metrics.coalesced_nv = flags.nv as u64;
         let comm = rec.into_events();
 
         ep.send(
             p,
-            Message::new(MsgKind::Metrics, 0, rank, metrics_to_payload(&metrics, elapsed)),
+            Message::new(
+                MsgKind::Metrics,
+                flags.pid as usize,
+                rank,
+                metrics_to_payload(&metrics, elapsed),
+            ),
         )?;
-        if record {
-            ep.send(p, Message::new(MsgKind::Trace, 0, rank, trace_to_payload(&tr, &comm)))?;
+        if flags.trace {
+            ep.send(
+                p,
+                Message::new(
+                    MsgKind::Trace,
+                    flags.pid as usize,
+                    rank,
+                    trace_to_payload(&tr, &comm),
+                ),
+            )?;
         }
+        // Double-buffer flip: zero the just-used workspace now — the
+        // coordinator is busy collecting this product — so the next
+        // product on this width starts on the other, already-clean one.
+        bw.clear_accumulators();
+        slot.flip ^= 1;
     }
 }
 
@@ -545,9 +710,10 @@ pub struct SocketSession {
     /// Top-only shard: the replicated top subtree + the (full) cluster
     /// tree — the coordinator never holds branch matrix data.
     sm_top: ShardedMatrix,
-    /// Precomputed top marshaling offsets (once per session).
-    top_plan: TopPlan,
-    /// Per-rank structure-only input layouts.
+    /// Top marshaling offsets, cached per product width (the serving
+    /// layer runs variable-nv products; each width's plan is built once).
+    top_plans: HashMap<usize, TopPlan>,
+    /// Per-rank structure-only input layouts (nv-independent).
     io: Vec<BranchIo>,
     hub: Option<HubEndpoint>,
     mb: Mailbox,
@@ -555,6 +721,21 @@ pub struct SocketSession {
     router_threads: Vec<std::thread::JoinHandle<()>>,
     _sock_guard: SocketFileGuard,
     products: u64,
+    /// Submitted-but-uncollected pipelined products, in submission order.
+    inflight: VecDeque<InFlight>,
+}
+
+/// One submitted pipelined product awaiting [`SocketSession::wait`].
+struct InFlight {
+    pid: u64,
+    nv: usize,
+    submitted: Instant,
+}
+
+fn closed_session() -> TransportError {
+    TransportError::Closed(
+        "session shut down (a previous product failed or the session was closed)".into(),
+    )
 }
 
 impl SocketSession {
@@ -566,10 +747,16 @@ impl SocketSession {
         nv: usize,
         opts: SocketOptions,
     ) -> Result<SocketSession, TransportError> {
+        if nv == 0 || nv > MAX_WIRE_NV {
+            return Err(TransportError::Protocol(format!(
+                "session nv must be in 1..={MAX_WIRE_NV} (got {nv})"
+            )));
+        }
         let (sm_top, structure) =
             job.build_top(p).map_err(|e| TransportError::Protocol(e.to_string()))?;
         let d = sm_top.decomp;
-        let top_plan = TopPlan::build(&sm_top, nv);
+        let mut top_plans = HashMap::new();
+        top_plans.insert(nv, TopPlan::build(&sm_top, nv));
         let io: Vec<BranchIo> =
             (0..p).map(|r| BranchIo::build(&structure.dense, &d, r)).collect();
 
@@ -744,7 +931,7 @@ impl SocketSession {
             nv,
             opts,
             sm_top,
-            top_plan,
+            top_plans,
             io,
             hub: Some(hub),
             mb: Mailbox::new(),
@@ -752,6 +939,7 @@ impl SocketSession {
             router_threads,
             _sock_guard: sock_guard,
             products: 0,
+            inflight: VecDeque::new(),
         })
     }
 
@@ -772,22 +960,37 @@ impl SocketSession {
         &self.sm_top.tree
     }
 
-    /// Products run so far (observability: a solver session should show
-    /// one spawn and many products).
+    /// Products started so far (observability: a solver session should
+    /// show one spawn and many products).
     pub fn products(&self) -> u64 {
         self.products
     }
 
-    /// One distributed product y = A·x over the live worker ranks.
-    /// `x`/`y` are N × nv in the permuted ordering, as in
+    /// The session's default product width (what [`SocketSession::hgemv`]
+    /// expects; [`SocketSession::submit`] takes any width up to
+    /// [`MAX_WIRE_NV`]).
+    pub fn nv(&self) -> usize {
+        self.nv
+    }
+
+    /// Number of submitted pipelined products not yet collected.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// One synchronous distributed product y = A·x over the live worker
+    /// ranks. `x`/`y` are N × nv in the permuted ordering, as in
     /// [`crate::matvec::hgemv`]; the result is bitwise identical to the
-    /// serial product.
+    /// serial product. A barrier separates input shipping from the
+    /// measured section, so [`SocketReport::measured`] is a clean
+    /// compute+exchange wall-clock.
     ///
     /// A mid-product transport error **poisons the session**: frames of
     /// the failed product may still be in flight, so a retry could
     /// silently consume stale `Output` rows. The poisoned session
     /// broadcasts a best-effort `Shutdown`, refuses further products
-    /// (`Closed`), and cleans up on drop.
+    /// (`Closed`), and cleans up on drop; the returned error names the
+    /// poisoned product id and any ranks the `Shutdown` could not reach.
     pub fn hgemv(&mut self, x: &[f64], y: &mut [f64]) -> Result<SocketReport, TransportError> {
         let n = self.sm_top.n();
         let nv = self.nv;
@@ -799,49 +1002,186 @@ impl SocketSession {
                 y.len()
             )));
         }
+        if !self.inflight.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "hgemv cannot interleave with {} in-flight pipelined products — wait() on \
+                 them first",
+                self.inflight.len()
+            )));
+        }
+        let pid = self.products;
         match self.product(x, y) {
             Ok(rep) => Ok(rep),
-            Err(e) => {
-                if let Some(hub) = self.hub.as_mut() {
-                    for r in 0..self.p {
-                        let _ = hub
-                            .send(r, Message::new(MsgKind::Shutdown, 0, self.p, Vec::new()));
-                    }
-                }
-                self.hub = None;
-                Err(e)
-            }
+            Err(e) => Err(self.poison(pid, e)),
         }
     }
 
+    /// Queue one pipelined product y = A·x of any width `nv` (1 ..=
+    /// [`MAX_WIRE_NV`]) and return its product id. The input blocks ship
+    /// immediately — overlapping whatever earlier products the workers
+    /// are still computing — and the product runs without a barrier.
+    /// Collect results in submission order with [`SocketSession::wait`];
+    /// results are bitwise identical to the synchronous path.
+    ///
+    /// A failed submit poisons the session like a failed product.
+    pub fn submit(&mut self, x: &[f64], nv: usize) -> Result<u64, TransportError> {
+        let n = self.sm_top.n();
+        if nv == 0 || nv > MAX_WIRE_NV {
+            return Err(TransportError::Protocol(format!(
+                "product nv must be in 1..={MAX_WIRE_NV} (got {nv})"
+            )));
+        }
+        if x.len() != n * nv {
+            return Err(TransportError::Protocol(format!(
+                "x must be N*nv = {} values (got {})",
+                n * nv,
+                x.len()
+            )));
+        }
+        let pid = self.products;
+        match self.ship(x, nv, pid, true) {
+            Ok(()) => {
+                self.products += 1;
+                self.inflight.push_back(InFlight { pid, nv, submitted: Instant::now() });
+                Ok(pid)
+            }
+            Err(e) => Err(self.poison(pid, e)),
+        }
+    }
+
+    /// Collect the pipelined product `pid` into `y` (N × nv of that
+    /// submission). Products complete in submission order: `pid` must be
+    /// the oldest in-flight product. Runs the coordinator's replicated
+    /// top subtree for the product, gathers the `Output` rows (matched by
+    /// wire product id) and the per-rank `Metrics`/`Trace` frames.
+    ///
+    /// A transport error poisons the session — *every* other in-flight
+    /// product is lost and subsequent calls return `Closed`; the error
+    /// names the poisoned product id.
+    pub fn wait(&mut self, pid: u64, y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        let (nv, submitted) = match self.inflight.front() {
+            Some(f) if f.pid == pid => (f.nv, f.submitted),
+            Some(f) => {
+                return Err(TransportError::Protocol(format!(
+                    "products complete in submission order: waiting on {pid} but product {} \
+                     is at the head of the pipeline",
+                    f.pid
+                )))
+            }
+            None => {
+                return Err(TransportError::Protocol(format!(
+                    "product {pid} is not in flight"
+                )))
+            }
+        };
+        let n = self.sm_top.n();
+        if y.len() != n * nv {
+            return Err(TransportError::Protocol(format!(
+                "y must be N*nv = {} values for product {pid} (got {})",
+                n * nv,
+                y.len()
+            )));
+        }
+        let queue_wait_s = submitted.elapsed().as_secs_f64();
+        match self.finish(pid, nv, y) {
+            Ok(mut rep) => {
+                self.inflight.pop_front();
+                rep.queue_wait_s = queue_wait_s;
+                Ok(rep)
+            }
+            Err(e) => Err(self.poison(pid, e)),
+        }
+    }
+
+    /// Poison the session after a failed product: broadcast a best-effort
+    /// `Shutdown`, drop the hub (refusing further products) and return an
+    /// error naming the poisoned product id — and, per satellite of the
+    /// failure path, any ranks the `Shutdown` itself could not reach.
+    fn poison(&mut self, pid: u64, e: TransportError) -> TransportError {
+        let mut unreached: Vec<String> = Vec::new();
+        if let Some(hub) = self.hub.as_mut() {
+            for r in 0..self.p {
+                if let Err(se) =
+                    hub.send(r, Message::new(MsgKind::Shutdown, 0, self.p, Vec::new()))
+                {
+                    unreached.push(format!("worker {r}: {se}"));
+                }
+            }
+        }
+        self.hub = None;
+        let lost = self.inflight.len();
+        self.inflight.clear();
+        let mut msg = format!("product {pid} poisoned the session: {e}");
+        if lost > 1 {
+            msg.push_str(&format!(" ({} in-flight products lost)", lost));
+        }
+        if !unreached.is_empty() {
+            msg.push_str(&format!(
+                "; shutdown undeliverable to: {}",
+                unreached.join(", ")
+            ));
+        }
+        match e {
+            TransportError::Closed(_) => TransportError::Closed(msg),
+            TransportError::Io(_) => TransportError::Io(msg),
+            TransportError::Protocol(_) => TransportError::Protocol(msg),
+            TransportError::Timeout(_) => TransportError::Timeout(msg),
+        }
+    }
+
+    /// Ship every worker its branch-local input block (O(N/P) rows each)
+    /// for one product; the frame's level word packs the wire flags.
+    fn ship(
+        &mut self,
+        x: &[f64],
+        nv: usize,
+        pid: u64,
+        pipelined: bool,
+    ) -> Result<(), TransportError> {
+        let m_pad = self.sm_top.leaf_dim;
+        let flags = pack_input_flags(self.opts.measured_trace, pipelined, nv, pid);
+        let hub = self.hub.as_mut().ok_or_else(closed_session)?;
+        for (r, layout) in self.io.iter().enumerate() {
+            let mut buf = vec![0.0; layout.x_words(m_pad, nv)];
+            fill_io_input(&self.sm_top.tree, layout, m_pad, nv, x, &mut buf);
+            hub.send(r, Message::new(MsgKind::Input, flags, self.p, buf))?;
+        }
+        Ok(())
+    }
+
+    /// The synchronous product body: ship, barrier, collect.
     fn product(&mut self, x: &[f64], y: &mut [f64]) -> Result<SocketReport, TransportError> {
-        let Self { p, nv, opts, sm_top, top_plan, io, hub, mb, products, .. } = self;
-        let (p, nv) = (*p, *nv);
-        let hub = hub.as_mut().ok_or_else(|| {
-            TransportError::Closed(
-                "session shut down (a previous product failed or the session was closed)".into(),
-            )
-        })?;
+        let nv = self.nv;
+        let pid = self.products;
+        self.ship(x, nv, pid, false)?;
+        self.products += 1;
+        // The measured section starts at the barrier release on every
+        // side.
+        self.hub.as_mut().ok_or_else(closed_session)?.barrier()?;
+        self.finish(pid, nv, y)
+    }
+
+    /// Run the coordinator's share of product `pid` and collect its
+    /// results: the replicated top subtree (over the per-width cached
+    /// [`TopPlan`] and an O(P) workspace), the `Output` rows and the
+    /// per-rank `Metrics`/`Trace` frames — all matched by wire product
+    /// id, so a desynchronized worker surfaces as a timeout or a protocol
+    /// error instead of silently corrupting `y`.
+    fn finish(
+        &mut self,
+        pid: u64,
+        nv: usize,
+        y: &mut [f64],
+    ) -> Result<SocketReport, TransportError> {
+        let Self { p, opts, sm_top, top_plans, io, hub, mb, .. } = self;
+        let p = *p;
+        let hub = hub.as_mut().ok_or_else(closed_session)?;
+        let wire = wire_pid(pid);
         let d = sm_top.decomp;
         let c = d.c_level;
         let n = sm_top.n();
         let backend = crate::backend::native::NativeBackend;
-        let m_pad = sm_top.leaf_dim;
         let depth = sm_top.depth();
-
-        // Ship every worker its branch-local input block (O(N/P) rows
-        // each); the level field carries the session flags (bit 0:
-        // record a trace).
-        let flags = usize::from(opts.measured_trace);
-        for (r, layout) in io.iter().enumerate() {
-            let mut buf = vec![0.0; layout.x_words(m_pad, nv)];
-            fill_io_input(&sm_top.tree, layout, m_pad, nv, x, &mut buf);
-            hub.send(r, Message::new(MsgKind::Input, flags, p, buf))?;
-        }
-
-        // The measured section starts at the barrier release on every
-        // side.
-        hub.barrier()?;
         let t0 = Instant::now();
 
         // The replicated top subtree runs on the coordinator, over its
@@ -850,6 +1190,8 @@ impl SocketSession {
         let mut master_trace = RankTrace::default();
         let mut master_comm: Vec<CommEvent> = Vec::new();
         if c > 0 {
+            let top_plan =
+                top_plans.entry(nv).or_insert_with(|| TopPlan::build(sm_top, nv));
             let mut top_ws =
                 HgemvWorkspace::top_only_dims(depth, &sm_top.u_ranks, &sm_top.v_ranks, nv, c);
             let mut rec = if opts.measured_trace {
@@ -864,14 +1206,20 @@ impl SocketSession {
             master_trace = tr;
             master_comm = rec.into_events();
         }
+        master_metrics.coalesced_nv = nv as u64;
 
-        // Collect the output rows; the measured clock stops at the last.
+        // Collect this product's output rows (matched by wire product
+        // id — a pipelined successor's early output stays stashed); the
+        // measured clock stops at the last.
         let mut got_output = vec![false; p];
         for _ in 0..p {
-            let msg = mb.recv_kind(hub, MsgKind::Output)?;
+            let msg = mb
+                .recv_where(hub, |t| t.kind == MsgKind::Output && t.level == wire)?;
             let r = msg.tag.src as usize;
             if r >= p || got_output[r] {
-                return Err(TransportError::Protocol(format!("unexpected output from {r}")));
+                return Err(TransportError::Protocol(format!(
+                    "unexpected output from {r} for product {pid}"
+                )));
             }
             got_output[r] = true;
             let leaf_range = &io[r].leaf_range;
@@ -896,7 +1244,8 @@ impl SocketSession {
         let mut rank_metrics: Vec<Metrics> = (0..p).map(|_| Metrics::new()).collect();
         let mut per_rank = vec![0.0; p];
         for _ in 0..p {
-            let msg = mb.recv_kind(hub, MsgKind::Metrics)?;
+            let msg = mb
+                .recv_where(hub, |t| t.kind == MsgKind::Metrics && t.level == wire)?;
             let r = msg.tag.src as usize;
             if r >= p {
                 return Err(TransportError::Protocol(format!(
@@ -910,7 +1259,8 @@ impl SocketSession {
         let measured_trace_json = if opts.measured_trace {
             let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
             for _ in 0..p {
-                let msg = mb.recv_kind(hub, MsgKind::Trace)?;
+                let msg = mb
+                    .recv_where(hub, |t| t.kind == MsgKind::Trace && t.level == wire)?;
                 let r = msg.tag.src as usize;
                 let (tr, comm) = trace_from_payload(&msg.data, r)?;
                 parts.push((r, tr, comm));
@@ -924,9 +1274,16 @@ impl SocketSession {
 
         let mut metrics = Metrics::merge_all(rank_metrics.iter());
         metrics.merge(&master_metrics);
-        *products += 1;
+        let coalesced_nv = metrics.coalesced_nv;
 
-        Ok(SocketReport { measured, per_rank, metrics, measured_trace_json })
+        Ok(SocketReport {
+            measured,
+            per_rank,
+            metrics,
+            measured_trace_json,
+            coalesced_nv,
+            queue_wait_s: 0.0,
+        })
     }
 }
 

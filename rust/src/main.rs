@@ -255,6 +255,9 @@ fn cmd_solve(flags: &HashMap<String, String>) {
         sol.time_per_iteration * 1e3,
         sol.result.converged
     );
+    if let Some(s) = sol.session_product_s {
+        println!("session product latency: {:.3} ms/iteration (pipelined submit/wait)", s * 1e3);
+    }
 }
 
 /// CG over a persistent socket session: the kernel matrix is sharded

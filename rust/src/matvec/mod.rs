@@ -134,24 +134,32 @@ pub fn hgemv(
 }
 
 /// Shared entry bookkeeping: gather the input into the padded leaf buffer
-/// and zero the coefficient trees and padded output.
+/// and zero the accumulator buffers. Buffers that the sweep provably
+/// rewrites in full before reading are *not* cleared: the leaf x̂ level
+/// (overwritten by the accumulate:false leaf upsweep) and the copied rows
+/// of `x_pad` (only the padding tails are zeroed by [`pad_leaf_input`]) —
+/// bitwise identical to the old full clears, cheaper by the two largest
+/// fills on the critical path.
 pub fn hgemv_prologue(a: &H2Matrix, x: &[f64], ws: &mut HgemvWorkspace) {
     pad_leaf_input(a, x, &mut ws.x_pad, ws.nv);
-    ws.xhat.clear();
+    ws.xhat.clear_above_leaf();
     ws.yhat.clear();
     ws.y_pad.fill(0.0);
 }
 
 /// Copy the permuted N×nv input into the zero-padded per-leaf buffer.
+/// Only the per-leaf padding tails (rows `node.size()..m_pad`) are
+/// zeroed — the copied rows overwrite their slots anyway, so the result
+/// is bitwise identical to a full `fill(0.0)` followed by the copies.
 pub fn pad_leaf_input(a: &H2Matrix, x: &[f64], x_pad: &mut [f64], nv: usize) {
     let depth = a.depth();
     let m_pad = a.u.leaf_dim;
-    x_pad.fill(0.0);
     for (j, node) in a.tree.level(depth).iter().enumerate() {
         let rows = node.size();
         let src = &x[node.start * nv..(node.start + rows) * nv];
-        let dst = &mut x_pad[j * m_pad * nv..j * m_pad * nv + rows * nv];
-        dst.copy_from_slice(src);
+        let slot = &mut x_pad[j * m_pad * nv..(j + 1) * m_pad * nv];
+        slot[..rows * nv].copy_from_slice(src);
+        slot[rows * nv..].fill(0.0);
     }
 }
 
@@ -627,6 +635,38 @@ mod tests {
         let mut y2 = vec![1e9; n]; // poisoned output
         hgemv(&h2, &NativeBackend, &plan, &x, &mut y2, &mut ws, &mut mt);
         assert!(rel_err(&y2, &y1) < 1e-15);
+    }
+
+    #[test]
+    fn poisoned_workspace_is_bitwise_identical_to_fresh() {
+        // The prologue skips clearing buffers the sweep provably rewrites
+        // (leaf x̂ level, copied x_pad rows). Poison *every* workspace
+        // buffer with garbage and demand the product stays bitwise equal
+        // to a fresh-workspace run — the proof obligation of the
+        // tail-zeroing micro-opt.
+        let (h2, _) = setup_2d(16, 4);
+        let n = h2.n();
+        let mut rng = Prng::new(46);
+        for nv in [1usize, 3] {
+            let x = rng.normal_vec(n * nv);
+            let plan = HgemvPlan::new(&h2, nv);
+            let mut mt = Metrics::new();
+            let mut ws_fresh = HgemvWorkspace::new(&h2, nv);
+            let mut y_fresh = vec![0.0; n * nv];
+            hgemv(&h2, &NativeBackend, &plan, &x, &mut y_fresh, &mut ws_fresh, &mut mt);
+            let mut ws = HgemvWorkspace::new(&h2, nv);
+            ws.x_pad.fill(f64::NAN);
+            ws.y_pad.fill(f64::NAN);
+            for lvl in &mut ws.xhat.levels {
+                lvl.fill(f64::NAN);
+            }
+            for lvl in &mut ws.yhat.levels {
+                lvl.fill(f64::NAN);
+            }
+            let mut y = vec![f64::NAN; n * nv];
+            hgemv(&h2, &NativeBackend, &plan, &x, &mut y, &mut ws, &mut mt);
+            assert_eq!(y, y_fresh, "nv={nv}: poisoned workspace leaked into the product");
+        }
     }
 
     #[test]

@@ -26,6 +26,14 @@ pub struct Metrics {
     /// keeps the **maximum** (a per-rank peak, not a sum) — the quantity
     /// the out-of-core memory trajectory is benchmarked by (E1/E2 rows).
     pub matrix_bytes: u64,
+    /// Width (number of right-hand-side columns) of the product these
+    /// counters were recorded for. Under the request-coalescing session
+    /// server this is the *achieved* batch width — several concurrent
+    /// submissions fused into one N×nv product — so it is the
+    /// GEMV→GEMM conversion factor the serving path is benchmarked by
+    /// (E10). Merging keeps the maximum (all ranks of one product see
+    /// the same width; merged reports answer "how wide did we batch").
+    pub coalesced_nv: u64,
 }
 
 impl Metrics {
@@ -70,6 +78,9 @@ impl Metrics {
         // Peak per-rank storage: the merged value answers "how big was
         // the largest rank", so it maxes instead of summing.
         self.matrix_bytes = self.matrix_bytes.max(other.matrix_bytes);
+        // Achieved batch width: every rank of a product records the same
+        // nv, so the merged value is that width (max, not sum).
+        self.coalesced_nv = self.coalesced_nv.max(other.coalesced_nv);
     }
 
     /// Aggregate per-rank counters without data races: each thread of the

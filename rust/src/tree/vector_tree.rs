@@ -52,6 +52,19 @@ impl VectorTree {
         }
     }
 
+    /// Zero every level *except* the deepest one. The HGEMV leaf upsweep
+    /// overwrites the whole leaf level with accumulate:false GEMMs (every
+    /// node is written exactly once before anything reads it), so callers
+    /// about to run it can skip the dominant leaf-level clear; the upper
+    /// levels accumulate (`accumulate: true` transfers) and must still
+    /// start at zero.
+    pub fn clear_above_leaf(&mut self) {
+        let d = self.depth;
+        for l in &mut self.levels[..d] {
+            l.fill(0.0);
+        }
+    }
+
     /// Total stored f64 words.
     pub fn memory_words(&self) -> usize {
         self.levels.iter().map(|l| l.len()).sum()

@@ -1,0 +1,276 @@
+//! Pipelined serving conformance suite: pipelined `submit`/`wait`
+//! products must stay bitwise serial-identical across varying widths
+//! while the FIFO/interleave rules hold; the [`SessionServer`] must
+//! serve concurrent clients with bitwise-correct demuxed columns under
+//! randomized widths and timings; and a worker crash mid-pipeline must
+//! fail *every* in-flight product cleanly (poisoned, not hung).
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::dist::transport::server::{ServerOptions, SessionServer};
+use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+use h2opus::dist::transport::{JobKind, MatrixJob, TransportError};
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::Prng;
+
+/// The conformance matrix: N = 256, depth 4 (same as tests/shard.rs).
+fn conformance_job() -> MatrixJob {
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    }
+}
+
+fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
+    let n = a.n();
+    let plan = HgemvPlan::new(a, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    let mut metrics = Metrics::new();
+    let mut y = vec![0.0; n * nv];
+    hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut metrics);
+    y
+}
+
+fn worker_opts() -> SocketOptions {
+    SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        ..SocketOptions::default()
+    }
+}
+
+/// Pipelined products of *varying* width, two in flight at a time, are
+/// bitwise identical to the serial product — the workers rebuild their
+/// branch plans per width and the double-buffered workspaces never leak
+/// one product's accumulators into the next. Also pins the pipeline's
+/// bookkeeping: FIFO completion, per-product width echo, and the
+/// hgemv/submit interleaving guard.
+#[test]
+fn pipelined_varying_nv_bitwise_identical() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut session = SocketSession::start(&job, 2, 1, worker_opts()).expect("session start");
+    let mut rng = Prng::new(9100);
+
+    // Validation errors must not consume a pid or poison the session.
+    assert!(session.submit(&[], 0).is_err(), "nv = 0 must be rejected");
+    assert!(session.submit(&[1.0; 7], 2).is_err(), "length mismatch must be rejected");
+    assert_eq!(session.in_flight(), 0);
+
+    let widths = [1usize, 3, 2, 1, 4];
+    let xs: Vec<Vec<f64>> = widths.iter().map(|&w| rng.normal_vec(n * w)).collect();
+    let expected: Vec<Vec<f64>> = widths
+        .iter()
+        .zip(&xs)
+        .map(|(&w, x)| serial_product(&a, x, w))
+        .collect();
+
+    // Keep two products in flight: submit k+1 before collecting k.
+    let mut pids = Vec::new();
+    for (k, (&w, x)) in widths.iter().zip(&xs).enumerate() {
+        let pid = session.submit(x, w).expect("submit");
+        pids.push(pid);
+        assert!(session.in_flight() <= 2);
+        if k == 0 {
+            // The synchronous path must refuse to interleave with the
+            // pipeline (its barrier would deadlock against in-flight
+            // products).
+            let xe = vec![0.0; n];
+            let mut ye = vec![0.0; n];
+            let msg = session.hgemv(&xe, &mut ye).expect_err("hgemv mid-pipeline").to_string();
+            assert!(msg.contains("in-flight"), "guard must name the reason: {msg}");
+            // Out-of-order wait is a recoverable protocol error, not a
+            // poisoning one.
+            let mut yw = vec![0.0; n];
+            let msg = session.wait(pid + 999, &mut yw).expect_err("bogus pid").to_string();
+            assert!(msg.contains("submission order") || msg.contains("not in flight"), "{msg}");
+        }
+        if session.in_flight() == 2 {
+            let j = k - 1;
+            let mut y = vec![0.0; n * widths[j]];
+            let rep = session.wait(pids[j], &mut y).expect("wait");
+            assert_eq!(y, expected[j], "product {j} (nv {}) not bitwise equal", widths[j]);
+            assert_eq!(rep.coalesced_nv, widths[j] as u64, "product {j} width echo");
+            assert!(rep.queue_wait_s >= 0.0);
+        }
+    }
+    // Drain the tail.
+    let j = widths.len() - 1;
+    let mut y = vec![0.0; n * widths[j]];
+    session.wait(pids[j], &mut y).expect("tail wait");
+    assert_eq!(y, expected[j], "tail product not bitwise equal");
+    assert_eq!(session.in_flight(), 0);
+    assert_eq!(session.products(), widths.len() as u64);
+
+    // The synchronous path still works once the pipeline is drained.
+    let x = rng.normal_vec(n);
+    let mut ys = vec![0.0; n];
+    session.hgemv(&x, &mut ys).expect("post-pipeline hgemv");
+    assert_eq!(ys, serial_product(&a, &x, 1));
+}
+
+/// Multi-client fuzz: concurrent threads submit requests of random
+/// widths with random pauses; the server coalesces them into fused
+/// products, and every demuxed answer must be bitwise identical to the
+/// serial product of that client's own input. Afterwards the aggregate
+/// counters must account for every request and every fused column.
+#[test]
+fn server_fuzz_multi_client_bitwise() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let server = SessionServer::start(
+        &job,
+        2,
+        worker_opts(),
+        ServerOptions { max_coalesce: 6, pipeline_depth: 2 },
+    )
+    .expect("server start");
+    assert_eq!(server.n(), n);
+    assert_eq!(server.max_coalesce(), 6);
+
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 4;
+    let mut total_cols = 0u64;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let server = &server;
+                let a = &a;
+                s.spawn(move || {
+                    let mut rng = Prng::new(7000 + c as u64);
+                    let mut cols = 0u64;
+                    for round in 0..ROUNDS {
+                        let w = 1 + rng.below(3);
+                        let x = rng.normal_vec(n * w);
+                        let handle = server.submit(&x).expect("submit");
+                        std::thread::sleep(Duration::from_millis(rng.below(4) as u64));
+                        let served = handle.wait().unwrap_or_else(|e| {
+                            panic!("client {c} round {round}: {e}")
+                        });
+                        assert_eq!(
+                            served.y,
+                            serial_product(a, &x, w),
+                            "client {c} round {round} (w = {w}) not bitwise equal"
+                        );
+                        assert!(served.stats.coalesced_nv >= w, "fused width below own width");
+                        assert!(served.stats.queue_wait_s >= 0.0);
+                        cols += w as u64;
+                    }
+                    cols
+                })
+            })
+            .collect();
+        for h in handles {
+            total_cols += h.join().expect("client thread");
+        }
+    });
+
+    let st = server.stats();
+    assert_eq!(st.requests, (CLIENTS * ROUNDS) as u64, "every request counted");
+    assert!(st.products >= 1 && st.products <= st.requests, "products {}", st.products);
+    let hist_products: u64 = st.nv_histogram.values().sum();
+    assert_eq!(hist_products, st.products, "histogram counts every product");
+    let hist_cols: u64 = st.nv_histogram.iter().map(|(&nv, &c)| nv as u64 * c).sum();
+    assert_eq!(hist_cols, total_cols, "histogram accounts for every fused column");
+    assert!(st.nv_histogram.keys().all(|&nv| (1..=6).contains(&nv)));
+    assert!(st.sum_queue_wait_s >= 0.0 && st.sum_measured_s > 0.0);
+
+    // Oversized and ragged requests are rejected up front.
+    assert!(server.submit(&vec![0.0; n * 7]).is_err(), "width above the cap");
+    assert!(server.submit(&vec![0.0; n + 1]).is_err(), "not a multiple of N");
+}
+
+/// A worker crash while two products are in flight must fail *both*
+/// cleanly and promptly: the first wait names the poisoned product, the
+/// second reports the session closed/lost — nothing hangs on a barrier
+/// that will never complete.
+#[test]
+fn mid_pipeline_crash_fails_both_inflight_products() {
+    let job = conformance_job();
+    let n = job.n_points();
+    let opts = SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(30),
+        // Rank 1 exits the moment it receives product 0's input.
+        extra_env: vec![("H2OPUS_TEST_CRASH_ON_PRODUCT".into(), "0@1".into())],
+        ..SocketOptions::default()
+    };
+    let mut session = SocketSession::start(&job, 2, 1, opts).expect("session start");
+    let x = vec![1.0; n];
+    let t0 = Instant::now();
+    let pid0 = session.submit(&x, 1).expect("first submit ships before the crash lands");
+    // The second submit races the crash: the write may already have
+    // failed (poisoning at submit) or still queue (poisoning at wait).
+    let pid1 = session.submit(&x, 1);
+    let mut y = vec![0.0; n];
+    let e0 = session.wait(pid0, &mut y).expect_err("product 0 must fail");
+    let e1 = match pid1 {
+        Ok(pid) => session.wait(pid, &mut y).expect_err("product 1 must fail"),
+        Err(e) => e,
+    };
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(25), "crash took {elapsed:?} — behaved like a hang");
+    let (m0, m1) = (e0.to_string(), e1.to_string());
+    assert!(
+        m0.contains("poisoned") || m0.contains("not in flight"),
+        "first error must surface the poisoning: {m0}"
+    );
+    assert!(
+        m0.contains("poisoned") || m1.contains("poisoned"),
+        "some error must name the poisoned product: {m0} / {m1}"
+    );
+    // The poisoned session refuses further work with `Closed`.
+    let e = session.hgemv(&x, &mut y).expect_err("poisoned session must refuse products");
+    assert!(matches!(e, TransportError::Closed(_)), "got {e}");
+}
+
+/// The same crash through the server front end: every outstanding
+/// request's handle resolves to an error (no hang), and the server
+/// fast-fails later submissions as poisoned.
+#[test]
+fn server_crash_fails_all_requests_cleanly() {
+    let job = conformance_job();
+    let n = job.n_points();
+    let opts = SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(30),
+        extra_env: vec![("H2OPUS_TEST_CRASH_ON_PRODUCT".into(), "0@1".into())],
+        ..SocketOptions::default()
+    };
+    let server = SessionServer::start(
+        &job,
+        2,
+        opts,
+        ServerOptions { max_coalesce: 4, pipeline_depth: 2 },
+    )
+    .expect("server start");
+    let t0 = Instant::now();
+    let x = vec![1.0; n];
+    let handles: Vec<_> = (0..3).map(|_| server.submit(&x).expect("submit")).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let e = h.wait().expect_err("request must fail after the crash");
+        assert!(!e.to_string().is_empty(), "request {i}");
+    }
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(25), "crash took {elapsed:?} — behaved like a hang");
+    // After the dispatcher poisons the queue, submissions fail fast; a
+    // submission racing the poisoning may enqueue, but its handle still
+    // resolves to the error rather than hanging.
+    match server.submit(&x) {
+        Err(_) => {}
+        Ok(h) => {
+            h.wait().expect_err("request into a poisoned server must fail");
+        }
+    }
+}
