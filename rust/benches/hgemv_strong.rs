@@ -171,17 +171,100 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
     }
 }
 
+/// E2 companion rows: *measured* distributed in-place compression over
+/// the same strong-scaling axis. Effective Gflop/s uses the serial flop
+/// count over the distributed wall-clock — legitimate because every
+/// per-block operation of the distributed path is bitwise identical to
+/// serial `compress_full` (tests/compress_dist.rs) — and `matrix_bytes`
+/// is the peak per-rank *compressed* shard, so the out-of-core memory
+/// trajectory is benchmarked through compression too. Rows append to
+/// their own file (`target/compress_dist_rows.json`), keeping the
+/// HGEMV calibration schema untouched.
+fn bench_compression(dim: usize, n_target: usize, ps: &[usize], tau: f64, rows: &mut Vec<String>) {
+    use h2opus::compression::compress_full;
+    use h2opus::dist::compress_sharded;
+    let (side, cfg, corr) = if dim == 2 {
+        let side = (n_target as f64).sqrt().ceil() as usize;
+        (side, H2Config { leaf_size: 32, eta: 0.9, cheb_grid: 4 }, 0.1)
+    } else {
+        let side = (n_target as f64).cbrt().ceil() as usize;
+        (side, H2Config { leaf_size: 32, eta: 0.95, cheb_grid: 2 }, 0.2)
+    };
+    let points =
+        if dim == 2 { PointSet::grid_2d(side, 1.0) } else { PointSet::grid_3d(side, 1.0) };
+    let kernel = ExponentialKernel { dim, corr_len: corr };
+    let a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    let runs = if tiny() { 3 } else { 5 };
+    let bt = h2opus::backend::backend_threads();
+
+    // Serial reference: the flop count and compressed size the
+    // distributed path must reproduce.
+    let mut metrics = Metrics::new();
+    let mut work = a.clone();
+    let (_, serial_stats) = compress_full(&mut work, tau, &NativeBackend, &mut metrics);
+    let flops = metrics.flops;
+
+    println!("\n== {dim}D distributed compression, strong scaling, N = {n}, tau = {tau:.0e} ==");
+    println!(
+        "{:>4} {:>13} {:>9} {:>10} {:>14} {:>8}",
+        "P", "meas (ms)", "spd", "Gflop/s", "peak shard (B)", "ratio"
+    );
+    let mut t1 = None;
+    for &p in ps {
+        if a.depth() < p.trailing_zeros() as usize {
+            continue;
+        }
+        let mut times = Vec::new();
+        let mut peak = 0u64;
+        let mut ratio = 0.0;
+        for _ in 0..runs {
+            let t0 = std::time::Instant::now();
+            let (shards, _top, st) =
+                compress_sharded(&a, p, tau, &NativeBackend).expect("distributed compression");
+            times.push(t0.elapsed().as_secs_f64());
+            assert_eq!(st.post_words, serial_stats.post_words, "P={p}: diverged from serial");
+            peak = shards.iter().map(|s| s.matrix_bytes() as u64).max().unwrap();
+            ratio = st.ratio();
+        }
+        let t = trimmed_mean(&times);
+        let base = *t1.get_or_insert(t);
+        let gflops = flops as f64 / t / 1e9;
+        println!(
+            "{:>4} {:>13.2} {:>9.2} {:>10.2} {:>14} {:>8.2}",
+            p,
+            t * 1e3,
+            base / t,
+            gflops,
+            peak,
+            ratio
+        );
+        rows.push(format!(
+            "{{\"p\": {p}, \"n\": {n}, \"backend_threads\": {bt}, \"tau\": {tau:e}, \
+             \"measured_s\": {t:e}, \"flops\": {flops}, \"gflops\": {gflops:e}, \
+             \"matrix_bytes\": {peak}, \"ratio\": {ratio:e}}}"
+        ));
+    }
+}
+
 fn main() {
     println!("E2 / Fig. 10 — HGEMV strong scalability (virtual + measured wall-clock)");
     let mut rows = Vec::new();
+    let mut crows = Vec::new();
     if tiny() {
         bench_set(2, 1 << 10, &[1, 2, 4], &[1, 8], &mut rows);
+        bench_compression(2, 1 << 10, &[1, 2, 4], 1e-3, &mut crows);
     } else {
         bench_set(2, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64], &mut rows);
         bench_set(3, 1 << 14, &[1, 2, 4, 8, 16, 32], &[1, 16, 64], &mut rows);
+        bench_compression(2, 1 << 14, &[1, 2, 4, 8, 16], 1e-3, &mut crows);
+        bench_compression(3, 1 << 13, &[1, 2, 4, 8], 1e-3, &mut crows);
     }
     std::fs::create_dir_all("target").ok();
     let path = "target/hgemv_strong_rows.json";
     std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing rows");
     println!("\ncalibration rows written: {path} (fit with python/tests/model_check.py --fit)");
+    let cpath = "target/compress_dist_rows.json";
+    std::fs::write(cpath, format!("[\n{}\n]\n", crows.join(",\n"))).expect("writing rows");
+    println!("compression rows written: {cpath}");
 }

@@ -311,21 +311,26 @@ pub fn solve(sys: &mut FractionalSystem, backend: &dyn ComputeBackend, rtol: f64
 
 /// Run the preconditioned Krylov solve with the H² product served by a
 /// *persistent distributed session*: P live `h2opus worker` processes
-/// hold shards of the (uncompressed, construction-accuracy) fractional
-/// kernel matrix and serve one product per CG iteration — worker spawn,
-/// branch-scoped matrix construction and plan building are paid once for
-/// the whole solve instead of per product
-/// ([`crate::dist::transport::socket::SocketSession`]).
+/// hold shards of the fractional kernel matrix and serve one product per
+/// CG iteration — worker spawn, branch-scoped matrix construction and
+/// plan building are paid once for the whole solve instead of per
+/// product ([`crate::dist::transport::socket::SocketSession`]).
 ///
-/// The session matrix is built from the same kernel, points and
-/// clustering as [`setup`]'s K but *before* algebraic compression
-/// (compression requires the assembled global matrix, which no session
-/// process ever holds), so the applied operator matches K to construction
-/// accuracy; D, C, b and the multigrid preconditioner are identical to
-/// [`solve`]'s. See DESIGN.md "Substitutions".
+/// The session follows the same construct → compress → solve sequence as
+/// the in-process path: the workers build their shards from the same
+/// kernel, points and clustering as [`setup`]'s K, then — unless the
+/// caller already ran it — [`SocketSession::compress`] recompresses the
+/// distributed operator in place to the problem's `tau`, with each rank
+/// holding only its O(N/P) branch throughout. The CG loop therefore
+/// applies the *compressed* K, and its iterates are bitwise identical to
+/// [`solve`]'s; D, C, b and the multigrid preconditioner are also
+/// identical to [`solve`]'s.
 ///
-/// Panics if a session product fails mid-solve (the CG callback cannot
-/// propagate transport errors); start-up failures surface from
+/// [`SocketSession::compress`]: crate::dist::transport::socket::SocketSession::compress
+///
+/// Panics if distributed compression or a session product fails
+/// mid-solve (the CG callback cannot propagate transport errors);
+/// start-up failures surface from
 /// [`crate::dist::transport::socket::SocketSession::start`] before this
 /// is ever called.
 #[cfg(unix)]
@@ -341,6 +346,15 @@ pub fn solve_with_session(
         sys.k.tree.perm,
         "session clustering must match the in-process matrix"
     );
+    // The solver is specified over the compressed operator (setup()
+    // compresses K before D/b are derived from it); a session still
+    // serving construction-accuracy shards would apply a *different*
+    // matrix than the one the system was assembled around.
+    if !session.is_compressed() {
+        session
+            .compress(sys.problem.tau)
+            .expect("distributed compression failed before the solve");
+    }
     let h2half = sys.problem.h() * sys.problem.h(); // the h² of Eq. 9
 
     let perm = sys.k.tree.perm.clone();

@@ -198,12 +198,32 @@ pub fn absorb_r_level(
     let pairs = a.coupling[l].pairs.clone();
     let t_off: Vec<usize> = pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
     let s_off: Vec<usize> = pairs.iter().map(|&(_, s)| s as usize * k * k).collect();
+    absorb_level_core(&mut a.coupling[l].data, nb, k, r_u, &t_off, r_v, &s_off, backend, metrics);
+}
+
+/// Batched body of [`absorb_r_level`], shared with the branch-sliced
+/// distributed path: data_q <- R^U[t_off_q] · data_q · (R^V[s_off_q])ᵀ for
+/// the `nb` k×k blocks of `data`. The offset vectors address per-pair R
+/// blocks inside `r_u`/`r_v` — global node offsets in serial, compact
+/// owned+halo maps in a branch slice.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn absorb_level_core(
+    data: &mut [f64],
+    nb: usize,
+    k: usize,
+    r_u: &[f64],
+    t_off: &[usize],
+    r_v: &[f64],
+    s_off: &[usize],
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) {
     let blk_off = contiguous_offsets(nb, k * k);
     let mut tmp = vec![0.0; nb * k * k];
     backend.batched_gemm(
         GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: false, accumulate: false },
-        BatchRef { data: r_u, offsets: &t_off },
-        BatchRef { data: &a.coupling[l].data, offsets: &blk_off },
+        BatchRef { data: r_u, offsets: t_off },
+        BatchRef { data: &*data, offsets: &blk_off },
         &mut tmp,
         &blk_off,
         metrics,
@@ -211,8 +231,8 @@ pub fn absorb_r_level(
     backend.batched_gemm(
         GemmDims { nb, m: k, k, n: k, trans_a: false, trans_b: true, accumulate: false },
         BatchRef { data: &tmp, offsets: &blk_off },
-        BatchRef { data: r_v, offsets: &s_off },
-        &mut a.coupling[l].data,
+        BatchRef { data: r_v, offsets: s_off },
+        data,
         &blk_off,
         metrics,
     );

@@ -32,6 +32,35 @@ impl CompressionStats {
 /// Per-level per-node square factors (Z of the weight QR, or projection P).
 type LevelBlocks = Vec<Vec<f64>>;
 
+/// The absolute singular-value threshold for truncating against a spectrum
+/// whose largest singular value is `sigma_max`: τ·σ_max — except that a
+/// level whose spectrum is identically zero (`sigma_max == 0`, e.g. a
+/// basis with no coupling anywhere under it) carries no information at
+/// all, so *everything* is truncatable: the threshold is +∞ and the rank
+/// floor of 1 applies. The former `.max(f64::MIN_POSITIVE)` clamp instead
+/// produced a subnormal threshold, which any rounding-noise singular value
+/// exceeds — an all-zero level then kept full rank instead of collapsing.
+pub fn truncation_threshold(tau: f64, sigma_max: f64) -> f64 {
+    if sigma_max <= 0.0 {
+        f64::INFINITY
+    } else {
+        tau * sigma_max
+    }
+}
+
+/// Largest per-block ε-rank of a batch of singular-value vectors (`k`
+/// values per block): the max count of leading values strictly above
+/// `abs_tol`. Raw — the caller applies the rank floor (`.max(1)`) and any
+/// structural ceiling; in the distributed path the per-branch partial
+/// maxima combine by another max at the coordinator before those clamps,
+/// so rank decisions are bitwise-identical to serial.
+pub fn max_rank_below(s: &[f64], k: usize, abs_tol: f64) -> usize {
+    s.chunks_exact(k)
+        .map(|sv| sv.iter().take_while(|&&x| x > abs_tol).count())
+        .max()
+        .unwrap_or(0)
+}
+
 /// Downsweep of §5.1: compute, for every node of the row (or column) basis
 /// tree, the R factor `Z_t` of the weight matrix B_t, by QR of the stack
 /// [Z_parent·Eᵀ ; S blocks of the node's row/column] (Eq. 4).
@@ -72,13 +101,59 @@ pub fn weight_level(
     let k_par = if l > 0 { a.rank(l - 1) } else { 0 };
     // Blocks per node in this level's block row/column.
     let cl = &a.coupling[l];
-    let mut counts = vec![0usize; nodes];
-    for &(t, s) in &cl.pairs {
-        let owner = if for_rows { t } else { s } as usize;
-        counts[owner] += 1;
+    let owners: Vec<usize> =
+        cl.pairs.iter().map(|&(t, s)| if for_rows { t } else { s } as usize).collect();
+    let max_b = level_max_blocks(&cl.pairs, for_rows);
+    weight_level_core(
+        &tree.transfers[l],
+        k_l,
+        k_par,
+        nodes,
+        &owners,
+        &cl.data,
+        for_rows,
+        z_parent,
+        max_b,
+        backend,
+        metrics,
+    )
+}
+
+/// Global max blocks-per-node of one coupling level's block rows (or
+/// columns): the stack height every rank must agree on — a branch slice
+/// computes it from the replicated index-only structure, never from its
+/// local pair subset, so the zero-row padding (and hence the QR output)
+/// is bitwise-identical to serial.
+pub fn level_max_blocks(pairs: &[(u32, u32)], for_rows: bool) -> usize {
+    let mut counts = std::collections::HashMap::new();
+    for &(t, s) in pairs {
+        *counts.entry(if for_rows { t } else { s }).or_insert(0usize) += 1;
     }
-    let max_b = counts.iter().copied().max().unwrap_or(0);
-    let parent_rows = if l > 0 { k_par } else { 0 };
+    counts.values().copied().max().unwrap_or(0)
+}
+
+/// Tree-agnostic body of [`weight_level`], shared with the branch-sliced
+/// distributed path: per node of the `nodes`-wide (sub)level, QR-R of the
+/// stack [Z_parent·Eᵀ ; S blocks]. `owners[q]` names the (local) node the
+/// q-th k_l×k_l block of `blocks` belongs to, in the serial marshaling
+/// order; `max_b` is the *global* per-node block maximum (see
+/// [`level_max_blocks`]); `transfers_l` holds the contiguous per-node E
+/// blocks (unused when `z_parent` is `None`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn weight_level_core(
+    transfers_l: &[f64],
+    k_l: usize,
+    k_par: usize,
+    nodes: usize,
+    owners: &[usize],
+    blocks: &[f64],
+    for_rows: bool,
+    z_parent: Option<&[f64]>,
+    max_b: usize,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> Vec<f64> {
+    let parent_rows = if z_parent.is_some() { k_par } else { 0 };
     let stack_rows = parent_rows + max_b * k_l;
     if stack_rows == 0 {
         // No blocks anywhere at the root level: zero weight.
@@ -89,14 +164,14 @@ pub fn weight_level(
     let mut stack = vec![0.0; nodes * stack_rows * k_l];
 
     // Parent contribution: Z_par[t/2] · E_tᵀ into the first k_par rows.
-    if l > 0 {
+    if let Some(zp) = z_parent {
         let a_off: Vec<usize> = (0..nodes).map(|t| (t / 2) * k_par * k_par).collect();
         let b_off = contiguous_offsets(nodes, k_l * k_par);
         let c_off: Vec<usize> = (0..nodes).map(|t| t * stack_rows * k_l).collect();
         backend.batched_gemm(
             GemmDims { nb: nodes, m: k_par, k: k_par, n: k_l, trans_a: false, trans_b: true, accumulate: false },
-            BatchRef { data: z_parent.expect("inner level needs parent Z"), offsets: &a_off },
-            BatchRef { data: &tree.transfers[l], offsets: &b_off },
+            BatchRef { data: zp, offsets: &a_off },
+            BatchRef { data: transfers_l, offsets: &b_off },
             &mut stack,
             &c_off,
             metrics,
@@ -106,11 +181,10 @@ pub fn weight_level(
     // Coupling contributions (marshaled copies; S transposed for the
     // row tree — Eq. 4 stacks S_ijᵀ — and direct for the column tree).
     let mut cursor = vec![0usize; nodes];
-    for (p, &(t, s)) in cl.pairs.iter().enumerate() {
-        let owner = if for_rows { t } else { s } as usize;
+    for (q, &owner) in owners.iter().enumerate() {
         let row0 = parent_rows + cursor[owner] * k_l;
         cursor[owner] += 1;
-        let blk = cl.block(p, k_l);
+        let blk = &blocks[q * k_l * k_l..(q + 1) * k_l * k_l];
         let dst = &mut stack[owner * stack_rows * k_l + row0 * k_l..];
         if for_rows {
             for i in 0..k_l {
@@ -219,11 +293,32 @@ pub fn truncate_leaf_level(
     let timer = Timer::start();
     let depth = a.depth();
     let tree = if for_rows { &a.u } else { &a.v };
+    let (u_svd, s_svd) = truncate_leaf_svd(tree, z_leaf, backend, metrics);
+    let sigma_ref = s_svd.iter().cloned().fold(0.0_f64, f64::max);
+    let abs_tol = truncation_threshold(tau, sigma_ref);
+    let k_new = max_rank_below(&s_svd, tree.ranks[depth], abs_tol).max(1);
+    log.push("trunc_svd", depth, timer.elapsed());
+    let timer = Timer::start();
+    let (new_leaf_bases, p_leaf) = truncate_leaf_finish(tree, &u_svd, k_new, backend, metrics);
+    log.push("trunc_p", depth, timer.elapsed());
+    LeafTruncation { new_leaf_bases, p_leaf, k_new, abs_tol, sigma_ref }
+}
+
+/// SVD half of the leaf stage, tree-scoped so a rank's branch (a
+/// [`BasisTree`] over its local leaves) runs it unmodified: M_t = U_t·Z_tᵀ
+/// then batched SVD. Returns `(u_svd, s_svd)`; rank selection happens on
+/// the full spectrum (serial) or via the coordinator's max-reduction over
+/// per-branch partials (distributed).
+pub fn truncate_leaf_svd(
+    tree: &BasisTree,
+    z_leaf: &[f64],
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (Vec<f64>, Vec<f64>) {
     let m_pad = tree.leaf_dim;
     let leaves = tree.num_leaves();
-    let k_leaf = tree.ranks[depth];
+    let k_leaf = tree.ranks[tree.depth];
 
-    // M_t = U_t · Z_tᵀ, SVD, pick rank.
     let mut m_buf = vec![0.0; leaves * m_pad * k_leaf];
     {
         let a_off = contiguous_offsets(leaves, m_pad * k_leaf);
@@ -241,17 +336,23 @@ pub fn truncate_leaf_level(
     let mut s_svd = vec![0.0; leaves * k_leaf];
     let mut v_svd = vec![0.0; leaves * k_leaf * k_leaf];
     backend.batched_svd(leaves, m_pad, k_leaf, &m_buf, &mut u_svd, &mut s_svd, &mut v_svd, metrics);
+    (u_svd, s_svd)
+}
 
-    let sigma_ref = s_svd.iter().cloned().fold(0.0_f64, f64::max).max(f64::MIN_POSITIVE);
-    let abs_tol = tau * sigma_ref;
-    let rank_of = |s: &[f64]| s.iter().take_while(|&&x| x > abs_tol).count();
-    let k_new = (0..leaves)
-        .map(|i| rank_of(&s_svd[i * k_leaf..(i + 1) * k_leaf]))
-        .max()
-        .unwrap()
-        .max(1);
+/// Basis-building half of the leaf stage, with the (globally agreed) new
+/// rank decided: new leaf bases (first k' columns of each SVD U) and the
+/// leaf projection maps P = U'ᵀU. Tree-scoped like [`truncate_leaf_svd`].
+pub fn truncate_leaf_finish(
+    tree: &BasisTree,
+    u_svd: &[f64],
+    k_new: usize,
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (Vec<f64>, Vec<f64>) {
+    let m_pad = tree.leaf_dim;
+    let leaves = tree.num_leaves();
+    let k_leaf = tree.ranks[tree.depth];
 
-    // New leaf bases (first k' columns of each SVD U) and P = U'ᵀ U.
     let mut new_leaf_bases = vec![0.0; leaves * m_pad * k_new];
     for j in 0..leaves {
         for i in 0..m_pad {
@@ -261,8 +362,6 @@ pub fn truncate_leaf_level(
             }
         }
     }
-    log.push("trunc_svd", depth, timer.elapsed());
-    let timer = Timer::start();
     let mut p_leaf = vec![0.0; leaves * k_new * k_leaf];
     {
         let a_off = contiguous_offsets(leaves, m_pad * k_new);
@@ -277,8 +376,7 @@ pub fn truncate_leaf_level(
             metrics,
         );
     }
-    log.push("trunc_p", depth, timer.elapsed());
-    LeafTruncation { new_leaf_bases, p_leaf, k_new, abs_tol, sigma_ref }
+    (new_leaf_bases, p_leaf)
 }
 
 /// One inner level of the truncation upsweep (children l -> parents l-1):
@@ -299,11 +397,37 @@ pub fn truncate_inner_level(
     metrics: &mut Metrics,
 ) -> (Vec<f64>, Vec<f64>, usize) {
     let tree = if for_rows { &a.u } else { &a.v };
+    let k_par = tree.ranks[l - 1];
+    let (us, ss, stack_rows) =
+        truncate_inner_svd(tree, l, z_parent, k_new_c, p_c, backend, metrics);
+    let k_new_p = max_rank_below(&ss, k_par, abs_tol)
+        .max(1)
+        .min(2 * k_new_c); // cannot exceed the stack's actual row count
+    let (etr, pp) = truncate_inner_finish(
+        tree, l, &us, stack_rows, k_new_c, k_new_p, p_c, backend, metrics,
+    );
+    (etr, pp, k_new_p)
+}
+
+/// SVD half of one inner truncation level (children `l` -> parents `l-1`
+/// *within `tree`*): tmp1 = E_c·Z_pᵀ, tmp2 = P_c·tmp1 stacked per sibling
+/// pair, batched SVD. Returns `(us, ss, stack_rows)`; the new parent rank
+/// is decided on the full `ss` (serial) or by the coordinator's
+/// max-reduction over per-branch partials (distributed), then
+/// [`truncate_inner_finish`] completes the level.
+pub fn truncate_inner_svd(
+    tree: &BasisTree,
+    l: usize,
+    z_parent: &[f64],
+    k_new_c: usize,
+    p_c: &[f64],
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (Vec<f64>, Vec<f64>, usize) {
     let k_l = tree.ranks[l];
     let k_par = tree.ranks[l - 1];
     let nodes_c = 1usize << l;
     let nodes_p = 1usize << (l - 1);
-    let rank_of = |s: &[f64]| s.iter().take_while(|&&x| x > abs_tol).count();
 
     // tmp1_c = E_c · Z_parᵀ  (k_l × k_par)
     let mut tmp1 = vec![0.0; nodes_c * k_l * k_par];
@@ -337,12 +461,31 @@ pub fn truncate_inner_level(
     let mut ss = vec![0.0; nodes_p * k_par];
     let mut vs = vec![0.0; nodes_p * k_par * k_par];
     backend.batched_svd(nodes_p, stack_rows, k_par, &stack, &mut us, &mut ss, &mut vs, metrics);
-    let k_new_p = (0..nodes_p)
-        .map(|i| rank_of(&ss[i * k_par..(i + 1) * k_par]))
-        .max()
-        .unwrap()
-        .max(1)
-        .min(2 * k_new_c); // cannot exceed the stack's actual row count
+    (us, ss, stack_rows)
+}
+
+/// Basis-building half of one inner truncation level, with the (globally
+/// agreed) new parent rank decided: new transfers E'_c from the left
+/// factor halves and the parents' projection maps
+/// P_p = Σ_c E'_cᵀ(P_c·E_c). Returns `(etr, pp)`.
+#[allow(clippy::too_many_arguments)]
+pub fn truncate_inner_finish(
+    tree: &BasisTree,
+    l: usize,
+    us: &[f64],
+    stack_rows: usize,
+    k_new_c: usize,
+    k_new_p: usize,
+    p_c: &[f64],
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) -> (Vec<f64>, Vec<f64>) {
+    let k_l = tree.ranks[l];
+    let k_par = tree.ranks[l - 1];
+    let nodes_c = 1usize << l;
+    let nodes_p = 1usize << (l - 1);
+    let e_off = contiguous_offsets(nodes_c, k_l * k_par);
+    let p_off = contiguous_offsets(nodes_c, k_new_c * k_l);
 
     // New transfers E'_c: rows of the left factor halves.
     let mut etr = vec![0.0; nodes_c * k_new_c * k_new_p];
@@ -388,7 +531,7 @@ pub fn truncate_inner_level(
             metrics,
         );
     }
-    (etr, pp, k_new_p)
+    (etr, pp)
 }
 
 /// Compress `a` (orthogonal bases required) to relative accuracy τ.
@@ -529,26 +672,61 @@ pub fn project_level(
         let pv = pad_p(pv, 1 << l, kv, k_new, k);
         let t_off: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
         let s_off: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize * k_new * k).collect();
-        let blk_off = contiguous_offsets(nb, k * k);
-        let mut tmp = vec![0.0; nb * k_new * k];
-        backend.batched_gemm(
-            GemmDims { nb, m: k_new, k, n: k, trans_a: false, trans_b: false, accumulate: false },
-            BatchRef { data: &pu, offsets: &t_off },
-            BatchRef { data: &cl.data, offsets: &blk_off },
-            &mut tmp,
-            &contiguous_offsets(nb, k_new * k),
-            metrics,
-        );
-        backend.batched_gemm(
-            GemmDims { nb, m: k_new, k, n: k_new, trans_a: false, trans_b: true, accumulate: false },
-            BatchRef { data: &tmp, offsets: &contiguous_offsets(nb, k_new * k) },
-            BatchRef { data: &pv, offsets: &s_off },
+        project_level_core(
+            nb,
+            k,
+            k_new,
+            &pu,
+            &t_off,
+            &cl.data,
+            &pv,
+            &s_off,
             &mut ncl.data,
-            &contiguous_offsets(nb, k_new * k_new),
+            backend,
             metrics,
         );
     }
     ncl
+}
+
+/// Batched body of [`project_level`], shared with the branch-sliced
+/// distributed path: out_q = P^U[t_off_q] · S_q · (P^V[s_off_q])ᵀ for the
+/// `nb` k×k blocks of `old_data`, with both P maps already padded to the
+/// unified `k_new` rows. The offset vectors address per-pair blocks inside
+/// `pu`/`pv` — global node offsets in serial, compact owned+halo maps in a
+/// branch slice.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn project_level_core(
+    nb: usize,
+    k: usize,
+    k_new: usize,
+    pu: &[f64],
+    t_off: &[usize],
+    old_data: &[f64],
+    pv: &[f64],
+    s_off: &[usize],
+    out: &mut [f64],
+    backend: &dyn ComputeBackend,
+    metrics: &mut Metrics,
+) {
+    let blk_off = contiguous_offsets(nb, k * k);
+    let mut tmp = vec![0.0; nb * k_new * k];
+    backend.batched_gemm(
+        GemmDims { nb, m: k_new, k, n: k, trans_a: false, trans_b: false, accumulate: false },
+        BatchRef { data: pu, offsets: t_off },
+        BatchRef { data: old_data, offsets: &blk_off },
+        &mut tmp,
+        &contiguous_offsets(nb, k_new * k),
+        metrics,
+    );
+    backend.batched_gemm(
+        GemmDims { nb, m: k_new, k, n: k_new, trans_a: false, trans_b: true, accumulate: false },
+        BatchRef { data: &tmp, offsets: &contiguous_offsets(nb, k_new * k) },
+        BatchRef { data: pv, offsets: s_off },
+        out,
+        &contiguous_offsets(nb, k_new * k_new),
+        metrics,
+    );
 }
 
 /// Orthogonalize + compress in one call (the full §6.3 pipeline). Returns
@@ -591,7 +769,7 @@ pub fn compress_full_logged_with(
 }
 
 /// Zero-pad per-node P maps from k_old_rows rows to k_new rows.
-fn pad_p(p: &[f64], nodes: usize, k_rows: usize, k_new: usize, k_cols: usize) -> Vec<f64> {
+pub(crate) fn pad_p(p: &[f64], nodes: usize, k_rows: usize, k_new: usize, k_cols: usize) -> Vec<f64> {
     if k_rows == k_new {
         return p.to_vec();
     }
@@ -607,7 +785,7 @@ fn pad_p(p: &[f64], nodes: usize, k_rows: usize, k_new: usize, k_cols: usize) ->
 
 /// Zero-pad a basis tree's per-level ranks up to `ranks` (columns of leaf
 /// bases, rows+cols of transfers).
-fn pad_basis(tree: &BasisTree, ranks: &[usize]) -> BasisTree {
+pub(crate) fn pad_basis(tree: &BasisTree, ranks: &[usize]) -> BasisTree {
     if tree.ranks == ranks {
         return tree.clone();
     }
@@ -736,6 +914,39 @@ mod tests {
         let err = rel_err(&c.to_dense_permuted().data, &dense.data);
         // construction error (g=5) dominates the 1e-6 truncation
         assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn zero_spectrum_threshold_is_explicit() {
+        // An all-zero level must truncate everything (threshold +inf), not
+        // compare against a subnormal tau * MIN_POSITIVE that any rounding
+        // noise clears.
+        assert!(truncation_threshold(1e-6, 0.0).is_infinite());
+        assert!(truncation_threshold(1e-6, -0.0).is_infinite());
+        assert_eq!(truncation_threshold(1e-6, 2.0), 2e-6);
+        assert_eq!(max_rank_below(&[3.0, 2.0, 0.0, 1.0], 2, f64::INFINITY), 0);
+        assert_eq!(max_rank_below(&[3.0, 2.0, 0.0, 1.0], 2, 0.5), 2);
+    }
+
+    #[test]
+    fn all_zero_coupling_collapses_to_minimum_rank() {
+        // Zero out every coupling block: the weight downsweep then sees a
+        // zero spectrum (sigma_ref = 0) on both trees, and the regression
+        // is that compression collapses to the rank floor of 1 per level
+        // instead of retaining full rank against a subnormal threshold.
+        let mut a = sample_h2(4);
+        for cl in &mut a.coupling {
+            for v in &mut cl.data {
+                *v = 0.0;
+            }
+        }
+        let mut mt = Metrics::new();
+        let (c, stats) = compress_full(&mut a, 1e-6, &NativeBackend, &mut mt);
+        assert_eq!(stats.sigma_ref, 0.0);
+        for l in 0..=c.depth() {
+            assert_eq!(c.rank(l), 1, "level {l} kept rank {}", c.rank(l));
+        }
+        assert!(stats.post_words < stats.pre_words);
     }
 
     #[test]

@@ -22,15 +22,27 @@
 //! sibling contributions into one parent block inside a single batched
 //! GEMM, which a node-range split would break (see ROADMAP).
 
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
+use crate::admissibility::MatrixStructure;
 use crate::backend::ComputeBackend;
+use crate::compression::orthogonalize::{absorb_level_core, orth_leaf_level, orth_transfer_level};
+use crate::compression::truncate::{
+    level_max_blocks, max_rank_below, pad_basis, pad_p, project_level_core, truncate_inner_finish,
+    truncate_inner_svd, truncate_leaf_finish, truncate_leaf_svd, truncation_threshold,
+    weight_level_core,
+};
 use crate::compression::{compress_full_logged_with, CompressionStats, PhaseLog};
 use crate::config::NetworkModel;
-use crate::dist::threaded::ExecMode;
+use crate::dist::pool::RankPool;
+use crate::dist::shard::ShardedMatrix;
+use crate::dist::threaded::{abort_peers, ExecMode};
+use crate::dist::transport::{inproc, Endpoint, Mailbox, Message, MsgKind, TransportError};
 use crate::dist::Decomposition;
 use crate::metrics::Metrics;
-use crate::tree::H2Matrix;
+use crate::tree::{BasisTree, CouplingLevel, H2Matrix};
 
 /// Outcome of one distributed compression.
 #[derive(Clone, Debug)]
@@ -105,6 +117,1135 @@ pub fn dist_compress(
         measured,
     };
     (compressed, report)
+}
+
+// ---------------------------------------------------------------------------
+// Transport-level distributed compression (the real message-passing path).
+//
+// The serial pipeline is replayed as branch slices: every rank runs the
+// *same* per-level phase kernels (`orth_*`, `weight_level_core`,
+// `truncate_*`, `project_level_core`) on its O(N/P) branch, and the handful
+// of global decisions — the level-C R/P factors, the σ_ref reference
+// singular value and the per-level new ranks — flow through a coordinator
+// (endpoint id P) as max-reductions over per-branch partials. Because max
+// over a disjoint partition equals the serial max over the whole level, and
+// every stack height is derived from the replicated index-only structure,
+// each rank's blocks are bitwise-identical to the serial
+// [`crate::compression::compress_full`] on the assembled matrix.
+// ---------------------------------------------------------------------------
+
+// Sub-step tags inside the two compression message kinds. The wire level
+// word is `step << STEP_SHIFT | tree level`, so concurrent per-level
+// traffic (R/S halos, rank reductions) never aliases.
+const STEP_SHIFT: usize = 8;
+/// rank -> coordinator: the branch-root R factors of U and V (level C).
+const STEP_RC: u32 = 1;
+/// coordinator -> ranks: orthogonalized top transfers + absorbed top coupling.
+const STEP_TOPORTH: u32 = 2;
+/// rank <-> rank: column-owner R_v halo blocks for one coupling level.
+const STEP_RV: u32 = 3;
+/// coordinator -> ranks: the level-(C-1) weight factors Z of the row tree.
+const STEP_ZU: u32 = 4;
+/// coordinator -> ranks: the level-(C-1) weight factors Z of the column tree.
+const STEP_ZV: u32 = 5;
+/// rank <-> rank: absorbed coupling blocks routed to their column owners.
+const STEP_SBLK: u32 = 6;
+/// rank -> coordinator: per-branch partial σ maxima of the leaf SVDs.
+const STEP_SIGMA: u32 = 7;
+/// coordinator -> ranks: the absolute truncation thresholds and σ_ref.
+const STEP_TOL: u32 = 8;
+/// rank -> coordinator: per-branch raw leaf ε-rank ceilings.
+const STEP_KLEAF: u32 = 9;
+/// coordinator -> ranks: the agreed new leaf ranks (after the clamps).
+const STEP_KLEAF_BC: u32 = 10;
+/// rank -> coordinator: per-branch raw inner ε-rank ceilings for one level.
+const STEP_KINNER: u32 = 11;
+/// coordinator -> ranks: the agreed new rank of one inner level.
+const STEP_KINNER_BC: u32 = 12;
+/// rank -> coordinator: the branch-root projection maps P of U and V.
+const STEP_PC: u32 = 13;
+/// coordinator -> ranks: unified new ranks + truncated/projected top arrays.
+const STEP_TOPRES: u32 = 14;
+/// rank <-> rank: padded column projection-map halo for one coupling level.
+const STEP_PV: u32 = 15;
+/// rank -> coordinator: pre/post branch memory words (doubles as the
+/// completion ack — it is the last frame a worker sends).
+const STEP_STATS: u32 = 16;
+
+fn step_word(step: u32, level: usize) -> usize {
+    ((step as usize) << STEP_SHIFT) | level
+}
+
+/// Factor traffic (R gathers/halos) rides the `Orthogonalize` kind; every
+/// weight/truncation/projection frame rides `Truncate`.
+fn step_kind(step: u32) -> MsgKind {
+    if step <= STEP_RV {
+        MsgKind::Orthogonalize
+    } else {
+        MsgKind::Truncate
+    }
+}
+
+fn send_step<E: Endpoint + ?Sized>(
+    ep: &mut E,
+    dst: usize,
+    step: u32,
+    level: usize,
+    src: usize,
+    data: Vec<f64>,
+) -> Result<(), TransportError> {
+    ep.send(dst, Message::new(step_kind(step), step_word(step, level), src, data))
+}
+
+fn recv_step<E: Endpoint + ?Sized>(
+    mb: &mut Mailbox,
+    ep: &mut E,
+    step: u32,
+    level: usize,
+    src: usize,
+) -> Result<Message, TransportError> {
+    let kind = step_kind(step);
+    let want = step_word(step, level) as u32;
+    mb.recv_where(ep, move |t| t.kind == kind && t.level == want && t.src == src as u32)
+}
+
+fn expect_len(msg: &Message, want: usize, what: &str) -> Result<(), TransportError> {
+    if msg.data.len() != want {
+        return Err(TransportError::Protocol(format!(
+            "{what}: expected {want} f64 words, got {} (step tag {:#x} from {})",
+            msg.data.len(),
+            msg.tag.level,
+            msg.tag.src
+        )));
+    }
+    Ok(())
+}
+
+/// For one coupling level: the sorted-unique global column nodes whose
+/// factor blocks this rank must send to / receive from each peer, derived
+/// on both sides from the replicated index-only structure (no handshake).
+#[allow(clippy::type_complexity)]
+fn halo_cols(
+    pairs: &[(u32, u32)],
+    d: &Decomposition,
+    l: usize,
+    me: usize,
+) -> (Vec<(usize, Vec<u32>)>, Vec<(usize, Vec<u32>)>) {
+    let mut send: Vec<std::collections::BTreeSet<u32>> = vec![Default::default(); d.p];
+    let mut recv: Vec<std::collections::BTreeSet<u32>> = vec![Default::default(); d.p];
+    for &(t, s) in pairs {
+        let ot = d.owner(l, t as usize);
+        let os = d.owner(l, s as usize);
+        if os == me && ot != me {
+            send[ot].insert(s);
+        }
+        if ot == me && os != me {
+            recv[os].insert(s);
+        }
+    }
+    let pack = |sets: Vec<std::collections::BTreeSet<u32>>| {
+        sets.into_iter()
+            .enumerate()
+            .filter(|(q, set)| *q != me && !set.is_empty())
+            .map(|(q, set)| (q, set.into_iter().collect()))
+            .collect()
+    };
+    (pack(send), pack(recv))
+}
+
+/// Exchange per-column-node factor blocks (`bsz` f64 words each) for one
+/// coupling level: ship the owned blocks peers need, receive the halo, and
+/// return the assembled owned+halo buffer plus the global-column → block
+/// index map the marshaling offsets use. Per-rank memory stays
+/// O(owned + halo) — no rank ever holds a full level broadcast.
+#[allow(clippy::too_many_arguments)]
+fn exchange_col_blocks<E: Endpoint + ?Sized>(
+    step: u32,
+    l: usize,
+    me: usize,
+    d: &Decomposition,
+    pairs: &[(u32, u32)],
+    own: &[f64],
+    bsz: usize,
+    ep: &mut E,
+    mb: &mut Mailbox,
+) -> Result<(Vec<f64>, HashMap<u32, usize>), TransportError> {
+    let range = d.own_range(me, l);
+    let (send, recv) = halo_cols(pairs, d, l, me);
+    for (q, cols) in &send {
+        let mut data = Vec::with_capacity(cols.len() * bsz);
+        for &s in cols {
+            let sl = s as usize - range.start;
+            data.extend_from_slice(&own[sl * bsz..(sl + 1) * bsz]);
+        }
+        send_step(ep, *q, step, l, me, data)?;
+    }
+    let mut buf = own.to_vec();
+    let mut map: HashMap<u32, usize> = HashMap::with_capacity(range.len());
+    for s in range.clone() {
+        map.insert(s as u32, s - range.start);
+    }
+    let mut next = range.len();
+    for (q, cols) in &recv {
+        let msg = recv_step(mb, ep, step, l, *q)?;
+        expect_len(&msg, cols.len() * bsz, "column-factor halo")?;
+        buf.extend_from_slice(&msg.data);
+        for &s in cols {
+            map.insert(s, next);
+            next += 1;
+        }
+    }
+    Ok((buf, map))
+}
+
+/// Detach a rank's branch (global levels C..=depth) as a standalone
+/// [`BasisTree`] of depth `depth - C`: branch transfer level `lb` is global
+/// level `C + lb`, so the serial per-level kernels run on it unmodified.
+fn take_branch_tree(sm: &mut ShardedMatrix, rows: bool) -> BasisTree {
+    let depth = sm.depth();
+    let c = sm.c_level();
+    let depth_b = depth - c;
+    let ranks =
+        if rows { sm.u_ranks[c..=depth].to_vec() } else { sm.v_ranks[c..=depth].to_vec() };
+    let mut transfers = vec![Vec::new()];
+    for lb in 1..=depth_b {
+        let src =
+            if rows { &mut sm.u_transfers[c + lb] } else { &mut sm.v_transfers[c + lb] };
+        transfers.push(std::mem::take(src));
+    }
+    let leaf_bases =
+        std::mem::take(if rows { &mut sm.u_leaf_bases } else { &mut sm.v_leaf_bases });
+    BasisTree {
+        depth: depth_b,
+        ranks,
+        leaf_dim: sm.leaf_dim,
+        leaf_sizes: sm.leaf_sizes.clone(),
+        leaf_bases,
+        transfers,
+    }
+}
+
+/// Write a (new) branch tree back into the shard's flat arrays.
+fn restore_branch_tree(sm: &mut ShardedMatrix, rows: bool, tree: BasisTree) {
+    let c = sm.c_level();
+    let mut transfers = tree.transfers;
+    for (lb, tr) in transfers.iter_mut().enumerate().skip(1) {
+        let dst = if rows { &mut sm.u_transfers[c + lb] } else { &mut sm.v_transfers[c + lb] };
+        *dst = std::mem::take(tr);
+    }
+    if rows {
+        sm.u_leaf_bases = tree.leaf_bases;
+    } else {
+        sm.v_leaf_bases = tree.leaf_bases;
+    }
+}
+
+/// Detach the replicated top (global levels 0..=C) as a leafless
+/// [`BasisTree`] of depth C — only its transfer levels 1..=C carry data;
+/// the "leaf" level C gets its R/P factors from the rank gathers.
+fn take_top_tree(sm: &mut ShardedMatrix, rows: bool) -> BasisTree {
+    let c = sm.c_level();
+    let ranks = if rows { sm.u_ranks[..=c].to_vec() } else { sm.v_ranks[..=c].to_vec() };
+    let mut transfers = vec![Vec::new()];
+    for l in 1..=c {
+        let src =
+            if rows { &mut sm.top_u_transfers[l] } else { &mut sm.top_v_transfers[l] };
+        transfers.push(std::mem::take(src));
+    }
+    BasisTree {
+        depth: c,
+        ranks,
+        leaf_dim: 0,
+        leaf_sizes: vec![0; 1 << c],
+        leaf_bases: Vec::new(),
+        transfers,
+    }
+}
+
+/// Low-rank f64 words held by a branch shard (the shard's share of the
+/// serial [`crate::tree::H2Matrix::low_rank_memory_words`]): summed over
+/// ranks plus the coordinator's [`top_low_rank_words`], it reproduces the
+/// serial count exactly.
+fn branch_low_rank_words(sm: &ShardedMatrix) -> usize {
+    let depth = sm.depth();
+    let c = sm.c_level();
+    let ku = sm.u_ranks[depth];
+    let kv = sm.v_ranks[depth];
+    let mut words: usize = sm.leaf_sizes.iter().map(|&s| s * (ku + kv)).sum();
+    for l in (c + 1)..=depth {
+        words += sm.u_transfers[l].len() + sm.v_transfers[l].len();
+    }
+    for l in c..=depth {
+        words += sm.coupling[l].level.num_blocks() * sm.u_ranks[l] * sm.u_ranks[l];
+    }
+    words
+}
+
+/// Low-rank f64 words of the replicated top (transfer levels 1..=C plus
+/// coupling levels 0..C-1).
+fn top_low_rank_words(sm: &ShardedMatrix) -> usize {
+    let c = sm.c_level();
+    let mut words = 0;
+    for l in 1..=c {
+        words += sm.top_u_transfers[l].len() + sm.top_v_transfers[l].len();
+    }
+    for (l, cl) in sm.top_coupling.iter().enumerate() {
+        words += cl.num_blocks() * sm.u_ranks[l] * sm.u_ranks[l];
+    }
+    words
+}
+
+/// Overwrite the shard's replicated top arrays from one broadcast payload:
+/// U transfers 1..=C, then V transfers 1..=C, then coupling data 0..C-1,
+/// shaped by the given per-level ranks (which may differ from the shard's
+/// current ones after truncation — coupling levels are then rebuilt).
+fn unpack_top_arrays(
+    sm: &mut ShardedMatrix,
+    data: &[f64],
+    ranks: &[usize],
+    what: &str,
+) -> Result<(), TransportError> {
+    let c = sm.c_level();
+    let mut pos = 0usize;
+    let mut take = |n: usize| -> Result<std::ops::Range<usize>, TransportError> {
+        if pos + n > data.len() {
+            return Err(TransportError::Protocol(format!(
+                "{what}: truncated payload (need {} words past offset {pos}, have {})",
+                n,
+                data.len()
+            )));
+        }
+        let r = pos..pos + n;
+        pos += n;
+        Ok(r)
+    };
+    for l in 1..=c {
+        let n = (1usize << l) * ranks[l] * ranks[l - 1];
+        sm.top_u_transfers[l] = data[take(n)?].to_vec();
+    }
+    for l in 1..=c {
+        let n = (1usize << l) * ranks[l] * ranks[l - 1];
+        sm.top_v_transfers[l] = data[take(n)?].to_vec();
+    }
+    for l in 0..c {
+        let k = ranks[l];
+        let nb = sm.top_coupling[l].num_blocks();
+        let r = take(nb * k * k)?;
+        if sm.top_coupling[l].data.len() != nb * k * k {
+            let pairs = sm.top_coupling[l].pairs.clone();
+            sm.top_coupling[l] = CouplingLevel::from_pairs(pairs, 1 << l, k);
+        }
+        sm.top_coupling[l].data.copy_from_slice(&data[r]);
+    }
+    if pos != data.len() {
+        return Err(TransportError::Protocol(format!(
+            "{what}: {} trailing payload words",
+            data.len() - pos
+        )));
+    }
+    Ok(())
+}
+
+/// Run the branch side of distributed compression: orthogonalize, reweigh,
+/// truncate and project this rank's shard **in place**, exchanging only
+/// level-C factors, per-level halos and scalar reductions with the
+/// coordinator (endpoint id P) and the peer ranks. The shard never holds
+/// more than its O(N/P) branch plus O(halo) transient blocks, and every
+/// block it ends up with is bitwise-identical to the corresponding slice of
+/// the serial [`crate::compression::compress_full`] result.
+pub fn compress_branch<E: Endpoint + ?Sized>(
+    sm: &mut ShardedMatrix,
+    structure: &MatrixStructure,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    ep: &mut E,
+    mb: &mut Mailbox,
+) -> Result<(), TransportError> {
+    let d = sm.decomp;
+    let me = sm.branch_rank();
+    let depth = d.depth;
+    let c = d.c_level;
+    let depth_b = depth - c;
+    let coord = d.p;
+    let mut metrics = Metrics::new();
+    let pre_words = branch_low_rank_words(sm);
+    let old_ranks = sm.u_ranks.clone();
+
+    // --- Orthogonalize the branch bases (QR upsweep, leaves to level C). ---
+    let mut bu = take_branch_tree(sm, true);
+    let mut bv = take_branch_tree(sm, false);
+    let mut r_u: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
+    let mut r_v: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
+    r_u[depth_b] = orth_leaf_level(&mut bu, backend, &mut metrics);
+    r_v[depth_b] = orth_leaf_level(&mut bv, backend, &mut metrics);
+    for lb in (0..depth_b).rev() {
+        r_u[lb] = orth_transfer_level(&mut bu, backend, &mut metrics, lb, &r_u[lb + 1]);
+        r_v[lb] = orth_transfer_level(&mut bv, backend, &mut metrics, lb, &r_v[lb + 1]);
+    }
+
+    // --- Level-C R gather; receive the re-orthogonalized top. ---
+    if c > 0 {
+        let mut data = r_u[0].clone();
+        data.extend_from_slice(&r_v[0]);
+        send_step(ep, coord, STEP_RC, 0, me, data)?;
+        let msg = recv_step(mb, ep, STEP_TOPORTH, 0, coord)?;
+        unpack_top_arrays(sm, &msg.data, &old_ranks, "orthogonalized top broadcast")?;
+    }
+
+    // --- Absorb R factors into the owned coupling levels (C..=depth). ---
+    for l in c..=depth {
+        let k = old_ranks[l];
+        let lb = l - c;
+        let (rv_buf, rv_map) = exchange_col_blocks(
+            STEP_RV,
+            l,
+            me,
+            &d,
+            &structure.coupling[l],
+            &r_v[lb],
+            k * k,
+            ep,
+            mb,
+        )?;
+        let sc = &mut sm.coupling[l];
+        let nb = sc.level.num_blocks();
+        if nb == 0 {
+            continue;
+        }
+        let t_off: Vec<usize> = sc.level.pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
+        let s_off: Vec<usize> =
+            sc.level.pairs.iter().map(|&(_, s)| rv_map[&s] * k * k).collect();
+        absorb_level_core(
+            &mut sc.level.data,
+            nb,
+            k,
+            &r_u[lb],
+            &t_off,
+            &rv_buf,
+            &s_off,
+            backend,
+            &mut metrics,
+        );
+    }
+
+    // --- Weight downsweep over the branch levels (C..=depth). ---
+    let (zu_par_c, zv_par_c) = if c > 0 {
+        let k_par = old_ranks[c - 1];
+        let blk = k_par * k_par;
+        let want = (1usize << (c - 1)) * blk;
+        let mu = recv_step(mb, ep, STEP_ZU, 0, coord)?;
+        expect_len(&mu, want, "row-weight broadcast")?;
+        let mv = recv_step(mb, ep, STEP_ZV, 0, coord)?;
+        expect_len(&mv, want, "column-weight broadcast")?;
+        let j = me >> 1;
+        (
+            Some(mu.data[j * blk..(j + 1) * blk].to_vec()),
+            Some(mv.data[j * blk..(j + 1) * blk].to_vec()),
+        )
+    } else {
+        (None, None)
+    };
+    let mut z_u: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    let mut z_v: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    for l in c..=depth {
+        let k_l = old_ranks[l];
+        let k_par = if l > 0 { old_ranks[l - 1] } else { 0 };
+        let lb = l - c;
+        let nodes = d.branch_width(l);
+        let range = d.own_range(me, l);
+        let pairs_g = &structure.coupling[l];
+        let bsz = k_l * k_l;
+        let sc = &sm.coupling[l];
+
+        // Row side: the owned blocks already sit in the serial marshaling
+        // order (the shard slice preserves the global pair order).
+        let owners_u: Vec<usize> = sc.level.pairs.iter().map(|&(t, _)| t as usize).collect();
+        let eu: &[f64] = if lb == 0 {
+            if c == 0 {
+                &[]
+            } else {
+                &sm.top_u_transfers[c][me * k_l * k_par..(me + 1) * k_l * k_par]
+            }
+        } else {
+            &bu.transfers[lb]
+        };
+        let zp_u: Option<&[f64]> =
+            if l == c { zu_par_c.as_deref() } else { Some(&z_u[l - 1]) };
+        let zl = weight_level_core(
+            eu,
+            k_l,
+            k_par,
+            nodes,
+            &owners_u,
+            &sc.level.data,
+            true,
+            zp_u,
+            level_max_blocks(pairs_g, true),
+            backend,
+            &mut metrics,
+        );
+        z_u[l] = zl;
+
+        // Column side: route the absorbed blocks to their column owners and
+        // rebuild the per-column serial marshaling order from the global
+        // pair list.
+        let mut send_bufs: Vec<Vec<f64>> = vec![Vec::new(); d.p];
+        for (q, &(_, s)) in sc.level.pairs.iter().enumerate() {
+            let os = d.owner(l, s as usize);
+            if os != me {
+                send_bufs[os].extend_from_slice(&sc.level.data[q * bsz..(q + 1) * bsz]);
+            }
+        }
+        for (q, buf) in send_bufs.into_iter().enumerate() {
+            if q != me && !buf.is_empty() {
+                send_step(ep, q, STEP_SBLK, l, me, buf)?;
+            }
+        }
+        let mut want = vec![0usize; d.p];
+        for &(t, s) in pairs_g {
+            let ot = d.owner(l, t as usize);
+            if d.owner(l, s as usize) == me && ot != me {
+                want[ot] += 1;
+            }
+        }
+        let mut halo: Vec<Vec<f64>> = vec![Vec::new(); d.p];
+        for (q, &n) in want.iter().enumerate() {
+            if q != me && n > 0 {
+                let msg = recv_step(mb, ep, STEP_SBLK, l, q)?;
+                expect_len(&msg, n * bsz, "column coupling blocks")?;
+                halo[q] = msg.data;
+            }
+        }
+        let mut owners_v: Vec<usize> = Vec::new();
+        let mut blocks_v: Vec<f64> = Vec::new();
+        let mut my_idx = 0usize;
+        let mut halo_cursor = vec![0usize; d.p];
+        for &(t, s) in pairs_g {
+            let ot = d.owner(l, t as usize);
+            let here = ot == me;
+            if d.owner(l, s as usize) == me {
+                owners_v.push(s as usize - range.start);
+                if here {
+                    blocks_v.extend_from_slice(&sc.level.data[my_idx * bsz..(my_idx + 1) * bsz]);
+                } else {
+                    let cur = halo_cursor[ot];
+                    blocks_v.extend_from_slice(&halo[ot][cur * bsz..(cur + 1) * bsz]);
+                    halo_cursor[ot] = cur + 1;
+                }
+            }
+            if here {
+                my_idx += 1;
+            }
+        }
+        let ev: &[f64] = if lb == 0 {
+            if c == 0 {
+                &[]
+            } else {
+                &sm.top_v_transfers[c][me * k_l * k_par..(me + 1) * k_l * k_par]
+            }
+        } else {
+            &bv.transfers[lb]
+        };
+        let zp_v: Option<&[f64]> =
+            if l == c { zv_par_c.as_deref() } else { Some(&z_v[l - 1]) };
+        let zl = weight_level_core(
+            ev,
+            k_l,
+            k_par,
+            nodes,
+            &owners_v,
+            &blocks_v,
+            false,
+            zp_v,
+            level_max_blocks(pairs_g, false),
+            backend,
+            &mut metrics,
+        );
+        z_v[l] = zl;
+    }
+
+    // --- Leaf truncation: local SVDs, global σ_ref/rank reductions. ---
+    let (usvd_u, ssvd_u) = truncate_leaf_svd(&bu, &z_u[depth], backend, &mut metrics);
+    let (usvd_v, ssvd_v) = truncate_leaf_svd(&bv, &z_v[depth], backend, &mut metrics);
+    let sig_u = ssvd_u.iter().cloned().fold(0.0_f64, f64::max);
+    let sig_v = ssvd_v.iter().cloned().fold(0.0_f64, f64::max);
+    send_step(ep, coord, STEP_SIGMA, 0, me, vec![sig_u, sig_v])?;
+    let tol = recv_step(mb, ep, STEP_TOL, 0, coord)?;
+    expect_len(&tol, 4, "truncation threshold broadcast")?;
+    let (abs_tol_u, abs_tol_v) = (tol.data[0], tol.data[1]);
+
+    let raw_u = max_rank_below(&ssvd_u, bu.ranks[depth_b], abs_tol_u);
+    let raw_v = max_rank_below(&ssvd_v, bv.ranks[depth_b], abs_tol_v);
+    send_step(ep, coord, STEP_KLEAF, 0, me, vec![raw_u as f64, raw_v as f64])?;
+    let kb = recv_step(mb, ep, STEP_KLEAF_BC, 0, coord)?;
+    expect_len(&kb, 2, "leaf rank broadcast")?;
+    let mut ku_new = vec![0usize; depth + 1];
+    let mut kv_new = vec![0usize; depth + 1];
+    ku_new[depth] = kb.data[0] as usize;
+    kv_new[depth] = kb.data[1] as usize;
+
+    let mut p_u: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    let mut p_v: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    let (nlb_u, pl) = truncate_leaf_finish(&bu, &usvd_u, ku_new[depth], backend, &mut metrics);
+    p_u[depth] = pl;
+    let (nlb_v, pl) = truncate_leaf_finish(&bv, &usvd_v, kv_new[depth], backend, &mut metrics);
+    p_v[depth] = pl;
+
+    // --- Inner truncation upsweep (children l -> parents l-1) down to C. ---
+    let mut etr_u: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
+    let mut etr_v: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
+    for l in ((c + 1)..=depth).rev() {
+        let lb = l - c;
+        let (us_u, ss_u, rows_u) =
+            truncate_inner_svd(&bu, lb, &z_u[l - 1], ku_new[l], &p_u[l], backend, &mut metrics);
+        let (us_v, ss_v, rows_v) =
+            truncate_inner_svd(&bv, lb, &z_v[l - 1], kv_new[l], &p_v[l], backend, &mut metrics);
+        let raw_u = max_rank_below(&ss_u, bu.ranks[lb - 1], abs_tol_u);
+        let raw_v = max_rank_below(&ss_v, bv.ranks[lb - 1], abs_tol_v);
+        send_step(ep, coord, STEP_KINNER, l, me, vec![raw_u as f64, raw_v as f64])?;
+        let msg = recv_step(mb, ep, STEP_KINNER_BC, l, coord)?;
+        expect_len(&msg, 2, "inner rank broadcast")?;
+        ku_new[l - 1] = msg.data[0] as usize;
+        kv_new[l - 1] = msg.data[1] as usize;
+        let (etr, pp) = truncate_inner_finish(
+            &bu,
+            lb,
+            &us_u,
+            rows_u,
+            ku_new[l],
+            ku_new[l - 1],
+            &p_u[l],
+            backend,
+            &mut metrics,
+        );
+        etr_u[lb] = etr;
+        p_u[l - 1] = pp;
+        let (etr, pp) = truncate_inner_finish(
+            &bv,
+            lb,
+            &us_v,
+            rows_v,
+            kv_new[l],
+            kv_new[l - 1],
+            &p_v[l],
+            backend,
+            &mut metrics,
+        );
+        etr_v[lb] = etr;
+        p_v[l - 1] = pp;
+    }
+
+    // --- Hand the branch-root P maps up; learn the remaining top ranks. ---
+    if c > 0 {
+        let mut data = p_u[c].clone();
+        data.extend_from_slice(&p_v[c]);
+        send_step(ep, coord, STEP_PC, 0, me, data)?;
+    }
+    let mut unified = vec![0usize; depth + 1];
+    for l in c..=depth {
+        unified[l] = ku_new[l].max(kv_new[l]);
+    }
+    if c > 0 {
+        let msg = recv_step(mb, ep, STEP_TOPRES, 0, coord)?;
+        if msg.data.len() < depth + 1 {
+            return Err(TransportError::Protocol(
+                "top result broadcast shorter than the rank header".into(),
+            ));
+        }
+        for (l, u) in unified.iter_mut().enumerate() {
+            let r = msg.data[l] as usize;
+            if l >= c && r != *u {
+                return Err(TransportError::Protocol(format!(
+                    "coordinator rank {r} at level {l} contradicts the branch value {u}"
+                )));
+            }
+            *u = r;
+        }
+        unpack_top_arrays(sm, &msg.data[depth + 1..], &unified, "top result broadcast")?;
+    }
+
+    // --- Project the owned coupling levels onto the truncated bases. ---
+    for l in c..=depth {
+        let k = old_ranks[l];
+        let k_new = unified[l];
+        let nodes = d.branch_width(l);
+        let pu_pad = pad_p(&p_u[l], nodes, ku_new[l], k_new, k);
+        let pv_pad = pad_p(&p_v[l], nodes, kv_new[l], k_new, k);
+        let (pv_buf, pv_map) = exchange_col_blocks(
+            STEP_PV,
+            l,
+            me,
+            &d,
+            &structure.coupling[l],
+            &pv_pad,
+            k_new * k,
+            ep,
+            mb,
+        )?;
+        let sc = &mut sm.coupling[l];
+        let nb = sc.level.num_blocks();
+        let mut ncl = CouplingLevel::from_pairs(sc.level.pairs.clone(), nodes, k_new);
+        if nb > 0 {
+            let t_off: Vec<usize> =
+                sc.level.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
+            let s_off: Vec<usize> =
+                sc.level.pairs.iter().map(|&(_, s)| pv_map[&s] * k_new * k).collect();
+            project_level_core(
+                nb,
+                k,
+                k_new,
+                &pu_pad,
+                &t_off,
+                &sc.level.data,
+                &pv_buf,
+                &s_off,
+                &mut ncl.data,
+                backend,
+                &mut metrics,
+            );
+        }
+        sc.level = ncl;
+    }
+
+    // --- Assemble + pad the new branch bases, write back into the shard. ---
+    let unified_b = unified[c..=depth].to_vec();
+    let mut nbu =
+        BasisTree::zeros(depth_b, ku_new[c..=depth].to_vec(), bu.leaf_dim, bu.leaf_sizes.clone());
+    nbu.leaf_bases = nlb_u;
+    for lb in 1..=depth_b {
+        nbu.transfers[lb] = std::mem::take(&mut etr_u[lb]);
+    }
+    restore_branch_tree(sm, true, pad_basis(&nbu, &unified_b));
+    let mut nbv =
+        BasisTree::zeros(depth_b, kv_new[c..=depth].to_vec(), bv.leaf_dim, bv.leaf_sizes.clone());
+    nbv.leaf_bases = nlb_v;
+    for lb in 1..=depth_b {
+        nbv.transfers[lb] = std::mem::take(&mut etr_v[lb]);
+    }
+    restore_branch_tree(sm, false, pad_basis(&nbv, &unified_b));
+    sm.u_ranks = unified.clone();
+    sm.v_ranks = unified;
+
+    // --- Memory stats; doubles as the completion ack. ---
+    let post_words = branch_low_rank_words(sm);
+    send_step(ep, coord, STEP_STATS, 0, me, vec![pre_words as f64, post_words as f64])?;
+    Ok(())
+}
+
+/// Run the coordinator side of distributed compression on a top-only shard
+/// (endpoint id P): gather the level-C factors, orthogonalize/truncate/
+/// project the replicated top subtree, and drive the σ_ref and per-level
+/// rank max-reductions whose results every branch applies — the clamps
+/// (`.max(1)`, the `2·k_child` structural ceiling) happen here, *after*
+/// the reduction, so the decisions equal the serial ones bitwise.
+pub fn compress_top<E: Endpoint + ?Sized>(
+    sm: &mut ShardedMatrix,
+    structure: &MatrixStructure,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+    ep: &mut E,
+    mb: &mut Mailbox,
+) -> Result<CompressionStats, TransportError> {
+    let d = sm.decomp;
+    let depth = d.depth;
+    let c = d.c_level;
+    let p = d.p;
+    let me = p;
+    let mut metrics = Metrics::new();
+    let old_ranks = sm.u_ranks.clone();
+    let pre_top = top_low_rank_words(sm);
+
+    // --- Gather level-C R factors, re-orthogonalize + absorb the top. ---
+    let mut ttu = take_top_tree(sm, true);
+    let mut ttv = take_top_tree(sm, false);
+    let mut r_u: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    let mut r_v: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    if c > 0 {
+        let k_c = old_ranks[c];
+        let blk = k_c * k_c;
+        let mut ru_c = vec![0.0; p * blk];
+        let mut rv_c = vec![0.0; p * blk];
+        for r in 0..p {
+            let msg = recv_step(mb, ep, STEP_RC, 0, r)?;
+            expect_len(&msg, 2 * blk, "level-C R gather")?;
+            ru_c[r * blk..(r + 1) * blk].copy_from_slice(&msg.data[..blk]);
+            rv_c[r * blk..(r + 1) * blk].copy_from_slice(&msg.data[blk..]);
+        }
+        r_u[c] = ru_c;
+        r_v[c] = rv_c;
+        for l in (0..c).rev() {
+            r_u[l] = orth_transfer_level(&mut ttu, backend, &mut metrics, l, &r_u[l + 1]);
+            r_v[l] = orth_transfer_level(&mut ttv, backend, &mut metrics, l, &r_v[l + 1]);
+        }
+        for (l, cl) in sm.top_coupling.iter_mut().enumerate() {
+            let nb = cl.num_blocks();
+            if nb == 0 {
+                continue;
+            }
+            let k = old_ranks[l];
+            let t_off: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
+            let s_off: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize * k * k).collect();
+            absorb_level_core(
+                &mut cl.data,
+                nb,
+                k,
+                &r_u[l],
+                &t_off,
+                &r_v[l],
+                &s_off,
+                backend,
+                &mut metrics,
+            );
+        }
+        let mut data = Vec::new();
+        for tr in &ttu.transfers[1..=c] {
+            data.extend_from_slice(tr);
+        }
+        for tr in &ttv.transfers[1..=c] {
+            data.extend_from_slice(tr);
+        }
+        for cl in &sm.top_coupling {
+            data.extend_from_slice(&cl.data);
+        }
+        for r in 0..p {
+            send_step(ep, r, STEP_TOPORTH, 0, me, data.clone())?;
+        }
+    }
+
+    // --- Weight downsweep over the top levels (0..C-1); broadcast Z_{C-1}. ---
+    let mut z_u: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    let mut z_v: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    for l in 0..c {
+        let k_l = old_ranks[l];
+        let k_par = if l > 0 { old_ranks[l - 1] } else { 0 };
+        let nodes = 1usize << l;
+        let cl = &sm.top_coupling[l];
+        let owners_u: Vec<usize> = cl.pairs.iter().map(|&(t, _)| t as usize).collect();
+        let owners_v: Vec<usize> = cl.pairs.iter().map(|&(_, s)| s as usize).collect();
+        let zp_u: Option<&[f64]> = if l > 0 { Some(&z_u[l - 1]) } else { None };
+        let zl = weight_level_core(
+            &ttu.transfers[l],
+            k_l,
+            k_par,
+            nodes,
+            &owners_u,
+            &cl.data,
+            true,
+            zp_u,
+            level_max_blocks(&cl.pairs, true),
+            backend,
+            &mut metrics,
+        );
+        z_u[l] = zl;
+        let zp_v: Option<&[f64]> = if l > 0 { Some(&z_v[l - 1]) } else { None };
+        let zl = weight_level_core(
+            &ttv.transfers[l],
+            k_l,
+            k_par,
+            nodes,
+            &owners_v,
+            &cl.data,
+            false,
+            zp_v,
+            level_max_blocks(&cl.pairs, false),
+            backend,
+            &mut metrics,
+        );
+        z_v[l] = zl;
+    }
+    if c > 0 {
+        for r in 0..p {
+            send_step(ep, r, STEP_ZU, 0, me, z_u[c - 1].clone())?;
+            send_step(ep, r, STEP_ZV, 0, me, z_v[c - 1].clone())?;
+        }
+    }
+
+    // --- σ_ref and leaf-rank reductions. ---
+    let (mut sig_u, mut sig_v) = (0.0_f64, 0.0_f64);
+    for r in 0..p {
+        let msg = recv_step(mb, ep, STEP_SIGMA, 0, r)?;
+        expect_len(&msg, 2, "sigma partials")?;
+        sig_u = sig_u.max(msg.data[0]);
+        sig_v = sig_v.max(msg.data[1]);
+    }
+    let abs_tol_u = truncation_threshold(tau, sig_u);
+    let abs_tol_v = truncation_threshold(tau, sig_v);
+    for r in 0..p {
+        send_step(ep, r, STEP_TOL, 0, me, vec![abs_tol_u, abs_tol_v, sig_u, sig_v])?;
+    }
+    let mut ku_new = vec![0usize; depth + 1];
+    let mut kv_new = vec![0usize; depth + 1];
+    let (mut raw_u, mut raw_v) = (0usize, 0usize);
+    for r in 0..p {
+        let msg = recv_step(mb, ep, STEP_KLEAF, 0, r)?;
+        expect_len(&msg, 2, "leaf rank partials")?;
+        raw_u = raw_u.max(msg.data[0] as usize);
+        raw_v = raw_v.max(msg.data[1] as usize);
+    }
+    ku_new[depth] = raw_u.max(1);
+    kv_new[depth] = raw_v.max(1);
+    for r in 0..p {
+        send_step(
+            ep,
+            r,
+            STEP_KLEAF_BC,
+            0,
+            me,
+            vec![ku_new[depth] as f64, kv_new[depth] as f64],
+        )?;
+    }
+
+    // --- Inner-level rank reductions for the branch levels. ---
+    for l in ((c + 1)..=depth).rev() {
+        let (mut raw_u, mut raw_v) = (0usize, 0usize);
+        for r in 0..p {
+            let msg = recv_step(mb, ep, STEP_KINNER, l, r)?;
+            expect_len(&msg, 2, "inner rank partials")?;
+            raw_u = raw_u.max(msg.data[0] as usize);
+            raw_v = raw_v.max(msg.data[1] as usize);
+        }
+        ku_new[l - 1] = raw_u.max(1).min(2 * ku_new[l]);
+        kv_new[l - 1] = raw_v.max(1).min(2 * kv_new[l]);
+        for r in 0..p {
+            send_step(
+                ep,
+                r,
+                STEP_KINNER_BC,
+                l,
+                me,
+                vec![ku_new[l - 1] as f64, kv_new[l - 1] as f64],
+            )?;
+        }
+    }
+
+    // --- Truncate the top subtree with the gathered level-C P maps. ---
+    let mut p_u: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    let mut p_v: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    let mut etr_u: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    let mut etr_v: Vec<Vec<f64>> = vec![Vec::new(); c + 1];
+    if c > 0 {
+        let k_c = old_ranks[c];
+        let (bu, bv) = (ku_new[c] * k_c, kv_new[c] * k_c);
+        let mut pu_c = vec![0.0; p * bu];
+        let mut pv_c = vec![0.0; p * bv];
+        for r in 0..p {
+            let msg = recv_step(mb, ep, STEP_PC, 0, r)?;
+            expect_len(&msg, bu + bv, "level-C P gather")?;
+            pu_c[r * bu..(r + 1) * bu].copy_from_slice(&msg.data[..bu]);
+            pv_c[r * bv..(r + 1) * bv].copy_from_slice(&msg.data[bu..]);
+        }
+        p_u[c] = pu_c;
+        p_v[c] = pv_c;
+        for l in (1..=c).rev() {
+            let (us, ss, rows) = truncate_inner_svd(
+                &ttu,
+                l,
+                &z_u[l - 1],
+                ku_new[l],
+                &p_u[l],
+                backend,
+                &mut metrics,
+            );
+            ku_new[l - 1] = max_rank_below(&ss, old_ranks[l - 1], abs_tol_u)
+                .max(1)
+                .min(2 * ku_new[l]);
+            let (etr, pp) = truncate_inner_finish(
+                &ttu,
+                l,
+                &us,
+                rows,
+                ku_new[l],
+                ku_new[l - 1],
+                &p_u[l],
+                backend,
+                &mut metrics,
+            );
+            etr_u[l] = etr;
+            p_u[l - 1] = pp;
+            let (us, ss, rows) = truncate_inner_svd(
+                &ttv,
+                l,
+                &z_v[l - 1],
+                kv_new[l],
+                &p_v[l],
+                backend,
+                &mut metrics,
+            );
+            kv_new[l - 1] = max_rank_below(&ss, old_ranks[l - 1], abs_tol_v)
+                .max(1)
+                .min(2 * kv_new[l]);
+            let (etr, pp) = truncate_inner_finish(
+                &ttv,
+                l,
+                &us,
+                rows,
+                kv_new[l],
+                kv_new[l - 1],
+                &p_v[l],
+                backend,
+                &mut metrics,
+            );
+            etr_v[l] = etr;
+            p_v[l - 1] = pp;
+        }
+    }
+    let unified: Vec<usize> = (0..=depth).map(|l| ku_new[l].max(kv_new[l])).collect();
+
+    // --- Project the top coupling levels, pad the new top transfers. ---
+    for l in 0..c {
+        let k = old_ranks[l];
+        let k_new = unified[l];
+        let nodes = 1usize << l;
+        let cl = &mut sm.top_coupling[l];
+        let nb = cl.num_blocks();
+        let mut ncl = CouplingLevel::from_pairs(cl.pairs.clone(), nodes, k_new);
+        if nb > 0 {
+            let pu = pad_p(&p_u[l], nodes, ku_new[l], k_new, k);
+            let pv = pad_p(&p_v[l], nodes, kv_new[l], k_new, k);
+            let t_off: Vec<usize> =
+                cl.pairs.iter().map(|&(t, _)| t as usize * k_new * k).collect();
+            let s_off: Vec<usize> =
+                cl.pairs.iter().map(|&(_, s)| s as usize * k_new * k).collect();
+            project_level_core(
+                nb,
+                k,
+                k_new,
+                &pu,
+                &t_off,
+                &cl.data,
+                &pv,
+                &s_off,
+                &mut ncl.data,
+                backend,
+                &mut metrics,
+            );
+        }
+        *cl = ncl;
+    }
+    let mut ntu = BasisTree::zeros(c, ku_new[..=c].to_vec(), 0, vec![0; 1 << c]);
+    let mut ntv = BasisTree::zeros(c, kv_new[..=c].to_vec(), 0, vec![0; 1 << c]);
+    for l in 1..=c {
+        ntu.transfers[l] = std::mem::take(&mut etr_u[l]);
+        ntv.transfers[l] = std::mem::take(&mut etr_v[l]);
+    }
+    let ntu = pad_basis(&ntu, &unified[..=c]);
+    let ntv = pad_basis(&ntv, &unified[..=c]);
+    for l in 1..=c {
+        sm.top_u_transfers[l] = ntu.transfers[l].clone();
+        sm.top_v_transfers[l] = ntv.transfers[l].clone();
+    }
+    sm.u_ranks = unified.clone();
+    sm.v_ranks = unified.clone();
+
+    // --- Broadcast the truncated top; gather the memory stats. ---
+    if c > 0 {
+        let mut data: Vec<f64> = unified.iter().map(|&r| r as f64).collect();
+        for tr in &sm.top_u_transfers[1..=c] {
+            data.extend_from_slice(tr);
+        }
+        for tr in &sm.top_v_transfers[1..=c] {
+            data.extend_from_slice(tr);
+        }
+        for cl in &sm.top_coupling {
+            data.extend_from_slice(&cl.data);
+        }
+        for r in 0..p {
+            send_step(ep, r, STEP_TOPRES, 0, me, data.clone())?;
+        }
+    }
+    let mut pre_words = pre_top;
+    let mut post_words = top_low_rank_words(sm);
+    for r in 0..p {
+        let msg = recv_step(mb, ep, STEP_STATS, 0, r)?;
+        expect_len(&msg, 2, "memory stats partials")?;
+        pre_words += msg.data[0] as usize;
+        post_words += msg.data[1] as usize;
+    }
+    Ok(CompressionStats {
+        old_ranks,
+        new_ranks: unified,
+        pre_words,
+        post_words,
+        sigma_ref: sig_u,
+    })
+}
+
+/// Distributed compression over in-process threads: shard `a` over `p`
+/// branch ranks plus a coordinator (endpoint id `p` — always present,
+/// even for P = 1), run [`compress_branch`] on every shard and
+/// [`compress_top`] on the top-only shard concurrently, and return the
+/// compressed shards, the compressed top and the serial-identical
+/// [`CompressionStats`]. The global matrix is never materialized: each
+/// rank holds O(N/P) matrix data throughout.
+pub fn compress_sharded(
+    a: &H2Matrix,
+    p: usize,
+    tau: f64,
+    backend: &dyn ComputeBackend,
+) -> Result<(Vec<ShardedMatrix>, ShardedMatrix, CompressionStats), TransportError> {
+    let d = Decomposition::new(p, a.depth()).map_err(|e| TransportError::Protocol(e.to_string()))?;
+    let structure = MatrixStructure {
+        coupling: a.coupling.iter().map(|cl| cl.pairs.clone()).collect(),
+        dense: a.dense.pairs.clone(),
+    };
+    let mut shards: Vec<ShardedMatrix> =
+        (0..p).map(|r| ShardedMatrix::from_global(a, d, r)).collect();
+    let mut top = ShardedMatrix::top_from_global(a, d);
+
+    let mut eps = inproc::mesh(p + 1);
+    let top_ep = eps.pop().expect("mesh endpoint count");
+    let structure_ref = &structure;
+    let n_eps = p + 1;
+    let mut jobs: Vec<
+        Box<dyn FnOnce() -> Result<Option<CompressionStats>, TransportError> + Send + '_>,
+    > = Vec::with_capacity(n_eps);
+    for (sm, mut ep) in shards.iter_mut().zip(eps) {
+        jobs.push(Box::new(move || {
+            let me = sm.branch_rank();
+            let mut mb = Mailbox::new();
+            match catch_unwind(AssertUnwindSafe(|| {
+                compress_branch(sm, structure_ref, tau, backend, &mut ep, &mut mb)
+            })) {
+                Ok(Ok(())) => Ok(None),
+                Ok(Err(e)) => {
+                    abort_peers(&mut ep, n_eps, me);
+                    Err(e)
+                }
+                Err(panic) => {
+                    abort_peers(&mut ep, n_eps, me);
+                    resume_unwind(panic)
+                }
+            }
+        }));
+    }
+    {
+        let top_ref = &mut top;
+        let mut ep = top_ep;
+        jobs.push(Box::new(move || {
+            let mut mb = Mailbox::new();
+            match catch_unwind(AssertUnwindSafe(|| {
+                compress_top(top_ref, structure_ref, tau, backend, &mut ep, &mut mb)
+            })) {
+                Ok(Ok(stats)) => Ok(Some(stats)),
+                Ok(Err(e)) => {
+                    abort_peers(&mut ep, n_eps, p);
+                    Err(e)
+                }
+                Err(panic) => {
+                    abort_peers(&mut ep, n_eps, p);
+                    resume_unwind(panic)
+                }
+            }
+        }));
+    }
+    let mut stats = None;
+    for r in RankPool::global().scoped(jobs) {
+        if let Some(s) = r? {
+            stats = Some(s);
+        }
+    }
+    let stats = stats.expect("coordinator job always returns stats on success");
+    Ok((shards, top, stats))
 }
 
 #[cfg(test)]

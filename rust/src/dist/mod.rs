@@ -90,7 +90,9 @@ pub mod transport;
 pub use self::exchange as plan;
 
 pub use self::branch::{BranchIo, BranchPlan, BranchWorkspace};
-pub use self::compress::{dist_compress, DistCompressReport};
+pub use self::compress::{
+    compress_branch, compress_sharded, compress_top, dist_compress, DistCompressReport,
+};
 pub use self::decomposition::{Decomposition, DecompositionError};
 pub use self::exchange::{ExchangePlan, LevelExchange};
 pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};

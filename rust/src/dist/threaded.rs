@@ -586,7 +586,7 @@ pub(crate) fn run_top_master<E: Endpoint>(
 /// rank body failed: a `Shutdown` broadcast turns into
 /// [`TransportError::Closed`] inside their [`Mailbox`] waits, so one
 /// failing rank surfaces as an error at every other instead of a hang.
-fn abort_peers<E: Endpoint>(ep: &mut E, n_eps: usize, src: usize) {
+pub(crate) fn abort_peers<E: Endpoint>(ep: &mut E, n_eps: usize, src: usize) {
     for dst in 0..n_eps {
         if dst != src {
             let _ = ep.send(dst, Message::new(MsgKind::Shutdown, 0, src, Vec::new()));

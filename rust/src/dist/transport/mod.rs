@@ -219,6 +219,16 @@ pub enum MsgKind {
     Barrier,
     /// Session end: the coordinator tells a worker to exit (socket only).
     Shutdown,
+    /// Distributed compression, orthogonalization phase: the level-C
+    /// R-factor gather to the coordinator, the re-orthogonalized top
+    /// broadcast back, and the per-level R_v halo exchange between ranks
+    /// (`dist::compress` encodes the sub-step in the tag's level word).
+    Orthogonalize,
+    /// Distributed compression, truncation phase: the session start frame,
+    /// the σ_ref/k_new partial reductions and their broadcast decisions,
+    /// the level-C projection-factor gather, the S-block and P_v
+    /// exchanges, and the final stats ack.
+    Truncate,
 }
 
 impl MsgKind {
@@ -234,6 +244,8 @@ impl MsgKind {
             MsgKind::Trace => 7,
             MsgKind::Barrier => 8,
             MsgKind::Shutdown => 9,
+            MsgKind::Orthogonalize => 10,
+            MsgKind::Truncate => 11,
         }
     }
 
@@ -249,6 +261,8 @@ impl MsgKind {
             7 => MsgKind::Trace,
             8 => MsgKind::Barrier,
             9 => MsgKind::Shutdown,
+            10 => MsgKind::Orthogonalize,
+            11 => MsgKind::Truncate,
             _ => return None,
         })
     }
@@ -266,6 +280,8 @@ impl MsgKind {
             MsgKind::Trace => "trace",
             MsgKind::Barrier => "barrier",
             MsgKind::Shutdown => "shutdown",
+            MsgKind::Orthogonalize => "orthogonalize",
+            MsgKind::Truncate => "truncate",
         }
     }
 }
@@ -452,6 +468,8 @@ mod tests {
             MsgKind::Trace,
             MsgKind::Barrier,
             MsgKind::Shutdown,
+            MsgKind::Orthogonalize,
+            MsgKind::Truncate,
         ] {
             assert_eq!(MsgKind::from_u8(k.to_u8()), Some(k));
         }

@@ -304,18 +304,23 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                 return; // dropping the session shuts the workers down
             }
             let mut slots = depth.saturating_sub(inflight.len());
+            // The fused width must stay expressible in the wire's 10-bit
+            // nv field whatever the options said — the session layer only
+            // validates per-submit widths, so the *combined* cap is
+            // enforced here, at the fuse site.
+            let cap = shared.max_nv.min(MAX_WIRE_NV);
             while slots > 0 && !q.pending.is_empty() {
                 // FIFO coalesce: fuse queued requests until the cap.
                 let mut reqs: Vec<PendingReq> = Vec::new();
                 let mut nv = 0usize;
                 while let Some(front) = q.pending.front() {
-                    if !reqs.is_empty() && nv + front.nv > shared.max_nv {
+                    if !reqs.is_empty() && nv + front.nv > cap {
                         break;
                     }
                     let r = q.pending.pop_front().expect("front exists");
                     nv += r.nv;
                     reqs.push(r);
-                    if nv >= shared.max_nv {
+                    if nv >= cap {
                         break;
                     }
                 }

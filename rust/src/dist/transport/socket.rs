@@ -99,8 +99,11 @@ use std::time::{Duration, Instant};
 
 use super::recording::{CommDir, CommEvent, Recording};
 use super::{Endpoint, Mailbox, MatrixJob, Message, MsgKind, Tag, TransportError};
+use crate::admissibility::MatrixStructure;
+use crate::compression::CompressionStats;
 use crate::construct::FORBID_FULL_MATRIX_ENV;
 use crate::dist::branch::{fill_io_input, BranchIo, BranchPlan, BranchWorkspace};
+use crate::dist::compress::{compress_branch, compress_top};
 use crate::dist::shard::ShardedMatrix;
 use crate::dist::threaded::{
     measured_trace_json, run_branch, run_top_master, RankTrace, TopPlan, YSink,
@@ -188,6 +191,11 @@ const PID_BITS: u32 = 20;
 /// Widest product expressible on the wire (and thus the coalescing cap).
 pub const MAX_WIRE_NV: usize = (1 << NV_BITS) - 1;
 
+/// Level word of the compression start frame (kind `Truncate`): every
+/// in-compression `Truncate` sub-step rides a level word of at least
+/// `4 << 8` (see `dist::compress`), so 0 is unambiguous.
+const COMPRESS_START_LEVEL: u32 = 0;
+
 /// The wire form of a product id: `Output`/`Metrics`/`Trace` echo it in
 /// their `level` word. 2^20 in-flight-distinguishable products is far
 /// beyond any real pipeline depth.
@@ -212,13 +220,25 @@ struct InputFlags {
     pid: u32,
 }
 
-fn unpack_input_flags(level: u32) -> InputFlags {
-    InputFlags {
+/// Decode an `Input` level word. The nv range is validated here, in every
+/// build: the 10-bit field cannot exceed [`MAX_WIRE_NV`], but a corrupt or
+/// mis-packed frame can declare nv = 0, which would silently shape every
+/// downstream buffer to zero — so it is a protocol error, not a
+/// `debug_assert`.
+fn unpack_input_flags(level: u32) -> Result<InputFlags, TransportError> {
+    let flags = InputFlags {
         trace: level & 1 == 1,
         pipelined: level & 2 == 2,
         nv: ((level >> 2) & (MAX_WIRE_NV as u32)) as usize,
         pid: level >> (2 + NV_BITS),
+    };
+    if flags.nv == 0 {
+        return Err(TransportError::Protocol(format!(
+            "input frame level word {level:#x} declares nv = 0 (product {})",
+            flags.pid
+        )));
     }
+    Ok(flags)
 }
 
 // ---------------------------------------------------------------- framing
@@ -475,7 +495,7 @@ pub fn run_worker(
     p: usize,
     nv: usize,
 ) -> Result<(), TransportError> {
-    let (sm, structure) = job
+    let (mut sm, structure) = job
         .build_branch(p, rank)
         .map_err(|e| TransportError::Protocol(e.to_string()))?;
     let d = sm.decomp;
@@ -510,26 +530,49 @@ pub fn run_worker(
         let _ = job.build(); // panics under H2OPUS_FORBID_FULL_MATRIX
     }
 
-    // Product loop: each Input starts one product; Shutdown (surfaced by
-    // the mailbox as Closed) or coordinator EOF ends the session.
+    // Product loop: each Input starts one product, a level-0 Truncate
+    // frame starts an in-place distributed compression of the shard;
+    // Shutdown (surfaced by the mailbox as Closed) or coordinator EOF
+    // ends the session.
     let mut mb = Mailbox::new();
     loop {
-        let input = match mb.recv_kind(&mut ep, MsgKind::Input) {
+        let input = match mb.recv_where(&mut ep, |t| {
+            t.kind == MsgKind::Input
+                || (t.kind == MsgKind::Truncate && t.level == COMPRESS_START_LEVEL)
+        }) {
             Ok(m) => m,
             Err(TransportError::Closed(_)) => return Ok(()),
             Err(e) => return Err(e),
         };
-        let flags = unpack_input_flags(input.tag.level);
+        if input.tag.kind == MsgKind::Truncate {
+            // Compression start frame: [tau]. The shard is compressed in
+            // place — this process never holds more than its branch —
+            // and every rank-dependent cached plan/workspace is invalid
+            // afterwards, so the slot cache is rebuilt lazily per width.
+            if input.data.len() != 1 {
+                return Err(TransportError::Protocol(format!(
+                    "rank {rank}: compression start frame has {} payload words, expected 1",
+                    input.data.len()
+                )));
+            }
+            // Test hook: crash on the compression start ("" = any rank,
+            // "<rank>" = that rank), so mid-compression poisoning — every
+            // peer erroring out instead of hanging — can be asserted.
+            if let Ok(v) = std::env::var("H2OPUS_TEST_CRASH_ON_COMPRESS") {
+                if v.is_empty() || v.parse::<usize>() == Ok(rank) {
+                    std::process::exit(3);
+                }
+            }
+            compress_branch(&mut sm, &structure, input.data[0], &backend, &mut ep, &mut mb)?;
+            slots.clear();
+            continue;
+        }
+        let flags = unpack_input_flags(input.tag.level)
+            .map_err(|e| TransportError::Protocol(format!("rank {rank}: {e}")))?;
         if let Some((pid, at_rank)) = crash_on_product {
             if pid == flags.pid && at_rank.unwrap_or(rank) == rank {
                 std::process::exit(3);
             }
-        }
-        if flags.nv == 0 {
-            return Err(TransportError::Protocol(format!(
-                "rank {rank}: input frame for product {} declares nv = 0",
-                flags.pid
-            )));
         }
         let slot =
             slots.entry(flags.nv).or_insert_with(|| ProductSlot::build(&sm, &ex, flags.nv));
@@ -710,6 +753,11 @@ pub struct SocketSession {
     /// Top-only shard: the replicated top subtree + the (full) cluster
     /// tree — the coordinator never holds branch matrix data.
     sm_top: ShardedMatrix,
+    /// Replicated index-only structure (coupling/dense pair lists): what
+    /// the compression protocol derives its exchange sets from.
+    structure: MatrixStructure,
+    /// Whether [`SocketSession::compress`] already ran.
+    compressed: bool,
     /// Top marshaling offsets, cached per product width (the serving
     /// layer runs variable-nv products; each width's plan is built once).
     top_plans: HashMap<usize, TopPlan>,
@@ -931,6 +979,8 @@ impl SocketSession {
             nv,
             opts,
             sm_top,
+            structure,
+            compressed: false,
             top_plans,
             io,
             hub: Some(hub),
@@ -976,6 +1026,73 @@ impl SocketSession {
     /// Number of submitted pipelined products not yet collected.
     pub fn in_flight(&self) -> usize {
         self.inflight.len()
+    }
+
+    /// Whether [`SocketSession::compress`] has already run on this
+    /// session (it runs at most once).
+    pub fn is_compressed(&self) -> bool {
+        self.compressed
+    }
+
+    /// Compress the distributed operator in place to relative tolerance
+    /// `tau`: every worker recompresses its shard (never holding more
+    /// than its O(N/P) branch — the `H2OPUS_FORBID_FULL_MATRIX` guard
+    /// stays in force), the coordinator recompresses its replicated top
+    /// and drives the global σ_ref/rank reductions, and every subsequent
+    /// product of this session applies the compressed operator. The
+    /// result is bitwise identical to the serial
+    /// [`crate::compression::compress_full`] followed by re-sharding.
+    ///
+    /// Refuses to run with pipelined products in flight (the protocol
+    /// interleaves on the same wire) or twice on one session. A transport
+    /// error mid-compression poisons the session exactly like a failed
+    /// product: shards may be half-transformed, so no further products
+    /// are accepted.
+    pub fn compress(&mut self, tau: f64) -> Result<CompressionStats, TransportError> {
+        if !(tau.is_finite() && tau > 0.0) {
+            return Err(TransportError::Protocol(format!(
+                "compression tolerance must be finite and positive (got {tau})"
+            )));
+        }
+        if !self.inflight.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "compress cannot interleave with {} in-flight pipelined products — wait() \
+                 on them first",
+                self.inflight.len()
+            )));
+        }
+        if self.compressed {
+            return Err(TransportError::Protocol(
+                "session operator is already compressed".into(),
+            ));
+        }
+        let pid = self.products;
+        match self.compress_inner(tau) {
+            Ok(stats) => {
+                self.compressed = true;
+                Ok(stats)
+            }
+            Err(e) => Err(self.poison(pid, e)),
+        }
+    }
+
+    /// The compression body: broadcast the start frame, then run the
+    /// coordinator side of the `dist::compress` protocol over the hub.
+    fn compress_inner(&mut self, tau: f64) -> Result<CompressionStats, TransportError> {
+        let Self { p, sm_top, structure, top_plans, hub, mb, .. } = self;
+        let p = *p;
+        let hub = hub.as_mut().ok_or_else(closed_session)?;
+        for r in 0..p {
+            hub.send(
+                r,
+                Message::new(MsgKind::Truncate, COMPRESS_START_LEVEL as usize, p, vec![tau]),
+            )?;
+        }
+        let backend = crate::backend::native::NativeBackend;
+        let stats = compress_top(sm_top, structure, tau, &backend, hub, mb)?;
+        // Every cached top marshaling plan was shaped by the old ranks.
+        top_plans.clear();
+        Ok(stats)
     }
 
     /// One synchronous distributed product y = A·x over the live worker

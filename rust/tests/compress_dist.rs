@@ -1,0 +1,284 @@
+//! Distributed-compression conformance suite: compressing an operator
+//! that only ever exists as per-rank shards must be *bitwise identical*
+//! to serial [`compress_full`] followed by re-sharding — every basis,
+//! transfer, coupling block, rank vector and the reported stats — for
+//! P ∈ {1, 2, 4, 8} on the in-process transport and for live worker
+//! subprocesses over the socket transport (where every rank runs under
+//! the `H2OPUS_FORBID_FULL_MATRIX` guard, so no process ever holds the
+//! global matrix). A worker crash mid-compression must poison the
+//! session cleanly, and compressed per-rank storage must stay O(N/P).
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::compression::{compress_full, CompressionStats};
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::transport::{JobKind, MatrixJob};
+use h2opus::dist::{compress_sharded, Decomposition, ShardedMatrix};
+use h2opus::geometry::PointSet;
+use h2opus::metrics::Metrics;
+
+const TAU: f64 = 1e-4;
+
+/// The conformance matrix: N = 256, depth 4 (so P = 8 splits at C = 3).
+fn conformance_job() -> MatrixJob {
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    }
+}
+
+/// The fractional solver's kernel, so the suite covers the operator the
+/// session solver actually compresses.
+fn fractional_job() -> MatrixJob {
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 4,
+        corr_len: 0.0,
+        kind: JobKind::Fractional { beta: 0.75 },
+    }
+}
+
+/// Serial reference: compress a clone of `a` with [`compress_full`].
+fn serial_compress(a: &h2opus::tree::H2Matrix) -> (h2opus::tree::H2Matrix, CompressionStats) {
+    let mut work = a.clone();
+    let mut metrics = Metrics::new();
+    compress_full(&mut work, TAU, &NativeBackend, &mut metrics)
+}
+
+fn assert_shards_equal(a: &ShardedMatrix, b: &ShardedMatrix, what: &str) {
+    assert_eq!(a.rank, b.rank, "{what}: rank");
+    assert_eq!(a.decomp, b.decomp, "{what}: decomp");
+    assert_eq!(a.u_ranks, b.u_ranks, "{what}: u_ranks");
+    assert_eq!(a.v_ranks, b.v_ranks, "{what}: v_ranks");
+    assert_eq!(a.leaf_dim, b.leaf_dim, "{what}: leaf_dim");
+    assert_eq!(a.leaf_range, b.leaf_range, "{what}: leaf_range");
+    assert_eq!(a.leaf_sizes, b.leaf_sizes, "{what}: leaf_sizes");
+    assert_eq!(a.u_leaf_bases, b.u_leaf_bases, "{what}: u leaf bases");
+    assert_eq!(a.v_leaf_bases, b.v_leaf_bases, "{what}: v leaf bases");
+    assert_eq!(a.u_transfers, b.u_transfers, "{what}: u transfers");
+    assert_eq!(a.v_transfers, b.v_transfers, "{what}: v transfers");
+    assert_eq!(a.top_u_transfers, b.top_u_transfers, "{what}: top u transfers");
+    assert_eq!(a.top_v_transfers, b.top_v_transfers, "{what}: top v transfers");
+    assert_eq!(a.top_coupling.len(), b.top_coupling.len(), "{what}: top levels");
+    for (l, (ca, cb)) in a.top_coupling.iter().zip(&b.top_coupling).enumerate() {
+        assert_eq!(ca.pairs, cb.pairs, "{what}: top coupling pairs L{l}");
+        assert_eq!(ca.batches, cb.batches, "{what}: top coupling batches L{l}");
+        assert_eq!(ca.data, cb.data, "{what}: top coupling data L{l}");
+    }
+    for l in 0..a.coupling.len() {
+        let (ca, cb) = (&a.coupling[l], &b.coupling[l]);
+        assert_eq!(ca.row_start, cb.row_start, "{what}: coupling row_start L{l}");
+        assert_eq!(ca.level.pairs, cb.level.pairs, "{what}: coupling pairs L{l}");
+        assert_eq!(ca.level.batches, cb.level.batches, "{what}: coupling batches L{l}");
+        assert_eq!(ca.level.data, cb.level.data, "{what}: coupling data L{l}");
+    }
+    assert_eq!(a.dense.row_start, b.dense.row_start, "{what}: dense row_start");
+    assert_eq!(a.dense.blocks.pairs, b.dense.blocks.pairs, "{what}: dense pairs");
+    assert_eq!(a.dense.blocks.data, b.dense.blocks.data, "{what}: dense data");
+}
+
+fn assert_stats_equal(got: &CompressionStats, want: &CompressionStats, what: &str) {
+    assert_eq!(got.old_ranks, want.old_ranks, "{what}: old_ranks");
+    assert_eq!(got.new_ranks, want.new_ranks, "{what}: new_ranks");
+    assert_eq!(got.pre_words, want.pre_words, "{what}: pre_words");
+    assert_eq!(got.post_words, want.post_words, "{what}: post_words");
+    assert_eq!(
+        got.sigma_ref.to_bits(),
+        want.sigma_ref.to_bits(),
+        "{what}: sigma_ref ({} vs {})",
+        got.sigma_ref,
+        want.sigma_ref
+    );
+}
+
+/// In-process transport: branch ranks plus a coordinator compress the
+/// sharded operator over messages only, and every resulting shard is
+/// bit-identical to slicing the serially compressed matrix — including
+/// the rank decisions (the per-branch σ_ref/k_new partials reduce to the
+/// exact serial maxima) and the reported stats.
+#[test]
+fn sharded_compression_bitwise_matches_serial() {
+    for (job, ps) in
+        [(conformance_job(), &[1usize, 2, 4, 8][..]), (fractional_job(), &[2usize, 4][..])]
+    {
+        let a = job.build();
+        let (ac, serial_stats) = serial_compress(&a);
+        assert!(
+            serial_stats.post_words < serial_stats.pre_words,
+            "{:?}: serial compression must actually truncate for the test to bite",
+            job.kind
+        );
+        for &p in ps {
+            let what = format!("{:?} P={p}", job.kind);
+            let (shards, top, stats) =
+                compress_sharded(&a, p, TAU, &NativeBackend).expect("distributed compression");
+            let d = Decomposition::new(p, a.depth()).unwrap();
+            for (r, s) in shards.iter().enumerate() {
+                let expect = ShardedMatrix::from_global(&ac, d, r);
+                assert_shards_equal(s, &expect, &format!("{what} rank {r}"));
+            }
+            let top_expect = ShardedMatrix::top_from_global(&ac, d);
+            assert_shards_equal(&top, &top_expect, &format!("{what} top"));
+            assert_stats_equal(&stats, &serial_stats, &what);
+        }
+    }
+}
+
+/// Compressed per-rank storage stays O(N/P): the compressed shards
+/// exactly partition the compressed serial matrix (one replicated top
+/// apart), every rank fits in compressed-serial/P plus the replication +
+/// imbalance slack, and the peak shrinks as P grows.
+#[test]
+fn compressed_shard_memory_stays_o_n_over_p() {
+    // N = 1024, depth 6 — big enough that the replicated top is small
+    // against 1/P.
+    let points = PointSet::grid_2d(32, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    let a = build_h2(points, &kernel, &cfg);
+    let (ac, serial_stats) = serial_compress(&a);
+    let serial_bytes = ac.memory_words() * 8;
+    let mut prev_max = serial_bytes + 1;
+    for p in [2usize, 4, 8] {
+        let (shards, _top, stats) =
+            compress_sharded(&a, p, TAU, &NativeBackend).expect("distributed compression");
+        assert_eq!(stats.post_words, serial_stats.post_words, "P={p}: post_words");
+        let branch_total: usize = shards.iter().map(|s| s.branch_words()).sum();
+        let rep = shards[0].replication_words();
+        assert_eq!(branch_total + rep, ac.memory_words(), "P={p}: not a partition");
+        for (r, s) in shards.iter().enumerate() {
+            let imbalance = s.branch_words().saturating_sub(branch_total / p);
+            let slack = (rep + imbalance) * 8;
+            assert!(
+                s.matrix_bytes() <= serial_bytes / p + slack,
+                "P={p} rank {r}: {} B > compressed serial/P {} B + slack {} B",
+                s.matrix_bytes(),
+                serial_bytes / p,
+                slack
+            );
+        }
+        let max_bytes = shards.iter().map(|s| s.matrix_bytes()).max().unwrap();
+        assert!(
+            max_bytes < prev_max,
+            "P={p}: peak compressed shard {max_bytes} B did not shrink (prev {prev_max} B)"
+        );
+        prev_max = max_bytes;
+    }
+}
+
+#[cfg(unix)]
+mod socket {
+    use super::*;
+    use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+    use h2opus::dist::transport::TransportError;
+    use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+    use h2opus::util::Prng;
+    use std::time::{Duration, Instant};
+
+    fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
+        let n = a.n();
+        let plan = HgemvPlan::new(a, nv);
+        let mut ws = HgemvWorkspace::new(a, nv);
+        let mut metrics = Metrics::new();
+        let mut y = vec![0.0; n * nv];
+        hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut metrics);
+        y
+    }
+
+    fn worker_opts() -> SocketOptions {
+        SocketOptions {
+            worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+            ..SocketOptions::default()
+        }
+    }
+
+    /// Live worker subprocesses compress their shards in place — under
+    /// the `H2OPUS_FORBID_FULL_MATRIX` guard the coordinator sets on
+    /// every worker, so no process ever materializes the global matrix —
+    /// and every subsequent product (synchronous and pipelined, at the
+    /// original and at new widths) is bitwise identical to the serial
+    /// product of the serially *compressed* matrix. The returned stats
+    /// match serial compression exactly.
+    #[test]
+    fn socket_session_compression_bitwise_matches_serial() {
+        let job = conformance_job();
+        let a = job.build();
+        let n = a.n();
+        let (ac, serial_stats) = serial_compress(&a);
+        let mut rng = Prng::new(4207);
+        for p in [1usize, 2, 4, 8] {
+            let mut session =
+                SocketSession::start(&job, p, 1, worker_opts()).expect("session start");
+            assert!(!session.is_compressed());
+
+            // Pre-compression product: the session applies the
+            // construction-accuracy operator.
+            let x = rng.normal_vec(n);
+            let mut y = vec![0.0; n];
+            session.hgemv(&x, &mut y).expect("pre-compression product");
+            assert_eq!(y, serial_product(&a, &x, 1), "P={p}: pre-compression product");
+
+            // Compression cannot interleave with an in-flight product,
+            // and the refusal must not poison the session.
+            let pid = session.submit(&x, 1).expect("submit");
+            let msg = session.compress(TAU).expect_err("compress mid-pipeline").to_string();
+            assert!(msg.contains("in-flight"), "guard must name the reason: {msg}");
+            session.wait(pid, &mut y).expect("wait after refused compress");
+
+            let stats = session.compress(TAU).expect("distributed compression");
+            assert_stats_equal(&stats, &serial_stats, &format!("socket P={p}"));
+            assert!(session.is_compressed());
+            let msg = session.compress(TAU).expect_err("second compress").to_string();
+            assert!(msg.contains("already compressed"), "{msg}");
+
+            // Post-compression products apply the compressed operator —
+            // bitwise — at the old width and at a fresh width (plans are
+            // rebuilt for the new ranks).
+            for nv in [1usize, 2] {
+                let x = rng.normal_vec(n * nv);
+                let y_serial = serial_product(&ac, &x, nv);
+                let mut y = vec![0.0; n * nv];
+                let pid = session.submit(&x, nv).expect("post-compression submit");
+                session.wait(pid, &mut y).expect("post-compression wait");
+                assert_eq!(y, y_serial, "P={p} nv={nv}: post-compression product");
+            }
+        }
+    }
+
+    /// A worker crash mid-compression poisons the session promptly: the
+    /// compress call surfaces an error (shards may be half-transformed,
+    /// so there is no recovery), and the session refuses further
+    /// products with `Closed` — nothing hangs on a reduction that will
+    /// never complete.
+    #[test]
+    fn mid_compression_crash_poisons_session() {
+        let job = conformance_job();
+        let n = job.n_points();
+        let opts = SocketOptions {
+            worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+            timeout: Duration::from_secs(30),
+            // Rank 1 exits the moment the compression start frame lands.
+            extra_env: vec![("H2OPUS_TEST_CRASH_ON_COMPRESS".into(), "1".into())],
+            ..SocketOptions::default()
+        };
+        let mut session = SocketSession::start(&job, 2, 1, opts).expect("session start");
+        let t0 = Instant::now();
+        let e = session.compress(TAU).expect_err("compression must fail after the crash");
+        let elapsed = t0.elapsed();
+        assert!(elapsed < Duration::from_secs(25), "crash took {elapsed:?} — behaved like a hang");
+        assert!(!e.to_string().is_empty());
+        assert!(!session.is_compressed(), "a failed compression must not mark the session");
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        let e = session.hgemv(&x, &mut y).expect_err("poisoned session must refuse products");
+        assert!(matches!(e, TransportError::Closed(_)), "got {e}");
+    }
+}

@@ -191,6 +191,59 @@ fn server_fuzz_multi_client_bitwise() {
     assert!(server.submit(&vec![0.0; n + 1]).is_err(), "not a multiple of N");
 }
 
+/// The fused coalesce width can never exceed the wire format's 10-bit
+/// nv field: a server configured wider is clamped to [`MAX_WIRE_NV`],
+/// requests whose widths sum past the boundary are split into multiple
+/// fused products (each ≤ 1023 columns, checked via the width
+/// histogram), every demuxed answer stays bitwise correct at the
+/// boundary, and a single request of 1024 columns is rejected up front.
+#[test]
+fn fused_width_capped_at_wire_boundary() {
+    use h2opus::dist::transport::socket::MAX_WIRE_NV;
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let server = SessionServer::start(
+        &job,
+        2,
+        worker_opts(),
+        // Ask for unbounded coalescing; the server must clamp to what
+        // the wire can express.
+        ServerOptions { max_coalesce: usize::MAX, pipeline_depth: 2 },
+    )
+    .expect("server start");
+    assert_eq!(server.max_coalesce(), MAX_WIRE_NV, "cap must clamp to the wire field");
+    assert!(
+        server.submit(&vec![0.0; n * (MAX_WIRE_NV + 1)]).is_err(),
+        "a single request one past the wire boundary must be rejected"
+    );
+
+    // 511 + 512 fills the wire field exactly; the trailing 600 cannot
+    // join that product without overflowing the 10-bit nv.
+    let widths = [511usize, 512, 600];
+    let mut rng = Prng::new(1023);
+    let xs: Vec<Vec<f64>> = widths.iter().map(|&w| rng.normal_vec(n * w)).collect();
+    let handles: Vec<_> = xs.iter().map(|x| server.submit(x).expect("submit")).collect();
+    for ((&w, x), h) in widths.iter().zip(&xs).zip(handles) {
+        let served = h.wait().expect("boundary-width request");
+        assert_eq!(served.y, serial_product(&a, x, w), "w = {w} not bitwise equal");
+        assert!(
+            (w as u64..=MAX_WIRE_NV as u64).contains(&served.stats.coalesced_nv),
+            "w = {w}: fused width {} outside [{w}, {MAX_WIRE_NV}]",
+            served.stats.coalesced_nv
+        );
+    }
+    let st = server.stats();
+    assert_eq!(st.requests, widths.len() as u64);
+    assert!(
+        st.nv_histogram.keys().all(|&nv| nv <= MAX_WIRE_NV),
+        "a fused product exceeded the wire field: {:?}",
+        st.nv_histogram
+    );
+    let hist_cols: u64 = st.nv_histogram.iter().map(|(&nv, &c)| nv as u64 * c).sum();
+    assert_eq!(hist_cols, widths.iter().sum::<usize>() as u64, "every column accounted for");
+}
+
 /// A worker crash while two products are in flight must fail *both*
 /// cleanly and promptly: the first wait names the poisoned product, the
 /// second reports the session closed/lost — nothing hangs on a barrier
