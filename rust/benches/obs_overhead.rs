@@ -1,0 +1,121 @@
+//! Observability overhead gate: the disabled span path must cost ~one
+//! relaxed atomic load per site, so leaving instrumentation compiled into
+//! every execution layer is free in production.
+//!
+//! Reports:
+//! - ns/call for a disabled RAII span guard and a disabled explicit
+//!   [`h2opus::obs::record`] (the two instrumentation shapes);
+//! - ns/call for the *enabled* guard, for scale;
+//! - end-to-end threaded HGEMV wall-clock with recording disabled vs
+//!   enabled (same binary — the instrumentation is always compiled in).
+//!
+//! `H2OPUS_OBS_ASSERT=1` (CI) turns the disabled-path numbers into a
+//! hard gate (exit 1 past the bound), following the E9/E10 pattern.
+//! `H2OPUS_BENCH_TINY=1` shrinks iteration counts for CI smoke.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::config::H2Config;
+use h2opus::construct::{build_h2, ExponentialKernel};
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+use h2opus::geometry::PointSet;
+use h2opus::obs;
+use h2opus::obs::names as obs_names;
+use h2opus::util::Prng;
+
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
+/// Best-of-reps ns/call for `f` run `iters` times per rep.
+fn ns_per_call<F: FnMut()>(iters: u64, reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    best
+}
+
+fn main() {
+    println!("obs overhead — disabled-path cost per instrumentation site");
+    let iters: u64 = if tiny() { 2_000_000 } else { 20_000_000 };
+
+    obs::set_enabled(false);
+    let _ = obs::drain();
+    let guard_off = ns_per_call(iters, 5, || {
+        let g = obs::span(black_box(obs_names::UPSWEEP));
+        black_box(&g);
+    });
+    let record_off = ns_per_call(iters, 5, || {
+        obs::record(black_box(obs_names::UPSWEEP), 0, 1, 2);
+    });
+
+    obs::set_enabled(true);
+    let _ = obs::drain();
+    // The ring wraps (and counts drops) rather than growing, so a long
+    // enabled loop is safe; drain afterwards to leave a clean recorder.
+    let guard_on = ns_per_call(iters.min(2_000_000), 3, || {
+        let g = obs::span_arg(black_box(obs_names::UPSWEEP), 3);
+        black_box(&g);
+    });
+    let (_, _) = obs::drain();
+    obs::set_enabled(false);
+
+    println!("  span guard, disabled:  {guard_off:>8.2} ns/call");
+    println!("  record,     disabled:  {record_off:>8.2} ns/call");
+    println!("  span guard, enabled:   {guard_on:>8.2} ns/call (for scale)");
+
+    // End-to-end: the threaded executor with its instrumentation compiled
+    // in, recording off vs on. Same binary, same matrix, best of 5.
+    let points = PointSet::grid_2d(if tiny() { 16 } else { 32 }, 1.0);
+    let kernel = ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    let a = build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    let mut rng = Prng::new(880);
+    let x = rng.normal_vec(n);
+    let mut y = vec![0.0; n];
+    let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+    let mut e2e = |on: bool| {
+        obs::set_enabled(on);
+        let _ = obs::drain();
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let _ = dist_hgemv(&a, &NativeBackend, 4, 1, &x, &mut y, &opts);
+            best = best.min(t0.elapsed().as_secs_f64());
+            let _ = obs::drain();
+        }
+        obs::set_enabled(false);
+        best
+    };
+    let off_s = e2e(false);
+    let on_s = e2e(true);
+    println!(
+        "  HGEMV (N = {n}, P = 4): disabled {:.3} ms, enabled {:.3} ms ({:+.1}%)",
+        off_s * 1e3,
+        on_s * 1e3,
+        (on_s / off_s - 1.0) * 100.0
+    );
+
+    if std::env::var("H2OPUS_OBS_ASSERT").is_ok() {
+        // A relaxed atomic load is ~1ns; the bound leaves room for noisy
+        // shared CI runners while still catching any accidental work
+        // (clock read, allocation, lock) sneaking onto the disabled path.
+        const MAX_DISABLED_NS: f64 = 25.0;
+        println!(
+            "obs assert: disabled guard {guard_off:.2} ns, disabled record {record_off:.2} ns \
+             (need <= {MAX_DISABLED_NS} ns)"
+        );
+        if guard_off > MAX_DISABLED_NS || record_off > MAX_DISABLED_NS {
+            println!("obs assert: FAIL — disabled instrumentation is not ~free");
+            std::process::exit(1);
+        }
+    }
+}

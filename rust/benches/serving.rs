@@ -72,7 +72,14 @@ struct Cell {
     reqs_per_s: f64,
     p50_ms: f64,
     p99_ms: f64,
+    /// Server-side queue-wait percentiles (from the dispatcher's
+    /// histogram — time a request sat in the queue before fusing, which
+    /// the client-observed p50/p99 above include but don't isolate).
+    queue_p50_ms: f64,
+    queue_p99_ms: f64,
     achieved_nv: BTreeMap<usize, u64>,
+    /// The server's own one-line summary, printed after the table.
+    summary: String,
 }
 
 /// One sweep cell: a fresh server, `concurrency` closed-loop clients
@@ -126,6 +133,7 @@ fn run_cell(
     let elapsed = t0.elapsed().as_secs_f64();
     let requests = concurrency * per_client;
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let stats = server.stats();
     Cell {
         concurrency,
         cap,
@@ -134,7 +142,10 @@ fn run_cell(
         reqs_per_s: requests as f64 / elapsed,
         p50_ms: percentile_ms(&latencies, 0.50),
         p99_ms: percentile_ms(&latencies, 0.99),
-        achieved_nv: server.stats().nv_histogram,
+        queue_p50_ms: 1e3 * stats.queue_wait.quantile(0.50),
+        queue_p99_ms: 1e3 * stats.queue_wait.quantile(0.99),
+        summary: stats.summary(),
+        achieved_nv: stats.nv_histogram,
     }
 }
 
@@ -222,8 +233,8 @@ fn main() {
 
     let mut cells: Vec<Cell> = Vec::new();
     println!(
-        "\n{:>11} {:>5} {:>6} {:>9} {:>10} {:>9} {:>9}  achieved nv",
-        "concurrency", "cap", "depth", "requests", "reqs/s", "p50 ms", "p99 ms"
+        "\n{:>11} {:>5} {:>6} {:>9} {:>10} {:>9} {:>9} {:>8} {:>8}  achieved nv",
+        "concurrency", "cap", "depth", "requests", "reqs/s", "p50 ms", "p99 ms", "qw p50", "qw p99"
     );
     for &(cap, depth) in configs {
         for &c in concurrency_axis {
@@ -235,17 +246,22 @@ fn main() {
                 .collect::<Vec<_>>()
                 .join(" ");
             println!(
-                "{:>11} {:>5} {:>6} {:>9} {:>10.1} {:>9.3} {:>9.3}  {hist}",
+                "{:>11} {:>5} {:>6} {:>9} {:>10.1} {:>9.3} {:>9.3} {:>8.3} {:>8.3}  {hist}",
                 cell.concurrency,
                 cell.cap,
                 cell.depth,
                 cell.requests,
                 cell.reqs_per_s,
                 cell.p50_ms,
-                cell.p99_ms
+                cell.p99_ms,
+                cell.queue_p50_ms,
+                cell.queue_p99_ms
             );
             cells.push(cell);
         }
+    }
+    if let Some(last) = cells.last() {
+        println!("\nserver summary (last cell): {}", last.summary);
     }
 
     let rows: Vec<String> = cells
@@ -260,8 +276,17 @@ fn main() {
             format!(
                 "{{\"concurrency\": {}, \"cap\": {}, \"depth\": {}, \"requests\": {}, \
                  \"reqs_per_s\": {:.3}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+                 \"queue_p50_ms\": {:.4}, \"queue_p99_ms\": {:.4}, \
                  \"achieved_nv\": {{{hist}}}}}",
-                c.concurrency, c.cap, c.depth, c.requests, c.reqs_per_s, c.p50_ms, c.p99_ms
+                c.concurrency,
+                c.cap,
+                c.depth,
+                c.requests,
+                c.reqs_per_s,
+                c.p50_ms,
+                c.p99_ms,
+                c.queue_p50_ms,
+                c.queue_p99_ms
             )
         })
         .collect();

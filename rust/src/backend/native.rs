@@ -19,6 +19,8 @@ use crate::linalg::{
     gemm_nn, gemm_nt, gemm_tn, gemm_tt, householder_qr, jacobi_svd, qr_r_only,
 };
 use crate::metrics::Metrics;
+use crate::obs;
+use crate::obs::names as obs_names;
 use crate::util::parallel::{DisjointOut, ParallelPool};
 
 /// The native (pure Rust) compute backend.
@@ -234,6 +236,7 @@ impl ComputeBackend for NativeBackend {
         c_offsets: &[usize],
         metrics: &mut Metrics,
     ) {
+        let _s = obs::span_arg(obs_names::BATCH_GEMM, dims.nb as u64);
         self.batched_gemm_on(ParallelPool::global(), dims, a, b, c_data, c_offsets, metrics)
     }
 
@@ -247,6 +250,7 @@ impl ComputeBackend for NativeBackend {
         r: &mut [f64],
         metrics: &mut Metrics,
     ) {
+        let _s = obs::span_arg(obs_names::BATCH_QR, nb as u64);
         self.batched_qr_on(ParallelPool::global(), nb, rows, cols, a, q, r, metrics)
     }
 
@@ -259,6 +263,7 @@ impl ComputeBackend for NativeBackend {
         r: &mut [f64],
         metrics: &mut Metrics,
     ) {
+        let _s = obs::span_arg(obs_names::BATCH_QR, nb as u64);
         self.batched_qr_r_on(ParallelPool::global(), nb, rows, cols, a, r, metrics)
     }
 
@@ -273,6 +278,7 @@ impl ComputeBackend for NativeBackend {
         v: &mut [f64],
         metrics: &mut Metrics,
     ) {
+        let _s = obs::span_arg(obs_names::BATCH_SVD, nb as u64);
         self.batched_svd_on(ParallelPool::global(), nb, rows, cols, a, u, s, v, metrics)
     }
 }

@@ -42,6 +42,8 @@ use crate::dist::threaded::{abort_peers, ExecMode};
 use crate::dist::transport::{inproc, Endpoint, Mailbox, Message, MsgKind, TransportError};
 use crate::dist::Decomposition;
 use crate::metrics::Metrics;
+use crate::obs;
+use crate::obs::names as obs_names;
 use crate::tree::{BasisTree, CouplingLevel, H2Matrix};
 
 /// Outcome of one distributed compression.
@@ -194,6 +196,7 @@ fn send_step<E: Endpoint + ?Sized>(
     src: usize,
     data: Vec<f64>,
 ) -> Result<(), TransportError> {
+    let _s = obs::span_arg(obs_names::comp_step(step), level as u64);
     ep.send(dst, Message::new(step_kind(step), step_word(step, level), src, data))
 }
 
@@ -204,6 +207,7 @@ fn recv_step<E: Endpoint + ?Sized>(
     level: usize,
     src: usize,
 ) -> Result<Message, TransportError> {
+    let _s = obs::span_arg(obs_names::comp_step(step), level as u64);
     let kind = step_kind(step);
     let want = step_word(step, level) as u32;
     mb.recv_where(ep, move |t| t.kind == kind && t.level == want && t.src == src as u32)
@@ -476,9 +480,13 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
     let mut bv = take_branch_tree(sm, false);
     let mut r_u: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
     let mut r_v: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
-    r_u[depth_b] = orth_leaf_level(&mut bu, backend, &mut metrics);
-    r_v[depth_b] = orth_leaf_level(&mut bv, backend, &mut metrics);
+    {
+        let _s = obs::span(obs_names::ORTH_LEAF);
+        r_u[depth_b] = orth_leaf_level(&mut bu, backend, &mut metrics);
+        r_v[depth_b] = orth_leaf_level(&mut bv, backend, &mut metrics);
+    }
     for lb in (0..depth_b).rev() {
+        let _s = obs::span_arg(obs_names::ORTH_TRANSFER, (c + lb) as u64);
         r_u[lb] = orth_transfer_level(&mut bu, backend, &mut metrics, lb, &r_u[lb + 1]);
         r_v[lb] = orth_transfer_level(&mut bv, backend, &mut metrics, lb, &r_v[lb + 1]);
     }
@@ -512,6 +520,7 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
         if nb == 0 {
             continue;
         }
+        let _s = obs::span_arg(obs_names::ABSORB, l as u64);
         let t_off: Vec<usize> = sc.level.pairs.iter().map(|&(t, _)| t as usize * k * k).collect();
         let s_off: Vec<usize> =
             sc.level.pairs.iter().map(|&(_, s)| rv_map[&s] * k * k).collect();
@@ -548,6 +557,7 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
     let mut z_u: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
     let mut z_v: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
     for l in c..=depth {
+        let _s = obs::span_arg(obs_names::WEIGHT_DOWNSWEEP, l as u64);
         let k_l = old_ranks[l];
         let k_par = if l > 0 { old_ranks[l - 1] } else { 0 };
         let lb = l - c;
@@ -665,8 +675,10 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
     }
 
     // --- Leaf truncation: local SVDs, global σ_ref/rank reductions. ---
+    let svd_span = obs::span(obs_names::TRUNC_LEAF);
     let (usvd_u, ssvd_u) = truncate_leaf_svd(&bu, &z_u[depth], backend, &mut metrics);
     let (usvd_v, ssvd_v) = truncate_leaf_svd(&bv, &z_v[depth], backend, &mut metrics);
+    drop(svd_span);
     let sig_u = ssvd_u.iter().cloned().fold(0.0_f64, f64::max);
     let sig_v = ssvd_v.iter().cloned().fold(0.0_f64, f64::max);
     send_step(ep, coord, STEP_SIGMA, 0, me, vec![sig_u, sig_v])?;
@@ -686,15 +698,18 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
 
     let mut p_u: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
     let mut p_v: Vec<Vec<f64>> = vec![Vec::new(); depth + 1];
+    let finish_span = obs::span(obs_names::TRUNC_LEAF);
     let (nlb_u, pl) = truncate_leaf_finish(&bu, &usvd_u, ku_new[depth], backend, &mut metrics);
     p_u[depth] = pl;
     let (nlb_v, pl) = truncate_leaf_finish(&bv, &usvd_v, kv_new[depth], backend, &mut metrics);
     p_v[depth] = pl;
+    drop(finish_span);
 
     // --- Inner truncation upsweep (children l -> parents l-1) down to C. ---
     let mut etr_u: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
     let mut etr_v: Vec<Vec<f64>> = vec![Vec::new(); depth_b + 1];
     for l in ((c + 1)..=depth).rev() {
+        let _s = obs::span_arg(obs_names::TRUNC_INNER, l as u64);
         let lb = l - c;
         let (us_u, ss_u, rows_u) =
             truncate_inner_svd(&bu, lb, &z_u[l - 1], ku_new[l], &p_u[l], backend, &mut metrics);
@@ -766,6 +781,7 @@ pub fn compress_branch<E: Endpoint + ?Sized>(
 
     // --- Project the owned coupling levels onto the truncated bases. ---
     for l in c..=depth {
+        let _s = obs::span_arg(obs_names::PROJECT, l as u64);
         let k = old_ranks[l];
         let k_new = unified[l];
         let nodes = d.branch_width(l);

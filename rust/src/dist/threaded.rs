@@ -95,6 +95,8 @@ use crate::dist::ExchangePlan;
 use crate::matvec::plan::{BatchOffsets, LevelMultPlan, LevelTransferPlan};
 use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
+use crate::obs;
+use crate::obs::names as obs_names;
 use crate::tree::H2Matrix;
 use crate::util::trace::TraceCollector;
 
@@ -144,6 +146,25 @@ pub(crate) const PHASES: &[(&str, &str)] = &[
     ("yhat scatter", "comm"),
 ];
 
+/// Observability name of each phase id (same order as [`PHASES`]), so the
+/// span runtime sees the identical phase structure on every transport —
+/// `run_branch`/`run_top_master` are shared by the in-process executor and
+/// the socket worker processes.
+pub(crate) const PH_OBS: [obs_names::NameId; 12] = [
+    obs_names::INPUT_GATHER,
+    obs_names::UPSWEEP,
+    obs_names::XHAT_SEND,
+    obs_names::DENSE_MULT,
+    obs_names::XHAT_RECV,
+    obs_names::COUPLING_MULT,
+    obs_names::BOUNDARY_MERGE,
+    obs_names::DOWNSWEEP,
+    obs_names::OUTPUT_SCATTER,
+    obs_names::TOP_GATHER,
+    obs_names::TOP_SUBTREE,
+    obs_names::YHAT_SCATTER,
+];
+
 /// Measured phase spans of one rank: (phase id, start s, duration s),
 /// relative to the product's shared origin instant.
 #[derive(Clone, Debug, Default)]
@@ -154,6 +175,15 @@ pub(crate) struct RankTrace {
 impl RankTrace {
     fn push(&mut self, phase: usize, start: f64, end: f64) {
         self.events.push((phase, start, end - start));
+        // Mirror the phase into the span runtime (reconstructing the start
+        // from the just-measured duration keeps this a single clock read).
+        // The boundary phase is excluded: `run_branch` splits it into
+        // wait/merge spans itself, so the blocking receive is never
+        // conflated with the post-receive compute.
+        if phase != PH_BOUNDARY && obs::enabled() {
+            let dur_ns = ((end - start) * 1e9) as u64;
+            obs::record(PH_OBS[phase], 0, obs::now_ns().saturating_sub(dur_ns), dur_ns);
+        }
     }
 }
 
@@ -313,7 +343,9 @@ pub(crate) fn run_branch<E: Endpoint>(
     // in-place accumulation the serial downsweep performs.
     if c > 0 {
         let t = now(&t0);
+        let wait = obs::span(obs_names::BOUNDARY_WAIT);
         let msg = mb.recv_kind(ep, MsgKind::Parent)?;
+        drop(wait);
         if msg.data.len() != bw.parent.len() {
             return Err(TransportError::Protocol(format!(
                 "rank {r}: parent payload has {} values, expected {}",
@@ -321,8 +353,13 @@ pub(crate) fn run_branch<E: Endpoint>(
                 bw.parent.len()
             )));
         }
+        // The merge span opens only after the parent message is in hand,
+        // so in a merged trace it is *caused by* the master's ŷ scatter —
+        // the happens-before edge `tests/obs.rs` checks.
+        let merge = obs::span(obs_names::BOUNDARY_MERGE);
         bw.parent.copy_from_slice(&msg.data);
         branch_downsweep_boundary(sm, backend, bp, bw, &mut metrics);
+        drop(merge);
         trace.push(PH_BOUNDARY, t, now(&t0));
     }
 
@@ -693,6 +730,10 @@ pub(crate) fn run_threaded(
                 };
                 let mut mb = Mailbox::new();
                 let r_id = bp.rank;
+                // Label the pool thread with its logical rank for this job
+                // so merged traces attribute its spans (including backend
+                // batches it launches) to the rank, not the thread.
+                obs::set_lane(r_id as u32);
                 let attempt = catch_unwind(AssertUnwindSafe(|| {
                     run_branch(
                         sm,
@@ -719,6 +760,7 @@ pub(crate) fn run_threaded(
                 if out.is_err() {
                     abort_peers(&mut rec, n_eps, r_id);
                 }
+                obs::set_lane(obs::LANE_UNSET);
                 let (mut metrics, tr) = out?;
                 metrics.matrix_bytes = sm.matrix_bytes() as u64;
                 Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))
@@ -735,6 +777,7 @@ pub(crate) fn run_threaded(
                     Recording::passthrough(ep, t0)
                 };
                 let mut mb = Mailbox::new();
+                obs::set_lane(p as u32);
                 let attempt = catch_unwind(AssertUnwindSafe(|| {
                     run_top_master(smt, backend, tp, tw, &mut rec, &mut mb, t0)
                 }));
@@ -748,6 +791,7 @@ pub(crate) fn run_threaded(
                 if out.is_err() {
                     abort_peers(&mut rec, n_eps, p);
                 }
+                obs::set_lane(obs::LANE_UNSET);
                 let (mut metrics, tr) = out?;
                 metrics.matrix_bytes = smt.matrix_bytes() as u64;
                 Ok((metrics, tr, rec.into_events(), t0.elapsed().as_secs_f64()))

@@ -229,6 +229,20 @@ pub enum MsgKind {
     /// the level-C projection-factor gather, the S-block and P_v
     /// exchanges, and the final stats ack.
     Truncate,
+    /// Clock-alignment handshake (socket only): the coordinator pings
+    /// each worker right after its `Hello` (level 0 carries `[seq]` out
+    /// and `[seq, worker_now_ns]` back; level 1 ends the exchange), and
+    /// the min-RTT sample estimates that worker's clock offset — what
+    /// lets `obs` merge per-process span timelines onto one clock.
+    ClockSync,
+    /// Span-buffer flush (socket only): the coordinator requests each
+    /// worker's recorded observability spans; the reply payload is the
+    /// numeric span encoding of [`crate::obs::span::encode_spans`].
+    Flush,
+    /// Live metrics request/reply on the server's control socket: the
+    /// reply payload is Prometheus-style exposition text packed into f64
+    /// words (see [`crate::dist::transport::server`]).
+    Stats,
 }
 
 impl MsgKind {
@@ -246,6 +260,9 @@ impl MsgKind {
             MsgKind::Shutdown => 9,
             MsgKind::Orthogonalize => 10,
             MsgKind::Truncate => 11,
+            MsgKind::ClockSync => 12,
+            MsgKind::Flush => 13,
+            MsgKind::Stats => 14,
         }
     }
 
@@ -263,6 +280,9 @@ impl MsgKind {
             9 => MsgKind::Shutdown,
             10 => MsgKind::Orthogonalize,
             11 => MsgKind::Truncate,
+            12 => MsgKind::ClockSync,
+            13 => MsgKind::Flush,
+            14 => MsgKind::Stats,
             _ => return None,
         })
     }
@@ -282,6 +302,9 @@ impl MsgKind {
             MsgKind::Shutdown => "shutdown",
             MsgKind::Orthogonalize => "orthogonalize",
             MsgKind::Truncate => "truncate",
+            MsgKind::ClockSync => "clock-sync",
+            MsgKind::Flush => "flush",
+            MsgKind::Stats => "stats",
         }
     }
 }
@@ -470,6 +493,9 @@ mod tests {
             MsgKind::Shutdown,
             MsgKind::Orthogonalize,
             MsgKind::Truncate,
+            MsgKind::ClockSync,
+            MsgKind::Flush,
+            MsgKind::Stats,
         ] {
             assert_eq!(MsgKind::from_u8(k.to_u8()), Some(k));
         }

@@ -23,12 +23,20 @@
 //! shuts the workers down).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::io::ErrorKind;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::socket::{SocketOptions, SocketSession, MAX_WIRE_NV};
-use super::{MatrixJob, TransportError};
+use super::socket::{read_frame, write_frame, SocketOptions, SocketSession, MAX_WIRE_NV};
+use super::{MatrixJob, Message, MsgKind, TransportError};
+use crate::obs;
+use crate::obs::names as obs_names;
+use crate::obs::registry::latency_bounds;
+use crate::obs::FixedHistogram;
 
 /// Serving policy knobs.
 #[derive(Clone, Debug)]
@@ -85,7 +93,7 @@ impl ProductHandle {
 }
 
 /// Aggregate serving counters (snapshot via [`SessionServer::stats`]).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ServerStats {
     /// Fused products dispatched.
     pub products: u64,
@@ -97,17 +105,73 @@ pub struct ServerStats {
     pub sum_queue_wait_s: f64,
     /// Sum over products of the session's collection wall-clock.
     pub sum_measured_s: f64,
+    /// Per-request queue-wait distribution (seconds) — what the summary
+    /// line's p50/p99 are estimated from, so serving regressions show up
+    /// without re-deriving from raw [`RequestStats`].
+    pub queue_wait: FixedHistogram,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            products: 0,
+            requests: 0,
+            nv_histogram: BTreeMap::new(),
+            sum_queue_wait_s: 0.0,
+            sum_measured_s: 0.0,
+            queue_wait: FixedHistogram::latency(),
+        }
+    }
+}
+
+impl ServerStats {
+    /// One-line human summary: request/product counts, fuse factor,
+    /// queue-wait p50/p99 and the achieved-nv histogram.
+    pub fn summary(&self) -> String {
+        let fuse = if self.products == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.products as f64
+        };
+        let mean_measured_ms = if self.products == 0 {
+            0.0
+        } else {
+            1e3 * self.sum_measured_s / self.products as f64
+        };
+        let mut nv = String::new();
+        for (w, c) in &self.nv_histogram {
+            let _ = write!(nv, " {w}:{c}");
+        }
+        format!(
+            "served {} reqs in {} products | {:.2} reqs/product | queue wait p50 {:.3} ms \
+             p99 {:.3} ms | mean measured {:.3} ms | nv{}",
+            self.requests,
+            self.products,
+            fuse,
+            1e3 * self.queue_wait.quantile(0.5),
+            1e3 * self.queue_wait.quantile(0.99),
+            mean_measured_ms,
+            if nv.is_empty() { " -".to_string() } else { nv }
+        )
+    }
 }
 
 struct PendingReq {
     x: Vec<f64>,
     nv: usize,
     enqueued: Instant,
+    /// Enqueue stamp on the observability clock, for the `request queued`
+    /// lifecycle span.
+    enqueued_ns: u64,
     tx: Sender<Result<Served, TransportError>>,
 }
 
 struct ServerQueue {
     pending: VecDeque<PendingReq>,
+    /// Pending span-flush requests ([`SessionServer::collect_spans`]):
+    /// the dispatcher owns the session, so flushes are serviced by it at
+    /// the next pipeline-empty point.
+    flush_reqs: Vec<Sender<Result<String, TransportError>>>,
     shutdown: bool,
     poisoned: Option<TransportError>,
 }
@@ -158,6 +222,7 @@ impl SessionServer {
         let shared = Arc::new(Shared {
             queue: Mutex::new(ServerQueue {
                 pending: VecDeque::new(),
+                flush_reqs: Vec::new(),
                 shutdown: false,
                 poisoned: None,
             }),
@@ -216,6 +281,7 @@ impl SessionServer {
                 x: x.to_vec(),
                 nv: w,
                 enqueued: Instant::now(),
+                enqueued_ns: obs::now_ns(),
                 tx,
             });
         }
@@ -226,6 +292,29 @@ impl SessionServer {
     /// Snapshot of the aggregate serving counters.
     pub fn stats(&self) -> ServerStats {
         self.shared.stats.lock().expect("server stats lock").clone()
+    }
+
+    /// Flush recorded spans from every worker rank and the server process
+    /// into one merged Chrome-format trace. The dispatcher owns the
+    /// session, so the request is queued and serviced at its next
+    /// pipeline-empty point (after in-flight products drain); blocks until
+    /// the merged JSON is ready.
+    pub fn collect_spans(&self) -> Result<String, TransportError> {
+        let (tx, rx) = channel();
+        {
+            let mut q = self.shared.queue.lock().expect("server queue lock");
+            if let Some(e) = &q.poisoned {
+                return Err(e.clone());
+            }
+            if q.shutdown {
+                return Err(TransportError::Closed("server is shutting down".into()));
+            }
+            q.flush_reqs.push(tx);
+        }
+        self.shared.cv.notify_one();
+        rx.recv().unwrap_or_else(|_| {
+            Err(TransportError::Closed("server dispatcher exited".into()))
+        })
     }
 }
 
@@ -297,11 +386,18 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
         let mut to_dispatch: Vec<Vec<PendingReq>> = Vec::new();
         {
             let mut q = shared.queue.lock().expect("server queue lock");
-            while q.pending.is_empty() && !q.shutdown && inflight.is_empty() {
+            while q.pending.is_empty()
+                && q.flush_reqs.is_empty()
+                && !q.shutdown
+                && inflight.is_empty()
+            {
                 q = shared.cv.wait(q).expect("server queue lock");
             }
             if q.shutdown && q.pending.is_empty() && inflight.is_empty() {
-                return; // dropping the session shuts the workers down
+                // Dropping the pending flush senders fails their waiters
+                // with Closed; dropping the session shuts the workers down.
+                q.flush_reqs.clear();
+                return;
             }
             let mut slots = depth.saturating_sub(inflight.len());
             // The fused width must stay expressible in the wire's 10-bit
@@ -332,6 +428,7 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
         // Build and submit the fused products outside the lock, so
         // submitters and the marshaling never serialize on each other.
         for reqs in to_dispatch {
+            let fused_ns = if obs::enabled() { obs::now_ns() } else { 0 };
             let nv: usize = reqs.iter().map(|r| r.nv).sum();
             let mut offsets = Vec::with_capacity(reqs.len());
             let mut x = vec![0.0; n * nv];
@@ -341,14 +438,43 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                 coalesce_columns(n, nv, &r.x, r.nv, off, &mut x);
                 off += r.nv;
             }
+            let ship_ns = if obs::enabled() { obs::now_ns() } else { 0 };
             match session.submit(&x, nv) {
-                Ok(pid) => inflight.push_back(Batch {
-                    pid,
-                    nv,
-                    reqs,
-                    offsets,
-                    dispatched: Instant::now(),
-                }),
+                Ok(pid) => {
+                    // Request lifecycle, keyed by pid: each request's
+                    // queue residency, then the fuse (marshal) and ship
+                    // intervals the whole batch shared.
+                    if obs::enabled() {
+                        let done_ns = obs::now_ns();
+                        for r in &reqs {
+                            obs::record(
+                                obs_names::REQ_QUEUED,
+                                pid,
+                                r.enqueued_ns,
+                                fused_ns.saturating_sub(r.enqueued_ns),
+                            );
+                        }
+                        obs::record(
+                            obs_names::REQ_FUSED,
+                            pid,
+                            fused_ns,
+                            ship_ns.saturating_sub(fused_ns),
+                        );
+                        obs::record(
+                            obs_names::REQ_SHIPPED,
+                            pid,
+                            ship_ns,
+                            done_ns.saturating_sub(ship_ns),
+                        );
+                    }
+                    inflight.push_back(Batch {
+                        pid,
+                        nv,
+                        reqs,
+                        offsets,
+                        dispatched: Instant::now(),
+                    })
+                }
                 Err(e) => {
                     for r in reqs {
                         let _ = r.tx.send(Err(e.clone()));
@@ -363,8 +489,17 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
         // up (and will coalesce) — that wait is the batching window.
         if let Some(batch) = inflight.pop_front() {
             let mut y = vec![0.0; n * batch.nv];
+            let gather_ns = if obs::enabled() { obs::now_ns() } else { 0 };
             match session.wait(batch.pid, &mut y) {
                 Ok(rep) => {
+                    if obs::enabled() {
+                        obs::record(
+                            obs_names::REQ_GATHERED,
+                            batch.pid,
+                            gather_ns,
+                            obs::now_ns().saturating_sub(gather_ns),
+                        );
+                    }
                     {
                         let mut st = shared.stats.lock().expect("server stats lock");
                         st.products += 1;
@@ -372,9 +507,20 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                         *st.nv_histogram.entry(batch.nv).or_insert(0) += 1;
                         st.sum_measured_s += rep.measured;
                         for r in &batch.reqs {
-                            st.sum_queue_wait_s +=
-                                (batch.dispatched - r.enqueued).as_secs_f64();
+                            let w = (batch.dispatched - r.enqueued).as_secs_f64();
+                            st.sum_queue_wait_s += w;
+                            st.queue_wait.observe(w);
                         }
+                    }
+                    // Registry views of the same events, so a live `stats`
+                    // request sees them without holding the stats lock.
+                    let reg = obs::Registry::global();
+                    reg.counter("h2opus_server_products_total").inc();
+                    reg.counter("h2opus_server_requests_total").add(batch.reqs.len() as u64);
+                    let qw = reg
+                        .histogram("h2opus_request_queue_wait_seconds", &latency_bounds());
+                    for r in &batch.reqs {
+                        qw.observe((batch.dispatched - r.enqueued).as_secs_f64());
                     }
                     for (r, &off) in batch.reqs.iter().zip(&batch.offsets) {
                         let served = Served {
@@ -398,7 +544,156 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                 }
             }
         }
+
+        // Service span flushes only at pipeline-empty points so the Flush
+        // broadcast never interleaves with an in-flight product (the
+        // session layer refuses otherwise).
+        if inflight.is_empty() {
+            let flushes: Vec<Sender<Result<String, TransportError>>> = {
+                let mut q = shared.queue.lock().expect("server queue lock");
+                std::mem::take(&mut q.flush_reqs)
+            };
+            for tx in flushes {
+                match session.collect_spans() {
+                    Ok(json) => {
+                        let _ = tx.send(Ok(json));
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e.clone()));
+                        fail_all(&e, &mut inflight, &shared);
+                        return;
+                    }
+                }
+            }
+        }
     }
+}
+
+/// Pack UTF-8 text into wire `f64` words: word 0 is the byte length, then
+/// 4 bytes per word little-endian (each word holds a `u32` value, exactly
+/// representable in an `f64` — no bit-pattern hazards on any float path).
+pub(crate) fn pack_text(s: &str) -> Vec<f64> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(1 + bytes.len().div_ceil(4));
+    out.push(bytes.len() as f64);
+    for chunk in bytes.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        out.push(u32::from_le_bytes(w) as f64);
+    }
+    out
+}
+
+/// Inverse of [`pack_text`].
+pub(crate) fn unpack_text(words: &[f64]) -> Result<String, TransportError> {
+    if words.is_empty() {
+        return Err(TransportError::Protocol("empty stats payload".into()));
+    }
+    let len = words[0] as usize;
+    let body = &words[1..];
+    if body.len() != len.div_ceil(4) {
+        return Err(TransportError::Protocol(format!(
+            "stats payload: {} bytes need {} words, got {}",
+            len,
+            len.div_ceil(4),
+            body.len()
+        )));
+    }
+    let mut bytes = Vec::with_capacity(len);
+    for &w in body {
+        bytes.extend_from_slice(&(w as u32).to_le_bytes());
+    }
+    bytes.truncate(len);
+    String::from_utf8(bytes)
+        .map_err(|e| TransportError::Protocol(format!("stats payload not UTF-8: {e}")))
+}
+
+/// The live stats payload: the server's one-line summary as a leading
+/// comment plus the global registry's Prometheus-style exposition.
+pub fn stats_text(server: &SessionServer) -> String {
+    format!(
+        "# h2opus {}\n{}",
+        server.stats().summary(),
+        obs::Registry::global().render_text()
+    )
+}
+
+/// A control socket answering live [`MsgKind::Stats`] requests for a
+/// running [`SessionServer`]: `h2opus stats --connect PATH` fetches one
+/// snapshot per connection using the session wire framing.
+pub struct StatsEndpoint {
+    listener: UnixListener,
+}
+
+impl StatsEndpoint {
+    /// Bind the control socket (replacing any stale file at `path`).
+    pub fn bind(path: &Path) -> Result<StatsEndpoint, TransportError> {
+        if path.exists() {
+            let _ = std::fs::remove_file(path);
+        }
+        let listener = UnixListener::bind(path).map_err(|e| {
+            TransportError::Io(format!("binding stats socket {}: {e}", path.display()))
+        })?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| TransportError::Io(format!("stats socket nonblocking: {e}")))?;
+        Ok(StatsEndpoint { listener })
+    }
+
+    /// Answer every queued connection without blocking; returns how many
+    /// snapshots were served. Call from the serving loop between products.
+    /// A misbehaving client only fails its own connection.
+    pub fn poll(&self, server: &SessionServer) -> Result<usize, TransportError> {
+        let mut served = 0;
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    if answer_stats(&mut stream, server).is_ok() {
+                        served += 1;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(served),
+                Err(e) => return Err(TransportError::Io(format!("stats accept: {e}"))),
+            }
+        }
+    }
+}
+
+fn answer_stats(
+    stream: &mut UnixStream,
+    server: &SessionServer,
+) -> Result<(), TransportError> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .map_err(|e| TransportError::Io(format!("stats read timeout: {e}")))?;
+    let (_dst, req) = read_frame(stream)?;
+    if req.tag.kind != MsgKind::Stats {
+        return Err(TransportError::Protocol(format!(
+            "stats socket: unexpected {} frame",
+            req.tag.kind.name()
+        )));
+    }
+    let text = stats_text(server);
+    write_frame(stream, 0, &Message::new(MsgKind::Stats, 0, 0, pack_text(&text)))
+}
+
+/// Connect to a [`StatsEndpoint`] and fetch one live snapshot.
+pub fn fetch_stats(path: &Path) -> Result<String, TransportError> {
+    let mut stream = UnixStream::connect(path).map_err(|e| {
+        TransportError::Io(format!("connecting stats socket {}: {e}", path.display()))
+    })?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .map_err(|e| TransportError::Io(format!("stats read timeout: {e}")))?;
+    write_frame(&mut stream, 0, &Message::new(MsgKind::Stats, 0, 0, Vec::new()))?;
+    let (_dst, reply) = read_frame(&mut stream)?;
+    if reply.tag.kind != MsgKind::Stats {
+        return Err(TransportError::Protocol(format!(
+            "stats reply: unexpected {} frame",
+            reply.tag.kind.name()
+        )));
+    }
+    unpack_text(&reply.data)
 }
 
 #[cfg(test)]
@@ -437,6 +732,40 @@ mod tests {
         for ((r, &w), &off) in reqs.iter().zip(&widths).zip(&offsets) {
             assert_eq!(&demux_columns(n, nv, &x, w, off), r, "width {w} at offset {off}");
         }
+    }
+
+    #[test]
+    fn pack_unpack_text_roundtrip() {
+        for s in ["", "x", "abcd", "abcde", "# TYPE a counter\na 1\nμs — exposition\n"] {
+            assert_eq!(unpack_text(&pack_text(s)).unwrap(), s, "{s:?}");
+        }
+        assert!(unpack_text(&[]).is_err(), "empty payload");
+        assert!(unpack_text(&[8.0, 0.0]).is_err(), "length/word-count mismatch");
+    }
+
+    #[test]
+    fn stats_summary_line() {
+        let mut st = ServerStats::default();
+        assert!(st.summary().contains("served 0 reqs in 0 products"), "{}", st.summary());
+        assert!(st.summary().contains("nv -"), "{}", st.summary());
+        st.products = 2;
+        st.requests = 5;
+        st.nv_histogram.insert(1, 1);
+        st.nv_histogram.insert(4, 1);
+        st.sum_measured_s = 0.004;
+        for w in [0.001, 0.002, 0.003, 0.004, 0.2] {
+            st.sum_queue_wait_s += w;
+            st.queue_wait.observe(w);
+        }
+        let s = st.summary();
+        assert!(s.contains("served 5 reqs in 2 products"), "{s}");
+        assert!(s.contains("2.50 reqs/product"), "{s}");
+        assert!(s.contains("queue wait p50"), "{s}");
+        assert!(s.contains("nv 1:1 4:1"), "{s}");
+        let p50 = st.queue_wait.quantile(0.5);
+        let p99 = st.queue_wait.quantile(0.99);
+        assert!(p50 <= p99, "quantiles ordered: {p50} vs {p99}");
+        assert!(p99 >= 0.2, "p99 sees the straggler: {p99}");
     }
 
     #[test]

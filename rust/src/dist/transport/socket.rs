@@ -111,6 +111,9 @@ use crate::dist::threaded::{
 use crate::dist::ExchangePlan;
 use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
+use crate::obs;
+use crate::obs::clock::{estimate_offset_ns, ClockSample, TracePart, CLOCK_SYNC_PINGS};
+use crate::obs::names as obs_names;
 
 /// Options of one socket session.
 #[derive(Clone, Debug)]
@@ -257,8 +260,13 @@ fn io_err(e: std::io::Error, what: &str) -> TransportError {
     }
 }
 
-/// Write one frame: header + raw little-endian f64 payload.
-fn write_frame<W: Write>(w: &mut W, dst: usize, msg: &Message) -> Result<(), TransportError> {
+/// Write one frame: header + raw little-endian f64 payload. `pub(crate)`
+/// so the server's stats control socket reuses the session framing.
+pub(crate) fn write_frame<W: Write>(
+    w: &mut W,
+    dst: usize,
+    msg: &Message,
+) -> Result<(), TransportError> {
     let mut header = [0u8; HEADER_LEN];
     header[0] = msg.tag.kind.to_u8();
     header[4..8].copy_from_slice(&msg.tag.level.to_le_bytes());
@@ -276,7 +284,7 @@ fn write_frame<W: Write>(w: &mut W, dst: usize, msg: &Message) -> Result<(), Tra
 }
 
 /// Read one frame; returns (destination endpoint, message).
-fn read_frame<R: Read>(r: &mut R) -> Result<(usize, Message), TransportError> {
+pub(crate) fn read_frame<R: Read>(r: &mut R) -> Result<(usize, Message), TransportError> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header).map_err(|e| io_err(e, "read header"))?;
     let kind = MsgKind::from_u8(header[0])
@@ -296,6 +304,41 @@ fn read_frame<R: Read>(r: &mut R) -> Result<(usize, Message), TransportError> {
         .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
         .collect();
     Ok((dst, Message { tag: Tag { kind, level, src }, data }))
+}
+
+/// Coordinator side of the clock-alignment handshake with one freshly
+/// accepted worker (its stream is still blocking, router threads not yet
+/// spawned): [`CLOCK_SYNC_PINGS`] ping round trips, each echoed by the
+/// worker together with its own clock reading; the minimum-RTT sample
+/// gives the offset estimate (error bounded by rtt/2). A level-1 frame
+/// releases the worker into the session.
+fn clock_sync_handshake(
+    s: &mut UnixStream,
+    rank: usize,
+    p: usize,
+) -> Result<i64, TransportError> {
+    let _cs = obs::span(obs_names::CLOCK_SYNC);
+    let mut samples = Vec::with_capacity(CLOCK_SYNC_PINGS);
+    for seq in 0..CLOCK_SYNC_PINGS {
+        let ping = Message::new(MsgKind::ClockSync, 0, p, vec![seq as f64]);
+        let t_send_ns = obs::now_ns();
+        write_frame(s, rank, &ping)?;
+        let (_dst, pong) = read_frame(s)?;
+        let t_recv_ns = obs::now_ns();
+        if pong.tag.kind != MsgKind::ClockSync
+            || pong.data.len() != 2
+            || pong.data[0] != seq as f64
+        {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank}: bad clock-sync reply (kind {}, {} words)",
+                pong.tag.kind.name(),
+                pong.data.len()
+            )));
+        }
+        samples.push(ClockSample { t_send_ns, t_remote_ns: pong.data[1] as u64, t_recv_ns });
+    }
+    write_frame(s, rank, &Message::new(MsgKind::ClockSync, 1, p, Vec::new()))?;
+    Ok(estimate_offset_ns(&samples))
 }
 
 // ------------------------------------------------------------- worker side
@@ -326,7 +369,38 @@ impl WorkerEndpoint {
         let mut ep = WorkerEndpoint { rank, p, stream, prestash: VecDeque::new() };
         let hello = Message::new(MsgKind::Hello, 0, rank, Vec::new());
         write_frame(&mut ep.stream, p, &hello)?;
+        ep.answer_clock_sync()?;
         Ok(ep)
+    }
+
+    /// Answer the coordinator's clock-alignment pings (it runs them right
+    /// after our `Hello`, before any session traffic): echo each level-0
+    /// ping's sequence number together with our clock reading, as fast as
+    /// possible — scheduling noise inflates the RTT and the coordinator's
+    /// min-RTT filter discards the sample. A level-1 frame ends the
+    /// exchange.
+    fn answer_clock_sync(&mut self) -> Result<(), TransportError> {
+        loop {
+            let (_dst, msg) = read_frame(&mut self.stream)?;
+            if msg.tag.kind != MsgKind::ClockSync {
+                return Err(TransportError::Protocol(format!(
+                    "rank {}: expected clock-sync during handshake, got {}",
+                    self.rank,
+                    msg.tag.kind.name()
+                )));
+            }
+            if msg.tag.level != 0 {
+                return Ok(());
+            }
+            let seq = msg.data.first().copied().unwrap_or(0.0);
+            let reply = Message::new(
+                MsgKind::ClockSync,
+                0,
+                self.rank,
+                vec![seq, obs::now_ns() as f64],
+            );
+            write_frame(&mut self.stream, self.p, &reply)?;
+        }
     }
 }
 
@@ -538,12 +612,21 @@ pub fn run_worker(
     loop {
         let input = match mb.recv_where(&mut ep, |t| {
             t.kind == MsgKind::Input
+                || t.kind == MsgKind::Flush
                 || (t.kind == MsgKind::Truncate && t.level == COMPRESS_START_LEVEL)
         }) {
             Ok(m) => m,
             Err(TransportError::Closed(_)) => return Ok(()),
             Err(e) => return Err(e),
         };
+        if input.tag.kind == MsgKind::Flush {
+            // Ship every span recorded in this process since the last
+            // flush; the coordinator aligns them onto its clock with this
+            // rank's handshake offset and merges all P+1 timelines.
+            let (spans, dropped) = obs::drain();
+            ep.send(p, Message::new(MsgKind::Flush, 0, rank, obs::encode_spans(&spans, dropped)))?;
+            continue;
+        }
         if input.tag.kind == MsgKind::Truncate {
             // Compression start frame: [tau]. The shard is compressed in
             // place — this process never holds more than its branch —
@@ -563,6 +646,7 @@ pub fn run_worker(
                     std::process::exit(3);
                 }
             }
+            let _cs = obs::span(obs_names::COMPRESS_PASS);
             compress_branch(&mut sm, &structure, input.data[0], &backend, &mut ep, &mut mb)?;
             slots.clear();
             continue;
@@ -598,6 +682,7 @@ pub fn run_worker(
             ep.barrier()?;
         }
         let t0 = Instant::now();
+        let _ps = obs::span_arg(obs_names::PRODUCT, u64::from(flags.pid));
         let mut rec = if flags.trace {
             Recording::new(&mut ep, t0)
         } else {
@@ -771,6 +856,10 @@ pub struct SocketSession {
     products: u64,
     /// Submitted-but-uncollected pipelined products, in submission order.
     inflight: VecDeque<InFlight>,
+    /// Per-rank clock offsets (`worker_now_ns - coordinator_now_ns`) from
+    /// the handshake's ping exchange — what maps worker span timestamps
+    /// onto the coordinator timeline in [`SocketSession::collect_spans`].
+    clock_offsets_ns: Vec<i64>,
 }
 
 /// One submitted pipelined product awaiting [`SocketSession::wait`].
@@ -839,6 +928,12 @@ impl SocketSession {
                 .env(FORBID_FULL_MATRIX_ENV, "1")
                 .stdin(Stdio::null())
                 .stdout(Stdio::null());
+            // Workers inherit span recording, so a session-wide flush
+            // covers every process (tests can still override via
+            // `extra_env`).
+            if obs::enabled() {
+                cmd.env(obs::OBS_ENV, "1");
+            }
             for (k, v) in &opts.extra_env {
                 cmd.env(k, v);
             }
@@ -853,6 +948,7 @@ impl SocketSession {
         // us).
         let deadline = Instant::now() + opts.timeout;
         let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+        let mut clock_offsets_ns = vec![0i64; p];
         let mut accepted = 0usize;
         while accepted < p {
             match listener.accept() {
@@ -871,6 +967,7 @@ impl SocketSession {
                     if r >= p || streams[r].is_some() {
                         return Err(TransportError::Protocol(format!("bad hello rank {r}")));
                     }
+                    clock_offsets_ns[r] = clock_sync_handshake(&mut s, r, p)?;
                     // Reader threads block for as long as a rank computes;
                     // the session deadline is enforced at the hub's
                     // receive side.
@@ -990,6 +1087,7 @@ impl SocketSession {
             _sock_guard: sock_guard,
             products: 0,
             inflight: VecDeque::new(),
+            clock_offsets_ns,
         })
     }
 
@@ -1089,10 +1187,78 @@ impl SocketSession {
             )?;
         }
         let backend = crate::backend::native::NativeBackend;
+        let _cs = obs::span(obs_names::COMPRESS_PASS);
         let stats = compress_top(sm_top, structure, tau, &backend, hub, mb)?;
         // Every cached top marshaling plan was shaped by the old ranks.
         top_plans.clear();
         Ok(stats)
+    }
+
+    /// Per-rank clock offsets (`worker_now_ns - coordinator_now_ns`)
+    /// estimated by the handshake's ping exchange.
+    pub fn clock_offsets_ns(&self) -> &[i64] {
+        &self.clock_offsets_ns
+    }
+
+    /// Flush every process's span buffers and merge them into one
+    /// Chrome/Perfetto trace JSON on the coordinator's clock: `pid` =
+    /// worker rank (coordinator = P), `tid` = recording thread stream.
+    /// This is the measured Fig. 8 across real processes — covering
+    /// whatever ran since the last flush: HGEMV products, compression
+    /// passes, serving lifecycle spans.
+    ///
+    /// Refuses to run with pipelined products in flight (the flush reply
+    /// would interleave with product traffic); a transport error poisons
+    /// the session like a failed product.
+    pub fn collect_spans(&mut self) -> Result<String, TransportError> {
+        if !self.inflight.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "collect_spans cannot interleave with {} in-flight pipelined products — \
+                 wait() on them first",
+                self.inflight.len()
+            )));
+        }
+        let pid = self.products;
+        match self.collect_spans_inner() {
+            Ok(json) => Ok(json),
+            Err(e) => Err(self.poison(pid, e)),
+        }
+    }
+
+    fn collect_spans_inner(&mut self) -> Result<String, TransportError> {
+        let Self { p, hub, mb, clock_offsets_ns, .. } = self;
+        let p = *p;
+        let hub = hub.as_mut().ok_or_else(closed_session)?;
+        let flush_span = obs::span(obs_names::SPAN_FLUSH);
+        for r in 0..p {
+            hub.send(r, Message::new(MsgKind::Flush, 0, p, Vec::new()))?;
+        }
+        let mut parts: Vec<TracePart> = Vec::with_capacity(p + 1);
+        let mut dropped_total = 0u64;
+        for _ in 0..p {
+            let msg = mb.recv_kind(hub, MsgKind::Flush)?;
+            let r = msg.tag.src as usize;
+            if r >= p {
+                return Err(TransportError::Protocol(format!(
+                    "flush reply from unknown rank {r}"
+                )));
+            }
+            let (spans, dropped) =
+                obs::decode_spans(&msg.data).map_err(TransportError::Protocol)?;
+            dropped_total += dropped;
+            parts.push(TracePart { default_pid: r, offset_ns: clock_offsets_ns[r], spans });
+        }
+        drop(flush_span);
+        let (own, own_dropped) = obs::drain();
+        dropped_total += own_dropped;
+        if dropped_total > 0 {
+            obs::Registry::global()
+                .counter("h2opus_obs_spans_dropped_total")
+                .add(dropped_total);
+        }
+        parts.push(TracePart { default_pid: p, offset_ns: 0, spans: own });
+        parts.sort_by_key(|part| part.default_pid);
+        Ok(obs::merged_trace_json(&parts))
     }
 
     /// One synchronous distributed product y = A·x over the live worker
@@ -1257,6 +1423,7 @@ impl SocketSession {
     ) -> Result<(), TransportError> {
         let m_pad = self.sm_top.leaf_dim;
         let flags = pack_input_flags(self.opts.measured_trace, pipelined, nv, pid);
+        let _ss = obs::span_arg(obs_names::SHIP_INPUT, u64::from(wire_pid(pid)));
         let hub = self.hub.as_mut().ok_or_else(closed_session)?;
         for (r, layout) in self.io.iter().enumerate() {
             let mut buf = vec![0.0; layout.x_words(m_pad, nv)];
@@ -1328,6 +1495,7 @@ impl SocketSession {
         // Collect this product's output rows (matched by wire product
         // id — a pipelined successor's early output stays stashed); the
         // measured clock stops at the last.
+        let collect_span = obs::span_arg(obs_names::COLLECT_OUTPUT, u64::from(wire));
         let mut got_output = vec![false; p];
         for _ in 0..p {
             let msg = mb
@@ -1355,6 +1523,7 @@ impl SocketSession {
             }
             y[base_row * nv..end_row * nv].copy_from_slice(&msg.data);
         }
+        drop(collect_span);
         let measured = t0.elapsed().as_secs_f64();
 
         // Per-rank counters and trace stamps.
@@ -1392,6 +1561,12 @@ impl SocketSession {
         let mut metrics = Metrics::merge_all(rank_metrics.iter());
         metrics.merge(&master_metrics);
         let coalesced_nv = metrics.coalesced_nv;
+        // The registry view of the session: every completed product folds
+        // its merged work counters into the process-global registry (a
+        // handful of relaxed atomic adds — always on).
+        let registry = obs::Registry::global();
+        registry.absorb_metrics(&metrics);
+        registry.counter("h2opus_session_products_total").inc();
 
         Ok(SocketReport {
             measured,

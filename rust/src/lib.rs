@@ -54,6 +54,7 @@ pub mod geometry;
 pub mod linalg;
 pub mod matvec;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod solver;
 pub mod tree;

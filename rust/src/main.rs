@@ -8,12 +8,18 @@
 //! h2opus solve    [--n-side 32] [--ranks 4] [--beta 0.75] [--rtol 1e-6] [--backend native|xla]
 //! h2opus accuracy [--n-side 32] [--dim 2] [--g 4]
 //! h2opus info     [--n-side 32] [--dim 2]
+//! h2opus serve    [--ranks 4] [--max-coalesce 16] [--duration 5] [--selfload R] [--stats-sock PATH]
+//! h2opus stats    [--connect PATH] [--raw]        (live snapshot of a running `h2opus serve`)
 //! h2opus worker   --connect SOCK --rank R --ranks P --nv NV [matrix flags]   (internal: socket-transport rank)
 //! ```
 //!
 //! `--backend-threads T` (or `H2OPUS_BACKEND_THREADS`) sets the parallel
 //! native backend's pool width — the per-process batched-kernel thread
 //! budget, shared by all rank threads (see the `backend` module docs).
+//!
+//! `--obs` (or `H2OPUS_OBS=1`) turns on span recording; `matvec
+//! --obs-trace out.json` writes the merged cross-process Chrome trace
+//! (socket transport: one timeline per worker rank, clock-aligned).
 
 use std::collections::HashMap;
 
@@ -90,6 +96,9 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
     let ranks: usize = get(flags, "ranks", 4);
     let nv: usize = get(flags, "nv", 1);
     let transport = flags.get("transport").map(String::as_str).unwrap_or("inproc");
+    if flags.contains_key("obs-trace") {
+        h2opus::obs::set_enabled(true);
+    }
 
     if transport == "socket" {
         cmd_matvec_socket(flags, ranks, nv);
@@ -127,6 +136,16 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
         std::fs::write(path, json).expect("writing measured trace");
         println!("measured trace written to {path}");
     }
+    if let Some(path) = flags.get("obs-trace") {
+        // In-process run: one part, rank lanes were labeled by the
+        // executor, unlabeled (main-thread) spans map to pid = P.
+        let (spans, dropped) = h2opus::obs::drain();
+        let count = spans.len();
+        let part = h2opus::obs::TracePart { default_pid: ranks, offset_ns: 0, spans };
+        std::fs::write(path, h2opus::obs::merged_trace_json(&[part]))
+            .expect("writing obs trace");
+        println!("obs trace written to {path} ({count} spans, {dropped} dropped)");
+    }
 }
 
 #[cfg(unix)]
@@ -137,6 +156,11 @@ fn cmd_matvec_socket(flags: &HashMap<String, String>, ranks: usize, nv: usize) {
     let mut rng = Prng::new(1234);
     let x = rng.normal_vec(n * nv);
     let mut y = vec![0.0; n * nv];
+    if let Some(path) = flags.get("obs-trace") {
+        let tau: f64 = get(flags, "tau", 1e-3);
+        traced_socket_session(&job, ranks, nv, &x, &mut y, tau, path);
+        return;
+    }
     let opts = SocketOptions {
         measured_trace: flags.contains_key("measured-trace"),
         ..SocketOptions::default()
@@ -168,6 +192,42 @@ fn cmd_matvec_socket(flags: &HashMap<String, String>, ranks: usize, nv: usize) {
 fn cmd_matvec_socket(_flags: &HashMap<String, String>, _ranks: usize, _nv: usize) {
     eprintln!("the socket transport requires Unix domain sockets");
     std::process::exit(1);
+}
+
+/// A product → distributed compression → product sequence over one live
+/// socket session, with span recording on in every process; writes the
+/// clock-aligned merged trace of all P workers + the coordinator.
+#[cfg(unix)]
+fn traced_socket_session(
+    job: &MatrixJob,
+    ranks: usize,
+    nv: usize,
+    x: &[f64],
+    y: &mut [f64],
+    tau: f64,
+    path: &str,
+) {
+    use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+    h2opus::obs::set_enabled(true);
+    let die = |what: &str, e: h2opus::dist::transport::TransportError| -> ! {
+        eprintln!("{what} failed: {e}");
+        std::process::exit(1)
+    };
+    let mut session = SocketSession::start(job, ranks, nv, SocketOptions::default())
+        .unwrap_or_else(|e| die("starting the worker session", e));
+    println!("N = {}, P = {ranks}, nv = {nv}, transport = socket (traced)", session.n());
+    for (w, off) in session.clock_offsets_ns().iter().enumerate() {
+        println!("  worker {w} clock offset {off:>8} ns");
+    }
+    let r1 = session.hgemv(x, y).unwrap_or_else(|e| die("product", e));
+    println!("product           {:>12.3} ms", r1.measured * 1e3);
+    let stats = session.compress(tau).unwrap_or_else(|e| die("compression", e));
+    println!("compressed        {:>12} -> {} words ({:.2}x)", stats.pre_words, stats.post_words, stats.ratio());
+    let r2 = session.hgemv(x, y).unwrap_or_else(|e| die("compressed product", e));
+    println!("product (compressed) {:>9.3} ms", r2.measured * 1e3);
+    let json = session.collect_spans().unwrap_or_else(|e| die("span flush", e));
+    std::fs::write(path, &json).expect("writing obs trace");
+    println!("merged trace written to {path} ({} bytes)", json.len());
 }
 
 #[cfg(unix)]
@@ -298,6 +358,125 @@ fn solve_over_socket(
     std::process::exit(1);
 }
 
+/// Run a request-coalescing [`SessionServer`] with a live stats control
+/// socket, optionally generating its own client load (`--selfload R`
+/// concurrent single-vector requests per round) so `h2opus stats` has
+/// something to show.
+#[cfg(unix)]
+fn cmd_serve(flags: &HashMap<String, String>) {
+    use h2opus::dist::transport::server::{ServerOptions, SessionServer, StatsEndpoint};
+    use h2opus::dist::transport::socket::SocketOptions;
+    let ranks: usize = get(flags, "ranks", 4);
+    let duration: f64 = get(flags, "duration", 5.0);
+    let selfload: usize = get(flags, "selfload", 4);
+    let stats_path =
+        flags.get("stats-sock").cloned().unwrap_or_else(|| "/tmp/h2opus-stats.sock".into());
+    let sopts = ServerOptions {
+        max_coalesce: get(flags, "max-coalesce", 16),
+        pipeline_depth: get(flags, "pipeline", 2),
+    };
+    if flags.contains_key("obs-trace") {
+        // Recording must be on before the workers spawn so they inherit it
+        // and the final flush covers every process.
+        h2opus::obs::set_enabled(true);
+    }
+    let job = job_from(flags);
+    let server = match SessionServer::start(&job, ranks, SocketOptions::default(), sopts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to start the serving session: {e}");
+            std::process::exit(1);
+        }
+    };
+    let endpoint = match StatsEndpoint::bind(std::path::Path::new(&stats_path)) {
+        Ok(ep) => ep,
+        Err(e) => {
+            eprintln!("failed to bind the stats socket: {e}");
+            std::process::exit(1);
+        }
+    };
+    let n = server.n();
+    println!(
+        "serving N = {n} over P = {ranks} worker ranks for {duration:.0} s; \
+         stats socket {stats_path} (try: h2opus stats --connect {stats_path})"
+    );
+    let mut rng = Prng::new(7);
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < duration {
+        if selfload > 0 {
+            let handles: Vec<_> = (0..selfload)
+                .map(|_| {
+                    let x = rng.normal_vec(n);
+                    server.submit(&x).expect("submitting self-load request")
+                })
+                .collect();
+            for h in handles {
+                h.wait().expect("waiting for self-load request");
+            }
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        endpoint.poll(&server).expect("polling stats socket");
+    }
+    println!("{}", server.stats().summary());
+    if let Some(path) = flags.get("obs-trace") {
+        match server.collect_spans() {
+            Ok(json) => {
+                std::fs::write(path, &json).expect("writing obs trace");
+                println!("merged trace written to {path} ({} bytes)", json.len());
+            }
+            Err(e) => eprintln!("span flush failed: {e}"),
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_flags: &HashMap<String, String>) {
+    eprintln!("the session server requires Unix domain sockets");
+    std::process::exit(1);
+}
+
+/// Fetch one live snapshot from a running `h2opus serve` and pretty-print
+/// it (`--raw` dumps the Prometheus-style exposition verbatim).
+#[cfg(unix)]
+fn cmd_stats(flags: &HashMap<String, String>) {
+    use h2opus::dist::transport::server::fetch_stats;
+    let path =
+        flags.get("connect").cloned().unwrap_or_else(|| "/tmp/h2opus-stats.sock".into());
+    let text = match fetch_stats(std::path::Path::new(&path)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("stats fetch from {path} failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    if flags.contains_key("raw") {
+        print!("{text}");
+        return;
+    }
+    for line in text.lines() {
+        if let Some(summary) = line.strip_prefix("# h2opus ") {
+            println!("{summary}");
+        }
+    }
+    println!();
+    let rows: Vec<(&str, &str)> = text
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.contains("_bucket{"))
+        .filter_map(|l| l.split_once(' '))
+        .collect();
+    let width = rows.iter().map(|(name, _)| name.len()).max().unwrap_or(0);
+    for (name, value) in rows {
+        println!("  {name:<width$}  {value}");
+    }
+}
+
+#[cfg(not(unix))]
+fn cmd_stats(_flags: &HashMap<String, String>) {
+    eprintln!("the session server requires Unix domain sockets");
+    std::process::exit(1);
+}
+
 fn cmd_accuracy(flags: &HashMap<String, String>) {
     use h2opus::construct::{dense_kernel_matrix, ExponentialKernel};
     let a = build_test_matrix(flags);
@@ -342,6 +521,12 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[1.min(args.len())..]);
+    // Span recording: H2OPUS_OBS=1 (inherited by worker subprocesses) or
+    // the --obs flag. Disabled costs one atomic load per site.
+    h2opus::obs::init_from_env();
+    if flags.contains_key("obs") {
+        h2opus::obs::set_enabled(true);
+    }
     // --cost-calibration PATH anchors the virtual-time CostModel to this
     // host (the file model_check.py --fit writes); the env var form
     // H2OPUS_COST_CALIBRATION works for embedders and subprocesses.
@@ -361,16 +546,22 @@ fn main() {
         "solve" => cmd_solve(&flags),
         "accuracy" => cmd_accuracy(&flags),
         "info" => cmd_info(&flags),
+        "serve" => cmd_serve(&flags),
+        "stats" => cmd_stats(&flags),
         "worker" => cmd_worker(&flags),
         _ => {
             println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
-            println!("commands: matvec | compress | solve | accuracy | info | worker");
+            println!("commands: matvec | compress | solve | accuracy | info | serve | stats | worker");
             println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
             println!("              --backend-threads T (batched-kernel pool width; env H2OPUS_BACKEND_THREADS)");
             println!("              --cost-calibration target/cost_model_calibration.json");
+            println!("              --obs (span recording; env H2OPUS_OBS=1)");
             println!("matvec flags: --threaded --transport inproc|socket --trace F --measured-trace F");
+            println!("              --obs-trace F (merged cross-process span trace; socket: product + compress + product)");
             println!("              --kernel exp|fractional --beta B");
             println!("solve flags:  --transport inproc|socket (socket = persistent sharded worker session)");
+            println!("serve flags:  --max-coalesce NV --pipeline D --duration S --selfload R --stats-sock PATH");
+            println!("stats flags:  --connect PATH --raw");
         }
     }
 }

@@ -1,0 +1,146 @@
+//! Cross-process clock alignment and trace merging.
+//!
+//! Every process stamps spans against its own `Instant` epoch, so worker
+//! timelines are mutually unaligned. The socket session runs a small
+//! NTP-style handshake per worker right after its `Hello`: the coordinator
+//! sends `K` pings, the worker echoes each with its own clock reading, and
+//! the sample with the smallest round trip wins — its offset estimate is
+//! wrong by at most `rtt/2` (the classic bound), which for a loopback Unix
+//! socket is microseconds against phase spans of milliseconds.
+//!
+//! `merged_trace_json` then maps every span onto the coordinator timeline
+//! (`coord_ns = span.start_ns - offset_ns`) and renders one Chrome/Perfetto
+//! JSON with `pid` = rank (coordinator = P) and `tid` = recording stream.
+
+use super::names;
+use super::span::{Span, LANE_UNSET};
+use crate::util::trace::TraceCollector;
+
+/// Ping round trips per worker during the alignment handshake.
+pub const CLOCK_SYNC_PINGS: usize = 8;
+
+/// One ping measurement: coordinator send/receive stamps bracketing the
+/// remote clock reading.
+#[derive(Clone, Copy, Debug)]
+pub struct ClockSample {
+    pub t_send_ns: u64,
+    pub t_remote_ns: u64,
+    pub t_recv_ns: u64,
+}
+
+/// Estimate the remote clock's offset (`remote_now - local_now`, ns) from
+/// ping samples: NTP-style, keep the minimum-RTT sample and assume the
+/// remote stamp sits at its midpoint. Returns 0 for an empty sample set.
+pub fn estimate_offset_ns(samples: &[ClockSample]) -> i64 {
+    samples
+        .iter()
+        .min_by_key(|s| s.t_recv_ns.saturating_sub(s.t_send_ns))
+        .map(|s| {
+            let midpoint = (s.t_send_ns + s.t_recv_ns) / 2;
+            s.t_remote_ns as i64 - midpoint as i64
+        })
+        .unwrap_or(0)
+}
+
+/// One process's contribution to a merged trace.
+#[derive(Clone, Debug)]
+pub struct TracePart {
+    /// The pid assigned to spans with no explicit lane (worker rank, or P
+    /// for the coordinator process).
+    pub default_pid: usize,
+    /// This process's clock offset relative to the merge timeline
+    /// (`remote_now - coord_now`); 0 for the coordinator itself.
+    pub offset_ns: i64,
+    pub spans: Vec<Span>,
+}
+
+/// Merge span sets from several processes into one Chrome-trace JSON.
+///
+/// Spans recorded on a thread labeled with [`super::set_lane`] keep that
+/// lane as their pid (the in-process executor runs all ranks in one
+/// process); unlabeled spans fall to the part's `default_pid`. Events are
+/// sorted by `(pid, tid, start, name)` so the output is deterministic for
+/// a deterministic span set, modulo the timestamp values themselves.
+pub fn merged_trace_json(parts: &[TracePart]) -> String {
+    let mut events: Vec<(usize, u32, u64, Span)> = Vec::new();
+    for part in parts {
+        for s in &part.spans {
+            let pid = if s.lane == LANE_UNSET { part.default_pid } else { s.lane as usize };
+            let start = (s.start_ns as i64 - part.offset_ns).max(0) as u64;
+            events.push((pid, s.tid, start, *s));
+        }
+    }
+    events.sort_by_key(|(pid, tid, start, s)| (*pid, *tid, *start, s.name, s.arg));
+    let mut tc = TraceCollector::new();
+    for (pid, tid, start, s) in events {
+        let info = names::info(s.name);
+        tc.add(
+            &names::render(s.name, s.arg),
+            info.cat,
+            pid,
+            tid as usize,
+            start as f64 * 1e-9,
+            s.dur_ns as f64 * 1e-9,
+        );
+    }
+    tc.to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(name: u16, lane: u32, tid: u32, start: u64, dur: u64) -> Span {
+        Span { name, lane, tid, start_ns: start, dur_ns: dur, arg: 0 }
+    }
+
+    #[test]
+    fn min_rtt_sample_wins() {
+        // Noisy sample (rtt 10_000) vs clean sample (rtt 100): the clean
+        // one determines the estimate.
+        let samples = [
+            ClockSample { t_send_ns: 0, t_remote_ns: 9_000, t_recv_ns: 10_000 },
+            ClockSample { t_send_ns: 20_000, t_remote_ns: 25_050, t_recv_ns: 20_100 },
+        ];
+        assert_eq!(estimate_offset_ns(&samples), 25_050 - 20_050);
+        assert_eq!(estimate_offset_ns(&[]), 0);
+    }
+
+    #[test]
+    fn negative_offsets_are_representable() {
+        let s = ClockSample { t_send_ns: 1_000, t_remote_ns: 100, t_recv_ns: 1_100 };
+        assert_eq!(estimate_offset_ns(&[s]), 100 - 1_050);
+    }
+
+    #[test]
+    fn merge_applies_offsets_and_lanes() {
+        let coord = TracePart {
+            default_pid: 2,
+            offset_ns: 0,
+            spans: vec![sp(names::SHIP_INPUT, LANE_UNSET, 0, 1_000, 100)],
+        };
+        // Worker clock runs 500ns ahead of the coordinator's.
+        let worker = TracePart {
+            default_pid: 0,
+            offset_ns: 500,
+            spans: vec![sp(names::PRODUCT, LANE_UNSET, 0, 1_700, 300)],
+        };
+        let json = merged_trace_json(&[coord, worker]);
+        // Worker span lands at 1_200ns = 1.2us on the merged timeline.
+        assert!(json.contains("\"pid\": 0"), "worker pid mapped: {json}");
+        assert!(json.contains("\"ts\": 1.200"), "offset applied: {json}");
+        assert!(json.contains("\"pid\": 2"), "coordinator pid kept: {json}");
+    }
+
+    #[test]
+    fn lane_overrides_default_pid() {
+        let part = TracePart {
+            default_pid: 9,
+            offset_ns: 0,
+            spans: vec![sp(names::UPSWEEP, 3, 1, 0, 10)],
+        };
+        let json = merged_trace_json(&[part]);
+        assert!(json.contains("\"pid\": 3"));
+        assert!(!json.contains("\"pid\": 9"));
+    }
+}

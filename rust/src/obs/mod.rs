@@ -1,0 +1,36 @@
+//! Unified cross-rank observability: a span runtime, cross-process trace
+//! merging, and a live metrics registry.
+//!
+//! The paper's performance story is *seen* through per-rank timelines
+//! (Fig. 8) and per-phase flop attribution (§6); in GPU H2Opus that role
+//! is played by NVTX ranges + Nsight Systems. Here it is:
+//!
+//! - [`span`] — a per-rank span recorder: preallocated thread-local ring
+//!   buffers behind one `AtomicBool`, RAII guards, numeric name ids from
+//!   the static [`names`] table. Instrumented layers: HGEMV phases per
+//!   level ([`crate::dist::threaded`]), compression sub-steps
+//!   ([`crate::dist::compress`]), backend batch launches
+//!   ([`crate::backend::native`]), session ship/collect and the server
+//!   request lifecycle ([`crate::dist::transport::server`]).
+//! - [`clock`] — NTP-style per-worker clock-offset estimation (min-RTT
+//!   ping filter over the socket handshake) and the merged Chrome/Perfetto
+//!   JSON across all P processes (`pid` = rank, `tid` = stream).
+//! - [`registry`] — named counters/gauges/histograms with
+//!   Prometheus-style exposition, absorbing `Metrics`, `ServerStats` and
+//!   `RequestStats` as views; served live over the socket protocol's
+//!   `Stats` request (`h2opus stats`).
+//!
+//! Enable recording with `H2OPUS_OBS=1` (or [`set_enabled`]); disabled
+//! overhead is one atomic load per site, gated by `benches/obs_overhead`.
+
+pub mod clock;
+pub mod names;
+pub mod registry;
+pub mod span;
+
+pub use clock::{estimate_offset_ns, merged_trace_json, ClockSample, TracePart, CLOCK_SYNC_PINGS};
+pub use registry::{Counter, FixedHistogram, Gauge, Histogram, Registry};
+pub use span::{
+    decode_spans, drain, enabled, encode_spans, init_from_env, now_ns, record, set_enabled,
+    set_lane, span, span_arg, Span, SpanGuard, LANE_UNSET, OBS_ENV,
+};

@@ -1,0 +1,174 @@
+//! The static span-name table.
+//!
+//! Span records carry a `u16` name id instead of a string so the hot path
+//! never allocates and the cross-process flush ships pure numbers: the
+//! coordinator and every `h2opus worker` run the same binary, so the ids
+//! mean the same thing on both sides. Display strings ("upsweep L3",
+//! "request #42 queued") are rendered only at serialization time from
+//! `(id, arg)`.
+
+/// A span name id — an index into the static table below.
+pub type NameId = u16;
+
+/// How a span's `arg` word should be rendered next to its label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgRole {
+    /// `arg` is unused.
+    None,
+    /// `arg` is a tree level: rendered as `L{arg}`.
+    Level,
+    /// `arg` is a product/request pid: rendered as `#{arg}`.
+    Pid,
+    /// `arg` is a batch size: rendered as `x{arg}`.
+    Batch,
+}
+
+/// Static metadata of one span name.
+#[derive(Debug)]
+pub struct NameInfo {
+    /// Base label, e.g. "upsweep".
+    pub label: &'static str,
+    /// Chrome-trace category ("compute", "comm", "transfer", "lowprio",
+    /// "server").
+    pub cat: &'static str,
+    /// How to render the span's `arg`.
+    pub arg: ArgRole,
+}
+
+macro_rules! name_table {
+    ($( $id:ident => $label:expr, $cat:expr, $role:expr; )*) => {
+        name_table!(@consts 0; $( $id )*);
+        /// All registered span names, indexed by [`NameId`].
+        pub static TABLE: &[NameInfo] = &[
+            $( NameInfo { label: $label, cat: $cat, arg: $role }, )*
+        ];
+    };
+    (@consts $n:expr; $id:ident $( $rest:ident )*) => {
+        pub const $id: NameId = $n;
+        name_table!(@consts $n + 1; $( $rest )*);
+    };
+    (@consts $n:expr;) => {
+        /// Number of registered names (== `TABLE.len()`).
+        pub const NAME_COUNT: NameId = $n;
+    };
+}
+
+name_table! {
+    // HGEMV branch/master phases (mirrors `dist::threaded::PHASES`).
+    INPUT_GATHER    => "input gather",          "compute", ArgRole::None;
+    UPSWEEP         => "upsweep",               "compute", ArgRole::None;
+    XHAT_SEND       => "xhat send",             "comm",    ArgRole::None;
+    DENSE_MULT      => "dense + diagonal mult", "compute", ArgRole::None;
+    XHAT_RECV       => "xhat recv",             "comm",    ArgRole::None;
+    COUPLING_MULT   => "coupling mult",         "compute", ArgRole::None;
+    BOUNDARY_WAIT   => "boundary wait",         "comm",    ArgRole::None;
+    BOUNDARY_MERGE  => "boundary merge",        "compute", ArgRole::None;
+    DOWNSWEEP       => "downsweep",             "compute", ArgRole::None;
+    OUTPUT_SCATTER  => "output scatter",        "compute", ArgRole::None;
+    TOP_GATHER      => "xhat gather",           "comm",    ArgRole::None;
+    TOP_SUBTREE     => "top subtree",           "lowprio", ArgRole::None;
+    YHAT_SCATTER    => "yhat scatter",          "comm",    ArgRole::None;
+    // Session / worker lifecycle.
+    PRODUCT         => "product",               "transfer", ArgRole::Pid;
+    SHIP_INPUT      => "ship input",            "comm",     ArgRole::Pid;
+    COLLECT_OUTPUT  => "collect output",        "comm",     ArgRole::Pid;
+    COMPRESS_PASS   => "compress pass",         "transfer", ArgRole::None;
+    CLOCK_SYNC      => "clock sync",            "comm",     ArgRole::None;
+    SPAN_FLUSH      => "span flush",            "comm",     ArgRole::None;
+    // Backend batch launches.
+    BATCH_GEMM      => "batch gemm",            "compute", ArgRole::Batch;
+    BATCH_QR        => "batch qr",              "compute", ArgRole::Batch;
+    BATCH_SVD       => "batch svd",             "compute", ArgRole::Batch;
+    // Server request lifecycle (queued -> fused -> shipped -> gathered),
+    // keyed by pid so one request is traceable across processes.
+    REQ_QUEUED      => "request queued",        "server", ArgRole::Pid;
+    REQ_FUSED       => "request fused",         "server", ArgRole::Pid;
+    REQ_SHIPPED     => "request shipped",       "server", ArgRole::Pid;
+    REQ_GATHERED    => "request gathered",      "server", ArgRole::Pid;
+    // Distributed-compression compute phases.
+    ORTH_LEAF       => "orth leaf qr",          "compute", ArgRole::None;
+    ORTH_TRANSFER   => "orth transfer",         "compute", ArgRole::Level;
+    ABSORB          => "absorb coupling",       "compute", ArgRole::Level;
+    WEIGHT_DOWNSWEEP => "weight downsweep",     "compute", ArgRole::Level;
+    TRUNC_LEAF      => "truncate leaf",         "compute", ArgRole::None;
+    TRUNC_INNER     => "truncate inner",        "compute", ArgRole::Level;
+    PROJECT         => "project",               "compute", ArgRole::Level;
+    // Distributed-compression wire sub-steps: one name per `STEP_*` tag of
+    // `dist::compress` (the `(step << 8) | level` wire word maps here).
+    STEP_RC         => "cmp rc gather",         "comm", ArgRole::Level;
+    STEP_TOPORTH    => "cmp top-orth bcast",    "comm", ArgRole::Level;
+    STEP_RV         => "cmp rv halo",           "comm", ArgRole::Level;
+    STEP_ZU         => "cmp zu bcast",          "comm", ArgRole::Level;
+    STEP_ZV         => "cmp zv bcast",          "comm", ArgRole::Level;
+    STEP_SBLK       => "cmp s-block halo",      "comm", ArgRole::Level;
+    STEP_SIGMA      => "cmp sigma reduce",      "comm", ArgRole::Level;
+    STEP_TOL        => "cmp tol bcast",         "comm", ArgRole::Level;
+    STEP_KLEAF      => "cmp k-leaf reduce",     "comm", ArgRole::Level;
+    STEP_KLEAF_BC   => "cmp k-leaf bcast",      "comm", ArgRole::Level;
+    STEP_KINNER     => "cmp k-inner reduce",    "comm", ArgRole::Level;
+    STEP_KINNER_BC  => "cmp k-inner bcast",     "comm", ArgRole::Level;
+    STEP_PC         => "cmp pc gather",         "comm", ArgRole::Level;
+    STEP_TOPRES     => "cmp top-res bcast",     "comm", ArgRole::Level;
+    STEP_PV         => "cmp pv halo",           "comm", ArgRole::Level;
+    STEP_STATS      => "cmp stats ack",         "comm", ArgRole::Level;
+}
+
+static UNKNOWN: NameInfo = NameInfo { label: "unknown", cat: "lowprio", arg: ArgRole::None };
+
+/// Metadata of a name id (a safe `unknown` entry for out-of-range ids, so
+/// decoding a flush payload from a mismatched binary cannot panic).
+pub fn info(id: NameId) -> &'static NameInfo {
+    TABLE.get(id as usize).unwrap_or(&UNKNOWN)
+}
+
+/// The span name of compression wire sub-step `step` (1-based `STEP_*`
+/// constant of `dist::compress`).
+pub fn comp_step(step: u32) -> NameId {
+    let idx = STEP_RC as u32 + step.saturating_sub(1);
+    if step == 0 || idx >= NAME_COUNT as u32 {
+        NAME_COUNT // out of range -> renders as "unknown"
+    } else {
+        idx as NameId
+    }
+}
+
+/// Render the display string of a span `(id, arg)` pair.
+pub fn render(id: NameId, arg: u64) -> String {
+    let i = info(id);
+    match i.arg {
+        ArgRole::None => i.label.to_string(),
+        ArgRole::Level => format!("{} L{}", i.label, arg),
+        ArgRole::Pid => format!("{} #{}", i.label, arg),
+        ArgRole::Batch => format!("{} x{}", i.label, arg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_dense_and_consistent() {
+        assert_eq!(TABLE.len(), NAME_COUNT as usize);
+        assert_eq!(info(UPSWEEP).label, "upsweep");
+        assert_eq!(info(STEP_STATS).label, "cmp stats ack");
+        assert_eq!(info(NAME_COUNT).label, "unknown");
+    }
+
+    #[test]
+    fn comp_step_maps_all_sixteen() {
+        assert_eq!(comp_step(1), STEP_RC);
+        assert_eq!(comp_step(7), STEP_SIGMA);
+        assert_eq!(comp_step(16), STEP_STATS);
+        assert_eq!(info(comp_step(0)).label, "unknown");
+        assert_eq!(info(comp_step(17)).label, "unknown");
+    }
+
+    #[test]
+    fn render_uses_arg_role() {
+        assert_eq!(render(ORTH_TRANSFER, 3), "orth transfer L3");
+        assert_eq!(render(PRODUCT, 42), "product #42");
+        assert_eq!(render(BATCH_GEMM, 128), "batch gemm x128");
+        assert_eq!(render(DENSE_MULT, 9), "dense + diagonal mult");
+    }
+}

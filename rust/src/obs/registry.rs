@@ -1,0 +1,447 @@
+//! A dependency-free metrics registry: named counters, gauges and
+//! fixed-bucket histograms with Prometheus-style text exposition.
+//!
+//! The registry unifies the three reporting surfaces that grew
+//! independently — [`crate::metrics::Metrics`] (per-product work
+//! counters), `ServerStats` (serving aggregates) and `RequestStats`
+//! (per-request latencies) — as *views*: the execution paths keep their
+//! structs, and the session/server layers absorb them into the global
+//! registry so one `stats` request answers for all of them.
+//!
+//! All handles are `Arc`s of atomics: recording never takes the registry
+//! lock (only name lookup/creation does), so counters are safe to bump
+//! from the dispatcher and client threads concurrently.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value (or peak) gauge holding an `f64` as raw bits.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Keep the maximum of the current and given value (peak tracking).
+    pub fn set_max(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while f64::from_bits(cur) < v {
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A plain (non-atomic) fixed-bucket histogram — the snapshot/aggregation
+/// form, also embedded directly in single-writer stats structs like
+/// `ServerStats`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FixedHistogram {
+    /// Upper bounds of the finite buckets (ascending); one implicit +Inf
+    /// bucket follows.
+    bounds: Vec<f64>,
+    /// `counts.len() == bounds.len() + 1`.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl FixedHistogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bucket bounds must be ascending");
+        let n = bounds.len();
+        FixedHistogram { bounds, counts: vec![0; n + 1], count: 0, sum: 0.0 }
+    }
+
+    /// Exponential latency buckets: 1µs … ~67s in powers of 4.
+    pub fn latency() -> Self {
+        FixedHistogram::new(latency_bounds())
+    }
+
+    /// Power-of-two width buckets for achieved-nv histograms (1 … 1024).
+    pub fn widths() -> Self {
+        FixedHistogram::new((0..=10).map(|i| (1u64 << i) as f64).collect())
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimate the `q`-quantile (0..=1) from bucket counts: the upper
+    /// bound of the bucket containing the target rank (+Inf bucket falls
+    /// back to the largest finite bound). 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.bounds.last().copied().unwrap_or(f64::INFINITY)
+                };
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn merge(&mut self, other: &FixedHistogram) {
+        assert_eq!(self.bounds, other.bounds, "merging histograms with different buckets");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// `(upper_bound, count)` pairs of the non-empty finite buckets plus
+    /// (+Inf, count) if the overflow bucket is non-empty.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                let bound =
+                    if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+                out.push((bound, c));
+            }
+        }
+        out
+    }
+}
+
+/// Bounds of [`FixedHistogram::latency`] — also used to register the
+/// matching atomic histograms by name in the global registry.
+pub fn latency_bounds() -> Vec<f64> {
+    let mut bounds = Vec::new();
+    let mut b = 1e-6;
+    while b < 100.0 {
+        bounds.push(b);
+        b *= 4.0;
+    }
+    bounds
+}
+
+/// A concurrent fixed-bucket histogram (atomic counts); `snapshot` yields
+/// the plain form for quantile math and rendering.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observations, f64 bits, CAS-accumulated.
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bucket bounds must be ascending");
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: (0..=n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0_f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> FixedHistogram {
+        FixedHistogram {
+            bounds: self.bounds.clone(),
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named-metric registry with get-or-create handles and text exposition.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// The process-wide registry every layer records into.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Get or create the counter `name`. Panics if `name` exists with a
+    /// different metric type (a naming bug, not a runtime condition).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Get or create the histogram `name` with the given finite bucket
+    /// bounds (ignored when the histogram already exists).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds.to_vec()))))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Fold one product's merged work counters into the registry.
+    pub fn absorb_metrics(&self, m: &crate::metrics::Metrics) {
+        self.counter("h2opus_flops_total").add(m.flops);
+        self.counter("h2opus_comm_bytes_total").add(m.bytes_sent);
+        self.counter("h2opus_comm_messages_total").add(m.messages);
+        self.counter("h2opus_batch_launches_total").add(m.batch_launches);
+        self.counter("h2opus_batch_pad_waste_total").add(m.pad_waste);
+        self.counter("h2opus_gemm_words_total").add(m.gemm_words);
+        self.gauge("h2opus_rank_matrix_bytes_peak").set_max(m.matrix_bytes as f64);
+        if m.coalesced_nv > 0 {
+            let widths: Vec<f64> = (0..=10).map(|i| (1u64 << i) as f64).collect();
+            self.histogram("h2opus_product_nv", &widths).observe(m.coalesced_nv as f64);
+        }
+    }
+
+    /// Prometheus-style text exposition of every metric, in name order.
+    pub fn render_text(&self) -> String {
+        let metrics: Vec<(String, Metric)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::new();
+        for (name, metric) in metrics {
+            match metric {
+                Metric::Counter(c) => {
+                    writeln!(out, "# TYPE {name} counter").unwrap();
+                    writeln!(out, "{name} {}", c.get()).unwrap();
+                }
+                Metric::Gauge(g) => {
+                    writeln!(out, "# TYPE {name} gauge").unwrap();
+                    writeln!(out, "{name} {}", g.get()).unwrap();
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    writeln!(out, "# TYPE {name} histogram").unwrap();
+                    let mut cum = 0;
+                    for (bound, c) in
+                        snap.bounds.iter().copied().zip(snap.counts.iter().copied())
+                    {
+                        cum += c;
+                        writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}").unwrap();
+                    }
+                    writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", snap.count()).unwrap();
+                    writeln!(out, "{name}_sum {}", snap.sum()).unwrap();
+                    writeln!(out, "{name}_count {}", snap.count()).unwrap();
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove every registered metric (tests; existing handles keep
+    /// working but are no longer rendered).
+    pub fn clear(&self) {
+        self.metrics.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("x_total");
+        c.add(3);
+        c.inc();
+        assert_eq!(r.counter("x_total").get(), 4, "same handle by name");
+        let g = r.gauge("x_peak");
+        g.set_max(2.0);
+        g.set_max(1.0);
+        assert_eq!(g.get(), 2.0, "peak keeps max");
+        g.set(0.5);
+        assert_eq!(g.get(), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_confusion_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m");
+        let _ = r.gauge("m");
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = FixedHistogram::new(vec![1.0, 2.0, 4.0, 8.0]);
+        for v in [0.5, 0.5, 1.5, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0, 7.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 10);
+        // p50 -> 5th observation -> bucket (2,4] -> bound 4.0.
+        assert_eq!(h.quantile(0.5), 4.0);
+        assert_eq!(h.quantile(0.99), 8.0);
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(FixedHistogram::latency().quantile(0.5), 0.0, "empty -> 0");
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = FixedHistogram::new(vec![1.0]);
+        h.observe(100.0);
+        assert_eq!(h.nonzero_buckets(), vec![(f64::INFINITY, 1)]);
+        // Overflow quantile falls back to the largest finite bound.
+        assert_eq!(h.quantile(0.5), 1.0);
+    }
+
+    #[test]
+    fn atomic_histogram_snapshot_matches() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", &[0.001, 0.01, 0.1]);
+        h.observe(0.0005);
+        h.observe(0.05);
+        h.observe(5.0);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 3);
+        assert!((snap.sum() - 5.0505).abs() < 1e-12);
+        assert_eq!(snap.quantile(1.0), 0.1, "overflow clamps to top bound");
+    }
+
+    #[test]
+    fn exposition_format() {
+        let r = Registry::new();
+        r.counter("a_total").add(7);
+        r.gauge("b_bytes").set(12.5);
+        r.histogram("c_seconds", &[0.5, 1.0]).observe(0.25);
+        let text = r.render_text();
+        assert!(text.contains("# TYPE a_total counter\na_total 7\n"), "{text}");
+        assert!(text.contains("b_bytes 12.5"), "{text}");
+        assert!(text.contains("c_seconds_bucket{le=\"0.5\"} 1"), "{text}");
+        assert!(text.contains("c_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("c_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn absorb_metrics_views() {
+        let r = Registry::new();
+        let mut m = crate::metrics::Metrics::new();
+        m.gemm(4, 8, 8, 2);
+        m.send(1024);
+        m.matrix_bytes = 4096;
+        m.coalesced_nv = 8;
+        r.absorb_metrics(&m);
+        r.absorb_metrics(&m);
+        assert_eq!(r.counter("h2opus_flops_total").get(), 2 * m.flops);
+        assert_eq!(r.counter("h2opus_comm_bytes_total").get(), 2048);
+        assert_eq!(r.gauge("h2opus_rank_matrix_bytes_peak").get(), 4096.0);
+        let text = r.render_text();
+        assert!(text.contains("h2opus_product_nv_count 2"), "{text}");
+    }
+}

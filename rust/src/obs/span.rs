@@ -1,0 +1,343 @@
+//! The span recorder: preallocated thread-local ring buffers behind one
+//! process-wide enable flag.
+//!
+//! Design constraints (ISSUE 8):
+//!
+//! - **Disabled path ~zero**: [`enabled`] is a single relaxed
+//!   `AtomicBool` load; a disabled [`span`] constructs an inert guard
+//!   without reading the clock, and its `Drop` is one branch. The
+//!   `obs_overhead` bench gates this in CI.
+//! - **Zero-alloc hot path**: each thread owns a preallocated ring of
+//!   [`RING_CAPACITY`] spans; recording is one (uncontended) mutex lock +
+//!   a slot write. When the ring wraps, the oldest spans are overwritten
+//!   and counted as dropped rather than ever allocating.
+//! - **Numeric records**: spans carry a [`names::NameId`] and a raw `arg`
+//!   word instead of strings, so the cross-process flush ships pure f64s
+//!   (see [`encode_spans`]) and rendering happens only at serialization.
+//!
+//! Timestamps are nanoseconds since a process-wide [`std::time::Instant`]
+//! epoch; cross-process alignment is [`super::clock`]'s job.
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::names::NameId;
+
+/// Spans each thread can hold before the ring wraps (oldest overwritten).
+pub const RING_CAPACITY: usize = 1 << 14;
+
+/// Lane value of spans recorded on a thread with no [`set_lane`] call:
+/// they are attributed to the enclosing process at merge time.
+pub const LANE_UNSET: u32 = u32::MAX;
+
+/// Environment variable enabling span recording at process start
+/// (`H2OPUS_OBS=1`); the coordinator forwards it to worker processes.
+pub const OBS_ENV: &str = "H2OPUS_OBS";
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span recording on? One relaxed atomic load — this is the whole
+/// disabled-path cost at every instrumentation site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (also pins the clock epoch on enable so
+/// `now_ns` is monotone across the toggle).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Enable recording if [`OBS_ENV`] is set to anything but `0`/empty.
+pub fn init_from_env() {
+    if std::env::var(OBS_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+        set_enabled(true);
+    }
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-local epoch (first observability use).
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One recorded span. `lane` is the logical rank the recording thread was
+/// labeled with ([`set_lane`]), or [`LANE_UNSET`]; `tid` is a stable
+/// per-thread stream id; times are process-local nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub name: NameId,
+    pub lane: u32,
+    pub tid: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub arg: u64,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    /// Next slot to write once `spans.len() == RING_CAPACITY`.
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring { spans: Vec::with_capacity(RING_CAPACITY), next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.spans.len() < RING_CAPACITY {
+            self.spans.push(s);
+        } else {
+            self.spans[self.next] = s;
+            self.next = (self.next + 1) % RING_CAPACITY;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(&mut self) -> (Vec<Span>, u64) {
+        let mut out = std::mem::take(&mut self.spans);
+        // Restore chronological order if the ring wrapped.
+        out.rotate_left(self.next.min(out.len()));
+        self.spans = Vec::with_capacity(RING_CAPACITY);
+        self.next = 0;
+        let dropped = std::mem::take(&mut self.dropped);
+        (out, dropped)
+    }
+}
+
+struct ThreadBuf {
+    tid: u32,
+    ring: Mutex<Ring>,
+}
+
+static THREADS: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static TL_BUF: OnceCell<Arc<ThreadBuf>> = const { OnceCell::new() };
+    static TL_LANE: Cell<u32> = const { Cell::new(LANE_UNSET) };
+}
+
+/// Label the calling thread with logical rank `lane`; every span it
+/// records from now on carries it. The in-process executor calls this at
+/// the top of each rank job so merged traces attribute pool threads to
+/// ranks; worker processes don't need it (their whole process maps to one
+/// rank at flush time).
+pub fn set_lane(lane: u32) {
+    TL_LANE.with(|l| l.set(lane));
+}
+
+/// Record a complete span with explicit timestamps (for lifecycle events
+/// whose start was stamped on a different code path than their end). No-op
+/// while disabled.
+pub fn record(name: NameId, arg: u64, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let lane = TL_LANE.with(|l| l.get());
+    TL_BUF.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let b = Arc::new(ThreadBuf { tid, ring: Mutex::new(Ring::new()) });
+            THREADS.lock().unwrap().push(Arc::clone(&b));
+            b
+        });
+        let mut ring = buf.ring.lock().unwrap();
+        ring.push(Span { name, lane, tid: buf.tid, start_ns, dur_ns, arg });
+    });
+}
+
+/// RAII span: records `[construction, drop)` on the calling thread's ring.
+/// Inert (no clock read, no record) while recording is disabled.
+pub struct SpanGuard {
+    name: NameId,
+    arg: u64,
+    start_ns: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// A guard that records nothing (what [`span`] returns when disabled).
+    pub fn inert() -> Self {
+        SpanGuard { name: 0, arg: 0, start_ns: 0, armed: false }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let end = now_ns();
+            record(self.name, self.arg, self.start_ns, end.saturating_sub(self.start_ns));
+        }
+    }
+}
+
+/// Open a span with no argument word.
+#[inline]
+pub fn span(name: NameId) -> SpanGuard {
+    span_arg(name, 0)
+}
+
+/// Open a span carrying `arg` (level, pid, or batch size per the name's
+/// [`names::ArgRole`]).
+#[inline]
+pub fn span_arg(name: NameId, arg: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inert();
+    }
+    SpanGuard { name, arg, start_ns: now_ns(), armed: true }
+}
+
+/// Drain every thread's ring: returns all recorded spans (sorted by start
+/// time) plus the total overwritten-span count, and leaves the rings
+/// empty. Threads keep their registration, so recording continues
+/// afterwards.
+pub fn drain() -> (Vec<Span>, u64) {
+    let threads = THREADS.lock().unwrap();
+    let mut all = Vec::new();
+    let mut dropped = 0;
+    for buf in threads.iter() {
+        let (spans, d) = buf.ring.lock().unwrap().drain();
+        all.extend(spans);
+        dropped += d;
+    }
+    all.sort_by_key(|s| (s.start_ns, s.tid, s.name));
+    (all, dropped)
+}
+
+/// Encode spans for the wire `Flush` reply: `[dropped, count, then 6 f64
+/// words per span]`. Every field is exactly representable (all values are
+/// < 2^53 for any realistic process lifetime).
+pub fn encode_spans(spans: &[Span], dropped: u64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(2 + spans.len() * 6);
+    out.push(dropped as f64);
+    out.push(spans.len() as f64);
+    for s in spans {
+        out.push(s.name as f64);
+        out.push(s.lane as f64);
+        out.push(s.tid as f64);
+        out.push(s.start_ns as f64);
+        out.push(s.dur_ns as f64);
+        out.push(s.arg as f64);
+    }
+    out
+}
+
+/// Decode a `Flush` payload back into `(spans, dropped)`.
+pub fn decode_spans(data: &[f64]) -> Result<(Vec<Span>, u64), String> {
+    if data.len() < 2 {
+        return Err(format!("flush payload too short: {} words", data.len()));
+    }
+    let dropped = data[0] as u64;
+    let count = data[1] as usize;
+    let body = &data[2..];
+    if body.len() != count * 6 {
+        return Err(format!("flush payload: expected {} span words, got {}", count * 6, body.len()));
+    }
+    let spans = body
+        .chunks_exact(6)
+        .map(|c| Span {
+            name: c[0] as NameId,
+            lane: c[1] as u32,
+            tid: c[2] as u32,
+            start_ns: c[3] as u64,
+            dur_ns: c[4] as u64,
+            arg: c[5] as u64,
+        })
+        .collect();
+    Ok((spans, dropped))
+}
+
+/// Best-effort span count currently buffered (tests / diagnostics).
+pub fn buffered() -> usize {
+    THREADS.lock().unwrap().iter().map(|b| b.ring.lock().unwrap().spans.len()).sum()
+}
+
+/// The enable flag and thread rings are process-global, so unit tests that
+/// flip them serialize on this lock (cargo runs tests on threads of one
+/// process).
+#[cfg(test)]
+pub(crate) static OBS_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::super::names;
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = OBS_TEST_LOCK.lock().unwrap();
+        set_enabled(false);
+        let before = buffered();
+        {
+            let _s = span(names::UPSWEEP);
+        }
+        record(names::UPSWEEP, 0, 0, 10);
+        assert_eq!(buffered(), before);
+    }
+
+    #[test]
+    fn spans_record_and_drain() {
+        let _g = OBS_TEST_LOCK.lock().unwrap();
+        set_enabled(true);
+        let _ = drain();
+        set_lane(7);
+        {
+            let _s = span_arg(names::UPSWEEP, 3);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        record(names::REQ_QUEUED, 42, 100, 50);
+        let (spans, dropped) = drain();
+        set_enabled(false);
+        set_lane(LANE_UNSET);
+        assert_eq!(dropped, 0);
+        let up = spans.iter().find(|s| s.name == names::UPSWEEP).expect("upsweep span");
+        assert_eq!(up.arg, 3);
+        assert_eq!(up.lane, 7);
+        assert!(up.dur_ns >= 1_000_000, "slept 1ms, got {}ns", up.dur_ns);
+        let rq = spans.iter().find(|s| s.name == names::REQ_QUEUED).expect("queued span");
+        assert_eq!((rq.start_ns, rq.dur_ns, rq.arg), (100, 50, 42));
+        assert_eq!(buffered(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_dropped() {
+        let mut r = Ring::new();
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            r.push(Span { name: 0, lane: 0, tid: 0, start_ns: i, dur_ns: 0, arg: 0 });
+        }
+        let (spans, dropped) = r.drain();
+        assert_eq!(spans.len(), RING_CAPACITY);
+        assert_eq!(dropped, 10);
+        // Oldest 10 were overwritten; order restored chronologically.
+        assert_eq!(spans[0].start_ns, 10);
+        assert!(spans.windows(2).all(|w| w[0].start_ns < w[1].start_ns));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let spans = vec![
+            Span { name: 5, lane: LANE_UNSET, tid: 2, start_ns: 123, dur_ns: 456, arg: 9 },
+            Span { name: 40, lane: 3, tid: 0, start_ns: 1 << 40, dur_ns: 7, arg: u32::MAX as u64 },
+        ];
+        let wire = encode_spans(&spans, 11);
+        let (back, dropped) = decode_spans(&wire).unwrap();
+        assert_eq!(back, spans);
+        assert_eq!(dropped, 11);
+        assert!(decode_spans(&wire[..wire.len() - 1]).is_err());
+        assert!(decode_spans(&[]).is_err());
+    }
+}

@@ -4,6 +4,28 @@
 
 use std::fmt::Write as _;
 
+/// Escape a string for inclusion inside a JSON string literal: quotes,
+/// backslashes, and all control characters (U+0000..U+001F must be escaped
+/// per RFC 8259 — a raw tab or newline in an event name would otherwise
+/// produce invalid JSON that Perfetto rejects).
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// One complete ("X") trace event.
 #[derive(Clone, Debug)]
 pub struct TraceEvent {
@@ -49,13 +71,16 @@ impl TraceCollector {
         let mut out = String::from("[\n");
         for (i, e) in self.events.iter().enumerate() {
             let comma = if i + 1 == self.events.len() { "" } else { "," };
-            // names are internal identifiers (no quoting hazards), but escape
-            // quotes/backslashes defensively.
-            let name = e.name.replace('\\', "\\\\").replace('"', "\\\"");
             writeln!(
                 out,
                 "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}}}{}",
-                name, e.cat, e.pid, e.tid, e.ts_us, e.dur_us, comma
+                escape_json(&e.name),
+                escape_json(&e.cat),
+                e.pid,
+                e.tid,
+                e.ts_us,
+                e.dur_us,
+                comma
             )
             .unwrap();
         }
@@ -114,6 +139,36 @@ mod tests {
         assert!(j.ends_with(']'));
         assert!(j.contains("\"ph\": \"X\""));
         assert!(j.contains("\"dur\": 1000.000"));
+    }
+
+    #[test]
+    fn json_escapes_hostile_names_and_cats() {
+        use crate::util::testing::parse_json;
+        let mut t = TraceCollector::new();
+        // Quotes, backslashes, and control characters in BOTH name and cat:
+        // cat was previously emitted raw, so a tab or quote there produced
+        // invalid JSON.
+        t.add("up\"sweep\\L3\nnext\ttab", "com\"m\u{1}", 0, 0, 0.0, 1e-3);
+        t.add("plain", "compute", 1, 2, 1e-3, 1e-3);
+        let parsed = parse_json(&t.to_json()).expect("emitted trace must be strict JSON");
+        let events = parsed.as_arr().expect("top level is an array");
+        assert_eq!(events.len(), 2);
+        // Escapes decode back to the original strings.
+        assert_eq!(
+            events[0].get("name").unwrap().as_str(),
+            Some("up\"sweep\\L3\nnext\ttab")
+        );
+        assert_eq!(events[0].get("cat").unwrap().as_str(), Some("com\"m\u{1}"));
+        assert_eq!(events[1].get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(events[1].get("ts").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn escape_json_covers_control_range() {
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape_json("\n\r\t"), "\\n\\r\\t");
+        assert_eq!(escape_json("\u{0}\u{1f}"), "\\u0000\\u001f");
+        assert_eq!(escape_json("héllo — ok"), "héllo — ok");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Observability integration: happens-before monotonicity of merged
+//! traces (a caused span never starts before its cause, on the inproc
+//! *and* socket transports), deterministic merging modulo timestamps,
+//! strict-JSON validity of every emitted trace, and the live stats
+//! endpoint round trip.
+
+use std::sync::Mutex;
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
+use h2opus::obs;
+use h2opus::obs::names as obs_names;
+use h2opus::util::testing::{parse_json, JsonValue};
+use h2opus::util::Prng;
+
+/// Tests in this file toggle the process-global span recorder and drain
+/// its thread-local rings; serialize them (integration tests share one
+/// process across #[test] threads).
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Enable recording with the rings drained; restore the disabled state
+/// (and empty rings) on drop so unrelated tests see a clean recorder.
+struct Recording;
+
+impl Recording {
+    fn start() -> Recording {
+        obs::set_enabled(true);
+        let _ = obs::drain();
+        Recording
+    }
+}
+
+impl Drop for Recording {
+    fn drop(&mut self) {
+        obs::set_enabled(false);
+        let _ = obs::drain();
+        obs::set_lane(obs::LANE_UNSET);
+    }
+}
+
+/// Inproc happens-before: the threaded executor runs every rank in this
+/// process on one clock, and each branch's `boundary merge` span opens
+/// only after the master's `Parent` message arrives — which the master
+/// sends inside its `yhat scatter` span. A merge span starting before
+/// the scatter span would violate causality.
+#[test]
+fn inproc_boundary_merge_never_precedes_yhat_scatter() {
+    let _g = OBS_LOCK.lock().unwrap();
+    let _rec = Recording::start();
+
+    let points = h2opus::geometry::PointSet::grid_2d(32, 1.0);
+    let kernel = h2opus::construct::ExponentialKernel { dim: 2, corr_len: 0.1 };
+    let cfg = h2opus::config::H2Config { leaf_size: 16, eta: 0.9, cheb_grid: 3 };
+    let a = h2opus::construct::build_h2(points, &kernel, &cfg);
+    let n = a.n();
+    let mut rng = Prng::new(501);
+    let x = rng.normal_vec(n);
+    let mut y = vec![0.0; n];
+    let p = 4;
+    let opts = DistOptions { mode: ExecMode::Threaded, ..DistOptions::default() };
+    let _ = dist_hgemv(&a, &NativeBackend, p, 1, &x, &mut y, &opts);
+
+    let (spans, dropped) = obs::drain();
+    assert_eq!(dropped, 0, "ring overflow on a tiny product");
+    let scatter_start = spans
+        .iter()
+        .filter(|s| s.name == obs_names::YHAT_SCATTER)
+        .map(|s| s.start_ns)
+        .min()
+        .expect("master must record a yhat scatter span");
+    let merges: Vec<_> =
+        spans.iter().filter(|s| s.name == obs_names::BOUNDARY_MERGE).collect();
+    assert!(!merges.is_empty(), "branches must record boundary merge spans");
+    assert_eq!(
+        merges.iter().map(|s| s.lane).collect::<std::collections::BTreeSet<_>>().len(),
+        p,
+        "every branch rank records its own merge"
+    );
+    for m in &merges {
+        assert!(
+            m.start_ns >= scatter_start,
+            "rank {}: boundary merge at {} ns precedes the master's yhat scatter at {} ns",
+            m.lane,
+            m.start_ns,
+            scatter_start
+        );
+    }
+    // Branch phases also recorded, labeled with the rank's lane.
+    for name in [obs_names::UPSWEEP, obs_names::DOWNSWEEP, obs_names::BOUNDARY_WAIT] {
+        assert!(
+            spans.iter().any(|s| s.name == name && s.lane < p as u32),
+            "missing branch span {}",
+            obs_names::info(name).label
+        );
+    }
+}
+
+/// Merging is deterministic modulo timestamps: span order within a part
+/// and part order within the merge must not change the rendered JSON.
+#[test]
+fn merged_trace_deterministic_under_reordering() {
+    let mk = |name, lane, tid, start, dur, arg| obs::Span {
+        name,
+        lane,
+        tid,
+        start_ns: start,
+        dur_ns: dur,
+        arg,
+    };
+    let coord = vec![
+        mk(obs_names::SHIP_INPUT, obs::LANE_UNSET, 0, 1_000, 4_000, 0),
+        mk(obs_names::COLLECT_OUTPUT, obs::LANE_UNSET, 0, 9_000, 2_000, 0),
+    ];
+    let worker = vec![
+        mk(obs_names::PRODUCT, obs::LANE_UNSET, 1, 6_000, 2_500, 0),
+        mk(obs_names::BATCH_GEMM, obs::LANE_UNSET, 1, 6_200, 300, 17),
+    ];
+    let part = |pid, offset, spans: &[obs::Span]| obs::TracePart {
+        default_pid: pid,
+        offset_ns: offset,
+        spans: spans.to_vec(),
+    };
+    let forward = obs::merged_trace_json(&[part(2, 0, &coord), part(0, 500, &worker)]);
+    let mut coord_rev = coord.clone();
+    coord_rev.reverse();
+    let mut worker_rev = worker.clone();
+    worker_rev.reverse();
+    let shuffled =
+        obs::merged_trace_json(&[part(0, 500, &worker_rev), part(2, 0, &coord_rev)]);
+    assert_eq!(forward, shuffled, "merge must not depend on input order");
+
+    let parsed = parse_json(&forward).expect("merged trace must be strict JSON");
+    let events = parsed.as_arr().expect("top level is an array");
+    assert_eq!(events.len(), 4);
+    // The worker's offset (+500ns, worker clock ahead) maps its product
+    // onto the coordinator timeline: 6_000 - 500 = 5_500ns = 5.5us.
+    let product = events
+        .iter()
+        .find(|e| e.get("name").and_then(JsonValue::as_str) == Some("product #0"))
+        .expect("product event present");
+    assert_eq!(product.get("ts").unwrap().as_f64(), Some(5.5));
+    assert_eq!(product.get("pid").unwrap().as_f64(), Some(0.0));
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").and_then(JsonValue::as_str) == Some("batch gemm x17")));
+}
+
+#[cfg(unix)]
+mod socket {
+    use super::*;
+    use std::path::PathBuf;
+
+    use h2opus::dist::transport::server::{
+        fetch_stats, ServerOptions, SessionServer, StatsEndpoint,
+    };
+    use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+    use h2opus::dist::transport::{JobKind, MatrixJob};
+
+    fn conformance_job() -> MatrixJob {
+        MatrixJob {
+            dim: 2,
+            n_side: 16,
+            leaf_size: 16,
+            eta: 0.9,
+            cheb_grid: 3,
+            corr_len: 0.1,
+            kind: JobKind::Exponential,
+        }
+    }
+
+    /// Worker subprocesses inherit recording through `H2OPUS_OBS`.
+    fn traced_opts() -> SocketOptions {
+        SocketOptions {
+            worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+            extra_env: vec![(obs::OBS_ENV.into(), "1".into())],
+            ..SocketOptions::default()
+        }
+    }
+
+    /// Pull every event of a merged trace as `(name, pid, ts_us)`.
+    fn events_of(json: &str) -> Vec<(String, usize, f64)> {
+        let parsed = parse_json(json).expect("merged trace must be strict JSON");
+        parsed
+            .as_arr()
+            .expect("top level is an array")
+            .iter()
+            .map(|e| {
+                (
+                    e.get("name").unwrap().as_str().unwrap().to_string(),
+                    e.get("pid").unwrap().as_f64().unwrap() as usize,
+                    e.get("ts").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    /// Socket happens-before: each worker's `product #pid` span opens
+    /// only after the coordinator ships that product's input, so on the
+    /// merged (clock-aligned) timeline it must not start before the
+    /// coordinator's `ship input #pid` span. Also checks the merged
+    /// trace covers both processes' spans end to end: request transfer
+    /// on the coordinator, HGEMV phases and compression sub-steps on
+    /// the workers.
+    #[test]
+    fn socket_merged_trace_happens_before_and_coverage() {
+        let _g = OBS_LOCK.lock().unwrap();
+        let _rec = Recording::start();
+        let p = 2usize;
+        let job = conformance_job();
+        let mut session =
+            SocketSession::start(&job, p, 1, traced_opts()).expect("session start");
+        let n = session.n();
+        let mut rng = Prng::new(502);
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        session.hgemv(&x, &mut y).expect("traced product");
+        session.compress(1e-3).expect("traced compression");
+        let json = session.collect_spans().expect("span flush");
+        let events = events_of(&json);
+
+        let ship = events
+            .iter()
+            .find(|(name, pid, _)| name == "ship input #0" && *pid == p)
+            .unwrap_or_else(|| panic!("coordinator ship-input span missing"));
+        for rank in 0..p {
+            let product = events
+                .iter()
+                .find(|(name, pid, _)| name == "product #0" && *pid == rank)
+                .unwrap_or_else(|| panic!("rank {rank} product span missing"));
+            assert!(
+                product.2 >= ship.2,
+                "rank {rank}: product at {} us precedes ship input at {} us on the \
+                 merged timeline (clock alignment broken)",
+                product.2,
+                ship.2
+            );
+        }
+        // Coverage: worker HGEMV phases, compression compute sub-steps
+        // per level, compression wire steps, and the coordinator's
+        // collect side all present under their worker/coordinator pids.
+        for (needle, pid) in [
+            ("upsweep", 0),
+            ("downsweep", 1),
+            ("orth leaf qr", 0),
+            ("truncate leaf", 1),
+            ("cmp sigma reduce L", 0),
+            ("collect output #0", p),
+            ("span flush", p),
+        ] {
+            assert!(
+                events.iter().any(|(name, epid, _)| name.starts_with(needle) && *epid == pid),
+                "merged trace lacks '{needle}' under pid {pid}"
+            );
+        }
+        // Leveled sub-steps render their level.
+        assert!(
+            events.iter().any(|(name, _, _)| name.starts_with("orth transfer L")),
+            "leveled compression span missing"
+        );
+    }
+
+    /// The stats endpoint round trip: a live server answers `Stats`
+    /// requests over its control socket with the summary line plus the
+    /// Prometheus-style registry rendering.
+    #[test]
+    fn stats_endpoint_serves_live_registry() {
+        let _g = OBS_LOCK.lock().unwrap();
+        let job = conformance_job();
+        let server = SessionServer::start(
+            &job,
+            2,
+            traced_opts(),
+            ServerOptions { max_coalesce: 4, pipeline_depth: 2 },
+        )
+        .expect("server start");
+        let n = server.n();
+        let mut rng = Prng::new(503);
+        for _ in 0..3 {
+            let x = rng.normal_vec(n);
+            server.submit(&x).expect("submit").wait().expect("serve");
+        }
+
+        let sock = std::env::temp_dir().join(format!("h2opus-stats-test-{}.sock", std::process::id()));
+        let endpoint = StatsEndpoint::bind(&sock).expect("bind stats socket");
+        let client = std::thread::spawn({
+            let sock = sock.clone();
+            move || fetch_stats(&sock)
+        });
+        let mut served = 0usize;
+        while served == 0 {
+            served = endpoint.poll(&server).expect("poll stats socket");
+            if served == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+        let text = client.join().expect("client thread").expect("stats fetch");
+        std::fs::remove_file(&sock).ok();
+
+        assert!(text.starts_with("# h2opus served 3 reqs"), "summary first: {text}");
+        assert!(text.contains("queue wait p50"), "summary carries queue-wait percentiles");
+        for metric in [
+            "h2opus_server_products_total",
+            "h2opus_server_requests_total 3",
+            "h2opus_request_queue_wait_seconds_count 3",
+        ] {
+            assert!(text.contains(metric), "exposition lacks '{metric}':\n{text}");
+        }
+    }
+}
