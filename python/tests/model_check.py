@@ -709,6 +709,77 @@ def fit_cost_model():
     return ok
 
 
+def find_analyze_report():
+    """Locate an `h2opus analyze --json` report written by the CI smoke."""
+    cands = (
+        "target/analyze_report.json",
+        "rust/target/analyze_report.json",
+        os.path.join(os.path.dirname(__file__), "..", "..", "rust", "target",
+                     "analyze_report.json"),
+    )
+    for cand in cands:
+        if os.path.exists(cand):
+            return cand
+    return None
+
+
+def check_analyze_report(path=None):
+    """Sanity-check an analyzer report (`h2opus analyze <trace> --json`):
+    per-rank overlap efficiencies must be valid fractions, the critical
+    path must cover a positive share of the makespan and name a bounding
+    phase, and the CostModel drift ratios must sit inside the same gross
+    sanity band as the measured cross-check. Returns True on PASS/SKIP,
+    False on FAIL."""
+    if path is None:
+        path = find_analyze_report()
+    if path is None or not os.path.exists(path):
+        print("analyze: SKIP (no report — run `h2opus analyze <trace.json> "
+              "--json --out target/analyze_report.json` first)")
+        return True
+    with open(path) as fh:
+        rep = json.load(fh)
+    ok = True
+
+    ranks = rep.get("ranks", [])
+    eff_ok = bool(ranks) and all(
+        0.0 <= r.get("overlap_eff", -1.0) <= 1.0 for r in ranks)
+    print(f"analyze: {len(ranks)} ranks, overlap_eff all in [0, 1]  "
+          f"{'PASS' if eff_ok else 'FAIL'}")
+    ok = ok and eff_ok
+
+    cp = rep.get("critical_path", {})
+    cov = cp.get("coverage", 0.0)
+    # Rendezvous edges may pair spans that overlap in time, so the path's
+    # summed duration can exceed the makespan slightly; 2x is gross error.
+    cov_ok = 0.0 < cov <= 2.0 and bool(cp.get("bound_phase"))
+    print(f"analyze: critical path {cp.get('len', 0)} spans covers "
+          f"{100.0 * cov:.1f}% of makespan, bound by "
+          f"'{cp.get('bound_phase', '')}' on pid {cp.get('bound_pid', '?')}  "
+          f"{'PASS' if cov_ok else 'FAIL'} (need 0 < coverage <= 2 and a "
+          f"bound phase)")
+    ok = ok and cov_ok
+
+    drift = rep.get("drift", [])
+    if drift:
+        band_ok = all(
+            1.0 / 200.0 <= d.get("ratio", 0.0) <= 200.0 for d in drift)
+        worst = max(drift, key=lambda d: max(d.get("ratio", 0.0),
+                                             1.0 / d["ratio"] if d.get("ratio") else 1.0))
+        print(f"analyze: {len(drift)} drift rows, worst measured/predicted "
+              f"{worst.get('ratio', 0.0):.2f}x ({worst.get('class', '?')} "
+              f"pid {worst.get('pid', '?')})  "
+              f"{'PASS' if band_ok else 'FAIL'} (band [1/200, 200])")
+        ok = ok and band_ok
+    else:
+        print("analyze: SKIP drift (trace carried no work counters)")
+
+    dropped = rep.get("total_dropped", 0)
+    verdict = ("PASS" if dropped == 0
+               else "WARN (trace truncated; ring capacity may need raising)")
+    print(f"analyze: {dropped} spans dropped  {verdict}")
+    return ok
+
+
 if __name__ == "__main__":
     if "--cross-check-only" in sys.argv:
         sys.exit(0 if cross_check_measured() else 1)
@@ -716,7 +787,12 @@ if __name__ == "__main__":
         sys.exit(0 if cross_check_pipeline() else 1)
     if "--fit" in sys.argv:
         sys.exit(0 if fit_cost_model() else 1)
+    if "--analyze" in sys.argv:
+        idx = sys.argv.index("--analyze")
+        arg = sys.argv[idx + 1] if idx + 1 < len(sys.argv) else None
+        sys.exit(0 if check_analyze_report(arg) else 1)
     main()
     cross_check_measured()
     cross_check_pipeline()
     fit_cost_model()
+    check_analyze_report()

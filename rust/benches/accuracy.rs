@@ -10,7 +10,9 @@ use h2opus::construct::{build_h2, dense_kernel_matrix, ExponentialKernel};
 use h2opus::geometry::PointSet;
 use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
 use h2opus::metrics::Metrics;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 use h2opus::util::testing::rel_err;
+use h2opus::util::timer::Timer;
 use h2opus::util::Prng;
 
 fn sampled_accuracy(a: &h2opus::tree::H2Matrix, kernel: &ExponentialKernel, samples: usize) -> f64 {
@@ -34,6 +36,8 @@ fn sampled_accuracy(a: &h2opus::tree::H2Matrix, kernel: &ExponentialKernel, samp
 
 fn main() {
     println!("E7 / §6.1 — sampled accuracy ||Ax - A_H2 x||/||Ax|| and sparsity constants");
+    let wall = Timer::start();
+    let mut row = BenchRow::new("accuracy", "2D N=1024 + 3D N=512 sweep");
     println!("\n== 2D exponential kernel (corr 0.1a, eta 0.9), N = 1024 ==");
     println!("{:>3} {:>5} {:>12} {:>6} {:>14}", "g", "k", "accuracy", "C_sp", "mem (% dense)");
     for g in [2usize, 3, 4, 5] {
@@ -42,6 +46,7 @@ fn main() {
         let cfg = H2Config { leaf_size: 32, eta: 0.9, cheb_grid: g };
         let a = build_h2(points, &kernel, &cfg);
         let acc = sampled_accuracy(&a, &kernel, 5);
+        row.set_metric(&format!("acc_2d_g{g}"), acc);
         println!(
             "{:>3} {:>5} {:>12.3e} {:>6} {:>14.1}",
             g,
@@ -60,6 +65,7 @@ fn main() {
         let cfg = H2Config { leaf_size: 32, eta: 0.95, cheb_grid: g };
         let a = build_h2(points, &kernel, &cfg);
         let acc = sampled_accuracy(&a, &kernel, 5);
+        row.set_metric(&format!("acc_3d_g{g}"), acc);
         println!(
             "{:>3} {:>5} {:>12.3e} {:>6} {:>14.1}",
             g,
@@ -85,4 +91,6 @@ fn main() {
             a.memory_words() as f64 / a.n() as f64
         );
     }
+    row.set_metric("sweep_s", wall.elapsed());
+    append_and_report(&row);
 }

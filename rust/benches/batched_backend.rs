@@ -175,11 +175,14 @@ fn main() {
     let runs = if tiny() { 3 } else { 5 };
     let scale = if tiny() { 4 } else { 1 };
     let mut rows: Vec<String> = Vec::new();
+    let mut best: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
     let mut push_row = |op: &str, nb: usize, m: usize, k: usize, n: usize, t: usize, g: f64| {
         rows.push(format!(
             "{{\"op\": \"{op}\", \"nb\": {nb}, \"m\": {m}, \"k\": {k}, \"n\": {n}, \
              \"threads\": {t}, \"cores\": {cores}, \"gflops\": {g:.4}}}"
         ));
+        let e = best.entry(format!("{op}_gflops")).or_insert(0.0);
+        *e = e.max(g);
     };
 
     let xla = if Path::new("artifacts/manifest.txt").exists() {
@@ -267,6 +270,15 @@ fn main() {
     let path = "target/bench_e9.json";
     std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing E9 rows");
     println!("\nE9 rows written: {path}");
+
+    let mut traj = h2opus::obs::trajectory::BenchRow::new(
+        "batched_backend",
+        &format!("cores={cores} scale={scale}"),
+    );
+    for (key, g) in &best {
+        traj.set_metric(key, *g);
+    }
+    h2opus::obs::trajectory::append_and_report(&traj);
 
     if std::env::var("H2OPUS_E9_ASSERT").is_ok() && !assert_parallel_beats_serial(&pools, cores) {
         std::process::exit(1);

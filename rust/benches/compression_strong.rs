@@ -8,6 +8,7 @@ use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::compress::dist_compress;
 use h2opus::dist::ExecMode;
 use h2opus::geometry::PointSet;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 use h2opus::util::timer::trimmed_mean;
 
 fn bench_set(dim: usize, n_target: usize, cfg: H2Config) {
@@ -22,6 +23,7 @@ fn bench_set(dim: usize, n_target: usize, cfg: H2Config) {
     let a = build_h2(points, &kernel, &cfg);
     println!("\n== {dim}D compression strong scaling, N = {} ==", a.n());
     println!("{:>4} {:>12} {:>11} {:>13}", "P", "total (ms)", "speedup", "eff (%)");
+    let mut row = BenchRow::new("compression_strong", &format!("{dim}D N={}", a.n()));
     let mut t1 = None;
     for &p in &[1usize, 2, 4, 8, 16] {
         if a.depth() < p.trailing_zeros() as usize {
@@ -42,7 +44,12 @@ fn bench_set(dim: usize, n_target: usize, cfg: H2Config) {
             base / t,
             100.0 * base / t / p as f64
         );
+        row.set_metric("p1_s", base);
+        row.set_metric("pmax_s", t);
+        row.set_metric("pmax", p as f64);
+        row.set_metric("speedup", base / t);
     }
+    append_and_report(&row);
 }
 
 fn main() {

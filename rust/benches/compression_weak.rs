@@ -10,6 +10,7 @@ use h2opus::construct::{build_h2, ExponentialKernel};
 use h2opus::dist::compress::dist_compress;
 use h2opus::dist::ExecMode;
 use h2opus::geometry::PointSet;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 use h2opus::util::timer::trimmed_mean;
 
 fn bench_set(dim: usize, local_n: usize, ps: &[usize], cfg: H2Config) {
@@ -56,6 +57,11 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], cfg: H2Config) {
             st.post_words as f64 / 1e3,
             st.ratio()
         );
+        let row = BenchRow::new("compression_weak", &format!("{dim}D pN={local_n} P={p}"))
+            .metric("orth_ms", trimmed_mean(&orth_times) * 1e3)
+            .metric("compress_ms", trimmed_mean(&comp_times) * 1e3)
+            .metric("mem_ratio", st.ratio());
+        append_and_report(&row);
     }
 }
 

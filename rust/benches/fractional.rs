@@ -5,6 +5,7 @@
 
 use h2opus::apps::fractional::{setup, solve, FractionalProblem};
 use h2opus::backend::native::NativeBackend;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 
 fn main() {
     println!("E6 / Fig. 13 — fractional diffusion weak scaling (β = 0.75, τ = 1e-6)");
@@ -12,6 +13,8 @@ fn main() {
         "{:>6} {:>9} {:>3} {:>10} {:>10} {:>10} {:>10} {:>9} {:>12}",
         "grid", "N", "P", "K (s)", "D (s)", "C+MG (s)", "solve (s)", "iters", "ms/iter"
     );
+    let mut row = BenchRow::new("fractional", "weak beta=0.75 tau=1e-6");
+    let (mut setup_s, mut solve_s) = (0.0, 0.0);
     // weak pairs: fixed ~1024 points per rank
     for &(n_side, ranks) in &[(32usize, 1usize), (64, 4), (96, 8)] {
         let ranks = if (n_side * n_side / 1024).is_power_of_two() { ranks } else { ranks };
@@ -31,6 +34,13 @@ fn main() {
             sol.time_per_iteration * 1e3
         );
         assert!(sol.result.converged, "solver did not converge at {n_side}");
+        setup_s += sys.setup_k + sys.setup_d + sys.setup_c;
+        solve_s += sol.solve_time;
+        row.set_metric("largest_per_iter_ms", sol.time_per_iteration * 1e3);
+        row.set_metric("largest_iters", sol.result.iterations as f64);
     }
+    row.set_metric("setup_total_s", setup_s);
+    row.set_metric("solve_total_s", solve_s);
+    append_and_report(&row);
     println!("\n(Setup phases should grow ~linearly in N; iteration counts ~flat.)");
 }

@@ -20,6 +20,7 @@ use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::dist::transport::{JobKind, MatrixJob};
 use h2opus::geometry::PointSet;
 use h2opus::metrics::Metrics;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
@@ -167,6 +168,16 @@ fn bench_set(dim: usize, n_target: usize, ps: &[usize], nvs: &[usize], rows: &mu
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes
             ));
+            append_and_report(
+                &BenchRow::new(
+                    "hgemv_strong",
+                    &format!("{dim}D N={n} p={p} nv={nv} t={transport}"),
+                )
+                .metric("virtual_s", t)
+                .metric("measured_s", tm)
+                .metric("iter_s", si)
+                .metric("virtual_speedup", base / t),
+            );
         }
     }
 }

@@ -23,6 +23,7 @@ use h2opus::dist::hgemv::{dist_hgemv, DistOptions, ExecMode};
 use h2opus::dist::transport::{JobKind, MatrixJob};
 use h2opus::geometry::PointSet;
 use h2opus::metrics::Metrics;
+use h2opus::obs::trajectory::{append_and_report, BenchRow};
 use h2opus::util::timer::trimmed_mean;
 use h2opus::util::Prng;
 
@@ -190,6 +191,16 @@ fn bench_set(dim: usize, local_n: usize, ps: &[usize], nvs: &[usize], rows: &mut
                  \"matrix_bytes\": {}}}",
                 mm.flops, mm.batch_launches, mm.gemm_words, mm.matrix_bytes
             ));
+            append_and_report(
+                &BenchRow::new(
+                    "hgemv_weak",
+                    &format!("{dim}D pN={local_n} p={p} nv={nv} t={transport}"),
+                )
+                .metric("virtual_s", t)
+                .metric("measured_s", tm)
+                .metric("iter_s", si)
+                .metric("gflops_per_rank", rate),
+            );
         }
     }
 }

@@ -104,6 +104,14 @@ fn main() {
         (on_s / off_s - 1.0) * 100.0
     );
 
+    let row = h2opus::obs::trajectory::BenchRow::new("obs_overhead", &format!("N={n} P=4"))
+        .metric("guard_disabled_ns", guard_off)
+        .metric("record_disabled_ns", record_off)
+        .metric("guard_enabled_ns", guard_on)
+        .metric("hgemv_disabled_s", off_s)
+        .metric("hgemv_enabled_s", on_s);
+    h2opus::obs::trajectory::append_and_report(&row);
+
     if std::env::var("H2OPUS_OBS_ASSERT").is_ok() {
         // A relaxed atomic load is ~1ns; the bound leaves room for noisy
         // shared CI runners while still catching any accidental work

@@ -40,6 +40,7 @@ fn main() {
     let x = rng.normal_vec(n * nv);
     let mut y = vec![0.0; n * nv];
 
+    let mut overlap_speedup = None;
     for (label, net) in [
         ("default network (α=5µs, 25 GB/s)", NetworkModel::default()),
         ("slow network (α=500µs, 10 GB/s)", NetworkModel { alpha: 5e-4, beta: 1e-10 * 10.0 }),
@@ -70,6 +71,7 @@ fn main() {
             results.push(t);
         }
         println!("  speedup from overlap: {:.2}x", results[0] / results[1]);
+        overlap_speedup.get_or_insert(results[0] / results[1]);
     }
 
     // One overlapped run on a slow network for the counters used by the
@@ -213,4 +215,16 @@ fn main() {
     );
     std::fs::write("target/overlap_summary.json", &summary).unwrap();
     println!("  summary written: target/overlap_summary.json");
+
+    let row = h2opus::obs::trajectory::BenchRow::new(
+        "overlap",
+        &format!("N={n} nv={nv} P=8 t={transport}"),
+    )
+    .metric("virtual_p1_s", virt1)
+    .metric("virtual_p8_s", virt8)
+    .metric("measured_p1_s", meas1)
+    .metric("measured_p8_s", meas8)
+    .metric("overlap_speedup", overlap_speedup.unwrap_or(1.0))
+    .metric("volume_reduction", naive_total as f64 / opt_total as f64);
+    h2opus::obs::trajectory::append_and_report(&row);
 }

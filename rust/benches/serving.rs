@@ -295,6 +295,19 @@ fn main() {
     std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n"))).expect("writing E10 rows");
     println!("\nE10 rows written: {path}");
 
+    for c in &cells {
+        let row = h2opus::obs::trajectory::BenchRow::new(
+            "serving",
+            &format!("N={} P={p} c={} cap={} depth={}", side * side, c.concurrency, c.cap, c.depth),
+        )
+        .metric("reqs_per_s", c.reqs_per_s)
+        .metric("latency_p50_ms", c.p50_ms)
+        .metric("latency_p99_ms", c.p99_ms)
+        .metric("queue_p50_ms", c.queue_p50_ms)
+        .metric("queue_p99_ms", c.queue_p99_ms);
+        h2opus::obs::trajectory::append_and_report(&row);
+    }
+
     pipeline_ablation(&job, p, if tiny() { 2 } else { 4 }, 8);
 
     if std::env::var("H2OPUS_E10_ASSERT").is_ok() {

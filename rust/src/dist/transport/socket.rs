@@ -112,7 +112,9 @@ use crate::dist::ExchangePlan;
 use crate::matvec::HgemvWorkspace;
 use crate::metrics::Metrics;
 use crate::obs;
-use crate::obs::clock::{estimate_offset_ns, ClockSample, TracePart, CLOCK_SYNC_PINGS};
+use crate::obs::clock::{
+    estimate_offset_ns, ClockSample, TracePart, WorkCounters, CLOCK_SYNC_PINGS,
+};
 use crate::obs::names as obs_names;
 
 /// Options of one socket session.
@@ -860,6 +862,12 @@ pub struct SocketSession {
     /// the handshake's ping exchange — what maps worker span timestamps
     /// onto the coordinator timeline in [`SocketSession::collect_spans`].
     clock_offsets_ns: Vec<i64>,
+    /// Cumulative per-process work counters since the last span flush
+    /// (worker ranks 0..P, coordinator at index P). Embedded in the
+    /// merged trace's metadata by [`SocketSession::collect_spans`] —
+    /// which resets them — so `h2opus analyze` can price exactly the
+    /// work the flushed spans cover against the `CostModel`.
+    work_since_flush: Vec<Metrics>,
 }
 
 /// One submitted pipelined product awaiting [`SocketSession::wait`].
@@ -1088,6 +1096,7 @@ impl SocketSession {
             products: 0,
             inflight: VecDeque::new(),
             clock_offsets_ns,
+            work_since_flush: (0..=p).map(|_| Metrics::new()).collect(),
         })
     }
 
@@ -1226,9 +1235,18 @@ impl SocketSession {
     }
 
     fn collect_spans_inner(&mut self) -> Result<String, TransportError> {
-        let Self { p, hub, mb, clock_offsets_ns, .. } = self;
+        let Self { p, hub, mb, clock_offsets_ns, work_since_flush, .. } = self;
         let p = *p;
         let hub = hub.as_mut().ok_or_else(closed_session)?;
+        // Take (and reset) the flush-windowed work counters up front: the
+        // trace we are about to merge covers exactly this window.
+        let work: Vec<Option<WorkCounters>> = work_since_flush
+            .iter_mut()
+            .map(|m| {
+                let w = WorkCounters::from(&std::mem::replace(m, Metrics::new()));
+                if w.is_zero() { None } else { Some(w) }
+            })
+            .collect();
         let flush_span = obs::span(obs_names::SPAN_FLUSH);
         for r in 0..p {
             hub.send(r, Message::new(MsgKind::Flush, 0, p, Vec::new()))?;
@@ -1246,17 +1264,46 @@ impl SocketSession {
             let (spans, dropped) =
                 obs::decode_spans(&msg.data).map_err(TransportError::Protocol)?;
             dropped_total += dropped;
-            parts.push(TracePart { default_pid: r, offset_ns: clock_offsets_ns[r], spans });
+            parts.push(TracePart {
+                default_pid: r,
+                offset_ns: clock_offsets_ns[r],
+                spans,
+                dropped,
+                work: work[r],
+            });
         }
         drop(flush_span);
         let (own, own_dropped) = obs::drain();
         dropped_total += own_dropped;
+        let registry = obs::Registry::global();
         if dropped_total > 0 {
-            obs::Registry::global()
-                .counter("h2opus_obs_spans_dropped_total")
-                .add(dropped_total);
+            registry.counter("h2opus_obs_spans_dropped_total").add(dropped_total);
         }
-        parts.push(TracePart { default_pid: p, offset_ns: 0, spans: own });
+        // Per-rank attribution (coordinator = rank P, as in trace pids) so
+        // `h2opus stats` shows *whose* ring overflowed, not just that one
+        // did.
+        for part in &parts {
+            if part.dropped > 0 {
+                registry
+                    .counter(&format!(
+                        "h2opus_obs_spans_dropped_by_rank{{rank=\"{}\"}}",
+                        part.default_pid
+                    ))
+                    .add(part.dropped);
+            }
+        }
+        if own_dropped > 0 {
+            registry
+                .counter(&format!("h2opus_obs_spans_dropped_by_rank{{rank=\"{p}\"}}"))
+                .add(own_dropped);
+        }
+        parts.push(TracePart {
+            default_pid: p,
+            offset_ns: 0,
+            spans: own,
+            dropped: own_dropped,
+            work: work[p],
+        });
         parts.sort_by_key(|part| part.default_pid);
         Ok(obs::merged_trace_json(&parts))
     }
@@ -1457,7 +1504,7 @@ impl SocketSession {
         nv: usize,
         y: &mut [f64],
     ) -> Result<SocketReport, TransportError> {
-        let Self { p, opts, sm_top, top_plans, io, hub, mb, .. } = self;
+        let Self { p, opts, sm_top, top_plans, io, hub, mb, work_since_flush, .. } = self;
         let p = *p;
         let hub = hub.as_mut().ok_or_else(closed_session)?;
         let wire = wire_pid(pid);
@@ -1542,6 +1589,12 @@ impl SocketSession {
             rank_metrics[r] = m;
             per_rank[r] = elapsed;
         }
+        // Fold this product's counters into the flush-windowed per-process
+        // work totals the next collect_spans embeds in trace metadata.
+        for (r, m) in rank_metrics.iter().enumerate() {
+            work_since_flush[r].merge(m);
+        }
+        work_since_flush[p].merge(&master_metrics);
         let measured_trace_json = if opts.measured_trace {
             let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
             for _ in 0..p {

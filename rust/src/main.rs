@@ -10,6 +10,7 @@
 //! h2opus info     [--n-side 32] [--dim 2]
 //! h2opus serve    [--ranks 4] [--max-coalesce 16] [--duration 5] [--selfload R] [--stats-sock PATH]
 //! h2opus stats    [--connect PATH] [--raw]        (live snapshot of a running `h2opus serve`)
+//! h2opus analyze  <trace.json> | --run   [--json] [--assert-overlap MIN] [--assert-no-regression]
 //! h2opus worker   --connect SOCK --rank R --ranks P --nv NV [matrix flags]   (internal: socket-transport rank)
 //! ```
 //!
@@ -33,8 +34,11 @@ use h2opus::metrics::Metrics;
 use h2opus::runtime::XlaBackend;
 use h2opus::util::Prng;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Split args into `--name value` / `--bool` flags and bare positionals
+/// (e.g. the trace path of `h2opus analyze trace.json`).
+fn split_args(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
+    let mut positionals = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
@@ -46,10 +50,15 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
                 i += 1;
             }
         } else {
+            positionals.push(args[i].clone());
             i += 1;
         }
     }
-    flags
+    (flags, positionals)
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    split_args(args).0
 }
 
 fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
@@ -141,7 +150,13 @@ fn cmd_matvec(flags: &HashMap<String, String>) {
         // executor, unlabeled (main-thread) spans map to pid = P.
         let (spans, dropped) = h2opus::obs::drain();
         let count = spans.len();
-        let part = h2opus::obs::TracePart { default_pid: ranks, offset_ns: 0, spans };
+        let part = h2opus::obs::TracePart {
+            default_pid: ranks,
+            offset_ns: 0,
+            spans,
+            dropped,
+            work: None,
+        };
         std::fs::write(path, h2opus::obs::merged_trace_json(&[part]))
             .expect("writing obs trace");
         println!("obs trace written to {path} ({count} spans, {dropped} dropped)");
@@ -158,7 +173,9 @@ fn cmd_matvec_socket(flags: &HashMap<String, String>, ranks: usize, nv: usize) {
     let mut y = vec![0.0; n * nv];
     if let Some(path) = flags.get("obs-trace") {
         let tau: f64 = get(flags, "tau", 1e-3);
-        traced_socket_session(&job, ranks, nv, &x, &mut y, tau, path);
+        let json = traced_socket_session(&job, ranks, nv, &x, &mut y, tau);
+        std::fs::write(path, &json).expect("writing obs trace");
+        println!("merged trace written to {path} ({} bytes)", json.len());
         return;
     }
     let opts = SocketOptions {
@@ -195,7 +212,7 @@ fn cmd_matvec_socket(_flags: &HashMap<String, String>, _ranks: usize, _nv: usize
 }
 
 /// A product → distributed compression → product sequence over one live
-/// socket session, with span recording on in every process; writes the
+/// socket session, with span recording on in every process; returns the
 /// clock-aligned merged trace of all P workers + the coordinator.
 #[cfg(unix)]
 fn traced_socket_session(
@@ -205,8 +222,7 @@ fn traced_socket_session(
     x: &[f64],
     y: &mut [f64],
     tau: f64,
-    path: &str,
-) {
+) -> String {
     use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
     h2opus::obs::set_enabled(true);
     let die = |what: &str, e: h2opus::dist::transport::TransportError| -> ! {
@@ -225,9 +241,126 @@ fn traced_socket_session(
     println!("compressed        {:>12} -> {} words ({:.2}x)", stats.pre_words, stats.post_words, stats.ratio());
     let r2 = session.hgemv(x, y).unwrap_or_else(|e| die("compressed product", e));
     println!("product (compressed) {:>9.3} ms", r2.measured * 1e3);
-    let json = session.collect_spans().unwrap_or_else(|e| die("span flush", e));
-    std::fs::write(path, &json).expect("writing obs trace");
-    println!("merged trace written to {path} ({} bytes)", json.len());
+    session.collect_spans().unwrap_or_else(|e| die("span flush", e))
+}
+
+/// `h2opus analyze` — the performance referee. Analyzes a merged span
+/// trace (a file, or one produced live by `--run`) and/or gates the bench
+/// trajectory; any failed `--assert-*` gate exits nonzero.
+fn cmd_analyze(args: &[String]) {
+    use h2opus::obs::trajectory::{check_regressions, load_rows, trajectory_path, DEFAULT_BAND};
+    let (mut flags, mut positionals) = split_args(args);
+    // Boolean flags followed by the trace path would swallow it as their
+    // value ("--json trace.json"); give such values back as positionals.
+    for b in ["json", "run", "assert-no-regression"] {
+        if let Some(v) = flags.get(b) {
+            if v != "true" {
+                positionals.push(v.clone());
+                flags.insert(b.to_string(), "true".to_string());
+            }
+        }
+    }
+    let gate_only = flags.contains_key("assert-no-regression")
+        && !flags.contains_key("run")
+        && positionals.is_empty();
+    let mut failures = 0usize;
+
+    if !gate_only {
+        let json = if flags.contains_key("run") {
+            run_traced_for_analysis(&flags)
+        } else if let Some(path) = positionals.first() {
+            match std::fs::read_to_string(path) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("reading {path} failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        } else {
+            eprintln!(
+                "usage: h2opus analyze <trace.json> | --run [matrix flags] \
+                 [--json] [--top N] [--out report.json] [--assert-overlap MIN] \
+                 [--assert-no-regression [--band B] [--trajectory PATH]]"
+            );
+            std::process::exit(2);
+        };
+        let cm = h2opus::dist::hgemv::CostModel::host();
+        let analysis = match h2opus::obs::analyze_json(&json, &cm) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("trace analysis failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        if flags.contains_key("json") {
+            println!("{}", analysis.to_json());
+        } else {
+            print!("{}", analysis.render_text(get(&flags, "top", 12)));
+        }
+        if let Some(path) = flags.get("out") {
+            std::fs::write(path, analysis.to_json()).expect("writing analyzer report");
+            println!("report written to {path}");
+        }
+        if let Some(min) = flags.get("assert-overlap").and_then(|v| v.parse::<f64>().ok()) {
+            let eff = analysis.min_overlap_eff();
+            if eff < min {
+                eprintln!("overlap gate FAILED: min rank overlap {eff:.3} < required {min:.3}");
+                failures += 1;
+            } else {
+                println!("overlap gate ok: min rank overlap {eff:.3} >= {min:.3}");
+            }
+        }
+    }
+
+    if flags.contains_key("assert-no-regression") {
+        let path = flags
+            .get("trajectory")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(trajectory_path);
+        let rows = match load_rows(&path) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("loading trajectory {} failed: {e}", path.display());
+                std::process::exit(1);
+            }
+        };
+        let report = check_regressions(&rows, get(&flags, "band", DEFAULT_BAND));
+        print!("{}", report.render_text());
+        if report.failures() > 0 {
+            failures += 1;
+        }
+    }
+
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// `analyze --run`: run the traced P-rank socket session (product →
+/// compression → product) and hand the merged trace straight to the
+/// analyzer, no file round trip.
+#[cfg(unix)]
+fn run_traced_for_analysis(flags: &HashMap<String, String>) -> String {
+    let ranks: usize = get(flags, "ranks", 4);
+    let nv: usize = get(flags, "nv", 1);
+    let tau: f64 = get(flags, "tau", 1e-3);
+    let job = job_from(flags);
+    let n = job.n_points();
+    let mut rng = Prng::new(1234);
+    let x = rng.normal_vec(n * nv);
+    let mut y = vec![0.0; n * nv];
+    let json = traced_socket_session(&job, ranks, nv, &x, &mut y, tau);
+    if let Some(path) = flags.get("save-trace") {
+        std::fs::write(path, &json).expect("writing obs trace");
+        println!("merged trace written to {path} ({} bytes)", json.len());
+    }
+    json
+}
+
+#[cfg(not(unix))]
+fn run_traced_for_analysis(_flags: &HashMap<String, String>) -> String {
+    eprintln!("analyze --run requires the socket transport (Unix domain sockets)");
+    std::process::exit(1);
 }
 
 #[cfg(unix)]
@@ -548,10 +681,11 @@ fn main() {
         "info" => cmd_info(&flags),
         "serve" => cmd_serve(&flags),
         "stats" => cmd_stats(&flags),
+        "analyze" => cmd_analyze(&args[1..]),
         "worker" => cmd_worker(&flags),
         _ => {
             println!("h2opus — distributed H^2 matrix operations (paper reproduction)");
-            println!("commands: matvec | compress | solve | accuracy | info | serve | stats | worker");
+            println!("commands: matvec | compress | solve | accuracy | info | serve | stats | analyze | worker");
             println!("common flags: --n-side N --dim 2|3 --ranks P --nv NV --backend native|xla");
             println!("              --backend-threads T (batched-kernel pool width; env H2OPUS_BACKEND_THREADS)");
             println!("              --cost-calibration target/cost_model_calibration.json");
@@ -562,6 +696,9 @@ fn main() {
             println!("solve flags:  --transport inproc|socket (socket = persistent sharded worker session)");
             println!("serve flags:  --max-coalesce NV --pipeline D --duration S --selfload R --stats-sock PATH");
             println!("stats flags:  --connect PATH --raw");
+            println!("analyze:      h2opus analyze <trace.json> | --run [matrix flags] [--save-trace F]");
+            println!("              --json --top N --out report.json --assert-overlap MIN");
+            println!("              --assert-no-regression --band B --trajectory PATH (bench regression gate)");
         }
     }
 }

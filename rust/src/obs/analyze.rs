@@ -1,0 +1,980 @@
+//! Span-derived performance attribution: the analysis engine behind
+//! `h2opus analyze`.
+//!
+//! The paper's performance claims are *interpreted* telemetry — Fig. 8
+//! reads per-rank timelines to show communication hidden under local
+//! compute, and §6 attributes Gflop/s phase by phase. This module computes
+//! those readings mechanically from a merged cross-rank span trace
+//! ([`super::clock::merged_trace_json`], or any Chrome-trace JSON the repo
+//! emits):
+//!
+//! - **Phase aggregates** per rank and per level: leaf-span time grouped
+//!   by rendered phase label (level suffixes like `L3` are kept; per-call
+//!   arguments like `#42` / `x128` are stripped by [`phase_key`]).
+//! - **Idle/wait breakdown** per rank: compute / wire / other busy time
+//!   (interval union) against the global makespan.
+//! - **Overlap efficiency** (the Fig. 8 metric): the fraction of each
+//!   rank's wire time during which *some* compute span was open anywhere
+//!   in the system — communication that cost no wall-clock.
+//! - **Critical path**: a walk back through the happens-before graph
+//!   induced by span timing — program order within each `(pid, tid)`
+//!   stream, send/recv rendezvous between same-named wire spans on
+//!   different pids, and wait-release edges from the last span to finish
+//!   before an idle gap — reporting which phase on which rank bounds
+//!   wall-clock.
+//! - **Model drift**: the same trace priced with
+//!   [`crate::dist::hgemv::CostModel`] against the per-rank work counters
+//!   embedded in the trace metadata, as measured-vs-predicted deviation
+//!   rows (consumed by `python/tests/model_check.py --analyze`).
+//!
+//! Every collection is fully sorted with total tie-breakers and every
+//! number is rendered with a fixed precision, so reordered input spans
+//! yield **byte-identical** text and JSON reports (tested).
+
+use std::collections::BTreeMap;
+
+use super::clock::PartMeta;
+use crate::dist::hgemv::CostModel;
+use crate::util::testing::{parse_json, JsonValue};
+use crate::util::trace::escape_json;
+
+/// Start-gap (µs) below which consecutive spans on one stream count as
+/// back-to-back; larger gaps mean the stream *waited* and get a
+/// wait-release happens-before edge. Merged traces carry 3 decimals of µs,
+/// so anything above one printed ulp is a real gap.
+const GAP_EPS_US: f64 = 0.002;
+
+/// One event on the merged timeline (µs on the coordinator clock) — the
+/// parsed form of a Chrome-trace `"X"` event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AEvent {
+    pub name: String,
+    pub cat: String,
+    pub pid: usize,
+    pub tid: usize,
+    pub ts_us: f64,
+    pub dur_us: f64,
+}
+
+impl AEvent {
+    fn end_us(&self) -> f64 {
+        self.ts_us + self.dur_us
+    }
+
+    /// The total order every pass sorts by — ties broken all the way down
+    /// so shuffled inputs normalize to one sequence.
+    fn sort_key(&self) -> (f64, f64, usize, usize, &str, &str) {
+        (self.ts_us, self.dur_us, self.pid, self.tid, &self.name, &self.cat)
+    }
+}
+
+fn cmp_events(a: &AEvent, b: &AEvent) -> std::cmp::Ordering {
+    let (ats, adur, apid, atid, an, ac) = a.sort_key();
+    let (bts, bdur, bpid, btid, bn, bc) = b.sort_key();
+    ats.total_cmp(&bts)
+        .then(adur.total_cmp(&bdur))
+        .then(apid.cmp(&bpid))
+        .then(atid.cmp(&btid))
+        .then(an.cmp(bn))
+        .then(ac.cmp(bc))
+}
+
+/// Strip the per-call argument suffix (`#42` product/request ids, `x128`
+/// batch sizes) from a rendered span name, keeping level suffixes (`L3`)
+/// — the aggregation key for "per rank and per level" phase tables.
+pub fn phase_key(name: &str) -> String {
+    if let Some((base, tail)) = name.rsplit_once(' ') {
+        let arg_like = matches!(tail.as_bytes().first(), Some(b'#') | Some(b'x'))
+            && tail.len() > 1
+            && tail.bytes().skip(1).all(|b| b.is_ascii_digit());
+        if arg_like {
+            return base.to_string();
+        }
+    }
+    name.to_string()
+}
+
+/// Per-rank busy/idle/overlap summary.
+#[derive(Clone, Debug)]
+pub struct RankReport {
+    pub pid: usize,
+    /// Leaf compute-span time (sum of durations), µs.
+    pub compute_us: f64,
+    /// Leaf wire-span ("comm" category) time, µs.
+    pub comm_us: f64,
+    /// Leaf transfer/server/lowprio time, µs.
+    pub other_us: f64,
+    /// Union length of all leaf spans on this pid (any category), µs.
+    pub busy_us: f64,
+    /// Makespan minus busy, µs.
+    pub idle_us: f64,
+    /// Fraction of this rank's wire time hidden under concurrent compute
+    /// (anywhere in the system); 1.0 for a rank with no wire time.
+    pub overlap_eff: f64,
+}
+
+/// One `(phase, rank)` aggregate row.
+#[derive(Clone, Debug)]
+pub struct PhaseAgg {
+    pub phase: String,
+    pub cat: String,
+    pub pid: usize,
+    pub total_us: f64,
+    pub count: usize,
+}
+
+/// One span on the critical path, aggregated by `(phase, pid)`.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    pub phase: String,
+    pub pid: usize,
+    pub us: f64,
+    pub count: usize,
+}
+
+/// The happens-before chain that bounds wall-clock.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalPath {
+    /// Sum of span durations along the path, µs.
+    pub total_us: f64,
+    /// `total_us / makespan` — how much of the wall-clock the path
+    /// explains (can slightly exceed 1 when chained spans overlap).
+    pub coverage: f64,
+    /// Phase with the largest time share on the path.
+    pub bound_phase: String,
+    /// The rank that phase ran on.
+    pub bound_pid: usize,
+    /// Number of spans on the path.
+    pub len: usize,
+    /// `(phase, pid)` contributions, largest first.
+    pub steps: Vec<PathStep>,
+}
+
+/// One measured-vs-predicted deviation row: the trace's per-rank work
+/// counters priced with the [`CostModel`] against the rank's measured
+/// span time in the same class.
+#[derive(Clone, Debug)]
+pub struct DriftRow {
+    pub pid: usize,
+    /// `"compute"` (batched-kernel work) or `"wire"` (message traffic).
+    pub class: &'static str,
+    pub measured_s: f64,
+    pub predicted_s: f64,
+    /// measured / predicted.
+    pub ratio: f64,
+}
+
+/// The full analysis of one merged trace.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// Earliest span start on the merged timeline, µs.
+    pub t0_us: f64,
+    /// Last span end minus earliest start, µs.
+    pub makespan_us: f64,
+    /// Number of events analyzed.
+    pub events: usize,
+    pub ranks: Vec<RankReport>,
+    /// Sorted by total time, largest first.
+    pub phases: Vec<PhaseAgg>,
+    pub critical_path: CriticalPath,
+    pub drift: Vec<DriftRow>,
+    /// Per-pid dropped-span counts from the trace metadata (pids with
+    /// drops only), plus the total.
+    pub dropped: Vec<(usize, u64)>,
+    pub total_dropped: u64,
+}
+
+/// Parse a trace JSON into events + part metadata. Accepts both the
+/// object form [`super::clock::merged_trace_json`] emits (`traceEvents` +
+/// `metadata`) and the bare array form of
+/// [`crate::util::trace::TraceCollector::to_json`].
+pub fn parse_trace(json: &str) -> Result<(Vec<AEvent>, Vec<PartMeta>), String> {
+    let parsed = parse_json(json)?;
+    let (events_json, meta) = match parsed.as_arr() {
+        Some(arr) => (arr, Vec::new()),
+        None => {
+            let arr = parsed
+                .get("traceEvents")
+                .and_then(JsonValue::as_arr)
+                .ok_or("trace is neither an event array nor a traceEvents object")?;
+            (arr, parse_meta(&parsed))
+        }
+    };
+    let mut events = Vec::with_capacity(events_json.len());
+    for e in events_json {
+        let field = |k: &str| {
+            e.get(k).and_then(JsonValue::as_f64).ok_or_else(|| format!("event lacks '{k}'"))
+        };
+        events.push(AEvent {
+            name: e
+                .get("name")
+                .and_then(JsonValue::as_str)
+                .ok_or("event lacks 'name'")?
+                .to_string(),
+            cat: e.get("cat").and_then(JsonValue::as_str).unwrap_or("").to_string(),
+            pid: field("pid")? as usize,
+            tid: field("tid")? as usize,
+            ts_us: field("ts")?,
+            dur_us: field("dur")?,
+        });
+    }
+    Ok((events, meta))
+}
+
+fn parse_meta(parsed: &JsonValue) -> Vec<PartMeta> {
+    let mut out = Vec::new();
+    let parts = parsed
+        .get("metadata")
+        .and_then(|m| m.get("parts"))
+        .and_then(JsonValue::as_arr)
+        .unwrap_or(&[]);
+    for p in parts {
+        let num = |v: &JsonValue, k: &str| v.get(k).and_then(JsonValue::as_f64).unwrap_or(0.0);
+        let mut meta = PartMeta {
+            pid: num(p, "pid") as usize,
+            dropped: num(p, "dropped") as u64,
+            work: None,
+        };
+        if let Some(w) = p.get("work") {
+            meta.work = Some(super::clock::WorkCounters {
+                flops: num(w, "flops"),
+                bytes_sent: num(w, "bytes_sent"),
+                messages: num(w, "messages"),
+                launches: num(w, "launches"),
+                gemm_words: num(w, "gemm_words"),
+            });
+        }
+        out.push(meta);
+    }
+    out
+}
+
+/// Analyze a trace JSON string (see [`parse_trace`] for accepted forms),
+/// pricing drift with `cm`.
+pub fn analyze_json(json: &str, cm: &CostModel) -> Result<Analysis, String> {
+    let (events, meta) = parse_trace(json)?;
+    Ok(analyze_events(events, &meta, cm))
+}
+
+/// Interval-union length helper: `intervals` need not be sorted.
+fn union_len(mut intervals: Vec<(f64, f64)>) -> f64 {
+    intervals.retain(|(a, b)| b > a);
+    intervals.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in intervals {
+        match &mut cur {
+            Some((_, ce)) if a <= *ce => *ce = ce.max(b),
+            _ => {
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                cur = Some((a, b));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Overlap length between one interval and a sorted, disjoint union.
+fn overlap_with_union(a: f64, b: f64, union: &[(f64, f64)]) -> f64 {
+    let mut hidden = 0.0;
+    for &(ua, ub) in union {
+        if ub <= a {
+            continue;
+        }
+        if ua >= b {
+            break;
+        }
+        hidden += ub.min(b) - ua.max(a);
+    }
+    hidden
+}
+
+/// Merge intervals into a sorted disjoint union.
+fn merge_intervals(mut intervals: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    intervals.retain(|(a, b)| b > a);
+    intervals.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in intervals {
+        match out.last_mut() {
+            Some((_, ce)) if a <= *ce => *ce = ce.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// The core pass: normalize, find leaf spans, aggregate, walk the
+/// critical path and price the drift rows.
+pub fn analyze_events(mut events: Vec<AEvent>, meta: &[PartMeta], cm: &CostModel) -> Analysis {
+    events.sort_by(cmp_events);
+    let n = events.len();
+    let t0_us = events.iter().map(|e| e.ts_us).fold(f64::INFINITY, f64::min);
+    let t_end = events.iter().map(|e| e.end_us()).fold(f64::NEG_INFINITY, f64::max);
+    let (t0_us, makespan_us) =
+        if n == 0 { (0.0, 0.0) } else { (t0_us, (t_end - t0_us).max(0.0)) };
+
+    // Leaf detection per (pid, tid) stream: a span that strictly contains
+    // another span on its own stream is a *container* (e.g. the worker's
+    // `product #k` wrapping its phases) — containers summarize their
+    // children, so only leaves enter busy time, overlap and the critical
+    // path (no double counting).
+    let mut is_leaf = vec![true; n];
+    {
+        let mut by_stream: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (i, e) in events.iter().enumerate() {
+            by_stream.entry((e.pid, e.tid)).or_default().push(i);
+        }
+        for idxs in by_stream.values() {
+            // Sorted by (start asc, dur asc) globally; containment wants
+            // (start asc, end desc) so parents precede children.
+            let mut order = idxs.clone();
+            order.sort_by(|&a, &b| {
+                events[a]
+                    .ts_us
+                    .total_cmp(&events[b].ts_us)
+                    .then(events[b].end_us().total_cmp(&events[a].end_us()))
+                    .then(a.cmp(&b))
+            });
+            let mut stack: Vec<usize> = Vec::new();
+            for &i in &order {
+                while let Some(&top) = stack.last() {
+                    if events[top].end_us() <= events[i].ts_us {
+                        stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(&top) = stack.last() {
+                    if events[top].end_us() >= events[i].end_us() {
+                        is_leaf[top] = false;
+                    }
+                }
+                stack.push(i);
+            }
+        }
+    }
+    let leaves: Vec<usize> = (0..n).filter(|&i| is_leaf[i]).collect();
+
+    // Global compute union — the "somebody is computing" timeline the
+    // overlap metric measures wire spans against.
+    let compute_union = merge_intervals(
+        leaves
+            .iter()
+            .filter(|&&i| events[i].cat == "compute")
+            .map(|&i| (events[i].ts_us, events[i].end_us()))
+            .collect(),
+    );
+
+    // Per-rank aggregates.
+    let pids: Vec<usize> = {
+        let mut p: Vec<usize> = events.iter().map(|e| e.pid).collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    };
+    let mut ranks = Vec::with_capacity(pids.len());
+    for &pid in &pids {
+        let mut compute_us = 0.0;
+        let mut comm_us = 0.0;
+        let mut other_us = 0.0;
+        let mut hidden_us = 0.0;
+        let mut intervals = Vec::new();
+        for &i in &leaves {
+            let e = &events[i];
+            if e.pid != pid {
+                continue;
+            }
+            intervals.push((e.ts_us, e.end_us()));
+            match e.cat.as_str() {
+                "compute" => compute_us += e.dur_us,
+                "comm" => {
+                    comm_us += e.dur_us;
+                    hidden_us += overlap_with_union(e.ts_us, e.end_us(), &compute_union);
+                }
+                _ => other_us += e.dur_us,
+            }
+        }
+        let busy_us = union_len(intervals);
+        let overlap_eff = if comm_us > 0.0 { (hidden_us / comm_us).clamp(0.0, 1.0) } else { 1.0 };
+        ranks.push(RankReport {
+            pid,
+            compute_us,
+            comm_us,
+            other_us,
+            busy_us,
+            idle_us: (makespan_us - busy_us).max(0.0),
+            overlap_eff,
+        });
+    }
+
+    // Phase aggregates: leaf time grouped by (phase key, pid).
+    let mut agg: BTreeMap<(String, usize), (String, f64, usize)> = BTreeMap::new();
+    for &i in &leaves {
+        let e = &events[i];
+        let entry = agg
+            .entry((phase_key(&e.name), e.pid))
+            .or_insert_with(|| (e.cat.clone(), 0.0, 0));
+        entry.1 += e.dur_us;
+        entry.2 += 1;
+    }
+    let mut phases: Vec<PhaseAgg> = agg
+        .into_iter()
+        .map(|((phase, pid), (cat, total_us, count))| PhaseAgg {
+            phase,
+            cat,
+            pid,
+            total_us,
+            count,
+        })
+        .collect();
+    phases.sort_by(|a, b| {
+        b.total_us
+            .total_cmp(&a.total_us)
+            .then(a.phase.cmp(&b.phase))
+            .then(a.pid.cmp(&b.pid))
+    });
+
+    let critical_path = critical_path(&events, &leaves, makespan_us);
+    let drift = drift_rows(meta, &ranks, cm);
+
+    let mut dropped: Vec<(usize, u64)> =
+        meta.iter().filter(|m| m.dropped > 0).map(|m| (m.pid, m.dropped)).collect();
+    dropped.sort_unstable();
+    let total_dropped = dropped.iter().map(|(_, d)| d).sum();
+
+    Analysis {
+        t0_us,
+        makespan_us,
+        events: n,
+        ranks,
+        phases,
+        critical_path,
+        drift,
+        dropped,
+        total_dropped,
+    }
+}
+
+/// Walk the happens-before chain back from the last span to finish.
+///
+/// Predecessor candidates of a span `e` (all restricted to earlier sort
+/// positions, so the walk strictly descends and terminates):
+///
+/// 1. **Program order**: the previous leaf on `e`'s `(pid, tid)` stream.
+/// 2. **Send/recv rendezvous**: earlier spans with the *same rendered
+///    name* in the `"comm"` category on a *different* pid — the two ends
+///    of one wire step (`cmp rc gather L3` on sender and receiver, etc.).
+/// 3. **Wait release**: if the stream was idle for more than
+///    [`GAP_EPS_US`] before `e` started, the leaf anywhere in the system
+///    whose *end* is latest but still ≤ `e`'s start — the event whose
+///    completion plausibly released the wait (a `ship input #k` on the
+///    coordinator releasing the worker's first phase, a worker's last
+///    phase releasing the coordinator's collect).
+///
+/// At each step the candidate with the latest end wins (ties broken by
+/// sort position): the chain follows whatever *directly gated* each
+/// span's start, which is exactly "what bounds wall-clock".
+fn critical_path(events: &[AEvent], leaves: &[usize], makespan_us: f64) -> CriticalPath {
+    if leaves.is_empty() {
+        return CriticalPath::default();
+    }
+    // Stream predecessor per leaf.
+    let mut stream_prev: BTreeMap<usize, usize> = BTreeMap::new();
+    {
+        let mut last_on: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for &i in leaves {
+            let key = (events[i].pid, events[i].tid);
+            if let Some(&prev) = last_on.get(&key) {
+                stream_prev.insert(i, prev);
+            }
+            last_on.insert(key, i);
+        }
+    }
+    // Rendezvous groups: same rendered name, "comm" category.
+    let mut comm_groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for &i in leaves {
+        if events[i].cat == "comm" {
+            comm_groups.entry(&events[i].name).or_default().push(i);
+        }
+    }
+    // Leaves ordered by end time (for wait-release lookups): position k
+    // holds the leaf with the k-th smallest (end, sort index).
+    let mut by_end: Vec<usize> = leaves.to_vec();
+    by_end.sort_by(|&a, &b| events[a].end_us().total_cmp(&events[b].end_us()).then(a.cmp(&b)));
+
+    // Start at the leaf that finishes last.
+    let mut cur = *by_end.last().expect("non-empty");
+    let mut path = vec![cur];
+    loop {
+        let e = &events[cur];
+        let mut candidates: Vec<usize> = Vec::new();
+        let stream_pred = stream_prev.get(&cur).copied();
+        if let Some(p) = stream_pred {
+            candidates.push(p);
+        }
+        for &j in comm_groups.get(e.name.as_str()).into_iter().flatten() {
+            if j < cur && events[j].pid != e.pid {
+                candidates.push(j);
+            }
+        }
+        let gap = e.ts_us - stream_pred.map(|p| events[p].end_us()).unwrap_or(e.ts_us);
+        let waited = stream_pred.is_none() || gap > GAP_EPS_US;
+        if waited {
+            // Latest-ending leaf with end <= e.ts (binary search over the
+            // end-sorted order).
+            let k = by_end.partition_point(|&j| events[j].end_us() <= e.ts_us);
+            if let Some(&release) = by_end[..k].last() {
+                if release != cur {
+                    candidates.push(release);
+                }
+            }
+        }
+        candidates.retain(|&j| j < cur);
+        // Latest end wins; ties by sort position.
+        let Some(&next) = candidates
+            .iter()
+            .max_by(|&&a, &&b| events[a].end_us().total_cmp(&events[b].end_us()).then(a.cmp(&b)))
+        else {
+            break;
+        };
+        path.push(next);
+        cur = next;
+    }
+
+    let total_us: f64 = path.iter().map(|&i| events[i].dur_us).sum();
+    let mut steps_map: BTreeMap<(String, usize), (f64, usize)> = BTreeMap::new();
+    for &i in &path {
+        let entry =
+            steps_map.entry((phase_key(&events[i].name), events[i].pid)).or_insert((0.0, 0));
+        entry.0 += events[i].dur_us;
+        entry.1 += 1;
+    }
+    let mut steps: Vec<PathStep> = steps_map
+        .into_iter()
+        .map(|((phase, pid), (us, count))| PathStep { phase, pid, us, count })
+        .collect();
+    steps.sort_by(|a, b| {
+        b.us.total_cmp(&a.us).then(a.phase.cmp(&b.phase)).then(a.pid.cmp(&b.pid))
+    });
+    let (bound_phase, bound_pid) =
+        steps.first().map(|s| (s.phase.clone(), s.pid)).unwrap_or_default();
+    CriticalPath {
+        total_us,
+        coverage: if makespan_us > 0.0 { total_us / makespan_us } else { 0.0 },
+        bound_phase,
+        bound_pid,
+        len: path.len(),
+        steps,
+    }
+}
+
+/// Price the embedded per-rank work counters with the cost model and pair
+/// them with the measured span time of the same class.
+fn drift_rows(meta: &[PartMeta], ranks: &[RankReport], cm: &CostModel) -> Vec<DriftRow> {
+    let mut rows = Vec::new();
+    let mut meta_sorted: Vec<&PartMeta> = meta.iter().filter(|m| m.work.is_some()).collect();
+    meta_sorted.sort_by_key(|m| m.pid);
+    for m in meta_sorted {
+        let w = m.work.as_ref().expect("filtered");
+        let Some(rank) = ranks.iter().find(|r| r.pid == m.pid) else { continue };
+        // Compute: every batched launch priced exactly as CostModel::gemm
+        // prices it — launch latency + flop term + operand-word traffic.
+        let predicted_compute =
+            w.launches * cm.t_launch + w.flops * cm.flop_time + 8.0 * w.gemm_words * cm.byte_time;
+        // Wire: every message priced as CostModel::xfer — launch latency
+        // per message + the bandwidth term over total bytes.
+        let predicted_wire = w.messages * cm.t_launch + w.bytes_sent * cm.byte_time;
+        for (class, predicted_s, measured_s) in [
+            ("compute", predicted_compute, rank.compute_us * 1e-6),
+            ("wire", predicted_wire, rank.comm_us * 1e-6),
+        ] {
+            if predicted_s > 0.0 {
+                rows.push(DriftRow {
+                    pid: m.pid,
+                    class,
+                    measured_s,
+                    predicted_s,
+                    ratio: measured_s / predicted_s,
+                });
+            }
+        }
+    }
+    rows
+}
+
+impl Analysis {
+    /// The smallest per-rank overlap efficiency among ranks that did any
+    /// wire communication (the `--assert-overlap` gate's subject); 1.0
+    /// when no rank communicated.
+    pub fn min_overlap_eff(&self) -> f64 {
+        self.ranks
+            .iter()
+            .filter(|r| r.comm_us > 0.0)
+            .map(|r| r.overlap_eff)
+            .fold(f64::INFINITY, f64::min)
+            .min(1.0)
+    }
+
+    /// Human-readable report (deterministic byte-for-byte for a given
+    /// span set; `top` caps the phase table).
+    pub fn render_text(&self, top: usize) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "makespan {:.3} ms over {} processes ({} events)",
+            self.makespan_us * 1e-3,
+            self.ranks.len(),
+            self.events
+        );
+        if self.total_dropped > 0 {
+            let per: Vec<String> =
+                self.dropped.iter().map(|(p, d)| format!("pid {p}: {d}")).collect();
+            let _ = writeln!(
+                out,
+                "WARNING: trace truncated — {} spans dropped by ring overflow ({}); \
+                 aggregates and the critical path undercount the missing spans",
+                self.total_dropped,
+                per.join(", ")
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  {:>4} {:>11} {:>11} {:>11} {:>11} {:>8}",
+            "pid", "compute_ms", "wire_ms", "other_ms", "idle_ms", "overlap"
+        );
+        for r in &self.ranks {
+            let _ = writeln!(
+                out,
+                "  {:>4} {:>11.3} {:>11.3} {:>11.3} {:>11.3} {:>7.1}%",
+                r.pid,
+                r.compute_us * 1e-3,
+                r.comm_us * 1e-3,
+                r.other_us * 1e-3,
+                r.idle_us * 1e-3,
+                r.overlap_eff * 100.0
+            );
+        }
+        let cp = &self.critical_path;
+        if cp.len > 0 {
+            let _ = writeln!(
+                out,
+                "critical path: {} spans, {:.3} ms = {:.1}% of makespan; bound by '{}' on \
+                 pid {}",
+                cp.len,
+                cp.total_us * 1e-3,
+                cp.coverage * 100.0,
+                cp.bound_phase,
+                cp.bound_pid
+            );
+            for s in cp.steps.iter().take(top) {
+                let _ = writeln!(
+                    out,
+                    "    {:<28} pid {:>3}  {:>11.3} ms  ({} spans)",
+                    s.phase,
+                    s.pid,
+                    s.us * 1e-3,
+                    s.count
+                );
+            }
+        }
+        if !self.drift.is_empty() {
+            let _ = writeln!(out, "model drift (measured / CostModel-predicted):");
+            for d in &self.drift {
+                let _ = writeln!(
+                    out,
+                    "    pid {:>3} {:<8} measured {:>10.3} ms, predicted {:>10.3} ms \
+                     ({:>8.2}x)",
+                    d.pid,
+                    d.class,
+                    d.measured_s * 1e3,
+                    d.predicted_s * 1e3,
+                    d.ratio
+                );
+            }
+        }
+        let _ = writeln!(out, "phase aggregates (top {top}):");
+        for p in self.phases.iter().take(top) {
+            let _ = writeln!(
+                out,
+                "    {:<28} {:<8} pid {:>3}  {:>11.3} ms  ({} spans)",
+                p.phase,
+                p.cat,
+                p.pid,
+                p.total_us * 1e-3,
+                p.count
+            );
+        }
+        out
+    }
+
+    /// Machine-readable report (strict JSON, deterministic byte-for-byte
+    /// for a given span set) — what `model_check.py --analyze` consumes.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\n");
+        let _ = write!(
+            out,
+            "  \"makespan_us\": {:.3},\n  \"events\": {},\n  \"total_dropped\": {},\n",
+            self.makespan_us, self.events, self.total_dropped
+        );
+        let _ = write!(out, "  \"dropped\": [");
+        for (i, (pid, d)) in self.dropped.iter().enumerate() {
+            let comma = if i + 1 == self.dropped.len() { "" } else { ", " };
+            let _ = write!(out, "{{\"pid\": {pid}, \"dropped\": {d}}}{comma}");
+        }
+        let _ = writeln!(out, "],");
+        let _ = writeln!(out, "  \"ranks\": [");
+        for (i, r) in self.ranks.iter().enumerate() {
+            let comma = if i + 1 == self.ranks.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"pid\": {}, \"compute_us\": {:.3}, \"comm_us\": {:.3}, \
+                 \"other_us\": {:.3}, \"busy_us\": {:.3}, \"idle_us\": {:.3}, \
+                 \"overlap_eff\": {:.6}}}{}",
+                r.pid, r.compute_us, r.comm_us, r.other_us, r.busy_us, r.idle_us,
+                r.overlap_eff, comma
+            );
+        }
+        let _ = writeln!(out, "  ],");
+        let cp = &self.critical_path;
+        let _ = writeln!(
+            out,
+            "  \"critical_path\": {{\"total_us\": {:.3}, \"coverage\": {:.6}, \"len\": {}, \
+             \"bound_phase\": \"{}\", \"bound_pid\": {}, \"steps\": [",
+            cp.total_us,
+            cp.coverage,
+            cp.len,
+            escape_json(&cp.bound_phase),
+            cp.bound_pid
+        );
+        for (i, s) in cp.steps.iter().enumerate() {
+            let comma = if i + 1 == cp.steps.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"phase\": \"{}\", \"pid\": {}, \"us\": {:.3}, \"count\": {}}}{}",
+                escape_json(&s.phase),
+                s.pid,
+                s.us,
+                s.count,
+                comma
+            );
+        }
+        let _ = writeln!(out, "  ]}},");
+        let _ = writeln!(out, "  \"drift\": [");
+        for (i, d) in self.drift.iter().enumerate() {
+            let comma = if i + 1 == self.drift.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"pid\": {}, \"class\": \"{}\", \"measured_s\": {:.9}, \
+                 \"predicted_s\": {:.9}, \"ratio\": {:.6}}}{}",
+                d.pid, d.class, d.measured_s, d.predicted_s, d.ratio, comma
+            );
+        }
+        let _ = writeln!(out, "  ],");
+        let _ = writeln!(out, "  \"phases\": [");
+        for (i, p) in self.phases.iter().enumerate() {
+            let comma = if i + 1 == self.phases.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"phase\": \"{}\", \"cat\": \"{}\", \"pid\": {}, \"total_us\": {:.3}, \
+                 \"count\": {}}}{}",
+                escape_json(&p.phase),
+                escape_json(&p.cat),
+                p.pid,
+                p.total_us,
+                p.count,
+                comma
+            );
+        }
+        let _ = writeln!(out, "  ]");
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, cat: &str, pid: usize, tid: usize, ts: f64, dur: f64) -> AEvent {
+        AEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us: ts,
+            dur_us: dur,
+        }
+    }
+
+    #[test]
+    fn phase_key_strips_call_args_keeps_levels() {
+        assert_eq!(phase_key("product #42"), "product");
+        assert_eq!(phase_key("batch gemm x128"), "batch gemm");
+        assert_eq!(phase_key("orth transfer L3"), "orth transfer L3");
+        assert_eq!(phase_key("upsweep"), "upsweep");
+        assert_eq!(phase_key("cmp rc gather L11"), "cmp rc gather L11");
+        // Not an arg suffix: no digits / lone marker.
+        assert_eq!(phase_key("max x"), "max x");
+        assert_eq!(phase_key("a #x1"), "a #x1");
+    }
+
+    #[test]
+    fn union_and_overlap_math() {
+        assert_eq!(union_len(vec![(0.0, 2.0), (1.0, 3.0), (5.0, 6.0)]), 4.0);
+        assert_eq!(union_len(vec![]), 0.0);
+        let u = merge_intervals(vec![(4.0, 6.0), (0.0, 2.0), (1.0, 3.0)]);
+        assert_eq!(u, vec![(0.0, 3.0), (4.0, 6.0)]);
+        assert_eq!(overlap_with_union(1.0, 5.0, &u), 3.0);
+        assert_eq!(overlap_with_union(10.0, 11.0, &u), 0.0);
+    }
+
+    #[test]
+    fn containers_are_excluded_from_busy_and_phases() {
+        // A `product` wrapping two phases on one stream: busy time must
+        // count the leaves once, not the container plus the leaves.
+        let events = vec![
+            ev("product #0", "transfer", 0, 0, 0.0, 100.0),
+            ev("upsweep", "compute", 0, 0, 0.0, 40.0),
+            ev("downsweep", "compute", 0, 0, 50.0, 50.0),
+        ];
+        let a = analyze_events(events, &[], &CostModel::default());
+        let r = &a.ranks[0];
+        assert_eq!(r.compute_us, 90.0);
+        assert_eq!(r.other_us, 0.0, "container excluded");
+        assert_eq!(r.busy_us, 90.0);
+        assert_eq!(r.idle_us, 10.0);
+        assert!(a.phases.iter().all(|p| p.phase != "product"));
+    }
+
+    #[test]
+    fn overlap_extremes() {
+        // Zero overlap: the wire span runs while nothing computes.
+        let zero = analyze_events(
+            vec![
+                ev("upsweep", "compute", 0, 0, 0.0, 10.0),
+                ev("xhat send", "comm", 0, 0, 10.0, 5.0),
+            ],
+            &[],
+            &CostModel::default(),
+        );
+        assert_eq!(zero.ranks[0].overlap_eff, 0.0);
+        assert_eq!(zero.min_overlap_eff(), 0.0);
+
+        // Full overlap: rank 0's wire span is entirely under rank 1's
+        // compute span.
+        let full = analyze_events(
+            vec![
+                ev("xhat send", "comm", 0, 0, 2.0, 4.0),
+                ev("upsweep", "compute", 1, 1, 0.0, 10.0),
+            ],
+            &[],
+            &CostModel::default(),
+        );
+        let r0 = full.ranks.iter().find(|r| r.pid == 0).unwrap();
+        assert_eq!(r0.overlap_eff, 1.0);
+        // Rank 1 had no wire time: efficiency defaults to 1.
+        assert_eq!(full.min_overlap_eff(), 1.0);
+    }
+
+    #[test]
+    fn critical_path_follows_rendezvous_chain() {
+        // rank 0: A computes, then sends; rank 1: receives, then computes
+        // until the makespan. Known path: A -> send -> recv -> B.
+        let events = vec![
+            ev("prep", "compute", 0, 0, 0.0, 10.0),
+            ev("link L1", "comm", 0, 0, 10.0, 4.0),
+            ev("link L1", "comm", 1, 1, 12.0, 4.0),
+            ev("crunch", "compute", 1, 1, 16.0, 14.0),
+        ];
+        let a = analyze_events(events, &[], &CostModel::default());
+        let cp = &a.critical_path;
+        assert_eq!(cp.len, 4, "all four spans on the path: {cp:?}");
+        assert_eq!(cp.total_us, 32.0);
+        assert_eq!(cp.bound_phase, "crunch");
+        assert_eq!(cp.bound_pid, 1);
+        assert_eq!(a.makespan_us, 30.0);
+    }
+
+    #[test]
+    fn critical_path_uses_wait_release_when_no_rendezvous_matches() {
+        // rank 1 idles until rank 0's differently-named span completes:
+        // the wait-release edge must bridge the gap.
+        let events = vec![
+            ev("ship input #0", "comm", 0, 0, 0.0, 20.0),
+            ev("input gather", "compute", 1, 1, 20.0, 10.0),
+        ];
+        let a = analyze_events(events, &[], &CostModel::default());
+        assert_eq!(a.critical_path.len, 2);
+        assert_eq!(a.critical_path.total_us, 30.0);
+        assert_eq!(a.critical_path.bound_phase, "ship input");
+        assert_eq!(a.critical_path.bound_pid, 0);
+    }
+
+    #[test]
+    fn drift_prices_work_counters() {
+        let cm = CostModel::default();
+        let meta = vec![PartMeta {
+            pid: 0,
+            dropped: 0,
+            work: Some(super::super::clock::WorkCounters {
+                flops: 1e9,
+                bytes_sent: 1e6,
+                messages: 10.0,
+                launches: 100.0,
+                gemm_words: 1e6,
+            }),
+        }];
+        let events = vec![
+            ev("upsweep", "compute", 0, 0, 0.0, 500_000.0),
+            ev("xhat send", "comm", 0, 0, 500_000.0, 100.0),
+        ];
+        let a = analyze_events(events, &meta, &cm);
+        assert_eq!(a.drift.len(), 2);
+        let compute = &a.drift[0];
+        assert_eq!(compute.class, "compute");
+        let want = 100.0 * cm.t_launch + 1e9 * cm.flop_time + 8e6 * cm.byte_time;
+        assert!((compute.predicted_s - want).abs() < 1e-12);
+        assert!((compute.measured_s - 0.5).abs() < 1e-12);
+        assert!((compute.ratio - 0.5 / want).abs() < 1e-9);
+        let wire = &a.drift[1];
+        assert_eq!(wire.class, "wire");
+        assert!((wire.predicted_s - (10.0 * cm.t_launch + 1e6 * cm.byte_time)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_trace_is_harmless() {
+        let a = analyze_events(vec![], &[], &CostModel::default());
+        assert_eq!(a.makespan_us, 0.0);
+        assert_eq!(a.critical_path.len, 0);
+        assert_eq!(a.min_overlap_eff(), 1.0);
+        // Reports render without panicking.
+        assert!(a.render_text(8).contains("makespan"));
+        crate::util::testing::parse_json(&a.to_json()).expect("strict JSON");
+    }
+
+    #[test]
+    fn json_report_is_strict_and_carries_sections() {
+        let events = vec![
+            ev("prep", "compute", 0, 0, 0.0, 10.0),
+            ev("link L1", "comm", 0, 0, 10.0, 4.0),
+            ev("link L1", "comm", 1, 1, 12.0, 4.0),
+        ];
+        let meta = vec![PartMeta { pid: 0, dropped: 7, work: None }];
+        let a = analyze_events(events, &meta, &CostModel::default());
+        assert_eq!(a.total_dropped, 7);
+        let parsed = crate::util::testing::parse_json(&a.to_json()).expect("strict JSON");
+        assert_eq!(parsed.get("total_dropped").unwrap().as_f64(), Some(7.0));
+        assert!(parsed.get("ranks").unwrap().as_arr().unwrap().len() == 2);
+        assert!(parsed.get("critical_path").unwrap().get("coverage").is_some());
+        let text = a.render_text(8);
+        assert!(text.contains("WARNING: trace truncated"), "{text}");
+        assert!(text.contains("pid 0: 7"), "{text}");
+    }
+}

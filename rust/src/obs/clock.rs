@@ -10,7 +10,12 @@
 //!
 //! `merged_trace_json` then maps every span onto the coordinator timeline
 //! (`coord_ns = span.start_ns - offset_ns`) and renders one Chrome/Perfetto
-//! JSON with `pid` = rank (coordinator = P) and `tid` = recording stream.
+//! JSON object: `traceEvents` with `pid` = rank (coordinator = P) and
+//! `tid` = recording stream, plus a `metadata` block carrying each part's
+//! dropped-span count and (when the session tracked them) its cumulative
+//! work counters — what `h2opus analyze` prices with the `CostModel`.
+
+use std::fmt::Write as _;
 
 use super::names;
 use super::span::{Span, LANE_UNSET};
@@ -42,8 +47,49 @@ pub fn estimate_offset_ns(samples: &[ClockSample]) -> i64 {
         .unwrap_or(0)
 }
 
+/// Per-process work counters embedded in trace metadata (f64: all counts
+/// stay far below 2^53, so the JSON round trip is exact). The analyzer
+/// prices these with [`crate::dist::hgemv::CostModel`] to report
+/// measured-vs-predicted drift per rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkCounters {
+    pub flops: f64,
+    pub bytes_sent: f64,
+    pub messages: f64,
+    pub launches: f64,
+    pub gemm_words: f64,
+}
+
+impl WorkCounters {
+    pub fn is_zero(&self) -> bool {
+        *self == WorkCounters::default()
+    }
+}
+
+impl From<&crate::metrics::Metrics> for WorkCounters {
+    fn from(m: &crate::metrics::Metrics) -> Self {
+        WorkCounters {
+            flops: m.flops as f64,
+            bytes_sent: m.bytes_sent as f64,
+            messages: m.messages as f64,
+            launches: m.batch_launches as f64,
+            gemm_words: m.gemm_words as f64,
+        }
+    }
+}
+
+/// The metadata of one part as it appears in (and parses back out of) a
+/// merged trace's `metadata.parts` array.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PartMeta {
+    pub pid: usize,
+    /// Spans this process's rings overwrote since the last flush.
+    pub dropped: u64,
+    pub work: Option<WorkCounters>,
+}
+
 /// One process's contribution to a merged trace.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TracePart {
     /// The pid assigned to spans with no explicit lane (worker rank, or P
     /// for the coordinator process).
@@ -52,15 +98,28 @@ pub struct TracePart {
     /// (`remote_now - coord_now`); 0 for the coordinator itself.
     pub offset_ns: i64,
     pub spans: Vec<Span>,
+    /// Spans this process's rings overwrote (counted in `obs/span.rs`,
+    /// carried on the `Flush` wire) — surfaced in the merged trace's
+    /// metadata so truncation is never silent.
+    pub dropped: u64,
+    /// Cumulative work counters since the last flush, when the session
+    /// tracked them (socket sessions do; ad-hoc merges may not).
+    pub work: Option<WorkCounters>,
 }
 
-/// Merge span sets from several processes into one Chrome-trace JSON.
+/// Merge span sets from several processes into one Chrome-trace JSON
+/// object: `{"traceEvents": [...], "metadata": {...}}`.
 ///
 /// Spans recorded on a thread labeled with [`super::set_lane`] keep that
 /// lane as their pid (the in-process executor runs all ranks in one
 /// process); unlabeled spans fall to the part's `default_pid`. Events are
 /// sorted by `(pid, tid, start, name)` so the output is deterministic for
 /// a deterministic span set, modulo the timestamp values themselves.
+///
+/// The `metadata` block carries one entry per part (sorted by pid) with
+/// its dropped-span count and optional [`WorkCounters`], plus the summed
+/// `total_dropped` — so trace consumers can warn about ring truncation
+/// and `h2opus analyze` can price the trace against the cost model.
 pub fn merged_trace_json(parts: &[TracePart]) -> String {
     let mut events: Vec<(usize, u32, u64, Span)> = Vec::new();
     for part in parts {
@@ -83,7 +142,29 @@ pub fn merged_trace_json(parts: &[TracePart]) -> String {
             s.dur_ns as f64 * 1e-9,
         );
     }
-    tc.to_json()
+
+    let mut metas: Vec<&TracePart> = parts.iter().collect();
+    metas.sort_by_key(|p| p.default_pid);
+    let total_dropped: u64 = metas.iter().map(|p| p.dropped).sum();
+    let mut out = String::from("{\n\"traceEvents\":\n");
+    out.push_str(&tc.to_json());
+    out.push_str(",\n\"metadata\": {");
+    let _ = write!(out, "\"total_dropped\": {total_dropped}, \"parts\": [");
+    for (i, p) in metas.iter().enumerate() {
+        let comma = if i + 1 == metas.len() { "" } else { ", " };
+        let _ = write!(out, "{{\"pid\": {}, \"dropped\": {}", p.default_pid, p.dropped);
+        if let Some(w) = &p.work {
+            let _ = write!(
+                out,
+                ", \"work\": {{\"flops\": {}, \"bytes_sent\": {}, \"messages\": {}, \
+                 \"launches\": {}, \"gemm_words\": {}}}",
+                w.flops, w.bytes_sent, w.messages, w.launches, w.gemm_words
+            );
+        }
+        let _ = write!(out, "}}{comma}");
+    }
+    out.push_str("]}\n}");
+    out
 }
 
 #[cfg(test)]
@@ -118,12 +199,14 @@ mod tests {
             default_pid: 2,
             offset_ns: 0,
             spans: vec![sp(names::SHIP_INPUT, LANE_UNSET, 0, 1_000, 100)],
+            ..TracePart::default()
         };
         // Worker clock runs 500ns ahead of the coordinator's.
         let worker = TracePart {
             default_pid: 0,
             offset_ns: 500,
             spans: vec![sp(names::PRODUCT, LANE_UNSET, 0, 1_700, 300)],
+            ..TracePart::default()
         };
         let json = merged_trace_json(&[coord, worker]);
         // Worker span lands at 1_200ns = 1.2us on the merged timeline.
@@ -138,9 +221,48 @@ mod tests {
             default_pid: 9,
             offset_ns: 0,
             spans: vec![sp(names::UPSWEEP, 3, 1, 0, 10)],
+            ..TracePart::default()
         };
         let json = merged_trace_json(&[part]);
-        assert!(json.contains("\"pid\": 3"));
-        assert!(!json.contains("\"pid\": 9"));
+        // The event itself carries the lane pid; only the metadata part
+        // entry mentions the default pid 9.
+        let events_part = json.split("\"metadata\"").next().unwrap();
+        assert!(events_part.contains("\"pid\": 3"));
+        assert!(!events_part.contains("\"pid\": 9"));
+        assert!(json.contains("\"pid\": 9"), "metadata keeps the rank id");
+    }
+
+    #[test]
+    fn metadata_carries_dropped_and_work() {
+        use crate::util::testing::{parse_json, JsonValue};
+        let mut m = crate::metrics::Metrics::new();
+        m.gemm(4, 8, 8, 2);
+        m.send(1024);
+        let parts = [
+            TracePart {
+                default_pid: 1,
+                dropped: 3,
+                spans: vec![sp(names::UPSWEEP, LANE_UNSET, 0, 0, 10)],
+                work: Some(WorkCounters::from(&m)),
+                ..TracePart::default()
+            },
+            TracePart { default_pid: 0, dropped: 0, ..TracePart::default() },
+        ];
+        let json = merged_trace_json(&parts);
+        let parsed = parse_json(&json).expect("merged trace must be strict JSON");
+        let meta = parsed.get("metadata").expect("metadata block");
+        assert_eq!(meta.get("total_dropped").unwrap().as_f64(), Some(3.0));
+        let entries = meta.get("parts").unwrap().as_arr().unwrap();
+        // Sorted by pid regardless of input order.
+        assert_eq!(entries[0].get("pid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(entries[1].get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(entries[1].get("dropped").unwrap().as_f64(), Some(3.0));
+        let work = entries[1].get("work").expect("work counters present");
+        assert_eq!(work.get("flops").unwrap().as_f64(), Some(m.flops as f64));
+        assert_eq!(work.get("bytes_sent").unwrap().as_f64(), Some(1024.0));
+        assert!(entries[0].get("work").is_none(), "no counters -> no work block");
+        // Events still present under traceEvents.
+        let events = parsed.get("traceEvents").and_then(JsonValue::as_arr).unwrap();
+        assert_eq!(events.len(), 1);
     }
 }

@@ -19,16 +19,29 @@
 //!   Prometheus-style exposition, absorbing `Metrics`, `ServerStats` and
 //!   `RequestStats` as views; served live over the socket protocol's
 //!   `Stats` request (`h2opus stats`).
+//! - [`analyze`] — the performance referee: ingests a merged trace and
+//!   reports per-rank phase aggregates, communication/computation overlap
+//!   efficiency (the Fig. 8 metric), the critical path through the
+//!   send/recv happens-before graph, and measured-vs-predicted cost-model
+//!   drift (`h2opus analyze`).
+//! - [`trajectory`] — the unified `BenchRow` schema all benches append to
+//!   `BENCH_TRAJECTORY.jsonl`, plus the cross-commit regression gate.
 //!
 //! Enable recording with `H2OPUS_OBS=1` (or [`set_enabled`]); disabled
 //! overhead is one atomic load per site, gated by `benches/obs_overhead`.
 
+pub mod analyze;
 pub mod clock;
 pub mod names;
 pub mod registry;
 pub mod span;
+pub mod trajectory;
 
-pub use clock::{estimate_offset_ns, merged_trace_json, ClockSample, TracePart, CLOCK_SYNC_PINGS};
+pub use analyze::{analyze_json, Analysis};
+pub use clock::{
+    estimate_offset_ns, merged_trace_json, ClockSample, PartMeta, TracePart, WorkCounters,
+    CLOCK_SYNC_PINGS,
+};
 pub use registry::{Counter, FixedHistogram, Gauge, Histogram, Registry};
 pub use span::{
     decode_spans, drain, enabled, encode_spans, init_from_env, now_ns, record, set_enabled,

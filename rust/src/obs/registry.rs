@@ -323,7 +323,7 @@ impl Registry {
                 }
                 Metric::Gauge(g) => {
                     writeln!(out, "# TYPE {name} gauge").unwrap();
-                    writeln!(out, "{name} {}", g.get()).unwrap();
+                    writeln!(out, "{name} {}", prom_value(g.get())).unwrap();
                 }
                 Metric::Histogram(h) => {
                     let snap = h.snapshot();
@@ -333,10 +333,11 @@ impl Registry {
                         snap.bounds.iter().copied().zip(snap.counts.iter().copied())
                     {
                         cum += c;
-                        writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}").unwrap();
+                        writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", prom_value(bound))
+                            .unwrap();
                     }
                     writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", snap.count()).unwrap();
-                    writeln!(out, "{name}_sum {}", snap.sum()).unwrap();
+                    writeln!(out, "{name}_sum {}", prom_value(snap.sum())).unwrap();
                     writeln!(out, "{name}_count {}", snap.count()).unwrap();
                 }
             }
@@ -348,6 +349,21 @@ impl Registry {
     /// working but are no longer rendered).
     pub fn clear(&self) {
         self.metrics.lock().unwrap().clear();
+    }
+}
+
+/// Render one sample value per the Prometheus text exposition format:
+/// non-finite floats become the canonical `+Inf` / `-Inf` / `NaN` tokens
+/// (Rust's `Display` would emit `inf`, which scrapers reject).
+fn prom_value(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{x}")
     }
 }
 
@@ -426,6 +442,32 @@ mod tests {
         assert!(text.contains("c_seconds_bucket{le=\"0.5\"} 1"), "{text}");
         assert!(text.contains("c_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
         assert!(text.contains("c_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn non_finite_values_round_trip_through_strict_parser() {
+        use crate::util::testing::parse_prometheus_text;
+        let r = Registry::new();
+        r.gauge("g_nan").set(f64::NAN);
+        r.gauge("g_pinf").set(f64::INFINITY);
+        r.gauge("g_ninf").set(f64::NEG_INFINITY);
+        r.gauge("g_fin").set(-2.5);
+        r.counter("c_total").add(3);
+        let h = r.histogram("h_seconds", &[1.0]);
+        h.observe(f64::INFINITY); // lands in the +Inf bucket, poisons the sum
+        let text = r.render_text();
+        assert!(text.contains("g_pinf +Inf"), "{text}");
+        assert!(text.contains("g_ninf -Inf"), "{text}");
+        assert!(text.contains("g_nan NaN"), "{text}");
+        assert!(text.contains("h_seconds_sum +Inf"), "{text}");
+        let samples = parse_prometheus_text(&text).expect("exposition must be strictly valid");
+        let find = |n: &str| samples.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+        assert!(find("g_nan").unwrap().is_nan());
+        assert_eq!(find("g_pinf"), Some(f64::INFINITY));
+        assert_eq!(find("g_ninf"), Some(f64::NEG_INFINITY));
+        assert_eq!(find("g_fin"), Some(-2.5));
+        assert_eq!(find("c_total"), Some(3.0));
+        assert_eq!(find("h_seconds_bucket{le=\"+Inf\"}"), Some(1.0));
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! Persistent bench trajectory: one schema for every bench, one
+//! append-only file, one regression gate.
+//!
+//! Each bench run emits a [`BenchRow`] — bench id, config fingerprint,
+//! git revision, wall-clock stamp, and a flat metrics map — through
+//! [`append_row`] into `BENCH_TRAJECTORY.jsonl` (one strict-JSON object
+//! per line, found by walking up from the CWD to the repo root, or set
+//! explicitly with `H2OPUS_TRAJECTORY`). The file is append-only history:
+//! rows accumulate across commits, so `h2opus analyze
+//! --assert-no-regression` can compare the newest row of every
+//! `(bench, config)` series against its immediate predecessor with a
+//! noise band, and CI can fail the build when a phase slows down.
+//!
+//! Metric keys carry their own direction: `*_per_s` / throughput-like
+//! keys are higher-better, `*_s`/`*_ms`/`*_us`/`*_ns`/`*_bytes` and
+//! latency-like keys are lower-better, anything else is informational
+//! and never gated. The `H2OPUS_TEST_SLOWDOWN` hook multiplies
+//! lower-better metrics at append time so the gate's failure path stays
+//! testable without a real regression.
+
+use std::env;
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::testing::{parse_json, JsonValue};
+use crate::util::trace::escape_json;
+
+/// Name of the append-only trajectory file at the repo root.
+pub const TRAJECTORY_FILE: &str = "BENCH_TRAJECTORY.jsonl";
+
+/// Env override for the trajectory file location.
+pub const TRAJECTORY_ENV: &str = "H2OPUS_TRAJECTORY";
+
+/// Test hook: multiply lower-better metrics (divide higher-better ones)
+/// by this factor at append time, simulating a uniform slowdown.
+pub const SLOWDOWN_ENV: &str = "H2OPUS_TEST_SLOWDOWN";
+
+/// Default fractional noise band for the regression gate: a lower-better
+/// metric may grow by up to 75% (and a higher-better one shrink by the
+/// same factor) before the gate fails. Tiny CI smokes are noisy; the
+/// band is wide enough for scheduler jitter yet catches a 2x slowdown.
+pub const DEFAULT_BAND: f64 = 0.75;
+
+/// How a metric is compared across runs, derived from its key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HigherBetter,
+    LowerBetter,
+    /// Not a performance metric (sizes, ranks, error norms with their own
+    /// gates elsewhere) — recorded but never regression-checked.
+    Info,
+}
+
+/// Classify a metric key. Higher-better patterns are checked first so
+/// `gflops_per_s` is not caught by the lower-better `_s` suffix.
+pub fn metric_direction(key: &str) -> Direction {
+    let k = key.to_ascii_lowercase();
+    if k.ends_with("_per_s")
+        || k.contains("gflop")
+        || k.contains("throughput")
+        || k.contains("speedup")
+        || k.contains("bandwidth")
+    {
+        return Direction::HigherBetter;
+    }
+    if k.ends_with("_s")
+        || k.ends_with("_ms")
+        || k.ends_with("_us")
+        || k.ends_with("_ns")
+        || k.ends_with("_bytes")
+        || k.ends_with("_waste")
+        || k.contains("time")
+        || k.contains("latency")
+        || k.contains("_p50")
+        || k.contains("_p99")
+    {
+        return Direction::LowerBetter;
+    }
+    Direction::Info
+}
+
+/// One bench observation: the unified schema all ten benches emit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    /// Bench id, e.g. `hgemv_weak` or `serving`.
+    pub bench: String,
+    /// Config fingerprint: a stable `k=v` string identifying the problem
+    /// shape, so rows are only compared within one series.
+    pub config: String,
+    /// Git revision the row was produced at (short hash, or `unknown`).
+    pub git_rev: String,
+    /// Wall-clock stamp, milliseconds since the Unix epoch.
+    pub unix_ms: u64,
+    /// Metric map, sorted by key; values are finite by construction
+    /// (non-finite values are dropped at insert).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRow {
+    /// Start a row for `bench` with the given config fingerprint; stamps
+    /// the current git revision and wall clock.
+    pub fn new(bench: &str, config: &str) -> Self {
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        BenchRow {
+            bench: bench.to_string(),
+            config: config.to_string(),
+            git_rev: git_rev(),
+            unix_ms,
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Insert (or overwrite) a metric, keeping the map key-sorted.
+    /// Non-finite values are silently dropped — the trajectory file must
+    /// stay strict JSON.
+    pub fn metric(mut self, key: &str, value: f64) -> Self {
+        self.set_metric(key, value);
+        self
+    }
+
+    /// Non-consuming form of [`BenchRow::metric`].
+    pub fn set_metric(&mut self, key: &str, value: f64) {
+        if !value.is_finite() {
+            return;
+        }
+        match self.metrics.binary_search_by(|(k, _)| k.as_str().cmp(key)) {
+            Ok(i) => self.metrics[i].1 = value,
+            Err(i) => self.metrics.insert(i, (key.to_string(), value)),
+        }
+    }
+
+    /// Render the row as one strict-JSON line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"bench\": \"{}\", \"config\": \"{}\", \"git_rev\": \"{}\", \"unix_ms\": {}, \"metrics\": {{",
+            escape_json(&self.bench),
+            escape_json(&self.config),
+            escape_json(&self.git_rev),
+            self.unix_ms
+        );
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            let comma = if i + 1 == self.metrics.len() { "" } else { ", " };
+            let _ = write!(out, "\"{}\": {}{}", escape_json(k), fmt_f64(*v), comma);
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// Parse one trajectory line back into a row.
+    pub fn from_json_line(line: &str) -> Result<BenchRow, String> {
+        let v = parse_json(line)?;
+        let get_str = |key: &str| -> Result<String, String> {
+            v.get(key)
+                .and_then(JsonValue::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("bench row missing string field '{key}'"))
+        };
+        let mut row = BenchRow {
+            bench: get_str("bench")?,
+            config: get_str("config")?,
+            git_rev: get_str("git_rev")?,
+            unix_ms: v
+                .get("unix_ms")
+                .and_then(JsonValue::as_f64)
+                .ok_or("bench row missing 'unix_ms'")? as u64,
+            metrics: Vec::new(),
+        };
+        match v.get("metrics") {
+            Some(JsonValue::Obj(members)) => {
+                for (k, mv) in members {
+                    let x = mv
+                        .as_f64()
+                        .ok_or_else(|| format!("metric '{k}' is not a number"))?;
+                    row.set_metric(k, x);
+                }
+            }
+            _ => return Err("bench row missing 'metrics' object".into()),
+        }
+        Ok(row)
+    }
+}
+
+/// Format an f64 for the trajectory file: plain decimal (Rust's `{}`
+/// never emits exponents or non-finite tokens for finite inputs), so the
+/// strict parser round-trips it.
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+/// Apply the injected-slowdown test hook to a row: lower-better metrics
+/// are multiplied by `factor`, higher-better metrics divided.
+pub fn apply_slowdown(row: &mut BenchRow, factor: f64) {
+    for (k, v) in &mut row.metrics {
+        match metric_direction(k) {
+            Direction::LowerBetter => *v *= factor,
+            Direction::HigherBetter => *v /= factor,
+            Direction::Info => {}
+        }
+    }
+}
+
+/// Resolve the trajectory file path: `H2OPUS_TRAJECTORY` if set, else
+/// the first ancestor of the CWD containing an existing trajectory file
+/// or a `.git` directory (the repo root), else the CWD itself.
+pub fn trajectory_path() -> PathBuf {
+    if let Ok(p) = env::var(TRAJECTORY_ENV) {
+        return PathBuf::from(p);
+    }
+    let mut dir = env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join(TRAJECTORY_FILE).exists() || dir.join(".git").exists() {
+            return dir.join(TRAJECTORY_FILE);
+        }
+        if !dir.pop() {
+            return PathBuf::from(TRAJECTORY_FILE);
+        }
+    }
+}
+
+/// Current git revision, short form: `H2OPUS_GIT_REV` if set, else
+/// resolved by hand from `.git/HEAD` (the image has git, but benches
+/// should not have to shell out), else `unknown`.
+pub fn git_rev() -> String {
+    if let Ok(r) = env::var("H2OPUS_GIT_REV") {
+        return shorten(r.trim());
+    }
+    let mut dir = env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let git = dir.join(".git");
+        if git.is_dir() {
+            return read_git_head(&git).unwrap_or_else(|| "unknown".into());
+        }
+        if !dir.pop() {
+            return "unknown".into();
+        }
+    }
+}
+
+fn shorten(hash: &str) -> String {
+    hash.chars().take(12).collect()
+}
+
+fn read_git_head(git: &Path) -> Option<String> {
+    let head = fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    if let Some(refname) = head.strip_prefix("ref: ") {
+        if let Ok(h) = fs::read_to_string(git.join(refname)) {
+            return Some(shorten(h.trim()));
+        }
+        // Ref may only exist packed.
+        if let Ok(packed) = fs::read_to_string(git.join("packed-refs")) {
+            for line in packed.lines() {
+                if let Some(hash) = line.strip_suffix(refname) {
+                    return Some(shorten(hash.trim()));
+                }
+            }
+        }
+        None
+    } else {
+        Some(shorten(head))
+    }
+}
+
+/// Append one row to the trajectory file (creating it if needed),
+/// honoring the `H2OPUS_TEST_SLOWDOWN` hook. Returns the path written.
+pub fn append_row(row: &BenchRow) -> std::io::Result<PathBuf> {
+    let mut row = row.clone();
+    if let Some(f) = env::var(SLOWDOWN_ENV).ok().and_then(|s| s.parse::<f64>().ok()) {
+        apply_slowdown(&mut row, f);
+    }
+    let path = trajectory_path();
+    let mut file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    writeln!(file, "{}", row.to_json_line())?;
+    Ok(path)
+}
+
+/// Append a row and report the destination on stdout — the common tail
+/// of every bench binary. Failures are reported but never fatal: a bench
+/// must still print its table on a read-only checkout.
+pub fn append_and_report(row: &BenchRow) {
+    match append_row(row) {
+        Ok(path) => {
+            println!("trajectory += {} [{}] -> {}", row.bench, row.config, path.display())
+        }
+        Err(e) => eprintln!("trajectory append failed for {}: {e}", row.bench),
+    }
+}
+
+/// Parse a whole trajectory file body (blank lines ignored). Malformed
+/// lines are errors: the trajectory is committed history, so corruption
+/// should fail loudly, not silently shrink the comparison set.
+pub fn parse_rows(text: &str) -> Result<Vec<BenchRow>, String> {
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            BenchRow::from_json_line(line).map_err(|e| format!("line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(rows)
+}
+
+/// Load and parse the trajectory file; a missing file is an empty
+/// trajectory, not an error.
+pub fn load_rows(path: &Path) -> Result<Vec<BenchRow>, String> {
+    match fs::read_to_string(path) {
+        Ok(text) => parse_rows(&text),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+        Err(e) => Err(format!("{}: {e}", path.display())),
+    }
+}
+
+/// One gated comparison: the newest row of a series against its
+/// immediate predecessor, for one directional metric.
+#[derive(Clone, Debug)]
+pub struct RegressionCheck {
+    pub bench: String,
+    pub config: String,
+    pub metric: String,
+    pub prior: f64,
+    pub current: f64,
+    /// Slowdown ratio normalized so >1 is worse regardless of direction.
+    pub ratio: f64,
+    pub failed: bool,
+}
+
+/// Result of gating the newest rows against their predecessors.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionReport {
+    pub band: f64,
+    pub checks: Vec<RegressionCheck>,
+    /// Series with only one row (nothing to compare against yet).
+    pub fresh_series: usize,
+}
+
+impl RegressionReport {
+    pub fn failures(&self) -> usize {
+        self.checks.iter().filter(|c| c.failed).count()
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "regression gate: {} checks, {} failures (band {:.0}%, {} fresh series)",
+            self.checks.len(),
+            self.failures(),
+            self.band * 100.0,
+            self.fresh_series
+        );
+        for c in &self.checks {
+            if c.failed {
+                let _ = writeln!(
+                    out,
+                    "  FAIL {} [{}] {}: {} -> {} ({:.2}x slowdown > {:.2}x band)",
+                    c.bench,
+                    c.config,
+                    c.metric,
+                    fmt_f64(c.prior),
+                    fmt_f64(c.current),
+                    c.ratio,
+                    1.0 + self.band
+                );
+            }
+        }
+        if self.failures() == 0 && !self.checks.is_empty() {
+            out.push_str("  all series within band\n");
+        }
+        out
+    }
+}
+
+/// Compare the newest row of every `(bench, config)` series against its
+/// immediate predecessor in file order. A lower-better metric fails when
+/// `current > prior * (1 + band)`; a higher-better one when
+/// `current < prior / (1 + band)`. Info metrics and non-positive priors
+/// are skipped.
+pub fn check_regressions(rows: &[BenchRow], band: f64) -> RegressionReport {
+    // Series key -> indices, in file (append) order.
+    let mut series: Vec<((&str, &str), Vec<usize>)> = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        let key = (r.bench.as_str(), r.config.as_str());
+        match series.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => series.push((key, vec![i])),
+        }
+    }
+    let mut report = RegressionReport { band, ..RegressionReport::default() };
+    for (_, idxs) in &series {
+        if idxs.len() < 2 {
+            report.fresh_series += 1;
+            continue;
+        }
+        let prior = &rows[idxs[idxs.len() - 2]];
+        let current = &rows[idxs[idxs.len() - 1]];
+        for (key, cur) in &current.metrics {
+            let cur = *cur;
+            let dir = metric_direction(key);
+            if dir == Direction::Info {
+                continue;
+            }
+            let Some(&(_, prev)) =
+                prior.metrics.iter().find(|(k, _)| k == key)
+            else {
+                continue;
+            };
+            if prev <= 0.0 || cur <= 0.0 {
+                continue;
+            }
+            let ratio = match dir {
+                Direction::LowerBetter => cur / prev,
+                Direction::HigherBetter => prev / cur,
+                Direction::Info => unreachable!(),
+            };
+            report.checks.push(RegressionCheck {
+                bench: current.bench.clone(),
+                config: current.config.clone(),
+                metric: key.clone(),
+                prior: prev,
+                current: cur,
+                ratio,
+                failed: ratio > 1.0 + band,
+            });
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(bench: &str, config: &str, metrics: &[(&str, f64)]) -> BenchRow {
+        let mut r = BenchRow {
+            bench: bench.into(),
+            config: config.into(),
+            git_rev: "deadbeef".into(),
+            unix_ms: 1_700_000_000_000,
+            metrics: Vec::new(),
+        };
+        for (k, v) in metrics {
+            r.set_metric(k, *v);
+        }
+        r
+    }
+
+    #[test]
+    fn direction_classification() {
+        assert_eq!(metric_direction("gflops_per_s"), Direction::HigherBetter);
+        assert_eq!(metric_direction("matvec_gflops"), Direction::HigherBetter);
+        assert_eq!(metric_direction("speedup_vs_dense"), Direction::HigherBetter);
+        assert_eq!(metric_direction("matvec_s"), Direction::LowerBetter);
+        assert_eq!(metric_direction("latency_p99_us"), Direction::LowerBetter);
+        assert_eq!(metric_direction("bytes_sent_bytes"), Direction::LowerBetter);
+        assert_eq!(metric_direction("pad_waste"), Direction::LowerBetter);
+        assert_eq!(metric_direction("rank"), Direction::Info);
+        assert_eq!(metric_direction("rel_err"), Direction::Info);
+    }
+
+    #[test]
+    fn row_round_trips_through_strict_parser() {
+        let r = row("hgemv_weak", "n=4096 p=4", &[("matvec_s", 0.0125), ("gflops_per_s", 3.5)]);
+        let line = r.to_json_line();
+        let back = BenchRow::from_json_line(&line).unwrap();
+        assert_eq!(back, r);
+        // Keys come back sorted regardless of insertion order.
+        let r2 = row("b", "c", &[("z_s", 1.0), ("a_s", 2.0)]);
+        assert_eq!(r2.metrics[0].0, "a_s");
+    }
+
+    #[test]
+    fn non_finite_metrics_are_dropped() {
+        let r = row("b", "c", &[("ok_s", 1.0), ("bad_s", f64::NAN), ("worse_s", f64::INFINITY)]);
+        assert_eq!(r.metrics.len(), 1);
+        assert!(parse_json(&r.to_json_line()).is_ok());
+    }
+
+    #[test]
+    fn identical_runs_pass_the_gate() {
+        let rows = vec![
+            row("hgemv_weak", "n=4096", &[("matvec_s", 0.01), ("gflops_per_s", 3.0)]),
+            row("hgemv_weak", "n=4096", &[("matvec_s", 0.01), ("gflops_per_s", 3.0)]),
+        ];
+        let rep = check_regressions(&rows, DEFAULT_BAND);
+        assert_eq!(rep.checks.len(), 2);
+        assert_eq!(rep.failures(), 0);
+    }
+
+    #[test]
+    fn injected_2x_slowdown_fails_the_gate() {
+        let base = row("serving", "p=4", &[("latency_p50_us", 120.0), ("req_per_s", 900.0)]);
+        let mut slow = base.clone();
+        apply_slowdown(&mut slow, 2.0);
+        assert_eq!(slow.metrics.iter().find(|(k, _)| k == "latency_p50_us").unwrap().1, 240.0);
+        assert_eq!(slow.metrics.iter().find(|(k, _)| k == "req_per_s").unwrap().1, 450.0);
+        let rep = check_regressions(&[base, slow], DEFAULT_BAND);
+        assert_eq!(rep.failures(), 2, "{}", rep.render_text());
+        assert!(rep.render_text().contains("FAIL serving"));
+    }
+
+    #[test]
+    fn series_are_isolated_by_config_and_only_last_pair_is_gated() {
+        let rows = vec![
+            row("b", "n=1", &[("t_s", 1.0)]),
+            row("b", "n=2", &[("t_s", 100.0)]), // different series: no comparison
+            row("b", "n=1", &[("t_s", 10.0)]),  // old regression...
+            row("b", "n=1", &[("t_s", 10.0)]),  // ...but newest pair is flat
+        ];
+        let rep = check_regressions(&rows, DEFAULT_BAND);
+        assert_eq!(rep.failures(), 0);
+        assert_eq!(rep.fresh_series, 1);
+    }
+
+    #[test]
+    fn parse_rows_rejects_corruption_and_skips_blanks() {
+        let good = row("a", "c", &[("t_s", 1.0)]).to_json_line();
+        let text = format!("{good}\n\n{good}\n");
+        assert_eq!(parse_rows(&text).unwrap().len(), 2);
+        assert!(parse_rows("not json\n").is_err());
+        assert!(load_rows(Path::new("/nonexistent/trajectory.jsonl")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn info_metrics_never_gate() {
+        let rows = vec![
+            row("b", "c", &[("rank", 16.0)]),
+            row("b", "c", &[("rank", 64.0)]),
+        ];
+        assert_eq!(check_regressions(&rows, DEFAULT_BAND).checks.len(), 0);
+    }
+}

@@ -283,6 +283,125 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
     Ok(JsonValue::Num(x))
 }
 
+/// Parse a Prometheus text exposition strictly: returns `(name, value)`
+/// samples in document order, where `name` keeps its label block
+/// verbatim (e.g. `x_bucket{le="+Inf"}`). Comment lines (`#`) and blank
+/// lines are skipped. Rejects malformed metric names, unbalanced label
+/// blocks, and any value token that is not a plain decimal float or one
+/// of the canonical `+Inf` / `-Inf` / `NaN` tokens — Rust's permissive
+/// `f64::from_str` (which accepts `inf`, `+infinity`, …) is deliberately
+/// not the arbiter here, because real scrapers are stricter.
+pub fn parse_prometheus_text(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut samples = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |what: &str| format!("line {}: {what}: '{line}'", lineno + 1);
+        // Split "name{labels} value" at the last space outside any label
+        // block (label values never contain spaces in our writers, but
+        // the split must still not land inside the braces).
+        let split = line
+            .char_indices()
+            .filter(|&(i, c)| {
+                c == ' ' && line[..i].matches('{').count() == line[..i].matches('}').count()
+            })
+            .map(|(i, _)| i)
+            .next_back()
+            .ok_or_else(|| err("no value separator"))?;
+        let (name, value) = (&line[..split], line[split + 1..].trim());
+        validate_prom_name(name).map_err(|e| err(&e))?;
+        samples.push((name.to_string(), parse_prom_number(value).map_err(|e| err(&e))?));
+    }
+    Ok(samples)
+}
+
+fn validate_prom_name(name: &str) -> Result<(), String> {
+    let (base, labels) = match name.split_once('{') {
+        Some((b, rest)) => {
+            let labels =
+                rest.strip_suffix('}').ok_or("label block not closed".to_string())?;
+            (b, Some(labels))
+        }
+        None => {
+            if name.contains('}') {
+                return Err("stray '}' in metric name".into());
+            }
+            (name, None)
+        }
+    };
+    if base.is_empty()
+        || !base.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        || !base.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    {
+        return Err(format!("invalid metric name '{base}'"));
+    }
+    if let Some(labels) = labels {
+        for pair in labels.split(',') {
+            let (k, v) = pair.split_once('=').ok_or(format!("label '{pair}' missing '='"))?;
+            if k.is_empty() || !k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(format!("invalid label name '{k}'"));
+            }
+            if !(v.len() >= 2 && v.starts_with('"') && v.ends_with('"')) {
+                return Err(format!("label value {v} not quoted"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse one exposition value token: canonical non-finite tokens or a
+/// strict decimal float (`sign? digits (. digits)? ([eE] sign? digits)?`).
+pub fn parse_prom_number(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" => return Ok(f64::INFINITY),
+        "-Inf" => return Ok(f64::NEG_INFINITY),
+        "NaN" => return Ok(f64::NAN),
+        _ => {}
+    }
+    let b = s.as_bytes();
+    let mut i = 0;
+    let bad = || format!("invalid value token '{s}'");
+    if matches!(b.first(), Some(b'+') | Some(b'-')) {
+        i += 1;
+    }
+    let int_start = i;
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == int_start {
+        return Err(bad());
+    }
+    if i < b.len() && b[i] == b'.' {
+        i += 1;
+        let frac_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac_start {
+            return Err(bad());
+        }
+    }
+    if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        i += 1;
+        if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+            i += 1;
+        }
+        let exp_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == exp_start {
+            return Err(bad());
+        }
+    }
+    if i != b.len() {
+        return Err(bad());
+    }
+    s.parse().map_err(|_| bad())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +455,31 @@ mod tests {
     fn json_unicode_escapes_decode() {
         let v = parse_json(r#""tab:\u0009 bell:\u0007 snowman:\u2603""#).unwrap();
         assert_eq!(v.as_str(), Some("tab:\t bell:\u{7} snowman:\u{2603}"));
+    }
+
+    #[test]
+    fn prometheus_parser_accepts_canonical_tokens() {
+        let text = "# TYPE x gauge\nx +Inf\ny -Inf\nz NaN\nw 12.5\nv 1e-3\nu{rank=\"3\"} 7\n";
+        let samples = parse_prometheus_text(text).unwrap();
+        assert_eq!(samples[0].0, "x");
+        assert_eq!(samples[0].1, f64::INFINITY);
+        assert_eq!(samples[1].1, f64::NEG_INFINITY);
+        assert!(samples[2].1.is_nan());
+        assert_eq!(samples[3].1, 12.5);
+        assert_eq!(samples[4].1, 1e-3);
+        assert_eq!(samples[5], ("u{rank=\"3\"}".to_string(), 7.0));
+    }
+
+    #[test]
+    fn prometheus_parser_rejects_rust_float_spellings() {
+        // Rust's f64::from_str would accept all of these; scrapers don't.
+        for bad in ["x inf", "x -inf", "x infinity", "x nan", "x Inf", "x 1.", "x .5", "x 1e"] {
+            assert!(parse_prometheus_text(bad).is_err(), "accepted '{bad}'");
+        }
+        assert!(parse_prometheus_text("x{le=\"0.5\" 1").is_err(), "unclosed label block");
+        assert!(parse_prometheus_text("x{le=0.5} 1").is_err(), "unquoted label value");
+        assert!(parse_prometheus_text("9bad 1").is_err(), "invalid name");
+        assert!(parse_prometheus_text("noseparator").is_err());
     }
 
     #[test]

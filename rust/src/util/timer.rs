@@ -1,22 +1,33 @@
 //! Wall-clock timing helpers and the paper's measurement protocol:
 //! "every point in every plot has been generated as the average of 10 runs
 //! after discarding the fastest and slowest timings" (§6.1).
+//!
+//! Timers read [`crate::obs::span::now_ns`] — the same process-local
+//! monotonic epoch spans are stamped against — so timer-based phase
+//! reports and recorded traces share one clock domain and a timer start
+//! can be placed on a merged timeline directly.
 
-use std::time::Instant;
+use crate::obs::span::now_ns;
 
-/// Simple wall-clock timer.
+/// Simple wall-clock timer on the span epoch.
 pub struct Timer {
-    start: Instant,
+    start_ns: u64,
 }
 
 impl Timer {
     pub fn start() -> Self {
-        Timer { start: Instant::now() }
+        Timer { start_ns: now_ns() }
     }
 
     /// Elapsed seconds since construction.
     pub fn elapsed(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        now_ns().saturating_sub(self.start_ns) as f64 * 1e-9
+    }
+
+    /// Construction stamp in span-epoch nanoseconds — directly comparable
+    /// to `Span::start_ns` of spans recorded in this process.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
     }
 }
 
@@ -60,6 +71,14 @@ mod tests {
         let a = t.elapsed();
         let b = t.elapsed();
         assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn timer_shares_the_span_epoch() {
+        let t = Timer::start();
+        let stamp = now_ns();
+        assert!(t.start_ns() <= stamp, "timer start must be on the span clock");
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Analyzer property tests on synthetic span DAGs with *known* critical
+//! paths and overlap fractions, determinism under input reordering, and
+//! trajectory regression-gate round trips through serialized rows.
+
+use h2opus::dist::hgemv::CostModel;
+use h2opus::obs::analyze::{analyze_events, analyze_json, AEvent};
+use h2opus::obs::trajectory::{
+    apply_slowdown, check_regressions, metric_direction, parse_rows, BenchRow, Direction,
+    DEFAULT_BAND,
+};
+use h2opus::util::testing::{check, parse_json};
+
+fn ev(name: &str, cat: &str, pid: usize, tid: usize, ts: f64, dur: f64) -> AEvent {
+    AEvent { name: name.to_string(), cat: cat.to_string(), pid, tid, ts_us: ts, dur_us: dur }
+}
+
+fn cm() -> CostModel {
+    CostModel::default()
+}
+
+/// A zero-slack chain across ranks: span i starts exactly when span i-1
+/// ends, each on its own stream, so the happens-before walk must recover
+/// the whole chain — total time = makespan, coverage = 1, bound phase =
+/// the longest link.
+#[test]
+fn critical_path_recovers_a_known_chain() {
+    check(
+        "chain critical path",
+        0xC41A,
+        64,
+        |rng| {
+            let k = 3 + rng.below(9);
+            let mut evs = Vec::new();
+            let mut durs = Vec::new();
+            let mut t = 0.0;
+            for i in 0..k {
+                let d = rng.range(1.0, 10.0);
+                let cat = if i % 2 == 0 { "compute" } else { "comm" };
+                // Unique (pid, tid) per span: every link waits on the
+                // previous one through a wait-release edge.
+                evs.push(ev(&format!("step {i}"), cat, i % 3, 10 + i, t, d));
+                durs.push(d);
+                t += d;
+            }
+            (evs, durs, t)
+        },
+        |(evs, durs, makespan)| {
+            let a = analyze_events(evs.clone(), &[], &cm());
+            let cp = &a.critical_path;
+            if cp.len != evs.len() {
+                return Err(format!("path covers {} of {} spans", cp.len, evs.len()));
+            }
+            if (cp.total_us - makespan).abs() > 1e-6 * makespan {
+                return Err(format!("path time {} != makespan {makespan}", cp.total_us));
+            }
+            if (cp.coverage - 1.0).abs() > 1e-6 {
+                return Err(format!("coverage {} != 1", cp.coverage));
+            }
+            let longest = durs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| format!("step {i}"))
+                .unwrap();
+            if cp.bound_phase != longest {
+                return Err(format!("bound '{}' != longest link '{longest}'", cp.bound_phase));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Overlap efficiency at the two analytic extremes: communication with no
+/// concurrent compute anywhere scores 0; communication fully nested in
+/// another rank's compute scores 1.
+#[test]
+fn overlap_extremes_score_zero_and_one() {
+    check(
+        "overlap extremes",
+        0x0E0E,
+        64,
+        |rng| (rng.range(5.0, 20.0), rng.range(0.1, 3.0), rng.range(5.0, 20.0)),
+        |&(c, gap, w)| {
+            // Zero: the only compute starts strictly after the wire span ends.
+            let evs = vec![
+                ev("ship input #0", "comm", 0, 0, 0.0, c),
+                ev("upsweep", "compute", 1, 1, c + gap, w),
+            ];
+            let a = analyze_events(evs, &[], &cm());
+            let r0 = a.ranks.iter().find(|r| r.pid == 0).unwrap();
+            if r0.overlap_eff != 0.0 {
+                return Err(format!("zero case: eff={}", r0.overlap_eff));
+            }
+            // Full: the wire span is nested inside compute on another rank.
+            let evs = vec![
+                ev("ship input #0", "comm", 0, 0, 1.0, c),
+                ev("upsweep", "compute", 1, 1, 0.5, c + w),
+            ];
+            let a = analyze_events(evs, &[], &cm());
+            let r0 = a.ranks.iter().find(|r| r.pid == 0).unwrap();
+            if (r0.overlap_eff - 1.0).abs() > 1e-12 {
+                return Err(format!("full case: eff={}", r0.overlap_eff));
+            }
+            // The fleet minimum is the one comm-bearing rank's score.
+            if (a.min_overlap_eff() - r0.overlap_eff).abs() > 1e-12 {
+                return Err(format!("min {} != rank0 {}", a.min_overlap_eff(), r0.overlap_eff));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shuffling the input event order must not change a single byte of
+/// either report: the analyzer normalizes to a total order first.
+#[test]
+fn reports_are_byte_identical_under_reordering() {
+    let names: [(&str, &str); 5] = [
+        ("product #1", "compute"),
+        ("upsweep L2", "compute"),
+        ("ship input #3", "comm"),
+        ("orth transfer x64", "transfer"),
+        ("wait", "lowprio"),
+    ];
+    check(
+        "report determinism",
+        0xD37E,
+        32,
+        |rng| {
+            let n = 2 + rng.below(24);
+            let mut evs = Vec::new();
+            for _ in 0..n {
+                let (name, cat) = names[rng.below(names.len())];
+                evs.push(ev(
+                    name,
+                    cat,
+                    rng.below(3),
+                    rng.below(2),
+                    rng.range(0.0, 100.0),
+                    rng.range(0.1, 10.0),
+                ));
+            }
+            // Fisher-Yates with the same deterministic generator.
+            let mut shuffled = evs.clone();
+            for i in (1..shuffled.len()).rev() {
+                shuffled.swap(i, rng.below(i + 1));
+            }
+            (evs, shuffled)
+        },
+        |(evs, shuffled)| {
+            let a = analyze_events(evs.clone(), &[], &cm());
+            let b = analyze_events(shuffled.clone(), &[], &cm());
+            if a.render_text(8) != b.render_text(8) {
+                return Err("text reports differ under reordering".into());
+            }
+            if a.to_json() != b.to_json() {
+                return Err("JSON reports differ under reordering".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Object-form traces feed metadata through to truncation warnings and
+/// CostModel drift rows, and the JSON report stays strict.
+#[test]
+fn object_form_metadata_drives_dropped_and_drift() {
+    let json = r#"{
+      "traceEvents": [
+        {"name": "product #0", "cat": "compute", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0, "dur": 100.0},
+        {"name": "ship input #0", "cat": "comm", "ph": "X", "pid": 0, "tid": 1, "ts": 10.0, "dur": 50.0}
+      ],
+      "metadata": {"total_dropped": 7, "parts": [
+        {"pid": 0, "dropped": 7,
+         "work": {"flops": 1000000.0, "bytes_sent": 4096.0, "messages": 2.0,
+                  "launches": 3.0, "gemm_words": 2000.0}}
+      ]}
+    }"#;
+    let a = analyze_json(json, &cm()).unwrap();
+    assert_eq!(a.total_dropped, 7);
+    assert_eq!(a.dropped, vec![(0, 7)]);
+    assert_eq!(a.drift.len(), 2, "compute + wire drift rows");
+    let text = a.render_text(5);
+    assert!(text.contains("truncated"), "truncation warning missing:\n{text}");
+    let report = parse_json(&a.to_json()).expect("report must be strict JSON");
+    assert_eq!(report.get("total_dropped").and_then(|v| v.as_f64()), Some(7.0));
+    assert!(report.get("critical_path").is_some());
+    assert!(report.get("drift").is_some());
+
+    // The bare-array form is accepted too, with no metadata.
+    let bare = r#"[{"name": "upsweep", "cat": "compute", "ph": "X",
+                   "pid": 0, "tid": 0, "ts": 0.0, "dur": 5.0}]"#;
+    let a = analyze_json(bare, &cm()).unwrap();
+    assert_eq!(a.events, 1);
+    assert_eq!(a.total_dropped, 0);
+    assert!(!a.render_text(5).contains("truncated"));
+}
+
+#[test]
+fn metric_directions_follow_key_conventions() {
+    assert_eq!(metric_direction("rows_per_s"), Direction::HigherBetter);
+    assert_eq!(metric_direction("effective_gflops"), Direction::HigherBetter);
+    assert_eq!(metric_direction("elapsed_s"), Direction::LowerBetter);
+    assert_eq!(metric_direction("latency_p99_us"), Direction::LowerBetter);
+    assert_eq!(metric_direction("peak_bytes"), Direction::LowerBetter);
+    assert_eq!(metric_direction("ranks"), Direction::Info);
+}
+
+/// The gate passes two identical appended runs and fails when the
+/// injected-slowdown hook doubles every directional metric — exercised
+/// through the serialized line format, as CI uses it.
+#[test]
+fn regression_gate_round_trips_through_serialized_rows() {
+    let mk = |t: f64, rate: f64| {
+        let mut r = BenchRow::new("hgemv_weak", "p=4 n=4096");
+        r.set_metric("elapsed_s", t);
+        r.set_metric("rows_per_s", rate);
+        r
+    };
+    let flat = format!("{}\n{}\n", mk(1.0, 100.0).to_json_line(), mk(1.0, 100.0).to_json_line());
+    let rep = check_regressions(&parse_rows(&flat).unwrap(), DEFAULT_BAND);
+    assert_eq!(rep.failures(), 0, "{}", rep.render_text());
+    assert_eq!(rep.checks.len(), 2);
+
+    let mut slow = mk(1.0, 100.0);
+    apply_slowdown(&mut slow, 2.0);
+    let text = format!("{}\n{}\n", mk(1.0, 100.0).to_json_line(), slow.to_json_line());
+    let rep = check_regressions(&parse_rows(&text).unwrap(), DEFAULT_BAND);
+    assert_eq!(rep.failures(), 2, "{}", rep.render_text());
+    assert!(rep.render_text().contains("FAIL hgemv_weak"));
+}
+
+/// End to end through the filesystem: append under `H2OPUS_TRAJECTORY`,
+/// reload, gate. Kept as the single env-touching test in this binary so
+/// parallel test threads cannot race on the variable.
+#[test]
+fn append_row_honors_env_override_and_slowdown_hook() {
+    use h2opus::obs::trajectory::{append_row, load_rows, SLOWDOWN_ENV, TRAJECTORY_ENV};
+    let path = std::env::temp_dir().join(format!("h2opus_traj_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    std::env::set_var(TRAJECTORY_ENV, &path);
+
+    let row = BenchRow::new("overlap", "p=2").metric("product_s", 0.5);
+    append_row(&row).unwrap();
+    std::env::set_var(SLOWDOWN_ENV, "2.0");
+    append_row(&row).unwrap();
+    std::env::remove_var(SLOWDOWN_ENV);
+    std::env::remove_var(TRAJECTORY_ENV);
+
+    let rows = load_rows(&path).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].metrics[0], ("product_s".to_string(), 0.5));
+    assert_eq!(rows[1].metrics[0], ("product_s".to_string(), 1.0));
+    let rep = check_regressions(&rows, DEFAULT_BAND);
+    assert_eq!(rep.failures(), 1, "{}", rep.render_text());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Pre-existing shape from the paper's Fig. 8 story: upsweep / downsweep
+/// compute with interleaved wire spans; perfect pipelining means every
+/// wire second is hidden and the analyzer's rank table says so.
+#[test]
+fn pipelined_trace_reports_full_overlap_and_compute_bound_path() {
+    let evs = vec![
+        // Rank 0 computes back to back on stream (0,0).
+        ev("upsweep", "compute", 0, 0, 0.0, 40.0),
+        ev("downsweep", "compute", 0, 0, 40.0, 60.0),
+        // Rank 1's sends sit entirely under rank 0's compute.
+        ev("ship input #0", "comm", 1, 1, 5.0, 20.0),
+        ev("ship input #1", "comm", 1, 1, 50.0, 30.0),
+    ];
+    let a = analyze_events(evs, &[], &cm());
+    let r1 = a.ranks.iter().find(|r| r.pid == 1).unwrap();
+    assert!((r1.overlap_eff - 1.0).abs() < 1e-12, "wire fully hidden, eff={}", r1.overlap_eff);
+    assert_eq!(a.critical_path.bound_pid, 0, "compute rank bounds the makespan");
+    assert_eq!(a.makespan_us, 100.0);
+}

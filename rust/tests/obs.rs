@@ -119,6 +119,7 @@ fn merged_trace_deterministic_under_reordering() {
         default_pid: pid,
         offset_ns: offset,
         spans: spans.to_vec(),
+        ..obs::TracePart::default()
     };
     let forward = obs::merged_trace_json(&[part(2, 0, &coord), part(0, 500, &worker)]);
     let mut coord_rev = coord.clone();
@@ -130,8 +131,12 @@ fn merged_trace_deterministic_under_reordering() {
     assert_eq!(forward, shuffled, "merge must not depend on input order");
 
     let parsed = parse_json(&forward).expect("merged trace must be strict JSON");
-    let events = parsed.as_arr().expect("top level is an array");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(JsonValue::as_arr)
+        .expect("object form with a traceEvents array");
     assert_eq!(events.len(), 4);
+    assert!(parsed.get("metadata").is_some(), "metadata block present");
     // The worker's offset (+500ns, worker clock ahead) maps its product
     // onto the coordinator timeline: 6_000 - 500 = 5_500ns = 5.5us.
     let product = events
@@ -181,8 +186,9 @@ mod socket {
     fn events_of(json: &str) -> Vec<(String, usize, f64)> {
         let parsed = parse_json(json).expect("merged trace must be strict JSON");
         parsed
-            .as_arr()
-            .expect("top level is an array")
+            .get("traceEvents")
+            .and_then(JsonValue::as_arr)
+            .expect("object form with a traceEvents array")
             .iter()
             .map(|e| {
                 (
@@ -257,6 +263,35 @@ mod socket {
             events.iter().any(|(name, _, _)| name.starts_with("orth transfer L")),
             "leveled compression span missing"
         );
+
+        // Metadata block: one part per process, with the product's work
+        // counters embedded for drift pricing.
+        let parsed = parse_json(&json).expect("strict JSON");
+        let meta = parsed.get("metadata").expect("metadata block");
+        let parts = meta.get("parts").unwrap().as_arr().unwrap();
+        assert_eq!(parts.len(), p + 1, "one metadata part per process");
+        assert!(
+            parts.iter().any(|e| e.get("work").is_some()),
+            "work counters embedded for drift analysis"
+        );
+
+        // End-to-end: the analyzer consumes this exact trace and reports
+        // per-rank overlap efficiency, a named critical-path phase, and
+        // cost-model drift priced from the embedded counters.
+        let cm = h2opus::dist::hgemv::CostModel::default();
+        let analysis = h2opus::obs::analyze_json(&json, &cm).expect("trace analysis");
+        assert_eq!(analysis.ranks.len(), p + 1, "a report row per process");
+        let eff = analysis.min_overlap_eff();
+        assert!((0.0..=1.0).contains(&eff), "overlap efficiency {eff} out of range");
+        assert!(
+            !analysis.critical_path.bound_phase.is_empty(),
+            "critical path must name its bounding phase"
+        );
+        assert!(!analysis.drift.is_empty(), "drift rows priced from work counters");
+        assert_eq!(analysis.total_dropped, 0, "tiny run must not overflow rings");
+        let report = analysis.render_text(10);
+        assert!(report.contains("critical path"), "{report}");
+        assert!(report.contains("overlap"), "{report}");
     }
 
     /// The stats endpoint round trip: a live server answers `Stats`
