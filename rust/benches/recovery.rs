@@ -1,0 +1,140 @@
+//! E11: crash-recovery latency (MTTR) of the supervised socket session.
+//!
+//! A `SessionSupervisor` streams products while a deterministic chaos
+//! plan kills a worker rank mid-pipeline; the supervisor reaps the dead
+//! crew, respawns it and replays the in-flight product. Measured:
+//!
+//! - **mttr_ms** — wall-clock of the recovery (reap + respawn + shard
+//!   rebuild + replay), straight from `RecoveryStats::last_recovery_s`;
+//! - **reqs_per_s** — end-to-end product throughput *including* the
+//!   recovery stall;
+//! - **baseline_reqs_per_s** — the same stream with chaos disabled, so
+//!   the supervision + CRC-framing overhead on the fault-free path is
+//!   visible next to the recovery cost.
+//!
+//! Each config appends a `recovery` row to `BENCH_TRAJECTORY.jsonl`
+//! (`h2opus analyze --assert-no-regression` gates `_ms` metrics as
+//! lower-better). `H2OPUS_BENCH_TINY=1` shrinks the matrix for CI smoke.
+
+#[cfg(unix)]
+use std::path::PathBuf;
+#[cfg(unix)]
+use std::time::{Duration, Instant};
+
+#[cfg(unix)]
+use h2opus::dist::supervisor::{SessionSupervisor, SupervisorOptions};
+#[cfg(unix)]
+use h2opus::dist::transport::chaos::CHAOS_PLAN_ENV;
+#[cfg(unix)]
+use h2opus::dist::transport::socket::SocketOptions;
+#[cfg(unix)]
+use h2opus::dist::transport::{JobKind, MatrixJob};
+#[cfg(unix)]
+use h2opus::util::Prng;
+
+#[cfg(unix)]
+fn tiny() -> bool {
+    std::env::var("H2OPUS_BENCH_TINY").is_ok()
+}
+
+#[cfg(unix)]
+fn worker_opts(plan: Option<&str>) -> SocketOptions {
+    let mut extra_env = Vec::new();
+    if let Some(p) = plan {
+        extra_env.push((CHAOS_PLAN_ENV.to_string(), p.to_string()));
+    }
+    SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(10),
+        extra_env,
+        // Reap latency is part of MTTR; bound it tightly — the dead crew
+        // has nothing graceful left to do.
+        shutdown_grace: Duration::from_millis(500),
+        ..SocketOptions::default()
+    }
+}
+
+/// Stream `products` single-vector products through a supervised
+/// session; returns (elapsed_s, recoveries, mttr_ms, replayed).
+#[cfg(unix)]
+fn run_stream(
+    job: &MatrixJob,
+    p: usize,
+    plan: Option<&str>,
+    products: usize,
+) -> (f64, u64, f64, u64) {
+    let mut sup = SessionSupervisor::start(
+        job,
+        p,
+        1,
+        worker_opts(plan),
+        SupervisorOptions { max_rebuilds: 3 },
+    )
+    .expect("supervised start");
+    let n = sup.n();
+    let mut rng = Prng::new(1111);
+    // Warm the plan caches off the clock.
+    let warm = vec![0.1; n];
+    let mut y = vec![0.0; n];
+    sup.hgemv(&warm, &mut y).expect("warmup product");
+
+    let t0 = Instant::now();
+    for _ in 0..products {
+        let x = rng.normal_vec(n);
+        sup.hgemv(&x, &mut y).expect("supervised product");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let st = sup.recovery_stats();
+    (elapsed, st.recoveries, st.last_recovery_s * 1e3, st.replayed_products)
+}
+
+#[cfg(unix)]
+fn main() {
+    println!("E11 — supervised-session crash recovery (MTTR)");
+    let (side, products) = if tiny() { (16usize, 8usize) } else { (32, 24) };
+    let job = MatrixJob {
+        dim: 2,
+        n_side: side,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    };
+    let p = 2usize;
+    let n = side * side;
+    // Kill rank 1 on its Nth send: lands a few products into the stream,
+    // well clear of the (unchaosed) handshake.
+    let plan = "kill,src=1,nth=9";
+    println!("N = {n}, P = {p}, {products} products, plan \"{plan}\"");
+
+    let (base_s, base_rec, _, _) = run_stream(&job, p, None, products);
+    assert_eq!(base_rec, 0, "the fault-free baseline must not recover");
+    let (chaos_s, recoveries, mttr_ms, replayed) =
+        run_stream(&job, p, Some(plan), products);
+    assert!(recoveries >= 1, "the kill plan must force at least one recovery");
+
+    let baseline_rps = products as f64 / base_s;
+    let chaos_rps = products as f64 / chaos_s;
+    println!("  fault-free baseline: {base_s:.3} s ({baseline_rps:.1} products/s)");
+    println!(
+        "  under kill plan:     {chaos_s:.3} s ({chaos_rps:.1} products/s), \
+         {recoveries} recovery(ies), {replayed} replayed, MTTR {mttr_ms:.1} ms"
+    );
+
+    let row = h2opus::obs::trajectory::BenchRow::new(
+        "recovery",
+        &format!("N={n} P={p} products={products} plan=kill"),
+    )
+    .metric("mttr_ms", mttr_ms)
+    .metric("recoveries", recoveries as f64)
+    .metric("replayed", replayed as f64)
+    .metric("reqs_per_s", chaos_rps)
+    .metric("baseline_reqs_per_s", baseline_rps);
+    h2opus::obs::trajectory::append_and_report(&row);
+}
+
+#[cfg(not(unix))]
+fn main() {
+    println!("E11 requires the Unix-domain-socket transport; skipping on this platform");
+}

@@ -43,7 +43,13 @@
 //!   sockets ([`transport::socket`] — `h2opus worker` ranks with true
 //!   per-process O(N/P) memory), and a recording wrapper
 //!   ([`transport::recording`]) stamping per-message `Instant`s for the
-//!   measured traces.
+//!   measured traces;
+//! - [`supervisor`] — crash recovery over the socket transport: a
+//!   [`SessionSupervisor`] reaps a poisoned crew, respawns it from the
+//!   recorded [`transport::MatrixJob`], re-compresses to the recorded τ
+//!   and replays in-flight products exactly once, bounded by a rebuild
+//!   budget ([`transport::chaos`] provides the deterministic fault
+//!   injection that exercises this path).
 //!
 //! # Example
 //!
@@ -82,6 +88,8 @@ pub mod exchange;
 pub mod hgemv;
 pub mod pool;
 pub mod shard;
+#[cfg(unix)]
+pub mod supervisor;
 pub mod threaded;
 pub mod transport;
 
@@ -98,4 +106,6 @@ pub use self::exchange::{ExchangePlan, LevelExchange};
 pub use self::hgemv::{dist_hgemv, CostModel, DistHgemv, DistOptions, DistReport};
 pub use self::pool::RankPool;
 pub use self::shard::ShardedMatrix;
+#[cfg(unix)]
+pub use self::supervisor::{RecoveryStats, SessionSupervisor, SupervisorOptions};
 pub use self::threaded::ExecMode;

@@ -1,0 +1,411 @@
+//! Self-healing session supervision: rebuild a poisoned socket session
+//! and replay its in-flight products exactly once.
+//!
+//! The paper's 1024-GPU runs are fail-stop: one dead rank kills the MPI
+//! job, acceptable for a batch solve. A resident serving session (the
+//! ROADMAP's north star) cannot afford that — rank loss is an expected
+//! event. [`SessionSupervisor`] wraps a [`SocketSession`] and turns a
+//! poison into a bounded recovery:
+//!
+//! 1. **Reap** — dropping the poisoned session broadcasts `Shutdown`
+//!    (already done by the poison itself), waits out the bounded
+//!    [`SocketOptions::shutdown_grace`] and kills stragglers.
+//! 2. **Respawn + rebuild** — a fresh crew is spawned from the recorded
+//!    [`MatrixJob`]; shard construction is deterministic (same CLI flags,
+//!    same bits), and if the operator had been compressed, the recorded τ
+//!    is re-applied — compression is deterministic too, so the rebuilt
+//!    operator is bitwise the operator that failed. Fault-injection env
+//!    hooks (chaos plans, crash hooks) are cleared on the respawned
+//!    workers: the fault was the first incarnation's.
+//! 3. **Replay** — every submitted-but-uncollected product is re-shipped
+//!    in submission order from its recorded input. External product ids
+//!    are stable across rebuilds (the supervisor owns the pid space and
+//!    maps to each incarnation's internal ids), so a product is delivered
+//!    to the caller exactly once — never lost, never double-applied.
+//!
+//! Recovery is bounded by [`SupervisorOptions::max_rebuilds`]; past the
+//! budget the supervisor degrades to fail-fast, returning the last error
+//! from every subsequent call. Every recovery emits an obs span
+//! (`session recovery`, per-product `replay product` children) and
+//! registry counters/histograms (`h2opus_recoveries_total`,
+//! `h2opus_replayed_requests_total`, `h2opus_recovery_seconds`), so
+//! `h2opus analyze` and the bench trajectory see MTTR.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::compression::CompressionStats;
+use crate::dist::transport::chaos::{CHAOS_PLAN_ENV, CHAOS_SEED_ENV};
+use crate::dist::transport::server::ProductPipe;
+use crate::dist::transport::socket::{SocketOptions, SocketReport, SocketSession, MAX_WIRE_NV};
+use crate::dist::transport::{MatrixJob, TransportError};
+use crate::obs;
+use crate::obs::names as obs_names;
+use crate::obs::registry::latency_bounds;
+
+/// Fault-injection hooks cleared (overridden with empty values) on every
+/// respawned crew: the injected fault belongs to the incarnation that
+/// died, not to the recovery.
+const CLEARED_FAULT_ENV: &[&str] = &[
+    CHAOS_PLAN_ENV,
+    CHAOS_SEED_ENV,
+    "H2OPUS_TEST_CRASH_RANK",
+    "H2OPUS_TEST_CRASH_ON_PRODUCT",
+    "H2OPUS_TEST_CRASH_ON_COMPRESS",
+    "H2OPUS_TEST_STALL_ON_SHUTDOWN",
+];
+
+/// Supervision policy.
+#[derive(Clone, Debug)]
+pub struct SupervisorOptions {
+    /// How many full session rebuilds the supervisor may spend before
+    /// degrading to fail-fast. Bounded on purpose: an environment that
+    /// keeps killing workers (bad binary, OOM kills) must eventually
+    /// surface as an error, not an infinite respawn loop.
+    pub max_rebuilds: usize,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions { max_rebuilds: 2 }
+    }
+}
+
+/// Counters of one supervisor's recovery history.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// Successful session rebuilds.
+    pub recoveries: u64,
+    /// Products re-shipped across all recoveries (exactly-once replays).
+    pub replayed_products: u64,
+    /// Wall-clock of the most recent recovery (reap + respawn + rebuild +
+    /// re-compress + replay) — the observed MTTR.
+    pub last_recovery_s: f64,
+    /// Total seconds spent in recovery.
+    pub total_recovery_s: f64,
+}
+
+/// One submitted product the supervisor can replay: the external pid the
+/// caller holds, the current incarnation's internal pid, and the recorded
+/// input.
+struct Recorded {
+    pid: u64,
+    internal: u64,
+    x: Vec<f64>,
+    nv: usize,
+}
+
+/// A [`SocketSession`] wrapped in crash recovery (see the module docs).
+/// The product API mirrors the session's (`submit`/`wait`/`hgemv`/
+/// `compress`/`collect_spans`), with external product ids owned by the
+/// supervisor so they stay stable across rebuilds.
+pub struct SessionSupervisor {
+    job: MatrixJob,
+    p: usize,
+    nv: usize,
+    n: usize,
+    socket: SocketOptions,
+    opts: SupervisorOptions,
+    session: Option<SocketSession>,
+    /// Compression tolerance recorded at the first successful
+    /// [`SessionSupervisor::compress`]; re-applied on every rebuild.
+    tau: Option<f64>,
+    inflight: VecDeque<Recorded>,
+    next_pid: u64,
+    rebuilds: usize,
+    stats: RecoveryStats,
+    /// Set when the rebuild budget is exhausted: every subsequent call
+    /// fails fast with this error.
+    dead: Option<TransportError>,
+}
+
+impl SessionSupervisor {
+    /// Spawn the initial crew (exactly [`SocketSession::start`]) and arm
+    /// supervision over it.
+    pub fn start(
+        job: &MatrixJob,
+        p: usize,
+        nv: usize,
+        socket: SocketOptions,
+        opts: SupervisorOptions,
+    ) -> Result<SessionSupervisor, TransportError> {
+        let session = SocketSession::start(job, p, nv, socket.clone())?;
+        let n = session.n();
+        Ok(SessionSupervisor {
+            job: job.clone(),
+            p,
+            nv,
+            n,
+            socket,
+            opts,
+            session: Some(session),
+            tau: None,
+            inflight: VecDeque::new(),
+            next_pid: 0,
+            rebuilds: 0,
+            stats: RecoveryStats::default(),
+            dead: None,
+        })
+    }
+
+    /// Matrix dimension N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of worker ranks.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// The session's default product width.
+    pub fn nv(&self) -> usize {
+        self.nv
+    }
+
+    /// Submitted-but-uncollected products.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Recovery history so far.
+    pub fn recovery_stats(&self) -> &RecoveryStats {
+        &self.stats
+    }
+
+    /// Rebuilds spent (out of [`SupervisorOptions::max_rebuilds`]).
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Whether the supervisor has exhausted its rebuild budget and
+    /// degraded to fail-fast.
+    pub fn is_degraded(&self) -> bool {
+        self.dead.is_some()
+    }
+
+    fn check_alive(&self) -> Result<(), TransportError> {
+        match &self.dead {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// One synchronous supervised product y = A·x at the session width.
+    /// Runs through the pipelined path (submit + wait) so a failure
+    /// anywhere inside it is recoverable by replay.
+    pub fn hgemv(&mut self, x: &[f64], y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        let pid = self.submit(x, self.nv)?;
+        self.wait(pid, y)
+    }
+
+    /// Queue one pipelined product (see [`SocketSession::submit`]); the
+    /// returned pid is supervisor-owned and survives rebuilds. The input
+    /// is recorded until [`SessionSupervisor::wait`] collects it, so a
+    /// poison between submit and wait replays it on the rebuilt session.
+    pub fn submit(&mut self, x: &[f64], nv: usize) -> Result<u64, TransportError> {
+        self.check_alive()?;
+        if nv == 0 || nv > MAX_WIRE_NV {
+            return Err(TransportError::Protocol(format!(
+                "product nv must be in 1..={MAX_WIRE_NV} (got {nv})"
+            )));
+        }
+        if x.len() != self.n * nv {
+            return Err(TransportError::Protocol(format!(
+                "x must be N*nv = {} values (got {})",
+                self.n * nv,
+                x.len()
+            )));
+        }
+        loop {
+            let sess = self.session.as_mut().expect("alive supervisor holds a session");
+            match sess.submit(x, nv) {
+                Ok(internal) => {
+                    let pid = self.next_pid;
+                    self.next_pid += 1;
+                    self.inflight.push_back(Recorded { pid, internal, x: x.to_vec(), nv });
+                    return Ok(pid);
+                }
+                Err(e) => self.recover(e)?,
+            }
+        }
+    }
+
+    /// Collect product `pid` (submission order, like the raw session).
+    /// On a poison: reap, rebuild, replay every in-flight product and
+    /// retry — transparently, up to the rebuild budget.
+    pub fn wait(&mut self, pid: u64, y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        self.check_alive()?;
+        let nv = match self.inflight.front() {
+            Some(f) if f.pid == pid => f.nv,
+            Some(f) => {
+                return Err(TransportError::Protocol(format!(
+                    "products complete in submission order: waiting on {pid} but product {} \
+                     is at the head of the pipeline",
+                    f.pid
+                )))
+            }
+            None => {
+                return Err(TransportError::Protocol(format!(
+                    "product {pid} is not in flight"
+                )));
+            }
+        };
+        if y.len() != self.n * nv {
+            return Err(TransportError::Protocol(format!(
+                "y must be N*nv = {} values for product {pid} (got {})",
+                self.n * nv,
+                y.len()
+            )));
+        }
+        loop {
+            let internal = self.inflight.front().expect("head checked above").internal;
+            let sess = self.session.as_mut().expect("alive supervisor holds a session");
+            match sess.wait(internal, y) {
+                Ok(rep) => {
+                    self.inflight.pop_front();
+                    return Ok(rep);
+                }
+                Err(e) => self.recover(e)?,
+            }
+        }
+    }
+
+    /// Compress the distributed operator (see [`SocketSession::compress`]).
+    /// The tolerance is recorded on success: every rebuild re-compresses
+    /// the fresh shards to the same τ, so recovered sessions apply the
+    /// bitwise-identical compressed operator.
+    pub fn compress(&mut self, tau: f64) -> Result<CompressionStats, TransportError> {
+        self.check_alive()?;
+        if !(tau.is_finite() && tau > 0.0) {
+            return Err(TransportError::Protocol(format!(
+                "compression tolerance must be finite and positive (got {tau})"
+            )));
+        }
+        if self.tau.is_some() {
+            return Err(TransportError::Protocol(
+                "session operator is already compressed".into(),
+            ));
+        }
+        if !self.inflight.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "compress cannot interleave with {} in-flight pipelined products — wait() \
+                 on them first",
+                self.inflight.len()
+            )));
+        }
+        loop {
+            let sess = self.session.as_mut().expect("alive supervisor holds a session");
+            match sess.compress(tau) {
+                Ok(stats) => {
+                    self.tau = Some(tau);
+                    return Ok(stats);
+                }
+                Err(e) => self.recover(e)?,
+            }
+        }
+    }
+
+    /// Merge all processes' span buffers (see
+    /// [`SocketSession::collect_spans`]); recovers on a poison, in which
+    /// case the fresh crew's (near-empty) merged trace is returned — the
+    /// dead incarnation's unflushed spans died with it.
+    pub fn collect_spans(&mut self) -> Result<String, TransportError> {
+        self.check_alive()?;
+        if !self.inflight.is_empty() {
+            return Err(TransportError::Protocol(format!(
+                "collect_spans cannot interleave with {} in-flight pipelined products — \
+                 wait() on them first",
+                self.inflight.len()
+            )));
+        }
+        loop {
+            let sess = self.session.as_mut().expect("alive supervisor holds a session");
+            match sess.collect_spans() {
+                Ok(json) => return Ok(json),
+                Err(e) => self.recover(e)?,
+            }
+        }
+    }
+
+    /// Recover from a session failure: retries full rebuilds while the
+    /// budget lasts; past it, records the degradation and fails fast.
+    fn recover(&mut self, trigger: TransportError) -> Result<(), TransportError> {
+        let mut last = trigger;
+        loop {
+            if self.rebuilds >= self.opts.max_rebuilds {
+                let err = TransportError::Closed(format!(
+                    "supervisor exhausted its {} rebuild(s); failing fast after: {last}",
+                    self.opts.max_rebuilds
+                ));
+                self.dead = Some(err.clone());
+                self.session = None;
+                self.inflight.clear();
+                return Err(err);
+            }
+            self.rebuilds += 1;
+            let t0 = Instant::now();
+            match self.rebuild_once() {
+                Ok(replayed) => {
+                    let dt = t0.elapsed().as_secs_f64();
+                    self.stats.recoveries += 1;
+                    self.stats.replayed_products += replayed;
+                    self.stats.last_recovery_s = dt;
+                    self.stats.total_recovery_s += dt;
+                    let registry = obs::Registry::global();
+                    registry.counter("h2opus_recoveries_total").inc();
+                    registry.counter("h2opus_replayed_requests_total").add(replayed);
+                    registry.histogram("h2opus_recovery_seconds", &latency_bounds()).observe(dt);
+                    return Ok(());
+                }
+                Err(e) => last = e,
+            }
+        }
+    }
+
+    /// One rebuild attempt: reap the dead crew, respawn with fault hooks
+    /// cleared, re-compress to the recorded τ, replay the in-flight
+    /// products in order. Returns how many products were replayed.
+    fn rebuild_once(&mut self) -> Result<u64, TransportError> {
+        let _rs = obs::span(obs_names::RECOVERY);
+        // Reap: dropping the poisoned session waits out shutdown_grace
+        // and kills stragglers.
+        self.session = None;
+        let mut sopts = self.socket.clone();
+        for k in CLEARED_FAULT_ENV {
+            // Later Command::env calls win, so appending the override
+            // clears any hook the caller's extra_env armed.
+            sopts.extra_env.push(((*k).to_string(), String::new()));
+        }
+        let mut s = SocketSession::start(&self.job, self.p, self.nv, sopts)?;
+        if let Some(tau) = self.tau {
+            s.compress(tau)?;
+        }
+        let mut replayed = 0u64;
+        for rec in &mut self.inflight {
+            let _ps = obs::span_arg(obs_names::REPLAY, rec.pid);
+            rec.internal = s.submit(&rec.x, rec.nv)?;
+            replayed += 1;
+        }
+        self.session = Some(s);
+        Ok(replayed)
+    }
+}
+
+impl ProductPipe for SessionSupervisor {
+    fn n(&self) -> usize {
+        SessionSupervisor::n(self)
+    }
+
+    fn submit(&mut self, x: &[f64], nv: usize) -> Result<u64, TransportError> {
+        SessionSupervisor::submit(self, x, nv)
+    }
+
+    fn wait(&mut self, pid: u64, y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        SessionSupervisor::wait(self, pid, y)
+    }
+
+    fn collect_spans(&mut self) -> Result<String, TransportError> {
+        SessionSupervisor::collect_spans(self)
+    }
+}

@@ -1,0 +1,467 @@
+//! Deterministic fault injection for the transport layer.
+//!
+//! The paper's Summit runs assume fail-stop MPI: one dead rank kills the
+//! job. A resident serving session cannot — rank loss and wire corruption
+//! are expected events, so every failure mode must be *reproducible* to be
+//! testable. This module turns a u64 seed into a [`FaultPlan`]: a list of
+//! [`FaultRule`]s, each firing one [`Fault`] (drop, delay, duplicate,
+//! truncate, bit-flip, kill) on the Nth frame matching a
+//! (src, dst, kind) edge pattern. Two compositions exist:
+//!
+//! - **Socket (wire level)** — `h2opus worker` processes arm a
+//!   [`FaultState`] from the environment
+//!   ([`CHAOS_PLAN_ENV`]/[`CHAOS_SEED_ENV`], set by the coordinator's
+//!   `--chaos-seed` flag) and apply faults to the *encoded frame bytes*
+//!   inside `WorkerEndpoint::send` — below the CRC32 computation, so
+//!   corruption faults exercise the checksum detection path for real.
+//!   `Kill` exits the worker process mid-session.
+//! - **Inproc (message level)** — [`ChaosEndpoint`] wraps any
+//!   [`Endpoint`]; corruption faults mutate the payload (no CRC exists in
+//!   shared memory) and `Kill` surfaces as a [`TransportError::Closed`]
+//!   from the send, which the executors propagate like a crashed thread.
+//!
+//! Plans are value types with an exact round-trip string form (what the
+//! env var carries to worker subprocesses), and [`FaultPlan::from_seed`]
+//! derives a plan from a seed via [`crate::util::Prng`] — the same seed
+//! and rank count always produce the same faults. Seed-generated
+//! `Duplicate` rules are restricted to pid-tagged `Output` frames:
+//! interior traffic (`Xhat`/`Gather`/`Parent`) is matched positionally by
+//! the FIFO pipeline, so a duplicated interior frame is indistinguishable
+//! from the next product's data — the wire cannot detect it, exactly as a
+//! TCP-level duplicate cannot happen on a stream socket. Explicit plans
+//! may still request it to document that failure mode.
+
+use std::fmt;
+
+use super::{Endpoint, Message, MsgKind, TransportError};
+use crate::util::Prng;
+
+/// Explicit fault plan: `rule;rule;...` (see [`FaultPlan::parse`]).
+pub const CHAOS_PLAN_ENV: &str = "H2OPUS_CHAOS_PLAN";
+/// Seed-derived fault plan: a u64, expanded by [`FaultPlan::from_seed`].
+pub const CHAOS_SEED_ENV: &str = "H2OPUS_CHAOS_SEED";
+
+/// One injected failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Silently discard the frame.
+    Drop,
+    /// Stall the sender for `ms` milliseconds, then send normally (a slow
+    /// rank, not a lost frame).
+    Delay { ms: u64 },
+    /// Send the frame twice (a retransmission the receiver must dedup).
+    Duplicate,
+    /// Send only the first part of the frame, cutting `bytes` off the
+    /// tail (a sender dying mid-write).
+    Truncate { bytes: usize },
+    /// Flip one bit of the frame (wire corruption; `bit` is taken modulo
+    /// the frame's bit length).
+    BitFlip { bit: u64 },
+    /// Kill the sending rank at this send: worker processes exit,
+    /// in-process endpoints return `Closed`.
+    Kill,
+}
+
+impl Fault {
+    fn keyword(&self) -> &'static str {
+        match self {
+            Fault::Drop => "drop",
+            Fault::Delay { .. } => "delay",
+            Fault::Duplicate => "dup",
+            Fault::Truncate { .. } => "trunc",
+            Fault::BitFlip { .. } => "flip",
+            Fault::Kill => "kill",
+        }
+    }
+}
+
+/// When a [`Fault`] fires: on the `nth` (1-based) frame sent by `src`
+/// that matches the optional destination and kind filters. Each rule
+/// fires exactly once.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    /// Sending rank the rule arms on.
+    pub src: usize,
+    /// Destination filter (`None` = any destination).
+    pub dst: Option<usize>,
+    /// Message-kind filter (`None` = any kind).
+    pub kind: Option<MsgKind>,
+    /// Fire on the nth matching send (1-based).
+    pub nth: u64,
+    /// What happens.
+    pub fault: Fault,
+}
+
+/// A deterministic set of fault rules — the unit of reproduction: a plan
+/// (or the seed it came from) plus the session shape replays a failure
+/// exactly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+fn kind_from_name(name: &str) -> Option<MsgKind> {
+    (0..=u8::MAX).filter_map(MsgKind::from_u8).find(|k| k.name() == name)
+}
+
+impl FaultPlan {
+    /// Derive a plan from a seed for a `p`-rank session: 1–3 rules over
+    /// random ranks, each one of the six fault modes with bounded
+    /// parameters (delays ≤ 50 ms so seeded soaks stay fast; `Duplicate`
+    /// restricted to `Output` frames — see the module docs). Same seed,
+    /// same p → same plan, on every platform.
+    pub fn from_seed(seed: u64, p: usize) -> FaultPlan {
+        let mut rng = Prng::new(seed ^ 0xC0A5_5EED);
+        let n_rules = 1 + rng.below(3);
+        let mut rules = Vec::with_capacity(n_rules);
+        for _ in 0..n_rules {
+            let src = rng.below(p.max(1));
+            let nth = 1 + rng.below(8) as u64;
+            let fault = match rng.below(6) {
+                0 => Fault::Drop,
+                1 => Fault::Delay { ms: 5 + rng.below(45) as u64 },
+                2 => Fault::Duplicate,
+                3 => Fault::Truncate { bytes: 1 + rng.below(24) },
+                4 => Fault::BitFlip { bit: rng.next_u64() },
+                _ => Fault::Kill,
+            };
+            let kind = match fault {
+                Fault::Duplicate => Some(MsgKind::Output),
+                _ => None,
+            };
+            rules.push(FaultRule { src, dst: None, kind, nth, fault });
+        }
+        FaultPlan { rules }
+    }
+
+    /// Parse the compact plan string (what [`CHAOS_PLAN_ENV`] carries):
+    /// semicolon-separated rules, each
+    /// `fault[=arg],src=R[,dst=D][,kind=K],nth=N` — e.g.
+    /// `kill,src=1,nth=3;flip=261,src=0,kind=output,nth=1`. An empty
+    /// string is the empty plan (chaos disabled).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for rule_s in s.split(';').map(str::trim).filter(|r| !r.is_empty()) {
+            let mut fault: Option<Fault> = None;
+            let mut src: Option<usize> = None;
+            let mut dst: Option<usize> = None;
+            let mut kind: Option<MsgKind> = None;
+            let mut nth: u64 = 1;
+            for part in rule_s.split(',').map(str::trim) {
+                let (key, val) = match part.split_once('=') {
+                    Some((k, v)) => (k, Some(v)),
+                    None => (part, None),
+                };
+                let num = |what: &str| -> Result<u64, String> {
+                    val.ok_or_else(|| format!("chaos rule '{rule_s}': {what} needs a value"))?
+                        .parse::<u64>()
+                        .map_err(|_| format!("chaos rule '{rule_s}': bad {what} value"))
+                };
+                match key {
+                    "drop" => fault = Some(Fault::Drop),
+                    "dup" => fault = Some(Fault::Duplicate),
+                    "kill" => fault = Some(Fault::Kill),
+                    "delay" => fault = Some(Fault::Delay { ms: num("delay")? }),
+                    "trunc" => fault = Some(Fault::Truncate { bytes: num("trunc")? as usize }),
+                    "flip" => fault = Some(Fault::BitFlip { bit: num("flip")? }),
+                    "src" => src = Some(num("src")? as usize),
+                    "dst" => dst = Some(num("dst")? as usize),
+                    "nth" => nth = num("nth")?,
+                    "kind" => {
+                        let v = val
+                            .ok_or_else(|| format!("chaos rule '{rule_s}': kind needs a value"))?;
+                        kind = Some(kind_from_name(v).ok_or_else(|| {
+                            format!("chaos rule '{rule_s}': unknown message kind '{v}'")
+                        })?);
+                    }
+                    other => {
+                        return Err(format!("chaos rule '{rule_s}': unknown key '{other}'"))
+                    }
+                }
+            }
+            let fault =
+                fault.ok_or_else(|| format!("chaos rule '{rule_s}' names no fault"))?;
+            let src = src.ok_or_else(|| format!("chaos rule '{rule_s}' names no src rank"))?;
+            if nth == 0 {
+                return Err(format!("chaos rule '{rule_s}': nth is 1-based"));
+            }
+            rules.push(FaultRule { src, dst, kind, nth, fault });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Read the plan from the environment: [`CHAOS_PLAN_ENV`] wins over
+    /// [`CHAOS_SEED_ENV`]; empty or unparsable values disable chaos (a
+    /// supervisor rebuild clears the hooks by overriding them with empty
+    /// strings). Returns `None` when chaos is off.
+    pub fn from_env(p: usize) -> Option<FaultPlan> {
+        if let Ok(plan_s) = std::env::var(CHAOS_PLAN_ENV) {
+            if !plan_s.is_empty() {
+                let plan = FaultPlan::parse(&plan_s).ok()?;
+                return (!plan.rules.is_empty()).then_some(plan);
+            }
+            return None;
+        }
+        let seed = std::env::var(CHAOS_SEED_ENV).ok()?.parse::<u64>().ok()?;
+        Some(FaultPlan::from_seed(seed, p))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    /// The exact inverse of [`FaultPlan::parse`] — what the coordinator
+    /// exports to worker subprocesses.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            match r.fault {
+                Fault::Delay { ms } => write!(f, "delay={ms}")?,
+                Fault::Truncate { bytes } => write!(f, "trunc={bytes}")?,
+                Fault::BitFlip { bit } => write!(f, "flip={bit}")?,
+                _ => f.write_str(r.fault.keyword())?,
+            }
+            write!(f, ",src={}", r.src)?;
+            if let Some(d) = r.dst {
+                write!(f, ",dst={d}")?;
+            }
+            if let Some(k) = r.kind {
+                write!(f, ",kind={}", k.name())?;
+            }
+            write!(f, ",nth={}", r.nth)?;
+        }
+        Ok(())
+    }
+}
+
+/// One sender's armed view of a [`FaultPlan`]: per-rule match counters
+/// for the frames rank `src` sends. [`FaultState::decide`] is called once
+/// per outgoing frame; at most one fault fires per frame and each rule
+/// fires once.
+pub struct FaultState {
+    src: usize,
+    rules: Vec<FaultRule>,
+    /// Matching sends seen per rule, paired with whether it already fired.
+    counts: Vec<(u64, bool)>,
+}
+
+impl FaultState {
+    /// Arm `plan` for sender `src` (rules for other ranks are inert but
+    /// kept, so one plan string serves every rank).
+    pub fn new(plan: &FaultPlan, src: usize) -> FaultState {
+        let rules: Vec<FaultRule> =
+            plan.rules.iter().filter(|r| r.src == src).cloned().collect();
+        let counts = vec![(0, false); rules.len()];
+        FaultState { src, rules, counts }
+    }
+
+    /// Arm from the environment; `None` when chaos is off for this rank.
+    pub fn from_env(src: usize, p: usize) -> Option<FaultState> {
+        let plan = FaultPlan::from_env(p)?;
+        let st = FaultState::new(&plan, src);
+        (!st.rules.is_empty()).then_some(st)
+    }
+
+    /// The sender this state is armed for.
+    pub fn src(&self) -> usize {
+        self.src
+    }
+
+    /// Account one outgoing frame; returns the fault to inject, if any.
+    pub fn decide(&mut self, dst: usize, kind: MsgKind) -> Option<Fault> {
+        let mut fired: Option<Fault> = None;
+        for (rule, (count, done)) in self.rules.iter().zip(self.counts.iter_mut()) {
+            if rule.dst.is_some_and(|d| d != dst) || rule.kind.is_some_and(|k| k != kind) {
+                continue;
+            }
+            *count += 1;
+            if !*done && *count == rule.nth && fired.is_none() {
+                *done = true;
+                fired = Some(rule.fault);
+            }
+        }
+        fired
+    }
+}
+
+/// Message-level chaos over any [`Endpoint`] — the inproc composition.
+/// Wire-corruption faults act on the payload here (there is no frame
+/// encoding to corrupt below a CRC); `Kill` turns the send into a
+/// [`TransportError::Closed`], which peers observe exactly like a crashed
+/// thread once the executor propagates it.
+pub struct ChaosEndpoint<E: Endpoint> {
+    inner: E,
+    state: FaultState,
+}
+
+impl<E: Endpoint> ChaosEndpoint<E> {
+    pub fn new(inner: E, plan: &FaultPlan) -> Self {
+        let state = FaultState::new(plan, inner.id());
+        ChaosEndpoint { inner, state }
+    }
+
+    /// The wrapped endpoint back (tests unwrap to assert on it).
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+}
+
+impl<E: Endpoint> Endpoint for ChaosEndpoint<E> {
+    fn id(&self) -> usize {
+        self.inner.id()
+    }
+
+    fn send(&mut self, dst: usize, mut msg: Message) -> Result<(), TransportError> {
+        match self.state.decide(dst, msg.tag.kind) {
+            None => self.inner.send(dst, msg),
+            Some(Fault::Drop) => Ok(()),
+            Some(Fault::Delay { ms }) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.send(dst, msg)
+            }
+            Some(Fault::Duplicate) => {
+                self.inner.send(dst, msg.clone())?;
+                self.inner.send(dst, msg)
+            }
+            Some(Fault::Truncate { bytes }) => {
+                let cut = bytes.div_ceil(8).min(msg.data.len());
+                msg.data.truncate(msg.data.len() - cut);
+                self.inner.send(dst, msg)
+            }
+            Some(Fault::BitFlip { bit }) => {
+                if !msg.data.is_empty() {
+                    let nbits = (msg.data.len() * 64) as u64;
+                    let b = (bit % nbits) as usize;
+                    let v = &mut msg.data[b / 64];
+                    *v = f64::from_bits(v.to_bits() ^ (1u64 << (b % 64)));
+                }
+                self.inner.send(dst, msg)
+            }
+            Some(Fault::Kill) => Err(TransportError::Closed(format!(
+                "chaos: rank {} killed by plan",
+                self.state.src()
+            ))),
+        }
+    }
+
+    fn recv(&mut self) -> Result<Message, TransportError> {
+        self.inner.recv()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        self.inner.barrier()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::inproc::mesh;
+
+    fn plan(s: &str) -> FaultPlan {
+        FaultPlan::parse(s).expect("test plan parses")
+    }
+
+    #[test]
+    fn plan_string_roundtrip() {
+        let s = "kill,src=1,nth=3;flip=261,src=0,kind=output,nth=1;\
+                 delay=20,src=2,dst=4,nth=2;drop,src=0,nth=1;dup,src=3,kind=output,nth=5;\
+                 trunc=8,src=1,nth=2";
+        let p = plan(s);
+        assert_eq!(p.rules.len(), 6);
+        let rendered = p.to_string();
+        assert_eq!(FaultPlan::parse(&rendered).unwrap(), p);
+        // Canonical form round-trips to itself.
+        assert_eq!(FaultPlan::parse(&rendered).unwrap().to_string(), rendered);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_rules() {
+        assert!(FaultPlan::parse("src=1,nth=2").is_err()); // no fault
+        assert!(FaultPlan::parse("drop,nth=2").is_err()); // no src
+        assert!(FaultPlan::parse("drop,src=1,nth=0").is_err()); // nth 1-based
+        assert!(FaultPlan::parse("drop,src=1,kind=bogus").is_err());
+        assert!(FaultPlan::parse("explode,src=1").is_err());
+        assert!(FaultPlan::parse("").unwrap().rules.is_empty());
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::from_seed(42, 4);
+        let b = FaultPlan::from_seed(42, 4);
+        assert_eq!(a, b);
+        assert!(!a.rules.is_empty() && a.rules.len() <= 3);
+        assert!(a.rules.iter().all(|r| r.src < 4 && r.nth >= 1));
+        // Seeded duplicates only ever target Output frames.
+        for seed in 0..200u64 {
+            for r in &FaultPlan::from_seed(seed, 4).rules {
+                if r.fault == Fault::Duplicate {
+                    assert_eq!(r.kind, Some(MsgKind::Output));
+                }
+                if let Fault::Delay { ms } = r.fault {
+                    assert!(ms <= 50);
+                }
+            }
+        }
+        let c = FaultPlan::from_seed(43, 4);
+        assert_ne!(a, c, "adjacent seeds should give distinct plans");
+    }
+
+    #[test]
+    fn rules_fire_once_on_the_nth_match() {
+        let p = plan("drop,src=0,kind=xhat,nth=2");
+        let mut st = FaultState::new(&p, 0);
+        assert_eq!(st.decide(1, MsgKind::Xhat), None);
+        assert_eq!(st.decide(1, MsgKind::Gather), None); // kind filtered
+        assert_eq!(st.decide(1, MsgKind::Xhat), Some(Fault::Drop));
+        assert_eq!(st.decide(1, MsgKind::Xhat), None); // one-shot
+        // Other ranks are inert under the same plan.
+        let mut st1 = FaultState::new(&p, 1);
+        for _ in 0..8 {
+            assert_eq!(st1.decide(0, MsgKind::Xhat), None);
+        }
+    }
+
+    #[test]
+    fn chaos_endpoint_duplicates_and_drops() {
+        let mut eps = mesh(2);
+        let rx = eps.pop().unwrap();
+        let tx = eps.pop().unwrap();
+        let mut tx =
+            ChaosEndpoint::new(tx, &plan("dup,src=0,nth=1;drop,src=0,nth=3"));
+        let mut rx = rx;
+        tx.send(1, Message::new(MsgKind::Output, 7, 0, vec![1.0])).unwrap();
+        tx.send(1, Message::new(MsgKind::Output, 8, 0, vec![2.0])).unwrap(); // dropped
+        tx.send(1, Message::new(MsgKind::Output, 9, 0, vec![3.0])).unwrap();
+        // Duplicate of the first, then the third; the second never arrives.
+        assert_eq!(rx.recv().unwrap().tag.level, 7);
+        assert_eq!(rx.recv().unwrap().tag.level, 7);
+        assert_eq!(rx.recv().unwrap().tag.level, 9);
+    }
+
+    #[test]
+    fn chaos_endpoint_kill_is_a_typed_error() {
+        let mut eps = mesh(2);
+        let _rx = eps.pop().unwrap();
+        let tx = eps.pop().unwrap();
+        let mut tx = ChaosEndpoint::new(tx, &plan("kill,src=0,nth=2"));
+        tx.send(1, Message::new(MsgKind::Xhat, 0, 0, vec![])).unwrap();
+        let err = tx.send(1, Message::new(MsgKind::Xhat, 1, 0, vec![])).unwrap_err();
+        assert!(matches!(err, TransportError::Closed(_)), "{err}");
+        assert!(err.to_string().contains("chaos"), "{err}");
+    }
+
+    #[test]
+    fn chaos_endpoint_corruption_mutates_payload() {
+        let mut eps = mesh(2);
+        let mut rx = eps.pop().unwrap();
+        let tx = eps.pop().unwrap();
+        let mut tx = ChaosEndpoint::new(tx, &plan("flip=64,src=0,nth=1;trunc=8,src=0,nth=2"));
+        tx.send(1, Message::new(MsgKind::Output, 0, 0, vec![1.0, 2.0])).unwrap();
+        let got = rx.recv().unwrap();
+        assert_eq!(got.data[0], 1.0);
+        assert_ne!(got.data[1], 2.0, "bit 64 lands in the second word");
+        tx.send(1, Message::new(MsgKind::Output, 0, 0, vec![1.0, 2.0])).unwrap();
+        assert_eq!(rx.recv().unwrap().data, vec![1.0], "one word cut off the tail");
+    }
+}

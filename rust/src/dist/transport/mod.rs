@@ -17,6 +17,11 @@
 //! - [`recording`] — a wrapper endpoint stamping an `Instant` on every
 //!   send/recv, so the measured Chrome trace shows actual message traffic
 //!   next to the per-phase compute spans.
+//! - [`chaos`] — a deterministic, seeded fault-injection layer: a
+//!   [`chaos::FaultPlan`] drops, delays, duplicates, truncates or
+//!   bit-flips the Nth frame on a (src, dst, kind) edge, or kills a rank
+//!   after its Kth send — composable over inproc (message level) and the
+//!   socket wire (byte level, below the frame CRC).
 //!
 //! Delivery is reliable and FIFO per (source, destination) pair, but
 //! *unordered across sources* — the [`Mailbox`] gives the runner
@@ -24,6 +29,7 @@
 //! scatter may overtake a peer's x̂ block; the mailbox stashes whichever
 //! arrives early).
 
+pub mod chaos;
 pub mod inproc;
 pub mod recording;
 #[cfg(unix)]
@@ -471,6 +477,17 @@ impl Mailbox {
     /// Number of stashed (received but not yet consumed) messages.
     pub fn stashed(&self) -> usize {
         self.stash.len()
+    }
+
+    /// Discard every stashed message whose tag satisfies `pred`; returns
+    /// how many were dropped. Used by the socket session to clear stale
+    /// duplicates of a completed product (a retransmitted `Output` that
+    /// arrived after its product was fully collected would otherwise sit
+    /// in the stash forever).
+    pub fn purge(&mut self, pred: impl Fn(Tag) -> bool) -> usize {
+        let before = self.stash.len();
+        self.stash.retain(|m| !pred(m.tag));
+        before - self.stash.len()
     }
 }
 

@@ -17,10 +17,17 @@
 //! columns, so column j of a fused product equals column j of any
 //! narrower product containing it.
 //!
-//! Failure policy matches the session's: a transport error poisons the
-//! server — every in-flight and queued request gets the error, later
-//! submissions fail fast, and the dispatcher exits (dropping the session
-//! shuts the workers down).
+//! Failure policy matches the pipe the dispatcher drives (the
+//! [`ProductPipe`] trait): over a raw [`SocketSession`] a transport error
+//! poisons the server — every in-flight and queued request gets the
+//! error, later submissions fail fast, and the dispatcher exits (dropping
+//! the session shuts the workers down). Over a
+//! [`SessionSupervisor`](crate::dist::supervisor::SessionSupervisor)
+//! ([`SessionServer::start_supervised`]) worker crashes are absorbed: the
+//! supervisor rebuilds the crew and replays in-flight products
+//! exactly-once, so requests only fail once the rebuild budget is
+//! exhausted. [`ServerStats`] keeps the request ledger balanced either
+//! way: `submitted == completed + failed` once the pipeline drains.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt::Write as _;
@@ -31,8 +38,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::socket::{read_frame, write_frame, SocketOptions, SocketSession, MAX_WIRE_NV};
+use super::socket::{
+    read_frame, write_frame, SocketOptions, SocketReport, SocketSession, MAX_WIRE_NV,
+};
 use super::{MatrixJob, Message, MsgKind, TransportError};
+use crate::dist::supervisor::{SessionSupervisor, SupervisorOptions};
 use crate::obs;
 use crate::obs::names as obs_names;
 use crate::obs::registry::latency_bounds;
@@ -54,6 +64,41 @@ pub struct ServerOptions {
 impl Default for ServerOptions {
     fn default() -> Self {
         ServerOptions { max_coalesce: 16, pipeline_depth: 2 }
+    }
+}
+
+/// What the dispatcher needs from its product backend: a pipelined
+/// submit/wait pair plus the span flush. Implemented by the raw
+/// [`SocketSession`] (fail-fast on poison) and by
+/// [`SessionSupervisor`](crate::dist::supervisor::SessionSupervisor)
+/// (crash recovery with exactly-once replay), so the same coalescing
+/// dispatcher serves both fault models.
+pub trait ProductPipe: Send + 'static {
+    /// Matrix dimension N.
+    fn n(&self) -> usize;
+    /// Queue one N×nv pipelined product; returns its pid.
+    fn submit(&mut self, x: &[f64], nv: usize) -> Result<u64, TransportError>;
+    /// Collect product `pid` (submission order) into `y`.
+    fn wait(&mut self, pid: u64, y: &mut [f64]) -> Result<SocketReport, TransportError>;
+    /// Merge all processes' recorded spans into one Chrome-format trace.
+    fn collect_spans(&mut self) -> Result<String, TransportError>;
+}
+
+impl ProductPipe for SocketSession {
+    fn n(&self) -> usize {
+        SocketSession::n(self)
+    }
+
+    fn submit(&mut self, x: &[f64], nv: usize) -> Result<u64, TransportError> {
+        SocketSession::submit(self, x, nv)
+    }
+
+    fn wait(&mut self, pid: u64, y: &mut [f64]) -> Result<SocketReport, TransportError> {
+        SocketSession::wait(self, pid, y)
+    }
+
+    fn collect_spans(&mut self) -> Result<String, TransportError> {
+        SocketSession::collect_spans(self)
     }
 }
 
@@ -99,6 +144,15 @@ pub struct ServerStats {
     pub products: u64,
     /// Requests served.
     pub requests: u64,
+    /// Requests accepted into the queue (handles handed out). The ledger
+    /// balances: once the pipeline drains,
+    /// `submitted == completed + failed`.
+    pub submitted: u64,
+    /// Requests whose product was delivered to the caller.
+    pub completed: u64,
+    /// Requests failed with an error (poison, or a supervisor past its
+    /// rebuild budget).
+    pub failed: u64,
     /// Achieved-width histogram: fused nv → number of products.
     pub nv_histogram: BTreeMap<usize, u64>,
     /// Sum over requests of their queue wait (seconds).
@@ -116,6 +170,9 @@ impl Default for ServerStats {
         ServerStats {
             products: 0,
             requests: 0,
+            submitted: 0,
+            completed: 0,
+            failed: 0,
             nv_histogram: BTreeMap::new(),
             sum_queue_wait_s: 0.0,
             sum_measured_s: 0.0,
@@ -142,7 +199,7 @@ impl ServerStats {
         for (w, c) in &self.nv_histogram {
             let _ = write!(nv, " {w}:{c}");
         }
-        format!(
+        let mut line = format!(
             "served {} reqs in {} products | {:.2} reqs/product | queue wait p50 {:.3} ms \
              p99 {:.3} ms | mean measured {:.3} ms | nv{}",
             self.requests,
@@ -152,7 +209,15 @@ impl ServerStats {
             1e3 * self.queue_wait.quantile(0.99),
             mean_measured_ms,
             if nv.is_empty() { " -".to_string() } else { nv }
-        )
+        );
+        if self.failed > 0 {
+            let _ = write!(
+                line,
+                " | FAILED {} of {} submitted",
+                self.failed, self.submitted
+            );
+        }
+        line
     }
 }
 
@@ -206,7 +271,8 @@ pub struct SessionServer {
 }
 
 impl SessionServer {
-    /// Spawn the session's worker ranks and the dispatcher thread.
+    /// Spawn the session's worker ranks and the dispatcher thread
+    /// (fail-fast: a worker crash poisons the server).
     pub fn start(
         job: &MatrixJob,
         p: usize,
@@ -214,11 +280,36 @@ impl SessionServer {
         sopts: ServerOptions,
     ) -> Result<SessionServer, TransportError> {
         let max_nv = sopts.max_coalesce.clamp(1, MAX_WIRE_NV);
-        let depth = sopts.pipeline_depth.max(1);
         // The session's default nv seeds the workers' plan caches; the
         // serving path dispatches variable widths, so seed with the cap
         // (the steady-state width under saturation).
         let session = SocketSession::start(job, p, max_nv, opts)?;
+        SessionServer::start_with_pipe(session, max_nv, &sopts)
+    }
+
+    /// Like [`SessionServer::start`], but the dispatcher drives a
+    /// [`SessionSupervisor`]: worker crashes are reaped, the crew is
+    /// respawned from the job and in-flight fused products are replayed
+    /// exactly-once — requests only observe an error after `max_rebuilds`
+    /// rebuilds have been spent.
+    pub fn start_supervised(
+        job: &MatrixJob,
+        p: usize,
+        opts: SocketOptions,
+        sopts: ServerOptions,
+        sup: SupervisorOptions,
+    ) -> Result<SessionServer, TransportError> {
+        let max_nv = sopts.max_coalesce.clamp(1, MAX_WIRE_NV);
+        let session = SessionSupervisor::start(job, p, max_nv, opts, sup)?;
+        SessionServer::start_with_pipe(session, max_nv, &sopts)
+    }
+
+    fn start_with_pipe<S: ProductPipe>(
+        session: S,
+        max_nv: usize,
+        sopts: &ServerOptions,
+    ) -> Result<SessionServer, TransportError> {
+        let depth = sopts.pipeline_depth.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(ServerQueue {
                 pending: VecDeque::new(),
@@ -285,6 +376,7 @@ impl SessionServer {
                 tx,
             });
         }
+        self.shared.stats.lock().expect("server stats lock").submitted += 1;
         self.shared.cv.notify_one();
         Ok(ProductHandle { rx })
     }
@@ -360,25 +452,32 @@ pub(crate) fn demux_columns(
     y
 }
 
-/// Fail every given request (and poison the queue) with `e`.
+/// Fail every given request (and poison the queue) with `e`, keeping the
+/// [`ServerStats`] ledger balanced.
 fn fail_all(
     e: &TransportError,
     inflight: &mut VecDeque<Batch>,
     shared: &Shared,
 ) {
+    let mut failed = 0u64;
     for b in inflight.drain(..) {
         for r in b.reqs {
             let _ = r.tx.send(Err(e.clone()));
+            failed += 1;
         }
     }
-    let mut q = shared.queue.lock().expect("server queue lock");
-    q.poisoned = Some(e.clone());
-    for r in q.pending.drain(..) {
-        let _ = r.tx.send(Err(e.clone()));
+    {
+        let mut q = shared.queue.lock().expect("server queue lock");
+        q.poisoned = Some(e.clone());
+        for r in q.pending.drain(..) {
+            let _ = r.tx.send(Err(e.clone()));
+            failed += 1;
+        }
     }
+    shared.stats.lock().expect("server stats lock").failed += failed;
 }
 
-fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) {
+fn dispatch_loop<S: ProductPipe>(mut session: S, shared: Arc<Shared>, depth: usize) {
     let n = shared.n;
     let mut inflight: VecDeque<Batch> = VecDeque::new();
     loop {
@@ -476,9 +575,12 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                     })
                 }
                 Err(e) => {
+                    let mut failed = 0u64;
                     for r in reqs {
                         let _ = r.tx.send(Err(e.clone()));
+                        failed += 1;
                     }
+                    shared.stats.lock().expect("server stats lock").failed += failed;
                     fail_all(&e, &mut inflight, &shared);
                     return;
                 }
@@ -504,6 +606,7 @@ fn dispatch_loop(mut session: SocketSession, shared: Arc<Shared>, depth: usize) 
                         let mut st = shared.stats.lock().expect("server stats lock");
                         st.products += 1;
                         st.requests += batch.reqs.len() as u64;
+                        st.completed += batch.reqs.len() as u64;
                         *st.nv_histogram.entry(batch.nv).or_insert(0) += 1;
                         st.sum_measured_s += rep.measured;
                         for r in &batch.reqs {
@@ -677,16 +780,37 @@ fn answer_stats(
     write_frame(stream, 0, &Message::new(MsgKind::Stats, 0, 0, pack_text(&text)))
 }
 
-/// Connect to a [`StatsEndpoint`] and fetch one live snapshot.
+/// Connect to a [`StatsEndpoint`] and fetch one live snapshot, with a
+/// 10 s deadline on the reply.
 pub fn fetch_stats(path: &Path) -> Result<String, TransportError> {
+    fetch_stats_within(path, Duration::from_secs(10))
+}
+
+/// [`fetch_stats`] with an explicit deadline covering both the write of
+/// the request and the read of the reply: a server that accepted the
+/// connection but never answers (hung dispatcher, killed rank) surfaces
+/// as [`TransportError::Timeout`], never as a hang.
+pub fn fetch_stats_within(path: &Path, timeout: Duration) -> Result<String, TransportError> {
     let mut stream = UnixStream::connect(path).map_err(|e| {
         TransportError::Io(format!("connecting stats socket {}: {e}", path.display()))
     })?;
     stream
-        .set_read_timeout(Some(Duration::from_secs(10)))
+        .set_read_timeout(Some(timeout))
         .map_err(|e| TransportError::Io(format!("stats read timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| TransportError::Io(format!("stats write timeout: {e}")))?;
     write_frame(&mut stream, 0, &Message::new(MsgKind::Stats, 0, 0, Vec::new()))?;
-    let (_dst, reply) = read_frame(&mut stream)?;
+    // An expired read deadline surfaces from the frame reader as a typed
+    // `Timeout`; annotate it with the socket and the budget.
+    let (_dst, reply) = read_frame(&mut stream).map_err(|e| match e {
+        TransportError::Timeout(m) => TransportError::Timeout(format!(
+            "stats reply from {} not within {:.1} s ({m})",
+            path.display(),
+            timeout.as_secs_f64()
+        )),
+        other => other,
+    })?;
     if reply.tag.kind != MsgKind::Stats {
         return Err(TransportError::Protocol(format!(
             "stats reply: unexpected {} frame",

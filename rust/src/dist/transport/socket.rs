@@ -84,9 +84,17 @@
 //! coordinator, which tears the session down (killing the remaining
 //! children) instead of hanging — asserted by `tests/transport.rs`.
 //!
-//! Framing is a hand-rolled 24-byte little-endian header (kind, level,
-//! src, dst, payload length) plus a raw f64 payload — the offline image
-//! vendors no serde/bincode; the format plays bincode's role.
+//! Framing is a hand-rolled 32-byte little-endian header (kind, magic +
+//! version, level, src, dst, payload length, payload CRC32, header CRC32)
+//! plus a raw f64 payload — the offline image vendors no serde/bincode;
+//! the format plays bincode's role. The header checksum is verified
+//! *before* the length word is trusted and the length word is bounded by
+//! [`MAX_FRAME_BYTES`] even when the checksum passes, so a corrupt or
+//! adversarial header can never drive an unbounded allocation; a payload
+//! whose CRC mismatches is a typed [`TransportError::Protocol`], never
+//! silent garbage in `y`. Fault injection ([`super::chaos`]) plugs in at
+//! the worker's send path *below* the CRC computation — injected
+//! truncation and bit flips exercise exactly these detection paths.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
@@ -97,6 +105,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+use super::chaos::{Fault, FaultState};
 use super::recording::{CommDir, CommEvent, Recording};
 use super::{Endpoint, Mailbox, MatrixJob, Message, MsgKind, Tag, TransportError};
 use crate::admissibility::MatrixStructure;
@@ -117,6 +126,25 @@ use crate::obs::clock::{
 };
 use crate::obs::names as obs_names;
 
+/// Overrides the default 5 s worker-reap grace period of a dropped
+/// session, in milliseconds (see [`SocketOptions::shutdown_grace`]).
+pub const SHUTDOWN_GRACE_ENV: &str = "H2OPUS_SHUTDOWN_GRACE_MS";
+
+/// Worker-side per-receive deadline in milliseconds: a worker blocked in
+/// a session receive longer than this gives up with a `Timeout` instead
+/// of waiting forever on a dead or silent coordinator. Unset = block
+/// indefinitely (an idle solver session may legitimately park for long
+/// stretches between products).
+pub const RECV_DEADLINE_ENV: &str = "H2OPUS_RECV_DEADLINE_MS";
+
+fn shutdown_grace_from_env() -> Duration {
+    std::env::var(SHUTDOWN_GRACE_ENV)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(5))
+}
+
 /// Options of one socket session.
 #[derive(Clone, Debug)]
 pub struct SocketOptions {
@@ -128,6 +156,11 @@ pub struct SocketOptions {
     pub extra_env: Vec<(String, String)>,
     /// Collect the measured Chrome trace from the workers' stamps.
     pub measured_trace: bool,
+    /// How long a dropped session waits for workers to exit on `Shutdown`
+    /// before killing the stragglers. Defaults to 5 s, overridable via
+    /// [`SHUTDOWN_GRACE_ENV`] — a supervisor that is about to respawn the
+    /// whole crew wants a much tighter bound on reap latency.
+    pub shutdown_grace: Duration,
 }
 
 impl Default for SocketOptions {
@@ -137,6 +170,7 @@ impl Default for SocketOptions {
             timeout: Duration::from_secs(60),
             extra_env: Vec::new(),
             measured_trace: false,
+            shutdown_grace: shutdown_grace_from_env(),
         }
     }
 }
@@ -248,7 +282,43 @@ fn unpack_input_flags(level: u32) -> Result<InputFlags, TransportError> {
 
 // ---------------------------------------------------------------- framing
 
-const HEADER_LEN: usize = 24;
+const HEADER_LEN: usize = 32;
+/// Frame magic ("H2" + format version): the first thing checked on every
+/// read, so a desynchronized stream (e.g. a reader that started mid-frame
+/// after a truncated write) fails as a typed protocol error instead of
+/// interpreting payload bytes as a header.
+const FRAME_MAGIC: [u8; 2] = *b"H2";
+const FRAME_VERSION: u8 = 1;
+/// Hard cap on a frame's payload size (1 GiB). Enforced at decode time
+/// even when the header checksum passes: a corrupt or hostile length word
+/// must never drive an unbounded `Vec` allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// IEEE 802.3 CRC32 (the zlib/ethernet polynomial), table-driven and
+/// built at compile time — the offline image vendors no crc crate.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 fn io_err(e: std::io::Error, what: &str) -> TransportError {
     match e.kind() {
@@ -262,45 +332,91 @@ fn io_err(e: std::io::Error, what: &str) -> TransportError {
     }
 }
 
-/// Write one frame: header + raw little-endian f64 payload. `pub(crate)`
-/// so the server's stats control socket reuses the session framing.
+/// Encode one frame (header + raw little-endian f64 payload) into a
+/// contiguous byte buffer. Layout: kind (1), magic "H2" (2), version (1),
+/// level (4), src (4), dst (4), payload length in f64s (8), payload CRC32
+/// (4), then a CRC32 over header bytes 0..28 (4). Separated from the
+/// write so the chaos layer can corrupt encoded bytes *below* the
+/// checksums and unit tests can hand-craft bad frames.
+pub(crate) fn encode_frame(dst: usize, msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + msg.data.len() * 8);
+    buf.resize(HEADER_LEN, 0);
+    buf[0] = msg.tag.kind.to_u8();
+    buf[1..3].copy_from_slice(&FRAME_MAGIC);
+    buf[3] = FRAME_VERSION;
+    buf[4..8].copy_from_slice(&msg.tag.level.to_le_bytes());
+    buf[8..12].copy_from_slice(&msg.tag.src.to_le_bytes());
+    buf[12..16].copy_from_slice(&(dst as u32).to_le_bytes());
+    buf[16..24].copy_from_slice(&(msg.data.len() as u64).to_le_bytes());
+    for v in &msg.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let payload_crc = crc32(&buf[HEADER_LEN..]);
+    buf[24..28].copy_from_slice(&payload_crc.to_le_bytes());
+    let header_crc = crc32(&buf[..28]);
+    buf[28..32].copy_from_slice(&header_crc.to_le_bytes());
+    buf
+}
+
+/// Write one frame. `pub(crate)` so the server's stats control socket
+/// reuses the session framing.
 pub(crate) fn write_frame<W: Write>(
     w: &mut W,
     dst: usize,
     msg: &Message,
 ) -> Result<(), TransportError> {
-    let mut header = [0u8; HEADER_LEN];
-    header[0] = msg.tag.kind.to_u8();
-    header[4..8].copy_from_slice(&msg.tag.level.to_le_bytes());
-    header[8..12].copy_from_slice(&msg.tag.src.to_le_bytes());
-    header[12..16].copy_from_slice(&(dst as u32).to_le_bytes());
-    header[16..24].copy_from_slice(&(msg.data.len() as u64).to_le_bytes());
-    w.write_all(&header).map_err(|e| io_err(e, "write header"))?;
-    let mut payload = Vec::with_capacity(msg.data.len() * 8);
-    for v in &msg.data {
-        payload.extend_from_slice(&v.to_le_bytes());
-    }
-    w.write_all(&payload).map_err(|e| io_err(e, "write payload"))?;
+    let buf = encode_frame(dst, msg);
+    w.write_all(&buf).map_err(|e| io_err(e, "write frame"))?;
     w.flush().map_err(|e| io_err(e, "flush"))?;
     Ok(())
 }
 
-/// Read one frame; returns (destination endpoint, message).
+/// Read one frame; returns (destination endpoint, message). Validation
+/// order matters: magic/version first (desync detection), then the header
+/// checksum (so the length word is trusted only after it verifies), then
+/// the [`MAX_FRAME_BYTES`] bound (so even a checksum-valid header cannot
+/// demand an unbounded allocation), then the payload checksum.
 pub(crate) fn read_frame<R: Read>(r: &mut R) -> Result<(usize, Message), TransportError> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header).map_err(|e| io_err(e, "read header"))?;
+    if header[1..3] != FRAME_MAGIC {
+        return Err(TransportError::Protocol(format!(
+            "bad frame magic {:02x}{:02x} (desynchronized or corrupt stream)",
+            header[1], header[2]
+        )));
+    }
+    if header[3] != FRAME_VERSION {
+        return Err(TransportError::Protocol(format!(
+            "frame format version {} (this build speaks {FRAME_VERSION})",
+            header[3]
+        )));
+    }
+    let stored_header_crc = u32::from_le_bytes(header[28..32].try_into().expect("4 bytes"));
+    if crc32(&header[..28]) != stored_header_crc {
+        return Err(TransportError::Protocol(
+            "frame header checksum mismatch (corrupt header)".into(),
+        ));
+    }
     let kind = MsgKind::from_u8(header[0])
         .ok_or_else(|| TransportError::Protocol(format!("unknown message kind {}", header[0])))?;
     let level = u32::from_le_bytes(header[4..8].try_into().expect("4 bytes"));
     let src = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
     let dst = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes")) as usize;
     let len = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes")) as usize;
-    // 1 GiB payload cap: anything larger is a corrupt frame, not data.
-    if len > (1usize << 27) {
-        return Err(TransportError::Protocol(format!("frame claims {len} f64s")));
+    if len.saturating_mul(8) > MAX_FRAME_BYTES {
+        return Err(TransportError::Protocol(format!(
+            "frame claims {len} f64s, over the {MAX_FRAME_BYTES}-byte cap"
+        )));
     }
+    let stored_payload_crc = u32::from_le_bytes(header[24..28].try_into().expect("4 bytes"));
     let mut payload = vec![0u8; len * 8];
     r.read_exact(&mut payload).map_err(|e| io_err(e, "read payload"))?;
+    if crc32(&payload) != stored_payload_crc {
+        return Err(TransportError::Protocol(format!(
+            "frame payload checksum mismatch ({} from {src}, {len} f64s)",
+            kind.name()
+        )));
+    }
     let data = payload
         .chunks_exact(8)
         .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
@@ -351,12 +467,20 @@ pub struct WorkerEndpoint {
     p: usize,
     stream: UnixStream,
     prestash: VecDeque<Message>,
+    /// Armed fault plan (chaos testing): applied to outgoing frames at
+    /// the byte level, below the CRC computation.
+    chaos: Option<FaultState>,
+    /// Per-receive deadline ([`RECV_DEADLINE_ENV`]); `None` blocks.
+    recv_deadline: Option<Duration>,
 }
 
 impl WorkerEndpoint {
     /// Connect to the coordinator's socket and introduce ourselves.
+    /// Retries with exponential backoff (the coordinator may still be
+    /// binding) under a 10 s deadline.
     pub fn connect(path: &Path, rank: usize, p: usize) -> Result<Self, TransportError> {
         let deadline = Instant::now() + Duration::from_secs(10);
+        let mut wait = Duration::from_millis(1);
         let stream = loop {
             match UnixStream::connect(path) {
                 Ok(s) => break s,
@@ -364,15 +488,91 @@ impl WorkerEndpoint {
                     if Instant::now() > deadline {
                         return Err(io_err(e, "connect"));
                     }
-                    std::thread::sleep(Duration::from_millis(5));
+                    std::thread::sleep(wait);
+                    wait = (wait * 2).min(Duration::from_millis(50));
                 }
             }
         };
-        let mut ep = WorkerEndpoint { rank, p, stream, prestash: VecDeque::new() };
+        let recv_deadline = std::env::var(RECV_DEADLINE_ENV)
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis);
+        let mut ep = WorkerEndpoint {
+            rank,
+            p,
+            stream,
+            prestash: VecDeque::new(),
+            chaos: None,
+            recv_deadline,
+        };
         let hello = Message::new(MsgKind::Hello, 0, rank, Vec::new());
         write_frame(&mut ep.stream, p, &hello)?;
+        // Test hook: die between Hello and the clock-sync pings, so the
+        // coordinator's handshake (satellite: honor the session timeout,
+        // never hang mid-ClockSync) can be asserted.
+        if let Ok(v) = std::env::var("H2OPUS_TEST_CRASH_RANK") {
+            if v.strip_suffix("@handshake").and_then(|r| r.parse::<usize>().ok()) == Some(rank)
+            {
+                std::process::exit(3);
+            }
+        }
         ep.answer_clock_sync()?;
         Ok(ep)
+    }
+
+    /// Arm a fault plan on this endpoint's send path (chaos runs only;
+    /// called after the handshake so the plan's frame counts start at the
+    /// first session frame).
+    pub fn arm_chaos(&mut self, state: Option<FaultState>) {
+        self.chaos = state;
+    }
+
+    /// Receive one frame, honoring the per-receive deadline with an
+    /// exponential-backoff re-listen: short read timeouts that double up
+    /// to the deadline, so a worker sleeping between products wakes
+    /// cheaply, while a genuinely silent coordinator surfaces a
+    /// `Timeout`. A timeout that interrupts a *partially read* frame is
+    /// fatal (the stream cannot be resynchronized), not retried.
+    fn recv_frame(&mut self) -> Result<Message, TransportError> {
+        let Some(deadline) = self.recv_deadline else {
+            let (_dst, msg) = read_frame(&mut self.stream)?;
+            return Ok(msg);
+        };
+        let start = Instant::now();
+        let mut wait = Duration::from_millis(20).min(deadline);
+        loop {
+            self.stream
+                .set_read_timeout(Some(wait.max(Duration::from_millis(1))))
+                .map_err(|e| io_err(e, "arm recv deadline"))?;
+            let mut counting = CountingReader { inner: &mut self.stream, consumed: 0 };
+            let res = read_frame(&mut counting);
+            let consumed = counting.consumed;
+            match res {
+                Ok((_dst, msg)) => {
+                    self.stream
+                        .set_read_timeout(None)
+                        .map_err(|e| io_err(e, "clear recv deadline"))?;
+                    return Ok(msg);
+                }
+                Err(TransportError::Timeout(_)) if consumed == 0 => {
+                    let elapsed = start.elapsed();
+                    if elapsed >= deadline {
+                        return Err(TransportError::Timeout(format!(
+                            "rank {}: no frame within the {deadline:?} receive deadline",
+                            self.rank
+                        )));
+                    }
+                    wait = (wait * 2).min(deadline - elapsed);
+                }
+                Err(TransportError::Timeout(t)) => {
+                    return Err(TransportError::Timeout(format!(
+                        "rank {}: peer stalled mid-frame after {consumed} bytes ({t})",
+                        self.rank
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Answer the coordinator's clock-alignment pings (it runs them right
@@ -406,27 +606,74 @@ impl WorkerEndpoint {
     }
 }
 
+/// Counts bytes actually consumed from the inner reader, so a read
+/// timeout can distinguish "no frame started" (safe to re-listen) from
+/// "frame interrupted mid-read" (stream desynchronized, fatal).
+struct CountingReader<'a, R: Read> {
+    inner: &'a mut R,
+    consumed: usize,
+}
+
+impl<R: Read> Read for CountingReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.consumed += n;
+        Ok(n)
+    }
+}
+
 impl Endpoint for WorkerEndpoint {
     fn id(&self) -> usize {
         self.rank
     }
 
     fn send(&mut self, dst: usize, msg: Message) -> Result<(), TransportError> {
-        write_frame(&mut self.stream, dst, &msg)
+        let fault = self.chaos.as_mut().and_then(|c| c.decide(dst, msg.tag.kind));
+        let Some(fault) = fault else {
+            return write_frame(&mut self.stream, dst, &msg);
+        };
+        // Wire-level injection: corruption faults mutate the *encoded*
+        // bytes, below the CRCs, so they exercise the receiver's checksum
+        // detection instead of being re-checksummed away.
+        match fault {
+            Fault::Drop => Ok(()),
+            Fault::Delay { ms } => {
+                std::thread::sleep(Duration::from_millis(ms));
+                write_frame(&mut self.stream, dst, &msg)
+            }
+            Fault::Duplicate => {
+                write_frame(&mut self.stream, dst, &msg)?;
+                write_frame(&mut self.stream, dst, &msg)
+            }
+            Fault::Truncate { bytes } => {
+                let mut buf = encode_frame(dst, &msg);
+                buf.truncate(buf.len().saturating_sub(bytes.max(1)));
+                self.stream.write_all(&buf).map_err(|e| io_err(e, "write frame"))?;
+                self.stream.flush().map_err(|e| io_err(e, "flush"))
+            }
+            Fault::BitFlip { bit } => {
+                let mut buf = encode_frame(dst, &msg);
+                let nbits = (buf.len() * 8) as u64;
+                let b = (bit % nbits) as usize;
+                buf[b / 8] ^= 1 << (b % 8);
+                self.stream.write_all(&buf).map_err(|e| io_err(e, "write frame"))?;
+                self.stream.flush().map_err(|e| io_err(e, "flush"))
+            }
+            Fault::Kill => std::process::exit(3),
+        }
     }
 
     fn recv(&mut self) -> Result<Message, TransportError> {
         if let Some(m) = self.prestash.pop_front() {
             return Ok(m);
         }
-        let (_dst, msg) = read_frame(&mut self.stream)?;
-        Ok(msg)
+        self.recv_frame()
     }
 
     fn barrier(&mut self) -> Result<(), TransportError> {
         self.send(self.p, Message::new(MsgKind::Barrier, 0, self.rank, Vec::new()))?;
         loop {
-            let (_dst, msg) = read_frame(&mut self.stream)?;
+            let msg = self.recv_frame()?;
             if msg.tag.kind == MsgKind::Barrier {
                 return Ok(());
             }
@@ -581,6 +828,10 @@ pub fn run_worker(
     let backend = crate::backend::native::NativeBackend;
 
     let mut ep = WorkerEndpoint::connect(connect, rank, p)?;
+    // Chaos: arm this rank's share of the session fault plan
+    // (H2OPUS_CHAOS_PLAN / H2OPUS_CHAOS_SEED) on the send path. Armed
+    // after the handshake, so plans count session frames only.
+    ep.arm_chaos(FaultState::from_env(rank, p));
 
     // Test hook: simulate a rank crash right after the handshake, so the
     // coordinator's error propagation (not-a-hang) can be asserted.
@@ -618,7 +869,17 @@ pub fn run_worker(
                 || (t.kind == MsgKind::Truncate && t.level == COMPRESS_START_LEVEL)
         }) {
             Ok(m) => m,
-            Err(TransportError::Closed(_)) => return Ok(()),
+            Err(TransportError::Closed(_)) => {
+                // Test hook: refuse to exit on Shutdown, so the
+                // coordinator's bounded reap grace
+                // (H2OPUS_SHUTDOWN_GRACE_MS) can be asserted against a
+                // genuinely stalled worker.
+                if std::env::var("H2OPUS_TEST_STALL_ON_SHUTDOWN").is_ok_and(|v| !v.is_empty())
+                {
+                    std::thread::sleep(Duration::from_secs(120));
+                }
+                return Ok(());
+            }
             Err(e) => return Err(e),
         };
         if input.tag.kind == MsgKind::Flush {
@@ -958,10 +1219,15 @@ impl SocketSession {
         let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
         let mut clock_offsets_ns = vec![0i64; p];
         let mut accepted = 0usize;
+        let mut accept_wait = Duration::from_millis(1);
         while accepted < p {
             match listener.accept() {
                 Ok((mut s, _addr)) => {
                     s.set_nonblocking(false).map_err(|e| io_err(e, "stream blocking"))?;
+                    // The session deadline covers the whole handshake —
+                    // including every clock-sync read — so a rank that
+                    // dies mid-ClockSync surfaces as a typed
+                    // Closed/Timeout here, never a coordinator hang.
                     s.set_read_timeout(Some(opts.timeout))
                         .map_err(|e| io_err(e, "stream timeout"))?;
                     let (_dst, hello) = read_frame(&mut s)?;
@@ -982,6 +1248,7 @@ impl SocketSession {
                     s.set_read_timeout(None).map_err(|e| io_err(e, "clear timeout"))?;
                     streams[r] = Some(s);
                     accepted += 1;
+                    accept_wait = Duration::from_millis(1);
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     for (r, child) in &mut guard.children {
@@ -999,7 +1266,11 @@ impl SocketSession {
                             opts.timeout
                         )));
                     }
-                    std::thread::sleep(Duration::from_millis(2));
+                    // Exponential-backoff re-listen: tight while workers
+                    // are actively connecting, cheap while waiting out a
+                    // slow spawn.
+                    std::thread::sleep(accept_wait);
+                    accept_wait = (accept_wait * 2).min(Duration::from_millis(16));
                 }
                 Err(e) => return Err(io_err(e, "accept")),
             }
@@ -1060,9 +1331,18 @@ impl SocketSession {
                             Err(e) => {
                                 // EOF after a clean session is consumed by
                                 // nobody; during the session it propagates.
-                                let _ = to_master.send(Err(TransportError::Closed(format!(
-                                    "worker {w}: {e}"
-                                ))));
+                                // The variant is preserved: a checksum or
+                                // bounds violation stays a typed Protocol
+                                // error at the coordinator.
+                                let msg = format!("worker {w}: {e}");
+                                let _ = to_master.send(Err(match e {
+                                    TransportError::Closed(_) => TransportError::Closed(msg),
+                                    TransportError::Io(_) => TransportError::Io(msg),
+                                    TransportError::Protocol(_) => {
+                                        TransportError::Protocol(msg)
+                                    }
+                                    TransportError::Timeout(_) => TransportError::Timeout(msg),
+                                }));
                                 break;
                             }
                         }
@@ -1544,16 +1824,26 @@ impl SocketSession {
         // measured clock stops at the last.
         let collect_span = obs::span_arg(obs_names::COLLECT_OUTPUT, u64::from(wire));
         let mut got_output = vec![false; p];
-        for _ in 0..p {
+        let mut dup_frames = 0u64;
+        let mut filled = 0usize;
+        while filled < p {
             let msg = mb
                 .recv_where(hub, |t| t.kind == MsgKind::Output && t.level == wire)?;
             let r = msg.tag.src as usize;
-            if r >= p || got_output[r] {
+            if r >= p {
                 return Err(TransportError::Protocol(format!(
                     "unexpected output from {r} for product {pid}"
                 )));
             }
+            if got_output[r] {
+                // Idempotent delivery: a duplicated/retransmitted Output
+                // for the same (rank, product) is dropped — first write
+                // wins — instead of corrupting the FIFO pid order.
+                dup_frames += 1;
+                continue;
+            }
             got_output[r] = true;
+            filled += 1;
             let leaf_range = &io[r].leaf_range;
             let base_row = sm_top.tree.node(depth, leaf_range.start).start;
             let end_row = if leaf_range.end == (1usize << depth) {
@@ -1573,10 +1863,13 @@ impl SocketSession {
         drop(collect_span);
         let measured = t0.elapsed().as_secs_f64();
 
-        // Per-rank counters and trace stamps.
+        // Per-rank counters and trace stamps (duplicates dropped like
+        // Output frames — first delivery wins).
         let mut rank_metrics: Vec<Metrics> = (0..p).map(|_| Metrics::new()).collect();
         let mut per_rank = vec![0.0; p];
-        for _ in 0..p {
+        let mut got_metrics = vec![false; p];
+        let mut metrics_seen = 0usize;
+        while metrics_seen < p {
             let msg = mb
                 .recv_where(hub, |t| t.kind == MsgKind::Metrics && t.level == wire)?;
             let r = msg.tag.src as usize;
@@ -1585,6 +1878,12 @@ impl SocketSession {
                     "metrics from unknown rank {r}"
                 )));
             }
+            if got_metrics[r] {
+                dup_frames += 1;
+                continue;
+            }
+            got_metrics[r] = true;
+            metrics_seen += 1;
             let (m, elapsed) = metrics_from_payload(&msg.data)?;
             rank_metrics[r] = m;
             per_rank[r] = elapsed;
@@ -1597,10 +1896,14 @@ impl SocketSession {
         work_since_flush[p].merge(&master_metrics);
         let measured_trace_json = if opts.measured_trace {
             let mut parts: Vec<(usize, RankTrace, Vec<CommEvent>)> = Vec::new();
-            for _ in 0..p {
+            while parts.len() < p {
                 let msg = mb
                     .recv_where(hub, |t| t.kind == MsgKind::Trace && t.level == wire)?;
                 let r = msg.tag.src as usize;
+                if parts.iter().any(|(pr, _, _)| *pr == r) {
+                    dup_frames += 1;
+                    continue;
+                }
                 let (tr, comm) = trace_from_payload(&msg.data, r)?;
                 parts.push((r, tr, comm));
             }
@@ -1611,6 +1914,15 @@ impl SocketSession {
             None
         };
 
+        // Late duplicates of *this* product that were stashed while a
+        // later frame kind was being collected would sit in the mailbox
+        // forever (no future predicate matches a completed wire pid) —
+        // sweep them now.
+        dup_frames += mb.purge(|t| {
+            matches!(t.kind, MsgKind::Output | MsgKind::Metrics | MsgKind::Trace)
+                && t.level == wire
+        }) as u64;
+
         let mut metrics = Metrics::merge_all(rank_metrics.iter());
         metrics.merge(&master_metrics);
         let coalesced_nv = metrics.coalesced_nv;
@@ -1620,6 +1932,9 @@ impl SocketSession {
         let registry = obs::Registry::global();
         registry.absorb_metrics(&metrics);
         registry.counter("h2opus_session_products_total").inc();
+        if dup_frames > 0 {
+            registry.counter("h2opus_wire_dup_frames_total").add(dup_frames);
+        }
 
         Ok(SocketReport {
             measured,
@@ -1645,9 +1960,11 @@ impl Drop for SocketSession {
         }
         // A stalled worker would never read the Shutdown (and the joins
         // below would block on its reader thread forever), so grant a
-        // short grace period and then kill stragglers — only after the
-        // children are gone is joining the router guaranteed to finish.
-        let deadline = Instant::now() + Duration::from_secs(5);
+        // bounded grace period ([`SocketOptions::shutdown_grace`],
+        // overridable via H2OPUS_SHUTDOWN_GRACE_MS) and then kill
+        // stragglers — only after the children are gone is joining the
+        // router guaranteed to finish.
+        let deadline = Instant::now() + self.opts.shutdown_grace;
         loop {
             let all_exited = self
                 .guard
@@ -1687,4 +2004,95 @@ pub fn socket_hgemv(
 ) -> Result<SocketReport, TransportError> {
     let mut session = SocketSession::start(job, p, nv, opts.clone())?;
     session.hgemv(x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame(kind: MsgKind, level: usize, src: usize, data: Vec<f64>) -> Vec<u8> {
+        encode_frame(7, &Message::new(kind, level, src, data))
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The IEEE 802.3 check values every zlib implementation agrees on.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let buf = frame(MsgKind::Output, 42, 3, vec![1.5, -2.25, f64::MIN_POSITIVE]);
+        let (dst, msg) = read_frame(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(dst, 7);
+        assert_eq!(msg.tag.kind, MsgKind::Output);
+        assert_eq!(msg.tag.level, 42);
+        assert_eq!(msg.tag.src, 3);
+        assert_eq!(msg.data, vec![1.5, -2.25, f64::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn oversized_length_word_is_bounded_not_allocated() {
+        // Hand-crafted hostile frame: a *checksum-valid* header claiming
+        // an absurd payload length. The MAX_FRAME_BYTES bound must reject
+        // it before any allocation happens.
+        let mut buf = frame(MsgKind::Output, 0, 1, vec![1.0]);
+        buf[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        let fixed_crc = crc32(&buf[..28]);
+        buf[28..32].copy_from_slice(&fixed_crc.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_header_is_a_typed_protocol_error() {
+        // Flip a header byte without fixing the CRC: the length word can
+        // no longer be trusted, so the header checksum must catch it.
+        let mut buf = frame(MsgKind::Output, 5, 1, vec![1.0, 2.0]);
+        buf[17] ^= 0x40;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("header checksum"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_is_a_typed_protocol_error() {
+        let mut buf = frame(MsgKind::Output, 5, 1, vec![1.0, 2.0]);
+        let last = buf.len() - 3;
+        buf[last] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("payload checksum"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_detected_before_anything_else() {
+        // A reader that lands mid-stream sees payload bytes as a header;
+        // the magic check names the desync instead of trusting garbage.
+        let mut buf = frame(MsgKind::Output, 5, 1, vec![1.0]);
+        buf[1] = 0x00;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_closed_not_a_hang() {
+        let buf = frame(MsgKind::Output, 5, 1, vec![1.0, 2.0]);
+        let cut = buf.len() - 9;
+        let err = read_frame(&mut Cursor::new(&buf[..cut])).unwrap_err();
+        assert!(matches!(err, TransportError::Closed(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_with_valid_checksums_is_rejected() {
+        let mut buf = frame(MsgKind::Output, 0, 1, Vec::new());
+        buf[0] = 99;
+        let fixed_crc = crc32(&buf[..28]);
+        buf[28..32].copy_from_slice(&fixed_crc.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("unknown message kind"), "{err}");
+    }
 }

@@ -514,7 +514,17 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         h2opus::obs::set_enabled(true);
     }
     let job = job_from(flags);
-    let server = match SessionServer::start(&job, ranks, SocketOptions::default(), sopts) {
+    // --supervised: worker crashes are reaped and the crew respawned with
+    // in-flight requests replayed, instead of poisoning the server.
+    let started = if flags.contains_key("supervised") {
+        let sup = h2opus::dist::supervisor::SupervisorOptions {
+            max_rebuilds: get(flags, "max-rebuilds", 2),
+        };
+        SessionServer::start_supervised(&job, ranks, SocketOptions::default(), sopts, sup)
+    } else {
+        SessionServer::start(&job, ranks, SocketOptions::default(), sopts)
+    };
+    let server = match started {
         Ok(s) => s,
         Err(e) => {
             eprintln!("failed to start the serving session: {e}");
@@ -537,14 +547,26 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     let t0 = std::time::Instant::now();
     while t0.elapsed().as_secs_f64() < duration {
         if selfload > 0 {
-            let handles: Vec<_> = (0..selfload)
-                .map(|_| {
-                    let x = rng.normal_vec(n);
-                    server.submit(&x).expect("submitting self-load request")
-                })
-                .collect();
+            let mut handles = Vec::with_capacity(selfload);
+            let mut dead = None;
+            for _ in 0..selfload {
+                let x = rng.normal_vec(n);
+                match server.submit(&x) {
+                    Ok(h) => handles.push(h),
+                    Err(e) => {
+                        dead = Some(e);
+                        break;
+                    }
+                }
+            }
             for h in handles {
-                h.wait().expect("waiting for self-load request");
+                if let Err(e) = h.wait() {
+                    dead = Some(e);
+                }
+            }
+            if let Some(e) = dead {
+                eprintln!("serving session failed: {e}");
+                break;
             }
         } else {
             std::thread::sleep(std::time::Duration::from_millis(50));
@@ -573,10 +595,11 @@ fn cmd_serve(_flags: &HashMap<String, String>) {
 /// it (`--raw` dumps the Prometheus-style exposition verbatim).
 #[cfg(unix)]
 fn cmd_stats(flags: &HashMap<String, String>) {
-    use h2opus::dist::transport::server::fetch_stats;
+    use h2opus::dist::transport::server::fetch_stats_within;
     let path =
         flags.get("connect").cloned().unwrap_or_else(|| "/tmp/h2opus-stats.sock".into());
-    let text = match fetch_stats(std::path::Path::new(&path)) {
+    let timeout = std::time::Duration::from_secs_f64(get(flags, "timeout", 10.0));
+    let text = match fetch_stats_within(std::path::Path::new(&path), timeout) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("stats fetch from {path} failed: {e}");
@@ -673,6 +696,15 @@ fn main() {
         h2opus::backend::set_backend_threads(t);
         std::env::set_var("H2OPUS_BACKEND_THREADS", t.to_string());
     }
+    // Deterministic fault injection: --chaos-seed S derives a FaultPlan
+    // per worker rank, --chaos-plan overrides it with an explicit rule
+    // string. Set as env so spawned `h2opus worker` ranks inherit it.
+    if let Some(seed) = flags.get("chaos-seed") {
+        std::env::set_var("H2OPUS_CHAOS_SEED", seed);
+    }
+    if let Some(plan) = flags.get("chaos-plan") {
+        std::env::set_var("H2OPUS_CHAOS_PLAN", plan);
+    }
     match cmd {
         "matvec" => cmd_matvec(&flags),
         "compress" => cmd_compress(&flags),
@@ -694,8 +726,10 @@ fn main() {
             println!("              --obs-trace F (merged cross-process span trace; socket: product + compress + product)");
             println!("              --kernel exp|fractional --beta B");
             println!("solve flags:  --transport inproc|socket (socket = persistent sharded worker session)");
+            println!("              --chaos-seed S | --chaos-plan 'kill,src=1,nth=4' (deterministic fault injection)");
             println!("serve flags:  --max-coalesce NV --pipeline D --duration S --selfload R --stats-sock PATH");
-            println!("stats flags:  --connect PATH --raw");
+            println!("              --supervised --max-rebuilds K (respawn crashed crews, replay in-flight requests)");
+            println!("stats flags:  --connect PATH --raw --timeout S");
             println!("analyze:      h2opus analyze <trace.json> | --run [matrix flags] [--save-trace F]");
             println!("              --json --top N --out report.json --assert-overlap MIN");
             println!("              --assert-no-regression --band B --trajectory PATH (bench regression gate)");

@@ -111,6 +111,11 @@ name_table! {
     STEP_TOPRES     => "cmp top-res bcast",     "comm", ArgRole::Level;
     STEP_PV         => "cmp pv halo",           "comm", ArgRole::Level;
     STEP_STATS      => "cmp stats ack",         "comm", ArgRole::Level;
+    // Supervisor recovery lifecycle: a full session rebuild after a
+    // poison, and each exactly-once product replay inside it — so MTTR is
+    // visible in merged traces and `h2opus analyze`.
+    RECOVERY        => "session recovery",      "server", ArgRole::None;
+    REPLAY          => "replay product",        "server", ArgRole::Pid;
 }
 
 static UNKNOWN: NameInfo = NameInfo { label: "unknown", cat: "lowprio", arg: ArgRole::None };
@@ -125,7 +130,9 @@ pub fn info(id: NameId) -> &'static NameInfo {
 /// constant of `dist::compress`).
 pub fn comp_step(step: u32) -> NameId {
     let idx = STEP_RC as u32 + step.saturating_sub(1);
-    if step == 0 || idx >= NAME_COUNT as u32 {
+    // Bounded by the last STEP_* entry, not NAME_COUNT: names appended
+    // after the step block must not become reachable through step ids.
+    if step == 0 || idx > STEP_STATS as u32 {
         NAME_COUNT // out of range -> renders as "unknown"
     } else {
         idx as NameId

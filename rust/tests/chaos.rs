@@ -1,0 +1,363 @@
+//! Fault-injection (chaos) suite: deterministic `FaultPlan`s drive
+//! worker-side drops, duplicates, corruption, delays and kills, and the
+//! robustness layers must hold the line —
+//!
+//! - corrupt frames surface as *typed* `Protocol` errors (CRC framing),
+//!   never as silent garbage or hangs;
+//! - duplicated frames are absorbed by the idempotent collect path;
+//! - a [`SessionSupervisor`] reaps the dead crew, respawns it from the
+//!   recorded job and replays in-flight products exactly-once, so every
+//!   recovered product is **bitwise identical** to the serial reference;
+//! - the request-coalescing server keeps its ledger balanced
+//!   (`submitted == completed + failed`) whatever the fault;
+//! - stalls are bounded: shutdown reaps within the configured grace,
+//!   handshake crashes and silent stats sockets surface errors promptly.
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use h2opus::backend::native::NativeBackend;
+use h2opus::dist::supervisor::{SessionSupervisor, SupervisorOptions};
+use h2opus::dist::transport::chaos::{FaultPlan, CHAOS_PLAN_ENV};
+use h2opus::dist::transport::server::{fetch_stats_within, ServerOptions, SessionServer};
+use h2opus::dist::transport::socket::{SocketOptions, SocketSession};
+use h2opus::dist::transport::{JobKind, MatrixJob, TransportError};
+use h2opus::matvec::{hgemv, HgemvPlan, HgemvWorkspace};
+use h2opus::metrics::Metrics;
+use h2opus::util::Prng;
+
+/// The conformance matrix: N = 256, depth 4 (same as tests/serving.rs).
+fn conformance_job() -> MatrixJob {
+    MatrixJob {
+        dim: 2,
+        n_side: 16,
+        leaf_size: 16,
+        eta: 0.9,
+        cheb_grid: 3,
+        corr_len: 0.1,
+        kind: JobKind::Exponential,
+    }
+}
+
+fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
+    let n = a.n();
+    let plan = HgemvPlan::new(a, nv);
+    let mut ws = HgemvWorkspace::new(a, nv);
+    let mut metrics = Metrics::new();
+    let mut y = vec![0.0; n * nv];
+    hgemv(a, &NativeBackend, &plan, x, &mut y, &mut ws, &mut metrics);
+    y
+}
+
+/// Worker options tuned for fault tests: a short recv deadline so
+/// dropped frames surface as `Timeout` in seconds (not the default
+/// minute), a tight shutdown grace so reaping a dead crew is fast, and
+/// the chaos plan armed on the workers via their inherited environment.
+fn chaos_opts(plan: &str) -> SocketOptions {
+    let mut extra_env = Vec::new();
+    if !plan.is_empty() {
+        extra_env.push((CHAOS_PLAN_ENV.to_string(), plan.to_string()));
+    }
+    SocketOptions {
+        worker_exe: PathBuf::from(env!("CARGO_BIN_EXE_h2opus")),
+        timeout: Duration::from_secs(6),
+        extra_env,
+        shutdown_grace: Duration::from_millis(400),
+        ..SocketOptions::default()
+    }
+}
+
+/// A worker killed by the plan mid-pipeline is reaped; the supervisor
+/// respawns the crew and replays the in-flight product — every one of
+/// the six products is bitwise identical to the serial reference, and
+/// the recovery is visible in [`RecoveryStats`].
+#[test]
+fn supervisor_recovers_from_a_worker_kill_bitwise() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        chaos_opts("kill,src=1,nth=4"),
+        SupervisorOptions { max_rebuilds: 2 },
+    )
+    .expect("supervised start");
+    assert_eq!(sup.n(), n);
+    let mut rng = Prng::new(4242);
+    for k in 0..6 {
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        sup.hgemv(&x, &mut y).expect("supervised product");
+        assert_eq!(y, serial_product(&a, &x, 1), "product {k} not bitwise equal");
+    }
+    let st = sup.recovery_stats();
+    assert!(st.recoveries >= 1, "the kill must have forced a recovery: {st:?}");
+    assert!(st.last_recovery_s > 0.0 && st.total_recovery_s >= st.last_recovery_s, "{st:?}");
+    assert!(!sup.is_degraded(), "budget of 2 must absorb one kill");
+    assert_eq!(sup.in_flight(), 0);
+}
+
+/// In-flight pipelined products survive the crash: three products are
+/// submitted before any is collected, the kill lands mid-pipeline, and
+/// the replay delivers all three bitwise-correct, exactly once each.
+#[test]
+fn supervisor_replays_in_flight_products_exactly_once() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        chaos_opts("kill,src=0,nth=3"),
+        SupervisorOptions { max_rebuilds: 2 },
+    )
+    .expect("supervised start");
+    let mut rng = Prng::new(515);
+    let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(n)).collect();
+    let pids: Vec<u64> =
+        xs.iter().map(|x| sup.submit(x, 1).expect("supervised submit")).collect();
+    assert_eq!(sup.in_flight(), 3);
+    for (k, (pid, x)) in pids.iter().zip(&xs).enumerate() {
+        let mut y = vec![0.0; n];
+        sup.wait(*pid, &mut y).expect("supervised wait");
+        assert_eq!(y, serial_product(&a, x, 1), "replayed product {k} not bitwise equal");
+    }
+    let st = sup.recovery_stats();
+    assert!(st.recoveries >= 1, "{st:?}");
+    assert!(st.replayed_products >= 1, "replay must be recorded: {st:?}");
+}
+
+/// Past the rebuild budget the supervisor degrades to fail-fast: the
+/// triggering call reports the exhausted budget and every later call
+/// returns the same typed error immediately instead of respawning.
+#[test]
+fn supervisor_degrades_to_fail_fast_past_the_budget() {
+    let job = conformance_job();
+    let n = job.build().n();
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        chaos_opts("kill,src=1,nth=2"),
+        SupervisorOptions { max_rebuilds: 0 },
+    )
+    .expect("supervised start");
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let msg = sup.hgemv(&x, &mut y).expect_err("budget 0 cannot recover").to_string();
+    assert!(msg.contains("exhausted"), "error must name the budget: {msg}");
+    assert!(sup.is_degraded());
+    let t0 = Instant::now();
+    let again = sup.hgemv(&x, &mut y).expect_err("degraded supervisor fails fast");
+    assert!(t0.elapsed() < Duration::from_secs(1), "fail-fast must not respawn");
+    assert!(again.to_string().contains("exhausted"), "{again}");
+}
+
+/// A duplicated `Output` frame (chaos `dup`) is absorbed by the
+/// idempotent collect path on a *plain* session: both products complete
+/// bitwise-correct, nothing errors, nothing hangs.
+#[test]
+fn duplicate_output_frames_are_deduped() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let mut session =
+        SocketSession::start(&job, 2, 1, chaos_opts("dup,src=0,kind=output,nth=1"))
+            .expect("session start");
+    let mut rng = Prng::new(77);
+    for k in 0..2 {
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        session.hgemv(&x, &mut y).expect("product under duplication");
+        assert_eq!(y, serial_product(&a, &x, 1), "product {k} not bitwise equal");
+    }
+    assert_eq!(session.products(), 2);
+}
+
+/// A bit flipped below the checksums surfaces as a typed `Protocol`
+/// error naming the CRC on a plain session — and the same fault under a
+/// supervisor is absorbed, with the recovered product bitwise-correct.
+#[test]
+fn corrupt_frames_are_typed_errors_and_recoverable() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    // Bit 300 lands in the payload (the header is bits 0..256), so the
+    // payload CRC must catch it.
+    let plan = "flip=300,src=1,kind=output,nth=1";
+    let mut session = SocketSession::start(&job, 2, 1, chaos_opts(plan)).expect("start");
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let err = session.hgemv(&x, &mut y).expect_err("corruption must not pass");
+    assert!(
+        matches!(err, TransportError::Protocol(_)),
+        "corruption must be a typed Protocol error, got: {err}"
+    );
+    assert!(err.to_string().contains("checksum"), "error must name the CRC: {err}");
+    drop(session);
+
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        chaos_opts(plan),
+        SupervisorOptions { max_rebuilds: 2 },
+    )
+    .expect("supervised start");
+    let mut yr = vec![0.0; n];
+    sup.hgemv(&x, &mut yr).expect("supervised product under corruption");
+    assert_eq!(yr, serial_product(&a, &x, 1), "recovered product not bitwise equal");
+    assert!(sup.recovery_stats().recoveries >= 1);
+}
+
+/// The soak matrix: explicit fault plans × P ∈ {2, 4} through the
+/// supervised request-coalescing server. Every request must come back
+/// bitwise-identical to the serial reference and the server ledger must
+/// balance with zero failures — recovery is invisible to clients.
+#[test]
+fn chaos_soak_explicit_plans_server_conformance() {
+    let cases: &[(&str, usize)] = &[
+        ("kill,src=1,nth=5", 2),
+        ("kill,src=3,nth=6", 4),
+        ("trunc=16,src=1,kind=output,nth=2", 2),
+        ("drop,src=0,kind=xhat,nth=3", 2),
+        ("delay=25,src=0,nth=2", 4),
+        ("dup,src=1,kind=output,nth=2", 4),
+    ];
+    for &(plan, p) in cases {
+        soak_one(plan, p);
+    }
+}
+
+fn soak_one(plan: &str, p: usize) {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let server = SessionServer::start_supervised(
+        &job,
+        p,
+        chaos_opts(plan),
+        ServerOptions { max_coalesce: 4, pipeline_depth: 2 },
+        SupervisorOptions { max_rebuilds: 3 },
+    )
+    .unwrap_or_else(|e| panic!("supervised server start (plan {plan:?}, P = {p}): {e}"));
+    let mut rng = Prng::new(1900 + p as u64);
+    let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| server.submit(x).expect("submit under chaos"))
+        .collect();
+    for (k, (h, x)) in handles.into_iter().zip(&xs).enumerate() {
+        let served = h
+            .wait()
+            .unwrap_or_else(|e| panic!("request {k} failed (plan {plan:?}, P = {p}): {e}"));
+        assert_eq!(
+            served.y,
+            serial_product(&a, x, 1),
+            "request {k} not bitwise equal (plan {plan:?}, P = {p})"
+        );
+    }
+    let st = server.stats();
+    assert_eq!(st.submitted, 4, "ledger (plan {plan:?}, P = {p}): {}", st.summary());
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed,
+        "ledger must balance (plan {plan:?}, P = {p}): {}",
+        st.summary()
+    );
+    assert_eq!(st.failed, 0, "recovery must be client-invisible (plan {plan:?}, P = {p})");
+}
+
+/// Seeded soak: fault plans derived from `FaultPlan::from_seed` over the
+/// seeds in `H2OPUS_CHAOS_SOAK_SEEDS` (comma-separated; CI pins two and
+/// adds one randomized, printed seed). Whatever the plan, requests must
+/// come back bitwise-correct with a balanced, failure-free ledger.
+#[test]
+fn seeded_soak_is_reproducible() {
+    let seeds = std::env::var("H2OPUS_CHAOS_SOAK_SEEDS").unwrap_or_else(|_| "190841,77".into());
+    for tok in seeds.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let seed: u64 = tok.parse().unwrap_or_else(|e| panic!("bad soak seed {tok:?}: {e}"));
+        let plan = FaultPlan::from_seed(seed, 2);
+        println!("chaos soak seed {seed} -> plan \"{plan}\"");
+        soak_one(&plan.to_string(), 2);
+    }
+}
+
+/// Satellite: a worker that ignores `Shutdown` (stall hook) is reaped
+/// within the configured grace — dropping the session is bounded, not a
+/// 120 s hang on the stalled child.
+#[test]
+fn stalled_workers_are_reaped_within_the_grace_bound() {
+    let job = conformance_job();
+    let n = job.build().n();
+    let mut opts = chaos_opts("");
+    opts.extra_env.push(("H2OPUS_TEST_STALL_ON_SHUTDOWN".to_string(), "1".to_string()));
+    opts.shutdown_grace = Duration::from_millis(300);
+    let mut session = SocketSession::start(&job, 2, 1, opts).expect("session start");
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    session.hgemv(&x, &mut y).expect("product");
+    let t0 = Instant::now();
+    drop(session);
+    let reaped_in = t0.elapsed();
+    assert!(
+        reaped_in < Duration::from_secs(5),
+        "stalled workers must be reaped within the grace bound, took {reaped_in:?}"
+    );
+}
+
+/// Satellite: a rank that dies *during* the clock-sync handshake (the
+/// 8-ping exchange) surfaces a prompt typed error from
+/// `SocketSession::start` — the session deadline covers the handshake,
+/// so setup never hangs on a half-connected crew.
+#[test]
+fn handshake_crash_is_a_prompt_typed_error() {
+    let job = conformance_job();
+    let mut opts = chaos_opts("");
+    opts.timeout = Duration::from_secs(5);
+    opts.extra_env.push(("H2OPUS_TEST_CRASH_RANK".to_string(), "1@handshake".to_string()));
+    let t0 = Instant::now();
+    let err = match SocketSession::start(&job, 2, 1, opts) {
+        Ok(_) => panic!("start must fail when rank 1 dies in the handshake"),
+        Err(e) => e,
+    };
+    let elapsed = t0.elapsed();
+    assert!(
+        matches!(err, TransportError::Closed(_) | TransportError::Timeout(_)),
+        "handshake death must be Closed or Timeout, got: {err}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(25),
+        "handshake failure must surface within the deadline, took {elapsed:?}"
+    );
+}
+
+/// Satellite: `fetch_stats_within` against a socket that accepts but
+/// never answers returns a typed `Timeout` within the budget — the
+/// stats client honors its deadline instead of hanging.
+#[test]
+fn fetch_stats_honors_its_deadline_against_a_silent_server() {
+    let path = std::env::temp_dir().join(format!("h2opus-chaos-stats-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    // Bind but never accept/answer: the client's write lands in the
+    // backlog buffer and the read must hit its deadline.
+    let listener = std::os::unix::net::UnixListener::bind(&path).expect("bind silent socket");
+    let t0 = Instant::now();
+    let err = match fetch_stats_within(&path, Duration::from_millis(400)) {
+        Ok(text) => panic!("silent server cannot produce a snapshot: {text:?}"),
+        Err(e) => e,
+    };
+    let elapsed = t0.elapsed();
+    drop(listener);
+    let _ = std::fs::remove_file(&path);
+    assert!(
+        matches!(err, TransportError::Timeout(_)),
+        "silent stats socket must be a typed Timeout, got: {err}"
+    );
+    assert!(elapsed < Duration::from_secs(5), "deadline not honored: {elapsed:?}");
+}
