@@ -191,19 +191,31 @@ impl FaultPlan {
     }
 
     /// Read the plan from the environment: [`CHAOS_PLAN_ENV`] wins over
-    /// [`CHAOS_SEED_ENV`]; empty or unparsable values disable chaos (a
-    /// supervisor rebuild clears the hooks by overriding them with empty
-    /// strings). Returns `None` when chaos is off.
-    pub fn from_env(p: usize) -> Option<FaultPlan> {
+    /// [`CHAOS_SEED_ENV`]; empty values disable chaos (a supervisor
+    /// rebuild clears the hooks by overriding them with empty strings).
+    /// A *non-empty* value that fails to parse is a hard `Protocol`
+    /// error: a typo'd plan must abort the run, not silently test
+    /// nothing. Returns `Ok(None)` when chaos is off.
+    pub fn from_env(p: usize) -> Result<Option<FaultPlan>, TransportError> {
         if let Ok(plan_s) = std::env::var(CHAOS_PLAN_ENV) {
-            if !plan_s.is_empty() {
-                let plan = FaultPlan::parse(&plan_s).ok()?;
-                return (!plan.rules.is_empty()).then_some(plan);
+            if plan_s.is_empty() {
+                return Ok(None);
             }
-            return None;
+            let plan = FaultPlan::parse(&plan_s)
+                .map_err(|e| TransportError::Protocol(format!("{CHAOS_PLAN_ENV}: {e}")))?;
+            return Ok((!plan.rules.is_empty()).then_some(plan));
         }
-        let seed = std::env::var(CHAOS_SEED_ENV).ok()?.parse::<u64>().ok()?;
-        Some(FaultPlan::from_seed(seed, p))
+        match std::env::var(CHAOS_SEED_ENV) {
+            Ok(seed_s) if !seed_s.is_empty() => {
+                let seed = seed_s.parse::<u64>().map_err(|e| {
+                    TransportError::Protocol(format!(
+                        "{CHAOS_SEED_ENV}: bad seed {seed_s:?}: {e}"
+                    ))
+                })?;
+                Ok(Some(FaultPlan::from_seed(seed, p)))
+            }
+            _ => Ok(None),
+        }
     }
 }
 
@@ -255,11 +267,15 @@ impl FaultState {
         FaultState { src, rules, counts }
     }
 
-    /// Arm from the environment; `None` when chaos is off for this rank.
-    pub fn from_env(src: usize, p: usize) -> Option<FaultState> {
-        let plan = FaultPlan::from_env(p)?;
+    /// Arm from the environment; `Ok(None)` when chaos is off for this
+    /// rank, `Err` when a non-empty plan/seed fails to parse (see
+    /// [`FaultPlan::from_env`]).
+    pub fn from_env(src: usize, p: usize) -> Result<Option<FaultState>, TransportError> {
+        let Some(plan) = FaultPlan::from_env(p)? else {
+            return Ok(None);
+        };
         let st = FaultState::new(&plan, src);
-        (!st.rules.is_empty()).then_some(st)
+        Ok((!st.rules.is_empty()).then_some(st))
     }
 
     /// The sender this state is armed for.

@@ -639,6 +639,12 @@ fn dispatch_loop<S: ProductPipe>(mut session: S, shared: Arc<Shared>, depth: usi
                     }
                 }
                 Err(e) => {
+                    // The popped batch is no longer in `inflight`, so
+                    // `fail_all` won't see it — count its requests here
+                    // or the `submitted == completed + failed` invariant
+                    // breaks on wait-path poisons.
+                    shared.stats.lock().expect("server stats lock").failed +=
+                        batch.reqs.len() as u64;
                     for r in batch.reqs {
                         let _ = r.tx.send(Err(e.clone()));
                     }

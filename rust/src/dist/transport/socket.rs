@@ -830,8 +830,10 @@ pub fn run_worker(
     let mut ep = WorkerEndpoint::connect(connect, rank, p)?;
     // Chaos: arm this rank's share of the session fault plan
     // (H2OPUS_CHAOS_PLAN / H2OPUS_CHAOS_SEED) on the send path. Armed
-    // after the handshake, so plans count session frames only.
-    ep.arm_chaos(FaultState::from_env(rank, p));
+    // after the handshake, so plans count session frames only. An
+    // unparsable non-empty plan is fatal: a typo'd chaos run must abort,
+    // not silently run with fault injection disabled.
+    ep.arm_chaos(FaultState::from_env(rank, p)?);
 
     // Test hook: simulate a rank crash right after the handshake, so the
     // coordinator's error propagation (not-a-hang) can be asserted.
@@ -901,11 +903,14 @@ pub fn run_worker(
                     input.data.len()
                 )));
             }
-            // Test hook: crash on the compression start ("" = any rank,
+            // Test hook: crash on the compression start ("*" = any rank,
             // "<rank>" = that rank), so mid-compression poisoning — every
             // peer erroring out instead of hanging — can be asserted.
+            // Empty disables the hook: a supervisor rebuild clears it by
+            // overriding with an empty value, and the re-compression on
+            // the respawned crew must survive.
             if let Ok(v) = std::env::var("H2OPUS_TEST_CRASH_ON_COMPRESS") {
-                if v.is_empty() || v.parse::<usize>() == Ok(rank) {
+                if !v.is_empty() && (v == "*" || v.parse::<usize>() == Ok(rank)) {
                     std::process::exit(3);
                 }
             }

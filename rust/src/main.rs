@@ -700,9 +700,19 @@ fn main() {
     // per worker rank, --chaos-plan overrides it with an explicit rule
     // string. Set as env so spawned `h2opus worker` ranks inherit it.
     if let Some(seed) = flags.get("chaos-seed") {
+        if seed.parse::<u64>().is_err() {
+            eprintln!("--chaos-seed: not a u64: {seed:?}");
+            std::process::exit(1);
+        }
         std::env::set_var("H2OPUS_CHAOS_SEED", seed);
     }
     if let Some(plan) = flags.get("chaos-plan") {
+        // Validate eagerly: a typo'd plan must abort the run here, not
+        // silently run a chaos test with fault injection disabled.
+        if let Err(e) = h2opus::dist::transport::chaos::FaultPlan::parse(plan) {
+            eprintln!("--chaos-plan: {e}");
+            std::process::exit(1);
+        }
         std::env::set_var("H2OPUS_CHAOS_PLAN", plan);
     }
     match cmd {

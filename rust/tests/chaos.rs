@@ -19,6 +19,7 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use h2opus::backend::native::NativeBackend;
+use h2opus::compression::compress_full;
 use h2opus::dist::supervisor::{SessionSupervisor, SupervisorOptions};
 use h2opus::dist::transport::chaos::{FaultPlan, CHAOS_PLAN_ENV};
 use h2opus::dist::transport::server::{fetch_stats_within, ServerOptions, SessionServer};
@@ -39,6 +40,20 @@ fn conformance_job() -> MatrixJob {
         corr_len: 0.1,
         kind: JobKind::Exponential,
     }
+}
+
+/// Compression tolerance for the recovery-of-compressed-sessions tests
+/// (same as tests/compress_dist.rs — it genuinely truncates this
+/// operator).
+const TAU: f64 = 1e-4;
+
+/// Serial reference for the compressed operator: `compress_full` on a
+/// clone, exactly what the distributed compression is bitwise-conformant
+/// to.
+fn serial_compressed(a: &h2opus::tree::H2Matrix) -> h2opus::tree::H2Matrix {
+    let mut work = a.clone();
+    let mut metrics = Metrics::new();
+    compress_full(&mut work, TAU, &NativeBackend, &mut metrics).0
 }
 
 fn serial_product(a: &h2opus::tree::H2Matrix, x: &[f64], nv: usize) -> Vec<f64> {
@@ -213,6 +228,112 @@ fn corrupt_frames_are_typed_errors_and_recoverable() {
     sup.hgemv(&x, &mut yr).expect("supervised product under corruption");
     assert_eq!(yr, serial_product(&a, &x, 1), "recovered product not bitwise equal");
     assert!(sup.recovery_stats().recoveries >= 1);
+}
+
+/// A rank that dies at the compression start frame poisons the compress
+/// call; the supervisor respawns the crew with the crash hook *cleared*
+/// (an empty override, which the worker must treat as "disabled", never
+/// "crash every rank") and the retried compression succeeds — every
+/// product after it applies the compressed operator bitwise.
+#[test]
+fn supervisor_recovers_a_crash_during_compression() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let ac = serial_compressed(&a);
+    let mut opts = chaos_opts("");
+    // Rank 1 exits the moment the compression start frame lands.
+    opts.extra_env.push(("H2OPUS_TEST_CRASH_ON_COMPRESS".to_string(), "1".to_string()));
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        opts,
+        SupervisorOptions { max_rebuilds: 2 },
+    )
+    .expect("supervised start");
+    sup.compress(TAU).expect("supervised compression must survive the crash");
+    assert!(
+        sup.recovery_stats().recoveries >= 1,
+        "the crash must have forced a recovery: {:?}",
+        sup.recovery_stats()
+    );
+    let mut rng = Prng::new(9401);
+    for k in 0..3 {
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        sup.hgemv(&x, &mut y).expect("post-compression product");
+        assert_eq!(
+            y,
+            serial_product(&ac, &x, 1),
+            "product {k} not bitwise equal to compressed serial"
+        );
+    }
+    assert!(!sup.is_degraded(), "budget of 2 must absorb one compression crash");
+}
+
+/// A kill landing *after* a successful compression forces a rebuild of a
+/// compressed session: the recorded τ is re-applied on the fresh crew —
+/// whose fault hooks are all cleared with empty overrides — and the
+/// replayed + subsequent products apply the compressed operator bitwise.
+/// Regression: a rebuild that re-compresses must not trip the cleared
+/// `H2OPUS_TEST_CRASH_ON_COMPRESS` hook on the respawned workers.
+#[test]
+fn rebuild_of_a_compressed_session_recompresses_to_tau() {
+    let job = conformance_job();
+    let a = job.build();
+    let n = a.n();
+    let ac = serial_compressed(&a);
+    // Compression traffic carries no `Output` frames, so the kill is
+    // armed safely past it: rank 1 dies sending its second product
+    // output.
+    let mut sup = SessionSupervisor::start(
+        &job,
+        2,
+        1,
+        chaos_opts("kill,src=1,kind=output,nth=2"),
+        SupervisorOptions { max_rebuilds: 2 },
+    )
+    .expect("supervised start");
+    sup.compress(TAU).expect("compression completes before the kill fires");
+    assert_eq!(
+        sup.recovery_stats().recoveries,
+        0,
+        "an output-keyed kill must not fire during compression"
+    );
+    let mut rng = Prng::new(625);
+    for k in 0..4 {
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        sup.hgemv(&x, &mut y).expect("supervised product");
+        assert_eq!(
+            y,
+            serial_product(&ac, &x, 1),
+            "product {k} not bitwise equal to compressed serial"
+        );
+    }
+    let st = sup.recovery_stats();
+    assert!(st.recoveries >= 1, "the kill must have forced a recovery: {st:?}");
+    assert!(!sup.is_degraded(), "budget of 2 must absorb one kill");
+}
+
+/// A non-empty `H2OPUS_CHAOS_PLAN` that fails to parse must abort the
+/// run loudly — a typo'd plan silently disabling fault injection would
+/// turn a chaos run into a test of nothing.
+#[test]
+fn a_typo_in_the_chaos_plan_is_a_loud_error() {
+    let job = conformance_job();
+    let n = job.build().n();
+    let mut opts = chaos_opts("kil,src=1,nth=1"); // typo: "kil"
+    opts.timeout = Duration::from_secs(5);
+    let x = vec![1.0; n];
+    let mut y = vec![0.0; n];
+    let t0 = Instant::now();
+    let result = SocketSession::start(&job, 2, 1, opts)
+        .and_then(|mut session| session.hgemv(&x, &mut y).map(|_| ()));
+    let elapsed = t0.elapsed();
+    result.expect_err("a typo'd chaos plan must fail the session, not run without faults");
+    assert!(elapsed < Duration::from_secs(20), "took {elapsed:?} — behaved like a hang");
 }
 
 /// The soak matrix: explicit fault plans × P ∈ {2, 4} through the

@@ -326,4 +326,15 @@ fn server_crash_fails_all_requests_cleanly() {
             h.wait().expect_err("request into a poisoned server must fail");
         }
     }
+    // The ledger must balance even when the failures land on the wait
+    // path (the popped batch is no longer in flight, so `fail_all` never
+    // sees it): every crashed request is counted into `failed`.
+    let st = server.stats();
+    assert!(st.failed >= 3, "all crashed requests must be counted: {}", st.summary());
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed,
+        "ledger must balance under failures: {}",
+        st.summary()
+    );
 }
